@@ -1,0 +1,101 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. pruner hysteresis (Algorithm 2's local-minimum escape);
+//! 2. op-fusion on/off (the compiler optimization of section 6.2);
+//! 3. scheduler priority: criticality vs FIFO (section 4.3's "the
+//!    scheduler prioritizes critical operators");
+//! 4. data-parallel scaling around a WHAM pipeline (section 5's
+//!    "replicated pipeline").
+
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::cost::annotate::AnnotatedGraph;
+use wham::cost::Dims;
+use wham::distributed::data_parallel::data_parallel;
+use wham::distributed::network::Network;
+use wham::distributed::partition::partition_transformer;
+use wham::distributed::pipeline::simulate;
+use wham::distributed::Scheme;
+use wham::graph::autodiff::{training_graph, Optimizer};
+use wham::search::engine::{SearchOptions, WhamSearch};
+use wham::sched::{asap_alap, greedy_schedule_with_priority, CoreCount, Priority};
+use wham::util::bench::banner;
+
+fn main() {
+    banner("ablations", "design-choice ablations (hysteresis, fusion, priority, DP)");
+    let mut backend = make_backend(BackendChoice::Auto).unwrap();
+
+    // ---- 1. hysteresis sweep --------------------------------------------
+    println!("\n## pruner hysteresis (bert-large, throughput)");
+    println!("hysteresis\tdims_evaluated\tbest_thpt");
+    let g = wham::models::training("bert-large", Optimizer::Adam).unwrap();
+    let mut best_h0 = 0.0;
+    let mut best_h3 = 0.0;
+    for h in [0u32, 1, 2, 3] {
+        let opts = SearchOptions { hysteresis: h, ..Default::default() };
+        let r = WhamSearch::new(&g, 8, opts).run(backend.as_mut());
+        println!("{h}\t{}\t{:.3}", r.dims_evaluated, r.best.eval.throughput);
+        if h == 0 {
+            best_h0 = r.best.eval.throughput;
+        }
+        if h == 3 {
+            best_h3 = r.best.eval.throughput;
+        }
+    }
+    assert!(best_h3 >= best_h0 * 0.999, "more hysteresis must not lose quality");
+
+    // ---- 2. fusion on/off -------------------------------------------------
+    println!("\n## op-fusion (conv/GEMM + activation)");
+    println!("model\tfused_pairs\tunfused_iter_ms\tfused_iter_ms\tspeedup");
+    for name in ["vgg16", "resnet18", "bert-base"] {
+        let fwd = wham::models::forward(name).unwrap();
+        let (fused_fwd, pairs) = wham::graph::fusion::fuse(&fwd);
+        let gu = training_graph(&fwd, Optimizer::Adam);
+        let gf = training_graph(&fused_fwd, Optimizer::Adam);
+        let batch = wham::models::info(name).unwrap().batch;
+        let eu = wham::search::engine::evaluate_design(
+            &gu, batch, &wham::arch::presets::tpuv2(), backend.as_mut());
+        let ef = wham::search::engine::evaluate_design(
+            &gf, batch, &wham::arch::presets::tpuv2(), backend.as_mut());
+        println!(
+            "{name}\t{pairs}\t{:.3}\t{:.3}\t{:.3}x",
+            eu.seconds * 1e3,
+            ef.seconds * 1e3,
+            eu.seconds / ef.seconds
+        );
+        assert!(ef.seconds <= eu.seconds * 1.02, "{name}: fusion must not regress");
+    }
+
+    // ---- 3. scheduler priority ---------------------------------------------
+    println!("\n## ready-queue priority (bert-large @ 128x128, tc=vc=3)");
+    let ann = AnnotatedGraph::new(&g, Dims { tc_x: 128, tc_y: 128, vc_w: 128 }, backend.as_mut());
+    let cp = asap_alap(&ann);
+    let cores = CoreCount { tc: 3, vc: 3 };
+    let crit = greedy_schedule_with_priority(&ann, &cp, cores, Priority::Criticality);
+    let fifo = greedy_schedule_with_priority(&ann, &cp, cores, Priority::Fifo);
+    println!("criticality\t{} cycles", crit.makespan);
+    println!("fifo\t\t{} cycles", fifo.makespan);
+    println!("# criticality/fifo = {:.4}", crit.makespan as f64 / fifo.makespan as f64);
+    assert!(
+        crit.makespan <= fifo.makespan,
+        "criticality priority must not lose to FIFO on a branchy graph"
+    );
+
+    // ---- 4. data-parallel scaling ------------------------------------------
+    println!("\n## data-parallel scaling (mini GPT2 pipeline x replicas)");
+    println!("replicas\tthroughput\tefficiency");
+    let mut cfg = wham::models::transformer_cfg("gpt2-xl").unwrap();
+    cfg.layers = 8;
+    let part = partition_transformer("mini", &cfg, 4, 1, Optimizer::Adam);
+    let cfgs = vec![wham::arch::presets::tpuv2(); 4];
+    let net = Network::default();
+    let pipe = simulate(&part, &cfgs, Scheme::GPipe, &net, backend.as_mut());
+    let base = data_parallel(&part, &pipe, 1, &net, 0.3).throughput;
+    for r in [1u64, 2, 4, 8, 16] {
+        let dp = data_parallel(&part, &pipe, r, &net, 0.3);
+        let eff = dp.throughput / (base * r as f64);
+        println!("{r}\t{:.3}/s\t{:.1}%", dp.throughput, eff * 100.0);
+        assert!(eff <= 1.0 + 1e-9 && eff > 0.5);
+    }
+
+    println!("\nablations OK");
+}

@@ -1,0 +1,86 @@
+//! Figure 1 — design-space exploration scatter: iteration latency vs
+//! Perf/TDP for every design point WHAM explores on Inception_v3 and
+//! BERT-Large, against ConfuciuX+/Spotlight+ picks and the TPUv2 design.
+//!
+//! Regenerates the paper's qualitative claims: the throughput-optimized
+//! WHAM point minimizes latency; the Perf/TDP-optimized point maximizes
+//! efficiency while holding the TPUv2 throughput floor; inference-era
+//! searchers land far from both frontiers.
+
+use wham::arch::presets;
+use wham::baselines::{confuciux, spotlight};
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::graph::autodiff::Optimizer;
+use wham::metrics::Metric;
+use wham::search::engine::{evaluate_design, SearchOptions, WhamSearch};
+use wham::util::bench::banner;
+
+fn main() {
+    banner("fig01", "DSE scatter: latency vs Perf/TDP (Inception_v3, BERT-Large)");
+    let mut backend = make_backend(BackendChoice::Auto).unwrap();
+
+    for model in ["inception_v3", "bert-large"] {
+        let graph = wham::models::training(model, Optimizer::Adam).unwrap();
+        let batch = wham::models::info(model).unwrap().batch;
+        println!("\n## {model} ({} ops)", graph.len());
+        println!("point\tconfig\tlatency_ms\tperf_per_tdp");
+
+        let tpu = evaluate_design(&graph, batch, &presets::tpuv2(), backend.as_mut());
+        println!("tpuv2\t{}\t{:.3}\t{:.4}", presets::tpuv2(), tpu.seconds * 1e3, tpu.perf_per_tdp);
+
+        // WHAM optimized for throughput: scatter of every explored point.
+        let thpt = WhamSearch::new(&graph, batch, SearchOptions::default()).run(backend.as_mut());
+        for p in &thpt.explored {
+            println!(
+                "wham-explored\t{}\t{:.3}\t{:.4}",
+                p.config,
+                p.eval.seconds * 1e3,
+                p.eval.perf_per_tdp
+            );
+        }
+        let bt = &thpt.best;
+        println!("wham-thpt\t{}\t{:.3}\t{:.4}", bt.config, bt.eval.seconds * 1e3, bt.eval.perf_per_tdp);
+
+        // WHAM optimized for Perf/TDP with the TPUv2 throughput floor.
+        let eff_opts = SearchOptions {
+            metric: Metric::PerfPerTdp,
+            min_throughput: tpu.throughput,
+            ..Default::default()
+        };
+        let eff = WhamSearch::new(&graph, batch, eff_opts).run(backend.as_mut());
+        let be = &eff.best;
+        println!("wham-perf/tdp\t{}\t{:.3}\t{:.4}", be.config, be.eval.seconds * 1e3, be.eval.perf_per_tdp);
+
+        // Inference-era searchers (training-extended), shortened budget.
+        let cx = confuciux::run(
+            &graph,
+            batch,
+            backend.as_mut(),
+            confuciux::ConfuciuxOpts { iterations: 120, ..Default::default() },
+        );
+        println!("confuciux+\t{}\t{:.3}\t{:.4}", cx.config, cx.eval.seconds * 1e3, cx.eval.perf_per_tdp);
+        let sp = spotlight::run(
+            &graph,
+            batch,
+            backend.as_mut(),
+            spotlight::SpotlightOpts { iterations: 120, ..Default::default() },
+        );
+        println!("spotlight+\t{}\t{:.3}\t{:.4}", sp.config, sp.eval.seconds * 1e3, sp.eval.perf_per_tdp);
+
+        // Shape assertions (the paper's qualitative reading of Fig. 1).
+        assert!(bt.eval.seconds <= tpu.seconds, "WHAM-thpt must minimize latency vs TPUv2");
+        assert!(
+            be.eval.perf_per_tdp >= tpu.perf_per_tdp * 0.999,
+            "WHAM-perf/tdp must beat the TPUv2 efficiency point"
+        );
+        assert!(be.eval.throughput >= tpu.throughput * 0.99, "floor must hold");
+        println!(
+            "# summary: wham-thpt latency {:.3} ms vs tpu {:.3} ms; wham eff {:.4} vs tpu {:.4}",
+            bt.eval.seconds * 1e3,
+            tpu.seconds * 1e3,
+            be.eval.perf_per_tdp,
+            tpu.perf_per_tdp
+        );
+    }
+    println!("\nfig01 OK");
+}

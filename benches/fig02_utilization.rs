@@ -1,0 +1,50 @@
+//! Figure 2 — per-layer tensor/vector core utilization of Inception_v3 on
+//! a single `<1, 256x256, 1, 256>` design (the NVDLA-scaled corner).
+//!
+//! Reproduces the paper's observation: "numerous workloads fail to fully
+//! utilize the 256x256 systolic array ... layers with fewer channels have
+//! lower utilization" (y-axis capped at 50% in the paper).
+
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::cost::annotate::AnnotatedGraph;
+use wham::cost::Dims;
+use wham::graph::CoreType;
+use wham::util::bench::banner;
+
+fn main() {
+    banner("fig02", "per-layer utilization, Inception_v3 on <1, 256x256, 1, 256>");
+    let graph = wham::models::forward("inception_v3").unwrap();
+    let mut backend = make_backend(BackendChoice::Auto).unwrap();
+    let ann =
+        AnnotatedGraph::new(&graph, Dims { tc_x: 256, tc_y: 256, vc_w: 256 }, backend.as_mut());
+
+    println!("layer\tcore\tutil_pct");
+    let mut low_util_layers = 0usize;
+    let mut tensor_ops = 0usize;
+    for (i, op) in graph.ops.iter().enumerate() {
+        let core = match ann.core[i] {
+            CoreType::Tensor | CoreType::Fused => "tensor",
+            CoreType::Vector => "vector",
+        };
+        let u = ann.costs[i].util * 100.0;
+        println!("{}\t{}\t{:.2}", op.name, core, u);
+        if ann.core[i] == CoreType::Tensor {
+            tensor_ops += 1;
+            if u < 50.0 {
+                low_util_layers += 1;
+            }
+        }
+    }
+    let mean_t = ann.mean_util(CoreType::Tensor) * 100.0;
+    let mean_v = ann.mean_util(CoreType::Vector) * 100.0;
+    println!("# mean tensor util {mean_t:.1}%  mean vector util {mean_v:.1}%");
+    println!(
+        "# {low_util_layers}/{tensor_ops} tensor layers below 50% utilization (paper caps the y-axis at 50%)"
+    );
+    assert!(
+        low_util_layers * 3 >= tensor_ops,
+        "expected a large fraction of Inception layers to underutilize a 256x256 array"
+    );
+    assert!(mean_t < 85.0, "mean tensor utilization should be far from full");
+    println!("\nfig02 OK");
+}

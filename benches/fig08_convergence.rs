@@ -1,0 +1,91 @@
+//! Figure 8 — convergence-time comparison: WHAM (heuristics, and ILP
+//! where tractable) vs ConfuciuX+ and Spotlight+ at the paper's
+//! 500-iteration budget, wall-clock on this machine.
+//!
+//! Paper claims under test: WHAM converges on average 174x faster than
+//! ConfuciuX+ and 31x faster than Spotlight+; the ILP does not converge
+//! on language/translation models (reported N/A in the paper; our B&B
+//! reports `optimal=false` the same way).
+
+use wham::baselines::{confuciux, spotlight};
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::graph::autodiff::Optimizer;
+use wham::report::geomean;
+use wham::search::engine::{SearchOptions, WhamSearch};
+use wham::util::bench::banner;
+use wham::util::table::Table;
+
+fn main() {
+    banner("fig08", "convergence time: WHAM vs ConfuciuX+ vs Spotlight+ (500 iters)");
+    let mut backend = make_backend(BackendChoice::Auto).unwrap();
+    let mut t = Table::new(["model", "wham", "confuciux+", "spotlight+", "cx+/wham", "sp+/wham"]);
+    let mut cx_ratio = Vec::new();
+    let mut sp_ratio = Vec::new();
+
+    for name in wham::models::single_acc_models() {
+        let graph = wham::models::training(name, Optimizer::Adam).unwrap();
+        let batch = wham::models::info(name).unwrap().batch;
+
+        let w = WhamSearch::new(&graph, batch, SearchOptions::default()).run(backend.as_mut());
+        let cx = confuciux::run(
+            &graph,
+            batch,
+            backend.as_mut(),
+            confuciux::ConfuciuxOpts { iterations: 500, ..Default::default() },
+        );
+        let sp = spotlight::run(
+            &graph,
+            batch,
+            backend.as_mut(),
+            spotlight::SpotlightOpts { iterations: 500, ..Default::default() },
+        );
+        let rc = cx.wall.as_secs_f64() / w.wall.as_secs_f64();
+        let rs = sp.wall.as_secs_f64() / w.wall.as_secs_f64();
+        cx_ratio.push(rc);
+        sp_ratio.push(rs);
+        t.row([
+            name.to_string(),
+            format!("{:?}", w.wall),
+            format!("{:?}", cx.wall),
+            format!("{:?}", sp.wall),
+            format!("{rc:.1}x"),
+            format!("{rs:.1}x"),
+        ]);
+        assert!(rc > 1.0, "{name}: WHAM must converge faster than ConfuciuX+ ({rc:.2}x)");
+        assert!(rs > 1.0, "{name}: WHAM must converge faster than Spotlight+ ({rs:.2}x)");
+    }
+    print!("{t}");
+    println!(
+        "# geomean speedup: vs ConfuciuX+ {:.1}x (paper 174x), vs Spotlight+ {:.1}x (paper 31x)",
+        geomean(cx_ratio.iter().copied()),
+        geomean(sp_ratio.iter().copied())
+    );
+
+    // ILP tractability: small graph converges optimally, language model
+    // does not (the paper's 7-day N/A).
+    let mut b = wham::graph::GraphBuilder::new();
+    let a = b.gemm("a", 64, 64, 64, &[]);
+    let x = b.gemm("x", 64, 64, 64, &[a]);
+    let y = b.gemm("y", 64, 64, 64, &[a]);
+    let _ = b.gemm("j", 64, 64, 64, &[x, y]);
+    let small = b.finish();
+    let ann = wham::cost::annotate::AnnotatedGraph::new(
+        &small,
+        wham::cost::Dims { tc_x: 64, tc_y: 64, vc_w: 64 },
+        backend.as_mut(),
+    );
+    let ilp_small = wham::search::ilp::ilp_search(&ann, &Default::default(), 1_000_000);
+    let bert = wham::models::training("bert-large", Optimizer::Adam).unwrap();
+    let ann_l = wham::cost::annotate::AnnotatedGraph::new(
+        &bert,
+        wham::cost::Dims { tc_x: 128, tc_y: 128, vc_w: 128 },
+        backend.as_mut(),
+    );
+    let ilp_large = wham::search::ilp::ilp_search(&ann_l, &Default::default(), 1_000_000);
+    println!(
+        "# ILP: small graph optimal={}, bert-large optimal={} (paper: N/A after 7 days)",
+        ilp_small.optimal, ilp_large.optimal
+    );
+    assert!(ilp_small.optimal && !ilp_large.optimal);
+    println!("\nfig08 OK");
+}

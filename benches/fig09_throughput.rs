@@ -1,0 +1,111 @@
+//! Figure 9 — training throughput of WHAM-individual and WHAM-common vs
+//! hand-optimized accelerators (TPUv2, NVDLA) and framework-suggested
+//! designs (ConfuciuX+, Spotlight+), all normalized to ConfuciuX+ as in
+//! the paper.
+//!
+//! Paper claims under test: WHAM-individual beats ConfuciuX+ (20x avg)
+//! and Spotlight+ (12x avg); WHAM-common beats NVDLA (2x) and TPUv2
+//! (12%); WHAM-individual adds ~3% over common (15% vs TPUv2).
+
+use wham::arch::presets;
+use wham::baselines::{confuciux, spotlight};
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::graph::autodiff::Optimizer;
+use wham::report::{geomean, speedup_table};
+use wham::search::engine::{evaluate_design, SearchOptions, WhamSearch};
+use wham::util::bench::banner;
+
+fn main() {
+    banner("fig09", "throughput vs baselines (normalized to ConfuciuX+)");
+    let mut backend = make_backend(BackendChoice::Auto).unwrap();
+    let models = wham::models::single_acc_models();
+
+    // WHAM-common across the 8 workloads.
+    let graphs: Vec<(String, wham::graph::OperatorGraph, u64)> = models
+        .iter()
+        .map(|n| {
+            (
+                n.to_string(),
+                wham::models::training(n, Optimizer::Adam).unwrap(),
+                wham::models::info(n).unwrap().batch,
+            )
+        })
+        .collect();
+    let workloads: Vec<wham::search::common::Workload> = graphs
+        .iter()
+        .map(|(n, g, b)| wham::search::common::Workload {
+            name: n.clone(),
+            graph: g,
+            batch: *b,
+            min_throughput: 0.0,
+            weight: 1.0,
+        })
+        .collect();
+    let common =
+        wham::search::common::search_common(&workloads, SearchOptions::default(), backend.as_mut());
+    println!("# WHAM-common config: {}", common.best.0.display());
+
+    let mut rows = Vec::new();
+    let mut ratios: Vec<[f64; 5]> = Vec::new();
+    for (name, graph, batch) in &graphs {
+        let cx = confuciux::run(
+            graph,
+            *batch,
+            backend.as_mut(),
+            confuciux::ConfuciuxOpts { iterations: 150, ..Default::default() },
+        );
+        let sp = spotlight::run(
+            graph,
+            *batch,
+            backend.as_mut(),
+            spotlight::SpotlightOpts { iterations: 150, ..Default::default() },
+        );
+        let nvdla = evaluate_design(graph, *batch, &presets::nvdla_scaled(), backend.as_mut());
+        let tpu = evaluate_design(graph, *batch, &presets::tpuv2(), backend.as_mut());
+        let wc = evaluate_design(graph, *batch, &common.best.0, backend.as_mut());
+        let wi = WhamSearch::new(graph, *batch, SearchOptions::default()).run(backend.as_mut());
+
+        let base = cx.eval.throughput;
+        let vals = [
+            sp.eval.throughput / base,
+            nvdla.throughput / base,
+            tpu.throughput / base,
+            wc.throughput / base,
+            wi.best.eval.throughput / base,
+        ];
+        ratios.push([
+            wi.best.eval.throughput / cx.eval.throughput,
+            wi.best.eval.throughput / sp.eval.throughput,
+            wc.throughput / nvdla.throughput,
+            wc.throughput / tpu.throughput,
+            wi.best.eval.throughput / tpu.throughput,
+        ]);
+        rows.push((name.clone(), vals.to_vec()));
+        // Per-model shape: WHAM-individual wins against every baseline.
+        assert!(
+            wi.best.eval.throughput >= cx.eval.throughput * 0.995
+                && wi.best.eval.throughput >= sp.eval.throughput * 0.995,
+            "{name}: WHAM-individual must match or beat the framework baselines \
+             (wham {} vs cx {} / sp {})",
+            wi.best.eval.throughput,
+            cx.eval.throughput,
+            sp.eval.throughput
+        );
+        assert!(
+            wi.best.eval.throughput >= tpu.throughput * 0.999,
+            "{name}: WHAM-individual must match or beat TPUv2"
+        );
+    }
+    print!(
+        "{}",
+        speedup_table(&["spotlight+", "nvdla", "tpuv2", "wham-common", "wham-individual"], &rows)
+    );
+    let g = |i: usize| geomean(ratios.iter().map(|r| r[i]));
+    println!("# geomean WHAM-individual / ConfuciuX+ : {:.2}x (paper 20x)", g(0));
+    println!("# geomean WHAM-individual / Spotlight+ : {:.2}x (paper 12x)", g(1));
+    println!("# geomean WHAM-common     / NVDLA      : {:.2}x (paper 2x)", g(2));
+    println!("# geomean WHAM-common     / TPUv2      : {:.2}x (paper 1.12x)", g(3));
+    println!("# geomean WHAM-individual / TPUv2      : {:.2}x (paper 1.15x)", g(4));
+    assert!(g(0) > 1.0 && g(1) > 1.0 && g(3) > 1.0 && g(4) >= g(3) * 0.99);
+    println!("\nfig09 OK");
+}

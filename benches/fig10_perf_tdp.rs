@@ -1,0 +1,81 @@
+//! Figure 10 — Perf/TDP of WHAM designs optimized for Perf/TDP with the
+//! TPUv2 throughput as the floor, normalized to TPUv2.
+//!
+//! Paper claims under test: WHAM-common ~19% better Perf/TDP than TPUv2;
+//! WHAM-individual matches or beats common; both maintain the floor.
+
+use wham::arch::presets;
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::graph::autodiff::Optimizer;
+use wham::metrics::Metric;
+use wham::report::{geomean, speedup_table};
+use wham::search::engine::{evaluate_design, SearchOptions, WhamSearch};
+use wham::util::bench::banner;
+
+fn main() {
+    banner("fig10", "Perf/TDP vs TPUv2 (TPUv2 throughput floor)");
+    let mut backend = make_backend(BackendChoice::Auto).unwrap();
+    let models = wham::models::single_acc_models();
+
+    let graphs: Vec<(String, wham::graph::OperatorGraph, u64)> = models
+        .iter()
+        .map(|n| {
+            (
+                n.to_string(),
+                wham::models::training(n, Optimizer::Adam).unwrap(),
+                wham::models::info(n).unwrap().batch,
+            )
+        })
+        .collect();
+
+    // Common design under the Perf/TDP metric with per-model floors.
+    let workloads: Vec<wham::search::common::Workload> = graphs
+        .iter()
+        .map(|(n, g, b)| {
+            let floor = evaluate_design(g, *b, &presets::tpuv2(), backend.as_mut()).throughput;
+            wham::search::common::Workload {
+                name: n.clone(),
+                graph: g,
+                batch: *b,
+                min_throughput: floor,
+                weight: 1.0,
+            }
+        })
+        .collect();
+    let copts = SearchOptions { metric: Metric::PerfPerTdp, ..Default::default() };
+    let common = wham::search::common::search_common(&workloads, copts, backend.as_mut());
+    println!("# WHAM-common config: {}", common.best.0.display());
+
+    let mut rows = Vec::new();
+    let mut rc = Vec::new();
+    let mut ri = Vec::new();
+    for (name, graph, batch) in &graphs {
+        let tpu = evaluate_design(graph, *batch, &presets::tpuv2(), backend.as_mut());
+        let wc = evaluate_design(graph, *batch, &common.best.0, backend.as_mut());
+        let iopts = SearchOptions {
+            metric: Metric::PerfPerTdp,
+            min_throughput: tpu.throughput,
+            ..Default::default()
+        };
+        let wi = WhamSearch::new(graph, *batch, iopts).run(backend.as_mut());
+        rows.push((
+            name.clone(),
+            vec![wc.perf_per_tdp / tpu.perf_per_tdp, wi.best.eval.perf_per_tdp / tpu.perf_per_tdp],
+        ));
+        rc.push(wc.perf_per_tdp / tpu.perf_per_tdp);
+        ri.push(wi.best.eval.perf_per_tdp / tpu.perf_per_tdp);
+        assert!(
+            wi.best.eval.throughput >= tpu.throughput * 0.99,
+            "{name}: throughput floor violated"
+        );
+        assert!(
+            wi.best.eval.perf_per_tdp >= tpu.perf_per_tdp * 0.999,
+            "{name}: WHAM-individual must not lose Perf/TDP to TPUv2"
+        );
+    }
+    print!("{}", speedup_table(&["wham-common/tpuv2", "wham-individual/tpuv2"], &rows));
+    println!("# geomean WHAM-common/TPUv2     : {:.2}x (paper 1.19x)", geomean(rc.iter().copied()));
+    println!("# geomean WHAM-individual/TPUv2 : {:.2}x", geomean(ri.iter().copied()));
+    assert!(geomean(ri.iter().copied()) >= 1.0);
+    println!("\nfig10 OK");
+}

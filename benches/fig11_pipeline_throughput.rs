@@ -1,0 +1,65 @@
+//! Figure 11 — pipeline-parallel training throughput of WHAM-common /
+//! -individual / -mosaic vs a TPUv2 pipeline; depth 32, GPipe,
+//! activation stashing.
+//!
+//! Paper claims under test: Common ~17%, Individual ~22%, Mosaic ~23%
+//! over TPUv2 on average; Individual >= Common; Mosaic's heterogeneity
+//! adds only modest gains over Individual (repeated transformer layers).
+
+use wham::arch::presets;
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::distributed::global_search::{global_search, GlobalOptions};
+use wham::distributed::network::Network;
+use wham::distributed::partition::partition_transformer;
+use wham::distributed::pipeline::simulate;
+use wham::distributed::Scheme;
+use wham::graph::autodiff::Optimizer;
+use wham::report::geomean;
+use wham::util::bench::banner;
+use wham::util::table::Table;
+
+fn main() {
+    banner("fig11", "pipeline throughput vs TPUv2 (depth 32, GPipe)");
+    let mut backend = make_backend(BackendChoice::Auto).unwrap();
+    let net = Network::default();
+    let models: Vec<_> = ["opt-1.3b", "gpt2-xl"]
+        .iter()
+        .map(|n| {
+            let cfg = wham::models::transformer_cfg(n).unwrap();
+            partition_transformer(n, &cfg, 32, 1, Optimizer::Adam)
+        })
+        .collect();
+
+    let r = global_search(&models, &GlobalOptions::default(), &net, backend.as_mut());
+    let mut t = Table::new(["model", "tpuv2 thpt", "common", "individual", "mosaic"]);
+    let mut rc = Vec::new();
+    let mut rind = Vec::new();
+    let mut rm = Vec::new();
+    for (i, part) in models.iter().enumerate() {
+        let cfgs = vec![presets::tpuv2(); part.stages.len()];
+        let tpu = simulate(part, &cfgs, Scheme::GPipe, &net, backend.as_mut());
+        let c = r.common.1[i].eval.throughput / tpu.throughput;
+        let ind = r.individual[i].eval.throughput / tpu.throughput;
+        let m = r.mosaic[i].eval.throughput / tpu.throughput;
+        rc.push(c);
+        rind.push(ind);
+        rm.push(m);
+        t.row([
+            part.name.clone(),
+            format!("{:.3}/s", tpu.throughput),
+            format!("{c:.3}x"),
+            format!("{ind:.3}x"),
+            format!("{m:.3}x"),
+        ]);
+        assert!(ind >= c * 0.999, "{}: individual must be >= common", part.name);
+        assert!(ind > 1.0, "{}: individual must beat the TPUv2 pipeline", part.name);
+    }
+    print!("{t}");
+    println!(
+        "# geomean vs TPUv2: common {:.3}x (paper 1.17x), individual {:.3}x (paper 1.22x), mosaic {:.3}x (paper 1.23x)",
+        geomean(rc.iter().copied()),
+        geomean(rind.iter().copied()),
+        geomean(rm.iter().copied())
+    );
+    println!("\nfig11 OK");
+}

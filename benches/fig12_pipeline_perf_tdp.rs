@@ -1,0 +1,80 @@
+//! Figure 12 — pipeline-parallel Perf/TDP of WHAM families vs the TPUv2
+//! pipeline, optimized for Perf/TDP with the TPUv2 pipeline throughput as
+//! the floor; depth 32, GPipe.
+//!
+//! Paper claims under test: Common ~1.6x, Individual ~8.1x, Mosaic ~2.0x
+//! over TPUv2; Mosaic may trail Individual (per-stage top-1 overspends
+//! area on non-bottleneck stages).
+
+use wham::arch::presets;
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::distributed::global_search::{global_search, GlobalOptions};
+use wham::distributed::network::Network;
+use wham::distributed::partition::partition_transformer;
+use wham::distributed::pipeline::simulate;
+use wham::distributed::Scheme;
+use wham::graph::autodiff::Optimizer;
+use wham::metrics::Metric;
+use wham::report::geomean;
+use wham::util::bench::banner;
+use wham::util::table::Table;
+
+fn main() {
+    banner("fig12", "pipeline Perf/TDP vs TPUv2 (depth 32, GPipe, floor=TPUv2)");
+    let mut backend = make_backend(BackendChoice::Auto).unwrap();
+    let net = Network::default();
+    let models: Vec<_> = ["opt-1.3b", "gpt2-xl"]
+        .iter()
+        .map(|n| {
+            let cfg = wham::models::transformer_cfg(n).unwrap();
+            partition_transformer(n, &cfg, 32, 1, Optimizer::Adam)
+        })
+        .collect();
+
+    // TPUv2 pipeline floor (min across models, as the CLI does).
+    let mut floor = f64::INFINITY;
+    let mut tpu_evals = Vec::new();
+    for part in &models {
+        let cfgs = vec![presets::tpuv2(); part.stages.len()];
+        let e = simulate(part, &cfgs, Scheme::GPipe, &net, backend.as_mut());
+        floor = floor.min(e.throughput);
+        tpu_evals.push(e);
+    }
+    let opts = GlobalOptions {
+        metric: Metric::PerfPerTdp,
+        min_throughput: floor,
+        ..Default::default()
+    };
+    let r = global_search(&models, &opts, &net, backend.as_mut());
+
+    let mut t = Table::new(["model", "tpuv2 perf/TDP", "common", "individual", "mosaic"]);
+    let mut rc = Vec::new();
+    let mut ri = Vec::new();
+    let mut rm = Vec::new();
+    for (i, part) in models.iter().enumerate() {
+        let tpu = &tpu_evals[i];
+        let c = r.common.1[i].eval.perf_per_tdp / tpu.perf_per_tdp;
+        let ind = r.individual[i].eval.perf_per_tdp / tpu.perf_per_tdp;
+        let m = r.mosaic[i].eval.perf_per_tdp / tpu.perf_per_tdp;
+        rc.push(c);
+        ri.push(ind);
+        rm.push(m);
+        t.row([
+            part.name.clone(),
+            format!("{:.5}", tpu.perf_per_tdp),
+            format!("{c:.3}x"),
+            format!("{ind:.3}x"),
+            format!("{m:.3}x"),
+        ]);
+        assert!(ind >= 1.0, "{}: individual Perf/TDP must beat the TPUv2 pipeline", part.name);
+        assert!(ind >= c * 0.999, "{}: individual >= common", part.name);
+    }
+    print!("{t}");
+    println!(
+        "# geomean vs TPUv2: common {:.2}x (paper 1.6x), individual {:.2}x (paper 8.1x), mosaic {:.2}x (paper 2.0x)",
+        geomean(rc.iter().copied()),
+        geomean(ri.iter().copied()),
+        geomean(rm.iter().copied())
+    );
+    println!("\nfig12 OK");
+}

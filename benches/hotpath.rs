@@ -1,0 +1,66 @@
+//! Hot-path micro-benchmarks for the performance pass (EXPERIMENTS.md
+//! section Perf): cost annotation (native + PJRT), ASAP/ALAP, the greedy
+//! list scheduler, the MCR loop, and a full per-workload search.
+
+use wham::arch::Constraints;
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::cost::annotate::AnnotatedGraph;
+use wham::cost::Dims;
+use wham::graph::autodiff::Optimizer;
+use wham::search::engine::{SearchOptions, WhamSearch};
+use wham::search::mcr::mcr;
+use wham::sched::{asap_alap, greedy_schedule, CoreCount};
+use wham::util::bench::{banner, bench};
+
+fn main() {
+    banner("hotpath", "L3 hot-path micro-benchmarks");
+    let graph = wham::models::training("bert-large", Optimizer::Adam).unwrap();
+    let d = Dims { tc_x: 128, tc_y: 128, vc_w: 128 };
+    println!("workload: bert-large training graph, {} ops, {} edges", graph.len(), graph.num_edges());
+
+    let mut native = make_backend(BackendChoice::Native).unwrap();
+    println!(
+        "{}",
+        bench("annotate/native", 2, 20, || {
+            std::hint::black_box(AnnotatedGraph::new(&graph, d, native.as_mut()));
+        })
+    );
+    if let Ok(mut pjrt) = make_backend(BackendChoice::Pjrt) {
+        println!(
+            "{}",
+            bench("annotate/pjrt (batched artifact call)", 2, 20, || {
+                std::hint::black_box(AnnotatedGraph::new(&graph, d, pjrt.as_mut()));
+            })
+        );
+    }
+
+    let ann = AnnotatedGraph::new(&graph, d, native.as_mut());
+    println!(
+        "{}",
+        bench("asap_alap", 2, 50, || {
+            std::hint::black_box(asap_alap(&ann));
+        })
+    );
+    let cp = asap_alap(&ann);
+    println!(
+        "{}",
+        bench("greedy_schedule tc=4 vc=4", 2, 50, || {
+            std::hint::black_box(greedy_schedule(&ann, &cp, CoreCount { tc: 4, vc: 4 }));
+        })
+    );
+    println!(
+        "{}",
+        bench("mcr (full Algorithm 1)", 2, 20, || {
+            std::hint::black_box(mcr(&ann, &Constraints::default()));
+        })
+    );
+    println!(
+        "{}",
+        bench("wham_search/bert-large (end-to-end)", 1, 5, || {
+            std::hint::black_box(
+                WhamSearch::new(&graph, 8, SearchOptions::default()).run(native.as_mut()),
+            );
+        })
+    );
+    println!("\nhotpath OK");
+}

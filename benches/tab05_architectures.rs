@@ -1,0 +1,56 @@
+//! Table 5 — per-workload architectures chosen by each framework,
+//! throughput-optimized. Paper reference column included; our substrate's
+//! cost model favours somewhat larger tiles (DESIGN.md substitutions),
+//! so configurations match in *shape* (multi-core, constraint-bound)
+//! rather than verbatim.
+
+use wham::baselines::{confuciux, spotlight};
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::graph::autodiff::Optimizer;
+use wham::search::engine::{SearchOptions, WhamSearch};
+use wham::util::bench::banner;
+use wham::util::table::Table;
+
+const PAPER_WHAM: &[(&str, &str)] = &[
+    ("mobilenet_v3", "<1, 256x128, 1, 256>"),
+    ("resnet18", "<2, 128x64, 2, 128>"),
+    ("inception_v3", "<4, 128x64, 4, 128>"),
+    ("resnext101", "<2, 128x64, 2, 128>"),
+    ("vgg16", "<1, 256x128, 1, 256>"),
+    ("gnmt4", "<3, 128x64, 3, 128>"),
+    ("bert-base", "<3, 128x64, 3, 128>"),
+    ("bert-large", "<3, 128x64, 3, 128>"),
+];
+
+fn main() {
+    banner("tab05", "per-accelerator architectures (throughput-optimized)");
+    let mut backend = make_backend(BackendChoice::Auto).unwrap();
+    let mut t = Table::new(["model", "confuciux+", "spotlight+", "wham-individual", "paper wham"]);
+    for (name, paper) in PAPER_WHAM {
+        let graph = wham::models::training(name, Optimizer::Adam).unwrap();
+        let batch = wham::models::info(name).unwrap().batch;
+        let w = WhamSearch::new(&graph, batch, SearchOptions::default()).run(backend.as_mut());
+        let cx = confuciux::run(
+            &graph,
+            batch,
+            backend.as_mut(),
+            confuciux::ConfuciuxOpts { iterations: 150, ..Default::default() },
+        );
+        let sp = spotlight::run(
+            &graph,
+            batch,
+            backend.as_mut(),
+            spotlight::SpotlightOpts { iterations: 150, ..Default::default() },
+        );
+        assert!(w.best.config.in_template());
+        t.row([
+            name.to_string(),
+            cx.config.display(),
+            sp.config.display(),
+            w.best.config.display(),
+            paper.to_string(),
+        ]);
+    }
+    print!("{t}");
+    println!("\ntab05 OK");
+}

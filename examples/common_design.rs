@@ -1,0 +1,68 @@
+//! WHAM-common (paper section 4.6): mine ONE accelerator serving a whole
+//! workload set — here the five vision models — and compare it with the
+//! hand-optimized designs on every workload.
+
+use wham::arch::presets;
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::graph::autodiff::Optimizer;
+use wham::report::{geomean, speedup_table};
+use wham::search::common::{search_common, Workload};
+use wham::search::engine::{evaluate_design, SearchOptions};
+
+fn main() -> anyhow::Result<()> {
+    let names = ["mobilenet_v3", "resnet18", "inception_v3", "resnext101", "vgg16"];
+    let mut backend = make_backend(BackendChoice::Auto)?;
+
+    let graphs: Vec<(String, wham::graph::OperatorGraph, u64)> = names
+        .iter()
+        .map(|n| {
+            (
+                n.to_string(),
+                wham::models::training(n, Optimizer::Adam).unwrap(),
+                wham::models::info(n).unwrap().batch,
+            )
+        })
+        .collect();
+    let workloads: Vec<Workload> = graphs
+        .iter()
+        .map(|(n, g, b)| Workload {
+            name: n.clone(),
+            graph: g,
+            batch: *b,
+            min_throughput: 0.0,
+            weight: 1.0,
+        })
+        .collect();
+
+    let r = search_common(&workloads, SearchOptions::default(), backend.as_mut());
+    println!(
+        "WHAM-common over {} vision workloads: {} (weighted score {:.3}, {} dims, {:?})",
+        names.len(),
+        r.best.0,
+        r.best.1,
+        r.dims_evaluated,
+        r.wall
+    );
+
+    let mut rows = Vec::new();
+    let mut vs_tpu = Vec::new();
+    let mut vs_nvdla = Vec::new();
+    for (n, g, b) in &graphs {
+        let common = evaluate_design(g, *b, &r.best.0, backend.as_mut());
+        let tpu = evaluate_design(g, *b, &presets::tpuv2(), backend.as_mut());
+        let nvdla = evaluate_design(g, *b, &presets::nvdla_scaled(), backend.as_mut());
+        vs_tpu.push(common.throughput / tpu.throughput);
+        vs_nvdla.push(common.throughput / nvdla.throughput);
+        rows.push((
+            n.clone(),
+            vec![common.throughput, common.throughput / tpu.throughput, common.throughput / nvdla.throughput],
+        ));
+    }
+    print!("{}", speedup_table(&["thpt (samples/s)", "vs tpuv2", "vs nvdla"], &rows));
+    println!(
+        "geomean: {:.3}x over TPUv2, {:.3}x over NVDLA",
+        geomean(vs_tpu.iter().copied()),
+        geomean(vs_nvdla.iter().copied())
+    );
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Distributed search walkthrough (paper section 5): partition GPT2-XL
+//! into a depth-32 GPipe pipeline, run the per-stage top-k local searches
+//! plus the global pruner, and compare the three WHAM families against a
+//! TPUv2 pipeline.
+
+use wham::arch::presets;
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::distributed::global_search::{global_search, GlobalOptions};
+use wham::distributed::network::Network;
+use wham::distributed::partition::partition_transformer;
+use wham::distributed::pipeline::simulate;
+use wham::distributed::Scheme;
+use wham::graph::autodiff::Optimizer;
+
+fn main() -> anyhow::Result<()> {
+    let mut backend = make_backend(BackendChoice::Auto)?;
+    let net = Network::default();
+
+    let cfg = wham::models::transformer_cfg("gpt2-xl").unwrap();
+    let part = partition_transformer("gpt2-xl", &cfg, 32, 1, Optimizer::Adam);
+    println!(
+        "gpt2-xl: {} stages, microbatch {}, {} microbatches/iter",
+        part.stages.len(),
+        part.micro_batch,
+        part.num_micro
+    );
+    for s in part.stages.iter().take(3) {
+        println!(
+            "  stage {}: layers {:?}, {} ops, state {}, stash/mb {}",
+            s.index,
+            s.layers,
+            s.graph.len(),
+            wham::util::human_bytes(s.state_bytes),
+            wham::util::human_bytes(s.stash_bytes)
+        );
+    }
+    println!("  ... (all {} stages fit 16 GiB HBM under GPipe: {})",
+        part.stages.len(),
+        part.stages.iter().all(|s| s.fits_hbm(Scheme::GPipe, part.num_micro, 32)));
+
+    // TPUv2 pipeline baseline.
+    let cfgs = vec![presets::tpuv2(); part.stages.len()];
+    let tpu = simulate(&part, &cfgs, Scheme::GPipe, &net, backend.as_mut());
+    println!("\nTPUv2 pipeline: {:.3} samples/s (iter {:.1} ms, bottleneck stage {})",
+        tpu.throughput, tpu.iter_seconds * 1e3, tpu.bottleneck);
+
+    // Global search: per-stage top-k + area-ordered global pruner.
+    let r = global_search(
+        std::slice::from_ref(&part),
+        &GlobalOptions::default(),
+        &net,
+        backend.as_mut(),
+    );
+    println!(
+        "global search: {} local searches (stage dedup), pool {}, {} evaluated, {:?}",
+        r.local_searches, r.candidate_pool, r.candidates_evaluated, r.wall
+    );
+    for (fam, m) in [
+        ("common", &r.common.1[0]),
+        ("individual", &r.individual[0]),
+        ("mosaic", &r.mosaic[0]),
+    ] {
+        println!(
+            "  WHAM-{fam:<10} {:>9.3} samples/s  ({:.3}x TPUv2)  perf/TDP {:.5}",
+            m.eval.throughput,
+            m.eval.throughput / tpu.throughput,
+            m.eval.perf_per_tdp
+        );
+    }
+    Ok(())
+}

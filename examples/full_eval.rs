@@ -1,0 +1,156 @@
+//! End-to-end driver: runs the FULL system on the real workload zoo and
+//! reports the paper's headline metrics. This is the e2e validation run
+//! recorded in EXPERIMENTS.md:
+//!
+//! 1. builds all 11 Table-4 training graphs (fwd + mirrored bwd + Adam);
+//! 2. verifies the three-layer stack (PJRT artifact vs native mirror);
+//! 3. single-accelerator: WHAM-individual (parallel coordinator) +
+//!    WHAM-common over the 8 workloads vs TPUv2 / NVDLA;
+//! 4. distributed: depth-32 GPipe global search for OPT-1.3B and GPT2-XL
+//!    plus the GPT3 TMP=8/PP=8 point, vs a TPUv2 pipeline.
+//!
+//! Run with: `make artifacts && cargo run --release --example full_eval`
+
+use wham::arch::presets;
+use wham::coordinator::{make_backend, run_parallel, BackendChoice, SearchJob};
+use wham::distributed::global_search::{global_search, GlobalOptions};
+use wham::distributed::network::Network;
+use wham::distributed::partition::partition_transformer;
+use wham::distributed::pipeline::simulate;
+use wham::distributed::Scheme;
+use wham::graph::autodiff::Optimizer;
+use wham::report::geomean;
+use wham::search::engine::{evaluate_design, SearchOptions};
+use wham::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    println!("== WHAM full evaluation (end-to-end driver) ==\n");
+
+    // ---- 1. workload zoo --------------------------------------------------
+    println!("[1/4] building the Table-4 workload zoo");
+    for m in wham::models::MODELS {
+        let g = wham::models::training(m.name, Optimizer::Adam).unwrap();
+        wham::graph::validate::validate(&g)
+            .unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        println!("  {:<14} {:>6} ops  {:>8} edges", m.name, g.len(), g.num_edges());
+    }
+
+    // ---- 2. three-layer stack check ---------------------------------------
+    println!("\n[2/4] three-layer stack: PJRT artifact vs native mirror");
+    let g = wham::models::training("bert-base", Optimizer::Adam).unwrap();
+    let mut native = make_backend(BackendChoice::Native)?;
+    let en = evaluate_design(&g, 4, &presets::tpuv2(), native.as_mut());
+    match make_backend(BackendChoice::Pjrt) {
+        Ok(mut pjrt) => {
+            let ep = evaluate_design(&g, 4, &presets::tpuv2(), pjrt.as_mut());
+            let rel = (en.seconds - ep.seconds).abs() / en.seconds;
+            println!("  bert-base iter: native {:.4}s, pjrt {:.4}s (rel {rel:.2e})", en.seconds, ep.seconds);
+            assert!(rel < 1e-3, "backends disagree");
+        }
+        Err(e) => println!("  (PJRT unavailable: {e}; native mirror only)"),
+    }
+
+    // ---- 3. single-accelerator searches ------------------------------------
+    println!("\n[3/4] single-accelerator: WHAM-individual + WHAM-common vs TPUv2/NVDLA");
+    let names = wham::models::single_acc_models();
+    let jobs: Vec<SearchJob> = names
+        .iter()
+        .map(|n| SearchJob {
+            name: n.to_string(),
+            graph: wham::models::training(n, Optimizer::Adam).unwrap(),
+            batch: wham::models::info(n).unwrap().batch,
+            opts: SearchOptions::default(),
+        })
+        .collect();
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let individual = run_parallel(jobs, BackendChoice::Auto, workers);
+
+    let mut backend = make_backend(BackendChoice::Auto)?;
+    let graphs: Vec<(String, wham::graph::OperatorGraph, u64)> = names
+        .iter()
+        .map(|n| {
+            (
+                n.to_string(),
+                wham::models::training(n, Optimizer::Adam).unwrap(),
+                wham::models::info(n).unwrap().batch,
+            )
+        })
+        .collect();
+    let workloads: Vec<wham::search::common::Workload> = graphs
+        .iter()
+        .map(|(n, g, b)| wham::search::common::Workload {
+            name: n.clone(),
+            graph: g,
+            batch: *b,
+            min_throughput: 0.0,
+            weight: 1.0,
+        })
+        .collect();
+    let common =
+        wham::search::common::search_common(&workloads, SearchOptions::default(), backend.as_mut());
+    println!("  WHAM-common config: {}", common.best.0);
+
+    let mut t = Table::new(["model", "wham-individual", "thpt", "vs tpuv2", "vs nvdla", "common vs tpuv2"]);
+    let mut ind_vs_tpu = Vec::new();
+    let mut com_vs_tpu = Vec::new();
+    let mut com_vs_nvdla = Vec::new();
+    for ((name, graph, batch), (jname, r)) in graphs.iter().zip(&individual) {
+        assert_eq!(name, jname);
+        let tpu = evaluate_design(graph, *batch, &presets::tpuv2(), backend.as_mut());
+        let nvdla = evaluate_design(graph, *batch, &presets::nvdla_scaled(), backend.as_mut());
+        let com = evaluate_design(graph, *batch, &common.best.0, backend.as_mut());
+        ind_vs_tpu.push(r.best.eval.throughput / tpu.throughput);
+        com_vs_tpu.push(com.throughput / tpu.throughput);
+        com_vs_nvdla.push(com.throughput / nvdla.throughput);
+        t.row([
+            name.clone(),
+            r.best.config.display(),
+            format!("{:.2}/s", r.best.eval.throughput),
+            format!("{:.3}x", r.best.eval.throughput / tpu.throughput),
+            format!("{:.3}x", r.best.eval.throughput / nvdla.throughput),
+            format!("{:.3}x", com.throughput / tpu.throughput),
+        ]);
+    }
+    print!("{t}");
+    println!(
+        "  geomean: individual {:.3}x TPUv2 (paper 1.15x) | common {:.3}x TPUv2 (paper 1.12x), {:.3}x NVDLA (paper 2x)",
+        geomean(ind_vs_tpu.iter().copied()),
+        geomean(com_vs_tpu.iter().copied()),
+        geomean(com_vs_nvdla.iter().copied())
+    );
+
+    // ---- 4. distributed training -------------------------------------------
+    println!("\n[4/4] distributed: depth-32 GPipe (OPT-1.3B, GPT2-XL) + GPT3 TMP8/PP8");
+    let net = Network::default();
+    let parts = vec![
+        partition_transformer("opt-1.3b", &wham::models::transformer_cfg("opt-1.3b").unwrap(), 32, 1, Optimizer::Adam),
+        partition_transformer("gpt2-xl", &wham::models::transformer_cfg("gpt2-xl").unwrap(), 32, 1, Optimizer::Adam),
+        partition_transformer("gpt3", &wham::models::transformer_cfg("gpt3").unwrap(), 8, 8, Optimizer::Adam),
+    ];
+    let r = global_search(&parts, &GlobalOptions::default(), &net, backend.as_mut());
+    let mut t2 = Table::new(["model", "family", "thpt", "vs tpuv2 pipeline"]);
+    for (i, part) in parts.iter().enumerate() {
+        let cfgs = vec![presets::tpuv2(); part.stages.len()];
+        let tpu = simulate(part, &cfgs, Scheme::GPipe, &net, backend.as_mut());
+        for (fam, m) in [
+            ("common", &r.common.1[i]),
+            ("individual", &r.individual[i]),
+            ("mosaic", &r.mosaic[i]),
+        ] {
+            t2.row([
+                part.name.clone(),
+                fam.to_string(),
+                format!("{:.3}/s", m.eval.throughput),
+                format!("{:.3}x", m.eval.throughput / tpu.throughput),
+            ]);
+        }
+    }
+    print!("{t2}");
+    println!(
+        "  (paper: common 1.17x, individual 1.22x, mosaic 1.23x over TPUv2 at depth 32)"
+    );
+
+    println!("\nfull_eval completed in {:?}", t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart: mine an accelerator for one workload in ~20 lines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use wham::arch::presets;
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::graph::autodiff::Optimizer;
+use wham::search::engine::{evaluate_design, SearchOptions, WhamSearch};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a workload from the Table-4 zoo and build its full training
+    //    graph (forward + mirrored backward + optimizer updates).
+    let graph = wham::models::training("resnet18", Optimizer::Adam).expect("model registered");
+    let batch = wham::models::info("resnet18").unwrap().batch;
+    println!("resnet18 training graph: {} ops, {} edges", graph.len(), graph.num_edges());
+
+    // 2. Cost backend: the AOT-compiled Pallas/JAX estimator via PJRT when
+    //    artifacts are built, the bit-compatible native mirror otherwise.
+    let mut backend = make_backend(BackendChoice::Auto)?;
+    println!("cost backend: {}", backend.name());
+
+    // 3. Run WHAM's search: dimension pruning (Algorithm 2) around the
+    //    Mirror Conflict Resolution core-count heuristic (Algorithm 1).
+    let result = WhamSearch::new(&graph, batch, SearchOptions::default()).run(backend.as_mut());
+    println!(
+        "best design {} — {:.1} samples/s ({} dims explored in {:?})",
+        result.best.config,
+        result.best.eval.throughput,
+        result.dims_evaluated,
+        result.wall
+    );
+
+    // 4. Compare against the hand-optimized baselines.
+    for (name, cfg) in [("TPUv2", presets::tpuv2()), ("NVDLA", presets::nvdla_scaled())] {
+        let e = evaluate_design(&graph, batch, &cfg, backend.as_mut());
+        println!(
+            "  vs {name:<6} {}: {:.3}x throughput",
+            cfg,
+            result.best.eval.throughput / e.throughput
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+"""AOT compile path: lower the Layer-2 estimator to HLO text.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(the version the published `xla` rust crate binds) rejects with
+`proto.id() <= INT_MAX`.  The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/gen_hlo.py).
+
+Run once via `make artifacts`:
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import N_OPS, estimate
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_estimator() -> str:
+    i32v = jax.ShapeDtypeStruct((N_OPS,), jnp.int32)
+    i32c = jax.ShapeDtypeStruct((3,), jnp.int32)
+    lowered = jax.jit(estimate).lower(i32v, i32v, i32v, i32v, i32c)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    hlo = lower_estimator()
+    hlo_path = os.path.join(args.out_dir, "cost_model.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    # Tiny metadata sidecar so the rust runtime can sanity-check its
+    # assumptions about the artifact without parsing HLO.
+    meta_path = os.path.join(args.out_dir, "cost_model.meta")
+    with open(meta_path, "w") as f:
+        f.write(f"n_ops={N_OPS}\n")
+        f.write("inputs=kind:i32[N],m:i32[N],n:i32[N],k:i32[N],cfg:i32[3]\n")
+        f.write("outputs=latency:f32[N],energy:f32[N],util:f32[N],totals:f32[4]\n")
+
+    print(f"wrote {len(hlo)} chars to {hlo_path} (N_OPS={N_OPS})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Layer-1 Pallas kernel: batched WHAM operator cost model.
+
+The hot-spot of WHAM's inner search loop is annotating every operator of a
+training graph with (latency, energy, utilization) under a candidate
+<TC-Dim, VC-Width>.  This kernel evaluates a whole operator table at once.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the operator table is
+streamed HBM->VMEM in BLOCK-row tiles via BlockSpec; per-block work is pure
+element-wise VPU arithmetic (no MXU), so the block size is chosen for VMEM
+residency (512 ops x 4 int32 inputs + 3 f32 outputs = 14 KiB/block).
+
+Must match `ref.py` exactly — see that file for the semantics.  Lowered
+with interpret=True: real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BPC, BYTES, E_HBM, E_MAC, E_SRAM, E_VEC
+
+BLOCK = 1024  # operator rows per VMEM-resident block (1024 halves grid steps vs 512; see EXPERIMENTS.md §Perf)
+
+
+def _cost_kernel(cfg_ref, kind_ref, m_ref, n_ref, k_ref, lat_ref, en_ref, ut_ref):
+    """One grid step: cost BLOCK operators against a single config."""
+    kind = kind_ref[...]
+    m = m_ref[...]
+    n = n_ref[...]
+    k = k_ref[...]
+    tc_x = cfg_ref[0]
+    tc_y = cfg_ref[1]
+    vc_w = cfg_ref[2]
+
+    mf = m.astype(jnp.float32)
+    nf = n.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    txf = tc_x.astype(jnp.float32)
+    tyf = tc_y.astype(jnp.float32)
+    vwf = vc_w.astype(jnp.float32)
+
+    # Tensor part (kinds 0, 2): output-stationary systolic tiling.
+    tiles_m = ((m + tc_x - 1) // tc_x).astype(jnp.float32)
+    tiles_n = ((n + tc_y - 1) // tc_y).astype(jnp.float32)
+    tiles = tiles_m * tiles_n
+    t_compute = tiles * (kf + txf + tyf)
+    t_bytes = (mf * kf + kf * nf + mf * nf) * BYTES
+    t_mem = t_bytes / BPC
+    macs = mf * nf * kf
+    t_energy = macs * E_MAC + t_bytes * E_HBM + t_bytes * E_SRAM
+    t_util = (mf * nf) / (tiles_m * txf * tiles_n * tyf)
+
+    # Vector part (kind 1): m elements at intensity n over vc_w lanes.
+    v_groups = ((m + vc_w - 1) // vc_w).astype(jnp.float32)
+    v_compute = v_groups * nf
+    v_bytes = 2.0 * mf * BYTES
+    v_mem = v_bytes / BPC
+    v_energy = mf * nf * E_VEC + v_bytes * E_HBM + v_bytes * E_SRAM
+    v_util = mf / (v_groups * vwf)
+
+    # Fused epilogue (kind 2): element-wise over the m*n outputs, on-chip.
+    f_groups = jnp.ceil(mf * nf / vwf)
+    f_vcompute = f_groups * 1.0
+    f_energy = t_energy + mf * nf * E_VEC
+
+    is_t = kind == 0
+    is_v = kind == 1
+    is_f = kind == 2
+    valid = kind >= 0
+
+    lat_t = jnp.maximum(t_compute, t_mem)
+    lat_v = jnp.maximum(v_compute, v_mem)
+    lat_f = jnp.maximum(jnp.maximum(t_compute, f_vcompute), t_mem)
+
+    latency = jnp.where(is_t, lat_t, jnp.where(is_v, lat_v, jnp.where(is_f, lat_f, 0.0)))
+    energy = jnp.where(is_t, t_energy, jnp.where(is_v, v_energy, jnp.where(is_f, f_energy, 0.0)))
+    util = jnp.where(is_t | is_f, t_util, jnp.where(is_v, v_util, 0.0))
+
+    zero = jnp.float32(0.0)
+    lat_ref[...] = jnp.where(valid, latency, zero).astype(jnp.float32)
+    en_ref[...] = jnp.where(valid, energy, zero).astype(jnp.float32)
+    ut_ref[...] = jnp.where(valid, util, zero).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def cost_pallas(kind, m, n, k, cfg, *, block=BLOCK):
+    """Batched cost model as a Pallas call.
+
+    Args mirror `ref.cost_ref`; N (= kind.shape[0]) must be a multiple of
+    `block`.  Returns (latency, energy, util) float32 arrays of shape (N,).
+    """
+    n_ops = kind.shape[0]
+    assert n_ops % block == 0, f"N={n_ops} must be a multiple of block={block}"
+    grid = (n_ops // block,)
+    row = pl.BlockSpec((block,), lambda i: (i,))
+    whole_cfg = pl.BlockSpec((3,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((n_ops,), jnp.float32)] * 3
+    return pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[whole_cfg, row, row, row, row],
+        out_specs=[row, row, row],
+        out_shape=out_shape,
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(cfg, kind, m, n, k)

@@ -1,0 +1,118 @@
+"""Pure-jnp oracle for the WHAM operator cost model.
+
+This file is the SINGLE SOURCE OF TRUTH for the cost-model semantics.  Three
+implementations must agree with it:
+
+  * the Pallas kernel (`cost_model.py`) — checked by pytest/hypothesis,
+  * the AOT-lowered HLO artifact executed from rust via PJRT,
+  * the native rust mirror (`rust/src/cost/native.rs`) — checked by the
+    `pjrt_vs_native` integration test.
+
+Semantics (DESIGN.md "Cost-model constants"): every operator of a training
+graph is described by (kind, m, n, k):
+
+  kind 0 (tensor) : GEMM-like op of m x n x k on a systolic tensor core of
+                    tc_x x tc_y PEs.  Output-stationary tiling:
+                    tiles = ceil(m/tc_x)*ceil(n/tc_y), each tile streams k
+                    values plus a tc_x+tc_y pipeline fill.
+  kind 1 (vector) : element-wise/reduction op over m elements with per-
+                    element intensity n (cycles per element batch) on a
+                    vc_w-lane vector core.
+  kind 2 (fused)  : tensor op with an element-wise epilogue over its m*n
+                    outputs, executed simultaneously on a TC+VC unit
+                    (paper section 4): latency is the max of both parts.
+  kind < 0        : padding — all outputs are zero.
+
+Latency is a roofline: max(compute cycles, HBM cycles).  Energy is
+event-based (MAC / SRAM byte / HBM byte / vector op).  Utilization is the
+fraction of occupied PEs (or lanes) across the tiles the op touches.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- constants
+BYTES = 2.0            # bf16 operand width
+CLOCK_GHZ = 0.94       # TPUv2-like clock
+HBM_GBPS = 900.0       # HBM bandwidth
+BPC = HBM_GBPS / CLOCK_GHZ  # bytes per cycle = 957.4468...
+E_MAC = 0.56           # pJ per MAC (bf16, ~22nm-class)
+E_SRAM = 1.3           # pJ per SRAM byte
+E_HBM = 7.0            # pJ per HBM byte
+E_VEC = 0.31           # pJ per vector lane op
+
+
+def _ceil_div_i32(a, b):
+    """Exact integer ceil-div; inputs are int32 arrays/scalars."""
+    return (a + b - 1) // b
+
+
+def cost_ref(kind, m, n, k, cfg):
+    """Reference cost model.
+
+    Args:
+      kind, m, n, k: int32 arrays of shape (N,).
+      cfg: int32 array of shape (3,): [tc_x, tc_y, vc_w].
+
+    Returns:
+      (latency, energy, util): float32 arrays of shape (N,); latency in
+      core cycles, energy in pJ, util in [0, 1].
+    """
+    kind = kind.astype(jnp.int32)
+    m = m.astype(jnp.int32)
+    n = n.astype(jnp.int32)
+    k = k.astype(jnp.int32)
+    tc_x, tc_y, vc_w = cfg[0], cfg[1], cfg[2]
+
+    mf = m.astype(jnp.float32)
+    nf = n.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    txf = tc_x.astype(jnp.float32)
+    tyf = tc_y.astype(jnp.float32)
+    vwf = vc_w.astype(jnp.float32)
+
+    # ---------------- tensor part (kinds 0 and 2) -------------------------
+    tiles_m = _ceil_div_i32(m, tc_x).astype(jnp.float32)
+    tiles_n = _ceil_div_i32(n, tc_y).astype(jnp.float32)
+    tiles = tiles_m * tiles_n
+    t_compute = tiles * (kf + txf + tyf)
+    t_bytes = (mf * kf + kf * nf + mf * nf) * BYTES
+    t_mem = t_bytes / BPC
+    macs = mf * nf * kf
+    t_energy = macs * E_MAC + t_bytes * E_HBM + t_bytes * E_SRAM
+    t_util = (mf * nf) / (tiles_m * txf * tiles_n * tyf)
+
+    # ---------------- vector part (kind 1) --------------------------------
+    v_groups = _ceil_div_i32(m, vc_w).astype(jnp.float32)
+    v_compute = v_groups * nf  # n = per-element intensity
+    v_bytes = 2.0 * mf * BYTES
+    v_mem = v_bytes / BPC
+    v_energy = mf * nf * E_VEC + v_bytes * E_HBM + v_bytes * E_SRAM
+    v_util = mf / (v_groups * vwf)
+
+    # ---------------- fused epilogue (kind 2) -----------------------------
+    # Element-wise pass over the m*n tensor outputs, intensity 1; the
+    # intermediate stays on-chip so no extra HBM traffic.  m*n can exceed
+    # int32 for the largest GEMMs, so the group count is computed in f32
+    # (exact enough: groups are < 2^24 for all modeled shapes).
+    f_groups = jnp.ceil(mf * nf / vwf)
+    f_vcompute = f_groups * 1.0
+    f_energy = t_energy + mf * nf * E_VEC
+
+    is_t = kind == 0
+    is_v = kind == 1
+    is_f = kind == 2
+    valid = kind >= 0
+
+    lat_t = jnp.maximum(t_compute, t_mem)
+    lat_v = jnp.maximum(v_compute, v_mem)
+    lat_f = jnp.maximum(jnp.maximum(t_compute, f_vcompute), t_mem)
+
+    latency = jnp.where(is_t, lat_t, jnp.where(is_v, lat_v, jnp.where(is_f, lat_f, 0.0)))
+    energy = jnp.where(is_t, t_energy, jnp.where(is_v, v_energy, jnp.where(is_f, f_energy, 0.0)))
+    util = jnp.where(is_t | is_f, t_util, jnp.where(is_v, v_util, 0.0))
+
+    zero = jnp.float32(0.0)
+    latency = jnp.where(valid, latency, zero).astype(jnp.float32)
+    energy = jnp.where(valid, energy, zero).astype(jnp.float32)
+    util = jnp.where(valid, util, zero).astype(jnp.float32)
+    return latency, energy, util

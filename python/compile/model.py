@@ -1,0 +1,42 @@
+"""Layer-2 JAX model: the full WHAM architecture estimator.
+
+Wraps the Layer-1 Pallas cost kernel into the estimator the rust
+coordinator calls: per-operator costs plus masked whole-graph aggregates.
+This function is AOT-lowered once (aot.py) to artifacts/cost_model.hlo.txt
+and executed from rust via PJRT — Python is never on the search path.
+
+Input contract (fixed shapes, see aot.py):
+  kind, m, n, k : int32[N_OPS]   operator table (padding rows: kind = -1)
+  cfg           : int32[3]       [tc_x, tc_y, vc_w]
+
+Output tuple:
+  latency : f32[N_OPS]  cycles per operator
+  energy  : f32[N_OPS]  pJ per operator
+  util    : f32[N_OPS]  core utilization in [0,1]
+  totals  : f32[4]      [sum(latency), sum(energy), mean(util over valid),
+                         valid-op count]
+"""
+
+import jax.numpy as jnp
+
+from .kernels.cost_model import cost_pallas
+
+# Fixed operator-table height of the AOT artifact.  Graphs larger than
+# this are chunked by the rust caller (rust/src/cost/xla_rt.rs).
+N_OPS = 4096
+
+
+def estimate(kind, m, n, k, cfg):
+    """Per-op costs + aggregates for one candidate <TC-Dim, VC-Width>."""
+    latency, energy, util = cost_pallas(kind, m, n, k, cfg)
+    valid = (kind >= 0).astype(jnp.float32)
+    count = jnp.sum(valid)
+    totals = jnp.stack(
+        [
+            jnp.sum(latency),
+            jnp.sum(energy),
+            jnp.sum(util * valid) / jnp.maximum(count, 1.0),
+            count,
+        ]
+    ).astype(jnp.float32)
+    return latency, energy, util, totals

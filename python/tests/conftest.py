@@ -1,0 +1,8 @@
+"""Make the `compile` package importable whether pytest runs from
+`python/` (the Makefile path) or from the repository root (the CI
+one-liner)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,149 @@
+"""Pallas cost kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.cost_model import cost_pallas
+from compile.kernels.ref import BPC, cost_ref
+
+
+def make_ops(rows, pad_to=128):
+    """Build padded int32 op arrays from a list of (kind, m, n, k)."""
+    kind = np.full(pad_to, -1, np.int32)
+    m = np.ones(pad_to, np.int32)
+    n = np.ones(pad_to, np.int32)
+    k = np.ones(pad_to, np.int32)
+    for i, (ki, mi, ni, kk) in enumerate(rows):
+        kind[i], m[i], n[i], k[i] = ki, mi, ni, kk
+    return (jnp.asarray(kind), jnp.asarray(m), jnp.asarray(n), jnp.asarray(k))
+
+
+def run_both(rows, cfg, pad_to=128):
+    ops = make_ops(rows, pad_to)
+    cfg = jnp.asarray(cfg, jnp.int32)
+    got = cost_pallas(*ops, cfg, block=pad_to if pad_to <= 512 else 512)
+    want = cost_ref(*ops, cfg)
+    return got, want
+
+
+def assert_match(got, want):
+    names = ["latency", "energy", "util"]
+    for g, w, name in zip(got, want, names):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-6, atol=1e-6, err_msg=name
+        )
+
+
+# ------------------------------------------------------------ basic cases
+def test_single_gemm_matches_ref():
+    got, want = run_both([(0, 512, 512, 512)], [128, 128, 128])
+    assert_match(got, want)
+
+
+def test_vector_op_matches_ref():
+    got, want = run_both([(1, 100_000, 4, 1)], [128, 128, 128])
+    assert_match(got, want)
+
+
+def test_fused_op_matches_ref():
+    got, want = run_both([(2, 1024, 1024, 768)], [128, 128, 256])
+    assert_match(got, want)
+
+
+def test_padding_rows_are_zero():
+    got, _ = run_both([(0, 64, 64, 64)], [32, 32, 32])
+    lat = np.asarray(got[0])
+    assert lat[0] > 0
+    assert np.all(lat[1:] == 0.0)
+
+
+def test_gemm_compute_formula():
+    # m=n=k=256 on a 128x128 TC: tiles=4, compute=4*(256+128+128)=2048;
+    # mem = 3*256*256*2 / BPC ~ 410.7 -> compute-bound.
+    got, _ = run_both([(0, 256, 256, 256)], [128, 128, 128])
+    assert np.isclose(float(got[0][0]), 4 * (256 + 128 + 128))
+
+
+def test_memory_bound_vector_op():
+    # Huge element count, intensity 1, wide core -> roofline hits HBM.
+    mf = 1_000_000
+    got, _ = run_both([(1, mf, 1, 1)], [128, 128, 256])
+    expect_mem = 2 * mf * 2.0 / BPC
+    assert np.isclose(float(got[0][0]), expect_mem, rtol=1e-5)
+
+
+def test_full_utilization_when_divisible():
+    got, _ = run_both([(0, 256, 256, 64)], [128, 128, 128])
+    assert np.isclose(float(got[2][0]), 1.0)
+
+
+def test_low_utilization_small_op():
+    # 4x4 op on a 256x256 core occupies 16/65536 of the array.
+    got, _ = run_both([(0, 4, 4, 64)], [256, 256, 256])
+    assert np.isclose(float(got[2][0]), 16.0 / 65536.0, rtol=1e-5)
+
+
+def test_larger_core_never_increases_compute_cycles_for_big_gemm():
+    big = [(0, 4096, 4096, 4096)]
+    lat128 = float(run_both(big, [128, 128, 128])[0][0][0])
+    lat256 = float(run_both(big, [256, 256, 256])[0][0][0])
+    assert lat256 <= lat128
+
+
+def test_multi_block_grid():
+    rows = [(i % 3, 64 * (i + 1), 32, 128) for i in range(64)]
+    got, want = run_both(rows, [64, 64, 64], pad_to=1024)
+    assert_match(got, want)
+
+
+# ------------------------------------------------------- hypothesis sweeps
+dims = st.integers(min_value=1, max_value=65_536)
+small_dims = st.integers(min_value=1, max_value=4096)
+core_dim = st.sampled_from([4, 8, 12, 16, 32, 60, 64, 100, 128, 240, 256])
+kinds = st.integers(min_value=-1, max_value=2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.lists(st.tuples(kinds, dims, small_dims, small_dims), min_size=1, max_size=24),
+    tc_x=core_dim,
+    tc_y=core_dim,
+    vc_w=core_dim,
+)
+def test_kernel_matches_ref_on_random_ops(rows, tc_x, tc_y, vc_w):
+    got, want = run_both(rows, [tc_x, tc_y, vc_w])
+    assert_match(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=dims, n=small_dims, k=small_dims, c=core_dim)
+def test_costs_are_finite_positive(m, n, k, c):
+    got, _ = run_both([(0, m, n, k), (1, m, n, 1), (2, m, n, k)], [c, c, c])
+    lat, en, ut = (np.asarray(a)[:3] for a in got)
+    assert np.all(np.isfinite(lat)) and np.all(lat > 0)
+    assert np.all(np.isfinite(en)) and np.all(en > 0)
+    assert np.all(ut > 0) and np.all(ut <= 1.0 + 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=small_dims, n=small_dims, k=small_dims)
+def test_fused_dominates_tensor_latency(m, n, k):
+    """Fused latency >= plain tensor latency (adds an epilogue to the max)."""
+    got, _ = run_both([(0, m, n, k), (2, m, n, k)], [128, 128, 128])
+    lat = np.asarray(got[0])
+    assert lat[1] >= lat[0] - 1e-3
+
+
+def test_output_dtypes_are_f32():
+    got, _ = run_both([(0, 64, 64, 64)], [32, 32, 32])
+    for a in got:
+        assert a.dtype == jnp.float32
+
+
+def test_rejects_non_multiple_block():
+    ops = make_ops([(0, 8, 8, 8)], pad_to=100)
+    with pytest.raises(AssertionError):
+        cost_pallas(*ops, jnp.asarray([8, 8, 8], jnp.int32), block=64)

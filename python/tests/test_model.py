@@ -1,0 +1,46 @@
+"""Layer-2 estimator: aggregate semantics + shape contract."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import N_OPS, estimate
+
+
+def padded(rows):
+    kind = np.full(N_OPS, -1, np.int32)
+    m = np.ones(N_OPS, np.int32)
+    n = np.ones(N_OPS, np.int32)
+    k = np.ones(N_OPS, np.int32)
+    for i, (ki, mi, ni, kk) in enumerate(rows):
+        kind[i], m[i], n[i], k[i] = ki, mi, ni, kk
+    return tuple(jnp.asarray(a) for a in (kind, m, n, k))
+
+
+CFG = jnp.asarray([128, 128, 128], jnp.int32)
+
+
+def test_shapes():
+    lat, en, ut, tot = estimate(*padded([(0, 128, 128, 128)]), CFG)
+    assert lat.shape == (N_OPS,) and en.shape == (N_OPS,) and ut.shape == (N_OPS,)
+    assert tot.shape == (4,)
+
+
+def test_totals_match_sums():
+    rows = [(0, 512, 256, 128), (1, 9999, 2, 1), (2, 300, 300, 300)]
+    lat, en, ut, tot = estimate(*padded(rows), CFG)
+    np.testing.assert_allclose(float(tot[0]), float(jnp.sum(lat)), rtol=1e-6)
+    np.testing.assert_allclose(float(tot[1]), float(jnp.sum(en)), rtol=1e-6)
+    assert int(tot[3]) == len(rows)
+
+
+def test_mean_util_ignores_padding():
+    # One perfectly-utilized op; mean over valid ops must be ~1.0 even
+    # though 4095 padding rows have util 0.
+    _, _, _, tot = estimate(*padded([(0, 256, 256, 64)]), CFG)
+    np.testing.assert_allclose(float(tot[2]), 1.0, rtol=1e-6)
+
+
+def test_empty_graph_zero_totals():
+    _, _, _, tot = estimate(*padded([]), CFG)
+    assert float(tot[0]) == 0.0 and float(tot[1]) == 0.0
+    assert int(tot[3]) == 0

@@ -1,0 +1,103 @@
+"""Cross-cutting properties of the cost model the rust mirror relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.cost_model import cost_pallas
+from compile.kernels.ref import cost_ref
+
+core_dim = st.sampled_from([4, 8, 16, 32, 64, 128, 256])
+
+
+def one_op(kind, m, n, k, cfg, pad=128):
+    kinds = np.full(pad, -1, np.int32)
+    ms = np.ones(pad, np.int32)
+    ns = np.ones(pad, np.int32)
+    ks = np.ones(pad, np.int32)
+    kinds[0], ms[0], ns[0], ks[0] = kind, m, n, k
+    out = cost_pallas(
+        jnp.asarray(kinds), jnp.asarray(ms), jnp.asarray(ns), jnp.asarray(ks),
+        jnp.asarray(cfg, jnp.int32), block=pad,
+    )
+    return tuple(float(np.asarray(a)[0]) for a in out)
+
+
+def test_determinism():
+    a = one_op(0, 1234, 567, 89, [128, 64, 32])
+    b = one_op(0, 1234, 567, 89, [128, 64, 32])
+    assert a == b
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 4096), n=st.integers(1, 4096), k=st.integers(1, 4096), c=core_dim)
+def test_latency_monotone_in_k(m, n, k, c):
+    """More reduction depth never makes a GEMM faster."""
+    lat1, _, _ = one_op(0, m, n, k, [c, c, c])
+    lat2, _, _ = one_op(0, m, n, k + 64, [c, c, c])
+    assert lat2 >= lat1
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 100_000), i=st.integers(1, 8), c=core_dim)
+def test_vector_latency_monotone_in_intensity(m, i, c):
+    lat1, _, _ = one_op(1, m, i, 1, [c, c, c])
+    lat2, _, _ = one_op(1, m, i + 1, 1, [c, c, c])
+    assert lat2 >= lat1
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 4096), n=st.integers(1, 4096), k=st.integers(1, 4096), c=core_dim)
+def test_energy_independent_of_core_dims(m, n, k, c):
+    """Energy is event-based: MACs and bytes don't change with the array
+    size (only latency and utilization do). The rust TDP model depends on
+    this separation."""
+    _, e_small, _ = one_op(0, m, n, k, [4, 4, 4])
+    _, e_this, _ = one_op(0, m, n, k, [c, c, c])
+    np.testing.assert_allclose(e_small, e_this, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 65_536),
+    n=st.integers(1, 2048),
+    k=st.integers(1, 2048),
+    kind=st.integers(0, 2),
+)
+def test_block_boundary_invariance(m, n, k, kind):
+    """The same op costs the same whether it lands in the first or the
+    last row of a multi-block grid."""
+    pad = 256
+    block = 128  # 2 grid steps
+
+    def at_row(row):
+        kinds = np.full(pad, -1, np.int32)
+        ms = np.ones(pad, np.int32)
+        ns = np.ones(pad, np.int32)
+        ks = np.ones(pad, np.int32)
+        kinds[row], ms[row], ns[row], ks[row] = kind, m, n, k
+        out = cost_pallas(
+            jnp.asarray(kinds), jnp.asarray(ms), jnp.asarray(ns), jnp.asarray(ks),
+            jnp.asarray([64, 64, 64], jnp.int32), block=block,
+        )
+        return tuple(float(np.asarray(a)[row]) for a in out)
+
+    assert at_row(0) == at_row(pad - 1)
+
+
+def test_extreme_config_corners_match_ref():
+    rows = [(0, 1, 1, 1), (0, 2**20, 1, 1), (1, 2**24, 8, 1), (2, 4096, 4096, 4096)]
+    pad = 128
+    kinds = np.full(pad, -1, np.int32)
+    ms = np.ones(pad, np.int32)
+    ns = np.ones(pad, np.int32)
+    ks = np.ones(pad, np.int32)
+    for i, r in enumerate(rows):
+        kinds[i], ms[i], ns[i], ks[i] = r
+    for cfg in ([4, 4, 4], [256, 256, 256], [4, 256, 128]):
+        args = tuple(jnp.asarray(a) for a in (kinds, ms, ns, ks))
+        got = cost_pallas(*args, jnp.asarray(cfg, jnp.int32), block=pad)
+        want = cost_ref(*args, jnp.asarray(cfg, jnp.int32))
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6)

@@ -1,0 +1,57 @@
+//! Analytical silicon-area model (the Accelergy/Timeloop-reports
+//! substitution — DESIGN.md). Constants are 22 nm-class estimates chosen
+//! so a TPUv2-like `<2, 128x128, 2, 128>` lands near its published
+//! <330 mm^2 die; absolute values cancel in every paper comparison, which
+//! are all ratios against the same model.
+
+use super::ArchConfig;
+
+/// mm^2 per bf16 MAC PE (incl. local pipeline registers).
+pub const A_MAC_MM2: f64 = 0.00115;
+/// mm^2 per vector lane (wider ALU + register slice).
+pub const A_VLANE_MM2: f64 = 0.0035;
+/// mm^2 per MiB of SRAM.
+pub const A_SRAM_MM2_PER_MIB: f64 = 1.2;
+/// Fixed NoC/dispatch overhead per core.
+pub const A_NOC_MM2_PER_CORE: f64 = 0.35;
+/// Chip-level fixed overhead (HBM PHY, scheduler, semaphore block).
+pub const A_FIXED_MM2: f64 = 40.0;
+
+/// Total die area of a design point in mm^2.
+pub fn area_mm2(c: &ArchConfig) -> f64 {
+    let macs = (c.num_tc * c.pes_per_tc()) as f64;
+    let lanes = (c.num_vc * c.vc_w) as f64;
+    let sram_mib = c.total_sram_bytes() as f64 / (1024.0 * 1024.0);
+    let cores = (c.num_tc + c.num_vc) as f64;
+    macs * A_MAC_MM2
+        + lanes * A_VLANE_MM2
+        + sram_mib * A_SRAM_MM2_PER_MIB
+        + cores * A_NOC_MM2_PER_CORE
+        + A_FIXED_MM2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn tpuv2_area_ballpark() {
+        let a = area_mm2(&presets::tpuv2());
+        assert!((60.0..400.0).contains(&a), "area={a}");
+    }
+
+    #[test]
+    fn area_monotonic_in_cores() {
+        let small = ArchConfig::new(1, 128, 128, 1, 128);
+        let big = ArchConfig::new(4, 128, 128, 4, 128);
+        assert!(area_mm2(&big) > area_mm2(&small));
+    }
+
+    #[test]
+    fn area_monotonic_in_dim() {
+        let small = ArchConfig::new(1, 64, 64, 1, 64);
+        let big = ArchConfig::new(1, 256, 256, 1, 64);
+        assert!(area_mm2(&big) > area_mm2(&small));
+    }
+}

@@ -1,0 +1,55 @@
+//! Analytical power model: TDP = peak dynamic power + leakage.
+//!
+//! Dynamic energy constants mirror the cost-model's per-event energies
+//! (ref.py); TDP assumes every PE/lane fires each cycle, which is the
+//! worst case the thermal solution must sustain — matching how the paper
+//! uses Perf/TDP ("correlated with TCO").
+
+use super::{ArchConfig, CLOCK_GHZ};
+use crate::cost::native::{E_MAC_PJ, E_VEC_PJ};
+
+/// Leakage per mm^2 of die.
+pub const LEAK_W_PER_MM2: f64 = 0.012;
+/// HBM interface power floor (controller + PHY at full stream).
+pub const HBM_W: f64 = 12.0;
+
+/// Peak dynamic power in watts.
+pub fn dynamic_w(c: &ArchConfig) -> f64 {
+    let macs = (c.num_tc * c.pes_per_tc()) as f64;
+    let lanes = (c.num_vc * c.vc_w) as f64;
+    // pJ * GHz = mW; /1e3 -> W.
+    (macs * E_MAC_PJ + lanes * E_VEC_PJ) * CLOCK_GHZ / 1e3
+}
+
+/// Thermal design power in watts.
+pub fn tdp_w(c: &ArchConfig) -> f64 {
+    dynamic_w(c) + super::area::area_mm2(c) * LEAK_W_PER_MM2 + HBM_W
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn tpuv2_tdp_ballpark() {
+        // TPUv2 chip TDP is ~280W board / ~130W chip; our model should land
+        // within the same decade.
+        let t = tdp_w(&presets::tpuv2());
+        assert!((20.0..300.0).contains(&t), "tdp={t}");
+    }
+
+    #[test]
+    fn tdp_exceeds_dynamic() {
+        let c = presets::nvdla_scaled();
+        assert!(tdp_w(&c) > dynamic_w(&c));
+    }
+
+    #[test]
+    fn power_monotonic_in_pes() {
+        assert!(
+            dynamic_w(&ArchConfig::new(4, 128, 128, 1, 128))
+                > dynamic_w(&ArchConfig::new(1, 128, 128, 1, 128))
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! Hand-optimized baseline designs the paper compares against
+//! (section 6.2).
+
+use super::ArchConfig;
+
+/// TPUv2-like: 2 computational units, each a 128x128 systolic array plus
+/// a 128-wide vector core — `<2, 128x128, 2, 128>`.
+pub fn tpuv2() -> ArchConfig {
+    ArchConfig::new(2, 128, 128, 2, 128)
+}
+
+/// Scaled-up NVDLA-like training design: one 256x256 tensor core and one
+/// 256-wide vector core — `<1, 256x256, 1, 256>`.
+pub fn nvdla_scaled() -> ArchConfig {
+    ArchConfig::new(1, 256, 256, 1, 256)
+}
+
+/// TPUv3-like (dual core, two 128x128 arrays each) — used in ablations.
+pub fn tpuv3() -> ArchConfig {
+    ArchConfig::new(4, 128, 128, 4, 128)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_in_template() {
+        assert!(tpuv2().in_template());
+        assert!(nvdla_scaled().in_template());
+        assert!(tpuv3().in_template());
+    }
+
+    #[test]
+    fn nvdla_has_one_big_core() {
+        let c = nvdla_scaled();
+        assert_eq!((c.num_tc, c.pes_per_tc()), (1, 65536));
+    }
+}

@@ -1,0 +1,259 @@
+//! ConfuciuX+ — the RL + genetic-algorithm searcher of Kao et al.
+//! (MICRO'20), extended to training as the paper does (section 6.2):
+//! the framework sizes tensor-operator requirements for the forward,
+//! backward, and weight-update passes and keeps the **largest**
+//! configuration across passes; vector width is tied to TC height.
+//!
+//! Phase 1 (RL): REINFORCE-style categorical policy over the discrete
+//! parameter menu, updated towards configurations that beat the running
+//! baseline. Phase 2 (GA): population seeded from the policy's best,
+//! tournament selection + crossover + mutation fine-tunes the minimum —
+//! matching the paper's observation that "the RL converges to a local
+//! minimum relatively quickly, while the genetic algorithm takes a long
+//! time to fine-tune".
+
+use std::time::Instant;
+
+use super::BaselineResult;
+use crate::arch::{ArchConfig, Constraints};
+use crate::cost::CostBackend;
+use crate::graph::OperatorGraph;
+use crate::metrics::Metric;
+use crate::util::rng::Rng;
+
+/// Discrete menus per template parameter.
+const DIMS: [u64; 7] = [4, 8, 16, 32, 64, 128, 256];
+const COUNTS: [u64; 9] = [1, 2, 3, 4, 6, 8, 12, 16, 24];
+
+/// Tunables of the baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct ConfuciuxOpts {
+    pub iterations: usize,
+    pub rl_fraction: f64,
+    pub population: usize,
+    pub seed: u64,
+    pub metric: Metric,
+    pub constraints: Constraints,
+}
+
+impl Default for ConfuciuxOpts {
+    fn default() -> Self {
+        Self {
+            iterations: 500,
+            rl_fraction: 0.4,
+            population: 16,
+            seed: 0xC0FFEE,
+            metric: Metric::Throughput,
+            constraints: Constraints::default(),
+        }
+    }
+}
+
+/// Genome: indices into the parameter menus.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Genome {
+    tc_x: usize,
+    tc_y: usize,
+    num_tc: usize,
+}
+
+impl Genome {
+    fn to_config(self) -> ArchConfig {
+        let tc_x = DIMS[self.tc_x];
+        let tc_y = DIMS[self.tc_y];
+        // ConfuciuX ignores vector ops: VC width mirrors TC height and
+        // one VC per TC (section 6.2 extension rule).
+        ArchConfig {
+            num_tc: COUNTS[self.num_tc],
+            tc_x,
+            tc_y,
+            num_vc: COUNTS[self.num_tc],
+            vc_w: tc_x,
+        }
+    }
+}
+
+/// Run ConfuciuX+ on a training graph.
+pub fn run(
+    graph: &OperatorGraph,
+    batch: u64,
+    backend: &mut dyn CostBackend,
+    opts: ConfuciuxOpts,
+) -> BaselineResult {
+    let t0 = Instant::now();
+    let mut rng = Rng::new(opts.seed);
+    let mut evals = 0usize;
+    let mut best: Option<(f64, Genome, crate::metrics::Evaluation)> = None;
+    let mut trajectory = Vec::new();
+
+    let score_of = |g: Genome, backend: &mut dyn CostBackend, evals: &mut usize| {
+        *evals += 1;
+        let cfg = g.to_config();
+        super::objective(graph, batch, backend, opts.metric, &opts.constraints, &cfg)
+    };
+
+    // ---- Phase 1: REINFORCE over categorical logits --------------------
+    let rl_iters = (opts.iterations as f64 * opts.rl_fraction) as usize;
+    let mut logits_x = [0.0f64; DIMS.len()];
+    let mut logits_y = [0.0f64; DIMS.len()];
+    let mut logits_n = [0.0f64; COUNTS.len()];
+    let mut baseline = 0.0f64;
+    let sample = |logits: &[f64], rng: &mut Rng| -> usize {
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let ws: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+        let total: f64 = ws.iter().sum();
+        let mut u = rng.f64() * total;
+        for (i, w) in ws.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        ws.len() - 1
+    };
+    for it in 0..rl_iters {
+        let g = Genome {
+            tc_x: sample(&logits_x, &mut rng),
+            tc_y: sample(&logits_y, &mut rng),
+            num_tc: sample(&logits_n, &mut rng),
+        };
+        let (s, eval) = score_of(g, backend, &mut evals);
+        if best.as_ref().map_or(true, |(bs, _, _)| s > *bs) {
+            best = Some((s, g, eval));
+        }
+        trajectory.push((it, best.as_ref().unwrap().0));
+        // Policy-gradient step on the advantage (normalized to the
+        // running baseline to keep the learning rate scale-free).
+        let adv = if baseline == 0.0 { 0.0 } else { (s - baseline) / baseline.abs().max(1e-9) };
+        baseline = if it == 0 { s } else { 0.9 * baseline + 0.1 * s };
+        let lr = 0.5;
+        logits_x[g.tc_x] += lr * adv.clamp(-2.0, 2.0);
+        logits_y[g.tc_y] += lr * adv.clamp(-2.0, 2.0);
+        logits_n[g.num_tc] += lr * adv.clamp(-2.0, 2.0);
+    }
+
+    // ---- Phase 2: genetic fine-tuning -----------------------------------
+    let ga_iters = opts.iterations - rl_iters;
+    let mut pop: Vec<(f64, Genome)> = Vec::with_capacity(opts.population);
+    let best_seed = best.map(|(_, g, _)| g).unwrap_or(Genome { tc_x: 6, tc_y: 6, num_tc: 0 });
+    for i in 0..opts.population {
+        let g = if i == 0 {
+            best_seed
+        } else {
+            Genome {
+                tc_x: rng.below(DIMS.len()),
+                tc_y: rng.below(DIMS.len()),
+                num_tc: rng.below(COUNTS.len()),
+            }
+        };
+        let (s, eval) = score_of(g, backend, &mut evals);
+        if best.as_ref().map_or(true, |(bs, _, _)| s > *bs) {
+            best = Some((s, g, eval));
+        }
+        pop.push((s, g));
+    }
+    let mut it = rl_iters + opts.population;
+    while it < rl_iters + ga_iters {
+        // Tournament selection of two parents.
+        let pick = |rng: &mut Rng, pop: &[(f64, Genome)]| {
+            let a = pop[rng.below(pop.len())];
+            let b = pop[rng.below(pop.len())];
+            if a.0 >= b.0 {
+                a.1
+            } else {
+                b.1
+            }
+        };
+        let pa = pick(&mut rng, &pop);
+        let pb = pick(&mut rng, &pop);
+        // Uniform crossover + point mutation.
+        let mut child = Genome {
+            tc_x: if rng.chance(0.5) { pa.tc_x } else { pb.tc_x },
+            tc_y: if rng.chance(0.5) { pa.tc_y } else { pb.tc_y },
+            num_tc: if rng.chance(0.5) { pa.num_tc } else { pb.num_tc },
+        };
+        if rng.chance(0.3) {
+            match rng.below(3) {
+                0 => child.tc_x = rng.below(DIMS.len()),
+                1 => child.tc_y = rng.below(DIMS.len()),
+                _ => child.num_tc = rng.below(COUNTS.len()),
+            }
+        }
+        let (s, eval) = score_of(child, backend, &mut evals);
+        if best.as_ref().map_or(true, |(bs, _, _)| s > *bs) {
+            best = Some((s, child, eval));
+        }
+        trajectory.push((it, best.as_ref().unwrap().0));
+        // Steady-state replacement of the worst member.
+        let worst = pop
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+            .map(|(i, _)| i)
+            .unwrap();
+        if s > pop[worst].0 {
+            pop[worst] = (s, child);
+        }
+        it += 1;
+    }
+
+    let (score, genome, eval) = best.expect("at least one evaluation");
+    BaselineResult {
+        config: genome.to_config(),
+        eval,
+        score,
+        evaluations: evals,
+        wall: t0.elapsed(),
+        trajectory,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::native::NativeCost;
+    use crate::graph::autodiff::{training_graph, Optimizer};
+
+    fn small_graph() -> OperatorGraph {
+        let fwd = crate::models::transformer::forward_range(&crate::models::transformer::bert_base(), 0, 1);
+        training_graph(&fwd, Optimizer::SgdMomentum)
+    }
+
+    #[test]
+    fn finds_feasible_design() {
+        let g = small_graph();
+        let opts = ConfuciuxOpts { iterations: 60, ..Default::default() };
+        let r = run(&g, 4, &mut NativeCost, opts);
+        assert!(r.config.in_template());
+        assert!(opts.constraints.allows(&r.config));
+        assert!(r.score > 0.0);
+        assert!(r.evaluations >= 60);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let g = small_graph();
+        let opts = ConfuciuxOpts { iterations: 40, ..Default::default() };
+        let a = run(&g, 4, &mut NativeCost, opts);
+        let b = run(&g, 4, &mut NativeCost, opts);
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.score, b.score);
+    }
+
+    #[test]
+    fn trajectory_monotone() {
+        let g = small_graph();
+        let r = run(&g, 4, &mut NativeCost, ConfuciuxOpts { iterations: 50, ..Default::default() });
+        for w in r.trajectory.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn vc_mirrors_tc() {
+        let g = small_graph();
+        let r = run(&g, 4, &mut NativeCost, ConfuciuxOpts { iterations: 30, ..Default::default() });
+        assert_eq!(r.config.vc_w, r.config.tc_x);
+        assert_eq!(r.config.num_vc, r.config.num_tc);
+    }
+}

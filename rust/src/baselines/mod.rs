@@ -1,0 +1,52 @@
+//! Baseline search frameworks (paper section 6.2): ConfuciuX+ and
+//! Spotlight+ — the inference-era searchers extended to training — plus
+//! the hand-optimized TPUv2/NVDLA presets (re-exported from
+//! [`crate::arch::presets`]).
+//!
+//! Both baselines optimize over the *same* architectural template and
+//! cost model as WHAM, so every comparison isolates the search technique:
+//! * ConfuciuX+ — RL (REINFORCE-style policy over discrete parameter
+//!   choices) followed by genetic-algorithm fine-tuning; like the
+//!   original, it sizes tensor-operator needs per pass and keeps the
+//!   largest configuration across forward/backward/update;
+//! * Spotlight+ — domain-aware Bayesian optimization (expected
+//!   improvement over a nearest-neighbour surrogate on a normalized
+//!   parameter space) optimizing the backward and update passes alongside
+//!   the forward pass; the vector width is tied to the tensor-core
+//!   height, as the paper does for frameworks that ignore vector ops.
+
+pub mod confuciux;
+pub mod spotlight;
+
+use crate::arch::ArchConfig;
+use crate::metrics::Evaluation;
+
+/// A baseline's search outcome, with its full evaluation trace.
+#[derive(Debug, Clone)]
+pub struct BaselineResult {
+    pub config: ArchConfig,
+    pub eval: Evaluation,
+    pub score: f64,
+    /// Configurations evaluated (the 500-iteration budget of Fig. 8).
+    pub evaluations: usize,
+    pub wall: std::time::Duration,
+    /// (iteration, best-so-far score) convergence log.
+    pub trajectory: Vec<(usize, f64)>,
+}
+
+/// Shared objective wrapper: evaluate a config on the training graph.
+pub(crate) fn objective(
+    graph: &crate::graph::OperatorGraph,
+    batch: u64,
+    backend: &mut dyn crate::cost::CostBackend,
+    metric: crate::metrics::Metric,
+    constraints: &crate::arch::Constraints,
+    config: &ArchConfig,
+) -> (f64, Evaluation) {
+    let eval = crate::search::engine::evaluate_design(graph, batch, config, backend);
+    if !constraints.allows(config) {
+        // Infeasible designs rank below everything feasible.
+        return (f64::NEG_INFINITY, eval);
+    }
+    (metric.score(&eval, 0.0), eval)
+}

@@ -1,0 +1,143 @@
+//! Search coordinator: fans per-workload searches out over OS threads
+//! (std::thread::scope — the offline cache carries no async runtime; see
+//! DESIGN.md substitutions), collects results in submission order, and
+//! owns the cost-backend selection policy.
+//!
+//! PJRT note: `xla::PjRtClient` wraps a thread-pool-backed CPU client
+//! that is not `Sync`, so each worker thread builds its own backend via
+//! the factory rather than sharing one.
+
+use crate::cost::native::NativeCost;
+use crate::cost::CostBackend;
+use crate::graph::OperatorGraph;
+use crate::search::engine::{SearchOptions, SearchResult, WhamSearch};
+
+/// Which estimator backend searches use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Pure-rust mirror (always available).
+    Native,
+    /// AOT artifact through PJRT (requires `make artifacts`).
+    Pjrt,
+    /// PJRT when the artifact exists, else native.
+    Auto,
+}
+
+impl std::str::FromStr for BackendChoice {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(Self::Native),
+            "pjrt" | "xla" => Ok(Self::Pjrt),
+            "auto" => Ok(Self::Auto),
+            other => Err(format!("unknown backend {other:?}")),
+        }
+    }
+}
+
+/// Build a cost backend per the choice. Errors only for explicit `Pjrt`
+/// without artifacts.
+pub fn make_backend(choice: BackendChoice) -> anyhow::Result<Box<dyn CostBackend>> {
+    match choice {
+        BackendChoice::Native => Ok(Box::new(NativeCost)),
+        BackendChoice::Pjrt => Ok(Box::new(crate::cost::xla_rt::XlaCost::from_artifacts()?)),
+        BackendChoice::Auto => match crate::cost::xla_rt::XlaCost::from_artifacts() {
+            Ok(b) => Ok(Box::new(b)),
+            Err(_) => Ok(Box::new(NativeCost)),
+        },
+    }
+}
+
+/// A unit of search work.
+pub struct SearchJob {
+    pub name: String,
+    pub graph: OperatorGraph,
+    pub batch: u64,
+    pub opts: SearchOptions,
+}
+
+/// Run jobs across up to `workers` threads, each with its own backend
+/// from `choice`. Results return in job order.
+pub fn run_parallel(
+    jobs: Vec<SearchJob>,
+    choice: BackendChoice,
+    workers: usize,
+) -> Vec<(String, SearchResult)> {
+    let workers = workers.clamp(1, jobs.len().max(1));
+    let n = jobs.len();
+    let jobs: Vec<Option<SearchJob>> = jobs.into_iter().map(Some).collect();
+    let jobs = std::sync::Mutex::new(jobs);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<(String, SearchResult)>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut backend =
+                    make_backend(choice).expect("backend construction failed in worker");
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let job = jobs.lock().unwrap()[i].take().expect("job taken twice");
+                    let r = WhamSearch::new(&job.graph, job.batch, job.opts)
+                        .run(backend.as_mut());
+                    *results[i].lock().unwrap() = Some((job.name, r));
+                }
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker completed every job"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::autodiff::{training_graph, Optimizer};
+
+    fn job(name: &str, layers: std::ops::Range<u64>) -> SearchJob {
+        let fwd = crate::models::transformer::forward_range(
+            &crate::models::transformer::bert_base(),
+            layers.start,
+            layers.end,
+        );
+        SearchJob {
+            name: name.into(),
+            graph: training_graph(&fwd, Optimizer::SgdMomentum),
+            batch: 4,
+            opts: SearchOptions::default(),
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let serial = run_parallel(vec![job("a", 0..1)], BackendChoice::Native, 1);
+        let parallel = run_parallel(
+            vec![job("a", 0..1), job("b", 0..2), job("c", 1..2)],
+            BackendChoice::Native,
+            3,
+        );
+        assert_eq!(parallel.len(), 3);
+        assert_eq!(parallel[0].0, "a");
+        assert_eq!(parallel[0].1.best.config, serial[0].1.best.config);
+        assert_eq!(parallel[2].0, "c");
+    }
+
+    #[test]
+    fn auto_backend_constructs() {
+        assert!(make_backend(BackendChoice::Auto).is_ok());
+        assert!(make_backend(BackendChoice::Native).is_ok());
+    }
+
+    #[test]
+    fn zero_jobs_is_fine() {
+        let r = run_parallel(Vec::new(), BackendChoice::Native, 4);
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,100 @@
+//! Annotated operator graphs: the estimator's output consumed by the
+//! critical-path search (paper Figure 4, module 1 -> module 2 handoff).
+
+use super::{CostBackend, Dims, OpCost};
+use crate::arch::CLOCK_GHZ;
+use crate::graph::{CoreType, OperatorGraph};
+
+/// An operator graph plus per-op costs for one `<TC-Dim, VC-Width>`.
+#[derive(Debug, Clone)]
+pub struct AnnotatedGraph<'g> {
+    pub graph: &'g OperatorGraph,
+    pub dims: Dims,
+    pub costs: Vec<OpCost>,
+    /// Integer cycle latencies used by the schedulers (>= 1 per op so no
+    /// operator is free).
+    pub cycles: Vec<u64>,
+    /// Core type per op, cached for the scheduler's hot loop.
+    pub core: Vec<CoreType>,
+}
+
+impl<'g> AnnotatedGraph<'g> {
+    /// Run the estimator over the whole graph.
+    pub fn new(graph: &'g OperatorGraph, dims: Dims, backend: &mut dyn CostBackend) -> Self {
+        let rows = graph.cost_rows();
+        let costs = backend.evaluate(&rows, dims);
+        assert_eq!(costs.len(), graph.len(), "backend returned wrong row count");
+        let cycles = costs.iter().map(|c| (c.latency.ceil() as u64).max(1)).collect();
+        let core = graph.ops.iter().map(|o| o.kind.core_type()).collect();
+        Self { graph, dims, costs, cycles, core }
+    }
+
+    /// Sum of all op energies in pJ.
+    pub fn total_energy_pj(&self) -> f64 {
+        self.costs.iter().map(|c| c.energy).sum()
+    }
+
+    /// Serial-execution latency (sum of all cycles): upper bound used by
+    /// schedulers for slot estimation.
+    pub fn serial_cycles(&self) -> u64 {
+        self.cycles.iter().sum()
+    }
+
+    /// Convert cycles to seconds at the modeled clock.
+    pub fn cycles_to_seconds(cycles: u64) -> f64 {
+        cycles as f64 / (CLOCK_GHZ * 1e9)
+    }
+
+    /// Mean utilization across ops of a core type (Fig. 2 data).
+    pub fn mean_util(&self, core: CoreType) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (i, c) in self.core.iter().enumerate() {
+            if *c == core {
+                sum += self.costs[i].util;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::native::NativeCost;
+    use crate::graph::GraphBuilder;
+
+    fn tiny() -> OperatorGraph {
+        let mut b = GraphBuilder::new();
+        let a = b.gemm("a", 64, 64, 64, &[]);
+        let _ = b.eltwise("r", 64 * 64, 1, &[a]);
+        b.finish()
+    }
+
+    #[test]
+    fn annotates_every_op() {
+        let g = tiny();
+        let ann = AnnotatedGraph::new(&g, Dims { tc_x: 64, tc_y: 64, vc_w: 64 }, &mut NativeCost);
+        assert_eq!(ann.costs.len(), 2);
+        assert!(ann.cycles.iter().all(|&c| c >= 1));
+        assert_eq!(ann.core, vec![CoreType::Tensor, CoreType::Vector]);
+    }
+
+    #[test]
+    fn serial_is_sum() {
+        let g = tiny();
+        let ann = AnnotatedGraph::new(&g, Dims { tc_x: 64, tc_y: 64, vc_w: 64 }, &mut NativeCost);
+        assert_eq!(ann.serial_cycles(), ann.cycles[0] + ann.cycles[1]);
+    }
+
+    #[test]
+    fn seconds_conversion() {
+        let s = AnnotatedGraph::cycles_to_seconds(940_000_000);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,63 @@
+//! Architecture estimator (paper section 4.2): annotates every operator
+//! with latency, energy, and utilization under a candidate
+//! `<TC-Dim, VC-Width>`.
+//!
+//! Two interchangeable backends implement [`CostBackend`]:
+//! * [`native`] — pure-rust mirror of `python/compile/kernels/ref.py`;
+//! * [`xla_rt`] — executes the AOT-compiled Layer-1/2 artifact
+//!   (`artifacts/cost_model.hlo.txt`) through PJRT, in 4096-op batches.
+//!
+//! The `pjrt_vs_native` integration test pins the two to <= 1e-3 relative.
+
+pub mod annotate;
+pub mod native;
+pub mod xla_rt;
+
+use crate::graph::CostRow;
+
+/// Per-operator cost estimate.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct OpCost {
+    /// Execution latency in core cycles.
+    pub latency: f64,
+    /// Energy in pJ.
+    pub energy: f64,
+    /// Core utilization in [0, 1].
+    pub util: f64,
+}
+
+/// Dimension slice of a design the estimator depends on (only TC-Dim and
+/// VC-Width matter for per-op costs — paper section 4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dims {
+    pub tc_x: u64,
+    pub tc_y: u64,
+    pub vc_w: u64,
+}
+
+impl Dims {
+    /// Dimension slice of a full config.
+    pub fn of(c: &crate::arch::ArchConfig) -> Self {
+        Self { tc_x: c.tc_x, tc_y: c.tc_y, vc_w: c.vc_w }
+    }
+}
+
+/// A batched cost evaluator.
+pub trait CostBackend {
+    /// Cost every row under `dims`. Must return one cost per row.
+    fn evaluate(&mut self, rows: &[CostRow], dims: Dims) -> Vec<OpCost>;
+
+    /// Human-readable backend name (logs / reports).
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_of_config() {
+        let c = crate::arch::ArchConfig::new(3, 128, 64, 3, 128);
+        assert_eq!(Dims::of(&c), Dims { tc_x: 128, tc_y: 64, vc_w: 128 });
+    }
+}

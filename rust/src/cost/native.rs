@@ -1,0 +1,165 @@
+//! Native rust mirror of the operator cost model.
+//!
+//! MUST match `python/compile/kernels/ref.py` — that file is the single
+//! source of truth for the semantics; the `pjrt_vs_native` integration
+//! test enforces agreement with the AOT artifact at <= 1e-3 relative.
+//! Arithmetic is f64 here vs f32 in XLA, hence a tolerance rather than
+//! bit equality; the integer ceil-divisions are exact in both.
+
+use super::{CostBackend, Dims, OpCost};
+use crate::graph::CostRow;
+use crate::util::ceil_div;
+
+/// bf16 operand width.
+pub const BYTES: f64 = 2.0;
+/// TPUv2-like clock in GHz.
+pub const CLOCK_GHZ: f64 = 0.94;
+/// HBM bandwidth in GB/s.
+pub const HBM_GBPS: f64 = 900.0;
+/// HBM bytes per core cycle.
+pub const BPC: f64 = HBM_GBPS / CLOCK_GHZ;
+/// pJ per bf16 MAC.
+pub const E_MAC_PJ: f64 = 0.56;
+/// pJ per SRAM byte.
+pub const E_SRAM_PJ: f64 = 1.3;
+/// pJ per HBM byte.
+pub const E_HBM_PJ: f64 = 7.0;
+/// pJ per vector lane op.
+pub const E_VEC_PJ: f64 = 0.31;
+
+/// Cost one operator row under the given dims (ref.py `cost_ref`).
+pub fn cost_op(row: CostRow, d: Dims) -> OpCost {
+    let (m, n) = (row.m as f64, row.n as f64);
+    match row.kind {
+        0 => tensor_cost(row, d),
+        1 => {
+            let groups = ceil_div(row.m, d.vc_w) as f64;
+            let compute = groups * n;
+            let bytes = 2.0 * m * BYTES;
+            let mem = bytes / BPC;
+            OpCost {
+                latency: compute.max(mem),
+                energy: m * n * E_VEC_PJ + bytes * E_HBM_PJ + bytes * E_SRAM_PJ,
+                util: m / (groups * d.vc_w as f64),
+            }
+        }
+        2 => {
+            let t = tensor_cost(CostRow { kind: 0, ..row }, d);
+            let f_groups = (m * n / d.vc_w as f64).ceil();
+            OpCost {
+                latency: t_compute(row, d).max(f_groups).max(t_mem(row)),
+                energy: t.energy + m * n * E_VEC_PJ,
+                util: t.util,
+            }
+        }
+        _ => OpCost::default(),
+    }
+}
+
+fn t_compute(row: CostRow, d: Dims) -> f64 {
+    let tiles = (ceil_div(row.m, d.tc_x) * ceil_div(row.n, d.tc_y)) as f64;
+    tiles * (row.k as f64 + d.tc_x as f64 + d.tc_y as f64)
+}
+
+fn t_mem(row: CostRow) -> f64 {
+    let (m, n, k) = (row.m as f64, row.n as f64, row.k as f64);
+    (m * k + k * n + m * n) * BYTES / BPC
+}
+
+fn tensor_cost(row: CostRow, d: Dims) -> OpCost {
+    let (m, n, k) = (row.m as f64, row.n as f64, row.k as f64);
+    let tiles_m = ceil_div(row.m, d.tc_x) as f64;
+    let tiles_n = ceil_div(row.n, d.tc_y) as f64;
+    let bytes = (m * k + k * n + m * n) * BYTES;
+    let macs = m * n * k;
+    OpCost {
+        latency: t_compute(row, d).max(bytes / BPC),
+        energy: macs * E_MAC_PJ + bytes * E_HBM_PJ + bytes * E_SRAM_PJ,
+        util: (m * n) / (tiles_m * d.tc_x as f64 * tiles_n * d.tc_y as f64),
+    }
+}
+
+/// The native backend: straightforward batched evaluation.
+#[derive(Debug, Default, Clone)]
+pub struct NativeCost;
+
+impl CostBackend for NativeCost {
+    fn evaluate(&mut self, rows: &[CostRow], dims: Dims) -> Vec<OpCost> {
+        rows.iter().map(|&r| cost_op(r, dims)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: Dims = Dims { tc_x: 128, tc_y: 128, vc_w: 128 };
+
+    #[test]
+    fn gemm_compute_formula_matches_ref_case() {
+        // Pinned against python/tests/test_kernel.py::test_gemm_compute_formula.
+        let c = cost_op(CostRow { kind: 0, m: 256, n: 256, k: 256 }, D);
+        assert_eq!(c.latency, 4.0 * (256.0 + 128.0 + 128.0));
+    }
+
+    #[test]
+    fn memory_bound_vector_matches_ref_case() {
+        let mf = 1_000_000u64;
+        let c = cost_op(CostRow { kind: 1, m: mf, n: 1, k: 1 }, Dims { vc_w: 256, ..D });
+        let expect = 2.0 * mf as f64 * 2.0 / BPC;
+        assert!((c.latency - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn full_utilization_when_divisible() {
+        let c = cost_op(CostRow { kind: 0, m: 256, n: 256, k: 64 }, D);
+        assert!((c.util - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_utilization_small_op() {
+        let d = Dims { tc_x: 256, tc_y: 256, vc_w: 256 };
+        let c = cost_op(CostRow { kind: 0, m: 4, n: 4, k: 64 }, d);
+        assert!((c.util - 16.0 / 65536.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fused_latency_dominates_tensor() {
+        let row = CostRow { kind: 0, m: 512, n: 512, k: 512 };
+        let frow = CostRow { kind: 2, ..row };
+        assert!(cost_op(frow, D).latency >= cost_op(row, D).latency);
+    }
+
+    #[test]
+    fn fused_energy_adds_epilogue() {
+        let row = CostRow { kind: 0, m: 64, n: 64, k: 64 };
+        let t = cost_op(row, D).energy;
+        let f = cost_op(CostRow { kind: 2, ..row }, D).energy;
+        assert!((f - t - 64.0 * 64.0 * E_VEC_PJ).abs() < 1e-6);
+    }
+
+    #[test]
+    fn backend_is_elementwise() {
+        let rows = vec![
+            CostRow { kind: 0, m: 128, n: 128, k: 128 },
+            CostRow { kind: 1, m: 1000, n: 2, k: 1 },
+        ];
+        let mut b = NativeCost;
+        let out = b.evaluate(&rows, D);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], cost_op(rows[0], D));
+        assert_eq!(out[1], cost_op(rows[1], D));
+    }
+
+    #[test]
+    fn smaller_core_means_more_cycles_for_big_gemm() {
+        let row = CostRow { kind: 0, m: 4096, n: 4096, k: 4096 };
+        let small = cost_op(row, Dims { tc_x: 64, tc_y: 64, vc_w: 64 }).latency;
+        let large = cost_op(row, Dims { tc_x: 256, tc_y: 256, vc_w: 64 }).latency;
+        assert!(large <= small);
+    }
+}

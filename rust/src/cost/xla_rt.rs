@@ -1,0 +1,66 @@
+//! PJRT-backed cost backend: evaluates operator tables through the
+//! AOT-compiled Layer-1/2 artifact in `N_OPS`-row chunks.
+//!
+//! This is the production estimator of the three-layer stack; the search
+//! makes one batched call per candidate `<TC-Dim, VC-Width>` (plus
+//! chunking for graphs above 4096 ops), so PJRT dispatch cost is amortized
+//! across the whole operator table.
+
+use super::{CostBackend, Dims, OpCost};
+use crate::graph::CostRow;
+use crate::runtime::pjrt::{CostModelRuntime, N_OPS};
+
+/// Cost backend executing `artifacts/cost_model.hlo.txt` via PJRT.
+pub struct XlaCost {
+    rt: CostModelRuntime,
+}
+
+impl XlaCost {
+    /// Load from the discovered artifacts directory.
+    pub fn from_artifacts() -> anyhow::Result<Self> {
+        let dir = crate::runtime::artifacts_dir()
+            .ok_or_else(|| anyhow::anyhow!("artifacts/ not found — run `make artifacts`"))?;
+        Ok(Self { rt: CostModelRuntime::load(&dir)? })
+    }
+
+    /// Wrap an already-loaded runtime.
+    pub fn new(rt: CostModelRuntime) -> Self {
+        Self { rt }
+    }
+}
+
+impl CostBackend for XlaCost {
+    fn evaluate(&mut self, rows: &[CostRow], dims: Dims) -> Vec<OpCost> {
+        let cfg = [dims.tc_x as i32, dims.tc_y as i32, dims.vc_w as i32];
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(N_OPS) {
+            let mut kind = vec![-1i32; N_OPS];
+            let mut m = vec![1i32; N_OPS];
+            let mut n = vec![1i32; N_OPS];
+            let mut k = vec![1i32; N_OPS];
+            for (i, r) in chunk.iter().enumerate() {
+                // validate.rs guarantees dims fit in i32.
+                kind[i] = r.kind;
+                m[i] = r.m as i32;
+                n[i] = r.n as i32;
+                k[i] = r.k as i32;
+            }
+            let batch = self
+                .rt
+                .evaluate(&kind, &m, &n, &k, cfg)
+                .expect("PJRT cost evaluation failed");
+            for i in 0..chunk.len() {
+                out.push(OpCost {
+                    latency: batch.latency[i] as f64,
+                    energy: batch.energy[i] as f64,
+                    util: batch.util[i] as f64,
+                });
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,128 @@
+//! Data-parallel composition (paper section 5: "Data parallel is a
+//! replicated pipeline and hosts the same graph across" replicas).
+//!
+//! A DP group of `replicas` pipelines runs the same stages on disjoint
+//! batch shards and all-reduces gradients once per iteration. This module
+//! composes DP around any pipeline evaluation, completing the
+//! DP x PP x TMP space the evaluated systems span.
+
+use super::network::Network;
+use super::partition::PartitionedModel;
+use super::pipeline::PipelineEval;
+use crate::graph::op::DTYPE_BYTES;
+
+/// Evaluation of a data-parallel group of pipelines.
+#[derive(Debug, Clone)]
+pub struct DataParallelEval {
+    /// Replicas in the group.
+    pub replicas: u64,
+    /// Iteration seconds including the gradient all-reduce.
+    pub iter_seconds: f64,
+    /// Aggregate samples/second across replicas.
+    pub throughput: f64,
+    /// Seconds spent in the gradient all-reduce (per iteration).
+    pub allreduce_seconds: f64,
+    /// Total TDP across all devices of all replicas.
+    pub total_tdp_w: f64,
+    /// throughput / total TDP.
+    pub perf_per_tdp: f64,
+}
+
+/// Compose `replicas` copies of an evaluated pipeline. The gradient
+/// all-reduce covers every stage's parameters; with the common
+/// overlap-with-backward optimization, only the non-overlappable fraction
+/// (`exposed`, default 0.3) adds to the critical path.
+pub fn data_parallel(
+    part: &PartitionedModel,
+    pipeline: &PipelineEval,
+    replicas: u64,
+    net: &Network,
+    exposed: f64,
+) -> DataParallelEval {
+    assert!(replicas >= 1);
+    assert!((0.0..=1.0).contains(&exposed));
+    // Per-stage gradient bytes; the per-iteration all-reduce is bounded by
+    // the largest stage (stages reduce concurrently on disjoint links).
+    let max_grad_bytes = part
+        .stages
+        .iter()
+        .map(|s| s.graph.param_elems() * DTYPE_BYTES)
+        .max()
+        .unwrap_or(0);
+    let ar = if replicas > 1 {
+        net.allreduce_seconds(max_grad_bytes, replicas) * exposed
+    } else {
+        0.0
+    };
+    let iter = pipeline.iter_seconds + ar;
+    let global_batch = part.micro_batch * part.num_micro * replicas;
+    let throughput = global_batch as f64 / iter;
+    let tdp = pipeline.total_tdp_w * replicas as f64;
+    DataParallelEval {
+        replicas,
+        iter_seconds: iter,
+        throughput,
+        allreduce_seconds: ar,
+        total_tdp_w: tdp,
+        perf_per_tdp: throughput / tdp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::native::NativeCost;
+    use crate::distributed::partition::partition_transformer;
+    use crate::distributed::pipeline::simulate;
+    use crate::distributed::Scheme;
+    use crate::graph::autodiff::Optimizer;
+
+    fn pipe() -> (PartitionedModel, PipelineEval) {
+        let mut cfg = crate::models::transformer::gpt2_xl();
+        cfg.layers = 8;
+        let p = partition_transformer("mini", &cfg, 4, 1, Optimizer::SgdMomentum);
+        let cfgs = vec![presets::tpuv2(); 4];
+        let e = simulate(&p, &cfgs, Scheme::GPipe, &Network::default(), &mut NativeCost);
+        (p, e)
+    }
+
+    #[test]
+    fn single_replica_is_identity() {
+        let (p, e) = pipe();
+        let dp = data_parallel(&p, &e, 1, &Network::default(), 0.3);
+        assert_eq!(dp.allreduce_seconds, 0.0);
+        assert!((dp.iter_seconds - e.iter_seconds).abs() < 1e-12);
+        assert!((dp.throughput - e.throughput).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replicas_scale_throughput_sublinearly() {
+        let (p, e) = pipe();
+        let net = Network::default();
+        let d1 = data_parallel(&p, &e, 1, &net, 0.3);
+        let d4 = data_parallel(&p, &e, 4, &net, 0.3);
+        assert!(d4.throughput > d1.throughput, "DP must add throughput");
+        assert!(
+            d4.throughput < 4.0 * d1.throughput,
+            "all-reduce must make scaling sublinear"
+        );
+        assert!(d4.allreduce_seconds > 0.0);
+    }
+
+    #[test]
+    fn full_overlap_restores_linear_scaling() {
+        let (p, e) = pipe();
+        let net = Network::default();
+        let d4 = data_parallel(&p, &e, 4, &net, 0.0);
+        let d1 = data_parallel(&p, &e, 1, &net, 0.0);
+        assert!((d4.throughput / d1.throughput - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tdp_scales_linearly_with_replicas() {
+        let (p, e) = pipe();
+        let d3 = data_parallel(&p, &e, 3, &Network::default(), 0.3);
+        assert!((d3.total_tdp_w / e.total_tdp_w - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,375 @@
+//! Global architecture search for distributed training (paper section
+//! 5.1): per-stage local searches produce top-k candidate designs; a
+//! top-level pruner walks the unique candidates smallest-area-first and
+//! selects the architecture(s) optimizing the end-to-end pipeline metric.
+//!
+//! Three design families are produced (section 6.4):
+//! * **WHAM-common** — one config across stages *and* models;
+//! * **WHAM-individual** — per model, homogeneous across its pipeline;
+//! * **WHAM-mosaic** — per-stage top-1, heterogeneous pipeline.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::network::Network;
+use super::partition::PartitionedModel;
+use super::pipeline::{simulate_with_times, stage_times, PipelineEval, StageTimes};
+use super::Scheme;
+use crate::arch::ArchConfig;
+use crate::cost::CostBackend;
+use crate::metrics::Metric;
+use crate::search::engine::{SearchOptions, WhamSearch};
+
+/// Options for the global search.
+#[derive(Debug, Clone, Copy)]
+pub struct GlobalOptions {
+    pub metric: Metric,
+    pub scheme: Scheme,
+    pub top_k: usize,
+    /// Hysteresis levels of the top-level pruner.
+    pub hysteresis: u32,
+    /// Per-stage local-search options.
+    pub local: SearchOptions,
+    /// Per-model throughput floor for Perf/TDP (e.g. TPUv2 pipeline).
+    pub min_throughput: f64,
+    /// Disable the top-level pruner (evaluate the whole k x s x m pool) —
+    /// the "unpruned" arm of paper Figure 7.
+    pub no_prune: bool,
+}
+
+impl Default for GlobalOptions {
+    fn default() -> Self {
+        Self {
+            metric: Metric::Throughput,
+            scheme: Scheme::GPipe,
+            top_k: 10,
+            hysteresis: 1,
+            local: SearchOptions::default(),
+            min_throughput: 0.0,
+            no_prune: false,
+        }
+    }
+}
+
+/// Result for one model under one config family.
+#[derive(Debug, Clone)]
+pub struct ModelPipelineResult {
+    pub model: String,
+    pub configs: Vec<ArchConfig>,
+    pub eval: PipelineEval,
+}
+
+/// Full global-search outcome.
+#[derive(Debug, Clone)]
+pub struct GlobalResult {
+    /// One config across all stages and models.
+    pub common: (ArchConfig, Vec<ModelPipelineResult>),
+    /// Per-model homogeneous configs.
+    pub individual: Vec<ModelPipelineResult>,
+    /// Per-stage heterogeneous (top-1 per stage).
+    pub mosaic: Vec<ModelPipelineResult>,
+    /// Candidate configs evaluated by the top-level pruner.
+    pub candidates_evaluated: usize,
+    /// Candidate configs in the unique k x s x m pool.
+    pub candidate_pool: usize,
+    pub wall: Duration,
+    /// Stage-level local searches actually run (after dedup).
+    pub local_searches: usize,
+}
+
+/// Precomputed per-model stage-time tables, keyed by config.
+struct ModelTable<'p> {
+    part: &'p PartitionedModel,
+    /// stage-signature id per stage (dedup of identical stage graphs).
+    sig_of_stage: Vec<usize>,
+    /// times[config][sig] -> StageTimes.
+    times: HashMap<ArchConfig, Vec<StageTimes>>,
+}
+
+impl<'p> ModelTable<'p> {
+    fn times_for(
+        &mut self,
+        cfg: &ArchConfig,
+        net: &Network,
+        backend: &mut dyn CostBackend,
+    ) -> Vec<StageTimes> {
+        let sigs = self.sig_of_stage.iter().copied().max().unwrap_or(0) + 1;
+        if !self.times.contains_key(cfg) {
+            let mut per_sig: Vec<Option<StageTimes>> = vec![None; sigs];
+            for (i, s) in self.part.stages.iter().enumerate() {
+                let sig = self.sig_of_stage[i];
+                if per_sig[sig].is_none() {
+                    per_sig[sig] = Some(stage_times(s, cfg, self.part.tmp, net, backend));
+                }
+            }
+            let all: Vec<StageTimes> =
+                self.sig_of_stage.iter().map(|&sg| per_sig[sg].unwrap()).collect();
+            self.times.insert(*cfg, all);
+        }
+        self.times[cfg].clone()
+    }
+}
+
+/// Signature for stage-graph dedup: identical op-count + layer-span +
+/// boundary position produces identical graphs for transformer stacks.
+fn stage_signatures(part: &PartitionedModel) -> Vec<usize> {
+    let mut map: HashMap<(usize, u64, bool, bool), usize> = HashMap::new();
+    let mut out = Vec::with_capacity(part.stages.len());
+    for s in &part.stages {
+        let key = (
+            s.graph.len(),
+            s.layers.1 - s.layers.0,
+            s.layers.0 == 0,
+            s.layers.1 == part.cfg.layers,
+        );
+        let next = map.len();
+        out.push(*map.entry(key).or_insert(next));
+    }
+    out
+}
+
+/// Run the global search over a set of partitioned models.
+pub fn global_search(
+    models: &[PartitionedModel],
+    opts: &GlobalOptions,
+    net: &Network,
+    backend: &mut dyn CostBackend,
+) -> GlobalResult {
+    assert!(!models.is_empty());
+    let t0 = Instant::now();
+
+    // ---- 1. Local search: top-k designs per unique stage ----------------
+    let mut local_searches = 0usize;
+    let mut pool: Vec<ArchConfig> = Vec::new();
+    // Per model: best local design per stage (for Mosaic).
+    let mut mosaic_cfgs: Vec<Vec<ArchConfig>> = Vec::new();
+    let mut tables: Vec<ModelTable> = Vec::new();
+    for part in models {
+        let sigs = stage_signatures(part);
+        let mut best_per_sig: HashMap<usize, ArchConfig> = HashMap::new();
+        for (i, stage) in part.stages.iter().enumerate() {
+            let sig = sigs[i];
+            if best_per_sig.contains_key(&sig) {
+                continue;
+            }
+            let mut lopts = opts.local;
+            lopts.metric = opts.metric;
+            lopts.top_k = opts.top_k;
+            if let Metric::PerfPerTdp = opts.metric {
+                // Per-stage throughput floor: what a TPUv2 achieves on
+                // this stage graph — keeps local winners pipeline-viable.
+                lopts.min_throughput = crate::search::engine::evaluate_design(
+                    &stage.graph,
+                    part.micro_batch,
+                    &crate::arch::presets::tpuv2(),
+                    backend,
+                )
+                .throughput;
+            }
+            let r = WhamSearch::new(&stage.graph, part.micro_batch, lopts).run(backend);
+            local_searches += 1;
+            for p in r.top.points() {
+                if !pool.contains(&p.config) {
+                    pool.push(p.config);
+                }
+            }
+            best_per_sig.insert(sig, r.best.config);
+        }
+        mosaic_cfgs.push((0..part.stages.len()).map(|i| best_per_sig[&sigs[i]]).collect());
+        tables.push(ModelTable { part, sig_of_stage: sigs, times: HashMap::new() });
+    }
+    let candidate_pool = pool.len();
+
+    // ---- 2. Top-level pruner over the unique pool, smallest area first --
+    pool.sort_by(|a, b| {
+        crate::arch::area::area_mm2(a).total_cmp(&crate::arch::area::area_mm2(b))
+    });
+    let score_pipeline = |e: &PipelineEval, opts: &GlobalOptions| -> f64 {
+        match opts.metric {
+            Metric::Throughput => e.throughput,
+            Metric::PerfPerTdp => {
+                if e.throughput + 1e-12 < opts.min_throughput {
+                    -1.0 + e.throughput / opts.min_throughput.max(1e-12) * 1e-3
+                } else {
+                    e.perf_per_tdp
+                }
+            }
+        }
+    };
+
+    // Evaluate a homogeneous config on every model; returns per-model
+    // scores and evals.
+    let evaluate_cfg = |cfg: &ArchConfig,
+                            tables: &mut [ModelTable],
+                            backend: &mut dyn CostBackend|
+     -> Vec<(f64, PipelineEval)> {
+        tables
+            .iter_mut()
+            .map(|t| {
+                let times = t.times_for(cfg, net, backend);
+                let cfgs = vec![*cfg; t.part.stages.len()];
+                let e = simulate_with_times(t.part, &cfgs, &times, opts.scheme, net);
+                (score_pipeline(&e, opts), e)
+            })
+            .collect()
+    };
+
+    // Group the pool into area *levels* (paper Figure-6-style tree: each
+    // level holds designs of the same/similar area; root = smallest).
+    let mut levels: Vec<Vec<ArchConfig>> = Vec::new();
+    for cfg in &pool {
+        let a = crate::arch::area::area_mm2(cfg);
+        match levels.last() {
+            Some(l) if a <= crate::arch::area::area_mm2(&l[0]) * 1.15 => {
+                levels.last_mut().unwrap().push(*cfg)
+            }
+            _ => levels.push(vec![*cfg]),
+        }
+    }
+
+    let mut evaluated = 0usize;
+    let mut best_common: Option<(f64, ArchConfig, Vec<(f64, PipelineEval)>)> = None;
+    let mut best_individual: Vec<Option<(f64, ArchConfig, PipelineEval)>> =
+        vec![None; models.len()];
+    let mut worse_levels = 0u32;
+    // Top-level pruning (section 5.1): stop when `hysteresis`+1
+    // consecutive whole area-levels improve no model.
+    'levels: for level in &levels {
+        let mut improved_level = false;
+        for cfg in level {
+            let results = evaluate_cfg(cfg, &mut tables, backend);
+            evaluated += 1;
+            let mean: f64 = results.iter().map(|(s, _)| s).sum::<f64>() / results.len() as f64;
+            for (mi, (s, e)) in results.iter().enumerate() {
+                if best_individual[mi].as_ref().map_or(true, |(bs, _, _)| s > bs) {
+                    best_individual[mi] = Some((*s, *cfg, e.clone()));
+                    improved_level = true;
+                }
+            }
+            if best_common.as_ref().map_or(true, |(bs, _, _)| mean > *bs) {
+                best_common = Some((mean, *cfg, results));
+                improved_level = true;
+            }
+        }
+        if opts.no_prune {
+            continue; // unpruned arm: exhaust the pool
+        }
+        if improved_level {
+            worse_levels = 0;
+        } else {
+            worse_levels += 1;
+            if worse_levels > opts.hysteresis {
+                break 'levels;
+            }
+        }
+    }
+
+    // ---- 3. Assemble the three families ---------------------------------
+    let (_, common_cfg, common_evals) = best_common.expect("pool non-empty");
+    let common = (
+        common_cfg,
+        models
+            .iter()
+            .zip(&common_evals)
+            .map(|(p, (_, e))| ModelPipelineResult {
+                model: p.name.clone(),
+                configs: vec![common_cfg; p.stages.len()],
+                eval: e.clone(),
+            })
+            .collect(),
+    );
+    let individual: Vec<ModelPipelineResult> = models
+        .iter()
+        .zip(&best_individual)
+        .map(|(p, b)| {
+            let (_, cfg, e) = b.as_ref().expect("every model evaluated");
+            ModelPipelineResult {
+                model: p.name.clone(),
+                configs: vec![*cfg; p.stages.len()],
+                eval: e.clone(),
+            }
+        })
+        .collect();
+    let mosaic: Vec<ModelPipelineResult> = models
+        .iter()
+        .enumerate()
+        .map(|(mi, p)| {
+            let cfgs = mosaic_cfgs[mi].clone();
+            let times: Vec<StageTimes> = p
+                .stages
+                .iter()
+                .zip(&cfgs)
+                .map(|(s, c)| stage_times(s, c, p.tmp, net, backend))
+                .collect();
+            let e = simulate_with_times(p, &cfgs, &times, opts.scheme, net);
+            ModelPipelineResult { model: p.name.clone(), configs: cfgs, eval: e }
+        })
+        .collect();
+
+    GlobalResult {
+        common,
+        individual,
+        mosaic,
+        candidates_evaluated: evaluated,
+        candidate_pool,
+        wall: t0.elapsed(),
+        local_searches,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::native::NativeCost;
+    use crate::distributed::partition::partition_transformer;
+    use crate::graph::autodiff::Optimizer;
+
+    fn mini_models() -> Vec<PartitionedModel> {
+        let mut a = crate::models::transformer::gpt2_xl();
+        a.layers = 8;
+        let mut b = crate::models::transformer::opt_1_3b();
+        b.layers = 8;
+        vec![
+            partition_transformer("mini-gpt2", &a, 4, 1, Optimizer::SgdMomentum),
+            partition_transformer("mini-opt", &b, 4, 1, Optimizer::SgdMomentum),
+        ]
+    }
+
+    #[test]
+    fn produces_three_families() {
+        let ms = mini_models();
+        let r = global_search(&ms, &GlobalOptions::default(), &Network::default(), &mut NativeCost);
+        assert_eq!(r.individual.len(), 2);
+        assert_eq!(r.mosaic.len(), 2);
+        assert_eq!(r.common.1.len(), 2);
+        assert!(r.candidate_pool >= 1);
+        assert!(r.candidates_evaluated >= 1);
+        // Stage dedup: 8 identical middle layers across 4 stages means
+        // far fewer local searches than stages.
+        assert!(r.local_searches <= 6, "local searches {}", r.local_searches);
+    }
+
+    #[test]
+    fn individual_at_least_as_good_as_common_per_model() {
+        let ms = mini_models();
+        let r = global_search(&ms, &GlobalOptions::default(), &Network::default(), &mut NativeCost);
+        for (ind, com) in r.individual.iter().zip(&r.common.1) {
+            assert!(
+                ind.eval.throughput >= com.eval.throughput * 0.999,
+                "{}: individual {} < common {}",
+                ind.model,
+                ind.eval.throughput,
+                com.eval.throughput
+            );
+        }
+    }
+
+    #[test]
+    fn mosaic_configs_vary_per_stage_shape() {
+        let ms = mini_models();
+        let r = global_search(&ms, &GlobalOptions::default(), &Network::default(), &mut NativeCost);
+        for m in &r.mosaic {
+            assert_eq!(m.configs.len(), 4);
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Distributed training support (paper section 5): pipeline/TMP
+//! partitioning, interconnect modeling, pipeline-schedule simulation, and
+//! the global top-k architecture search.
+//!
+//! * [`network`] — p2p activation transfers and ring all-reduce;
+//! * [`partition`] — the memory-balanced pipeline splitter (proof-of-
+//!   concept placement of section 5, HBM-capacity based);
+//! * [`pipeline`] — GPipe / PipeDream-1F1B iteration-time and memory
+//!   simulation over per-stage compute times;
+//! * [`global_search`] — the top-k-per-stage global architecture search
+//!   with the area-ordered tree pruner (section 5.1).
+
+pub mod data_parallel;
+pub mod global_search;
+pub mod network;
+pub mod partition;
+pub mod pipeline;
+
+/// Pipeline training scheme (section 2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Flush-at-end pipelining; all microbatch activations stashed.
+    GPipe,
+    /// PipeDream-1F1B: steady-state one-forward-one-backward; at most
+    /// `stages` microbatches in flight per stage.
+    PipeDream1F1B,
+}
+
+impl std::str::FromStr for Scheme {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "gpipe" => Ok(Scheme::GPipe),
+            "pipedream" | "1f1b" => Ok(Scheme::PipeDream1F1B),
+            other => Err(format!("unknown pipeline scheme {other:?}")),
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Interconnect model (paper section 5, "Networking"): homogeneous
+//! links between all devices; pipeline parallelism moves boundary
+//! activations point-to-point, tensor model parallelism ring-all-reduces
+//! partial activations.
+
+/// Interconnect description.
+#[derive(Debug, Clone, Copy)]
+pub struct Network {
+    /// Per-link bandwidth in GB/s (ICI/NVLink-class default).
+    pub link_gbps: f64,
+    /// Per-message latency in microseconds.
+    pub latency_us: f64,
+}
+
+impl Default for Network {
+    fn default() -> Self {
+        Self { link_gbps: 100.0, latency_us: 2.0 }
+    }
+}
+
+impl Network {
+    /// Seconds to move `bytes` point-to-point (stage boundary transfer).
+    pub fn p2p_seconds(&self, bytes: u64) -> f64 {
+        self.latency_us * 1e-6 + bytes as f64 / (self.link_gbps * 1e9)
+    }
+
+    /// Seconds for a ring all-reduce of `bytes` across `n` devices:
+    /// 2*(n-1)/n of the data crosses each link, plus 2*(n-1) hops of
+    /// latency.
+    pub fn allreduce_seconds(&self, bytes: u64, n: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        2.0 * (nf - 1.0) * self.latency_us * 1e-6
+            + 2.0 * (nf - 1.0) / nf * bytes as f64 / (self.link_gbps * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_scales_with_bytes() {
+        let n = Network::default();
+        assert!(n.p2p_seconds(1 << 30) > n.p2p_seconds(1 << 20));
+        // 1 GiB over 100 GB/s ~ 10.7 ms.
+        let t = n.p2p_seconds(1 << 30);
+        assert!((0.009..0.013).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn allreduce_single_device_is_free() {
+        assert_eq!(Network::default().allreduce_seconds(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn allreduce_approaches_2x_bandwidth_bound() {
+        let n = Network { link_gbps: 100.0, latency_us: 0.0 };
+        let bytes = 1u64 << 30;
+        let t8 = n.allreduce_seconds(bytes, 8);
+        let bound = 2.0 * bytes as f64 / (100.0 * 1e9);
+        assert!(t8 < bound && t8 > 0.8 * bound);
+    }
+
+    #[test]
+    fn allreduce_latency_grows_with_ring() {
+        let n = Network { link_gbps: 1e9, latency_us: 5.0 }; // latency-dominated
+        assert!(n.allreduce_seconds(8, 16) > n.allreduce_seconds(8, 4));
+    }
+}

@@ -1,0 +1,294 @@
+//! Memory-balanced pipeline partitioner (paper section 5, "Partitioning
+//! the model"): splits a model into `stages` contiguous layer groups
+//! based on HBM capacity and the memory footprint of training (weights +
+//! optimizer state + stashed activations), then expands each partition
+//! into its full per-device training graph (backward ops co-located with
+//! their forward peers, as all pipeline schemes mandate).
+
+use super::Scheme;
+use crate::arch::HBM_BYTES;
+use crate::graph::autodiff::{training_graph, Optimizer};
+use crate::graph::op::DTYPE_BYTES;
+use crate::graph::{OperatorGraph, Pass};
+use crate::models::transformer::{forward_range, TransformerCfg};
+
+/// Bytes of optimizer + gradient + master state per parameter (Adam:
+/// bf16 weight/grad + fp32 moments).
+pub const OPT_STATE_BYTES_PER_PARAM: u64 = 12;
+
+/// One pipeline stage resident on one device.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Stage index (0 = input side).
+    pub index: u64,
+    /// Layer range `[lo, hi)` hosted by this stage.
+    pub layers: (u64, u64),
+    /// Full training graph of the partition (microbatch granularity).
+    pub graph: OperatorGraph,
+    /// Activation bytes crossing to the next stage per microbatch.
+    pub boundary_bytes: u64,
+    /// Weight + optimizer state bytes.
+    pub state_bytes: u64,
+    /// Activation stash bytes per in-flight microbatch.
+    pub stash_bytes: u64,
+    /// All-reduce bytes per microbatch in fwd (Megatron TMP), 0 if tmp=1.
+    pub tmp_allreduce_fwd_bytes: u64,
+}
+
+/// A partitioned workload ready for pipeline evaluation.
+#[derive(Debug, Clone)]
+pub struct PartitionedModel {
+    pub name: String,
+    pub cfg: TransformerCfg,
+    pub stages: Vec<Stage>,
+    /// Microbatch size each stage graph was built at.
+    pub micro_batch: u64,
+    /// Microbatches per iteration.
+    pub num_micro: u64,
+    /// TMP degree (devices per stage).
+    pub tmp: u64,
+}
+
+impl Stage {
+    /// Peak memory footprint under a pipeline scheme.
+    pub fn footprint_bytes(&self, scheme: Scheme, num_micro: u64, stages: u64) -> u64 {
+        let in_flight = match scheme {
+            Scheme::GPipe => num_micro,
+            // 1F1B: stage i stashes at most (stages - i) microbatches.
+            Scheme::PipeDream1F1B => (stages - self.index).min(num_micro),
+        };
+        self.state_bytes + self.stash_bytes * in_flight
+    }
+
+    /// Whether the stage fits in HBM under the scheme.
+    pub fn fits_hbm(&self, scheme: Scheme, num_micro: u64, stages: u64) -> bool {
+        self.footprint_bytes(scheme, num_micro, stages) <= HBM_BYTES
+    }
+}
+
+/// Partition a transformer LM into `stages` pipeline stages with `tmp`-way
+/// tensor model parallelism inside each stage (total devices =
+/// stages * tmp). Layers are assigned contiguously, balancing the
+/// per-stage memory weight (embedding/head layers included).
+pub fn partition_transformer(
+    name: &str,
+    base: &TransformerCfg,
+    stages: u64,
+    tmp: u64,
+    opt: Optimizer,
+) -> PartitionedModel {
+    assert!(stages >= 1 && tmp >= 1);
+    // Layer granularity bounds the pipeline depth (OPT-1.3B has 24
+    // layers, so a requested depth of 32 clamps to 24 — the paper splits
+    // sub-layer in that case; we keep layer granularity and document the
+    // substitution in EXPERIMENTS.md).
+    let stages = stages.min(base.layers);
+    let micro_batch = (base.batch / stages).max(1);
+    let num_micro = (base.batch / micro_batch).max(1);
+    let mut cfg = *base;
+    cfg.batch = micro_batch;
+    cfg.tmp = tmp;
+
+    // Memory weight per layer: per-layer params plus the embedding/LM-head
+    // surcharge on the first/last layer.
+    let per_layer = (4 + 2 * cfg.ffn_mult) * cfg.hidden * cfg.hidden / tmp;
+    let embed = cfg.vocab * cfg.hidden;
+    let weight_of = |l: u64| -> u64 {
+        let mut w = per_layer;
+        if l == 0 {
+            w += embed;
+        }
+        if l == cfg.layers - 1 {
+            w += embed / 4; // final layernorm + head working set share
+        }
+        w
+    };
+    let total: u64 = (0..cfg.layers).map(weight_of).sum();
+    let target = total / stages;
+
+    // Greedy contiguous fill toward the per-stage target, guaranteeing at
+    // least one layer per stage and all layers placed.
+    let mut bounds = Vec::with_capacity(stages as usize + 1);
+    bounds.push(0u64);
+    let mut acc = 0u64;
+    let mut l = 0u64;
+    for s in 0..stages {
+        let remaining_stages = stages - s;
+        let remaining_layers = cfg.layers - l;
+        let mut here = 0u64;
+        // Must leave >= 1 layer per remaining stage.
+        while l < cfg.layers && remaining_layers - here > remaining_stages - 1 {
+            let w = weight_of(l);
+            if here > 0 && acc + w > target * (s + 1) {
+                break;
+            }
+            acc += w;
+            here += 1;
+            l += 1;
+        }
+        if here == 0 {
+            acc += weight_of(l);
+            l += 1;
+        }
+        bounds.push(l);
+    }
+    *bounds.last_mut().unwrap() = cfg.layers;
+
+    let boundary = micro_batch * cfg.seq * cfg.hidden * DTYPE_BYTES;
+    let mut out_stages = Vec::with_capacity(stages as usize);
+    for s in 0..stages as usize {
+        let (lo, hi) = (bounds[s], bounds[s + 1]);
+        let fwd = forward_range(&cfg, lo, hi);
+        let graph = training_graph(&fwd, opt);
+        let params = graph.param_elems();
+        let stash = graph.activation_stash_bytes();
+        let ar_bytes = if tmp > 1 {
+            2 * (hi - lo) * micro_batch * cfg.seq * cfg.hidden * DTYPE_BYTES
+        } else {
+            0
+        };
+        out_stages.push(Stage {
+            index: s as u64,
+            layers: (lo, hi),
+            graph,
+            boundary_bytes: boundary,
+            state_bytes: params * OPT_STATE_BYTES_PER_PARAM,
+            stash_bytes: stash,
+            tmp_allreduce_fwd_bytes: ar_bytes,
+        });
+    }
+    PartitionedModel {
+        name: name.to_string(),
+        cfg,
+        stages: out_stages,
+        micro_batch,
+        num_micro,
+        tmp,
+    }
+}
+
+/// Split a training graph into its forward and backward+update induced
+/// subgraphs — the unit the pipeline simulator schedules separately.
+pub fn split_passes(g: &OperatorGraph) -> (OperatorGraph, OperatorGraph) {
+    let fwd_nodes: Vec<usize> =
+        (0..g.len()).filter(|&v| g.ops[v].pass == Pass::Forward).collect();
+    let bwd_nodes: Vec<usize> =
+        (0..g.len()).filter(|&v| g.ops[v].pass != Pass::Forward).collect();
+    (induced(g, &fwd_nodes), induced(g, &bwd_nodes))
+}
+
+/// Induced subgraph on `nodes` with transitive edges contracted away
+/// (an edge appears when a path in `g` connects two kept nodes through
+/// only dropped nodes).
+fn induced(g: &OperatorGraph, nodes: &[usize]) -> OperatorGraph {
+    let mut keep = vec![usize::MAX; g.len()];
+    for (i, &v) in nodes.iter().enumerate() {
+        keep[v] = i;
+    }
+    let mut out = OperatorGraph::default();
+    for &v in nodes {
+        let mut op = g.ops[v].clone();
+        op.fwd_peer = None;
+        out.ops.push(op);
+        out.preds.push(Vec::new());
+        out.succs.push(Vec::new());
+    }
+    // For each kept node, walk back through dropped preds to find kept
+    // ancestors (bounded DFS).
+    for &v in nodes {
+        let nv = keep[v];
+        let mut stack: Vec<usize> = g.preds[v].clone();
+        let mut seen = std::collections::HashSet::new();
+        while let Some(p) = stack.pop() {
+            if !seen.insert(p) {
+                continue;
+            }
+            if keep[p] != usize::MAX {
+                let np = keep[p];
+                if !out.preds[nv].contains(&np) {
+                    out.preds[nv].push(np);
+                    out.succs[np].push(nv);
+                }
+            } else {
+                stack.extend(g.preds[p].iter().copied());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::models::transformer::gpt2_xl;
+
+    #[test]
+    fn partitions_cover_all_layers_contiguously() {
+        let p = partition_transformer("gpt2-xl", &gpt2_xl(), 32, 1, Optimizer::Adam);
+        assert_eq!(p.stages.len(), 32);
+        assert_eq!(p.stages[0].layers.0, 0);
+        assert_eq!(p.stages.last().unwrap().layers.1, 48);
+        for w in p.stages.windows(2) {
+            assert_eq!(w[0].layers.1, w[1].layers.0);
+        }
+        for s in &p.stages {
+            assert!(s.layers.1 > s.layers.0);
+            validate(&s.graph).unwrap();
+        }
+    }
+
+    #[test]
+    fn microbatching_matches_depth() {
+        let p = partition_transformer("gpt2-xl", &gpt2_xl(), 32, 1, Optimizer::Adam);
+        assert_eq!(p.micro_batch, 1);
+        assert_eq!(p.num_micro, 32);
+    }
+
+    #[test]
+    fn stages_fit_hbm_for_gpt2xl_depth32() {
+        let p = partition_transformer("gpt2-xl", &gpt2_xl(), 32, 1, Optimizer::Adam);
+        for s in &p.stages {
+            assert!(
+                s.fits_hbm(Scheme::GPipe, p.num_micro, 32),
+                "stage {} footprint {} exceeds HBM",
+                s.index,
+                s.footprint_bytes(Scheme::GPipe, p.num_micro, 32)
+            );
+        }
+    }
+
+    #[test]
+    fn memory_balance_is_reasonable() {
+        let p = partition_transformer("gpt2-xl", &gpt2_xl(), 8, 1, Optimizer::Adam);
+        let weights: Vec<u64> = p.stages.iter().map(|s| s.state_bytes).collect();
+        let max = *weights.iter().max().unwrap() as f64;
+        let min = *weights.iter().min().unwrap() as f64;
+        // Embedding stage is heavier; everything else within ~3x.
+        assert!(max / min < 3.5, "imbalance {max}/{min}");
+    }
+
+    #[test]
+    fn tmp_shrinks_stage_state() {
+        let p1 = partition_transformer("gpt3", &crate::models::transformer::gpt3(), 8, 1, Optimizer::Adam);
+        let p8 = partition_transformer("gpt3", &crate::models::transformer::gpt3(), 8, 8, Optimizer::Adam);
+        // Compare a middle (embedding-free) stage.
+        assert!(p8.stages[4].state_bytes < p1.stages[4].state_bytes / 4);
+        assert!(p8.stages[4].tmp_allreduce_fwd_bytes > 0);
+        assert_eq!(p1.stages[4].tmp_allreduce_fwd_bytes, 0);
+    }
+
+    #[test]
+    fn split_passes_separates_fwd_bwd() {
+        let p = partition_transformer("gpt2-xl", &gpt2_xl(), 32, 1, Optimizer::Adam);
+        let g = &p.stages[1].graph;
+        let (f, b) = split_passes(g);
+        assert_eq!(f.len() + b.len(), g.len());
+        assert!(f.ops.iter().all(|o| o.pass == Pass::Forward));
+        assert!(b.ops.iter().all(|o| o.pass != Pass::Forward));
+        validate(&f).unwrap();
+        validate(&b).unwrap();
+        // Backward mirrors forward: at least one op per forward tensor op.
+        assert!(b.len() >= f.len());
+    }
+}

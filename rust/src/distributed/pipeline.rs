@@ -1,0 +1,244 @@
+//! Pipeline-schedule simulation: iteration time of GPipe (exact
+//! wavefront recurrence) and PipeDream-1F1B (steady-state bound) over
+//! heterogeneous per-stage compute times and interconnect transfers.
+
+use super::network::Network;
+use super::partition::{split_passes, PartitionedModel};
+use super::Scheme;
+use crate::arch::{ArchConfig, CLOCK_GHZ};
+use crate::cost::annotate::AnnotatedGraph;
+use crate::cost::{CostBackend, Dims};
+use crate::sched::{asap_alap, greedy_schedule, CoreCount};
+
+/// Per-stage timing on a given accelerator config.
+#[derive(Debug, Clone, Copy)]
+pub struct StageTimes {
+    /// Forward seconds per microbatch (incl. TMP all-reduce share).
+    pub fwd_s: f64,
+    /// Backward + update seconds per microbatch.
+    pub bwd_s: f64,
+    /// Energy per microbatch (fwd+bwd), joules.
+    pub energy_j: f64,
+}
+
+/// Whole-pipeline evaluation.
+#[derive(Debug, Clone)]
+pub struct PipelineEval {
+    pub iter_seconds: f64,
+    /// Samples per second at the global batch.
+    pub throughput: f64,
+    /// Sum of per-device TDP (the Perf/TDP denominator for the system).
+    pub total_tdp_w: f64,
+    /// throughput / total TDP.
+    pub perf_per_tdp: f64,
+    /// Index of the slowest stage.
+    pub bottleneck: usize,
+    /// Per-stage (fwd, bwd) seconds.
+    pub stage_times: Vec<StageTimes>,
+}
+
+/// Compute per-microbatch stage times for one accelerator config by
+/// scheduling the stage's forward and backward subgraphs separately.
+pub fn stage_times(
+    stage: &super::partition::Stage,
+    config: &ArchConfig,
+    tmp: u64,
+    net: &Network,
+    backend: &mut dyn CostBackend,
+) -> StageTimes {
+    let (fg, bg) = split_passes(&stage.graph);
+    let cores = CoreCount { tc: config.num_tc, vc: config.num_vc };
+    let mut run = |g: &crate::graph::OperatorGraph| -> (f64, f64) {
+        if g.is_empty() {
+            return (0.0, 0.0);
+        }
+        let ann = AnnotatedGraph::new(g, Dims::of(config), backend);
+        let cp = asap_alap(&ann);
+        let sched = greedy_schedule(&ann, &cp, cores);
+        (sched.makespan as f64 / (CLOCK_GHZ * 1e9), ann.total_energy_pj() * 1e-12)
+    };
+    let (mut fwd_s, fe) = run(&fg);
+    let (mut bwd_s, be) = run(&bg);
+    // Megatron TMP all-reduces: 2 per layer forward, mirrored backward.
+    if tmp > 1 {
+        let ar = net.allreduce_seconds(stage.tmp_allreduce_fwd_bytes, tmp);
+        fwd_s += ar;
+        bwd_s += ar;
+    }
+    StageTimes { fwd_s, bwd_s, energy_j: fe + be }
+}
+
+/// Simulate one training iteration of a partitioned model where stage `i`
+/// runs on `configs[i]`.
+pub fn simulate(
+    part: &PartitionedModel,
+    configs: &[ArchConfig],
+    scheme: Scheme,
+    net: &Network,
+    backend: &mut dyn CostBackend,
+) -> PipelineEval {
+    assert_eq!(configs.len(), part.stages.len());
+    let times: Vec<StageTimes> = part
+        .stages
+        .iter()
+        .zip(configs)
+        .map(|(s, c)| stage_times(s, c, part.tmp, net, backend))
+        .collect();
+    simulate_with_times(part, configs, &times, scheme, net)
+}
+
+/// Simulation core, reusable when stage times are precomputed (the global
+/// search evaluates many configs over the same stages).
+pub fn simulate_with_times(
+    part: &PartitionedModel,
+    configs: &[ArchConfig],
+    times: &[StageTimes],
+    scheme: Scheme,
+    net: &Network,
+) -> PipelineEval {
+    let s = part.stages.len();
+    let m = part.num_micro as usize;
+    let c: Vec<f64> =
+        part.stages.iter().map(|st| net.p2p_seconds(st.boundary_bytes)).collect();
+
+    let iter_seconds = match scheme {
+        Scheme::GPipe => {
+            // Forward wavefront recurrence over stages x microbatches.
+            let mut fwd = vec![vec![0.0f64; m]; s];
+            for j in 0..m {
+                for i in 0..s {
+                    let from_prev_stage = if i == 0 { 0.0 } else { fwd[i - 1][j] + c[i - 1] };
+                    let from_prev_micro = if j == 0 { 0.0 } else { fwd[i][j - 1] };
+                    fwd[i][j] = from_prev_stage.max(from_prev_micro) + times[i].fwd_s;
+                }
+            }
+            // Flush, then the backward wave runs stages in reverse.
+            let flush = fwd[s - 1][m - 1];
+            let mut bwd = vec![vec![0.0f64; m]; s];
+            for j in 0..m {
+                for ii in 0..s {
+                    let i = s - 1 - ii; // reverse stage order
+                    let from_next_stage = if i == s - 1 { flush } else { bwd[i + 1][j] + c[i] };
+                    let from_prev_micro = if j == 0 { 0.0 } else { bwd[i][j - 1] };
+                    bwd[i][j] = from_next_stage.max(from_prev_micro) + times[i].bwd_s;
+                }
+            }
+            bwd.iter().map(|row| row[m - 1]).fold(0.0, f64::max)
+        }
+        Scheme::PipeDream1F1B => {
+            // Steady state: the bottleneck stage alternates 1F/1B; fill +
+            // drain add one traversal of the pipeline each way.
+            let bottleneck =
+                times.iter().map(|t| t.fwd_s + t.bwd_s).fold(0.0, f64::max);
+            let fill: f64 = times.iter().map(|t| t.fwd_s).sum::<f64>() + c.iter().sum::<f64>();
+            let drain: f64 = times.iter().map(|t| t.bwd_s).sum::<f64>() + c.iter().sum::<f64>();
+            fill + drain + (m as f64 - 1.0) * bottleneck
+        }
+    };
+
+    let global_batch = part.micro_batch * part.num_micro;
+    let throughput = global_batch as f64 / iter_seconds;
+    let total_tdp: f64 = configs
+        .iter()
+        .map(|cfg| crate::arch::power::tdp_w(cfg) * part.tmp as f64)
+        .sum();
+    let bottleneck = times
+        .iter()
+        .enumerate()
+        .max_by(|a, b| (a.1.fwd_s + a.1.bwd_s).total_cmp(&(b.1.fwd_s + b.1.bwd_s)))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    PipelineEval {
+        iter_seconds,
+        throughput,
+        total_tdp_w: total_tdp,
+        perf_per_tdp: throughput / total_tdp,
+        bottleneck,
+        stage_times: times.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::native::NativeCost;
+    use crate::graph::autodiff::Optimizer;
+    use crate::models::transformer::gpt2_xl;
+
+    fn small_part() -> PartitionedModel {
+        let mut cfg = gpt2_xl();
+        cfg.layers = 8; // keep the test fast
+        super::super::partition::partition_transformer("mini", &cfg, 4, 1, Optimizer::SgdMomentum)
+    }
+
+    #[test]
+    fn gpipe_iteration_time_is_sane() {
+        let p = small_part();
+        let cfgs = vec![presets::tpuv2(); 4];
+        let e = simulate(&p, &cfgs, Scheme::GPipe, &Network::default(), &mut NativeCost);
+        assert!(e.iter_seconds > 0.0 && e.iter_seconds.is_finite());
+        assert!(e.throughput > 0.0);
+        // Lower bound: every microbatch crosses the bottleneck stage.
+        let bt = &e.stage_times[e.bottleneck];
+        let lb = (p.num_micro as f64) * (bt.fwd_s + bt.bwd_s);
+        assert!(e.iter_seconds >= lb * 0.99, "{} < {}", e.iter_seconds, lb);
+    }
+
+    #[test]
+    fn pipelining_beats_serial_execution() {
+        let p = small_part();
+        let cfgs = vec![presets::tpuv2(); 4];
+        let e = simulate(&p, &cfgs, Scheme::GPipe, &Network::default(), &mut NativeCost);
+        // Serial: every microbatch through every stage sequentially.
+        let serial: f64 = e
+            .stage_times
+            .iter()
+            .map(|t| (t.fwd_s + t.bwd_s) * p.num_micro as f64)
+            .sum();
+        assert!(e.iter_seconds < serial, "pipeline {} !< serial {serial}", e.iter_seconds);
+    }
+
+    #[test]
+    fn one_f1b_no_slower_than_gpipe_bound() {
+        let p = small_part();
+        let cfgs = vec![presets::tpuv2(); 4];
+        let g = simulate(&p, &cfgs, Scheme::GPipe, &Network::default(), &mut NativeCost);
+        let d = simulate(&p, &cfgs, Scheme::PipeDream1F1B, &Network::default(), &mut NativeCost);
+        // Same compute; 1F1B differs in fill/drain shape only.
+        let ratio = d.iter_seconds / g.iter_seconds;
+        assert!((0.5..1.5).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn faster_configs_raise_throughput() {
+        let p = small_part();
+        let slow = vec![ArchConfig::new(1, 32, 32, 1, 32); 4];
+        let fast = vec![presets::tpuv2(); 4];
+        let es = simulate(&p, &slow, Scheme::GPipe, &Network::default(), &mut NativeCost);
+        let ef = simulate(&p, &fast, Scheme::GPipe, &Network::default(), &mut NativeCost);
+        assert!(ef.throughput > es.throughput);
+    }
+
+    #[test]
+    fn bottleneck_identifies_slowest_stage() {
+        let p = small_part();
+        // Give stage 2 a much weaker accelerator.
+        let mut cfgs = vec![presets::tpuv2(); 4];
+        cfgs[2] = ArchConfig::new(1, 16, 16, 1, 16);
+        let e = simulate(&p, &cfgs, Scheme::GPipe, &Network::default(), &mut NativeCost);
+        assert_eq!(e.bottleneck, 2);
+    }
+
+    #[test]
+    fn tdp_scales_with_tmp() {
+        let mut cfg = gpt2_xl();
+        cfg.layers = 8;
+        let p1 = super::super::partition::partition_transformer("a", &cfg, 4, 1, Optimizer::SgdMomentum);
+        let p2 = super::super::partition::partition_transformer("a", &cfg, 4, 2, Optimizer::SgdMomentum);
+        let cfgs = vec![presets::tpuv2(); 4];
+        let e1 = simulate(&p1, &cfgs, Scheme::GPipe, &Network::default(), &mut NativeCost);
+        let e2 = simulate(&p2, &cfgs, Scheme::GPipe, &Network::default(), &mut NativeCost);
+        assert!((e2.total_tdp_w / e1.total_tdp_w - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,252 @@
+//! Mirror the forward pass into the full training graph.
+//!
+//! Paper section 4.3: "auto-grad in training mirrors the forward pass
+//! dataflow to the backward pass, where the backward operators correspond
+//! to partial derivatives of forward operators". This module implements
+//! that mirror:
+//!
+//! * a loss node follows the forward sinks;
+//! * every forward op gets backward peer op(s) in reverse dataflow order —
+//!   a GEMM/conv expands into **two** GEMMs (`dX = dY*W^T`, `dW = X^T*dY`),
+//!   vector ops mirror one-for-one;
+//! * every parameter-owning op gets an optimizer update op fed by its
+//!   weight-gradient node.
+//!
+//! The backward subgraph's edges are the forward edges reversed, which is
+//! exactly the structure MCR exploits (resolving a conflict early in the
+//! forward pass tends to resolve its mirror in the backward pass).
+
+use super::op::{Op, OpKind, Pass};
+use super::{NodeId, OperatorGraph};
+
+/// Optimizer choice; sets the per-parameter update intensity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Optimizer {
+    /// w -= lr * (g + mu*v): ~4 vector ops / param.
+    SgdMomentum,
+    /// Adam: 2 moments + bias correction: ~10 vector ops / param.
+    Adam,
+}
+
+impl Optimizer {
+    fn intensity(self) -> u64 {
+        match self {
+            Optimizer::SgdMomentum => 4,
+            Optimizer::Adam => 10,
+        }
+    }
+}
+
+/// Expand a forward graph into the full training graph.
+pub fn training_graph(fwd: &OperatorGraph, opt: Optimizer) -> OperatorGraph {
+    let mut g = fwd.clone();
+    for (v, op) in g.ops.iter().enumerate() {
+        assert!(
+            op.pass == Pass::Forward,
+            "training_graph expects a forward-only graph (node {v} is {:?})",
+            op.pass
+        );
+    }
+
+    // ---- loss node -------------------------------------------------------
+    let sinks = g.sinks();
+    let loss_elems: u64 = sinks.iter().map(|&s| g.ops[s].out_elems).sum::<u64>().max(1);
+    let loss = push(&mut g, Op {
+        name: "loss".into(),
+        kind: OpKind::Reduction { elems: loss_elems, intensity: 2 },
+        pass: Pass::Loss,
+        param_elems: 0,
+        out_elems: 1,
+        fwd_peer: None,
+    }, &sinks);
+
+    // ---- backward mirror ---------------------------------------------------
+    // For each forward node v we create grad-input node bx(v) (and for
+    // parameterized tensor ops a grad-weight node bw(v)). bx(v) depends on
+    // the bx of v's forward *successors* (reverse dataflow); forward sinks
+    // hang off the loss node.
+    let n_fwd = fwd.len();
+    let mut bx = vec![usize::MAX; n_fwd];
+    let mut order = fwd.topo_order();
+    order.reverse();
+
+    for &v in &order {
+        let fop = g.ops[v].clone();
+        let grad_preds: Vec<NodeId> = if fwd.succs[v].is_empty() {
+            vec![loss]
+        } else {
+            fwd.succs[v].iter().map(|&s| bx[s]).collect()
+        };
+        debug_assert!(grad_preds.iter().all(|&p| p != usize::MAX));
+
+        let (bx_kind, bw_kind): (OpKind, Option<OpKind>) = match fop.kind {
+            OpKind::Gemm { m, n, k } => (
+                // dX[m,k] = dY[m,n] * W^T[n,k]
+                OpKind::Gemm { m, n: k, k: n },
+                // dW[k,n] = X^T[k,m] * dY[m,n] — only if weights exist.
+                (fop.param_elems > 0).then_some(OpKind::Gemm { m: k, n, k: m }),
+            ),
+            OpKind::Conv2d { batch, in_c, out_c, kh, kw, oh, ow } => {
+                let (m, n, k) = (batch * oh * ow, out_c, in_c * kh * kw);
+                (OpKind::Gemm { m, n: k, k: n }, Some(OpKind::Gemm { m: k, n, k: m }))
+            }
+            OpKind::FusedGemmAct { m, n, k } => (
+                // Activation grad folds into the fused unit.
+                OpKind::FusedGemmAct { m, n: k, k: n },
+                Some(OpKind::Gemm { m: k, n, k: m }),
+            ),
+            OpKind::Elementwise { elems, intensity } => {
+                (OpKind::Elementwise { elems, intensity: intensity + 1 }, None)
+            }
+            OpKind::Softmax { rows, cols } => {
+                // Softmax backward: dot product + scale per row.
+                (OpKind::Elementwise { elems: rows * cols, intensity: 3 }, None)
+            }
+            OpKind::LayerNorm { rows, cols } => {
+                (OpKind::Elementwise { elems: rows * cols, intensity: 8 }, None)
+            }
+            OpKind::Reduction { elems, intensity } => {
+                (OpKind::Elementwise { elems, intensity }, None)
+            }
+        };
+
+        let bxv = push(&mut g, Op {
+            name: format!("{}/dX", fop.name),
+            kind: bx_kind.clone(),
+            pass: Pass::Backward,
+            param_elems: 0,
+            out_elems: bx_kind.out_elems(),
+            fwd_peer: Some(v),
+        }, &grad_preds);
+        bx[v] = bxv;
+
+        if let Some(bwk) = bw_kind {
+            let bwv = push(&mut g, Op {
+                name: format!("{}/dW", fop.name),
+                kind: bwk.clone(),
+                pass: Pass::Backward,
+                param_elems: 0,
+                out_elems: bwk.out_elems(),
+                fwd_peer: Some(v),
+            }, &grad_preds);
+            // Optimizer update consumes dW.
+            if fop.param_elems > 0 {
+                push(&mut g, Op {
+                    name: format!("{}/upd", fop.name),
+                    kind: OpKind::Elementwise { elems: fop.param_elems, intensity: opt.intensity() },
+                    pass: Pass::Update,
+                    param_elems: 0,
+                    out_elems: 0,
+                    fwd_peer: Some(v),
+                }, &[bwv]);
+            }
+        } else if fop.param_elems > 0 {
+            // Vector op with params (batchnorm/layernorm affine): update
+            // hangs off the op's own grad node.
+            push(&mut g, Op {
+                name: format!("{}/upd", fop.name),
+                kind: OpKind::Elementwise { elems: fop.param_elems, intensity: opt.intensity() },
+                pass: Pass::Update,
+                param_elems: 0,
+                out_elems: 0,
+                fwd_peer: Some(v),
+            }, &[bxv]);
+        }
+    }
+    g
+}
+
+fn push(g: &mut OperatorGraph, op: Op, preds: &[NodeId]) -> NodeId {
+    let id = g.ops.len();
+    g.ops.push(op);
+    g.preds.push(preds.to_vec());
+    g.succs.push(Vec::new());
+    for &p in preds {
+        debug_assert!(p < id);
+        g.succs[p].push(id);
+    }
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn mlp() -> OperatorGraph {
+        let mut b = GraphBuilder::new();
+        let fc1 = b.gemm("fc1", 32, 128, 64, &[]);
+        let act = b.eltwise("relu", 32 * 128, 1, &[fc1]);
+        let _fc2 = b.gemm("fc2", 32, 10, 128, &[act]);
+        b.finish()
+    }
+
+    #[test]
+    fn mirrors_forward_into_backward() {
+        let g = training_graph(&mlp(), Optimizer::SgdMomentum);
+        let [fwd, bwd, upd, loss] = g.pass_counts();
+        assert_eq!(fwd, 3);
+        assert_eq!(loss, 1);
+        // fc1: dX+dW, relu: dX, fc2: dX+dW = 5 backward ops.
+        assert_eq!(bwd, 5);
+        // Two parameterized gemms -> two update ops.
+        assert_eq!(upd, 2);
+    }
+
+    #[test]
+    fn gemm_backward_dims_are_transposed() {
+        let g = training_graph(&mlp(), Optimizer::Adam);
+        let dx = g.ops.iter().find(|o| o.name == "fc2/dX").unwrap();
+        // fc2 fwd: m=32, n=10, k=128 -> dX: m=32, n=128, k=10.
+        assert_eq!(dx.kind, OpKind::Gemm { m: 32, n: 128, k: 10 });
+        let dw = g.ops.iter().find(|o| o.name == "fc2/dW").unwrap();
+        assert_eq!(dw.kind, OpKind::Gemm { m: 128, n: 10, k: 32 });
+    }
+
+    #[test]
+    fn result_is_acyclic_dag() {
+        let g = training_graph(&mlp(), Optimizer::SgdMomentum);
+        let order = g.topo_order(); // panics on cycle
+        assert_eq!(order.len(), g.len());
+    }
+
+    #[test]
+    fn backward_peers_point_at_forward() {
+        let g = training_graph(&mlp(), Optimizer::SgdMomentum);
+        for op in g.ops.iter().filter(|o| o.pass == Pass::Backward) {
+            let peer = op.fwd_peer.expect("backward op must have a peer");
+            assert_eq!(g.ops[peer].pass, Pass::Forward);
+        }
+    }
+
+    #[test]
+    fn loss_follows_sinks() {
+        let g = training_graph(&mlp(), Optimizer::SgdMomentum);
+        let loss = g.ops.iter().position(|o| o.pass == Pass::Loss).unwrap();
+        assert_eq!(g.preds[loss].len(), 1); // single sink (fc2)
+    }
+
+    #[test]
+    fn adam_updates_are_heavier_than_sgd() {
+        let sgd = training_graph(&mlp(), Optimizer::SgdMomentum);
+        let adam = training_graph(&mlp(), Optimizer::Adam);
+        let upd_cycles = |g: &OperatorGraph| -> u64 {
+            g.ops
+                .iter()
+                .filter(|o| o.pass == Pass::Update)
+                .map(|o| match o.kind {
+                    OpKind::Elementwise { elems, intensity } => elems * intensity,
+                    _ => 0,
+                })
+                .sum()
+        };
+        assert!(upd_cycles(&adam) > upd_cycles(&sgd));
+    }
+
+    #[test]
+    #[should_panic(expected = "forward-only")]
+    fn rejects_already_expanded_graph() {
+        let g = training_graph(&mlp(), Optimizer::SgdMomentum);
+        training_graph(&g, Optimizer::SgdMomentum);
+    }
+}

@@ -1,0 +1,168 @@
+//! Forward-pass graph construction API used by the model zoo.
+
+use super::op::{Op, OpKind, Pass, DTYPE_BYTES};
+use super::{NodeId, OperatorGraph};
+
+/// Builds forward operator graphs; edges always point from earlier to
+/// later insertions, so the result is a DAG by construction.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    graph: OperatorGraph,
+}
+
+impl GraphBuilder {
+    /// Empty builder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an operator with explicit kind / pass / params.
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        pass: Pass,
+        param_elems: u64,
+        preds: &[NodeId],
+    ) -> NodeId {
+        let id = self.graph.ops.len();
+        let out_elems = kind.out_elems();
+        self.graph.ops.push(Op {
+            name: name.into(),
+            kind,
+            pass,
+            param_elems,
+            out_elems,
+            fwd_peer: None,
+        });
+        self.graph.preds.push(Vec::new());
+        self.graph.succs.push(Vec::new());
+        for &p in preds {
+            assert!(p < id, "edges must point forward (pred {p} >= node {id})");
+            self.graph.preds[id].push(p);
+            self.graph.succs[p].push(id);
+        }
+        id
+    }
+
+    /// Forward op shorthand.
+    pub fn fwd(&mut self, name: impl Into<String>, kind: OpKind, params: u64, preds: &[NodeId]) -> NodeId {
+        self.add(name, kind, Pass::Forward, params, preds)
+    }
+
+    /// GEMM `[m,k] x [k,n]` owning a `k x n` weight matrix.
+    pub fn gemm(&mut self, name: impl Into<String>, m: u64, n: u64, k: u64, preds: &[NodeId]) -> NodeId {
+        self.fwd(name, OpKind::Gemm { m, n, k }, k * n, preds)
+    }
+
+    /// GEMM over shared/activations only (no owned weights), e.g.
+    /// attention score and context matmuls.
+    pub fn gemm_act(&mut self, name: impl Into<String>, m: u64, n: u64, k: u64, preds: &[NodeId]) -> NodeId {
+        self.fwd(name, OpKind::Gemm { m, n, k }, 0, preds)
+    }
+
+    /// 2-D convolution (square spatial output `oh x ow`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        &mut self,
+        name: impl Into<String>,
+        batch: u64,
+        in_c: u64,
+        out_c: u64,
+        kh: u64,
+        kw: u64,
+        oh: u64,
+        ow: u64,
+        preds: &[NodeId],
+    ) -> NodeId {
+        self.fwd(
+            name,
+            OpKind::Conv2d { batch, in_c, out_c, kh, kw, oh, ow },
+            in_c * out_c * kh * kw,
+            preds,
+        )
+    }
+
+    /// Element-wise op (ReLU, add, scale ...).
+    pub fn eltwise(&mut self, name: impl Into<String>, elems: u64, intensity: u64, preds: &[NodeId]) -> NodeId {
+        self.fwd(name, OpKind::Elementwise { elems, intensity }, 0, preds)
+    }
+
+    /// BatchNorm: per-element normalize+affine (intensity 2) with 2C params.
+    pub fn batchnorm(&mut self, name: impl Into<String>, elems: u64, channels: u64, preds: &[NodeId]) -> NodeId {
+        self.fwd(name, OpKind::Elementwise { elems, intensity: 2 }, 2 * channels, preds)
+    }
+
+    /// Row-wise softmax.
+    pub fn softmax(&mut self, name: impl Into<String>, rows: u64, cols: u64, preds: &[NodeId]) -> NodeId {
+        self.fwd(name, OpKind::Softmax { rows, cols }, 0, preds)
+    }
+
+    /// LayerNorm with 2*cols params.
+    pub fn layernorm(&mut self, name: impl Into<String>, rows: u64, cols: u64, preds: &[NodeId]) -> NodeId {
+        self.fwd(name, OpKind::LayerNorm { rows, cols }, 2 * cols, preds)
+    }
+
+    /// Reduction (pooling, loss prep).
+    pub fn reduce(&mut self, name: impl Into<String>, elems: u64, intensity: u64, preds: &[NodeId]) -> NodeId {
+        self.fwd(name, OpKind::Reduction { elems, intensity }, 0, preds)
+    }
+
+    /// Current node count.
+    pub fn len(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// True when nothing has been added.
+    pub fn is_empty(&self) -> bool {
+        self.graph.is_empty()
+    }
+
+    /// Finish and return the graph.
+    pub fn finish(self) -> OperatorGraph {
+        self.graph
+    }
+
+    /// Estimated parameter bytes so far (bf16).
+    pub fn param_bytes(&self) -> u64 {
+        self.graph.param_elems() * DTYPE_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_edges_both_directions() {
+        let mut b = GraphBuilder::new();
+        let x = b.gemm("x", 4, 4, 4, &[]);
+        let y = b.eltwise("y", 16, 1, &[x]);
+        let g = b.finish();
+        assert_eq!(g.succs[x], vec![y]);
+        assert_eq!(g.preds[y], vec![x]);
+    }
+
+    #[test]
+    #[should_panic(expected = "edges must point forward")]
+    fn rejects_self_edge() {
+        let mut b = GraphBuilder::new();
+        let x = b.gemm("x", 4, 4, 4, &[]);
+        // A pred >= own id is a forward reference.
+        b.eltwise("bad", 4, 1, &[x + 1]);
+    }
+
+    #[test]
+    fn gemm_params_are_kxn() {
+        let mut b = GraphBuilder::new();
+        b.gemm("fc", 32, 1000, 4096, &[]);
+        assert_eq!(b.param_bytes(), 1000 * 4096 * 2);
+    }
+
+    #[test]
+    fn gemm_act_owns_no_params() {
+        let mut b = GraphBuilder::new();
+        b.gemm_act("scores", 512, 512, 64, &[]);
+        assert_eq!(b.param_bytes(), 0);
+    }
+}

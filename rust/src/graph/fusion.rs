@@ -1,0 +1,160 @@
+//! Op-fusion compiler pass (paper section 6.2, "Compiler and runtime
+//! optimizations"): a GEMM/convolution followed by a single element-wise
+//! activation is fused into one `FusedGemmAct` op executing on a TC+VC
+//! unit, eliminating the HBM round trip for the intermediate.
+
+use super::op::{OpKind, Pass};
+use super::OperatorGraph;
+
+/// Fuse producer(GEMM/Conv) -> consumer(cheap element-wise) pairs where the
+/// element-wise op has exactly that producer as its only predecessor and
+/// the producer has exactly that consumer as its only successor. Returns
+/// the rewritten graph and the number of fused pairs.
+pub fn fuse(g: &OperatorGraph) -> (OperatorGraph, usize) {
+    let n = g.len();
+    let mut absorbed = vec![false; n]; // element-wise node folded away
+    let mut fused_kind: Vec<Option<OpKind>> = vec![None; n];
+
+    for v in 0..n {
+        if g.ops[v].pass != Pass::Forward || g.succs[v].len() != 1 {
+            continue;
+        }
+        let s = g.succs[v][0];
+        if g.preds[s].len() != 1 || g.ops[s].pass != Pass::Forward {
+            continue;
+        }
+        // Only cheap activations fuse (intensity <= 4: relu/gelu/sigmoid).
+        let act_ok = matches!(g.ops[s].kind, OpKind::Elementwise { intensity, .. } if intensity <= 4);
+        if !act_ok {
+            continue;
+        }
+        let row = match g.ops[v].kind {
+            OpKind::Gemm { m, n, k } | OpKind::FusedGemmAct { m, n, k } => Some((m, n, k)),
+            OpKind::Conv2d { .. } => {
+                let r = g.ops[v].kind.cost_row();
+                Some((r.m, r.n, r.k))
+            }
+            _ => None,
+        };
+        if let Some((m, nn, k)) = row {
+            // The epilogue must cover exactly the producer's outputs.
+            if g.ops[s].kind.out_elems() == m * nn && !absorbed[v] {
+                fused_kind[v] = Some(OpKind::FusedGemmAct { m, n: nn, k });
+                absorbed[s] = true;
+            }
+        }
+    }
+
+    // Rebuild without absorbed nodes; edges through an absorbed node are
+    // re-routed to its producer.
+    let mut new_id = vec![usize::MAX; n];
+    let mut out = OperatorGraph::default();
+    for v in 0..n {
+        if absorbed[v] {
+            continue;
+        }
+        let mut op = g.ops[v].clone();
+        if let Some(kind) = fused_kind[v].take() {
+            // Absorb the activation's name for readability.
+            let s = g.succs[v][0];
+            op.name = format!("{}+{}", op.name, g.ops[s].name);
+            op.out_elems = kind.out_elems();
+            op.kind = kind;
+        }
+        new_id[v] = out.ops.len();
+        out.ops.push(op);
+        out.preds.push(Vec::new());
+        out.succs.push(Vec::new());
+    }
+    let resolve = |mut v: usize| {
+        while absorbed[v] {
+            v = g.preds[v][0];
+        }
+        new_id[v]
+    };
+    for v in 0..n {
+        if absorbed[v] {
+            continue;
+        }
+        let nv = new_id[v];
+        for &p in &g.preds[v] {
+            let np = resolve(p);
+            if np != nv && !out.preds[nv].contains(&np) {
+                out.preds[nv].push(np);
+                out.succs[np].push(nv);
+            }
+        }
+    }
+    let fused = absorbed.iter().filter(|&&a| a).count();
+    (out, fused)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CoreType, GraphBuilder};
+
+    #[test]
+    fn fuses_gemm_relu_pair() {
+        let mut b = GraphBuilder::new();
+        let g1 = b.gemm("fc", 16, 16, 16, &[]);
+        let r = b.eltwise("relu", 256, 1, &[g1]);
+        let _next = b.gemm("fc2", 16, 16, 16, &[r]);
+        let (fused, count) = fuse(&b.finish());
+        assert_eq!(count, 1);
+        assert_eq!(fused.len(), 2);
+        assert_eq!(fused.ops[0].kind.core_type(), CoreType::Fused);
+        assert_eq!(fused.ops[0].name, "fc+relu");
+        // Edge re-routed through the fused node.
+        assert_eq!(fused.succs[0], vec![1]);
+    }
+
+    #[test]
+    fn no_fuse_when_activation_has_fanin() {
+        let mut b = GraphBuilder::new();
+        let g1 = b.gemm("a", 16, 16, 16, &[]);
+        let g2 = b.gemm("b", 16, 16, 16, &[]);
+        let _add = b.eltwise("add", 256, 1, &[g1, g2]);
+        let (fused, count) = fuse(&b.finish());
+        assert_eq!(count, 0);
+        assert_eq!(fused.len(), 3);
+    }
+
+    #[test]
+    fn no_fuse_when_producer_has_fanout() {
+        let mut b = GraphBuilder::new();
+        let g1 = b.gemm("a", 16, 16, 16, &[]);
+        let _r = b.eltwise("relu", 256, 1, &[g1]);
+        let _branch = b.eltwise("branch", 256, 1, &[g1]);
+        let (_, count) = fuse(&b.finish());
+        assert_eq!(count, 0);
+    }
+
+    #[test]
+    fn no_fuse_on_size_mismatch() {
+        let mut b = GraphBuilder::new();
+        let g1 = b.gemm("a", 16, 16, 16, &[]);
+        let _pool = b.eltwise("pool", 64, 1, &[g1]); // 64 != 256
+        let (_, count) = fuse(&b.finish());
+        assert_eq!(count, 0);
+    }
+
+    #[test]
+    fn expensive_epilogues_stay_separate() {
+        let mut b = GraphBuilder::new();
+        let g1 = b.gemm("a", 16, 16, 16, &[]);
+        let _n = b.eltwise("norm", 256, 6, &[g1]);
+        let (_, count) = fuse(&b.finish());
+        assert_eq!(count, 0);
+    }
+
+    #[test]
+    fn conv_relu_fuses() {
+        let mut b = GraphBuilder::new();
+        let c = b.conv("c", 2, 3, 8, 3, 3, 8, 8, &[]);
+        let _r = b.eltwise("relu", 2 * 8 * 8 * 8, 1, &[c]);
+        let (fused, count) = fuse(&b.finish());
+        assert_eq!(count, 1);
+        assert!(matches!(fused.ops[0].kind, OpKind::FusedGemmAct { .. }));
+    }
+}

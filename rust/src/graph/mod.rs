@@ -1,0 +1,159 @@
+//! Training operator-graph IR.
+//!
+//! A model is a DAG of dense operators. Model builders ([`crate::models`])
+//! emit the **forward** pass; [`autodiff`] mirrors it into the full
+//! training graph (forward + backward + parameter update + loss), the
+//! structure WHAM's search optimizes over (paper section 2.1: backward
+//! operators are partial derivatives of forward operators arranged in a
+//! mirror dataflow, and must be co-located with their forward peers).
+
+pub mod autodiff;
+pub mod builder;
+pub mod fusion;
+pub mod op;
+pub mod validate;
+
+pub use builder::GraphBuilder;
+pub use op::{CoreType, CostRow, Op, OpKind, Pass};
+
+/// Index of a node in an [`OperatorGraph`].
+pub type NodeId = usize;
+
+/// A DAG of training operators with adjacency in both directions.
+#[derive(Debug, Clone, Default)]
+pub struct OperatorGraph {
+    pub ops: Vec<Op>,
+    pub preds: Vec<Vec<NodeId>>,
+    pub succs: Vec<Vec<NodeId>>,
+}
+
+impl OperatorGraph {
+    /// Number of operators.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when the graph has no operators.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Nodes with no predecessors.
+    pub fn sources(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&v| self.preds[v].is_empty()).collect()
+    }
+
+    /// Nodes with no successors.
+    pub fn sinks(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&v| self.succs[v].is_empty()).collect()
+    }
+
+    /// Edge count.
+    pub fn num_edges(&self) -> usize {
+        self.succs.iter().map(Vec::len).sum()
+    }
+
+    /// Topological order (Kahn). Panics if the graph has a cycle — the
+    /// builder can only create forward edges, so this is an invariant.
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let mut indeg: Vec<usize> = self.preds.iter().map(Vec::len).collect();
+        let mut queue: std::collections::VecDeque<NodeId> =
+            (0..self.len()).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &s in &self.succs[v] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.len(), "operator graph has a cycle");
+        order
+    }
+
+    /// Total parameter elements owned by forward operators.
+    pub fn param_elems(&self) -> u64 {
+        self.ops.iter().filter(|o| o.pass == Pass::Forward).map(|o| o.param_elems).sum()
+    }
+
+    /// Total training FLOPs (fwd+bwd+update) of the graph.
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.kind.flops()).sum()
+    }
+
+    /// Bytes of activations stashed for the backward pass per microbatch
+    /// (paper section 2.1: every forward activation persists until its
+    /// backward peer executes).
+    pub fn activation_stash_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .filter(|o| o.pass == Pass::Forward)
+            .map(|o| o.out_elems * op::DTYPE_BYTES)
+            .sum()
+    }
+
+    /// Per-op rows in the cost-model contract order (kind, m, n, k).
+    pub fn cost_rows(&self) -> Vec<CostRow> {
+        self.ops.iter().map(|o| o.kind.cost_row()).collect()
+    }
+
+    /// Count operators per pass.
+    pub fn pass_counts(&self) -> [usize; 4] {
+        let mut c = [0usize; 4];
+        for o in &self.ops {
+            c[o.pass as usize] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> OperatorGraph {
+        let mut b = GraphBuilder::new();
+        let a = b.gemm("a", 8, 8, 8, &[]);
+        let l = b.eltwise("l", 64, 1, &[a]);
+        let r = b.eltwise("r", 64, 1, &[a]);
+        let j = b.gemm("j", 8, 8, 8, &[l, r]);
+        let _ = j;
+        b.finish()
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = diamond();
+        let order = g.topo_order();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.len()];
+            for (i, &v) in order.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        for v in 0..g.len() {
+            for &s in &g.succs[v] {
+                assert!(pos[v] < pos[s]);
+            }
+        }
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let g = diamond();
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+        assert_eq!(g.num_edges(), 4);
+    }
+
+    #[test]
+    fn stash_counts_only_forward() {
+        let mut g = diamond();
+        g.ops[3].pass = Pass::Backward;
+        let expect: u64 = g.ops[..3].iter().map(|o| o.out_elems * op::DTYPE_BYTES).sum();
+        assert_eq!(g.activation_stash_bytes(), expect);
+    }
+}

@@ -1,0 +1,165 @@
+//! Operator definitions and their mapping to the cost-model contract.
+//!
+//! Every operator executes on a tensor core, a vector core, or a fused
+//! TC+VC unit (paper section 3). The cost model sees each op as a
+//! `(kind, m, n, k)` row — see `python/compile/kernels/ref.py`, the
+//! single source of truth for the row semantics.
+
+/// bf16 operand width used throughout the memory model.
+pub const DTYPE_BYTES: u64 = 2;
+
+/// Which core a given operator occupies while executing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoreType {
+    /// 2-D systolic array (GEMM / convolution).
+    Tensor,
+    /// 1-D lane array (element-wise, reductions, normalizations).
+    Vector,
+    /// A computational unit holding both cores (fused GEMM+activation).
+    Fused,
+}
+
+/// Which training pass an operator belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pass {
+    Forward = 0,
+    Backward = 1,
+    Update = 2,
+    Loss = 3,
+}
+
+/// One row of the cost-model input table (contract of ref.py).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostRow {
+    /// 0 = tensor, 1 = vector, 2 = fused (< 0 is padding, never emitted).
+    pub kind: i32,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+/// Dense computation performed by one operator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Matrix multiply `[m,k] x [k,n]`.
+    Gemm { m: u64, n: u64, k: u64 },
+    /// 2-D convolution, modeled as its implicit GEMM
+    /// (`m = batch*oh*ow`, `n = out_c`, `k = in_c*kh*kw`).
+    Conv2d { batch: u64, in_c: u64, out_c: u64, kh: u64, kw: u64, oh: u64, ow: u64 },
+    /// Element-wise / pointwise op over `elems` values; `intensity` is
+    /// cycles (and vector-lane ops) per element: add/mul = 1, BN scale
+    /// ~2, sigmoid/tanh ~4.
+    Elementwise { elems: u64, intensity: u64 },
+    /// Row-wise softmax: max, sub/exp, sum, div (intensity 4).
+    Softmax { rows: u64, cols: u64 },
+    /// LayerNorm: mean, var, normalize, affine (intensity 6).
+    LayerNorm { rows: u64, cols: u64 },
+    /// Reduction over `elems` values (losses, pooling, all-reduce prep).
+    Reduction { elems: u64, intensity: u64 },
+    /// GEMM with an element-wise epilogue fused onto a TC+VC unit.
+    FusedGemmAct { m: u64, n: u64, k: u64 },
+}
+
+impl OpKind {
+    /// Core type this op occupies (paper: each operator executes on a
+    /// single computation core; fused ops occupy a whole unit).
+    pub fn core_type(&self) -> CoreType {
+        match self {
+            OpKind::Gemm { .. } | OpKind::Conv2d { .. } => CoreType::Tensor,
+            OpKind::FusedGemmAct { .. } => CoreType::Fused,
+            _ => CoreType::Vector,
+        }
+    }
+
+    /// Map to the cost-model row (contract of ref.py).
+    pub fn cost_row(&self) -> CostRow {
+        match *self {
+            OpKind::Gemm { m, n, k } => CostRow { kind: 0, m, n, k },
+            OpKind::Conv2d { batch, in_c, out_c, kh, kw, oh, ow } => {
+                CostRow { kind: 0, m: batch * oh * ow, n: out_c, k: in_c * kh * kw }
+            }
+            OpKind::Elementwise { elems, intensity } => {
+                CostRow { kind: 1, m: elems, n: intensity, k: 1 }
+            }
+            OpKind::Softmax { rows, cols } => CostRow { kind: 1, m: rows * cols, n: 4, k: 1 },
+            OpKind::LayerNorm { rows, cols } => CostRow { kind: 1, m: rows * cols, n: 6, k: 1 },
+            OpKind::Reduction { elems, intensity } => {
+                CostRow { kind: 1, m: elems, n: intensity, k: 1 }
+            }
+            OpKind::FusedGemmAct { m, n, k } => CostRow { kind: 2, m, n, k },
+        }
+    }
+
+    /// FLOPs performed by this op (2 per MAC for tensor ops).
+    pub fn flops(&self) -> f64 {
+        let r = self.cost_row();
+        match r.kind {
+            0 | 2 => 2.0 * r.m as f64 * r.n as f64 * r.k as f64,
+            _ => r.m as f64 * r.n as f64,
+        }
+    }
+
+    /// Elements produced by this op (drives activation stashing).
+    pub fn out_elems(&self) -> u64 {
+        match *self {
+            OpKind::Gemm { m, n, .. } | OpKind::FusedGemmAct { m, n, .. } => m * n,
+            OpKind::Conv2d { batch, out_c, oh, ow, .. } => batch * out_c * oh * ow,
+            OpKind::Elementwise { elems, .. } => elems,
+            OpKind::Softmax { rows, cols } | OpKind::LayerNorm { rows, cols } => rows * cols,
+            OpKind::Reduction { .. } => 1,
+        }
+    }
+}
+
+/// One operator instance in a graph.
+#[derive(Debug, Clone)]
+pub struct Op {
+    /// Human-readable name (`enc3/qkv/q`, `conv2_1/dW`, ...).
+    pub name: String,
+    pub kind: OpKind,
+    pub pass: Pass,
+    /// Weight elements owned by this op (forward ops only; drives the
+    /// memory-balanced pipeline partitioner and update-op sizing).
+    pub param_elems: u64,
+    /// Activation elements produced (stashed fwd -> bwd).
+    pub out_elems: u64,
+    /// For backward ops: the forward node they mirror.
+    pub fwd_peer: Option<super::NodeId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_maps_to_implicit_gemm() {
+        let c = OpKind::Conv2d { batch: 4, in_c: 64, out_c: 128, kh: 3, kw: 3, oh: 56, ow: 56 };
+        let r = c.cost_row();
+        assert_eq!(r.kind, 0);
+        assert_eq!(r.m, 4 * 56 * 56);
+        assert_eq!(r.n, 128);
+        assert_eq!(r.k, 64 * 9);
+        assert_eq!(c.out_elems(), 4 * 128 * 56 * 56);
+    }
+
+    #[test]
+    fn softmax_is_vector_with_intensity_4() {
+        let s = OpKind::Softmax { rows: 96, cols: 128 };
+        assert_eq!(s.core_type(), CoreType::Vector);
+        let r = s.cost_row();
+        assert_eq!((r.kind, r.m, r.n), (1, 96 * 128, 4));
+    }
+
+    #[test]
+    fn fused_occupies_unit() {
+        let f = OpKind::FusedGemmAct { m: 8, n: 8, k: 8 };
+        assert_eq!(f.core_type(), CoreType::Fused);
+        assert_eq!(f.cost_row().kind, 2);
+    }
+
+    #[test]
+    fn flops_gemm() {
+        let g = OpKind::Gemm { m: 10, n: 20, k: 30 };
+        assert_eq!(g.flops(), 2.0 * 10.0 * 20.0 * 30.0);
+    }
+}

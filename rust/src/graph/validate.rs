@@ -1,0 +1,128 @@
+//! Structural validation of operator graphs — used by tests and asserted
+//! by the search engine before committing to a workload.
+
+use super::op::Pass;
+use super::OperatorGraph;
+
+/// Validation failure description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Invalid(pub String);
+
+impl std::fmt::Display for Invalid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid graph: {}", self.0)
+    }
+}
+impl std::error::Error for Invalid {}
+
+/// Check DAG structure, adjacency symmetry, peer links, and dims.
+pub fn validate(g: &OperatorGraph) -> Result<(), Invalid> {
+    let n = g.len();
+    if g.preds.len() != n || g.succs.len() != n {
+        return Err(Invalid("adjacency length mismatch".into()));
+    }
+    // Symmetric adjacency.
+    for v in 0..n {
+        for &p in &g.preds[v] {
+            if p >= n {
+                return Err(Invalid(format!("node {v} has out-of-range pred {p}")));
+            }
+            if !g.succs[p].contains(&v) {
+                return Err(Invalid(format!("edge {p}->{v} missing from succs")));
+            }
+        }
+        for &s in &g.succs[v] {
+            if s >= n {
+                return Err(Invalid(format!("node {v} has out-of-range succ {s}")));
+            }
+            if !g.preds[s].contains(&v) {
+                return Err(Invalid(format!("edge {v}->{s} missing from preds")));
+            }
+        }
+    }
+    // Acyclic (Kahn must consume all nodes).
+    let mut indeg: Vec<usize> = g.preds.iter().map(Vec::len).collect();
+    let mut queue: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(v) = queue.pop() {
+        seen += 1;
+        for &s in &g.succs[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                queue.push(s);
+            }
+        }
+    }
+    if seen != n {
+        return Err(Invalid("graph has a cycle".into()));
+    }
+    // Peers + dims.
+    for (v, op) in g.ops.iter().enumerate() {
+        match op.pass {
+            Pass::Backward | Pass::Update => {
+                if let Some(p) = op.fwd_peer {
+                    if p >= n || g.ops[p].pass != Pass::Forward {
+                        return Err(Invalid(format!("node {v} has bad fwd_peer")));
+                    }
+                }
+            }
+            _ => {}
+        }
+        let r = op.kind.cost_row();
+        if r.m == 0 || r.n == 0 || r.k == 0 {
+            return Err(Invalid(format!("node {v} ({}) has a zero dimension", op.name)));
+        }
+        if r.m > i32::MAX as u64 || r.n > i32::MAX as u64 || r.k > i32::MAX as u64 {
+            return Err(Invalid(format!(
+                "node {v} ({}) dims exceed the i32 cost-model contract",
+                op.name
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::autodiff::{training_graph, Optimizer};
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn valid_training_graph_passes() {
+        let mut b = GraphBuilder::new();
+        let x = b.gemm("x", 8, 8, 8, &[]);
+        let _ = b.eltwise("r", 64, 1, &[x]);
+        let g = training_graph(&b.finish(), Optimizer::Adam);
+        validate(&g).unwrap();
+    }
+
+    #[test]
+    fn detects_asymmetric_adjacency() {
+        let mut b = GraphBuilder::new();
+        let x = b.gemm("x", 8, 8, 8, &[]);
+        let _y = b.eltwise("y", 64, 1, &[x]);
+        let mut g = b.finish();
+        g.succs[0].clear(); // break symmetry
+        assert!(validate(&g).is_err());
+    }
+
+    #[test]
+    fn detects_cycle() {
+        let mut b = GraphBuilder::new();
+        let x = b.gemm("x", 8, 8, 8, &[]);
+        let y = b.eltwise("y", 64, 1, &[x]);
+        let mut g = b.finish();
+        // Force a back edge y -> x.
+        g.succs[y].push(x);
+        g.preds[x].push(y);
+        assert!(validate(&g).unwrap_err().0.contains("cycle"));
+    }
+
+    #[test]
+    fn detects_zero_dim() {
+        let mut b = GraphBuilder::new();
+        b.gemm("bad", 0, 8, 8, &[]);
+        assert!(validate(&b.finish()).is_err());
+    }
+}

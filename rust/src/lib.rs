@@ -1,0 +1,49 @@
+//! # WHAM — Workload-Aware Hardware Accelerator Mining
+//!
+//! Reproduction of *"Workload-Aware Hardware Accelerator Mining for
+//! Distributed Deep Learning Training"* (CS.AR 2024).
+//!
+//! WHAM searches hardware-accelerator configurations
+//! `<#TC, TC-Dim, #VC, VC-Width>` that maximize end-to-end **training**
+//! throughput or Perf/TDP, for single accelerators and for pipeline /
+//! tensor-model-parallel distributed training.
+//!
+//! The crate is the Layer-3 rust coordinator of a three-layer stack:
+//! the operator cost model (Layer-1 Pallas kernel wrapped by a Layer-2
+//! JAX estimator) is AOT-compiled to `artifacts/cost_model.hlo.txt` and
+//! executed via PJRT ([`runtime`]); a bit-compatible native mirror lives
+//! in [`cost::native`]. Python never runs on the search path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * [`graph`] — training operator-graph IR + mirrored autodiff + fusion
+//! * [`models`] — the 11-workload zoo of Table 4
+//! * [`arch`] — architectural template, area/power, TPUv2/NVDLA presets
+//! * [`cost`] — architecture estimator (native + PJRT backends)
+//! * [`sched`] — ASAP/ALAP, criticality, greedy list scheduler
+//! * [`search`] — MCR heuristics (Alg. 1), config pruner (Alg. 2), B&B
+//!   ILP, dimension generator, WHAM-common, top-k
+//! * [`baselines`] — ConfuciuX+, Spotlight+, hand-optimized designs
+//! * [`distributed`] — pipeline partitioner, Megatron TMP, GPipe/1F1B
+//!   simulation, interconnect model, global top-k search
+//! * [`runtime`] — PJRT client wrapper for the AOT artifacts
+//! * [`coordinator`] — parallel per-stage search orchestration
+//! * [`metrics`], [`report`], [`util`] — supporting substrates
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod cost;
+pub mod distributed;
+pub mod graph;
+pub mod metrics;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod search;
+pub mod util;
+
+pub use arch::{ArchConfig, Constraints};
+pub use graph::{CoreType, OpKind, OperatorGraph};
+pub use metrics::Metric;
+pub use search::engine::{SearchResult, WhamSearch};

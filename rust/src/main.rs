@@ -1,0 +1,460 @@
+//! `wham` — CLI for the WHAM accelerator-mining reproduction.
+//!
+//! Subcommands:
+//! * `models` — list the Table-4 workload zoo;
+//! * `search` — per-workload accelerator search (section 4);
+//! * `common` — one design across a workload set (section 4.6);
+//! * `global` — distributed pipeline/TMP search (section 5);
+//! * `baseline` — run ConfuciuX+ / Spotlight+ / hand-optimized designs;
+//! * `selftest` — verify the PJRT artifact against the native mirror.
+
+use anyhow::{anyhow, bail, Result};
+use wham::arch::presets;
+use wham::baselines::{confuciux, spotlight};
+use wham::coordinator::{make_backend, run_parallel, BackendChoice, SearchJob};
+use wham::distributed::global_search::{global_search, GlobalOptions};
+use wham::distributed::network::Network;
+use wham::distributed::partition::partition_transformer;
+use wham::distributed::Scheme;
+use wham::graph::autodiff::Optimizer;
+use wham::metrics::Metric;
+use wham::report;
+use wham::search::engine::{evaluate_design, SearchOptions};
+use wham::util::cli::Args;
+use wham::util::table::Table;
+
+const VALUE_KEYS: &[&str] = &[
+    "model", "models", "metric", "backend", "k", "depth", "tmp", "scheme", "framework",
+    "iterations", "workers", "hysteresis", "seed", "out", "tc", "vc", "dims",
+];
+
+fn main() -> Result<()> {
+    let args = Args::from_env(VALUE_KEYS).map_err(|e| anyhow!("{e}"))?;
+    match args.pos(0) {
+        Some("models") => cmd_models(),
+        Some("search") => cmd_search(&args),
+        Some("common") => cmd_common(&args),
+        Some("global") => cmd_global(&args),
+        Some("baseline") => cmd_baseline(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("space") => cmd_space(&args),
+        Some("selftest") => cmd_selftest(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "wham — Workload-Aware Hardware Accelerator Mining (CS.AR 2024 reproduction)\n\n\
+         usage:\n  \
+         wham models\n  \
+         wham search --model <name> [--metric throughput|perf/tdp] [--ilp]\n              \
+         [--backend auto|native|pjrt] [--k 10] [--hysteresis 1]\n  \
+         wham common [--models a,b,c] [--metric ...]\n  \
+         wham global [--models opt-1.3b,gpt2-xl] [--depth 32] [--tmp 1]\n              \
+         [--scheme gpipe|1f1b] [--k 10] [--metric ...]\n  \
+         wham baseline --model <name> --framework confuciux|spotlight|tpuv2|nvdla\n              \
+         [--iterations 500]\n  \
+         wham trace --model <name> [--out trace.json] [--tc 2 --vc 2 --dims 128x128x128]\n  \
+         wham partition --model <llm> [--depth 32] [--tmp 1] [--scheme gpipe]\n  \
+         wham space --model <name>\n  \
+         wham selftest"
+    );
+}
+
+fn parse_common(args: &Args) -> Result<(Metric, BackendChoice, SearchOptions)> {
+    let metric: Metric = args.get_or("metric", "throughput").parse().map_err(|e| anyhow!("{e}"))?;
+    let backend: BackendChoice =
+        args.get_or("backend", "auto").parse().map_err(|e| anyhow!("{e}"))?;
+    let opts = SearchOptions {
+        metric,
+        top_k: args.get_as_or("k", 10usize).map_err(|e| anyhow!("{e}"))?,
+        hysteresis: args.get_as_or("hysteresis", 1u32).map_err(|e| anyhow!("{e}"))?,
+        use_ilp: args.flag("ilp"),
+        ..Default::default()
+    };
+    Ok((metric, backend, opts))
+}
+
+fn cmd_models() -> Result<()> {
+    let mut t = Table::new(["model", "task", "batch", "accelerators", "params"]);
+    for m in wham::models::MODELS {
+        let params = wham::models::forward(m.name)
+            .map(|g| wham::util::human_count(g.param_elems() as f64))
+            .unwrap_or_default();
+        t.row([
+            m.name.to_string(),
+            m.task.to_string(),
+            m.batch.to_string(),
+            m.accelerators.to_string(),
+            params,
+        ]);
+    }
+    print!("{t}");
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let (metric, backend_choice, mut opts) = parse_common(args)?;
+    let graph = wham::models::training(name, Optimizer::Adam)
+        .ok_or_else(|| anyhow!("unknown model {name:?} (see `wham models`)"))?;
+    let batch = wham::models::info(name).unwrap().batch;
+    let mut backend = make_backend(backend_choice)?;
+
+    if metric == Metric::PerfPerTdp {
+        opts.min_throughput =
+            evaluate_design(&graph, batch, &presets::tpuv2(), backend.as_mut()).throughput;
+    }
+    println!(
+        "searching {name} ({} ops, backend={}, metric={metric}, {})",
+        graph.len(),
+        backend.name(),
+        if opts.use_ilp { "ILP" } else { "MCR heuristics" },
+    );
+    let r = wham::search::engine::WhamSearch::new(&graph, batch, opts).run(backend.as_mut());
+    println!(
+        "best: {}  score={:.4}  ({} dims, {} scheduler evals, {:?})",
+        r.best.config.display(),
+        r.best.score,
+        r.dims_evaluated,
+        r.scheduler_evals,
+        r.wall
+    );
+    println!("  {}", report::eval_line(&r.best.eval));
+    let tpu = evaluate_design(&graph, batch, &presets::tpuv2(), backend.as_mut());
+    let nvdla = evaluate_design(&graph, batch, &presets::nvdla_scaled(), backend.as_mut());
+    println!("  vs TPUv2  : {:.3}x throughput", r.best.eval.throughput / tpu.throughput);
+    println!("  vs NVDLA  : {:.3}x throughput", r.best.eval.throughput / nvdla.throughput);
+    println!("top-{}:", r.top.len());
+    let rows: Vec<(String, wham::search::DesignPoint)> =
+        r.top.points().iter().map(|p| (name.to_string(), *p)).collect();
+    print!("{}", report::design_table(&rows));
+    Ok(())
+}
+
+fn cmd_common(args: &Args) -> Result<()> {
+    let names: Vec<String> = {
+        let l = args.get_list("models");
+        if l.is_empty() {
+            wham::models::single_acc_models().iter().map(|s| s.to_string()).collect()
+        } else {
+            l
+        }
+    };
+    let (metric, backend_choice, mut opts) = parse_common(args)?;
+    opts.metric = metric;
+    let mut backend = make_backend(backend_choice)?;
+    let graphs: Vec<(String, wham::graph::OperatorGraph, u64)> = names
+        .iter()
+        .map(|n| {
+            let g = wham::models::training(n, Optimizer::Adam)
+                .ok_or_else(|| anyhow!("unknown model {n:?}"))?;
+            let b = wham::models::info(n).unwrap().batch;
+            Ok((n.clone(), g, b))
+        })
+        .collect::<Result<_>>()?;
+    let workloads: Vec<wham::search::common::Workload> = graphs
+        .iter()
+        .map(|(n, g, b)| {
+            let min = if metric == Metric::PerfPerTdp {
+                evaluate_design(g, *b, &presets::tpuv2(), backend.as_mut()).throughput
+            } else {
+                0.0
+            };
+            wham::search::common::Workload {
+                name: n.clone(),
+                graph: g,
+                batch: *b,
+                min_throughput: min,
+                weight: 1.0,
+            }
+        })
+        .collect();
+    println!("WHAM-common over {} workloads (metric={metric})", workloads.len());
+    let r = wham::search::common::search_common(&workloads, opts, backend.as_mut());
+    println!(
+        "common design: {}  weighted score={:.4}  ({} dims, {:?})",
+        r.best.0.display(),
+        r.best.1,
+        r.dims_evaluated,
+        r.wall
+    );
+    let rows: Vec<(String, wham::search::DesignPoint)> = names
+        .iter()
+        .cloned()
+        .zip(r.per_workload.iter().copied())
+        .collect();
+    print!("{}", report::design_table(&rows));
+    Ok(())
+}
+
+fn cmd_global(args: &Args) -> Result<()> {
+    let names: Vec<String> = {
+        let l = args.get_list("models");
+        if l.is_empty() {
+            vec!["opt-1.3b".into(), "gpt2-xl".into()]
+        } else {
+            l
+        }
+    };
+    let depth: u64 = args.get_as_or("depth", 32).map_err(|e| anyhow!("{e}"))?;
+    let tmp: u64 = args.get_as_or("tmp", 1).map_err(|e| anyhow!("{e}"))?;
+    let scheme: Scheme = args.get_or("scheme", "gpipe").parse().map_err(|e| anyhow!("{e}"))?;
+    let (metric, backend_choice, local) = parse_common(args)?;
+    let mut backend = make_backend(backend_choice)?;
+
+    let parts: Vec<_> = names
+        .iter()
+        .map(|n| {
+            let cfg = wham::models::transformer_cfg(n)
+                .ok_or_else(|| anyhow!("{n:?} is not an LLM workload"))?;
+            Ok(partition_transformer(n, &cfg, depth, tmp, Optimizer::Adam))
+        })
+        .collect::<Result<_>>()?;
+    let net = Network::default();
+    let mut gopts = GlobalOptions { metric, scheme, top_k: local.top_k, local, ..Default::default() };
+    if metric == Metric::PerfPerTdp {
+        // TPUv2 pipeline throughput as the floor (min across models).
+        gopts.min_throughput = f64::INFINITY;
+        for p in &parts {
+            let cfgs = vec![presets::tpuv2(); p.stages.len()];
+            let e = wham::distributed::pipeline::simulate(p, &cfgs, scheme, &net, backend.as_mut());
+            gopts.min_throughput = gopts.min_throughput.min(e.throughput);
+        }
+    }
+    println!(
+        "global search: {} models, depth={depth}, tmp={tmp}, scheme={scheme:?}, metric={metric}",
+        parts.len()
+    );
+    let r = global_search(&parts, &gopts, &net, backend.as_mut());
+    println!(
+        "pool={} evaluated={} local_searches={} wall={:?}",
+        r.candidate_pool, r.candidates_evaluated, r.local_searches, r.wall
+    );
+    println!("WHAM-common config: {}", r.common.0.display());
+    let mut t = Table::new(["model", "family", "config(s)", "thpt", "perf/TDP", "vs TPUv2 thpt"]);
+    for p in &parts {
+        let cfgs = vec![presets::tpuv2(); p.stages.len()];
+        let tpu = wham::distributed::pipeline::simulate(p, &cfgs, scheme, &net, backend.as_mut());
+        let add_row =
+            |t: &mut Table, fam: &str, m: &wham::distributed::global_search::ModelPipelineResult| {
+                let uniq: std::collections::BTreeSet<String> =
+                    m.configs.iter().map(|c| c.display()).collect();
+                t.row([
+                    m.model.clone(),
+                    fam.to_string(),
+                    uniq.into_iter().collect::<Vec<_>>().join(" "),
+                    format!("{:.3}", m.eval.throughput),
+                    format!("{:.4}", m.eval.perf_per_tdp),
+                    format!("{:.3}x", m.eval.throughput / tpu.throughput),
+                ]);
+            };
+        for (fam, list) in
+            [("common", &r.common.1), ("individual", &r.individual), ("mosaic", &r.mosaic)]
+        {
+            if let Some(m) = list.iter().find(|m| m.model == p.name) {
+                add_row(&mut t, fam, m);
+            }
+        }
+    }
+    print!("{t}");
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let framework = args.get("framework").unwrap_or("confuciux");
+    let iterations: usize = args.get_as_or("iterations", 500).map_err(|e| anyhow!("{e}"))?;
+    let (metric, backend_choice, _) = parse_common(args)?;
+    let graph = wham::models::training(name, Optimizer::Adam)
+        .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+    let batch = wham::models::info(name).unwrap().batch;
+    let mut backend = make_backend(backend_choice)?;
+
+    match framework {
+        "confuciux" => {
+            let r = confuciux::run(
+                &graph,
+                batch,
+                backend.as_mut(),
+                confuciux::ConfuciuxOpts { iterations, metric, ..Default::default() },
+            );
+            println!(
+                "ConfuciuX+ on {name}: {} score={:.4} evals={} wall={:?}",
+                r.config.display(),
+                r.score,
+                r.evaluations,
+                r.wall
+            );
+            println!("  {}", report::eval_line(&r.eval));
+        }
+        "spotlight" => {
+            let r = spotlight::run(
+                &graph,
+                batch,
+                backend.as_mut(),
+                spotlight::SpotlightOpts { iterations, metric, ..Default::default() },
+            );
+            println!(
+                "Spotlight+ on {name}: {} score={:.4} evals={} wall={:?}",
+                r.config.display(),
+                r.score,
+                r.evaluations,
+                r.wall
+            );
+            println!("  {}", report::eval_line(&r.eval));
+        }
+        "tpuv2" | "nvdla" => {
+            let cfg = if framework == "tpuv2" { presets::tpuv2() } else { presets::nvdla_scaled() };
+            let e = evaluate_design(&graph, batch, &cfg, backend.as_mut());
+            println!("{framework} on {name}: {}", cfg.display());
+            println!("  {}", report::eval_line(&e));
+        }
+        other => bail!("unknown framework {other:?}"),
+    }
+    Ok(())
+}
+
+/// Export a workload's schedule on a given design as Chrome-trace JSON.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let out = args.get_or("out", "trace.json");
+    let graph = wham::models::training(name, Optimizer::Adam)
+        .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+    let (_, backend_choice, _) = parse_common(args)?;
+    let mut backend = make_backend(backend_choice)?;
+
+    // Design: explicit --tc/--vc/--dims, else the search's best.
+    let dims_s = args.get_or("dims", "");
+    let config = if dims_s.is_empty() {
+        let batch = wham::models::info(name).unwrap().batch;
+        wham::search::engine::WhamSearch::new(&graph, batch, SearchOptions::default())
+            .run(backend.as_mut())
+            .best
+            .config
+    } else {
+        let parts: Vec<u64> = dims_s
+            .split('x')
+            .map(|p| p.parse().map_err(|_| anyhow!("--dims expects TXxTYxVW, e.g. 128x128x128")))
+            .collect::<Result<_>>()?;
+        let [tx, ty, vw]: [u64; 3] =
+            parts.try_into().map_err(|_| anyhow!("--dims expects three values"))?;
+        wham::arch::ArchConfig {
+            num_tc: args.get_as_or("tc", 2u64).map_err(|e| anyhow!("{e}"))?,
+            tc_x: tx,
+            tc_y: ty,
+            num_vc: args.get_as_or("vc", 2u64).map_err(|e| anyhow!("{e}"))?,
+            vc_w: vw,
+        }
+    };
+    let ann = wham::cost::annotate::AnnotatedGraph::new(
+        &graph,
+        wham::cost::Dims::of(&config),
+        backend.as_mut(),
+    );
+    let cp = wham::sched::asap_alap(&ann);
+    let cores = wham::sched::CoreCount { tc: config.num_tc, vc: config.num_vc };
+    let sched = wham::sched::greedy_schedule(&ann, &cp, cores);
+    let json = wham::report::trace::chrome_trace(&ann, &sched, cores);
+    std::fs::write(&out, &json)?;
+    println!(
+        "wrote {} ({} events, makespan {} cycles) for {name} on {} — open in ui.perfetto.dev",
+        out,
+        graph.len(),
+        sched.makespan,
+        config.display()
+    );
+    Ok(())
+}
+
+/// Show the memory-balanced pipeline partition of an LLM workload.
+fn cmd_partition(args: &Args) -> Result<()> {
+    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let depth: u64 = args.get_as_or("depth", 32).map_err(|e| anyhow!("{e}"))?;
+    let tmp: u64 = args.get_as_or("tmp", 1).map_err(|e| anyhow!("{e}"))?;
+    let scheme: Scheme = args.get_or("scheme", "gpipe").parse().map_err(|e| anyhow!("{e}"))?;
+    let cfg = wham::models::transformer_cfg(name)
+        .ok_or_else(|| anyhow!("{name:?} is not an LLM workload"))?;
+    let p = partition_transformer(name, &cfg, depth, tmp, Optimizer::Adam);
+    println!(
+        "{name}: {} stages x tmp {}, microbatch {}, {} microbatches/iter",
+        p.stages.len(),
+        p.tmp,
+        p.micro_batch,
+        p.num_micro
+    );
+    let mut t = Table::new(["stage", "layers", "ops", "state", "stash/mb", "footprint", "fits HBM"]);
+    for s in &p.stages {
+        let fp = s.footprint_bytes(scheme, p.num_micro, p.stages.len() as u64);
+        t.row([
+            s.index.to_string(),
+            format!("{}..{}", s.layers.0, s.layers.1),
+            s.graph.len().to_string(),
+            wham::util::human_bytes(s.state_bytes),
+            wham::util::human_bytes(s.stash_bytes),
+            wham::util::human_bytes(fp),
+            s.fits_hbm(scheme, p.num_micro, p.stages.len() as u64).to_string(),
+        ]);
+    }
+    print!("{t}");
+    Ok(())
+}
+
+/// Print the Table-3 search-space accounting for a workload.
+fn cmd_space(args: &Args) -> Result<()> {
+    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let graph = wham::models::training(name, Optimizer::Adam)
+        .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+    let batch = wham::models::info(name).unwrap().batch;
+    let (_, backend_choice, opts) = parse_common(args)?;
+    let mut backend = make_backend(backend_choice)?;
+    let r = wham::search::engine::WhamSearch::new(&graph, batch, opts).run(backend.as_mut());
+    let ann = wham::cost::annotate::AnnotatedGraph::new(
+        &graph,
+        wham::cost::Dims { tc_x: 128, tc_y: 128, vc_w: 128 },
+        backend.as_mut(),
+    );
+    let s = wham::search::space::space_sizes(&ann, r.dims_evaluated);
+    println!("{name}: {} ops, {} dims evaluated by the pruner", graph.len(), r.dims_evaluated);
+    println!("  exhaustive      10^{:.0}", s.exhaustive);
+    println!("  ILP unpruned    10^{:.0}", s.ilp_unpruned);
+    println!("  ILP pruned      10^{:.0}", s.ilp_pruned);
+    println!("  heur unpruned   10^{:.0}", s.heur_unpruned);
+    println!("  heur pruned     10^{:.0}", s.heur_pruned);
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    println!("1/3 native backend ...");
+    let graph = wham::models::training("bert-base", Optimizer::Adam).unwrap();
+    let mut native = make_backend(BackendChoice::Native)?;
+    let en = evaluate_design(&graph, 4, &presets::tpuv2(), native.as_mut());
+    println!("    bert-base on TPUv2 (native): {}", report::eval_line(&en));
+
+    println!("2/3 PJRT artifact ...");
+    let mut pjrt = make_backend(BackendChoice::Pjrt)
+        .map_err(|e| anyhow!("PJRT backend unavailable ({e}); run `make artifacts`"))?;
+    let ep = evaluate_design(&graph, 4, &presets::tpuv2(), pjrt.as_mut());
+    println!("    bert-base on TPUv2 (pjrt)  : {}", report::eval_line(&ep));
+
+    println!("3/3 agreement ...");
+    let rel = (en.seconds - ep.seconds).abs() / en.seconds;
+    let rel_e = (en.energy_j - ep.energy_j).abs() / en.energy_j;
+    if rel > 1e-3 || rel_e > 1e-3 {
+        bail!("backends disagree: latency rel={rel:.2e}, energy rel={rel_e:.2e}");
+    }
+    println!("    latency rel={rel:.2e}, energy rel={rel_e:.2e}  — OK");
+
+    // Exercise the parallel coordinator too.
+    let jobs =
+        vec![SearchJob { name: "bert-base".into(), graph, batch: 4, opts: SearchOptions::default() }];
+    let rs = run_parallel(jobs, BackendChoice::Auto, 2);
+    println!("coordinator: best {}", rs[0].1.best.config.display());
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Training-relevant metrics (paper section 6.1 "Performance Metric"):
+//! end-to-end throughput and Perf/TDP (the TCO proxy).
+
+use crate::arch::{area, power, ArchConfig, CLOCK_GHZ};
+
+/// What the search optimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Maximize samples/second within area+power constraints.
+    Throughput,
+    /// Maximize throughput/TDP while sustaining a minimum throughput
+    /// (the floor is supplied by the search, typically TPUv2's).
+    PerfPerTdp,
+}
+
+impl std::str::FromStr for Metric {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "throughput" | "thpt" => Ok(Metric::Throughput),
+            "perf-per-tdp" | "perf/tdp" | "efficiency" => Ok(Metric::PerfPerTdp),
+            other => Err(format!("unknown metric {other:?}")),
+        }
+    }
+}
+
+impl std::fmt::Display for Metric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Metric::Throughput => write!(f, "throughput"),
+            Metric::PerfPerTdp => write!(f, "perf/tdp"),
+        }
+    }
+}
+
+/// Full evaluation of a design point on a workload.
+#[derive(Debug, Clone, Copy)]
+pub struct Evaluation {
+    /// Training-iteration makespan in cycles.
+    pub cycles: u64,
+    /// Iteration latency in seconds.
+    pub seconds: f64,
+    /// Samples (sequences/images) per second.
+    pub throughput: f64,
+    /// Energy per iteration in joules.
+    pub energy_j: f64,
+    /// Thermal design power of the configuration in watts.
+    pub tdp_w: f64,
+    /// Die area in mm^2.
+    pub area_mm2: f64,
+    /// throughput / TDP.
+    pub perf_per_tdp: f64,
+}
+
+/// Evaluate a scheduled iteration on a config.
+pub fn evaluate(config: &ArchConfig, makespan_cycles: u64, batch: u64, energy_pj: f64) -> Evaluation {
+    let seconds = makespan_cycles as f64 / (CLOCK_GHZ * 1e9);
+    let throughput = batch as f64 / seconds;
+    let tdp = power::tdp_w(config);
+    Evaluation {
+        cycles: makespan_cycles,
+        seconds,
+        throughput,
+        energy_j: energy_pj * 1e-12,
+        tdp_w: tdp,
+        area_mm2: area::area_mm2(config),
+        perf_per_tdp: throughput / tdp,
+    }
+}
+
+impl Metric {
+    /// Scalar score (higher is better). For [`Metric::PerfPerTdp`],
+    /// designs below `min_throughput` are heavily penalized so the floor
+    /// acts as a constraint while remaining comparable.
+    pub fn score(&self, eval: &Evaluation, min_throughput: f64) -> f64 {
+        match self {
+            Metric::Throughput => eval.throughput,
+            Metric::PerfPerTdp => {
+                if eval.throughput + 1e-12 < min_throughput {
+                    // Infeasible: rank strictly below all feasible designs,
+                    // better designs (closer to the floor) still order.
+                    -1.0 + eval.throughput / min_throughput.max(1e-12) * 1e-3
+                } else {
+                    eval.perf_per_tdp
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn evaluate_basic_numbers() {
+        let c = presets::tpuv2();
+        let e = evaluate(&c, 940_000_000, 64, 1e12);
+        assert!((e.seconds - 1.0).abs() < 1e-9);
+        assert!((e.throughput - 64.0).abs() < 1e-9);
+        assert!((e.energy_j - 1.0).abs() < 1e-12);
+        assert!(e.perf_per_tdp > 0.0);
+    }
+
+    #[test]
+    fn throughput_metric_ranks_faster_higher() {
+        let c = presets::tpuv2();
+        let fast = evaluate(&c, 1_000_000, 64, 1e9);
+        let slow = evaluate(&c, 2_000_000, 64, 1e9);
+        let m = Metric::Throughput;
+        assert!(m.score(&fast, 0.0) > m.score(&slow, 0.0));
+    }
+
+    #[test]
+    fn perf_tdp_floor_penalizes_infeasible() {
+        let c = presets::tpuv2();
+        let ok = evaluate(&c, 1_000_000, 64, 1e9);
+        let slow = evaluate(&c, 100_000_000_000, 64, 1e9);
+        let m = Metric::PerfPerTdp;
+        let floor = ok.throughput * 0.5;
+        assert!(m.score(&ok, floor) > 0.0);
+        assert!(m.score(&slow, floor) < 0.0);
+    }
+
+    #[test]
+    fn metric_parses() {
+        assert_eq!("throughput".parse::<Metric>().unwrap(), Metric::Throughput);
+        assert_eq!("perf/tdp".parse::<Metric>().unwrap(), Metric::PerfPerTdp);
+        assert!("latency".parse::<Metric>().is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! GNMT-4 translation workload (Table 4: batch 128, hidden 512).
+//!
+//! Four-layer LSTM encoder + four-layer decoder with attention. The
+//! sequence dimension is chunked (recurrent chains stay sequential inside
+//! a layer) so the graph keeps the low intra-layer parallelism that makes
+//! RNNs a distinct search workload from transformers and CNNs.
+
+use crate::graph::{GraphBuilder, NodeId, OperatorGraph};
+
+/// GNMT hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GnmtCfg {
+    pub batch: u64,
+    pub hidden: u64,
+    pub layers: u64,
+    pub seq: u64,
+    pub vocab: u64,
+    /// Sequence chunks per layer (recurrence granularity in the graph).
+    pub chunks: u64,
+}
+
+/// Table 4 configuration: batch 128, hidden 512, 4 layers.
+pub fn gnmt4() -> GnmtCfg {
+    GnmtCfg { batch: 128, hidden: 512, layers: 4, seq: 48, vocab: 32_000, chunks: 8 }
+}
+
+/// One LSTM layer: sequential chunked gate GEMMs + element-wise gates.
+fn lstm_layer(b: &mut GraphBuilder, name: &str, cfg: &GnmtCfg, input: NodeId) -> NodeId {
+    let tokens = cfg.batch * cfg.seq / cfg.chunks;
+    let mut prev = input;
+    for t in 0..cfg.chunks {
+        // Gates = [x, h] * W: m = chunk tokens, n = 4H, k = 2H. Weights
+        // are owned by the first chunk only (shared across time).
+        let params = if t == 0 { 2 * cfg.hidden * 4 * cfg.hidden } else { 0 };
+        let g = b.fwd(
+            format!("{name}/t{t}/gates"),
+            crate::graph::OpKind::Gemm { m: tokens, n: 4 * cfg.hidden, k: 2 * cfg.hidden },
+            params,
+            &[prev],
+        );
+        // sigmoid/tanh gate math + cell update.
+        prev = b.eltwise(format!("{name}/t{t}/cell"), tokens * cfg.hidden, 6, &[g]);
+    }
+    prev
+}
+
+/// GNMT forward graph: embed -> 4-layer encoder -> attention ->
+/// 4-layer decoder -> projection.
+pub fn forward(cfg: &GnmtCfg) -> OperatorGraph {
+    let mut b = GraphBuilder::new();
+    let tokens = cfg.batch * cfg.seq;
+    let embed = b.fwd(
+        "embed",
+        crate::graph::OpKind::Elementwise { elems: tokens * cfg.hidden, intensity: 2 },
+        cfg.vocab * cfg.hidden,
+        &[],
+    );
+    let mut enc = embed;
+    for l in 0..cfg.layers {
+        enc = lstm_layer(&mut b, &format!("enc{l}"), cfg, enc);
+    }
+    // Decoder embedding (separate vocabulary).
+    let dec_embed = b.fwd(
+        "dec_embed",
+        crate::graph::OpKind::Elementwise { elems: tokens * cfg.hidden, intensity: 2 },
+        cfg.vocab * cfg.hidden,
+        &[],
+    );
+    let mut dec = dec_embed;
+    for l in 0..cfg.layers {
+        dec = lstm_layer(&mut b, &format!("dec{l}"), cfg, dec);
+        if l == 0 {
+            // Bahdanau-style attention over encoder states after the
+            // first decoder layer.
+            let scores = b.gemm_act("attn/scores", tokens, cfg.seq, cfg.hidden, &[dec, enc]);
+            let sm = b.softmax("attn/softmax", tokens, cfg.seq, &[scores]);
+            let ctx = b.gemm_act("attn/ctx", tokens, cfg.hidden, cfg.seq, &[sm, enc]);
+            dec = b.eltwise("attn/concat", tokens * 2 * cfg.hidden, 1, &[dec, ctx]);
+        }
+    }
+    let _proj = b.gemm("proj", tokens, cfg.vocab, cfg.hidden, &[dec]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+
+    #[test]
+    fn graph_is_valid() {
+        validate(&forward(&gnmt4())).unwrap();
+    }
+
+    #[test]
+    fn param_count_ballpark() {
+        // GNMT-4 @ hidden 512: ~ 2 embeddings (32.8M) + 8 LSTM layers
+        // (16.8M) + 16.4M projection ~ 66M; Table 4 lists 70M.
+        let p = forward(&gnmt4()).param_elems() as f64;
+        assert!((50e6..90e6).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn recurrence_limits_parallelism() {
+        // Within one LSTM layer the chunk GEMMs form a chain.
+        let g = forward(&gnmt4());
+        let t0 = g.ops.iter().position(|o| o.name == "enc0/t0/gates").unwrap();
+        let mut v = t0;
+        let mut chain = 1;
+        while let Some(&s) = g.succs[v].first() {
+            if !g.ops[s].name.starts_with("enc0/") {
+                break;
+            }
+            v = s;
+            chain += 1;
+        }
+        assert!(chain >= 2 * gnmt4().chunks, "chunks serialize");
+    }
+
+    #[test]
+    fn encoder_and_decoder_run_in_parallel_at_source() {
+        let g = forward(&gnmt4());
+        assert!(g.sources().len() >= 2, "embed + dec_embed are independent roots");
+    }
+}

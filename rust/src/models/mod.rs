@@ -1,0 +1,134 @@
+//! The workload zoo: all 11 DNNs of paper Table 4 as forward operator
+//! graphs, plus the registry the CLI / benches / searches iterate over.
+
+pub mod gnmt;
+pub mod transformer;
+pub mod vision;
+
+use crate::graph::autodiff::{training_graph, Optimizer};
+use crate::graph::fusion::fuse;
+use crate::graph::OperatorGraph;
+
+/// Registry entry (Table 4 row).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelInfo {
+    pub name: &'static str,
+    pub task: &'static str,
+    /// Training batch size (Table 4 "Hyper Parameters").
+    pub batch: u64,
+    /// Accelerator count in the paper's evaluation.
+    pub accelerators: u64,
+    /// Whether the model is only evaluated under distributed training.
+    pub distributed_only: bool,
+}
+
+/// All Table 4 workloads.
+pub const MODELS: &[ModelInfo] = &[
+    ModelInfo { name: "mobilenet_v3", task: "image", batch: 128, accelerators: 1, distributed_only: false },
+    ModelInfo { name: "resnet18", task: "image", batch: 128, accelerators: 1, distributed_only: false },
+    ModelInfo { name: "inception_v3", task: "image", batch: 64, accelerators: 1, distributed_only: false },
+    ModelInfo { name: "resnext101", task: "image", batch: 16, accelerators: 1, distributed_only: false },
+    ModelInfo { name: "vgg16", task: "image", batch: 64, accelerators: 1, distributed_only: false },
+    ModelInfo { name: "gnmt4", task: "translation", batch: 128, accelerators: 1, distributed_only: false },
+    ModelInfo { name: "bert-base", task: "language", batch: 4, accelerators: 1, distributed_only: false },
+    ModelInfo { name: "bert-large", task: "language", batch: 8, accelerators: 1, distributed_only: false },
+    ModelInfo { name: "opt-1.3b", task: "language", batch: 32, accelerators: 32, distributed_only: true },
+    ModelInfo { name: "gpt2-xl", task: "language", batch: 32, accelerators: 32, distributed_only: true },
+    ModelInfo { name: "gpt3", task: "language", batch: 4, accelerators: 64, distributed_only: true },
+];
+
+/// The 8 single-accelerator workloads (paper section 6.3).
+pub fn single_acc_models() -> Vec<&'static str> {
+    MODELS.iter().filter(|m| !m.distributed_only).map(|m| m.name).collect()
+}
+
+/// The LLMs evaluated under pipeline/TMP training (section 6.4).
+pub fn llm_models() -> Vec<&'static str> {
+    MODELS.iter().filter(|m| m.distributed_only).map(|m| m.name).collect()
+}
+
+/// Look up registry info.
+pub fn info(name: &str) -> Option<&'static ModelInfo> {
+    MODELS.iter().find(|m| m.name == name)
+}
+
+/// Transformer hyper-parameters for LLM workloads (used by the pipeline
+/// partitioner and TMP network model).
+pub fn transformer_cfg(name: &str) -> Option<transformer::TransformerCfg> {
+    match name {
+        "bert-base" => Some(transformer::bert_base()),
+        "bert-large" => Some(transformer::bert_large()),
+        "gpt2-xl" => Some(transformer::gpt2_xl()),
+        "opt-1.3b" => Some(transformer::opt_1_3b()),
+        "gpt3" => Some(transformer::gpt3()),
+        _ => None,
+    }
+}
+
+/// Build the forward graph for a registered workload.
+pub fn forward(name: &str) -> Option<OperatorGraph> {
+    let g = match name {
+        "mobilenet_v3" => vision::mobilenet_v3(128),
+        "resnet18" => vision::resnet18(128),
+        "inception_v3" => vision::inception_v3(64),
+        "resnext101" => vision::resnext101(16),
+        "vgg16" => vision::vgg16(64),
+        "gnmt4" => gnmt::forward(&gnmt::gnmt4()),
+        _ => transformer::forward(&transformer_cfg(name)?),
+    };
+    Some(g)
+}
+
+/// Full training graph (fused forward + mirrored backward + updates) —
+/// the input WHAM's search consumes. Op-fusion is applied first, matching
+/// the paper's compiler setup (section 6.2).
+pub fn training(name: &str, opt: Optimizer) -> Option<OperatorGraph> {
+    let fwd = forward(name)?;
+    let (fused, _) = fuse(&fwd);
+    Some(training_graph(&fused, opt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+
+    #[test]
+    fn registry_has_eleven_models() {
+        assert_eq!(MODELS.len(), 11);
+        assert_eq!(single_acc_models().len(), 8);
+        assert_eq!(llm_models().len(), 3);
+    }
+
+    #[test]
+    fn every_single_acc_training_graph_builds_and_validates() {
+        for name in single_acc_models() {
+            let g = training(name, Optimizer::Adam)
+                .unwrap_or_else(|| panic!("no graph for {name}"));
+            validate(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(g.len() > 20, "{name} suspiciously small: {}", g.len());
+        }
+    }
+
+    #[test]
+    fn llm_training_graphs_build() {
+        for name in llm_models() {
+            let g = training(name, Optimizer::Adam).unwrap();
+            validate(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn fusion_reduces_op_count() {
+        let fwd = forward("vgg16").unwrap();
+        let (fused, n) = crate::graph::fusion::fuse(&fwd);
+        assert!(n > 0, "vgg conv+relu pairs should fuse");
+        assert!(fused.len() < fwd.len());
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(forward("alexnet").is_none());
+        assert!(info("alexnet").is_none());
+    }
+}

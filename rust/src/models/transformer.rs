@@ -1,0 +1,209 @@
+//! Transformer-family workloads: BERT, GPT2-XL, GPT3, OPT.
+//!
+//! The forward graphs expose the branching the paper exploits (section
+//! 6.3: "the QKV projection in each encoder layer can be executed in
+//! parallel across three tensor cores"). Megatron-style tensor model
+//! parallelism (section 2.3) is supported by dividing attention heads and
+//! MLP width by the TMP degree; the associated all-reduce traffic is
+//! modeled analytically by `distributed::network`.
+
+use crate::graph::{GraphBuilder, NodeId, OperatorGraph};
+
+/// Hyper-parameters of a transformer LM (paper Table 4 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransformerCfg {
+    pub layers: u64,
+    pub hidden: u64,
+    pub heads: u64,
+    pub seq: u64,
+    pub batch: u64,
+    pub vocab: u64,
+    /// MLP expansion factor (4 for all evaluated models).
+    pub ffn_mult: u64,
+    /// Tensor-model-parallel degree (1 = no TMP).
+    pub tmp: u64,
+}
+
+impl TransformerCfg {
+    /// Approximate parameter count (for Table 4 cross-checks); input
+    /// embedding and LM head are tied, as in the published checkpoints.
+    pub fn param_count(&self) -> u64 {
+        let per_layer = (4 + 2 * self.ffn_mult) * self.hidden * self.hidden;
+        self.layers * per_layer + self.vocab * self.hidden
+    }
+
+    /// Bytes all-reduced per device per microbatch in the forward pass
+    /// under Megatron TMP (2 all-reduces per layer of B*S*H activations).
+    pub fn tmp_allreduce_bytes_fwd(&self) -> u64 {
+        if self.tmp <= 1 {
+            0
+        } else {
+            2 * self.layers * self.batch * self.seq * self.hidden * crate::graph::op::DTYPE_BYTES
+        }
+    }
+}
+
+/// BERT-Base: 12 layers, hidden 768 (batch 4, seq 512 — Table 4).
+pub fn bert_base() -> TransformerCfg {
+    TransformerCfg { layers: 12, hidden: 768, heads: 12, seq: 512, batch: 4, vocab: 30522, ffn_mult: 4, tmp: 1 }
+}
+
+/// BERT-Large: 24 layers, hidden 1024 (batch 8, seq 128 — Table 4).
+pub fn bert_large() -> TransformerCfg {
+    TransformerCfg { layers: 24, hidden: 1024, heads: 16, seq: 128, batch: 8, vocab: 30522, ffn_mult: 4, tmp: 1 }
+}
+
+/// GPT2-XL (1.5B): 48 layers, hidden 1600 (batch 32, seq 512 — Table 4).
+pub fn gpt2_xl() -> TransformerCfg {
+    TransformerCfg { layers: 48, hidden: 1600, heads: 25, seq: 512, batch: 32, vocab: 50257, ffn_mult: 4, tmp: 1 }
+}
+
+/// OPT-1.3B: 24 layers, hidden 2048, 32 heads (batch 32 — Table 4).
+pub fn opt_1_3b() -> TransformerCfg {
+    TransformerCfg { layers: 24, hidden: 2048, heads: 32, seq: 512, batch: 32, vocab: 50272, ffn_mult: 4, tmp: 1 }
+}
+
+/// GPT3 (175B): 96 layers, hidden 12288, 96 heads (batch 4, seq 2048).
+pub fn gpt3() -> TransformerCfg {
+    TransformerCfg { layers: 96, hidden: 12288, heads: 96, seq: 2048, batch: 4, vocab: 50257, ffn_mult: 4, tmp: 1 }
+}
+
+/// Emit one transformer block onto `b`, returning its output node.
+/// `bs` = batch*seq tokens, `hp` = hidden/tmp partition width.
+fn block(b: &mut GraphBuilder, cfg: &TransformerCfg, prev: NodeId, li: u64) -> NodeId {
+    let bs = cfg.batch * cfg.seq;
+    let h = cfg.hidden;
+    let hp = (h / cfg.tmp).max(1);
+    let ffn = (cfg.ffn_mult * h / cfg.tmp).max(1);
+    let p = |s: &str| format!("l{li}/{s}");
+
+    let ln1 = b.layernorm(p("ln1"), bs, h, &[prev]);
+    // QKV: three parallel projections — the branching WHAM exploits.
+    let q = b.gemm(p("q"), bs, hp, h, &[ln1]);
+    let k = b.gemm(p("k"), bs, hp, h, &[ln1]);
+    let v = b.gemm(p("v"), bs, hp, h, &[ln1]);
+    // Attention scores + softmax + context (per-device head group).
+    let scores = b.gemm_act(p("scores"), bs, cfg.seq, hp, &[q, k]);
+    let heads_p = (cfg.heads / cfg.tmp).max(1);
+    let sm = b.softmax(p("softmax"), cfg.batch * heads_p * cfg.seq, cfg.seq, &[scores]);
+    let ctx = b.gemm_act(p("ctx"), bs, hp, cfg.seq, &[sm, v]);
+    let proj = b.gemm(p("proj"), bs, h, hp, &[ctx]);
+    let res1 = b.eltwise(p("res1"), bs * h, 1, &[proj, prev]);
+
+    let ln2 = b.layernorm(p("ln2"), bs, h, &[res1]);
+    let fc1 = b.gemm(p("fc1"), bs, ffn, h, &[ln2]);
+    let gelu = b.eltwise(p("gelu"), bs * ffn, 4, &[fc1]);
+    let fc2 = b.gemm(p("fc2"), bs, h, ffn, &[gelu]);
+    b.eltwise(p("res2"), bs * h, 1, &[fc2, res1])
+}
+
+/// Build the forward graph of a decoder/encoder stack for layers
+/// `[lo, hi)` — partial ranges feed the pipeline partitioner. Pass
+/// `0..cfg.layers` for the whole model. Embedding is attached when
+/// `lo == 0`, the LM head when `hi == cfg.layers`.
+pub fn forward_range(cfg: &TransformerCfg, lo: u64, hi: u64) -> OperatorGraph {
+    assert!(lo < hi && hi <= cfg.layers);
+    let mut b = GraphBuilder::new();
+    let bs = cfg.batch * cfg.seq;
+    let mut prev = if lo == 0 {
+        // Embedding lookup + positional add; owns vocab*hidden params.
+        b.fwd(
+            "embed",
+            crate::graph::OpKind::Elementwise { elems: bs * cfg.hidden, intensity: 2 },
+            cfg.vocab * cfg.hidden,
+            &[],
+        )
+    } else {
+        // Stage input placeholder (activations arriving from the previous
+        // pipeline stage).
+        b.eltwise("stage_in", bs * cfg.hidden, 1, &[])
+    };
+    for li in lo..hi {
+        prev = block(&mut b, cfg, prev, li);
+    }
+    if hi == cfg.layers {
+        let lnf = b.layernorm("ln_f", bs, cfg.hidden, &[prev]);
+        // LM head (tied embedding: no extra params).
+        b.gemm_act("lm_head", bs, cfg.vocab, cfg.hidden, &[lnf]);
+    }
+    b.finish()
+}
+
+/// Whole-model forward graph.
+pub fn forward(cfg: &TransformerCfg) -> OperatorGraph {
+    forward_range(cfg, 0, cfg.layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+
+    #[test]
+    fn param_counts_match_model_cards() {
+        // Within 15% of the published sizes.
+        let close = |got: u64, want: f64| (got as f64 - want).abs() / want < 0.15;
+        assert!(close(bert_base().param_count(), 110e6), "{}", bert_base().param_count());
+        assert!(close(bert_large().param_count(), 340e6), "{}", bert_large().param_count());
+        assert!(close(gpt2_xl().param_count(), 1.5e9), "{}", gpt2_xl().param_count());
+        assert!(close(opt_1_3b().param_count(), 1.3e9), "{}", opt_1_3b().param_count());
+        assert!(close(gpt3().param_count(), 175e9), "{}", gpt3().param_count());
+    }
+
+    #[test]
+    fn graph_param_elems_track_cfg() {
+        let cfg = bert_base();
+        let g = forward(&cfg);
+        let got = g.param_elems();
+        // The graph's embed op owns the tied vocab*hidden table once.
+        let want = cfg.param_count();
+        let rel = (got as f64 - want as f64).abs() / want as f64;
+        assert!(rel < 0.05, "got {got}, want ~{want}");
+    }
+
+    #[test]
+    fn forward_graph_is_valid() {
+        validate(&forward(&bert_base())).unwrap();
+        validate(&forward(&bert_large())).unwrap();
+    }
+
+    #[test]
+    fn qkv_branches_in_parallel() {
+        let g = forward(&bert_base());
+        let ln1 = g.ops.iter().position(|o| o.name == "l0/ln1").unwrap();
+        assert_eq!(g.succs[ln1].len(), 3, "ln1 fans out to q, k, v");
+    }
+
+    #[test]
+    fn tmp_divides_per_device_work() {
+        let mut cfg = gpt3();
+        let full = forward_range(&cfg, 0, 1);
+        cfg.tmp = 8;
+        let split = forward_range(&cfg, 0, 1);
+        let flops = |g: &OperatorGraph| g.total_flops();
+        let ratio = flops(&full) / flops(&split);
+        // Attention+MLP shrink ~8x; layernorms/residuals don't.
+        assert!(ratio > 3.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn layer_ranges_compose() {
+        let cfg = bert_base();
+        let whole = forward(&cfg);
+        let a = forward_range(&cfg, 0, 6);
+        let z = forward_range(&cfg, 6, 12);
+        // Stage op counts cover the whole model (modulo stage_in/lm_head).
+        assert!(a.len() + z.len() >= whole.len());
+        validate(&a).unwrap();
+        validate(&z).unwrap();
+    }
+
+    #[test]
+    fn tmp_allreduce_traffic() {
+        let mut cfg = opt_1_3b();
+        assert_eq!(cfg.tmp_allreduce_bytes_fwd(), 0);
+        cfg.tmp = 4;
+        let expect = 2 * 24 * 32 * 512 * 2048 * 2;
+        assert_eq!(cfg.tmp_allreduce_bytes_fwd(), expect);
+    }
+}

@@ -1,0 +1,357 @@
+//! Vision workloads of Table 4: MobileNet_v3, ResNet-18, Inception_v3,
+//! ResNeXt-101 (32x8d), VGG-16.
+//!
+//! Convolutions are modeled through their implicit GEMM (op.rs); the
+//! graphs carry the structural properties that matter to the search:
+//! channel/spatial dims per layer, residual and inception branching,
+//! squeeze-excite side paths, and depthwise convolutions with tiny
+//! reduction dims (the low-utilization layers of paper Figure 2).
+
+use crate::graph::{GraphBuilder, NodeId, OperatorGraph};
+
+/// conv + batchnorm + relu, returning the activation node.
+#[allow(clippy::too_many_arguments)]
+fn cbr(
+    b: &mut GraphBuilder,
+    name: &str,
+    batch: u64,
+    in_c: u64,
+    out_c: u64,
+    k: u64,
+    hw: u64,
+    preds: &[NodeId],
+) -> NodeId {
+    let c = b.conv(format!("{name}/conv"), batch, in_c, out_c, k, k, hw, hw, preds);
+    let elems = batch * out_c * hw * hw;
+    let bn = b.batchnorm(format!("{name}/bn"), elems, out_c, &[c]);
+    b.eltwise(format!("{name}/relu"), elems, 1, &[bn])
+}
+
+/// Depthwise conv (+BN+act): per-channel 2-D filter => implicit GEMM with
+/// k = kh*kw only, the shape that starves big systolic arrays.
+fn dwconv(b: &mut GraphBuilder, name: &str, batch: u64, c: u64, k: u64, hw: u64, preds: &[NodeId]) -> NodeId {
+    let conv = b.fwd(
+        format!("{name}/dw"),
+        crate::graph::OpKind::Conv2d { batch, in_c: 1, out_c: c, kh: k, kw: k, oh: hw, ow: hw },
+        c * k * k,
+        preds,
+    );
+    let elems = batch * c * hw * hw;
+    let bn = b.batchnorm(format!("{name}/bn"), elems, c, &[conv]);
+    b.eltwise(format!("{name}/act"), elems, 3, &[bn])
+}
+
+// ------------------------------------------------------------------ VGG-16
+/// VGG-16 forward graph (batch 64 per Table 4).
+pub fn vgg16(batch: u64) -> OperatorGraph {
+    let mut b = GraphBuilder::new();
+    // (out_c, convs, spatial) per stage.
+    let stages: [(u64, u64, u64); 5] =
+        [(64, 2, 224), (128, 2, 112), (256, 3, 56), (512, 3, 28), (512, 3, 14)];
+    let mut prev: Option<NodeId> = None;
+    let mut in_c = 3;
+    for (si, &(out_c, convs, hw)) in stages.iter().enumerate() {
+        for ci in 0..convs {
+            let preds: Vec<NodeId> = prev.into_iter().collect();
+            let n = cbr(&mut b, &format!("s{si}c{ci}"), batch, in_c, out_c, 3, hw, &preds);
+            prev = Some(n);
+            in_c = out_c;
+        }
+        let pool = b.reduce(format!("s{si}/pool"), batch * out_c * hw * hw, 1, &[prev.unwrap()]);
+        prev = Some(pool);
+    }
+    let p = prev.unwrap();
+    let fc1 = b.gemm("fc1", batch, 4096, 512 * 7 * 7, &[p]);
+    let r1 = b.eltwise("fc1/relu", batch * 4096, 1, &[fc1]);
+    let fc2 = b.gemm("fc2", batch, 4096, 4096, &[r1]);
+    let r2 = b.eltwise("fc2/relu", batch * 4096, 1, &[fc2]);
+    let _fc3 = b.gemm("fc3", batch, 1000, 4096, &[r2]);
+    b.finish()
+}
+
+// --------------------------------------------------------------- ResNet-18
+/// Basic residual block: two 3x3 convs + skip connection.
+fn basic_block(b: &mut GraphBuilder, name: &str, batch: u64, in_c: u64, out_c: u64, hw: u64, prev: NodeId) -> NodeId {
+    let c1 = cbr(b, &format!("{name}/a"), batch, in_c, out_c, 3, hw, &[prev]);
+    let c2 = b.conv(format!("{name}/b/conv"), batch, out_c, out_c, 3, 3, hw, hw, &[c1]);
+    let bn2 = b.batchnorm(format!("{name}/b/bn"), batch * out_c * hw * hw, out_c, &[c2]);
+    // Projection shortcut when the shape changes, identity otherwise.
+    let skip = if in_c != out_c {
+        b.conv(format!("{name}/proj"), batch, in_c, out_c, 1, 1, hw, hw, &[prev])
+    } else {
+        prev
+    };
+    let add = b.eltwise(format!("{name}/add"), batch * out_c * hw * hw, 1, &[bn2, skip]);
+    b.eltwise(format!("{name}/relu"), batch * out_c * hw * hw, 1, &[add])
+}
+
+/// ResNet-18 forward graph (batch 128 per Table 4).
+pub fn resnet18(batch: u64) -> OperatorGraph {
+    let mut b = GraphBuilder::new();
+    let stem = cbr(&mut b, "stem", batch, 3, 64, 7, 112, &[]);
+    let pool = b.reduce("stem/pool", batch * 64 * 112 * 112, 1, &[stem]);
+    let mut prev = pool;
+    let stages: [(u64, u64); 4] = [(64, 56), (128, 28), (256, 14), (512, 7)];
+    let mut in_c = 64;
+    for (si, &(out_c, hw)) in stages.iter().enumerate() {
+        for bi in 0..2u64 {
+            prev = basic_block(&mut b, &format!("s{si}b{bi}"), batch, in_c, out_c, hw, prev);
+            in_c = out_c;
+        }
+    }
+    let gap = b.reduce("gap", batch * 512 * 7 * 7, 1, &[prev]);
+    let _fc = b.gemm("fc", batch, 1000, 512, &[gap]);
+    b.finish()
+}
+
+// ------------------------------------------------------------- ResNeXt-101
+/// Bottleneck block with cardinality: 1x1 reduce, grouped 3x3 (modeled as
+/// `groups_shown` parallel branch convs), 1x1 expand, plus the skip.
+#[allow(clippy::too_many_arguments)]
+fn resnext_block(
+    b: &mut GraphBuilder,
+    name: &str,
+    batch: u64,
+    in_c: u64,
+    width: u64,
+    out_c: u64,
+    hw: u64,
+    prev: NodeId,
+) -> NodeId {
+    const GROUPS_SHOWN: u64 = 4; // 32 cardinality groups, lumped 8-a-piece
+    const CARDINALITY: u64 = 32;
+    let reduce = cbr(b, &format!("{name}/r"), batch, in_c, width, 1, hw, &[prev]);
+    let gw = width / GROUPS_SHOWN;
+    let mut branches = Vec::new();
+    for gi in 0..GROUPS_SHOWN {
+        // Each shown branch lumps 8 true groups; its weight count is that
+        // of the grouped conv (cardinality 32), not a dense gw x gw conv.
+        let true_params = (CARDINALITY / GROUPS_SHOWN) * (width / CARDINALITY) * (width / CARDINALITY) * 9;
+        branches.push(b.fwd(
+            format!("{name}/g{gi}"),
+            crate::graph::OpKind::Conv2d { batch, in_c: gw, out_c: gw, kh: 3, kw: 3, oh: hw, ow: hw },
+            true_params,
+            &[reduce],
+        ));
+    }
+    let cat = b.eltwise(format!("{name}/cat"), batch * width * hw * hw, 1, &branches);
+    let expand = b.conv(format!("{name}/e"), batch, width, out_c, 1, 1, hw, hw, &[cat]);
+    let bn = b.batchnorm(format!("{name}/ebn"), batch * out_c * hw * hw, out_c, &[expand]);
+    let skip = if in_c != out_c {
+        b.conv(format!("{name}/proj"), batch, in_c, out_c, 1, 1, hw, hw, &[prev])
+    } else {
+        prev
+    };
+    b.eltwise(format!("{name}/add"), batch * out_c * hw * hw, 1, &[bn, skip])
+}
+
+/// ResNeXt-101 (32x8d) forward graph (batch 16 per Table 4).
+pub fn resnext101(batch: u64) -> OperatorGraph {
+    let mut b = GraphBuilder::new();
+    let stem = cbr(&mut b, "stem", batch, 3, 64, 7, 112, &[]);
+    let mut prev = b.reduce("stem/pool", batch * 64 * 112 * 112, 1, &[stem]);
+    // (blocks, width, out_c, hw) per stage — 32x8d widths.
+    let stages: [(u64, u64, u64, u64); 4] =
+        [(3, 256, 256, 56), (4, 512, 512, 28), (23, 1024, 1024, 14), (3, 2048, 2048, 7)];
+    let mut in_c = 64;
+    for (si, &(blocks, width, out_c, hw)) in stages.iter().enumerate() {
+        for bi in 0..blocks {
+            prev = resnext_block(&mut b, &format!("s{si}b{bi}"), batch, in_c, width, out_c, hw, prev);
+            in_c = out_c;
+        }
+    }
+    let gap = b.reduce("gap", batch * 2048 * 7 * 7, 1, &[prev]);
+    let _fc = b.gemm("fc", batch, 1000, 2048, &[gap]);
+    b.finish()
+}
+
+// ------------------------------------------------------------ Inception_v3
+/// Four-branch inception block (1x1 / 5x5 / double-3x3 / pool-proj).
+fn inception_a(b: &mut GraphBuilder, name: &str, batch: u64, in_c: u64, hw: u64, prev: NodeId) -> NodeId {
+    let b1 = cbr(b, &format!("{name}/b1"), batch, in_c, 64, 1, hw, &[prev]);
+    let b2a = cbr(b, &format!("{name}/b2a"), batch, in_c, 48, 1, hw, &[prev]);
+    let b2 = cbr(b, &format!("{name}/b2"), batch, 48, 64, 5, hw, &[b2a]);
+    let b3a = cbr(b, &format!("{name}/b3a"), batch, in_c, 64, 1, hw, &[prev]);
+    let b3b = cbr(b, &format!("{name}/b3b"), batch, 64, 96, 3, hw, &[b3a]);
+    let b3 = cbr(b, &format!("{name}/b3"), batch, 96, 96, 3, hw, &[b3b]);
+    let pool = b.reduce(format!("{name}/pool"), batch * in_c * hw * hw, 1, &[prev]);
+    let b4 = cbr(b, &format!("{name}/b4"), batch, in_c, 64, 1, hw, &[pool]);
+    let out_c = 64 + 64 + 96 + 64;
+    b.eltwise(format!("{name}/cat"), batch * out_c * hw * hw, 1, &[b1, b2, b3, b4])
+}
+
+/// 7x1/1x7 factorized inception block.
+fn inception_b(b: &mut GraphBuilder, name: &str, batch: u64, in_c: u64, mid: u64, hw: u64, prev: NodeId) -> NodeId {
+    let b1 = cbr(b, &format!("{name}/b1"), batch, in_c, 192, 1, hw, &[prev]);
+    let b2a = cbr(b, &format!("{name}/b2a"), batch, in_c, mid, 1, hw, &[prev]);
+    // 1x7 then 7x1 — model as k=7 convs with asymmetric cost via kh*kw=7.
+    let b2b = b.conv(format!("{name}/b2b"), batch, mid, mid, 1, 7, hw, hw, &[b2a]);
+    let b2 = b.conv(format!("{name}/b2c"), batch, mid, 192, 7, 1, hw, hw, &[b2b]);
+    let b3a = cbr(b, &format!("{name}/b3a"), batch, in_c, mid, 1, hw, &[prev]);
+    let b3b = b.conv(format!("{name}/b3b"), batch, mid, mid, 7, 1, hw, hw, &[b3a]);
+    let b3c = b.conv(format!("{name}/b3c"), batch, mid, mid, 1, 7, hw, hw, &[b3b]);
+    let b3 = b.conv(format!("{name}/b3d"), batch, mid, 192, 7, 1, hw, hw, &[b3c]);
+    let pool = b.reduce(format!("{name}/pool"), batch * in_c * hw * hw, 1, &[prev]);
+    let b4 = cbr(b, &format!("{name}/b4"), batch, in_c, 192, 1, hw, &[pool]);
+    b.eltwise(format!("{name}/cat"), batch * 768 * hw * hw, 1, &[b1, b2, b3, b4])
+}
+
+/// Inception_v3 forward graph (batch 64 per Table 4, 299x299 input).
+pub fn inception_v3(batch: u64) -> OperatorGraph {
+    let mut b = GraphBuilder::new();
+    let s1 = cbr(&mut b, "stem1", batch, 3, 32, 3, 149, &[]);
+    let s2 = cbr(&mut b, "stem2", batch, 32, 32, 3, 147, &[s1]);
+    let s3 = cbr(&mut b, "stem3", batch, 32, 64, 3, 147, &[s2]);
+    let p1 = b.reduce("stem/pool1", batch * 64 * 147 * 147, 1, &[s3]);
+    let s4 = cbr(&mut b, "stem4", batch, 64, 80, 1, 73, &[p1]);
+    let s5 = cbr(&mut b, "stem5", batch, 80, 192, 3, 71, &[s4]);
+    let mut prev = b.reduce("stem/pool2", batch * 192 * 71 * 71, 1, &[s5]);
+
+    // 3x inception-A at 35x35.
+    let mut in_c = 192;
+    for i in 0..3 {
+        prev = inception_a(&mut b, &format!("a{i}"), batch, in_c, 35, prev);
+        in_c = 288;
+    }
+    // Reduction to 17x17.
+    let red = cbr(&mut b, "redA", batch, in_c, 384, 3, 17, &[prev]);
+    prev = red;
+    in_c = 768;
+    // 4x inception-B at 17x17 with growing mid widths.
+    for (i, mid) in [128u64, 160, 160, 192].iter().enumerate() {
+        prev = inception_b(&mut b, &format!("b{i}"), batch, in_c, *mid, 17, prev);
+    }
+    // Reduction + two C blocks approximated as wide A blocks at 8x8.
+    let red2 = cbr(&mut b, "redB", batch, 768, 1280, 3, 8, &[prev]);
+    prev = red2;
+    prev = inception_a(&mut b, "c0", batch, 1280, 8, prev);
+    prev = inception_a(&mut b, "c1", batch, 288, 8, prev);
+    let gap = b.reduce("gap", batch * 288 * 8 * 8, 1, &[prev]);
+    let _fc = b.gemm("fc", batch, 1000, 2048, &[gap]);
+    b.finish()
+}
+
+// ------------------------------------------------------------ MobileNet_v3
+/// Inverted-residual bneck with optional squeeze-excite.
+#[allow(clippy::too_many_arguments)]
+fn bneck(
+    b: &mut GraphBuilder,
+    name: &str,
+    batch: u64,
+    in_c: u64,
+    exp_c: u64,
+    out_c: u64,
+    k: u64,
+    hw: u64,
+    se: bool,
+    prev: NodeId,
+) -> NodeId {
+    let expand = cbr(b, &format!("{name}/exp"), batch, in_c, exp_c, 1, hw, &[prev]);
+    let dw = dwconv(b, &format!("{name}"), batch, exp_c, k, hw, &[expand]);
+    let dw_out = if se {
+        // Squeeze-excite: GAP -> fc -> fc -> scale (a side branch).
+        let gap = b.reduce(format!("{name}/se/gap"), batch * exp_c * hw * hw, 1, &[dw]);
+        let fc1 = b.gemm(format!("{name}/se/fc1"), batch, exp_c / 4, exp_c, &[gap]);
+        let fc2 = b.gemm(format!("{name}/se/fc2"), batch, exp_c, exp_c / 4, &[fc1]);
+        b.eltwise(format!("{name}/se/scale"), batch * exp_c * hw * hw, 1, &[dw, fc2])
+    } else {
+        dw
+    };
+    let proj = b.conv(format!("{name}/proj"), batch, exp_c, out_c, 1, 1, hw, hw, &[dw_out]);
+    let bn = b.batchnorm(format!("{name}/pbn"), batch * out_c * hw * hw, out_c, &[proj]);
+    if in_c == out_c {
+        b.eltwise(format!("{name}/add"), batch * out_c * hw * hw, 1, &[bn, prev])
+    } else {
+        bn
+    }
+}
+
+/// MobileNet_v3-Large forward graph (batch 128 per Table 4).
+pub fn mobilenet_v3(batch: u64) -> OperatorGraph {
+    let mut b = GraphBuilder::new();
+    let stem = cbr(&mut b, "stem", batch, 3, 16, 3, 112, &[]);
+    // (in, exp, out, k, hw, se) — MobileNetV3-Large table.
+    let cfgs: [(u64, u64, u64, u64, u64, bool); 15] = [
+        (16, 16, 16, 3, 112, false),
+        (16, 64, 24, 3, 56, false),
+        (24, 72, 24, 3, 56, false),
+        (24, 72, 40, 5, 28, true),
+        (40, 120, 40, 5, 28, true),
+        (40, 120, 40, 5, 28, true),
+        (40, 240, 80, 3, 14, false),
+        (80, 200, 80, 3, 14, false),
+        (80, 184, 80, 3, 14, false),
+        (80, 184, 80, 3, 14, false),
+        (80, 480, 112, 3, 14, true),
+        (112, 672, 112, 3, 14, true),
+        (112, 672, 160, 5, 7, true),
+        (160, 960, 160, 5, 7, true),
+        (160, 960, 160, 5, 7, true),
+    ];
+    let mut prev = stem;
+    for (i, &(ic, ec, oc, k, hw, se)) in cfgs.iter().enumerate() {
+        prev = bneck(&mut b, &format!("bn{i}"), batch, ic, ec, oc, k, hw, se, prev);
+    }
+    let head = cbr(&mut b, "head", batch, 160, 960, 1, 7, &[prev]);
+    let gap = b.reduce("gap", batch * 960 * 7 * 7, 1, &[head]);
+    let fc1 = b.gemm("fc1", batch, 1280, 960, &[gap]);
+    let hs = b.eltwise("fc1/hswish", batch * 1280, 3, &[fc1]);
+    let _fc2 = b.gemm("fc2", batch, 1000, 1280, &[hs]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+
+    #[test]
+    fn all_vision_graphs_are_valid() {
+        for g in [vgg16(4), resnet18(4), resnext101(2), inception_v3(2), mobilenet_v3(4)] {
+            validate(&g).unwrap();
+        }
+    }
+
+    #[test]
+    fn vgg16_param_count_ballpark() {
+        let g = vgg16(64);
+        let p = g.param_elems() as f64;
+        assert!((100e6..160e6).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn resnet18_param_count_ballpark() {
+        let p = resnet18(128).param_elems() as f64;
+        assert!((10e6..35e6).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn resnext101_param_count_ballpark() {
+        let p = resnext101(16).param_elems() as f64;
+        // 32x8d publishes 88.8M; grouped-conv lumping keeps us within 2x.
+        assert!((40e6..120e6).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn inception_has_branching() {
+        let g = inception_v3(2);
+        let max_fanout = (0..g.len()).map(|v| g.succs[v].len()).max().unwrap();
+        assert!(max_fanout >= 4, "inception blocks fan out 4 ways");
+    }
+
+    #[test]
+    fn mobilenet_depthwise_has_tiny_k() {
+        let g = mobilenet_v3(4);
+        let dw = g.ops.iter().find(|o| o.name.ends_with("/dw")).unwrap();
+        let r = dw.kind.cost_row();
+        assert!(r.k <= 25, "depthwise reduce dim k={}", r.k);
+    }
+
+    #[test]
+    fn resnet_blocks_have_skip_fanout() {
+        let g = resnet18(4);
+        // Residual inputs feed both the block and the skip add.
+        let fanout2 = (0..g.len()).filter(|&v| g.succs[v].len() >= 2).count();
+        assert!(fanout2 >= 2);
+    }
+}

@@ -1,0 +1,80 @@
+//! Report generation: the table/figure printers shared by the CLI, the
+//! benches, and EXPERIMENTS.md regeneration, plus a Chrome-trace export
+//! of schedules ([`trace`]).
+
+pub mod trace;
+
+use crate::metrics::Evaluation;
+use crate::search::DesignPoint;
+use crate::util::table::Table;
+
+/// Table of per-model design points (Table 5 shape).
+pub fn design_table(rows: &[(String, DesignPoint)]) -> Table {
+    let mut t = Table::new(["model", "config", "thpt (samples/s)", "perf/TDP", "area mm2", "TDP W"]);
+    for (name, p) in rows {
+        t.row([
+            name.clone(),
+            p.config.display(),
+            format!("{:.3}", p.eval.throughput),
+            format!("{:.4}", p.eval.perf_per_tdp),
+            format!("{:.1}", p.eval.area_mm2),
+            format!("{:.1}", p.eval.tdp_w),
+        ]);
+    }
+    t
+}
+
+/// Normalized comparison row: value / baseline for every column.
+pub fn speedup_table(header: &[&str], rows: &[(String, Vec<f64>)]) -> Table {
+    let mut head = vec!["model".to_string()];
+    head.extend(header.iter().map(|s| s.to_string()));
+    let mut t = Table::new(head);
+    for (name, vals) in rows {
+        let mut cells = vec![name.clone()];
+        cells.extend(vals.iter().map(|v| format!("{v:.3}")));
+        t.row(cells);
+    }
+    t
+}
+
+/// Geometric mean, used for the "on average" claims.
+pub fn geomean(vals: impl IntoIterator<Item = f64>) -> f64 {
+    let mut log_sum = 0.0;
+    let mut n = 0usize;
+    for v in vals {
+        debug_assert!(v > 0.0);
+        log_sum += v.ln();
+        n += 1;
+    }
+    if n == 0 {
+        return f64::NAN;
+    }
+    (log_sum / n as f64).exp()
+}
+
+/// One-line summary of an evaluation.
+pub fn eval_line(e: &Evaluation) -> String {
+    format!(
+        "iter={:.4}s thpt={:.3}/s energy={:.2}J area={:.0}mm2 TDP={:.0}W perf/TDP={:.4}",
+        e.seconds, e.throughput, e.energy_j, e.area_mm2, e.tdp_w, e.perf_per_tdp
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean([2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean([3.0]) - 3.0).abs() < 1e-12);
+        assert!(geomean(std::iter::empty::<f64>()).is_nan());
+    }
+
+    #[test]
+    fn tables_render() {
+        let t = speedup_table(&["wham", "tpu"], &[("bert".into(), vec![1.5, 1.0])]);
+        let s = t.render();
+        assert!(s.contains("bert") && s.contains("1.500"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Chrome-trace (about://tracing, Perfetto) export of schedules: each
+//! core instance becomes a track, each operator a complete event. Handy
+//! for eyeballing why MCR added a core.
+
+use crate::cost::annotate::AnnotatedGraph;
+use crate::graph::CoreType;
+use crate::sched::{CoreCount, Schedule};
+
+/// Render a schedule as Chrome trace-event JSON.
+///
+/// Core assignment is reconstructed greedily (the scheduler does not
+/// record instance ids): each op takes the lowest-numbered free instance
+/// of its type at its start cycle — consistent with any valid execution.
+pub fn chrome_trace(ann: &AnnotatedGraph, sched: &Schedule, cores: CoreCount) -> String {
+    let n = ann.graph.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&v| (sched.start[v], sched.finish[v], v));
+
+    let mut tc_free = vec![0u64; cores.tc as usize];
+    let mut vc_free = vec![0u64; cores.vc as usize];
+    let mut events = String::from("[");
+    let mut first = true;
+    let take = |free: &mut [u64], start: u64, finish: u64| -> usize {
+        let i = (0..free.len()).find(|&i| free[i] <= start).unwrap_or(0);
+        free[i] = finish;
+        i
+    };
+    for v in order {
+        let (tid_base, idx) = match ann.core[v] {
+            CoreType::Tensor => (0, take(&mut tc_free, sched.start[v], sched.finish[v])),
+            CoreType::Vector => (1000, take(&mut vc_free, sched.start[v], sched.finish[v])),
+            CoreType::Fused => {
+                let i = take(&mut tc_free, sched.start[v], sched.finish[v]);
+                let _ = take(&mut vc_free, sched.start[v], sched.finish[v]);
+                (0, i)
+            }
+        };
+        if !first {
+            events.push(',');
+        }
+        first = false;
+        // Durations in "microseconds" = cycles (1:1 for viewing).
+        events.push_str(&format!(
+            r#"{{"name":{:?},"ph":"X","ts":{},"dur":{},"pid":0,"tid":{}}}"#,
+            ann.graph.ops[v].name,
+            sched.start[v],
+            (sched.finish[v] - sched.start[v]).max(1),
+            tid_base + idx
+        ));
+    }
+    events.push(']');
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::native::NativeCost;
+    use crate::cost::Dims;
+    use crate::sched::{asap_alap, greedy_schedule};
+
+    #[test]
+    fn trace_is_valid_json_shape() {
+        let g = crate::sched::fanout3();
+        let ann = AnnotatedGraph::new(&g, Dims { tc_x: 64, tc_y: 64, vc_w: 64 }, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        let cores = CoreCount { tc: 2, vc: 1 };
+        let s = greedy_schedule(&ann, &cp, cores);
+        let t = chrome_trace(&ann, &s, cores);
+        assert!(t.starts_with('[') && t.ends_with(']'));
+        assert_eq!(t.matches("\"ph\":\"X\"").count(), g.len());
+        assert!(t.contains("\"root\""));
+    }
+
+    #[test]
+    fn every_op_appears_once() {
+        let g = crate::sched::fanout3();
+        let ann = AnnotatedGraph::new(&g, Dims { tc_x: 64, tc_y: 64, vc_w: 64 }, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        let cores = CoreCount { tc: 3, vc: 1 };
+        let s = greedy_schedule(&ann, &cp, cores);
+        let t = chrome_trace(&ann, &s, cores);
+        for op in &g.ops {
+            assert!(t.contains(&format!("{:?}", op.name)));
+        }
+    }
+}

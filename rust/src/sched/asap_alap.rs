@@ -1,0 +1,152 @@
+//! ASAP/ALAP infinite-resource schedules and critical-path analysis
+//! (paper section 4.3, Figure 5).
+
+use crate::cost::annotate::AnnotatedGraph;
+
+/// Critical-path information for an annotated graph.
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    /// Earliest possible start per op (infinite cores).
+    pub asap: Vec<u64>,
+    /// Latest start that does not stretch the best latency.
+    pub alap: Vec<u64>,
+    /// `alap - asap`: zero marks the critical operators.
+    pub slack: Vec<u64>,
+    /// Theoretical best makespan (ASAP finish of the last op) — the bound
+    /// the MCR heuristic and ILP converge toward.
+    pub best_latency: u64,
+}
+
+impl CriticalPath {
+    /// Operators with zero slack.
+    pub fn critical_ops(&self) -> Vec<usize> {
+        (0..self.slack.len()).filter(|&v| self.slack[v] == 0).collect()
+    }
+
+    /// Upper bound on useful core counts (paper section 3: critical-path
+    /// analysis bounds the count via the graph's parallelizability): the
+    /// maximum number of ops of one core type simultaneously runnable in
+    /// the ASAP schedule.
+    pub fn max_parallelism(&self, ann: &AnnotatedGraph, core: crate::graph::CoreType) -> u64 {
+        // Sweep-line over ASAP intervals of the matching ops.
+        let mut events: Vec<(u64, i64)> = Vec::new();
+        for v in 0..ann.graph.len() {
+            let matches = match core {
+                crate::graph::CoreType::Tensor => {
+                    ann.core[v] == crate::graph::CoreType::Tensor
+                        || ann.core[v] == crate::graph::CoreType::Fused
+                }
+                crate::graph::CoreType::Vector => {
+                    ann.core[v] == crate::graph::CoreType::Vector
+                        || ann.core[v] == crate::graph::CoreType::Fused
+                }
+                crate::graph::CoreType::Fused => ann.core[v] == crate::graph::CoreType::Fused,
+            };
+            if matches {
+                events.push((self.asap[v], 1));
+                events.push((self.asap[v] + ann.cycles[v], -1));
+            }
+        }
+        events.sort();
+        let mut cur = 0i64;
+        let mut peak = 0i64;
+        for (_, d) in events {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        peak.max(0) as u64
+    }
+}
+
+/// Compute ASAP and ALAP schedules over an annotated graph.
+pub fn asap_alap(ann: &AnnotatedGraph) -> CriticalPath {
+    let g = ann.graph;
+    let n = g.len();
+    let order = g.topo_order();
+
+    let mut asap = vec![0u64; n];
+    for &v in &order {
+        for &p in &g.preds[v] {
+            asap[v] = asap[v].max(asap[p] + ann.cycles[p]);
+        }
+    }
+    let best_latency = order
+        .iter()
+        .map(|&v| asap[v] + ann.cycles[v])
+        .max()
+        .unwrap_or(0);
+
+    let mut alap = vec![u64::MAX; n];
+    for &v in order.iter().rev() {
+        if g.succs[v].is_empty() {
+            alap[v] = best_latency - ann.cycles[v];
+        } else {
+            for &s in &g.succs[v] {
+                alap[v] = alap[v].min(alap[s] - ann.cycles[v]);
+            }
+        }
+    }
+
+    let slack = (0..n).map(|v| alap[v] - asap[v]).collect();
+    CriticalPath { asap, alap, slack, best_latency }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::annotate::AnnotatedGraph;
+    use crate::cost::native::NativeCost;
+    use crate::cost::Dims;
+    use crate::graph::{CoreType, GraphBuilder};
+
+    const D: Dims = Dims { tc_x: 64, tc_y: 64, vc_w: 64 };
+
+    #[test]
+    fn chain_has_zero_slack_everywhere() {
+        let mut b = GraphBuilder::new();
+        let a = b.gemm("a", 64, 64, 64, &[]);
+        let c = b.gemm("c", 64, 64, 64, &[a]);
+        let _d = b.gemm("d", 64, 64, 64, &[c]);
+        let g = b.finish();
+        let ann = AnnotatedGraph::new(&g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        assert!(cp.slack.iter().all(|&s| s == 0));
+        assert_eq!(cp.critical_ops().len(), 3);
+        assert_eq!(cp.best_latency, ann.cycles.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn short_branch_has_slack() {
+        let mut b = GraphBuilder::new();
+        let root = b.gemm("root", 64, 64, 64, &[]);
+        let long = b.gemm("long", 512, 512, 512, &[root]); // heavy branch
+        let short = b.eltwise("short", 64, 1, &[root]); // light branch
+        let _join = b.gemm("join", 64, 64, 64, &[long, short]);
+        let g = b.finish();
+        let ann = AnnotatedGraph::new(&g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        assert_eq!(cp.slack[long], 0, "heavy branch is critical");
+        assert!(cp.slack[short] > 0, "light branch has slack");
+        // ALAP start respects the join.
+        assert_eq!(cp.alap[short] + ann.cycles[short], cp.alap[3]);
+    }
+
+    #[test]
+    fn parallelism_bound_matches_fanout() {
+        let g = crate::sched::fanout3();
+        let ann = AnnotatedGraph::new(&g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        assert_eq!(cp.max_parallelism(&ann, CoreType::Tensor), 3);
+        assert_eq!(cp.max_parallelism(&ann, CoreType::Vector), 0);
+    }
+
+    #[test]
+    fn alap_never_before_asap() {
+        let g = crate::sched::fanout3();
+        let ann = AnnotatedGraph::new(&g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        for v in 0..g.len() {
+            assert!(cp.alap[v] >= cp.asap[v]);
+        }
+    }
+}

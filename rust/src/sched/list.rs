@@ -1,0 +1,316 @@
+//! Resource-constrained greedy list scheduler (paper section 4.3,
+//! "Greedy Scheduler for Heuristics").
+//!
+//! Operators become ready when all predecessors complete; ready operators
+//! are started whenever a core of their type is free, lowest-slack first
+//! (zero slack = critical). A lower-priority op may start ahead of a
+//! blocked critical op of another core type (backfilling), which reduces
+//! idle time without delaying the critical op. All operators within a
+//! core execute in order; cross-core dependencies are the graph edges
+//! (the semaphore block of the architectural template).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::asap_alap::CriticalPath;
+use crate::cost::annotate::AnnotatedGraph;
+use crate::graph::CoreType;
+
+/// Number of cores of each type available to the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoreCount {
+    pub tc: u64,
+    pub vc: u64,
+}
+
+/// Result of a greedy scheduling run.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Start cycle per op.
+    pub start: Vec<u64>,
+    /// Finish cycle per op.
+    pub finish: Vec<u64>,
+    /// Cycle at which each op's predecessors were all complete.
+    pub ready_at: Vec<u64>,
+    /// Total makespan in cycles.
+    pub makespan: u64,
+}
+
+impl Schedule {
+    /// Cycles an op waited on a core after its inputs were ready — a
+    /// resource conflict in the paper's terms.
+    pub fn resource_delay(&self, v: usize) -> u64 {
+        self.start[v] - self.ready_at[v]
+    }
+
+    /// First operator (by start time, then id) that (a) waited on a core
+    /// and (b) thereby started later than its ALAP time — the conflict
+    /// MCR resolves by adding a core (Algorithm 1).
+    pub fn first_critical_conflict(&self, cp: &CriticalPath) -> Option<usize> {
+        self.first_conflict_where(cp, |_| true)
+    }
+
+    /// Earliest critical conflict accepted by `pred` — single pass
+    /// (perf: this runs once per MCR iteration on the hot path; sorting
+    /// the whole op list was the top profile entry, see EXPERIMENTS.md
+    /// section Perf).
+    pub fn first_conflict_where<F: Fn(usize) -> bool>(&self, cp: &CriticalPath, pred: F) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for v in 0..self.start.len() {
+            if self.resource_delay(v) > 0
+                && self.start[v] > cp.alap[v]
+                && pred(v)
+                && best.map_or(true, |(bs, bv)| (self.start[v], v) < (bs, bv))
+            {
+                best = Some((self.start[v], v));
+            }
+        }
+        best.map(|(_, v)| v)
+    }
+
+    /// All critical resource conflicts in start-time order.
+    pub fn critical_conflicts(&self, cp: &CriticalPath) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.start.len())
+            .filter(|&v| self.resource_delay(v) > 0 && self.start[v] > cp.alap[v])
+            .collect();
+        order.sort_by_key(|&v| (self.start[v], v));
+        order
+    }
+}
+
+/// Ready-queue ordering policy (ablation knob; the paper's scheduler uses
+/// criticality).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Lowest slack first (zero slack = critical) — paper section 4.3.
+    #[default]
+    Criticality,
+    /// Arrival order (ASAP time, then id) — the ablation baseline.
+    Fifo,
+}
+
+/// Greedy-schedule `ann` on `cores` with criticality priorities.
+pub fn greedy_schedule(ann: &AnnotatedGraph, cp: &CriticalPath, cores: CoreCount) -> Schedule {
+    greedy_schedule_with_priority(ann, cp, cores, Priority::Criticality)
+}
+
+/// Greedy-schedule with an explicit ready-queue policy.
+pub fn greedy_schedule_with_priority(
+    ann: &AnnotatedGraph,
+    cp: &CriticalPath,
+    cores: CoreCount,
+    priority: Priority,
+) -> Schedule {
+    assert!(cores.tc >= 1 && cores.vc >= 1, "need at least one core of each type");
+    let g = ann.graph;
+    let n = g.len();
+
+    let mut indeg: Vec<u32> = g.preds.iter().map(|p| p.len() as u32).collect();
+    let mut ready_at = vec![0u64; n];
+    let mut start = vec![0u64; n];
+    let mut finish = vec![0u64; n];
+
+    // Per-core-type ready queues ordered by (slack, asap, id).
+    // Capacities sized up front: heap regrowth showed up in the MCR hot
+    // loop (EXPERIMENTS.md section Perf).
+    type Prio = Reverse<(u64, u64, usize)>;
+    let mut ready_t: BinaryHeap<Prio> = BinaryHeap::with_capacity(n / 2 + 1);
+    let mut ready_v: BinaryHeap<Prio> = BinaryHeap::with_capacity(n / 2 + 1);
+    let mut ready_f: BinaryHeap<Prio> = BinaryHeap::with_capacity(16);
+    // Completion events: (finish_time, op).
+    let mut events: BinaryHeap<Reverse<(u64, usize)>> =
+        BinaryHeap::with_capacity((cores.tc + cores.vc) as usize + 1);
+
+    let mut free_tc = cores.tc;
+    let mut free_vc = cores.vc;
+    let push_ready =
+        |v: usize, rt: &mut BinaryHeap<Prio>, rv: &mut BinaryHeap<Prio>, rf: &mut BinaryHeap<Prio>| {
+            let key = match priority {
+                Priority::Criticality => Reverse((cp.slack[v], cp.asap[v], v)),
+                Priority::Fifo => Reverse((cp.asap[v], v as u64, v)),
+            };
+            match ann.core[v] {
+                CoreType::Tensor => rt.push(key),
+                CoreType::Vector => rv.push(key),
+                CoreType::Fused => rf.push(key),
+            }
+        };
+
+    for v in 0..n {
+        if indeg[v] == 0 {
+            push_ready(v, &mut ready_t, &mut ready_v, &mut ready_f);
+        }
+    }
+
+    let mut now = 0u64;
+    let mut scheduled = 0usize;
+    loop {
+        // Scheduling pass at `now`: start the highest-priority runnable op
+        // across the three queues until nothing fits.
+        loop {
+            let head = |q: &BinaryHeap<Prio>| q.peek().map(|Reverse(k)| *k);
+            let cand_t = (free_tc > 0).then(|| head(&ready_t)).flatten();
+            let cand_v = (free_vc > 0).then(|| head(&ready_v)).flatten();
+            let cand_f = (free_tc > 0 && free_vc > 0).then(|| head(&ready_f)).flatten();
+            let best = [cand_t, cand_v, cand_f].into_iter().flatten().min();
+            let Some(key) = best else { break };
+            let v = key.2;
+            match ann.core[v] {
+                CoreType::Tensor => {
+                    ready_t.pop();
+                    free_tc -= 1;
+                }
+                CoreType::Vector => {
+                    ready_v.pop();
+                    free_vc -= 1;
+                }
+                CoreType::Fused => {
+                    ready_f.pop();
+                    free_tc -= 1;
+                    free_vc -= 1;
+                }
+            }
+            start[v] = now;
+            finish[v] = now + ann.cycles[v];
+            events.push(Reverse((finish[v], v)));
+            scheduled += 1;
+        }
+
+        let Some(Reverse((t, _))) = events.peek().copied() else { break };
+        now = t;
+        // Release every op finishing at `now` before the next pass.
+        while let Some(&Reverse((ft, v))) = events.peek() {
+            if ft != now {
+                break;
+            }
+            events.pop();
+            match ann.core[v] {
+                CoreType::Tensor => free_tc += 1,
+                CoreType::Vector => free_vc += 1,
+                CoreType::Fused => {
+                    free_tc += 1;
+                    free_vc += 1;
+                }
+            }
+            for &s in &g.succs[v] {
+                indeg[s] -= 1;
+                ready_at[s] = ready_at[s].max(now);
+                if indeg[s] == 0 {
+                    push_ready(s, &mut ready_t, &mut ready_v, &mut ready_f);
+                }
+            }
+        }
+    }
+    assert_eq!(scheduled, n, "scheduler dropped operators (cycle or starvation)");
+    let makespan = finish.iter().copied().max().unwrap_or(0);
+    Schedule { start, finish, ready_at, makespan }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::annotate::AnnotatedGraph;
+    use crate::cost::native::NativeCost;
+    use crate::cost::Dims;
+    use crate::graph::GraphBuilder;
+    use crate::sched::asap_alap;
+
+    const D: Dims = Dims { tc_x: 64, tc_y: 64, vc_w: 64 };
+
+    fn sched(g: &crate::graph::OperatorGraph, tc: u64, vc: u64) -> (Schedule, crate::sched::CriticalPath) {
+        let ann = AnnotatedGraph::new(g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        let s = greedy_schedule(&ann, &cp, CoreCount { tc, vc });
+        (s, cp)
+    }
+
+    #[test]
+    fn respects_dependencies() {
+        let g = crate::sched::fanout3();
+        let (s, _) = sched(&g, 2, 1);
+        for v in 0..g.len() {
+            for &p in &g.preds[v] {
+                assert!(s.start[v] >= s.finish[p], "op {v} started before pred {p} finished");
+            }
+        }
+    }
+
+    #[test]
+    fn respects_core_capacity() {
+        let g = crate::sched::fanout3();
+        for tc in 1..=3u64 {
+            let (s, _) = sched(&g, tc, 1);
+            // Sweep: concurrent tensor ops never exceed tc.
+            let mut ev: Vec<(u64, i64)> = Vec::new();
+            for v in 0..g.len() {
+                ev.push((s.start[v], 1));
+                ev.push((s.finish[v], -1));
+            }
+            ev.sort();
+            let mut cur = 0i64;
+            for (_, d) in ev {
+                cur += d;
+                assert!(cur <= tc as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn conflict_detected_with_one_core() {
+        let g = crate::sched::fanout3();
+        let (s1, cp) = sched(&g, 1, 1);
+        assert!(s1.first_critical_conflict(&cp).is_some());
+        let (s3, cp3) = sched(&g, 3, 1);
+        assert!(s3.first_critical_conflict(&cp3).is_none());
+        assert_eq!(s3.makespan, cp3.best_latency);
+    }
+
+    #[test]
+    fn more_cores_never_hurt_this_workload() {
+        let g = crate::sched::fanout3();
+        let (s1, _) = sched(&g, 1, 1);
+        let (s2, _) = sched(&g, 2, 1);
+        let (s3, _) = sched(&g, 3, 1);
+        assert!(s2.makespan <= s1.makespan);
+        assert!(s3.makespan <= s2.makespan);
+    }
+
+    #[test]
+    fn fused_op_needs_both_cores() {
+        let mut b = GraphBuilder::new();
+        // Two fused ops with no deps: with 1 TC/1 VC they serialize.
+        b.fwd("f1", crate::graph::OpKind::FusedGemmAct { m: 64, n: 64, k: 64 }, 0, &[]);
+        b.fwd("f2", crate::graph::OpKind::FusedGemmAct { m: 64, n: 64, k: 64 }, 0, &[]);
+        let g = b.finish();
+        let (s, _) = sched(&g, 1, 1);
+        assert!(s.start[1] >= s.finish[0] || s.start[0] >= s.finish[1]);
+        let (s2, _) = sched(&g, 2, 2);
+        assert_eq!(s2.start[0], s2.start[1]);
+    }
+
+    #[test]
+    fn vector_backfills_while_tensor_busy() {
+        let mut b = GraphBuilder::new();
+        let t1 = b.gemm("t1", 512, 512, 512, &[]);
+        let _t2 = b.gemm("t2", 64, 64, 64, &[t1]);
+        let _v = b.eltwise("v", 4096, 1, &[]);
+        let g = b.finish();
+        let (s, _) = sched(&g, 1, 1);
+        // The independent vector op runs at t=0 despite the busy TC.
+        assert_eq!(s.start[2], 0);
+    }
+
+    #[test]
+    fn critical_ops_win_ties() {
+        let mut b = GraphBuilder::new();
+        // Critical chain a->c; slack op b competes with a for the one TC.
+        let a = b.gemm("a", 256, 256, 256, &[]);
+        let _b2 = b.gemm("b", 64, 64, 64, &[]);
+        let _c = b.gemm("c", 256, 256, 256, &[a]);
+        let g = b.finish();
+        let (s, cp) = sched(&g, 1, 1);
+        assert_eq!(cp.slack[0], 0);
+        assert!(cp.slack[1] > 0);
+        assert_eq!(s.start[0], 0, "critical op scheduled first");
+    }
+}

@@ -1,0 +1,221 @@
+//! WHAM-Common (paper section 4.6): one architecture for a *set* of
+//! workloads. The pruner tracks a weighted average of the metric across
+//! workloads (equal weights in the evaluation).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::engine::SearchOptions;
+use super::ilp::ilp_search;
+use super::mcr::mcr;
+use super::pruner::prune_tree;
+use super::{dims, DesignPoint, TopK};
+use crate::arch::{ArchConfig, DIM_MAX};
+use crate::cost::annotate::AnnotatedGraph;
+use crate::cost::{CostBackend, Dims};
+use crate::graph::OperatorGraph;
+use crate::metrics::evaluate;
+
+/// One workload in the common search.
+pub struct Workload<'g> {
+    pub name: String,
+    pub graph: &'g OperatorGraph,
+    pub batch: u64,
+    /// Per-workload throughput floor (PerfPerTdp metric).
+    pub min_throughput: f64,
+    /// Weight in the average (1.0 in the paper's evaluation).
+    pub weight: f64,
+}
+
+/// Result of the common search.
+#[derive(Debug, Clone)]
+pub struct CommonResult {
+    /// Best common config and its weighted score.
+    pub best: (ArchConfig, f64),
+    /// Per-workload design points of the best config (same config,
+    /// per-workload core counts folded to the max — see notes).
+    pub per_workload: Vec<DesignPoint>,
+    /// Top-k common configs.
+    pub top: TopK,
+    pub dims_evaluated: usize,
+    pub wall: std::time::Duration,
+}
+
+/// Search one architecture serving every workload: for each candidate
+/// dimension, each workload runs MCR independently; the common core count
+/// is the max across workloads (the design must host the most demanding
+/// graph), scores are re-evaluated at that count and weight-averaged.
+pub fn search_common(
+    workloads: &[Workload<'_>],
+    opts: SearchOptions,
+    backend: &mut dyn CostBackend,
+) -> CommonResult {
+    assert!(!workloads.is_empty());
+    let t0 = Instant::now();
+    let mut cache: HashMap<Dims, (f64, ArchConfig, Vec<DesignPoint>)> = HashMap::new();
+    let mut top = TopK::new(opts.top_k);
+    let mut count = 0usize;
+
+    let mut eval_dims = |d: Dims, count: &mut usize| -> f64 {
+        if let Some((s, _, _)) = cache.get(&d) {
+            return *s;
+        }
+        *count += 1;
+        // Per-workload MCR at these dims: collect every core-count the
+        // trajectories visit — the common design's best count is often
+        // below the union max (especially under Perf/TDP).
+        let mut candidates: std::collections::BTreeSet<(u64, u64)> = std::collections::BTreeSet::new();
+        let mut anns = Vec::with_capacity(workloads.len());
+        for w in workloads {
+            let ann = AnnotatedGraph::new(w.graph, d, backend);
+            if opts.use_ilp {
+                let o = ilp_search(&ann, &opts.constraints, opts.ilp_node_budget);
+                candidates.insert((o.cores.tc, o.cores.vc));
+            } else {
+                for (c, _) in mcr(&ann, &opts.constraints).trajectory {
+                    candidates.insert((c.tc, c.vc));
+                }
+            }
+            anns.push(ann);
+        }
+        // Union max is also a candidate (hosts the most demanding graph).
+        let max_tc = candidates.iter().map(|&(t, _)| t).max().unwrap_or(1);
+        let max_vc = candidates.iter().map(|&(_, v)| v).max().unwrap_or(1);
+        candidates.insert((max_tc, max_vc));
+
+        // Pick the candidate core count maximizing the weighted score.
+        let mut best: Option<(f64, ArchConfig, Vec<DesignPoint>)> = None;
+        for &(tc, vc) in &candidates {
+            let config = ArchConfig { num_tc: tc, tc_x: d.tc_x, tc_y: d.tc_y, num_vc: vc, vc_w: d.vc_w };
+            if !opts.constraints.allows(&config) {
+                continue;
+            }
+            let mut weighted = 0.0;
+            let mut wsum = 0.0;
+            let mut points = Vec::with_capacity(workloads.len());
+            for (w, ann) in workloads.iter().zip(&anns) {
+                let cp = crate::sched::asap_alap(ann);
+                let sched = crate::sched::greedy_schedule(
+                    ann,
+                    &cp,
+                    crate::sched::CoreCount { tc, vc },
+                );
+                let eval = evaluate(&config, sched.makespan, w.batch, ann.total_energy_pj());
+                let score = opts.metric.score(&eval, w.min_throughput);
+                // Normalize throughput-like scores so heavy and light
+                // workloads weigh comparably (relative to the per-workload
+                // floor when present, else raw).
+                let norm = if w.min_throughput > 0.0 { score / w.min_throughput } else { score };
+                weighted += w.weight * norm;
+                wsum += w.weight;
+                points.push(DesignPoint { config, eval, score });
+            }
+            let s = weighted / wsum;
+            if best.as_ref().map_or(true, |(bs, _, _)| s > *bs) {
+                best = Some((s, config, points));
+            }
+        }
+        let (s, config, points) =
+            best.expect("at least <1,1> fits the default constraints");
+        cache.insert(d, (s, config, points));
+        s
+    };
+
+    let p1 = prune_tree(
+        vec![(DIM_MAX, DIM_MAX)],
+        |n| dims::tc_children(*n),
+        |&(x, y)| eval_dims(Dims { tc_x: x, tc_y: y, vc_w: DIM_MAX }, &mut count),
+        opts.hysteresis,
+    );
+    let (bx, by) = p1.best.expect("root evaluated").0;
+    let _p2 = prune_tree(
+        vec![DIM_MAX],
+        |&w| dims::vc_children(w),
+        |&w| eval_dims(Dims { tc_x: bx, tc_y: by, vc_w: w }, &mut count),
+        opts.hysteresis,
+    );
+
+    // Collect the best and top-k from the cache.
+    let mut entries: Vec<(&Dims, &(f64, ArchConfig, Vec<DesignPoint>))> = cache.iter().collect();
+    entries.sort_by(|a, b| b.1 .0.total_cmp(&a.1 .0));
+    for (_, (s, cfg, pts)) in entries.iter().take(opts.top_k) {
+        // Represent the common config in the TopK by its weighted score
+        // using the first workload's evaluation as the carrier.
+        if let Some(p0) = pts.first() {
+            top.offer(DesignPoint { config: *cfg, eval: p0.eval, score: *s });
+        }
+    }
+    let (best_score, best_cfg, best_points) = entries[0].1.clone();
+    CommonResult {
+        best: (best_cfg, best_score),
+        per_workload: best_points,
+        top,
+        dims_evaluated: count,
+        wall: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::native::NativeCost;
+    use crate::graph::autodiff::{training_graph, Optimizer};
+
+    fn graphs() -> Vec<crate::graph::OperatorGraph> {
+        let b1 = crate::models::transformer::forward_range(&crate::models::transformer::bert_base(), 0, 1);
+        let mut small = crate::graph::GraphBuilder::new();
+        let a = small.gemm("a", 128, 128, 128, &[]);
+        let _ = small.eltwise("r", 128 * 128, 1, &[a]);
+        vec![
+            training_graph(&b1, Optimizer::SgdMomentum),
+            training_graph(&small.finish(), Optimizer::SgdMomentum),
+        ]
+    }
+
+    #[test]
+    fn common_design_serves_all_workloads() {
+        let gs = graphs();
+        let ws: Vec<Workload> = gs
+            .iter()
+            .enumerate()
+            .map(|(i, g)| Workload {
+                name: format!("w{i}"),
+                graph: g,
+                batch: 4,
+                min_throughput: 0.0,
+                weight: 1.0,
+            })
+            .collect();
+        let r = search_common(&ws, SearchOptions::default(), &mut NativeCost);
+        assert!(r.best.0.in_template());
+        assert_eq!(r.per_workload.len(), 2);
+        assert!(r.dims_evaluated >= 3);
+        // Single shared config across workloads.
+        assert!(r.per_workload.iter().all(|p| p.config == r.best.0));
+    }
+
+    #[test]
+    fn weights_shift_the_winner() {
+        // With all weight on the tiny workload the common design should
+        // score at least as well for it as the balanced design does.
+        let gs = graphs();
+        let mk = |w0: f64, w1: f64, gs: &[crate::graph::OperatorGraph]| {
+            let ws: Vec<Workload> = gs
+                .iter()
+                .enumerate()
+                .map(|(i, g)| Workload {
+                    name: format!("w{i}"),
+                    graph: g,
+                    batch: 4,
+                    min_throughput: 0.0,
+                    weight: if i == 0 { w0 } else { w1 },
+                })
+                .collect();
+            search_common(&ws, SearchOptions::default(), &mut NativeCost)
+        };
+        let balanced = mk(1.0, 1.0, &gs);
+        let skewed = mk(0.01, 1.0, &gs);
+        let small_score = |r: &CommonResult| r.per_workload[1].score;
+        assert!(small_score(&skewed) >= small_score(&balanced) * 0.99);
+    }
+}

@@ -1,0 +1,89 @@
+//! Core-dimension generator (paper section 4.1): candidate
+//! `<TC-Dim, VC-Width>` values, largest-first in powers of two
+//! ("to accommodate common tensor shapes"; any step size is supported
+//! through [`ladder_with_step`]).
+
+use crate::arch::{DIM_MAX, DIM_MIN};
+
+/// Power-of-two ladder from `DIM_MAX` down to `DIM_MIN`: 256, 128, ..., 4.
+pub fn ladder() -> Vec<u64> {
+    ladder_with_step(2)
+}
+
+/// Dimension ladder with a custom divisor step (>= 2).
+pub fn ladder_with_step(step: u64) -> Vec<u64> {
+    assert!(step >= 2);
+    let mut v = Vec::new();
+    let mut d = DIM_MAX;
+    while d >= DIM_MIN {
+        v.push(d);
+        d /= step;
+    }
+    v
+}
+
+/// All `(tc_x, tc_y)` pairs on the ladder, largest area first — the
+/// unpruned tensor-core dimension space Algorithm 2 walks.
+pub fn tc_dim_space() -> Vec<(u64, u64)> {
+    let l = ladder();
+    let mut v: Vec<(u64, u64)> = l.iter().flat_map(|&x| l.iter().map(move |&y| (x, y))).collect();
+    v.sort_by_key(|&(x, y)| std::cmp::Reverse(x * y));
+    v
+}
+
+/// Children of a tensor-core dimension in the pruner's tree (Figure 6):
+/// halve one side at a time, skipping out-of-range results.
+pub fn tc_children((x, y): (u64, u64)) -> Vec<(u64, u64)> {
+    let mut out = Vec::with_capacity(2);
+    if x / 2 >= DIM_MIN {
+        out.push((x / 2, y));
+    }
+    if y / 2 >= DIM_MIN {
+        out.push((x, y / 2));
+    }
+    out
+}
+
+/// Children of a vector-core width (1-D chain).
+pub fn vc_children(w: u64) -> Vec<u64> {
+    if w / 2 >= DIM_MIN {
+        vec![w / 2]
+    } else {
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_powers_of_two() {
+        assert_eq!(ladder(), vec![256, 128, 64, 32, 16, 8, 4]);
+    }
+
+    #[test]
+    fn custom_step() {
+        assert_eq!(ladder_with_step(4), vec![256, 64, 16, 4]);
+    }
+
+    #[test]
+    fn space_starts_at_largest() {
+        let s = tc_dim_space();
+        assert_eq!(s[0], (256, 256));
+        assert_eq!(s.len(), 49);
+    }
+
+    #[test]
+    fn children_halve_each_side() {
+        assert_eq!(tc_children((256, 256)), vec![(128, 256), (256, 128)]);
+        assert_eq!(tc_children((4, 8)), vec![(4, 4)]);
+        assert!(tc_children((4, 4)).is_empty());
+    }
+
+    #[test]
+    fn vc_chain_terminates() {
+        assert_eq!(vc_children(8), vec![4]);
+        assert!(vc_children(4).is_empty());
+    }
+}

@@ -1,0 +1,109 @@
+//! WHAM's accelerator search (paper section 4, Figure 4).
+//!
+//! * [`dims`] — core-dimension generator (module 1 of Figure 4);
+//! * [`mcr`] — Mirror Conflict Resolution heuristics (Algorithm 1);
+//! * [`ilp`] — exact branch-and-bound core-count + schedule co-optimizer
+//!   (the Gurobi-ILP substitution, same optimality-within-time-budget
+//!   contract — section 4.4);
+//! * [`pruner`] — architecture configuration pruner (Algorithm 2);
+//! * [`engine`] — ties everything into per-workload search with top-k;
+//! * [`common`] — WHAM-common multi-workload search (section 4.6);
+//! * [`space`] — search-space accounting for Table 3.
+
+pub mod common;
+pub mod dims;
+pub mod engine;
+pub mod ilp;
+pub mod mcr;
+pub mod pruner;
+pub mod space;
+
+use crate::arch::ArchConfig;
+use crate::metrics::Evaluation;
+
+/// One fully-evaluated design point.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignPoint {
+    pub config: ArchConfig,
+    pub eval: Evaluation,
+    /// Metric score, higher is better.
+    pub score: f64,
+}
+
+/// Keep the best-k design points (descending score).
+#[derive(Debug, Clone, Default)]
+pub struct TopK {
+    k: usize,
+    points: Vec<DesignPoint>,
+}
+
+impl TopK {
+    /// Track up to `k` points.
+    pub fn new(k: usize) -> Self {
+        Self { k, points: Vec::new() }
+    }
+
+    /// Offer a point; keeps the list sorted, deduplicated by config.
+    pub fn offer(&mut self, p: DesignPoint) {
+        if let Some(existing) = self.points.iter_mut().find(|e| e.config == p.config) {
+            if p.score > existing.score {
+                *existing = p;
+            }
+        } else {
+            self.points.push(p);
+        }
+        self.points.sort_by(|a, b| b.score.total_cmp(&a.score));
+        self.points.truncate(self.k);
+    }
+
+    /// Best point, if any.
+    pub fn best(&self) -> Option<&DesignPoint> {
+        self.points.first()
+    }
+
+    /// All retained points, best first.
+    pub fn points(&self) -> &[DesignPoint] {
+        &self.points
+    }
+
+    /// Number retained.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True if nothing retained yet.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    fn dp(score: f64, cfg: ArchConfig) -> DesignPoint {
+        let eval = crate::metrics::evaluate(&cfg, 1_000_000, 1, 1.0);
+        DesignPoint { config: cfg, eval, score }
+    }
+
+    #[test]
+    fn topk_keeps_best_sorted() {
+        let mut t = TopK::new(2);
+        t.offer(dp(1.0, presets::tpuv2()));
+        t.offer(dp(3.0, presets::nvdla_scaled()));
+        t.offer(dp(2.0, presets::tpuv3()));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.best().unwrap().score, 3.0);
+        assert_eq!(t.points()[1].score, 2.0);
+    }
+
+    #[test]
+    fn topk_dedupes_by_config() {
+        let mut t = TopK::new(4);
+        t.offer(dp(1.0, presets::tpuv2()));
+        t.offer(dp(5.0, presets::tpuv2()));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.best().unwrap().score, 5.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Architecture configuration pruner — paper Algorithm 2 / Figure 6.
+//!
+//! The dimension space is a tree: the largest dimension at the root,
+//! children reduced by the step size. Breadth-first exploration prunes an
+//! entire subtree when its children fail to beat the best-so-far; a
+//! hysteresis allowance keeps exploring a few levels below a
+//! locally-worse child to escape local minima before pruning.
+//!
+//! The tree node type is generic so the same pruner drives tensor-core
+//! dimensions (2-D halving), vector widths (1-D), and the global
+//! distributed search's area-ordered config tree (section 5.1).
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
+
+/// Exploration result over one pruned tree.
+#[derive(Debug, Clone)]
+pub struct PruneOutcome<N> {
+    /// Best node found and its score (higher is better).
+    pub best: Option<(N, f64)>,
+    /// Every node evaluated, in exploration order.
+    pub explored: Vec<(N, f64)>,
+    /// Nodes pruned without evaluation (subtree cuts), for Table 3.
+    pub pruned_estimate: usize,
+}
+
+/// Breadth-first prune (Algorithm 2).
+///
+/// * `roots` — the starting (largest) configuration(s);
+/// * `children(n)` — next-level configurations derived from `n`;
+/// * `score(n)` — the training metric, higher is better (the paper
+///   minimizes runtime; callers pass e.g. negative makespan or
+///   throughput);
+/// * `hysteresis` — extra levels explored when all children of a node
+///   are worse than the node itself.
+pub fn prune_tree<N, FC, FS>(
+    roots: Vec<N>,
+    mut children: FC,
+    mut score: FS,
+    hysteresis: u32,
+) -> PruneOutcome<N>
+where
+    N: Clone + Eq + Hash,
+    FC: FnMut(&N) -> Vec<N>,
+    FS: FnMut(&N) -> f64,
+{
+    let mut seen: HashMap<N, f64> = HashMap::new();
+    let mut explored: Vec<(N, f64)> = Vec::new();
+    let mut best: Option<(N, f64)> = None;
+    let mut pruned_estimate = 0usize;
+
+    // Queue entries carry the hysteresis budget left on their branch.
+    let mut queue: VecDeque<(N, u32)> = VecDeque::new();
+    let mut eval = |n: &N,
+                    seen: &mut HashMap<N, f64>,
+                    explored: &mut Vec<(N, f64)>,
+                    best: &mut Option<(N, f64)>|
+     -> f64 {
+        if let Some(&s) = seen.get(n) {
+            return s;
+        }
+        let s = score(n);
+        seen.insert(n.clone(), s);
+        explored.push((n.clone(), s));
+        if best.as_ref().map_or(true, |(_, bs)| s > *bs) {
+            *best = Some((n.clone(), s));
+        }
+        s
+    };
+
+    for r in roots {
+        let _ = eval(&r, &mut seen, &mut explored, &mut best);
+        queue.push_back((r, hysteresis));
+    }
+
+    while let Some((node, hys_left)) = queue.pop_front() {
+        let parent_score = seen[&node];
+        let kids = children(&node);
+        if kids.is_empty() {
+            continue;
+        }
+        let mut any_better = false;
+        let mut fresh: Vec<(N, f64)> = Vec::new();
+        for k in kids {
+            if seen.contains_key(&k) {
+                continue; // duplicate dimension reached via another path
+            }
+            let s = eval(&k, &mut seen, &mut explored, &mut best);
+            fresh.push((k, s));
+            if s > parent_score {
+                any_better = true;
+            }
+        }
+        if any_better {
+            // GetBetterConfigs: only the improving children continue with
+            // a refreshed hysteresis budget; the worse siblings' subtrees
+            // are pruned.
+            for (k, s) in fresh {
+                if s > parent_score {
+                    queue.push_back((k, hysteresis));
+                } else {
+                    pruned_estimate += subtree_size_estimate(&k, &mut children);
+                }
+            }
+        } else if hys_left > 0 {
+            // All children worse: keep digging for `hysteresis` levels.
+            for (k, _) in fresh {
+                queue.push_back((k, hys_left - 1));
+            }
+        } else {
+            for (k, _) in fresh {
+                pruned_estimate += subtree_size_estimate(&k, &mut children);
+            }
+        }
+    }
+
+    PruneOutcome { best, explored, pruned_estimate }
+}
+
+/// Count the nodes a pruned subtree would have contained (bounded walk —
+/// used only for Table 3's reporting, not on the search path).
+fn subtree_size_estimate<N: Clone + Eq + Hash>(root: &N, children: &mut impl FnMut(&N) -> Vec<N>) -> usize {
+    let mut seen = std::collections::HashSet::new();
+    let mut stack = vec![root.clone()];
+    let mut count = 0usize;
+    while let Some(n) = stack.pop() {
+        if !seen.insert(n.clone()) || count > 10_000 {
+            continue;
+        }
+        count += 1;
+        stack.extend(children(&n));
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::dims;
+
+    /// Score favoring a specific dimension pair — unimodal on the tree.
+    fn peaked(target: (u64, u64)) -> impl FnMut(&(u64, u64)) -> f64 {
+        move |&(x, y)| {
+            let d = |a: u64, b: u64| (a as f64).log2() - (b as f64).log2();
+            -(d(x, target.0).abs() + d(y, target.1).abs())
+        }
+    }
+
+    #[test]
+    fn finds_peak_on_unimodal_landscape() {
+        let out = prune_tree(vec![(256u64, 256u64)], |n| dims::tc_children(*n), peaked((64, 32)), 1);
+        assert_eq!(out.best.unwrap().0, (64, 32));
+    }
+
+    #[test]
+    fn prunes_most_of_space_when_root_is_best() {
+        let out = prune_tree(
+            vec![(256u64, 256u64)],
+            |n| dims::tc_children(*n),
+            |&(x, y)| (x * y) as f64, // bigger is always better
+            1,
+        );
+        assert_eq!(out.best.unwrap().0, (256, 256));
+        // 49-point space: with hysteresis 1 we explore root + 2 children
+        // + grandchildren, far fewer than the full space.
+        assert!(out.explored.len() < 20, "explored {}", out.explored.len());
+        assert!(out.pruned_estimate > 0);
+    }
+
+    #[test]
+    fn hysteresis_escapes_local_minimum() {
+        // Score dips at level 2 then rises at level 3: hysteresis 0 stops
+        // early, hysteresis 2 finds the deep optimum.
+        let score = |&(x, y): &(u64, u64)| match (x, y) {
+            (256, 256) => 10.0,
+            (64, 64) => 50.0,
+            _ => 1.0,
+        };
+        let shallow = prune_tree(vec![(256u64, 256u64)], |n| dims::tc_children(*n), score, 0);
+        let deep = prune_tree(vec![(256u64, 256u64)], |n| dims::tc_children(*n), score, 3);
+        assert_eq!(shallow.best.unwrap().1, 10.0);
+        assert_eq!(deep.best.unwrap().0, (64, 64));
+    }
+
+    #[test]
+    fn never_evaluates_duplicates() {
+        let mut calls = 0usize;
+        let _ = prune_tree(
+            vec![(256u64, 256u64)],
+            |n| dims::tc_children(*n),
+            |_| {
+                calls += 1;
+                1.0 // flat landscape with hysteresis floods everything once
+            },
+            10,
+        );
+        assert!(calls <= dims::tc_dim_space().len());
+    }
+
+    #[test]
+    fn one_dimensional_chain_prunes() {
+        let out = prune_tree(
+            vec![256u64],
+            |&w| dims::vc_children(w),
+            |&w| if w == 32 { 5.0 } else { 1.0 },
+            2,
+        );
+        assert_eq!(out.best.unwrap().0, 32);
+    }
+}

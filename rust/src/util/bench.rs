@@ -1,0 +1,88 @@
+//! Wall-clock bench harness (the offline cache has no `criterion`).
+//!
+//! Each `benches/*.rs` target is `harness = false` and drives this:
+//! warmup, N timed iterations, median/mean/min report, plus free-form
+//! "series" rows so every bench can print the table/figure data it
+//! regenerates in the paper's own shape.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmarked closure.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} iters={:<3} mean={:>12?} median={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.median, self.min
+        )
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let sum: Duration = samples.iter().sum();
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean: sum / iters as u32,
+        median: samples[iters / 2],
+        min: samples[0],
+        max: samples[iters - 1],
+    }
+}
+
+/// Convenience: time a single run of `f`, returning its value + duration.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+/// Standard bench-output banner so all figure benches look alike.
+pub fn banner(id: &str, what: &str) {
+    println!("================================================================");
+    println!("{id}: {what}");
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let s = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,148 @@
+//! Minimal CLI argument parser (the offline cache has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and an unknown-flag check.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Error produced by typed getters.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv0).
+    /// `value_keys` lists the `--key`s that consume a following value;
+    /// everything else starting with `--` is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, value_keys: &[&str]) -> Result<Self, CliError> {
+        let mut out = Self::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if value_keys.contains(&body) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{body} expects a value")))?;
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(value_keys: &[&str]) -> Result<Self, CliError> {
+        Self::parse(std::env::args().skip(1), value_keys)
+    }
+
+    /// Positional argument by index.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(String::as_str)
+    }
+
+    /// All positional arguments.
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Typed getter for anything `FromStr`.
+    pub fn get_as<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{key}: cannot parse {s:?}"))),
+        }
+    }
+
+    /// Typed getter with default.
+    pub fn get_as_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError> {
+        Ok(self.get_as(key)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|s| s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], keys: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), keys).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = parse(&["search", "--model", "bert-base", "--ilp", "--k=10"], &["model"]);
+        assert_eq!(a.pos(0), Some("search"));
+        assert_eq!(a.get("model"), Some("bert-base"));
+        assert!(a.flag("ilp"));
+        assert_eq!(a.get_as::<usize>("k").unwrap(), Some(10));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(["--model".to_string()], &["model"]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn typed_parse_error() {
+        let a = parse(&["--k=abc"], &[]);
+        assert!(a.get_as::<usize>("k").is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--models=bert-base, vgg16,,resnet18"], &[]);
+        assert_eq!(a.get_list("models"), vec!["bert-base", "vgg16", "resnet18"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_or("metric", "throughput"), "throughput");
+        assert_eq!(a.get_as_or("depth", 32usize).unwrap(), 32);
+    }
+}

@@ -1,0 +1,95 @@
+//! Supporting substrates built in-repo because the offline crate cache
+//! carries only the `xla` dependency closure: a seeded RNG ([`rng`]),
+//! ASCII table rendering ([`table`]), a minimal CLI argument parser
+//! ([`cli`]), a wall-clock bench harness ([`mod@bench`]), and a tiny
+//! property-testing helper ([`prop`]).
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+/// Integer ceiling division. The cost model and schedulers use this in
+/// many places; keep it `u64` so GEMM tile products cannot overflow.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a / b + u64::from(a % b != 0)
+}
+
+/// Round `v` up to the next multiple of `m`.
+#[inline]
+pub fn round_up(v: u64, m: u64) -> u64 {
+    ceil_div(v, m) * m
+}
+
+/// Format a byte count with binary units.
+pub fn human_bytes(b: u64) -> String {
+    const U: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i + 1 < U.len() {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", U[i])
+    }
+}
+
+/// Format a count in engineering notation (1.2 K, 3.4 M, ...).
+pub fn human_count(c: f64) -> String {
+    let a = c.abs();
+    if a >= 1e12 {
+        format!("{:.2} T", c / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2} G", c / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2} M", c / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2} K", c / 1e3)
+    } else {
+        format!("{c:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        // u64::MAX - 3 = 2^64 - 4 divides 4 exactly; no overflow either.
+        assert_eq!(ceil_div(u64::MAX - 3, 4), (u64::MAX - 3) / 4);
+        assert_eq!(ceil_div(u64::MAX, 2), u64::MAX / 2 + 1);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(16 * 1024 * 1024 * 1024), "16.00 GiB");
+    }
+
+    #[test]
+    fn human_count_units() {
+        assert_eq!(human_count(999.0), "999.00");
+        assert_eq!(human_count(1.5e6), "1.50 M");
+        assert_eq!(human_count(2.0e13), "20.00 T");
+    }
+}

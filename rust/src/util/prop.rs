@@ -1,0 +1,99 @@
+//! Tiny property-testing harness (the offline cache has no `proptest`).
+//!
+//! `forall(seed, cases, gen, check)` draws `cases` random inputs from
+//! `gen` and asserts `check`. On failure it retries with progressively
+//! "smaller" regenerated inputs (size-bounded generation rather than
+//! structural shrinking) and reports the smallest failing case's seed so
+//! the failure is replayable.
+
+use super::rng::Rng;
+
+/// Generation context handed to generators; `size` shrinks on failure.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Integer in `[lo, hi]` biased by the current size bound.
+    pub fn int_sized(&mut self, lo: i64, hi: i64) -> i64 {
+        let span = (hi - lo).min(self.size as i64).max(0);
+        self.rng.range(lo, lo + span)
+    }
+
+    /// Length for a collection: `[0, size]` capped at `max`.
+    pub fn len(&mut self, max: usize) -> usize {
+        self.rng.below(self.size.min(max) + 1)
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics (test failure) with
+/// the replay seed and case description on the smallest failure found.
+pub fn forall<T, G, C>(seed: u64, cases: usize, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let mut failure: Option<(u64, usize, T, String)> = None;
+    'outer: for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let mut g = Gen { rng: &mut rng, size: 2 + case % 64 };
+        let input = gen(&mut g);
+        if let Err(msg) = check(&input) {
+            // Try to find a smaller failing input by regenerating at
+            // decreasing sizes from derived seeds.
+            for shrink in 0..200u64 {
+                let s2 = case_seed.wrapping_add(shrink.wrapping_mul(0x5851_F42D_4C95_7F2D));
+                let mut rng2 = Rng::new(s2);
+                let mut g2 = Gen { rng: &mut rng2, size: 1 + (shrink % 8) as usize };
+                let small = gen(&mut g2);
+                if let Err(m2) = check(&small) {
+                    failure = Some((s2, case, small, m2));
+                    break 'outer;
+                }
+            }
+            failure = Some((case_seed, case, input, msg));
+            break 'outer;
+        }
+    }
+    if let Some((s, case, input, msg)) = failure {
+        panic!("property failed (case {case}, replay seed {s:#x}):\n  input: {input:?}\n  {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            1,
+            200,
+            |g| g.int_sized(0, 100),
+            |&x| if x >= 0 { Ok(()) } else { Err("negative".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            2,
+            200,
+            |g| g.int_sized(0, 100),
+            |&x| if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) },
+        );
+    }
+
+    #[test]
+    fn gen_len_respects_max() {
+        let mut rng = Rng::new(3);
+        let mut g = Gen { rng: &mut rng, size: 100 };
+        for _ in 0..100 {
+            assert!(g.len(10) <= 10);
+        }
+    }
+}

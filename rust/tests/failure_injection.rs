@@ -1,0 +1,107 @@
+//! Failure-injection tests: the system must fail loudly and informatively
+//! on corrupted artifacts, bad inputs, and impossible constraints —
+//! never silently produce wrong results.
+
+use std::io::Write;
+
+use wham::arch::{ArchConfig, Constraints};
+use wham::cost::annotate::AnnotatedGraph;
+use wham::cost::native::NativeCost;
+use wham::cost::Dims;
+use wham::graph::autodiff::Optimizer;
+use wham::runtime::pjrt::CostModelRuntime;
+use wham::search::mcr::mcr;
+
+#[test]
+fn corrupted_hlo_artifact_is_rejected() {
+    let dir = std::env::temp_dir().join(format!("wham-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut f = std::fs::File::create(dir.join("cost_model.hlo.txt")).unwrap();
+    writeln!(f, "HloModule garbage {{ this is not hlo }}").unwrap();
+    std::fs::write(dir.join("cost_model.meta"), "n_ops=4096\n").unwrap();
+    let err = CostModelRuntime::load(&dir);
+    assert!(err.is_err(), "corrupted HLO must fail to parse/compile");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_artifact_reports_make_hint() {
+    let dir = std::env::temp_dir().join(format!("wham-empty-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = CostModelRuntime::load(&dir).unwrap_err();
+    assert!(format!("{err}").contains("make artifacts"), "error must tell the user what to run");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_meta_n_ops_is_rejected() {
+    // Copy the real HLO (if present) but lie about n_ops.
+    let Some(real) = wham::runtime::artifacts_dir() else { return };
+    let dir = std::env::temp_dir().join(format!("wham-stale-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::copy(real.join("cost_model.hlo.txt"), dir.join("cost_model.hlo.txt")).unwrap();
+    std::fs::write(dir.join("cost_model.meta"), "n_ops=1234\n").unwrap();
+    let err = CostModelRuntime::load(&dir).unwrap_err();
+    assert!(format!("{err}").contains("rebuild artifacts"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_model_is_a_clean_none() {
+    assert!(wham::models::forward("resnet-9000").is_none());
+    assert!(wham::models::training("resnet-9000", Optimizer::Adam).is_none());
+}
+
+#[test]
+fn impossible_constraints_still_return_a_design() {
+    // Constraints tighter than even the smallest config: MCR must stop at
+    // <1, 1> rather than crash or loop.
+    let g = wham::models::training("resnet18", Optimizer::SgdMomentum).unwrap();
+    let ann = AnnotatedGraph::new(&g, Dims { tc_x: 4, tc_y: 4, vc_w: 4 }, &mut NativeCost);
+    let impossible = Constraints { max_area_mm2: 0.001, max_power_w: 0.001 };
+    let out = mcr(&ann, &impossible);
+    assert_eq!((out.cores.tc, out.cores.vc), (1, 1));
+}
+
+#[test]
+#[should_panic(expected = "cycle")]
+fn cyclic_graph_panics_in_topo_order() {
+    let mut b = wham::graph::GraphBuilder::new();
+    let a = b.gemm("a", 8, 8, 8, &[]);
+    let c = b.gemm("c", 8, 8, 8, &[a]);
+    let mut g = b.finish();
+    g.succs[c].push(a);
+    g.preds[a].push(c);
+    let _ = g.topo_order();
+}
+
+#[test]
+fn zero_dim_ops_fail_validation() {
+    let mut b = wham::graph::GraphBuilder::new();
+    b.gemm("bad", 1, 1, 0, &[]);
+    assert!(wham::graph::validate::validate(&b.finish()).is_err());
+}
+
+#[test]
+fn oversized_dims_fail_validation() {
+    let mut b = wham::graph::GraphBuilder::new();
+    b.eltwise("huge", (i32::MAX as u64) + 10, 1, &[]);
+    assert!(
+        wham::graph::validate::validate(&b.finish()).is_err(),
+        "dims beyond the i32 cost-model contract must be rejected"
+    );
+}
+
+#[test]
+fn out_of_template_config_is_flagged() {
+    let c = ArchConfig { num_tc: 0, tc_x: 128, tc_y: 128, num_vc: 1, vc_w: 128 };
+    assert!(!c.in_template());
+}
+
+#[test]
+fn cli_rejects_bad_values() {
+    use wham::util::cli::Args;
+    let a = Args::parse(["--k=notanumber".to_string()], &[]).unwrap();
+    assert!(a.get_as::<usize>("k").is_err());
+    assert!(Args::parse(["--model".to_string()], &["model"]).is_err());
+}

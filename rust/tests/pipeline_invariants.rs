@@ -1,0 +1,119 @@
+//! Integration tests over the distributed substrate: partition coverage,
+//! HBM footprints, pipeline-simulation bounds, and global-search family
+//! orderings.
+
+use wham::arch::presets;
+use wham::cost::native::NativeCost;
+use wham::distributed::global_search::{global_search, GlobalOptions};
+use wham::distributed::network::Network;
+use wham::distributed::partition::partition_transformer;
+use wham::distributed::pipeline::simulate;
+use wham::distributed::Scheme;
+use wham::graph::autodiff::Optimizer;
+
+#[test]
+fn all_llms_partition_at_their_paper_depths() {
+    for (name, depth, tmp) in [("opt-1.3b", 32u64, 1u64), ("gpt2-xl", 32, 1), ("gpt3", 8, 8)] {
+        let cfg = wham::models::transformer_cfg(name).unwrap();
+        let p = partition_transformer(name, &cfg, depth, tmp, Optimizer::Adam);
+        // Depth clamps to layer count (OPT-1.3B: 24 layers).
+        assert_eq!(p.stages.len() as u64, depth.min(cfg.layers), "{name}");
+        assert_eq!(p.stages[0].layers.0, 0);
+        assert_eq!(p.stages.last().unwrap().layers.1, cfg.layers);
+        let covered: u64 = p.stages.iter().map(|s| s.layers.1 - s.layers.0).sum();
+        assert_eq!(covered, cfg.layers, "{name}: layers covered exactly once");
+    }
+}
+
+#[test]
+fn gpipe_stash_exceeds_1f1b_stash() {
+    let cfg = wham::models::transformer_cfg("gpt2-xl").unwrap();
+    let p = partition_transformer("gpt2-xl", &cfg, 16, 1, Optimizer::Adam);
+    for s in &p.stages {
+        let gp = s.footprint_bytes(Scheme::GPipe, p.num_micro, 16);
+        let pd = s.footprint_bytes(Scheme::PipeDream1F1B, p.num_micro, 16);
+        assert!(gp >= pd, "stage {}: GPipe stash must dominate 1F1B", s.index);
+    }
+}
+
+#[test]
+fn pipeline_time_bounded_by_bottleneck_and_serial() {
+    let mut cfg = wham::models::transformer_cfg("gpt2-xl").unwrap();
+    cfg.layers = 8;
+    let p = partition_transformer("mini", &cfg, 4, 1, Optimizer::Adam);
+    let cfgs = vec![presets::tpuv2(); 4];
+    let net = Network::default();
+    let mut nc = NativeCost;
+    for scheme in [Scheme::GPipe, Scheme::PipeDream1F1B] {
+        let e = simulate(&p, &cfgs, scheme, &net, &mut nc);
+        let bt = e.stage_times.iter().map(|t| t.fwd_s + t.bwd_s).fold(0.0, f64::max);
+        let serial: f64 =
+            e.stage_times.iter().map(|t| (t.fwd_s + t.bwd_s) * p.num_micro as f64).sum();
+        assert!(e.iter_seconds >= bt * p.num_micro as f64 * 0.99, "{scheme:?}: below bottleneck bound");
+        assert!(e.iter_seconds <= serial * 1.5, "{scheme:?}: worse than serial");
+    }
+}
+
+#[test]
+fn deeper_pipelines_do_not_reduce_per_device_throughput_density() {
+    // More stages -> smaller stages -> iteration time must not grow.
+    let mut cfg = wham::models::transformer_cfg("gpt2-xl").unwrap();
+    cfg.layers = 16;
+    let net = Network::default();
+    let mut nc = NativeCost;
+    let time_at = |stages: u64, nc: &mut NativeCost| {
+        let p = partition_transformer("x", &cfg, stages, 1, Optimizer::Adam);
+        let cfgs = vec![presets::tpuv2(); p.stages.len()];
+        simulate(&p, &cfgs, Scheme::GPipe, &net, nc).iter_seconds
+    };
+    let t4 = time_at(4, &mut nc);
+    let t8 = time_at(8, &mut nc);
+    assert!(t8 <= t4 * 1.25, "depth 8 ({t8}) much slower than depth 4 ({t4})");
+}
+
+#[test]
+fn tmp_reduces_iteration_time_for_giant_models() {
+    // GPT3-class layers are so large that TMP's compute split dominates
+    // its all-reduce overhead.
+    let mut cfg = wham::models::transformer_cfg("gpt3").unwrap();
+    cfg.layers = 8;
+    let net = Network::default();
+    let mut nc = NativeCost;
+    let t1 = {
+        let p = partition_transformer("g", &cfg, 4, 1, Optimizer::Adam);
+        simulate(&p, &vec![presets::tpuv2(); 4], Scheme::GPipe, &net, &mut nc).iter_seconds
+    };
+    let t4 = {
+        let p = partition_transformer("g", &cfg, 4, 4, Optimizer::Adam);
+        simulate(&p, &vec![presets::tpuv2(); 4], Scheme::GPipe, &net, &mut nc).iter_seconds
+    };
+    assert!(t4 < t1, "tmp=4 ({t4}) must beat tmp=1 ({t1}) for GPT3-class layers");
+}
+
+#[test]
+fn global_families_ordering() {
+    let mut a = wham::models::transformer_cfg("gpt2-xl").unwrap();
+    a.layers = 8;
+    let p = partition_transformer("mini", &a, 4, 1, Optimizer::Adam);
+    let mut nc = NativeCost;
+    let net = Network::default();
+    let r = global_search(std::slice::from_ref(&p), &GlobalOptions::default(), &net, &mut nc);
+    // Individual == common when there is a single model.
+    let c = r.common.1[0].eval.throughput;
+    let i = r.individual[0].eval.throughput;
+    assert!((c / i - 1.0).abs() < 1e-9, "single model: common ({c}) == individual ({i})");
+    // The TPUv2 pipeline is never better than WHAM-individual.
+    let cfgs = vec![presets::tpuv2(); p.stages.len()];
+    let tpu = simulate(&p, &cfgs, Scheme::GPipe, &net, &mut nc);
+    assert!(i >= tpu.throughput * 0.999);
+}
+
+#[test]
+fn boundary_bytes_match_microbatch_activations() {
+    let cfg = wham::models::transformer_cfg("opt-1.3b").unwrap();
+    let p = partition_transformer("opt", &cfg, 8, 1, Optimizer::Adam);
+    let expect = p.micro_batch * cfg.seq * cfg.hidden * 2;
+    for s in &p.stages {
+        assert_eq!(s.boundary_bytes, expect);
+    }
+}

@@ -1,0 +1,114 @@
+//! Three-layer stack contract: the AOT Pallas/JAX artifact executed via
+//! PJRT must agree with the native rust mirror to <= 1e-3 relative on
+//! every operator of every workload. This is the rust half of the
+//! correctness chain (the python half pins the Pallas kernel to the jnp
+//! oracle).
+
+use wham::cost::native::NativeCost;
+use wham::cost::xla_rt::XlaCost;
+use wham::cost::{CostBackend, Dims};
+use wham::graph::autodiff::Optimizer;
+use wham::graph::CostRow;
+use wham::util::rng::Rng;
+
+fn pjrt() -> Option<XlaCost> {
+    match XlaCost::from_artifacts() {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("skipping PJRT tests: {e}");
+            None
+        }
+    }
+}
+
+fn assert_agree(rows: &[CostRow], dims: Dims, pjrt: &mut XlaCost) {
+    let native = NativeCost.evaluate(rows, dims);
+    let xla = pjrt.evaluate(rows, dims);
+    assert_eq!(native.len(), xla.len());
+    for (i, (n, x)) in native.iter().zip(&xla).enumerate() {
+        let rel = |a: f64, b: f64| {
+            if a == 0.0 && b == 0.0 {
+                0.0
+            } else {
+                (a - b).abs() / a.abs().max(b.abs())
+            }
+        };
+        assert!(
+            rel(n.latency, x.latency) < 1e-3,
+            "row {i} {:?}: latency native={} pjrt={}",
+            rows[i],
+            n.latency,
+            x.latency
+        );
+        assert!(
+            rel(n.energy, x.energy) < 1e-3,
+            "row {i} {:?}: energy native={} pjrt={}",
+            rows[i],
+            n.energy,
+            x.energy
+        );
+        assert!(
+            rel(n.util, x.util) < 1e-3,
+            "row {i} {:?}: util native={} pjrt={}",
+            rows[i],
+            n.util,
+            x.util
+        );
+    }
+}
+
+#[test]
+fn agree_on_random_rows() {
+    let Some(mut x) = pjrt() else { return };
+    let mut rng = Rng::new(0xABCD);
+    let dims_menu = [4u64, 8, 16, 32, 64, 128, 256];
+    for trial in 0..10 {
+        let rows: Vec<CostRow> = (0..200)
+            .map(|_| CostRow {
+                kind: rng.range(0, 2) as i32,
+                m: rng.range(1, 100_000) as u64,
+                n: rng.range(1, 8_192) as u64,
+                k: rng.range(1, 8_192) as u64,
+            })
+            .collect();
+        let d = Dims {
+            tc_x: *rng.choose(&dims_menu),
+            tc_y: *rng.choose(&dims_menu),
+            vc_w: *rng.choose(&dims_menu),
+        };
+        assert_agree(&rows, d, &mut x);
+        let _ = trial;
+    }
+}
+
+#[test]
+fn agree_on_every_workload_graph() {
+    let Some(mut x) = pjrt() else { return };
+    for name in wham::models::single_acc_models() {
+        let g = wham::models::training(name, Optimizer::Adam).unwrap();
+        let rows = g.cost_rows();
+        assert_agree(&rows, Dims { tc_x: 128, tc_y: 64, vc_w: 128 }, &mut x);
+    }
+}
+
+#[test]
+fn agree_beyond_one_chunk() {
+    // > 4096 rows exercises the chunked PJRT path.
+    let Some(mut x) = pjrt() else { return };
+    let rows: Vec<CostRow> = (0..9_000)
+        .map(|i| CostRow { kind: (i % 3) as i32, m: 64 + (i as u64 % 1000), n: 64, k: 64 })
+        .collect();
+    assert_agree(&rows, Dims { tc_x: 64, tc_y: 64, vc_w: 64 }, &mut x);
+}
+
+#[test]
+fn search_results_identical_across_backends() {
+    let Some(mut x) = pjrt() else { return };
+    let g = wham::models::training("bert-base", Optimizer::Adam).unwrap();
+    let opts = wham::search::engine::SearchOptions::default();
+    let rn = wham::search::engine::WhamSearch::new(&g, 4, opts).run(&mut NativeCost);
+    let rx = wham::search::engine::WhamSearch::new(&g, 4, opts).run(&mut x);
+    assert_eq!(rn.best.config, rx.best.config, "search must pick the same design");
+    let rel = (rn.best.eval.seconds - rx.best.eval.seconds).abs() / rn.best.eval.seconds;
+    assert!(rel < 1e-3);
+}

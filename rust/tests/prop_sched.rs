@@ -1,0 +1,201 @@
+//! Property tests over random operator DAGs: scheduler feasibility,
+//! critical-path bounds, MCR monotonicity, ILP optimality envelope
+//! (hand-rolled harness in wham::util::prop — no proptest offline).
+
+use wham::arch::Constraints;
+use wham::cost::annotate::AnnotatedGraph;
+use wham::cost::native::NativeCost;
+use wham::cost::Dims;
+use wham::graph::{GraphBuilder, OpKind, OperatorGraph};
+use wham::search::ilp::ilp_search;
+use wham::search::mcr::mcr;
+use wham::sched::{asap_alap, greedy_schedule, CoreCount};
+use wham::util::prop::{forall, Gen};
+
+const D: Dims = Dims { tc_x: 32, tc_y: 32, vc_w: 32 };
+
+/// Random DAG: each node picks preds among earlier nodes; mixed op kinds.
+fn random_graph(g: &mut Gen) -> OperatorGraph {
+    let n = 2 + g.len(18);
+    let mut b = GraphBuilder::new();
+    for i in 0..n {
+        let preds: Vec<usize> = (0..i).filter(|_| g.rng.chance(0.3)).collect();
+        let dim = 8 << g.rng.below(4); // 8..64
+        match g.rng.below(4) {
+            0 => b.gemm(format!("g{i}"), dim, dim, dim, &preds),
+            1 => b.eltwise(format!("e{i}"), dim * dim, 1 + g.rng.below(4) as u64, &preds),
+            2 => b.fwd(
+                format!("f{i}"),
+                OpKind::FusedGemmAct { m: dim, n: dim, k: dim },
+                0,
+                &preds,
+            ),
+            _ => b.softmax(format!("s{i}"), dim, dim, &preds),
+        };
+    }
+    b.finish()
+}
+
+#[test]
+fn schedule_respects_dependencies_and_capacity() {
+    forall(11, 150, random_graph, |g| {
+        let ann = AnnotatedGraph::new(g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        for (tc, vc) in [(1, 1), (2, 1), (1, 2), (3, 2)] {
+            let s = greedy_schedule(&ann, &cp, CoreCount { tc, vc });
+            // Dependencies.
+            for v in 0..g.len() {
+                for &p in &g.preds[v] {
+                    if s.start[v] < s.finish[p] {
+                        return Err(format!("dep violated: {v} starts before pred {p} ends"));
+                    }
+                }
+            }
+            // Capacity per core type (fused takes one of each).
+            let mut events: Vec<(u64, i64, i64)> = Vec::new();
+            for v in 0..g.len() {
+                let (dt, dv) = match ann.core[v] {
+                    wham::graph::CoreType::Tensor => (1, 0),
+                    wham::graph::CoreType::Vector => (0, 1),
+                    wham::graph::CoreType::Fused => (1, 1),
+                };
+                events.push((s.start[v], dt, dv));
+                events.push((s.finish[v], -dt, -dv));
+            }
+            events.sort();
+            let (mut ct, mut cv) = (0i64, 0i64);
+            for (_, dt, dv) in events {
+                ct += dt;
+                cv += dv;
+                if ct > tc as i64 || cv > vc as i64 {
+                    return Err(format!("capacity exceeded at tc={tc},vc={vc}"));
+                }
+            }
+            // Makespan bounds.
+            if s.makespan < cp.best_latency {
+                return Err("makespan below the critical path".into());
+            }
+            if s.makespan > ann.serial_cycles() {
+                return Err("makespan exceeds serial execution".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn asap_alap_invariants() {
+    forall(22, 200, random_graph, |g| {
+        let ann = AnnotatedGraph::new(g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        for v in 0..g.len() {
+            if cp.alap[v] < cp.asap[v] {
+                return Err(format!("alap < asap at node {v}"));
+            }
+            if cp.asap[v] + ann.cycles[v] > cp.best_latency {
+                return Err(format!("node {v} ASAP-finishes past best latency"));
+            }
+            for &p in &g.preds[v] {
+                if cp.asap[v] < cp.asap[p] + ann.cycles[p] {
+                    return Err(format!("ASAP precedence violated {p}->{v}"));
+                }
+            }
+        }
+        if !cp.critical_ops().is_empty() {
+            Ok(())
+        } else {
+            Err("graph must have at least one critical op".into())
+        }
+    });
+}
+
+#[test]
+fn mcr_never_worse_than_single_core() {
+    forall(33, 100, random_graph, |g| {
+        let ann = AnnotatedGraph::new(g, D, &mut NativeCost);
+        let out = mcr(&ann, &Constraints::default());
+        let cp = &out.critical;
+        let single = greedy_schedule(&ann, cp, CoreCount { tc: 1, vc: 1 });
+        if out.schedule.makespan > single.makespan {
+            return Err(format!(
+                "MCR made things worse: {} > {}",
+                out.schedule.makespan, single.makespan
+            ));
+        }
+        // Bound: never exceeds parallelism limits.
+        let max_tc = cp.max_parallelism(&ann, wham::graph::CoreType::Tensor).max(1);
+        let max_vc = cp.max_parallelism(&ann, wham::graph::CoreType::Vector).max(1);
+        if out.cores.tc > max_tc || out.cores.vc > max_vc {
+            return Err(format!("cores {:?} exceed parallelism bound", out.cores));
+        }
+        // Trajectory: makespans strictly improve along accepted additions.
+        for w in out.trajectory.windows(2) {
+            if w[1].1 >= w[0].1 {
+                return Err("trajectory makespan not strictly improving".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ilp_at_least_as_good_as_greedy_everywhere() {
+    forall(44, 40, |g| {
+        // Keep graphs small so the exact solver stays exact.
+        let mut g2 = Gen { rng: g.rng, size: g.size.min(8) };
+        random_graph(&mut g2)
+    }, |g| {
+        let ann = AnnotatedGraph::new(g, D, &mut NativeCost);
+        let out = ilp_search(&ann, &Constraints::default(), 300_000);
+        let cp = asap_alap(&ann);
+        if out.makespan < cp.best_latency {
+            return Err("ILP beat the critical path (impossible)".into());
+        }
+        let greedy = greedy_schedule(&ann, &cp, out.cores);
+        if out.optimal && out.makespan > greedy.makespan {
+            return Err(format!(
+                "optimal ILP worse than greedy at same cores: {} > {}",
+                out.makespan, greedy.makespan
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fusion_preserves_dag_and_reduces_ops() {
+    forall(55, 150, random_graph, |g| {
+        let (fused, n) = wham::graph::fusion::fuse(g);
+        wham::graph::validate::validate(&fused).map_err(|e| e.to_string())?;
+        if fused.len() + n != g.len() {
+            return Err("fusion op accounting mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn autodiff_mirror_structure() {
+    forall(66, 100, random_graph, |fwd| {
+        let g = wham::graph::autodiff::training_graph(
+            fwd,
+            wham::graph::autodiff::Optimizer::Adam,
+        );
+        wham::graph::validate::validate(&g).map_err(|e| e.to_string())?;
+        let [f, b, u, l] = g.pass_counts();
+        if f != fwd.len() {
+            return Err("forward ops must be preserved".into());
+        }
+        if b < f {
+            return Err("every forward op needs at least one backward peer".into());
+        }
+        if l != 1 {
+            return Err("exactly one loss node".into());
+        }
+        let params = fwd.ops.iter().filter(|o| o.param_elems > 0).count();
+        if u != params {
+            return Err(format!("updates {u} != parameterized ops {params}"));
+        }
+        Ok(())
+    });
+}
