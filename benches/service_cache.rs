@@ -1,0 +1,87 @@
+//! Cold vs warm `/search` latency through the mining service — the
+//! cache-effectiveness number future scaling PRs track. Measures three
+//! layers: the engine against a warm in-process design database, the
+//! full HTTP round trip against a warm server, and request coalescing
+//! under concurrent identical load.
+
+use std::net::TcpListener;
+
+use wham::coordinator::BackendChoice;
+use wham::graph::autodiff::Optimizer;
+use wham::graph::fingerprint;
+use wham::search::engine::{SearchOptions, WhamSearch};
+use wham::service::cache::{context_key, DesignDb};
+use wham::service::http::request;
+use wham::service::{start, ServeOptions};
+use wham::util::bench::{banner, bench, time_once};
+
+fn main() {
+    banner("service_cache", "design-database effectiveness: cold vs warm /search");
+    let model = "bert-base";
+    let graph = wham::models::training(model, Optimizer::Adam).unwrap();
+    let batch = wham::models::info(model).unwrap().batch;
+    let opts = SearchOptions::default();
+
+    // ---- engine-level: run_cached against the shared database ----------
+    let db = DesignDb::in_memory();
+    let ctx = context_key(fingerprint(&graph), batch, &opts, "native");
+    let search = WhamSearch::new(&graph, batch, opts);
+    let (cold, cold_wall) = time_once(|| {
+        search.run_cached(&mut wham::cost::native::NativeCost, &mut db.scoped(ctx))
+    });
+    println!(
+        "engine/cold: {:>12?}  ({} scheduler evals, {} dims)",
+        cold_wall, cold.scheduler_evals, cold.dims_evaluated
+    );
+    println!(
+        "{}",
+        bench("engine/warm (db hit, 0 scheduler evals)", 1, 20, || {
+            let r = search.run_cached(&mut wham::cost::native::NativeCost, &mut db.scoped(ctx));
+            assert_eq!(r.scheduler_evals, 0);
+            std::hint::black_box(r);
+        })
+    );
+
+    // ---- HTTP round trip -----------------------------------------------
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let h = start(
+        listener,
+        ServeOptions { workers: 8, db_path: None, backend: BackendChoice::Native },
+    )
+    .unwrap();
+    let body = format!("{{\"model\":\"{model}\"}}");
+    let (_, http_cold) = time_once(|| {
+        let (status, _) = request(h.addr, "POST", "/search", Some(&body)).unwrap();
+        assert_eq!(status, 200);
+    });
+    println!("http/cold  : {http_cold:>12?}  (one full search + round trip)");
+    println!(
+        "{}",
+        bench("http/warm /search round trip", 2, 30, || {
+            let (status, resp) = request(h.addr, "POST", "/search", Some(&body)).unwrap();
+            assert_eq!(status, 200);
+            std::hint::black_box(resp);
+        })
+    );
+
+    // ---- coalescing under concurrent identical load --------------------
+    let (_, burst) = time_once(|| {
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = h.addr;
+                let body = body.clone();
+                std::thread::spawn(move || request(addr, "POST", "/search", Some(&body)).unwrap())
+            })
+            .collect();
+        for t in threads {
+            let (status, _) = t.join().unwrap();
+            assert_eq!(status, 200);
+        }
+    });
+    println!("http/burst : {burst:>12?}  (8 concurrent identical requests, warm)");
+    println!(
+        "series: cold_ms={:.2} warm_db_entries={} ",
+        cold_wall.as_secs_f64() * 1e3,
+        db.len()
+    );
+}

@@ -97,6 +97,7 @@ fn main() -> anyhow::Result<()> {
     let mut com_vs_nvdla = Vec::new();
     for ((name, graph, batch), (jname, r)) in graphs.iter().zip(&individual) {
         assert_eq!(name, jname);
+        let r = r.as_ref().map_err(|e| anyhow::anyhow!("search for {jname} failed: {e}"))?;
         let tpu = evaluate_design(graph, *batch, &presets::tpuv2(), backend.as_mut());
         let nvdla = evaluate_design(graph, *batch, &presets::nvdla_scaled(), backend.as_mut());
         let com = evaluate_design(graph, *batch, &common.best.0, backend.as_mut());

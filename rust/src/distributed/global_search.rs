@@ -18,7 +18,7 @@ use super::Scheme;
 use crate::arch::ArchConfig;
 use crate::cost::CostBackend;
 use crate::metrics::Metric;
-use crate::search::engine::{SearchOptions, WhamSearch};
+use crate::search::engine::{CacheProvider, NoSharedCache, SearchOptions, WhamSearch};
 
 /// Options for the global search.
 #[derive(Debug, Clone, Copy)]
@@ -135,6 +135,20 @@ pub fn global_search(
     net: &Network,
     backend: &mut dyn CostBackend,
 ) -> GlobalResult {
+    global_search_cached(models, opts, net, backend, &NoSharedCache)
+}
+
+/// [`global_search`] with a shared evaluation cache threaded through the
+/// per-stage local searches. A warm design database both skips repeat
+/// scheduler runs and warm-starts the top-k candidate pool, which is how
+/// the mining service makes repeat `/global` requests cheap.
+pub fn global_search_cached(
+    models: &[PartitionedModel],
+    opts: &GlobalOptions,
+    net: &Network,
+    backend: &mut dyn CostBackend,
+    caches: &dyn CacheProvider,
+) -> GlobalResult {
     assert!(!models.is_empty());
     let t0 = Instant::now();
 
@@ -166,7 +180,10 @@ pub fn global_search(
                 )
                 .throughput;
             }
-            let r = WhamSearch::new(&stage.graph, part.micro_batch, lopts).run(backend);
+            let mut cache =
+                caches.cache_for(&stage.graph, part.micro_batch, &lopts, backend.name());
+            let r = WhamSearch::new(&stage.graph, part.micro_batch, lopts)
+                .run_cached(backend, cache.as_mut());
             local_searches += 1;
             for p in r.top.points() {
                 if !pool.contains(&p.config) {

@@ -1,0 +1,213 @@
+//! Stable workload fingerprints.
+//!
+//! The design database ([`crate::service::cache`]) memoizes evaluated
+//! design points *across* processes, so it needs a key that identifies a
+//! training graph by **structure** — op kinds, shapes, passes, and edges
+//! (the optimizer is visible through the update-op shapes autodiff
+//! emits) — and not by the incidental order model builders inserted
+//! nodes in. Two graphs that differ only by a permutation of node ids
+//! must hash identically; any change to a shape, an edge, or an op kind
+//! must (with overwhelming probability) change the hash.
+//!
+//! Implementation: Weisfeiler-Lehman iterative relabeling. Each node
+//! starts from a hash of its intrinsic attributes; a few rounds fold in
+//! the *sorted* multisets of predecessor and successor labels; the final
+//! fingerprint combines the sorted multiset of node labels with the node
+//! and edge counts. Sorting at every aggregation point is what buys
+//! insertion-order invariance.
+
+use super::{OpKind, OperatorGraph};
+use crate::util::fnv::{Fnv, OFFSET};
+
+/// A 64-bit structural hash of a training graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u64);
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+impl Fingerprint {
+    /// Parse the `Display` form (16 hex digits).
+    pub fn parse(s: &str) -> Option<Self> {
+        u64::from_str_radix(s, 16).ok().map(Fingerprint)
+    }
+}
+
+/// Fold one `u64` into an FNV-1a state.
+#[inline]
+fn fold(h: u64, x: u64) -> u64 {
+    Fnv(h).word(x).0
+}
+
+fn fold_all(seed: u64, xs: &[u64]) -> u64 {
+    Fnv(seed).words(xs).0
+}
+
+/// Variant index of an [`OpKind`] (shape fields are hashed separately via
+/// the cost row, which collapses e.g. Softmax and Reduction onto the same
+/// row — the tag keeps them distinct).
+fn kind_tag(k: &OpKind) -> u64 {
+    match k {
+        OpKind::Gemm { .. } => 0,
+        OpKind::Conv2d { .. } => 1,
+        OpKind::Elementwise { .. } => 2,
+        OpKind::Softmax { .. } => 3,
+        OpKind::LayerNorm { .. } => 4,
+        OpKind::Reduction { .. } => 5,
+        OpKind::FusedGemmAct { .. } => 6,
+    }
+}
+
+/// Hash of one node's intrinsic attributes (no names, no ids).
+fn node_seed(g: &OperatorGraph, v: usize) -> u64 {
+    let o = &g.ops[v];
+    let r = o.kind.cost_row();
+    fold_all(
+        OFFSET,
+        &[
+            kind_tag(&o.kind),
+            r.kind as u64,
+            r.m,
+            r.n,
+            r.k,
+            o.pass as u64,
+            o.param_elems,
+            o.out_elems,
+        ],
+    )
+}
+
+/// Compute the structural fingerprint of a graph.
+pub fn fingerprint(g: &OperatorGraph) -> Fingerprint {
+    let n = g.len();
+    if n == 0 {
+        return Fingerprint(fold(OFFSET, 0));
+    }
+    let mut labels: Vec<u64> = (0..n).map(|v| node_seed(g, v)).collect();
+    // Three rounds reach neighbors-of-neighbors-of-neighbors — plenty to
+    // separate every stage/layer position in the mirrored training DAGs
+    // this repo builds, while staying O(rounds * (V + E log E)).
+    let mut scratch: Vec<u64> = Vec::new();
+    for _ in 0..3 {
+        let mut next = Vec::with_capacity(n);
+        for v in 0..n {
+            let mut h = fold(OFFSET, labels[v]);
+            for (tag, nbrs) in [(0xA5u64, &g.preds[v]), (0x5Au64, &g.succs[v])] {
+                scratch.clear();
+                scratch.extend(nbrs.iter().map(|&u| labels[u]));
+                scratch.sort_unstable();
+                h = fold(h, tag);
+                h = fold(h, scratch.len() as u64);
+                h = fold_all(h, &scratch);
+            }
+            next.push(h);
+        }
+        labels = next;
+    }
+    labels.sort_unstable();
+    let mut h = fold(OFFSET, n as u64);
+    h = fold(h, g.num_edges() as u64);
+    h = fold_all(h, &labels);
+    Fingerprint(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::autodiff::{training_graph, Optimizer};
+    use crate::graph::GraphBuilder;
+
+    /// Diamond graph, nodes inserted left branch first.
+    fn diamond_lr() -> OperatorGraph {
+        let mut b = GraphBuilder::new();
+        let a = b.gemm("a", 8, 8, 8, &[]);
+        let l = b.eltwise("l", 64, 1, &[a]);
+        let r = b.eltwise("r", 64, 2, &[a]);
+        let _j = b.gemm("j", 8, 8, 8, &[l, r]);
+        b.finish()
+    }
+
+    /// Same diamond, branches inserted in the opposite order (node ids
+    /// and adjacency-list orders permute).
+    fn diamond_rl() -> OperatorGraph {
+        let mut b = GraphBuilder::new();
+        let a = b.gemm("root", 8, 8, 8, &[]);
+        let r = b.eltwise("right", 64, 2, &[a]);
+        let l = b.eltwise("left", 64, 1, &[a]);
+        let _j = b.gemm("join", 8, 8, 8, &[r, l]);
+        b.finish()
+    }
+
+    #[test]
+    fn same_structure_same_fingerprint() {
+        assert_eq!(fingerprint(&diamond_lr()), fingerprint(&diamond_rl()));
+    }
+
+    #[test]
+    fn permuted_insertion_order_same_fingerprint_on_real_model() {
+        // Two independent builds of the same workload must agree.
+        let a = crate::models::training("bert-base", Optimizer::Adam).unwrap();
+        let b = crate::models::training("bert-base", Optimizer::Adam).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn changed_shape_changes_fingerprint() {
+        let base = diamond_lr();
+        let mut b = GraphBuilder::new();
+        let a = b.gemm("a", 8, 8, 16, &[]); // k: 8 -> 16
+        let l = b.eltwise("l", 64, 1, &[a]);
+        let r = b.eltwise("r", 64, 2, &[a]);
+        let _j = b.gemm("j", 8, 8, 8, &[l, r]);
+        assert_ne!(fingerprint(&base), fingerprint(&b.finish()));
+    }
+
+    #[test]
+    fn changed_edge_changes_fingerprint() {
+        let base = diamond_lr();
+        let mut b = GraphBuilder::new();
+        let a = b.gemm("a", 8, 8, 8, &[]);
+        let l = b.eltwise("l", 64, 1, &[a]);
+        let _r = b.eltwise("r", 64, 2, &[a]);
+        // join now depends only on the left branch.
+        let _j = b.gemm("j", 8, 8, 8, &[l]);
+        assert_ne!(fingerprint(&base), fingerprint(&b.finish()));
+    }
+
+    #[test]
+    fn optimizer_changes_fingerprint() {
+        let fwd = crate::models::transformer::forward_range(
+            &crate::models::transformer::bert_base(),
+            0,
+            1,
+        );
+        let sgd = training_graph(&fwd, Optimizer::SgdMomentum);
+        let adam = training_graph(&fwd, Optimizer::Adam);
+        assert_ne!(fingerprint(&sgd), fingerprint(&adam));
+    }
+
+    #[test]
+    fn names_do_not_matter() {
+        let mut g = diamond_lr();
+        for o in &mut g.ops {
+            o.name = format!("renamed/{}", o.name);
+        }
+        assert_eq!(fingerprint(&g), fingerprint(&diamond_lr()));
+    }
+
+    #[test]
+    fn display_parses_back() {
+        let fp = fingerprint(&diamond_lr());
+        assert_eq!(Fingerprint::parse(&fp.to_string()), Some(fp));
+    }
+
+    #[test]
+    fn distinct_models_distinct_fingerprints() {
+        let a = crate::models::training("bert-base", Optimizer::Adam).unwrap();
+        let b = crate::models::training("resnet18", Optimizer::Adam).unwrap();
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+    }
+}

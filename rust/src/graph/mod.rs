@@ -9,11 +9,13 @@
 
 pub mod autodiff;
 pub mod builder;
+pub mod fingerprint;
 pub mod fusion;
 pub mod op;
 pub mod validate;
 
 pub use builder::GraphBuilder;
+pub use fingerprint::{fingerprint, Fingerprint};
 pub use op::{CoreType, CostRow, Op, OpKind, Pass};
 
 /// Index of a node in an [`OperatorGraph`].

@@ -27,6 +27,8 @@
 //!   simulation, interconnect model, global top-k search
 //! * [`runtime`] — PJRT client wrapper for the AOT artifacts
 //! * [`coordinator`] — parallel per-stage search orchestration
+//! * [`service`] — the `wham serve` mining service: HTTP front end,
+//!   request coalescing, persistent fingerprint-keyed design database
 //! * [`metrics`], [`report`], [`util`] — supporting substrates
 
 pub mod arch;
@@ -41,9 +43,10 @@ pub mod report;
 pub mod runtime;
 pub mod sched;
 pub mod search;
+pub mod service;
 pub mod util;
 
 pub use arch::{ArchConfig, Constraints};
-pub use graph::{CoreType, OpKind, OperatorGraph};
+pub use graph::{fingerprint, CoreType, Fingerprint, OpKind, OperatorGraph};
 pub use metrics::Metric;
-pub use search::engine::{SearchResult, WhamSearch};
+pub use search::engine::{EvalCache, SearchResult, WhamSearch};

@@ -6,6 +6,9 @@
 //! * `common` — one design across a workload set (section 4.6);
 //! * `global` — distributed pipeline/TMP search (section 5);
 //! * `baseline` — run ConfuciuX+ / Spotlight+ / hand-optimized designs;
+//! * `serve` — long-running design-mining service with a persistent
+//!   design database (see [`wham::service`]);
+//! * `client` — drive a running `wham serve` over HTTP;
 //! * `selftest` — verify the PJRT artifact against the native mirror.
 
 use anyhow::{anyhow, bail, Result};
@@ -17,6 +20,7 @@ use wham::distributed::network::Network;
 use wham::distributed::partition::partition_transformer;
 use wham::distributed::Scheme;
 use wham::graph::autodiff::Optimizer;
+use wham::graph::OperatorGraph;
 use wham::metrics::Metric;
 use wham::report;
 use wham::search::engine::{evaluate_design, SearchOptions};
@@ -25,7 +29,8 @@ use wham::util::table::Table;
 
 const VALUE_KEYS: &[&str] = &[
     "model", "models", "metric", "backend", "k", "depth", "tmp", "scheme", "framework",
-    "iterations", "workers", "hysteresis", "seed", "out", "tc", "vc", "dims",
+    "iterations", "workers", "hysteresis", "seed", "out", "tc", "vc", "dims", "port", "db",
+    "addr",
 ];
 
 fn main() -> Result<()> {
@@ -39,6 +44,8 @@ fn main() -> Result<()> {
         Some("trace") => cmd_trace(&args),
         Some("partition") => cmd_partition(&args),
         Some("space") => cmd_space(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("selftest") => cmd_selftest(),
         _ => {
             print_usage();
@@ -62,8 +69,21 @@ fn print_usage() {
          wham trace --model <name> [--out trace.json] [--tc 2 --vc 2 --dims 128x128x128]\n  \
          wham partition --model <llm> [--depth 32] [--tmp 1] [--scheme gpipe]\n  \
          wham space --model <name>\n  \
+         wham serve [--port 8484] [--workers 8] [--db designs.jsonl] [--backend auto]\n  \
+         wham client <models|search|evaluate|global|status> [--addr 127.0.0.1:8484] ...\n  \
          wham selftest"
     );
+}
+
+/// Resolve a registry workload to its training graph and batch size —
+/// the lookup every per-workload subcommand starts with.
+fn resolve_workload(name: &str) -> Result<(OperatorGraph, u64)> {
+    let graph = wham::models::training(name, Optimizer::Adam)
+        .ok_or_else(|| anyhow!("unknown model {name:?} (see `wham models`)"))?;
+    let batch = wham::models::info(name)
+        .ok_or_else(|| anyhow!("model {name:?} missing from the registry"))?
+        .batch;
+    Ok((graph, batch))
 }
 
 fn parse_common(args: &Args) -> Result<(Metric, BackendChoice, SearchOptions)> {
@@ -101,9 +121,7 @@ fn cmd_models() -> Result<()> {
 fn cmd_search(args: &Args) -> Result<()> {
     let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
     let (metric, backend_choice, mut opts) = parse_common(args)?;
-    let graph = wham::models::training(name, Optimizer::Adam)
-        .ok_or_else(|| anyhow!("unknown model {name:?} (see `wham models`)"))?;
-    let batch = wham::models::info(name).unwrap().batch;
+    let (graph, batch) = resolve_workload(name)?;
     let mut backend = make_backend(backend_choice)?;
 
     if metric == Metric::PerfPerTdp {
@@ -152,9 +170,7 @@ fn cmd_common(args: &Args) -> Result<()> {
     let graphs: Vec<(String, wham::graph::OperatorGraph, u64)> = names
         .iter()
         .map(|n| {
-            let g = wham::models::training(n, Optimizer::Adam)
-                .ok_or_else(|| anyhow!("unknown model {n:?}"))?;
-            let b = wham::models::info(n).unwrap().batch;
+            let (g, b) = resolve_workload(n)?;
             Ok((n.clone(), g, b))
         })
         .collect::<Result<_>>()?;
@@ -217,15 +233,20 @@ fn cmd_global(args: &Args) -> Result<()> {
         })
         .collect::<Result<_>>()?;
     let net = Network::default();
+    // TPUv2 pipeline baseline, simulated once per model: it serves as
+    // both the Perf/TDP floor and the comparison column of the table.
+    let tpu_pipe: Vec<wham::distributed::pipeline::PipelineEval> = parts
+        .iter()
+        .map(|p| {
+            let cfgs = vec![presets::tpuv2(); p.stages.len()];
+            wham::distributed::pipeline::simulate(p, &cfgs, scheme, &net, backend.as_mut())
+        })
+        .collect();
     let mut gopts = GlobalOptions { metric, scheme, top_k: local.top_k, local, ..Default::default() };
     if metric == Metric::PerfPerTdp {
         // TPUv2 pipeline throughput as the floor (min across models).
-        gopts.min_throughput = f64::INFINITY;
-        for p in &parts {
-            let cfgs = vec![presets::tpuv2(); p.stages.len()];
-            let e = wham::distributed::pipeline::simulate(p, &cfgs, scheme, &net, backend.as_mut());
-            gopts.min_throughput = gopts.min_throughput.min(e.throughput);
-        }
+        gopts.min_throughput =
+            tpu_pipe.iter().map(|e| e.throughput).fold(f64::INFINITY, f64::min);
     }
     println!(
         "global search: {} models, depth={depth}, tmp={tmp}, scheme={scheme:?}, metric={metric}",
@@ -238,9 +259,7 @@ fn cmd_global(args: &Args) -> Result<()> {
     );
     println!("WHAM-common config: {}", r.common.0.display());
     let mut t = Table::new(["model", "family", "config(s)", "thpt", "perf/TDP", "vs TPUv2 thpt"]);
-    for p in &parts {
-        let cfgs = vec![presets::tpuv2(); p.stages.len()];
-        let tpu = wham::distributed::pipeline::simulate(p, &cfgs, scheme, &net, backend.as_mut());
+    for (p, tpu) in parts.iter().zip(&tpu_pipe) {
         let add_row =
             |t: &mut Table, fam: &str, m: &wham::distributed::global_search::ModelPipelineResult| {
                 let uniq: std::collections::BTreeSet<String> =
@@ -271,9 +290,7 @@ fn cmd_baseline(args: &Args) -> Result<()> {
     let framework = args.get("framework").unwrap_or("confuciux");
     let iterations: usize = args.get_as_or("iterations", 500).map_err(|e| anyhow!("{e}"))?;
     let (metric, backend_choice, _) = parse_common(args)?;
-    let graph = wham::models::training(name, Optimizer::Adam)
-        .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
-    let batch = wham::models::info(name).unwrap().batch;
+    let (graph, batch) = resolve_workload(name)?;
     let mut backend = make_backend(backend_choice)?;
 
     match framework {
@@ -324,15 +341,13 @@ fn cmd_baseline(args: &Args) -> Result<()> {
 fn cmd_trace(args: &Args) -> Result<()> {
     let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
     let out = args.get_or("out", "trace.json");
-    let graph = wham::models::training(name, Optimizer::Adam)
-        .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+    let (graph, batch) = resolve_workload(name)?;
     let (_, backend_choice, _) = parse_common(args)?;
     let mut backend = make_backend(backend_choice)?;
 
     // Design: explicit --tc/--vc/--dims, else the search's best.
     let dims_s = args.get_or("dims", "");
     let config = if dims_s.is_empty() {
-        let batch = wham::models::info(name).unwrap().batch;
         wham::search::engine::WhamSearch::new(&graph, batch, SearchOptions::default())
             .run(backend.as_mut())
             .best
@@ -408,9 +423,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
 /// Print the Table-3 search-space accounting for a workload.
 fn cmd_space(args: &Args) -> Result<()> {
     let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
-    let graph = wham::models::training(name, Optimizer::Adam)
-        .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
-    let batch = wham::models::info(name).unwrap().batch;
+    let (graph, batch) = resolve_workload(name)?;
     let (_, backend_choice, opts) = parse_common(args)?;
     let mut backend = make_backend(backend_choice)?;
     let r = wham::search::engine::WhamSearch::new(&graph, batch, opts).run(backend.as_mut());
@@ -426,6 +439,91 @@ fn cmd_space(args: &Args) -> Result<()> {
     println!("  ILP pruned      10^{:.0}", s.ilp_pruned);
     println!("  heur unpruned   10^{:.0}", s.heur_unpruned);
     println!("  heur pruned     10^{:.0}", s.heur_pruned);
+    Ok(())
+}
+
+/// Run the long-lived design-mining service (see `wham::service`).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port: u16 = args.get_as_or("port", 8484).map_err(|e| anyhow!("{e}"))?;
+    let workers: usize = args.get_as_or("workers", 8).map_err(|e| anyhow!("{e}"))?;
+    let backend: BackendChoice =
+        args.get_or("backend", "auto").parse().map_err(|e| anyhow!("{e}"))?;
+    let db_path = args.get("db").map(std::path::PathBuf::from);
+    let opts = wham::service::ServeOptions { workers, db_path, backend };
+    wham::service::serve_forever(&format!("127.0.0.1:{port}"), opts)
+}
+
+/// Drive a running `wham serve` instance over HTTP.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr_s = args.get_or("addr", "127.0.0.1:8484");
+    let addr: std::net::SocketAddr =
+        addr_s.parse().map_err(|_| anyhow!("--addr expects host:port, got {addr_s:?}"))?;
+    let sub = args.pos(1).ok_or_else(|| {
+        anyhow!("usage: wham client <models|search|evaluate|global|status> [--addr host:port]")
+    })?;
+
+    let with_model = |body: &mut String| -> Result<()> {
+        let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+        body.push_str(&format!("\"model\":{}", wham::util::json::esc(model)));
+        Ok(())
+    };
+    let (method, path, body) = match sub {
+        "models" => ("GET", "/models", None),
+        "status" => ("GET", "/status", None),
+        "search" => {
+            let mut b = String::from("{");
+            with_model(&mut b)?;
+            b.push_str(&format!(",\"metric\":{}", wham::util::json::esc(&args.get_or("metric", "throughput"))));
+            if let Some(k) = args.get("k") {
+                b.push_str(&format!(",\"k\":{k}"));
+            }
+            if args.flag("ilp") {
+                b.push_str(",\"ilp\":true");
+            }
+            b.push('}');
+            ("POST", "/search", Some(b))
+        }
+        "evaluate" => {
+            let mut b = String::from("{");
+            with_model(&mut b)?;
+            // --dims TXxTYxVW with --tc/--vc counts, like `wham trace`.
+            let dims_s = args.get("dims").ok_or_else(|| anyhow!("--dims TXxTYxVW required"))?;
+            let parts: Vec<u64> = dims_s
+                .split('x')
+                .map(|p| p.parse().map_err(|_| anyhow!("--dims expects TXxTYxVW")))
+                .collect::<Result<_>>()?;
+            let [tx, ty, vw]: [u64; 3] =
+                parts.try_into().map_err(|_| anyhow!("--dims expects three values"))?;
+            let tc: u64 = args.get_as_or("tc", 2).map_err(|e| anyhow!("{e}"))?;
+            let vc: u64 = args.get_as_or("vc", 2).map_err(|e| anyhow!("{e}"))?;
+            b.push_str(&format!(",\"config\":[{tc},{tx},{ty},{vc},{vw}]}}"));
+            ("POST", "/evaluate", Some(b))
+        }
+        "global" => {
+            let models = args.get_list("models");
+            let mut b = String::from("{");
+            if !models.is_empty() {
+                let quoted: Vec<String> =
+                    models.iter().map(|m| wham::util::json::esc(m)).collect();
+                b.push_str(&format!("\"models\":[{}],", quoted.join(",")));
+            }
+            b.push_str(&format!(
+                "\"depth\":{},\"tmp\":{},\"scheme\":{}}}",
+                args.get_as_or("depth", 32u64).map_err(|e| anyhow!("{e}"))?,
+                args.get_as_or("tmp", 1u64).map_err(|e| anyhow!("{e}"))?,
+                wham::util::json::esc(&args.get_or("scheme", "gpipe")),
+            ));
+            ("POST", "/global", Some(b))
+        }
+        other => bail!("unknown client subcommand {other:?}"),
+    };
+    let (status, resp) =
+        wham::service::http::request(addr, method, path, body.as_deref())
+            .map_err(|e| anyhow!("request to {addr} failed: {e} (is `wham serve` running?)"))?;
+    println!("{resp}");
+    if status != 200 {
+        bail!("server returned HTTP {status}");
+    }
     Ok(())
 }
 
@@ -454,7 +552,8 @@ fn cmd_selftest() -> Result<()> {
     let jobs =
         vec![SearchJob { name: "bert-base".into(), graph, batch: 4, opts: SearchOptions::default() }];
     let rs = run_parallel(jobs, BackendChoice::Auto, 2);
-    println!("coordinator: best {}", rs[0].1.best.config.display());
+    let coord = rs[0].1.as_ref().map_err(|e| anyhow!("coordinator job failed: {e}"))?;
+    println!("coordinator: best {}", coord.best.config.display());
     println!("selftest OK");
     Ok(())
 }

@@ -5,7 +5,68 @@
 //! reparses and reassigns instruction ids, which keeps xla_extension
 //! 0.5.1 compatible with jax >= 0.5 output.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+
+/// Stub compiled when the `pjrt` feature is off (the `xla` crate and its
+/// `xla_extension` native library are then not linked at all). Every
+/// entry point returns a descriptive error; [`crate::coordinator`]'s
+/// `Auto` backend choice falls back to the bit-compatible native mirror,
+/// so searches keep working end to end.
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    /// Fixed operator-table height of the artifact (python/compile/model.py).
+    pub const N_OPS: usize = 4096;
+
+    /// Outputs of one estimator call.
+    #[derive(Debug, Clone)]
+    pub struct CostBatch {
+        pub latency: Vec<f32>,
+        pub energy: Vec<f32>,
+        pub util: Vec<f32>,
+        /// `[sum(latency), sum(energy), mean(util), valid count]`.
+        pub totals: [f32; 4],
+    }
+
+    /// Placeholder for the PJRT executable wrapper.
+    #[derive(Debug)]
+    pub struct CostModelRuntime {
+        _private: (),
+    }
+
+    impl CostModelRuntime {
+        /// Always fails: the binary was built without PJRT support.
+        pub fn load(_dir: &Path) -> Result<Self> {
+            bail!(
+                "PJRT runtime unavailable: built without the `pjrt` \
+                 feature (run `make artifacts`, then rebuild with \
+                 `--features pjrt` and the xla crate); the native mirror \
+                 backend remains bit-compatible"
+            )
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> &str {
+            "unavailable"
+        }
+
+        /// Unreachable in practice (`load` never succeeds).
+        pub fn evaluate(
+            &self,
+            _kind: &[i32],
+            _m: &[i32],
+            _n: &[i32],
+            _k: &[i32],
+            _cfg: [i32; 3],
+        ) -> Result<CostBatch> {
+            bail!("built without the `pjrt` feature")
+        }
+    }
+}
 
 use std::path::{Path, PathBuf};
 

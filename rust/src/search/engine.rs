@@ -59,10 +59,71 @@ pub struct SearchResult {
     pub dims_evaluated: usize,
     /// Greedy-scheduler / B&B invocations — the convergence-cost unit.
     pub scheduler_evals: usize,
+    /// Design points served by the [`EvalCache`] instead of a fresh
+    /// scheduler run (0 on cold runs; on a warm shared database every
+    /// point can be a hit and `scheduler_evals` drops to 0).
+    pub cache_hits: usize,
     /// Wall-clock of the whole search.
     pub wall: Duration,
     /// (elapsed, best-score-so-far) log for convergence plots (Fig. 8).
     pub trajectory: Vec<(Duration, f64)>,
+}
+
+/// Memoization layer for per-`Dims` design-point evaluations.
+///
+/// [`WhamSearch::run`] uses a private per-run `HashMap`; the long-running
+/// service substitutes a process-wide, persistent design database
+/// ([`crate::service::cache::DesignDb`]) so repeat searches over the same
+/// workload skip the scheduler entirely. Implementations must only be
+/// consulted for a fixed evaluation context (same graph, batch, metric,
+/// floor, constraints, and backend) — keying by that context is the
+/// *caller's* job, which keeps the engine oblivious to key layout.
+pub trait EvalCache {
+    /// Cached point for these dims, if any.
+    fn get(&mut self, d: &Dims) -> Option<DesignPoint>;
+    /// Record a freshly evaluated point.
+    fn put(&mut self, d: Dims, p: DesignPoint);
+}
+
+/// The default private per-run cache.
+impl EvalCache for HashMap<Dims, DesignPoint> {
+    fn get(&mut self, d: &Dims) -> Option<DesignPoint> {
+        HashMap::get(self, d).copied()
+    }
+    fn put(&mut self, d: Dims, p: DesignPoint) {
+        self.insert(d, p);
+    }
+}
+
+/// Hands out an [`EvalCache`] scoped to one evaluation context. Lets the
+/// distributed global search thread a shared design database through its
+/// internal per-stage local searches without depending on the service
+/// layer (see [`crate::distributed::global_search::global_search_cached`]).
+pub trait CacheProvider {
+    /// Cache scoped to `(graph, batch, opts, backend)`.
+    fn cache_for<'a>(
+        &'a self,
+        graph: &OperatorGraph,
+        batch: u64,
+        opts: &SearchOptions,
+        backend: &str,
+    ) -> Box<dyn EvalCache + 'a>;
+}
+
+/// Provider used when no shared database is attached: every search gets
+/// a fresh private map.
+pub struct NoSharedCache;
+
+impl CacheProvider for NoSharedCache {
+    fn cache_for<'a>(
+        &'a self,
+        _graph: &OperatorGraph,
+        _batch: u64,
+        _opts: &SearchOptions,
+        _backend: &str,
+    ) -> Box<dyn EvalCache + 'a> {
+        Box::new(HashMap::<Dims, DesignPoint>::new())
+    }
 }
 
 /// WHAM per-workload search (paper Figure 4).
@@ -79,26 +140,53 @@ impl<'a> WhamSearch<'a> {
         Self { graph, batch, opts }
     }
 
+    /// Run the full two-phase dimension search with a private per-run
+    /// cache (one-shot CLI behavior).
+    pub fn run(&self, backend: &mut dyn CostBackend) -> SearchResult {
+        let mut local: HashMap<Dims, DesignPoint> = HashMap::new();
+        self.run_cached(backend, &mut local)
+    }
+
     /// Run the full two-phase dimension search:
     /// 1. prune tensor-core dims with the vector width at max;
     /// 2. prune vector width at the winning tensor dims.
-    /// Each dimension evaluation runs MCR (or B&B) to pick core counts.
-    pub fn run(&self, backend: &mut dyn CostBackend) -> SearchResult {
+    /// Each dimension evaluation runs MCR (or B&B) to pick core counts,
+    /// consulting `cache` first — with a warm shared design database the
+    /// whole search completes without a single scheduler invocation.
+    pub fn run_cached(
+        &self,
+        backend: &mut dyn CostBackend,
+        cache: &mut dyn EvalCache,
+    ) -> SearchResult {
         let t0 = Instant::now();
-        let mut cache: HashMap<Dims, DesignPoint> = HashMap::new();
+        // Intra-run memo: the pruner revisits dims (phase 2 starts at the
+        // phase-1 winner); those repeats are neither fresh evaluations nor
+        // cache hits.
+        let mut seen: HashMap<Dims, f64> = HashMap::new();
         let mut explored: Vec<DesignPoint> = Vec::new();
         let mut top = TopK::new(self.opts.top_k);
         let mut trajectory: Vec<(Duration, f64)> = Vec::new();
         let mut scheduler_evals = 0usize;
+        let mut cache_hits = 0usize;
 
         {
             let mut eval_dims = |d: Dims| -> f64 {
-                if let Some(p) = cache.get(&d) {
-                    return p.score;
+                if let Some(&score) = seen.get(&d) {
+                    return score;
                 }
-                let (point, evals) = self.evaluate_dims(d, backend);
-                scheduler_evals += evals;
-                cache.insert(d, point);
+                let point = match cache.get(&d) {
+                    Some(p) => {
+                        cache_hits += 1;
+                        p
+                    }
+                    None => {
+                        let (p, evals) = self.evaluate_dims(d, backend);
+                        scheduler_evals += evals;
+                        cache.put(d, p);
+                        p
+                    }
+                };
+                seen.insert(d, point.score);
                 explored.push(point);
                 top.offer(point);
                 let best = top.best().map(|b| b.score).unwrap_or(f64::NEG_INFINITY);
@@ -131,6 +219,7 @@ impl<'a> WhamSearch<'a> {
             dims_evaluated: explored.len(),
             explored,
             scheduler_evals,
+            cache_hits,
             wall: t0.elapsed(),
             trajectory,
         }
@@ -263,6 +352,21 @@ mod tests {
         let opts = SearchOptions { use_ilp: true, ilp_node_budget: 100_000, ..Default::default() };
         let r = WhamSearch::new(&g, 1, opts).run(&mut NativeCost);
         assert!(r.best.config.num_tc >= 1);
+    }
+
+    #[test]
+    fn warm_cache_skips_every_scheduler_eval() {
+        let g = bert1_graph();
+        let s = WhamSearch::new(&g, 4, SearchOptions::default());
+        let mut shared: HashMap<Dims, DesignPoint> = HashMap::new();
+        let cold = s.run_cached(&mut NativeCost, &mut shared);
+        assert_eq!(cold.cache_hits, 0);
+        assert!(cold.scheduler_evals > 0);
+        let warm = s.run_cached(&mut NativeCost, &mut shared);
+        assert_eq!(warm.scheduler_evals, 0, "warm run re-ran the scheduler");
+        assert_eq!(warm.cache_hits, warm.dims_evaluated);
+        assert_eq!(warm.best.config, cold.best.config);
+        assert_eq!(warm.dims_evaluated, cold.dims_evaluated);
     }
 
     #[test]

@@ -1,0 +1,391 @@
+//! The persistent, fingerprint-keyed design database.
+//!
+//! Every `<TC-Dim, VC-Width>` point the engine evaluates is memoized
+//! under a *context key* — the workload [`Fingerprint`] combined with
+//! batch size, metric, throughput floor, constraints, solver choice, and
+//! backend name (anything that changes the evaluation's value changes
+//! the key). The map is striped across [`SHARDS`] `RwLock`s so concurrent
+//! searches on different workloads never contend, and mirrored to a
+//! JSONL file: load-on-boot, append-on-write, so a restarted server
+//! answers previously-mined requests without touching the scheduler.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use crate::arch::ArchConfig;
+use crate::cost::Dims;
+use crate::graph::{fingerprint, Fingerprint, OperatorGraph};
+use crate::metrics::Evaluation;
+use crate::search::engine::{CacheProvider, EvalCache, SearchOptions};
+use crate::search::DesignPoint;
+use crate::util::fnv::Fnv;
+use crate::util::json::{self, JsonValue};
+
+/// Lock stripes. 16 keeps contention negligible at the service's worker
+/// counts while staying cache-friendly.
+pub const SHARDS: usize = 16;
+
+/// Key identifying one evaluation context (see module docs). Two
+/// searches with the same context key may share every per-dims point.
+pub fn context_key(fp: Fingerprint, batch: u64, opts: &SearchOptions, backend: &str) -> u64 {
+    Fnv::new()
+        .word(fp.0)
+        .word(batch)
+        .word(match opts.metric {
+            crate::metrics::Metric::Throughput => 0,
+            crate::metrics::Metric::PerfPerTdp => 1,
+        })
+        .word(opts.min_throughput.to_bits())
+        .word(opts.constraints.max_area_mm2.to_bits())
+        .word(opts.constraints.max_power_w.to_bits())
+        .word(opts.use_ilp as u64)
+        .word(opts.ilp_node_budget)
+        .bytes(backend.as_bytes())
+        .0
+}
+
+fn shard_of(ctx: u64, d: &Dims) -> usize {
+    let h = Fnv::new().word(ctx).word(d.tc_x).word(d.tc_y).word(d.vc_w).0;
+    (h % SHARDS as u64) as usize
+}
+
+/// Aggregate database statistics for `/status`.
+#[derive(Debug, Clone, Copy)]
+pub struct DbStats {
+    pub entries: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub appended: u64,
+    pub loaded: usize,
+}
+
+/// Sharded, persistent design-point database.
+pub struct DesignDb {
+    shards: Vec<RwLock<HashMap<(u64, Dims), DesignPoint>>>,
+    writer: Mutex<Option<BufWriter<File>>>,
+    path: Option<PathBuf>,
+    loaded: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    appended: AtomicU64,
+}
+
+impl DesignDb {
+    /// Volatile database (no persistence).
+    pub fn in_memory() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            writer: Mutex::new(None),
+            path: None,
+            loaded: 0,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            appended: AtomicU64::new(0),
+        }
+    }
+
+    /// Open (and create if needed) a JSONL-backed database. Unparseable
+    /// lines are skipped so a torn final append cannot brick the boot.
+    pub fn open(path: &Path) -> anyhow::Result<Self> {
+        let mut db = Self::in_memory();
+        if path.is_file() {
+            let text = std::fs::read_to_string(path)?;
+            for line in text.lines() {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                if let Some((ctx, dims, point)) = parse_entry(line) {
+                    let shard = shard_of(ctx, &dims);
+                    db.shards[shard].write().unwrap().insert((ctx, dims), point);
+                    db.loaded += 1;
+                }
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        db.writer = Mutex::new(Some(BufWriter::new(file)));
+        db.path = Some(path.to_path_buf());
+        Ok(db)
+    }
+
+    /// Backing file, if persistent.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Point for `(ctx, dims)`, counting hit/miss.
+    pub fn get(&self, ctx: u64, d: &Dims) -> Option<DesignPoint> {
+        let found = self.shards[shard_of(ctx, d)].read().unwrap().get(&(ctx, *d)).copied();
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert a point; first insertion of a key is appended to the file.
+    pub fn put(&self, ctx: u64, d: Dims, p: DesignPoint) {
+        let fresh = self.shards[shard_of(ctx, &d)]
+            .write()
+            .unwrap()
+            .insert((ctx, d), p)
+            .is_none();
+        if !fresh {
+            return;
+        }
+        let mut w = self.writer.lock().unwrap();
+        if let Some(w) = w.as_mut() {
+            let line = entry_json(ctx, &d, &p);
+            if writeln!(w, "{line}").and_then(|_| w.flush()).is_ok() {
+                self.appended.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Total entries across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// True when no entries are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> DbStats {
+        DbStats {
+            entries: self.len(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            appended: self.appended.load(Ordering::Relaxed),
+            loaded: self.loaded,
+        }
+    }
+
+    /// An [`EvalCache`] view scoped to one context key.
+    pub fn scoped(&self, ctx: u64) -> ScopedCache<'_> {
+        ScopedCache { db: self, ctx }
+    }
+}
+
+/// Borrowed [`EvalCache`] over one evaluation context of a [`DesignDb`].
+pub struct ScopedCache<'a> {
+    db: &'a DesignDb,
+    ctx: u64,
+}
+
+impl EvalCache for ScopedCache<'_> {
+    fn get(&mut self, d: &Dims) -> Option<DesignPoint> {
+        self.db.get(self.ctx, d)
+    }
+    fn put(&mut self, d: Dims, p: DesignPoint) {
+        self.db.put(self.ctx, d, p);
+    }
+}
+
+impl CacheProvider for DesignDb {
+    fn cache_for<'a>(
+        &'a self,
+        graph: &OperatorGraph,
+        batch: u64,
+        opts: &SearchOptions,
+        backend: &str,
+    ) -> Box<dyn EvalCache + 'a> {
+        let ctx = context_key(fingerprint(graph), batch, opts, backend);
+        Box::new(self.scoped(ctx))
+    }
+}
+
+// ---- JSONL (de)serialization -------------------------------------------
+
+/// Serialize an [`Evaluation`] as a JSON object.
+pub fn eval_json(e: &Evaluation) -> String {
+    format!(
+        "{{\"cycles\":{},\"seconds\":{},\"throughput\":{},\"energy_j\":{},\"tdp_w\":{},\"area_mm2\":{},\"perf_per_tdp\":{}}}",
+        e.cycles,
+        json::num(e.seconds),
+        json::num(e.throughput),
+        json::num(e.energy_j),
+        json::num(e.tdp_w),
+        json::num(e.area_mm2),
+        json::num(e.perf_per_tdp),
+    )
+}
+
+/// Serialize a [`DesignPoint`] as a JSON object.
+pub fn design_point_json(p: &DesignPoint) -> String {
+    let c = &p.config;
+    format!(
+        "{{\"config\":[{},{},{},{},{}],\"display\":{},\"score\":{},\"eval\":{}}}",
+        c.num_tc,
+        c.tc_x,
+        c.tc_y,
+        c.num_vc,
+        c.vc_w,
+        json::esc(&c.display()),
+        json::num(p.score),
+        eval_json(&p.eval),
+    )
+}
+
+fn entry_json(ctx: u64, d: &Dims, p: &DesignPoint) -> String {
+    format!(
+        "{{\"ctx\":\"{ctx:016x}\",\"dims\":[{},{},{}],\"point\":{}}}",
+        d.tc_x,
+        d.tc_y,
+        d.vc_w,
+        design_point_json(p),
+    )
+}
+
+fn parse_eval(v: &JsonValue) -> Option<Evaluation> {
+    Some(Evaluation {
+        cycles: v.get("cycles")?.as_u64()?,
+        seconds: v.get("seconds")?.as_f64()?,
+        throughput: v.get("throughput")?.as_f64()?,
+        energy_j: v.get("energy_j")?.as_f64()?,
+        tdp_w: v.get("tdp_w")?.as_f64()?,
+        area_mm2: v.get("area_mm2")?.as_f64()?,
+        perf_per_tdp: v.get("perf_per_tdp")?.as_f64()?,
+    })
+}
+
+/// Parse the `point` object written by [`design_point_json`].
+pub fn parse_design_point(v: &JsonValue) -> Option<DesignPoint> {
+    let cfg = v.get("config")?.as_arr()?;
+    if cfg.len() != 5 {
+        return None;
+    }
+    let n = |i: usize| cfg[i].as_u64();
+    let config = ArchConfig {
+        num_tc: n(0)?,
+        tc_x: n(1)?,
+        tc_y: n(2)?,
+        num_vc: n(3)?,
+        vc_w: n(4)?,
+    };
+    Some(DesignPoint { config, eval: parse_eval(v.get("eval")?)?, score: v.get("score")?.as_f64()? })
+}
+
+fn parse_entry(line: &str) -> Option<(u64, Dims, DesignPoint)> {
+    let v = json::parse(line).ok()?;
+    let ctx = u64::from_str_radix(v.get("ctx")?.as_str()?, 16).ok()?;
+    let dims = v.get("dims")?.as_arr()?;
+    if dims.len() != 3 {
+        return None;
+    }
+    let d = Dims { tc_x: dims[0].as_u64()?, tc_y: dims[1].as_u64()?, vc_w: dims[2].as_u64()? };
+    Some((ctx, d, parse_design_point(v.get("point")?)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use std::sync::atomic::AtomicUsize;
+
+    fn temp_db_path(tag: &str) -> PathBuf {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("wham-db-{}-{tag}-{n}.jsonl", std::process::id()))
+    }
+
+    fn point(score: f64) -> DesignPoint {
+        let cfg = presets::tpuv2();
+        DesignPoint { config: cfg, eval: crate::metrics::evaluate(&cfg, 1_000_000, 8, 1e9), score }
+    }
+
+    #[test]
+    fn round_trips_through_jsonl() {
+        let path = temp_db_path("roundtrip");
+        let d = Dims { tc_x: 128, tc_y: 64, vc_w: 32 };
+        {
+            let db = DesignDb::open(&path).unwrap();
+            db.put(7, d, point(1.25));
+            db.put(7, d, point(9.0)); // duplicate key: not re-appended
+            assert_eq!(db.stats().appended, 1);
+        }
+        let db = DesignDb::open(&path).unwrap();
+        assert_eq!(db.len(), 1);
+        assert_eq!(db.stats().loaded, 1);
+        let p = db.get(7, &d).unwrap();
+        assert_eq!(p.score, 1.25);
+        assert_eq!(p.config, presets::tpuv2());
+        assert_eq!(p.eval.cycles, 1_000_000);
+        assert!(db.get(8, &d).is_none(), "different context must miss");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_lines_are_skipped() {
+        let path = temp_db_path("corrupt");
+        let d = Dims { tc_x: 8, tc_y: 8, vc_w: 8 };
+        {
+            let db = DesignDb::open(&path).unwrap();
+            db.put(1, d, point(2.0));
+        }
+        // Simulate a torn append.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{{\"ctx\":\"zz\",").unwrap();
+        }
+        let db = DesignDb::open(&path).unwrap();
+        assert_eq!(db.stats().loaded, 1);
+        assert!(db.get(1, &d).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn context_key_separates_options() {
+        let g = crate::models::training("bert-base", crate::graph::autodiff::Optimizer::Adam)
+            .unwrap();
+        let fp = fingerprint(&g);
+        let base = SearchOptions::default();
+        let k0 = context_key(fp, 4, &base, "native");
+        assert_eq!(k0, context_key(fp, 4, &base, "native"), "key must be stable");
+        let ilp = SearchOptions { use_ilp: true, ..base };
+        assert_ne!(k0, context_key(fp, 4, &ilp, "native"));
+        assert_ne!(k0, context_key(fp, 8, &base, "native"));
+        assert_ne!(k0, context_key(fp, 4, &base, "pjrt"));
+        let eff = SearchOptions {
+            metric: crate::metrics::Metric::PerfPerTdp,
+            min_throughput: 10.0,
+            ..base
+        };
+        assert_ne!(k0, context_key(fp, 4, &eff, "native"));
+        // top_k and hysteresis shape exploration, not per-point values —
+        // they share the cache.
+        let wide = SearchOptions { top_k: 50, hysteresis: 3, ..base };
+        assert_eq!(k0, context_key(fp, 4, &wide, "native"));
+    }
+
+    #[test]
+    fn scoped_cache_feeds_engine() {
+        use crate::cost::native::NativeCost;
+        use crate::search::engine::WhamSearch;
+        let fwd = crate::models::transformer::forward_range(
+            &crate::models::transformer::bert_base(),
+            0,
+            1,
+        );
+        let g = crate::graph::autodiff::training_graph(
+            &fwd,
+            crate::graph::autodiff::Optimizer::SgdMomentum,
+        );
+        let db = DesignDb::in_memory();
+        let opts = SearchOptions::default();
+        let ctx = context_key(fingerprint(&g), 4, &opts, "native");
+        let s = WhamSearch::new(&g, 4, opts);
+        let cold = s.run_cached(&mut NativeCost, &mut db.scoped(ctx));
+        assert!(cold.scheduler_evals > 0);
+        assert_eq!(db.len(), cold.dims_evaluated);
+        let warm = s.run_cached(&mut NativeCost, &mut db.scoped(ctx));
+        assert_eq!(warm.scheduler_evals, 0);
+        assert_eq!(warm.best.config, cold.best.config);
+    }
+}

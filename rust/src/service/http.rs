@@ -1,0 +1,289 @@
+//! Dependency-free HTTP/1.1 plumbing on `std::net` (the offline cache
+//! has no tokio/hyper; blocking OS threads follow the same substitution
+//! the [`crate::coordinator`] makes for the search fan-out).
+//!
+//! One bounded pool of worker threads serves all connections; each
+//! worker owns per-thread state built by [`Handler::make_ctx`] — the
+//! mining service puts its (non-`Sync`) cost backend there. Connections
+//! are `Connection: close`: one request, one response, which keeps the
+//! parser ~100 lines and is plenty for a mining-service request profile
+//! where the work dwarfs connection setup.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Cap on request bodies (1 MiB) — mining requests are tiny JSON.
+const MAX_BODY: usize = 1 << 20;
+/// Cap on the request line + headers (64 KiB).
+const MAX_HEAD: usize = 64 << 10;
+/// Socket read/write timeout. Bounds how long an idle or trickling
+/// client can pin a pool worker; compute time (searches) is unaffected
+/// because it happens between the read and the write.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string (`/search`).
+    pub path: String,
+    /// Raw query string after `?`, possibly empty.
+    pub query: String,
+    pub body: String,
+}
+
+/// An HTTP response to be serialized.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+}
+
+impl Response {
+    /// 200 with a JSON body.
+    pub fn json(body: impl Into<String>) -> Self {
+        Self { status: 200, body: body.into() }
+    }
+
+    /// An error with a `{"error": ...}` JSON body.
+    pub fn error(status: u16, msg: &str) -> Self {
+        Self { status, body: format!("{{\"error\":{}}}", crate::util::json::esc(msg)) }
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            _ => "Internal Server Error",
+        }
+    }
+}
+
+/// Per-worker request handler. `make_ctx` runs *on* the worker thread, so
+/// the context does not need to be `Send` — only the handler itself is
+/// shared.
+pub trait Handler: Send + Sync + 'static {
+    type Ctx;
+    fn make_ctx(&self) -> Self::Ctx;
+    fn handle(&self, ctx: &mut Self::Ctx, req: &Request) -> Response;
+}
+
+/// Spawn the acceptor plus `workers` handler threads on `listener`.
+/// Returns the spawned handles; the threads run until the process exits
+/// (the service has no drain protocol yet — see ROADMAP).
+pub fn serve<H: Handler>(
+    listener: TcpListener,
+    workers: usize,
+    handler: Arc<H>,
+) -> Vec<JoinHandle<()>> {
+    let workers = workers.max(1);
+    let (tx, rx): (Sender<TcpStream>, Receiver<TcpStream>) = channel();
+    let rx = Arc::new(Mutex::new(rx));
+    let mut handles = Vec::with_capacity(workers + 1);
+    for i in 0..workers {
+        let rx = Arc::clone(&rx);
+        let handler = Arc::clone(&handler);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("wham-serve-{i}"))
+                .spawn(move || {
+                    let mut ctx = handler.make_ctx();
+                    loop {
+                        // Hold the lock only to pop one connection.
+                        let stream = match rx.lock().unwrap().recv() {
+                            Ok(s) => s,
+                            Err(_) => return, // acceptor gone
+                        };
+                        serve_connection(&*handler, &mut ctx, stream);
+                    }
+                })
+                .expect("spawning service worker"),
+        );
+    }
+    handles.push(
+        std::thread::Builder::new()
+            .name("wham-accept".to_string())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    match stream {
+                        Ok(s) => {
+                            if tx.send(s).is_err() {
+                                return; // all workers gone
+                            }
+                        }
+                        Err(_) => continue,
+                    }
+                }
+            })
+            .expect("spawning service acceptor"),
+    );
+    handles
+}
+
+fn serve_connection<H: Handler>(handler: &H, ctx: &mut H::Ctx, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let resp = match read_request(&stream) {
+        Ok(req) => {
+            // A panicking handler must cost one response, not one worker.
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                handler.handle(ctx, &req)
+            })) {
+                Ok(resp) => resp,
+                Err(p) => Response::error(
+                    500,
+                    &format!("handler panicked: {}", crate::util::panic_text(&p)),
+                ),
+            }
+        }
+        Err(e) => Response::error(400, &format!("malformed request: {e}")),
+    };
+    let _ = write_response(&stream, &resp);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+fn read_request(stream: &TcpStream) -> std::io::Result<Request> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    // Hard cap on total bytes read per request; an endless request line
+    // hits the cap and errors instead of growing without bound.
+    let mut reader = BufReader::new(stream.take((MAX_HEAD + MAX_BODY) as u64));
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| bad("empty request line"))?.to_string();
+    let target = parts.next().ok_or_else(|| bad("missing request target"))?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Err(bad("connection closed mid-headers"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length =
+                    v.trim().parse().map_err(|_| bad("unparseable content-length"))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(bad("request body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body).map_err(|_| bad("request body is not utf-8"))?;
+    Ok(Request { method, path, query, body })
+}
+
+fn write_response(mut stream: &TcpStream, resp: &Response) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        resp.reason(),
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+/// Minimal blocking HTTP client for `wham client` and the tests: one
+/// request over a fresh connection, returns `(status, body)`.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    stream.flush()?;
+    let mut raw = String::new();
+    // The server closes the connection after one response.
+    BufReader::new(stream).read_to_string(&mut raw)?;
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let (head, resp_body) = raw.split_once("\r\n\r\n").ok_or_else(|| bad("no header break"))?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("bad status line"))?;
+    Ok((status, resp_body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl Handler for Echo {
+        type Ctx = usize;
+        fn make_ctx(&self) -> usize {
+            0
+        }
+        fn handle(&self, ctx: &mut usize, req: &Request) -> Response {
+            *ctx += 1;
+            Response::json(format!(
+                "{{\"method\":{},\"path\":{},\"body\":{},\"n\":{}}}",
+                crate::util::json::esc(&req.method),
+                crate::util::json::esc(&req.path),
+                crate::util::json::esc(&req.body),
+                ctx
+            ))
+        }
+    }
+
+    #[test]
+    fn round_trip_get_and_post() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        serve(listener, 2, Arc::new(Echo));
+        let (status, body) = request(addr, "GET", "/ping?x=1", None).unwrap();
+        assert_eq!(status, 200);
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.get("method").unwrap().as_str(), Some("GET"));
+        assert_eq!(v.get("path").unwrap().as_str(), Some("/ping"));
+
+        let (status, body) = request(addr, "POST", "/echo", Some("{\"k\":1}")).unwrap();
+        assert_eq!(status, 200);
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.get("body").unwrap().as_str(), Some("{\"k\":1}"));
+    }
+
+    #[test]
+    fn concurrent_requests_all_answered() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        serve(listener, 4, Arc::new(Echo));
+        let threads: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    request(addr, "POST", "/echo", Some(&format!("{{\"i\":{i}}}"))).unwrap()
+                })
+            })
+            .collect();
+        for t in threads {
+            let (status, _) = t.join().unwrap();
+            assert_eq!(status, 200);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! `wham serve` — the long-running, concurrent design-mining service.
+//!
+//! The one-shot CLI re-evaluates every `<TC-Dim, VC-Width>` point from
+//! scratch and discards the results on exit. This subsystem turns the
+//! same engine into a server that *accumulates*: a bounded thread pool
+//! ([`http`]) feeds JSON endpoints ([`api`]) whose searches run through
+//! a request-coalescing queue ([`queue`]) and read/write a persistent,
+//! fingerprint-keyed design database ([`cache`]). Repeat searches are
+//! answered without a single scheduler invocation, identical concurrent
+//! requests share one computation, and the accumulated top-k pools
+//! warm-start the distributed global search.
+//!
+//! ```bash
+//! wham serve --port 8484 --workers 8 --db designs.jsonl
+//! wham client search --model bert-base
+//! wham client status
+//! ```
+
+pub mod api;
+pub mod cache;
+pub mod http;
+pub mod queue;
+
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::coordinator::{make_backend, BackendChoice};
+use api::{Api, ServiceState};
+use cache::DesignDb;
+
+/// Configuration of one service instance.
+pub struct ServeOptions {
+    /// Handler threads (each owns a cost backend). Also the bound on
+    /// concurrently-executing requests.
+    pub workers: usize,
+    /// JSONL design-database path; `None` keeps the database in memory.
+    pub db_path: Option<PathBuf>,
+    pub backend: BackendChoice,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { workers: 8, db_path: None, backend: BackendChoice::Auto }
+    }
+}
+
+/// A started service (threads run detached until process exit).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    pub state: Arc<ServiceState>,
+}
+
+/// Start serving on an already-bound listener and return immediately —
+/// the entry point tests use (bind port 0, read `addr` back).
+pub fn start(listener: TcpListener, opts: ServeOptions) -> anyhow::Result<ServerHandle> {
+    // Fail fast on an unusable backend choice (e.g. explicit PJRT with no
+    // artifacts) instead of erroring per-request in every worker.
+    drop(make_backend(opts.backend)?);
+    let db = match &opts.db_path {
+        Some(p) => DesignDb::open(p)?,
+        None => DesignDb::in_memory(),
+    };
+    let workers = opts.workers.max(1);
+    let addr = listener.local_addr()?;
+    let state = Arc::new(ServiceState::new(db, opts.backend, workers));
+    http::serve(listener, workers, Arc::new(Api { state: Arc::clone(&state) }));
+    Ok(ServerHandle { addr, state })
+}
+
+/// Bind `addr`, print a banner, and serve until the process is killed.
+pub fn serve_forever(addr: &str, opts: ServeOptions) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let workers = opts.workers.max(1);
+    let db_desc = opts
+        .db_path
+        .as_ref()
+        .map(|p| p.display().to_string())
+        .unwrap_or_else(|| "in-memory".to_string());
+    let handle = start(listener, opts)?;
+    println!(
+        "wham serve listening on http://{} (workers={workers}, db={db_desc}, {} designs loaded)",
+        handle.addr,
+        handle.state.db.stats().loaded,
+    );
+    println!("endpoints: GET /models  POST /search  POST /evaluate  POST /global  GET /status");
+    loop {
+        std::thread::park();
+    }
+}

@@ -1,0 +1,175 @@
+//! In-flight request coalescing.
+//!
+//! A mining service sees bursts of identical requests (many tenants
+//! asking for the same `<workload, options>` search). Running the search
+//! once and fanning the response out is the classic single-flight
+//! pattern: the first requester becomes the *leader* and computes; every
+//! identical request that arrives while the computation is in flight
+//! becomes a *follower* and blocks on a condvar for the leader's result.
+//! Requests arriving after completion are served by the design database
+//! instead — coalescing only ever holds work that is literally running.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Outcome shared between the leader and its followers.
+type Shared = Arc<Slot>;
+
+struct Slot {
+    done: Mutex<Option<Arc<Result<String, String>>>>,
+    cv: Condvar,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Self { done: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn publish(&self, out: Arc<Result<String, String>>) {
+        *self.done.lock().unwrap() = Some(out);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Arc<Result<String, String>> {
+        let mut g = self.done.lock().unwrap();
+        while g.is_none() {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.as_ref().unwrap().clone()
+    }
+}
+
+/// Coalesces identical in-flight computations by key.
+#[derive(Default)]
+pub struct Coalescer {
+    in_flight: Mutex<HashMap<u64, Shared>>,
+    /// Requests served by joining an in-flight leader.
+    pub coalesced: AtomicU64,
+    /// Leader computations actually run.
+    pub led: AtomicU64,
+}
+
+impl Coalescer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of computations currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.lock().unwrap().len()
+    }
+
+    /// Run `compute` once per concurrent batch of callers sharing `key`.
+    /// Returns the (shared) outcome and whether this caller led. A panic
+    /// in the leader's `compute` is caught and surfaced to every waiter
+    /// as an `Err` — one poisoned request must not wedge its followers.
+    pub fn run<F>(&self, key: u64, compute: F) -> (Arc<Result<String, String>>, bool)
+    where
+        F: FnOnce() -> Result<String, String>,
+    {
+        let (slot, leader) = {
+            let mut m = self.in_flight.lock().unwrap();
+            match m.entry(key) {
+                std::collections::hash_map::Entry::Occupied(e) => (e.get().clone(), false),
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    let s = Arc::new(Slot::new());
+                    v.insert(s.clone());
+                    (s, true)
+                }
+            }
+        };
+        if !leader {
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+            return (slot.wait(), false);
+        }
+        self.led.fetch_add(1, Ordering::Relaxed);
+        let out = Arc::new(match catch_unwind(AssertUnwindSafe(compute)) {
+            Ok(r) => r,
+            Err(p) => {
+                Err(format!("search worker panicked: {}", crate::util::panic_text(&p)))
+            }
+        });
+        // Unregister *before* publishing so a request racing with the
+        // tail of the computation either joins this result or starts a
+        // fresh computation — never waits on a slot nobody will fill.
+        self.in_flight.lock().unwrap().remove(&key);
+        slot.publish(out.clone());
+        (out, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn identical_keys_coalesce_to_one_computation() {
+        let c = Arc::new(Coalescer::new());
+        let runs = Arc::new(AtomicUsize::new(0));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                let runs = Arc::clone(&runs);
+                let gate = Arc::clone(&gate);
+                std::thread::spawn(move || {
+                    let (out, _) = c.run(42, || {
+                        runs.fetch_add(1, Ordering::SeqCst);
+                        // Block until every thread has had a chance to join.
+                        let (lock, cv) = &*gate;
+                        let mut open = lock.lock().unwrap();
+                        while !*open {
+                            open = cv.wait(open).unwrap();
+                        }
+                        Ok("result".to_string())
+                    });
+                    out
+                })
+            })
+            .collect();
+
+        // Open the gate only once all 7 followers joined the leader, so
+        // no thread can arrive late and become a second leader.
+        while c.coalesced.load(Ordering::SeqCst) < 7 {
+            std::thread::yield_now();
+        }
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        for t in threads {
+            let out = t.join().unwrap();
+            assert_eq!(out.as_ref().as_ref().unwrap(), "result");
+        }
+        assert_eq!(runs.load(Ordering::SeqCst), 1, "leader must run exactly once");
+        assert_eq!(c.led.load(Ordering::Relaxed), 1);
+        assert_eq!(c.coalesced.load(Ordering::Relaxed), 7);
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn different_keys_do_not_coalesce() {
+        let c = Coalescer::new();
+        let (a, led_a) = c.run(1, || Ok("a".into()));
+        let (b, led_b) = c.run(2, || Ok("b".into()));
+        assert!(led_a && led_b);
+        assert_eq!(a.as_ref().as_ref().unwrap(), "a");
+        assert_eq!(b.as_ref().as_ref().unwrap(), "b");
+    }
+
+    #[test]
+    fn leader_panic_becomes_error_for_everyone() {
+        let c = Coalescer::new();
+        let (out, leader) = c.run(7, || panic!("boom"));
+        assert!(leader);
+        assert!(out.as_ref().as_ref().unwrap_err().contains("boom"));
+        // The key is free again afterwards.
+        let (out, _) = c.run(7, || Ok("recovered".into()));
+        assert_eq!(out.as_ref().as_ref().unwrap(), "recovered");
+    }
+}

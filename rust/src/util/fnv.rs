@@ -1,0 +1,66 @@
+//! FNV-1a 64-bit hashing, shared by the workload fingerprint, the
+//! design-database keys, and the request-coalescing keys so the fold
+//! logic (and its constants) exist exactly once.
+
+/// FNV-1a 64-bit offset basis.
+pub const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime (0x100000001b3).
+pub const PRIME: u64 = 0x100_0000_01b3;
+
+/// A running FNV-1a state with by-value chaining.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv(pub u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv {
+    /// Start from the offset basis.
+    pub fn new() -> Self {
+        Fnv(OFFSET)
+    }
+
+    /// Fold in raw bytes.
+    pub fn bytes(mut self, bs: &[u8]) -> Self {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(PRIME);
+        }
+        self
+    }
+
+    /// Fold in one `u64` (little-endian bytes).
+    pub fn word(self, x: u64) -> Self {
+        self.bytes(&x.to_le_bytes())
+    }
+
+    /// Fold in a slice of `u64`s.
+    pub fn words(mut self, xs: &[u64]) -> Self {
+        for &x in xs {
+            self = self.word(x);
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sensitive() {
+        let a = Fnv::new().word(1).word(2).0;
+        assert_eq!(a, Fnv::new().word(1).word(2).0);
+        assert_ne!(a, Fnv::new().word(2).word(1).0);
+        assert_ne!(a, Fnv::new().word(1).0);
+        assert_ne!(Fnv::new().bytes(b"native").0, Fnv::new().bytes(b"pjrt").0);
+    }
+
+    #[test]
+    fn prime_is_the_standard_fnv64_prime() {
+        assert_eq!(PRIME, 1_099_511_628_211);
+    }
+}

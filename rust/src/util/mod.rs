@@ -6,9 +6,23 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fnv;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod table;
+
+/// Best-effort text of a caught panic payload (shared by the coordinator
+/// workers and the service's request coalescer).
+pub fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
 
 /// Integer ceiling division. The cost model and schedulers use this in
 /// many places; keep it `u64` so GEMM tile products cannot overflow.

@@ -1,0 +1,168 @@
+//! End-to-end tests of `wham serve`: boot the real server on ephemeral
+//! ports, drive it over real `TcpStream`s, and verify the three service
+//! guarantees — repeat searches are answered from the design database,
+//! identical concurrent requests coalesce to one computation, and a
+//! restart with the same `--db` file answers previously-mined searches
+//! without re-running the scheduler.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+
+use wham::coordinator::BackendChoice;
+use wham::service::http::request;
+use wham::service::{start, ServeOptions, ServerHandle};
+use wham::util::json::{parse, JsonValue};
+
+fn boot(db_path: Option<PathBuf>, workers: usize) -> ServerHandle {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    start(listener, ServeOptions { workers, db_path, backend: BackendChoice::Native }).unwrap()
+}
+
+fn get_json(h: &ServerHandle, method: &str, path: &str, body: Option<&str>) -> (u16, JsonValue) {
+    let (status, body) = request(h.addr, method, path, body).unwrap();
+    let v = parse(&body).unwrap_or_else(|e| panic!("unparseable response {body:?}: {e}"));
+    (status, v)
+}
+
+fn u(v: &JsonValue, path: &[&str]) -> u64 {
+    let mut cur = v;
+    for p in path {
+        cur = cur.get(p).unwrap_or_else(|| panic!("missing field {p:?} in {v:?}"));
+    }
+    cur.as_u64().unwrap_or_else(|| panic!("field {path:?} is not a number"))
+}
+
+const SEARCH_BODY: &str = "{\"model\":\"bert-base\"}";
+
+fn temp_db(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("wham-service-e2e-{}-{tag}.jsonl", std::process::id()))
+}
+
+#[test]
+fn second_search_is_served_from_the_design_db() {
+    let h = boot(None, 2);
+
+    let (status, first) = get_json(&h, "POST", "/search", Some(SEARCH_BODY));
+    assert_eq!(status, 200);
+    assert_eq!(first.get("model").unwrap().as_str(), Some("bert-base"));
+    assert!(u(&first, &["scheduler_evals"]) > 0, "cold search must run the scheduler");
+    assert_eq!(u(&first, &["cache_hits"]), 0);
+    let fp = first.get("fingerprint").unwrap().as_str().unwrap().to_string();
+    assert_eq!(fp.len(), 16, "fingerprint is 16 hex digits");
+
+    let (status, second) = get_json(&h, "POST", "/search", Some(SEARCH_BODY));
+    assert_eq!(status, 200);
+    assert_eq!(u(&second, &["scheduler_evals"]), 0, "repeat search must be all cache hits");
+    assert_eq!(u(&second, &["cache_hits"]), u(&second, &["dims_evaluated"]));
+    assert_eq!(second.get("fingerprint").unwrap().as_str().unwrap(), fp);
+    assert_eq!(
+        second.get("best").unwrap().get("display").unwrap().as_str(),
+        first.get("best").unwrap().get("display").unwrap().as_str(),
+    );
+
+    let (status, st) = get_json(&h, "GET", "/status", None);
+    assert_eq!(status, 200);
+    assert_eq!(u(&st, &["search", "cold"]), 1);
+    assert_eq!(u(&st, &["search", "warm"]), 1);
+    assert!(u(&st, &["db", "hits"]) > 0, "second search must hit the db");
+    assert!(u(&st, &["db", "entries"]) > 0);
+}
+
+#[test]
+fn concurrent_identical_searches_run_the_search_once() {
+    const CLIENTS: usize = 8;
+    let h = boot(None, CLIENTS);
+
+    let threads: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let addr = h.addr;
+            std::thread::spawn(move || request(addr, "POST", "/search", Some(SEARCH_BODY)).unwrap())
+        })
+        .collect();
+    let mut bests = Vec::new();
+    for t in threads {
+        let (status, body) = t.join().unwrap();
+        assert_eq!(status, 200, "body: {body}");
+        let v = parse(&body).unwrap();
+        bests.push(
+            v.get("best").unwrap().get("display").unwrap().as_str().unwrap().to_string(),
+        );
+    }
+    assert!(bests.windows(2).all(|w| w[0] == w[1]), "all clients must agree: {bests:?}");
+
+    let (_, st) = get_json(&h, "GET", "/status", None);
+    // Exactly one request paid for scheduler work; everyone else either
+    // joined the in-flight leader or read the warm database.
+    assert_eq!(u(&st, &["search", "cold"]), 1, "status: {st:?}");
+    assert_eq!(u(&st, &["search", "requests"]), CLIENTS as u64);
+    let coalesced = u(&st, &["coalescer", "coalesced"]);
+    let warm = u(&st, &["search", "warm"]);
+    assert_eq!(coalesced + warm, (CLIENTS - 1) as u64, "status: {st:?}");
+}
+
+#[test]
+fn restart_with_same_db_answers_without_scheduler() {
+    let db = temp_db("restart");
+    let _ = std::fs::remove_file(&db);
+
+    let a = boot(Some(db.clone()), 2);
+    let (status, cold) = get_json(&a, "POST", "/search", Some(SEARCH_BODY));
+    assert_eq!(status, 200);
+    assert!(u(&cold, &["scheduler_evals"]) > 0);
+    assert!(a.state.db.stats().appended > 0, "mined designs must reach the file");
+    drop(a);
+
+    // "Restart": a brand-new server process state over the same file.
+    let b = boot(Some(db.clone()), 2);
+    let (_, st) = get_json(&b, "GET", "/status", None);
+    assert!(u(&st, &["db", "loaded"]) > 0, "boot must load the mined designs");
+
+    let (status, warm) = get_json(&b, "POST", "/search", Some(SEARCH_BODY));
+    assert_eq!(status, 200);
+    assert_eq!(
+        u(&warm, &["scheduler_evals"]),
+        0,
+        "warm path after restart must not run the scheduler"
+    );
+    assert_eq!(
+        warm.get("best").unwrap().get("display").unwrap().as_str(),
+        cold.get("best").unwrap().get("display").unwrap().as_str(),
+    );
+    let (_, st) = get_json(&b, "GET", "/status", None);
+    assert_eq!(u(&st, &["search", "cold"]), 0);
+    assert_eq!(u(&st, &["search", "warm"]), 1);
+
+    let _ = std::fs::remove_file(&db);
+}
+
+#[test]
+fn models_evaluate_and_errors() {
+    let h = boot(None, 2);
+
+    let (status, models) = get_json(&h, "GET", "/models", None);
+    assert_eq!(status, 200);
+    let list = models.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(list.len(), 11);
+    assert!(list.iter().any(|m| m.get("name").unwrap().as_str() == Some("bert-base")));
+
+    let (status, ev) = get_json(
+        &h,
+        "POST",
+        "/evaluate",
+        Some("{\"model\":\"bert-base\",\"config\":[2,128,128,2,128]}"),
+    );
+    assert_eq!(status, 200);
+    assert_eq!(ev.get("config").unwrap().as_str(), Some("<2, 128x128, 2, 128>"));
+    assert!(ev.get("eval").unwrap().get("throughput").unwrap().as_f64().unwrap() > 0.0);
+
+    let (status, _) = get_json(&h, "POST", "/search", Some("{\"model\":\"no-such-model\"}"));
+    assert_eq!(status, 404);
+    let (status, _) = get_json(&h, "POST", "/global", Some("{\"depth\":0}"));
+    assert_eq!(status, 400, "zero depth must be rejected, not panic a worker");
+    let (status, _) = get_json(&h, "POST", "/search", Some("{not json"));
+    assert_eq!(status, 400);
+    let (status, _) = get_json(&h, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    let (status, _) = get_json(&h, "GET", "/search", None);
+    assert_eq!(status, 405);
+}
