@@ -1,0 +1,57 @@
+//! Library callers drive the mining core through `wham::api` — the same
+//! typed request/plan/reply layer behind the CLI and the HTTP service.
+//!
+//! ```bash
+//! cargo run --release --example api_session
+//! ```
+
+use std::sync::Arc;
+
+use wham::api::{EvaluateRequest, SearchRequest, Session, ToJson};
+use wham::arch::presets;
+use wham::coordinator::BackendChoice;
+use wham::service::cache::DesignDb;
+
+fn main() -> anyhow::Result<()> {
+    // A session owns the cost backend; attaching a design database makes
+    // repeat searches free (the `wham serve` warm path, in-process).
+    let db = Arc::new(DesignDb::in_memory());
+    let mut session = Session::new(BackendChoice::Auto)?.with_db(Arc::clone(&db));
+    println!("session backend: {}", session.backend_name());
+
+    // 1. Typed request via the builder; `validate()` + execution happen
+    //    behind `Session::search`.
+    let request = SearchRequest::new("bert-base").top_k(3);
+    let reply = session.search(&request)?;
+    println!(
+        "cold search: best {} score={:.4} ({} dims, {} scheduler evals, {:.0}ms)",
+        reply.best.config.display(),
+        reply.best.score,
+        reply.dims_evaluated,
+        reply.scheduler_evals,
+        reply.wall_ms,
+    );
+    println!("  vs TPUv2 {:.3}x, vs NVDLA {:.3}x", reply.vs_tpuv2, reply.vs_nvdla);
+
+    // 2. Same request again: every point is served from the database.
+    let warm = session.search(&request)?;
+    println!(
+        "warm search: {} scheduler evals, {} cache hits ({} designs in the db)",
+        warm.scheduler_evals,
+        warm.cache_hits,
+        db.len(),
+    );
+    assert_eq!(warm.scheduler_evals, 0, "warm search must not run the scheduler");
+
+    // 3. Evaluate a fixed baseline design on the same workload.
+    let eval = session.evaluate(&EvaluateRequest::new("bert-base", presets::tpuv2()))?;
+    println!(
+        "TPUv2 on bert-base: {:.3} samples/s (fingerprint {})",
+        eval.eval.throughput, eval.fingerprint,
+    );
+
+    // 4. The wire form: these bytes are exactly what `wham client` POSTs
+    //    and what the service parses — one codec on both ends.
+    println!("wire request: {}", request.to_json());
+    Ok(())
+}

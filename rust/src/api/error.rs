@@ -1,0 +1,83 @@
+//! Typed API errors.
+//!
+//! Every front door (CLI, HTTP service, library callers) reports request
+//! failures through [`ApiError`]: a machine-readable [`ErrorKind`] plus a
+//! human message. The HTTP adapter maps kinds to status codes with
+//! [`ApiError::http_status`]; the CLI prints the message; library callers
+//! can match on the kind. This replaces the stringly `Response::error`
+//! calls and `anyhow!` duplication the frontends used to hand-roll.
+
+use std::fmt;
+
+/// What went wrong, at the granularity callers can act on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The request is malformed or semantically invalid (HTTP 400).
+    InvalidRequest,
+    /// A named entity (model, endpoint) does not exist (HTTP 404).
+    NotFound,
+    /// The mining core failed mid-execution (HTTP 500).
+    Internal,
+}
+
+/// A typed API failure: kind + message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ApiError {
+    pub kind: ErrorKind,
+    pub message: String,
+}
+
+impl ApiError {
+    /// A 400-class request error.
+    pub fn invalid(message: impl Into<String>) -> Self {
+        Self { kind: ErrorKind::InvalidRequest, message: message.into() }
+    }
+
+    /// A 404-class lookup failure.
+    pub fn not_found(message: impl Into<String>) -> Self {
+        Self { kind: ErrorKind::NotFound, message: message.into() }
+    }
+
+    /// A 500-class execution failure.
+    pub fn internal(message: impl Into<String>) -> Self {
+        Self { kind: ErrorKind::Internal, message: message.into() }
+    }
+
+    /// The HTTP status code this error maps to.
+    pub fn http_status(&self) -> u16 {
+        match self.kind {
+            ErrorKind::InvalidRequest => 400,
+            ErrorKind::NotFound => 404,
+            ErrorKind::Internal => 500,
+        }
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_mapping() {
+        assert_eq!(ApiError::invalid("x").http_status(), 400);
+        assert_eq!(ApiError::not_found("x").http_status(), 404);
+        assert_eq!(ApiError::internal("x").http_status(), 500);
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(ApiError::not_found("unknown model"))?;
+            Ok(())
+        }
+        assert!(fails().unwrap_err().to_string().contains("unknown model"));
+    }
+}

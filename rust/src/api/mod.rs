@@ -1,0 +1,54 @@
+//! `wham::api` — the typed request/plan/reply layer every front door
+//! shares.
+//!
+//! The mining core (search engine, WHAM-common, distributed global
+//! search) is reachable from many scenarios: the one-shot CLI, the
+//! long-running HTTP service, `wham client`, and library callers. Before
+//! this module each of those re-implemented workload resolution, option
+//! parsing, the TPUv2 Perf/TDP floor, cache/coalescing keys, and JSON —
+//! and they had drifted (the service defaulted a missing batch to 1
+//! where the CLI errored; `/global` emitted Rust `Debug` strings as
+//! JSON). Now there is exactly one path:
+//!
+//! ```text
+//! request ── validate() ──> plan ── Session::run_*() ──> reply
+//!    │                        │                            │
+//!    ├ builders (library)     ├ context_key (design DB)    ├ ToJson (wire out)
+//!    ├ from_args (CLI)        └ coalescing_key (single-    └ FromJson (wire in)
+//!    └ FromJson (HTTP)             flight)
+//! ```
+//!
+//! * [`request`] — [`SearchRequest`], [`EvaluateRequest`],
+//!   [`CommonRequest`], [`GlobalRequest`]: builders, CLI-flag parsing,
+//!   wire codec, validation.
+//! * [`plan`] — validated, executable work + the canonical
+//!   [`context_key`](plan::context_key) / coalescing-key derivations.
+//! * [`reply`] — [`SearchReply`], [`EvaluateReply`], [`CommonReply`],
+//!   [`GlobalReply`], [`ModelsReply`], [`StatusReply`]: typed results
+//!   with a symmetric wire codec.
+//! * [`session`] — the [`Session`] facade owning the cost backend and
+//!   optional design database.
+//! * [`progress`] — [`ProgressSink`]: trajectory streaming plus
+//!   cooperative deadline/cancellation, threaded through the engine.
+//! * [`error`] — [`ApiError`] with an HTTP-status mapping.
+//! * [`wire`] — the [`ToJson`]/[`FromJson`] traits and strict field
+//!   accessors.
+
+pub mod error;
+pub mod plan;
+pub mod progress;
+pub mod reply;
+pub mod request;
+pub mod session;
+pub mod wire;
+
+pub use error::{ApiError, ErrorKind};
+pub use plan::{context_key, resolve_workload};
+pub use progress::{DeadlineSink, NullSink, Progress, ProgressSink};
+pub use reply::{
+    CommonReply, EvaluateReply, GlobalReply, GlobalRow, ModelEntry, ModelsReply, SearchReply,
+    StatusReply,
+};
+pub use request::{CommonRequest, EvaluateRequest, GlobalRequest, SearchRequest};
+pub use session::{tpuv2_floor, Session};
+pub use wire::{FromJson, ToJson};

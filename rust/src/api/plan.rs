@@ -1,0 +1,222 @@
+//! Executable plans — validated requests with resolved workloads — plus
+//! the canonical key derivations every frontend shares.
+//!
+//! Two keys exist, with different scopes:
+//! * [`context_key`] identifies one *evaluation context* (workload
+//!   fingerprint × batch × value-shaping options × backend). Design
+//!   points are memoized under it in the persistent
+//!   [`crate::service::cache::DesignDb`]; options that only shape
+//!   exploration (`top_k`, `hysteresis`) are deliberately excluded so
+//!   differently-shaped requests share mined points.
+//! * `coalescing_key` (per plan) identifies one *response*: everything
+//!   that changes the reply bytes, folded through FNV-1a. It replaces the
+//!   service's old additive salt (`key + top_k + (hysteresis << 32)`),
+//!   whose sums collide — e.g. `k = 2^32` versus `hysteresis = 1`.
+
+use crate::api::error::ApiError;
+use crate::arch::ArchConfig;
+use crate::distributed::partition::PartitionedModel;
+use crate::distributed::Scheme;
+use crate::graph::{Fingerprint, OperatorGraph};
+use crate::metrics::Metric;
+use crate::search::engine::SearchOptions;
+use crate::util::fnv::Fnv;
+
+/// Namespace tags keeping per-endpoint keys disjoint.
+const NS_SEARCH: u64 = 0x73; // 's'
+const NS_COMMON: u64 = 0x63; // 'c'
+const NS_GLOBAL: u64 = 0x67; // 'g'
+
+/// Resolve a registry workload to its training graph and batch size —
+/// the lookup every per-workload frontend starts with. A registry miss is
+/// a [`404`](crate::api::ErrorKind::NotFound), never a silent default.
+pub fn resolve_workload(name: &str) -> Result<(OperatorGraph, u64), ApiError> {
+    let graph = crate::models::training(name, crate::graph::autodiff::Optimizer::Adam)
+        .ok_or_else(|| {
+            ApiError::not_found(format!(
+                "unknown model {name:?} (see `wham models` / GET /models)"
+            ))
+        })?;
+    let batch = crate::models::info(name)
+        .ok_or_else(|| ApiError::not_found(format!("model {name:?} missing from the registry")))?
+        .batch;
+    Ok((graph, batch))
+}
+
+/// Key identifying one evaluation context (see module docs). Two
+/// searches with the same context key may share every per-dims point.
+pub fn context_key(fp: Fingerprint, batch: u64, opts: &SearchOptions, backend: &str) -> u64 {
+    Fnv::new()
+        .word(fp.0)
+        .word(batch)
+        .word(match opts.metric {
+            Metric::Throughput => 0,
+            Metric::PerfPerTdp => 1,
+        })
+        .word(opts.min_throughput.to_bits())
+        .word(opts.constraints.max_area_mm2.to_bits())
+        .word(opts.constraints.max_power_w.to_bits())
+        .word(opts.use_ilp as u64)
+        .word(opts.ilp_node_budget)
+        .bytes(backend.as_bytes())
+        .0
+}
+
+fn fold_deadline(f: Fnv, deadline_ms: Option<u64>) -> Fnv {
+    // Deadlines truncate the reply, so they must separate coalescing
+    // batches; `u64::MAX` marks "none" (an explicit MAX is equivalent).
+    f.word(deadline_ms.unwrap_or(u64::MAX))
+}
+
+/// Validated `/search` work: resolved workload + engine options (the
+/// Perf/TDP floor is resolved later, by the session, because it needs a
+/// cost backend).
+pub struct SearchPlan {
+    pub model: String,
+    pub fingerprint: Fingerprint,
+    pub graph: OperatorGraph,
+    pub batch: u64,
+    pub opts: SearchOptions,
+    pub deadline_ms: Option<u64>,
+}
+
+impl SearchPlan {
+    /// Single-flight key: everything that shapes the *reply*, so
+    /// followers can share the leader's bytes verbatim.
+    pub fn coalescing_key(&self, backend: &str) -> u64 {
+        fold_deadline(
+            Fnv::new()
+                .word(NS_SEARCH)
+                .word(context_key(self.fingerprint, self.batch, &self.opts, backend))
+                .word(self.opts.top_k as u64)
+                .word(self.opts.hysteresis as u64),
+            self.deadline_ms,
+        )
+        .0
+    }
+}
+
+/// Validated `/evaluate` work.
+pub struct EvaluatePlan {
+    pub model: String,
+    pub fingerprint: Fingerprint,
+    pub graph: OperatorGraph,
+    pub batch: u64,
+    pub config: ArchConfig,
+}
+
+/// Validated `/common` work: the resolved workload set.
+pub struct CommonPlan {
+    pub models: Vec<String>,
+    /// `(name, training graph, batch)` per workload, in request order.
+    pub workloads: Vec<(String, OperatorGraph, u64)>,
+    pub opts: SearchOptions,
+}
+
+impl CommonPlan {
+    /// Single-flight key over the whole workload set.
+    pub fn coalescing_key(&self, backend: &str) -> u64 {
+        let mut f = Fnv::new().word(NS_COMMON);
+        for (name, _, batch) in &self.workloads {
+            f = f.bytes(name.as_bytes()).word(0).word(*batch);
+        }
+        f.word(self.opts.top_k as u64)
+            .word(self.opts.hysteresis as u64)
+            .word(self.opts.use_ilp as u64)
+            .word(match self.opts.metric {
+                Metric::Throughput => 0,
+                Metric::PerfPerTdp => 1,
+            })
+            .bytes(backend.as_bytes())
+            .0
+    }
+}
+
+/// Validated `/global` work: partitioned models plus search shape.
+pub struct GlobalPlan {
+    pub models: Vec<String>,
+    pub parts: Vec<PartitionedModel>,
+    pub depth: u64,
+    pub tmp: u64,
+    pub scheme: Scheme,
+    pub metric: Metric,
+    pub top_k: usize,
+    /// Pruner hysteresis of the per-stage local searches.
+    pub hysteresis: u32,
+    /// Exact B&B "ILP" in the per-stage local searches.
+    pub use_ilp: bool,
+    pub deadline_ms: Option<u64>,
+}
+
+impl GlobalPlan {
+    /// Single-flight key over the full request shape.
+    pub fn coalescing_key(&self, backend: &str) -> u64 {
+        let mut f = Fnv::new().word(NS_GLOBAL);
+        for n in &self.models {
+            f = f.bytes(n.as_bytes()).word(0);
+        }
+        fold_deadline(
+            f.word(self.depth)
+                .word(self.tmp)
+                .word(self.top_k as u64)
+                .word(self.hysteresis as u64)
+                .word(self.use_ilp as u64)
+                .word(matches!(self.scheme, Scheme::GPipe) as u64)
+                .word(matches!(self.metric, Metric::PerfPerTdp) as u64)
+                .bytes(backend.as_bytes()),
+            self.deadline_ms,
+        )
+        .0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::request::{GlobalRequest, SearchRequest};
+
+    #[test]
+    fn coalescing_key_fixes_the_additive_salt_collision() {
+        // Under the old salt (`key + top_k + (hysteresis << 32)`) these
+        // two requests collided: 2^32 + 0<<32 == 0 + 1<<32.
+        let a = SearchRequest::new("bert-base").top_k((1u64 << 32) as usize).hysteresis(0);
+        let b = SearchRequest::new("bert-base").top_k(1).hysteresis(1);
+        let (pa, pb) = (a.validate().unwrap(), b.validate().unwrap());
+        let old = |k: u64, h: u64| {
+            context_key(pa.fingerprint, pa.batch, &pa.opts, "native")
+                .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                .wrapping_add(k)
+                .wrapping_add(h << 32)
+        };
+        assert_eq!(old(1 << 32, 0), old(0, 1), "the old salt collides by construction");
+        assert_ne!(pa.coalescing_key("native"), pb.coalescing_key("native"));
+    }
+
+    #[test]
+    fn keys_are_stable_and_separate_requests() {
+        let p = SearchRequest::new("bert-base").validate().unwrap();
+        assert_eq!(p.coalescing_key("native"), p.coalescing_key("native"));
+        assert_ne!(p.coalescing_key("native"), p.coalescing_key("pjrt"));
+        let q = SearchRequest::new("bert-base").top_k(3).validate().unwrap();
+        assert_ne!(p.coalescing_key("native"), q.coalescing_key("native"));
+        let d = SearchRequest::new("bert-base").deadline_ms(5).validate().unwrap();
+        assert_ne!(p.coalescing_key("native"), d.coalescing_key("native"));
+    }
+
+    #[test]
+    fn global_key_separates_shape() {
+        let a = GlobalRequest::new().depth(4).validate().unwrap();
+        let b = GlobalRequest::new().depth(8).validate().unwrap();
+        assert_ne!(a.coalescing_key("native"), b.coalescing_key("native"));
+        let c = GlobalRequest::new().depth(4).scheme(Scheme::PipeDream1F1B).validate().unwrap();
+        assert_ne!(a.coalescing_key("native"), c.coalescing_key("native"));
+    }
+
+    #[test]
+    fn resolve_workload_misses_are_404() {
+        assert_eq!(resolve_workload("nope").unwrap_err().http_status(), 404);
+        let (g, batch) = resolve_workload("bert-base").unwrap();
+        assert!(g.len() > 20);
+        assert_eq!(batch, 4);
+    }
+}

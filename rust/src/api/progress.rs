@@ -1,0 +1,118 @@
+//! Search-progress observation and cooperative cancellation.
+//!
+//! A [`ProgressSink`] is threaded through [`crate::search::engine::WhamSearch`]
+//! and [`crate::distributed::global_search`]: the engine reports every
+//! design-point evaluation as a [`Progress`] event, and the sink's boolean
+//! return is a cooperative cancellation signal — returning `false` makes
+//! the search stop exploring and return its best-so-far result (flagged
+//! `cancelled` in the outcome). This is how the API layer implements
+//! per-request deadlines and how frontends stream trajectories without
+//! the engine knowing who is watching.
+
+use std::time::{Duration, Instant};
+
+/// One observed step of a running search.
+#[derive(Debug, Clone, Copy)]
+pub struct Progress {
+    /// Which layer emitted the event: `"search"` for per-workload
+    /// dimension evaluations, `"global"` for top-level candidate
+    /// evaluations of the distributed search.
+    pub phase: &'static str,
+    /// Wall-clock since that layer's search started.
+    pub elapsed: Duration,
+    /// Points evaluated so far in this phase.
+    pub points: usize,
+    /// Best score seen so far (higher is better).
+    pub best_score: f64,
+}
+
+/// Observer of search progress; also the cancellation channel.
+pub trait ProgressSink {
+    /// Observe one step. Return `false` to request cooperative
+    /// cancellation: the search stops exploring and returns best-so-far.
+    fn on_progress(&mut self, p: &Progress) -> bool;
+}
+
+/// Ignores progress and never cancels.
+pub struct NullSink;
+
+impl ProgressSink for NullSink {
+    fn on_progress(&mut self, _p: &Progress) -> bool {
+        true
+    }
+}
+
+/// Any `FnMut(&Progress) -> bool` closure is a sink.
+impl<F: FnMut(&Progress) -> bool> ProgressSink for F {
+    fn on_progress(&mut self, p: &Progress) -> bool {
+        self(p)
+    }
+}
+
+/// Cancels cooperatively once a wall-clock budget is exhausted,
+/// forwarding every event to an optional inner sink first.
+pub struct DeadlineSink<'a> {
+    deadline: Instant,
+    inner: Option<&'a mut (dyn ProgressSink + 'a)>,
+}
+
+impl<'a> DeadlineSink<'a> {
+    /// Cancel all searches `budget` from now.
+    pub fn new(budget: Duration) -> Self {
+        Self { deadline: Instant::now() + budget, inner: None }
+    }
+
+    /// Like [`DeadlineSink::new`], but still forwarding events to (and
+    /// honoring cancellations from) `inner`.
+    pub fn wrapping(budget: Duration, inner: &'a mut (dyn ProgressSink + 'a)) -> Self {
+        Self { deadline: Instant::now() + budget, inner: Some(inner) }
+    }
+}
+
+impl ProgressSink for DeadlineSink<'_> {
+    fn on_progress(&mut self, p: &Progress) -> bool {
+        let inner_go = match self.inner.as_mut() {
+            Some(s) => s.on_progress(p),
+            None => true,
+        };
+        inner_go && Instant::now() < self.deadline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step() -> Progress {
+        Progress { phase: "search", elapsed: Duration::ZERO, points: 1, best_score: 1.0 }
+    }
+
+    #[test]
+    fn null_sink_never_cancels() {
+        assert!(NullSink.on_progress(&step()));
+    }
+
+    #[test]
+    fn closure_is_a_sink() {
+        let mut seen = 0usize;
+        let mut sink = |p: &Progress| {
+            seen += p.points;
+            true
+        };
+        assert!(ProgressSink::on_progress(&mut sink, &step()));
+        assert_eq!(seen, 1);
+    }
+
+    #[test]
+    fn zero_deadline_cancels_immediately() {
+        let mut d = DeadlineSink::new(Duration::ZERO);
+        assert!(!d.on_progress(&step()));
+    }
+
+    #[test]
+    fn wrapping_honors_inner_cancellation() {
+        let mut inner = |_: &Progress| false;
+        let mut d = DeadlineSink::wrapping(Duration::from_secs(3600), &mut inner);
+        assert!(!d.on_progress(&step()));
+    }
+}

@@ -1,0 +1,592 @@
+//! Typed replies — the single definition of every front door's outputs.
+//!
+//! Each reply implements [`ToJson`] (what the service and `wham client`
+//! emit) and [`FromJson`] (what clients and tests parse), so wire bytes
+//! are produced and consumed by the same code on both ends. Field names
+//! and meanings are wire-compatible with the pre-`api` hand-rolled
+//! service JSON; additions (`vs_tpuv2`, `vs_nvdla`, `config_vec`,
+//! `cancelled`, …) only ever extend objects.
+
+use crate::api::error::ApiError;
+use crate::api::request::scheme_wire_name;
+use crate::api::wire::{
+    config_arr, opt_str, parse_config, parse_design_point, req_arr, req_bool, req_f64, req_str,
+    req_u64, FromJson, ToJson,
+};
+use crate::arch::ArchConfig;
+use crate::distributed::Scheme;
+use crate::graph::Fingerprint;
+use crate::metrics::{Evaluation, Metric};
+use crate::search::DesignPoint;
+use crate::util::json::{arr, str_arr, JsonValue, Obj};
+
+fn parse_fingerprint(v: &JsonValue) -> Result<Fingerprint, ApiError> {
+    Fingerprint::parse(&req_str(v, "fingerprint")?)
+        .ok_or_else(|| ApiError::invalid("\"fingerprint\" must be 16 hex digits"))
+}
+
+fn parse_metric_field(v: &JsonValue) -> Result<Metric, ApiError> {
+    req_str(v, "metric")?.parse().map_err(ApiError::invalid)
+}
+
+fn parse_points(v: &JsonValue, key: &str) -> Result<Vec<DesignPoint>, ApiError> {
+    req_arr(v, key)?
+        .iter()
+        .map(|p| {
+            parse_design_point(p)
+                .ok_or_else(|| ApiError::invalid(format!("malformed design point in \"{key}\"")))
+        })
+        .collect()
+}
+
+// ---- GET /models --------------------------------------------------------
+
+/// One workload-zoo row (paper Table 4).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub task: String,
+    pub batch: u64,
+    pub accelerators: u64,
+    pub distributed_only: bool,
+}
+
+/// Reply of `GET /models` / [`crate::api::Session::models`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelsReply {
+    pub models: Vec<ModelEntry>,
+}
+
+impl ToJson for ModelsReply {
+    fn to_json(&self) -> String {
+        let rows = self.models.iter().map(|m| {
+            Obj::new()
+                .str("name", &m.name)
+                .str("task", &m.task)
+                .u64("batch", m.batch)
+                .u64("accelerators", m.accelerators)
+                .bool("distributed_only", m.distributed_only)
+                .finish()
+        });
+        Obj::new().raw("models", &arr(rows)).finish()
+    }
+}
+
+impl FromJson for ModelsReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let models = req_arr(v, "models")?
+            .iter()
+            .map(|m| {
+                Ok(ModelEntry {
+                    name: req_str(m, "name")?,
+                    task: req_str(m, "task")?,
+                    batch: req_u64(m, "batch")?,
+                    accelerators: req_u64(m, "accelerators")?,
+                    distributed_only: req_bool(m, "distributed_only")?,
+                })
+            })
+            .collect::<Result<_, ApiError>>()?;
+        Ok(Self { models })
+    }
+}
+
+// ---- POST /search -------------------------------------------------------
+
+/// Reply of `POST /search` / [`crate::api::Session::search`].
+#[derive(Debug, Clone)]
+pub struct SearchReply {
+    pub model: String,
+    pub fingerprint: Fingerprint,
+    pub backend: String,
+    pub metric: Metric,
+    pub best: DesignPoint,
+    pub top: Vec<DesignPoint>,
+    pub dims_evaluated: u64,
+    pub scheduler_evals: u64,
+    pub cache_hits: u64,
+    /// Best-design throughput over the TPUv2 baseline's.
+    pub vs_tpuv2: f64,
+    /// Best-design throughput over the scaled-NVDLA baseline's.
+    pub vs_nvdla: f64,
+    /// True when a deadline/cancellation truncated the search.
+    pub cancelled: bool,
+    pub wall_ms: f64,
+}
+
+impl ToJson for SearchReply {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .str("model", &self.model)
+            .str("fingerprint", &self.fingerprint.to_string())
+            .str("backend", &self.backend)
+            .str("metric", &self.metric.to_string())
+            .raw("best", &self.best.to_json())
+            .raw("top", &arr(self.top.iter().map(|p| p.to_json())))
+            .u64("dims_evaluated", self.dims_evaluated)
+            .u64("scheduler_evals", self.scheduler_evals)
+            .u64("cache_hits", self.cache_hits)
+            .f64("vs_tpuv2", self.vs_tpuv2)
+            .f64("vs_nvdla", self.vs_nvdla)
+            .bool("cancelled", self.cancelled)
+            .f64("wall_ms", self.wall_ms)
+            .finish()
+    }
+}
+
+impl FromJson for SearchReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        Ok(Self {
+            model: req_str(v, "model")?,
+            fingerprint: parse_fingerprint(v)?,
+            backend: req_str(v, "backend")?,
+            metric: parse_metric_field(v)?,
+            best: DesignPoint::from_json(
+                v.get("best").ok_or_else(|| ApiError::invalid("body must include \"best\""))?,
+            )?,
+            top: parse_points(v, "top")?,
+            dims_evaluated: req_u64(v, "dims_evaluated")?,
+            scheduler_evals: req_u64(v, "scheduler_evals")?,
+            cache_hits: req_u64(v, "cache_hits")?,
+            vs_tpuv2: req_f64(v, "vs_tpuv2")?,
+            vs_nvdla: req_f64(v, "vs_nvdla")?,
+            cancelled: req_bool(v, "cancelled")?,
+            wall_ms: req_f64(v, "wall_ms")?,
+        })
+    }
+}
+
+// ---- POST /evaluate -----------------------------------------------------
+
+/// Reply of `POST /evaluate` / [`crate::api::Session::evaluate`].
+#[derive(Debug, Clone)]
+pub struct EvaluateReply {
+    pub model: String,
+    pub fingerprint: Fingerprint,
+    pub config: ArchConfig,
+    pub eval: Evaluation,
+}
+
+impl ToJson for EvaluateReply {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .str("model", &self.model)
+            .str("fingerprint", &self.fingerprint.to_string())
+            // `config` stays the display string for wire compatibility;
+            // `config_vec` is the typed form clients parse back.
+            .str("config", &self.config.display())
+            .raw("config_vec", &config_arr(&self.config))
+            .raw("eval", &self.eval.to_json())
+            .finish()
+    }
+}
+
+impl FromJson for EvaluateReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        Ok(Self {
+            model: req_str(v, "model")?,
+            fingerprint: parse_fingerprint(v)?,
+            config: parse_config(
+                v.get("config_vec")
+                    .ok_or_else(|| ApiError::invalid("body must include \"config_vec\""))?,
+            )?,
+            eval: Evaluation::from_json(
+                v.get("eval").ok_or_else(|| ApiError::invalid("body must include \"eval\""))?,
+            )?,
+        })
+    }
+}
+
+// ---- POST /common -------------------------------------------------------
+
+/// Reply of `POST /common` / [`crate::api::Session::common`].
+#[derive(Debug, Clone)]
+pub struct CommonReply {
+    pub models: Vec<String>,
+    pub metric: Metric,
+    pub backend: String,
+    /// The best common config and its weighted score.
+    pub config: ArchConfig,
+    pub score: f64,
+    /// Per-workload design points of the common config, in `models` order.
+    pub per_workload: Vec<(String, DesignPoint)>,
+    pub dims_evaluated: u64,
+    pub wall_ms: f64,
+}
+
+impl ToJson for CommonReply {
+    fn to_json(&self) -> String {
+        let rows = self.per_workload.iter().map(|(name, p)| {
+            Obj::new().str("model", name).raw("point", &p.to_json()).finish()
+        });
+        Obj::new()
+            .raw("models", &str_arr(self.models.iter().map(String::as_str)))
+            .str("metric", &self.metric.to_string())
+            .str("backend", &self.backend)
+            .str("config", &self.config.display())
+            .raw("config_vec", &config_arr(&self.config))
+            .f64("score", self.score)
+            .raw("per_workload", &arr(rows))
+            .u64("dims_evaluated", self.dims_evaluated)
+            .f64("wall_ms", self.wall_ms)
+            .finish()
+    }
+}
+
+impl FromJson for CommonReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let per_workload = req_arr(v, "per_workload")?
+            .iter()
+            .map(|row| {
+                let name = req_str(row, "model")?;
+                let p = row
+                    .get("point")
+                    .and_then(parse_design_point)
+                    .ok_or_else(|| ApiError::invalid("malformed \"per_workload\" row"))?;
+                Ok((name, p))
+            })
+            .collect::<Result<_, ApiError>>()?;
+        Ok(Self {
+            models: crate::api::wire::opt_str_list(v, "models")?
+                .ok_or_else(|| ApiError::invalid("body must include \"models\""))?,
+            metric: parse_metric_field(v)?,
+            backend: req_str(v, "backend")?,
+            config: parse_config(
+                v.get("config_vec")
+                    .ok_or_else(|| ApiError::invalid("body must include \"config_vec\""))?,
+            )?,
+            score: req_f64(v, "score")?,
+            per_workload,
+            dims_evaluated: req_u64(v, "dims_evaluated")?,
+            wall_ms: req_f64(v, "wall_ms")?,
+        })
+    }
+}
+
+// ---- POST /global -------------------------------------------------------
+
+/// One model's outcome under one design family.
+#[derive(Debug, Clone)]
+pub struct GlobalRow {
+    pub model: String,
+    /// Unique per-stage config display strings.
+    pub configs: Vec<String>,
+    pub throughput: f64,
+    pub perf_per_tdp: f64,
+    /// Pipeline throughput over the TPUv2-pipeline baseline's.
+    pub vs_tpuv2: f64,
+}
+
+impl ToJson for GlobalRow {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .str("model", &self.model)
+            .raw("configs", &str_arr(self.configs.iter().map(String::as_str)))
+            .f64("throughput", self.throughput)
+            .f64("perf_per_tdp", self.perf_per_tdp)
+            .f64("vs_tpuv2", self.vs_tpuv2)
+            .finish()
+    }
+}
+
+impl FromJson for GlobalRow {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        Ok(Self {
+            model: req_str(v, "model")?,
+            configs: crate::api::wire::opt_str_list(v, "configs")?
+                .ok_or_else(|| ApiError::invalid("row must include \"configs\""))?,
+            throughput: req_f64(v, "throughput")?,
+            perf_per_tdp: req_f64(v, "perf_per_tdp")?,
+            vs_tpuv2: req_f64(v, "vs_tpuv2")?,
+        })
+    }
+}
+
+/// Reply of `POST /global` / [`crate::api::Session::global`].
+#[derive(Debug, Clone)]
+pub struct GlobalReply {
+    pub models: Vec<String>,
+    pub depth: u64,
+    pub tmp: u64,
+    pub scheme: Scheme,
+    pub metric: Metric,
+    pub backend: String,
+    pub candidate_pool: u64,
+    pub candidates_evaluated: u64,
+    pub local_searches: u64,
+    /// The WHAM-common config across stages and models.
+    pub common_config: ArchConfig,
+    pub common: Vec<GlobalRow>,
+    pub individual: Vec<GlobalRow>,
+    pub mosaic: Vec<GlobalRow>,
+    /// True when a deadline/cancellation truncated the search.
+    pub cancelled: bool,
+    pub wall_ms: f64,
+}
+
+fn rows_json(rows: &[GlobalRow]) -> String {
+    arr(rows.iter().map(|r| r.to_json()))
+}
+
+fn parse_rows(v: &JsonValue, key: &str) -> Result<Vec<GlobalRow>, ApiError> {
+    req_arr(v, key)?.iter().map(GlobalRow::from_json).collect()
+}
+
+impl ToJson for GlobalReply {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .raw("models", &str_arr(self.models.iter().map(String::as_str)))
+            .u64("depth", self.depth)
+            .u64("tmp", self.tmp)
+            .str("scheme", scheme_wire_name(self.scheme))
+            .str("metric", &self.metric.to_string())
+            .str("backend", &self.backend)
+            .u64("candidate_pool", self.candidate_pool)
+            .u64("candidates_evaluated", self.candidates_evaluated)
+            .u64("local_searches", self.local_searches)
+            .str("common_config", &self.common_config.display())
+            .raw("common_config_vec", &config_arr(&self.common_config))
+            .raw("common", &rows_json(&self.common))
+            .raw("individual", &rows_json(&self.individual))
+            .raw("mosaic", &rows_json(&self.mosaic))
+            .bool("cancelled", self.cancelled)
+            .f64("wall_ms", self.wall_ms)
+            .finish()
+    }
+}
+
+impl FromJson for GlobalReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        Ok(Self {
+            models: crate::api::wire::opt_str_list(v, "models")?
+                .ok_or_else(|| ApiError::invalid("body must include \"models\""))?,
+            depth: req_u64(v, "depth")?,
+            tmp: req_u64(v, "tmp")?,
+            scheme: req_str(v, "scheme")?.parse().map_err(ApiError::invalid)?,
+            metric: parse_metric_field(v)?,
+            backend: req_str(v, "backend")?,
+            candidate_pool: req_u64(v, "candidate_pool")?,
+            candidates_evaluated: req_u64(v, "candidates_evaluated")?,
+            local_searches: req_u64(v, "local_searches")?,
+            common_config: parse_config(v.get("common_config_vec").ok_or_else(|| {
+                ApiError::invalid("body must include \"common_config_vec\"")
+            })?)?,
+            common: parse_rows(v, "common")?,
+            individual: parse_rows(v, "individual")?,
+            mosaic: parse_rows(v, "mosaic")?,
+            cancelled: req_bool(v, "cancelled")?,
+            wall_ms: req_f64(v, "wall_ms")?,
+        })
+    }
+}
+
+// ---- GET /status --------------------------------------------------------
+
+/// `/search` work counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SearchCounters {
+    pub requests: u64,
+    /// Leader computations that ran at least one scheduler eval.
+    pub cold: u64,
+    /// Leader computations answered entirely from the database.
+    pub warm: u64,
+    pub scheduler_evals_total: u64,
+}
+
+/// Single-flight coalescer counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CoalescerCounters {
+    pub led: u64,
+    pub coalesced: u64,
+    pub in_flight: u64,
+}
+
+/// Design-database counters.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct DbCounters {
+    pub path: Option<String>,
+    pub entries: u64,
+    pub loaded: u64,
+    pub appended: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Reply of `GET /status`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct StatusReply {
+    pub uptime_ms: u64,
+    pub workers: u64,
+    pub requests: u64,
+    pub search: SearchCounters,
+    pub coalescer: CoalescerCounters,
+    pub db: DbCounters,
+}
+
+impl ToJson for StatusReply {
+    fn to_json(&self) -> String {
+        let search = Obj::new()
+            .u64("requests", self.search.requests)
+            .u64("cold", self.search.cold)
+            .u64("warm", self.search.warm)
+            .u64("scheduler_evals_total", self.search.scheduler_evals_total)
+            .finish();
+        let coalescer = Obj::new()
+            .u64("led", self.coalescer.led)
+            .u64("coalesced", self.coalescer.coalesced)
+            .u64("in_flight", self.coalescer.in_flight)
+            .finish();
+        let db = Obj::new()
+            .nullable_str("path", self.db.path.as_deref())
+            .u64("entries", self.db.entries)
+            .u64("loaded", self.db.loaded)
+            .u64("appended", self.db.appended)
+            .u64("hits", self.db.hits)
+            .u64("misses", self.db.misses)
+            .finish();
+        Obj::new()
+            .u64("uptime_ms", self.uptime_ms)
+            .u64("workers", self.workers)
+            .u64("requests", self.requests)
+            .raw("search", &search)
+            .raw("coalescer", &coalescer)
+            .raw("db", &db)
+            .finish()
+    }
+}
+
+impl FromJson for StatusReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let sub = |key: &str| -> Result<&JsonValue, ApiError> {
+            v.get(key).ok_or_else(|| ApiError::invalid(format!("body must include \"{key}\"")))
+        };
+        let s = sub("search")?;
+        let c = sub("coalescer")?;
+        let d = sub("db")?;
+        Ok(Self {
+            uptime_ms: req_u64(v, "uptime_ms")?,
+            workers: req_u64(v, "workers")?,
+            requests: req_u64(v, "requests")?,
+            search: SearchCounters {
+                requests: req_u64(s, "requests")?,
+                cold: req_u64(s, "cold")?,
+                warm: req_u64(s, "warm")?,
+                scheduler_evals_total: req_u64(s, "scheduler_evals_total")?,
+            },
+            coalescer: CoalescerCounters {
+                led: req_u64(c, "led")?,
+                coalesced: req_u64(c, "coalesced")?,
+                in_flight: req_u64(c, "in_flight")?,
+            },
+            db: DbCounters {
+                path: opt_str(d, "path")?,
+                entries: req_u64(d, "entries")?,
+                loaded: req_u64(d, "loaded")?,
+                appended: req_u64(d, "appended")?,
+                hits: req_u64(d, "hits")?,
+                misses: req_u64(d, "misses")?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::util::json::parse;
+
+    fn point(score: f64) -> DesignPoint {
+        let cfg = presets::tpuv2();
+        DesignPoint { config: cfg, eval: crate::metrics::evaluate(&cfg, 1_000_000, 8, 1e9), score }
+    }
+
+    #[test]
+    fn search_reply_round_trips_byte_identically() {
+        let r = SearchReply {
+            model: "bert-base".into(),
+            fingerprint: Fingerprint(0xdead_beef_0123_4567),
+            backend: "native".into(),
+            metric: Metric::PerfPerTdp,
+            best: point(3.0),
+            top: vec![point(3.0), point(2.0)],
+            dims_evaluated: 12,
+            scheduler_evals: 40,
+            cache_hits: 0,
+            vs_tpuv2: 1.25,
+            vs_nvdla: 2.5,
+            cancelled: false,
+            wall_ms: 17.25,
+        };
+        let bytes = r.to_json();
+        let q = SearchReply::from_json(&parse(&bytes).unwrap()).unwrap();
+        assert_eq!(q.to_json(), bytes, "reply wire form must round-trip byte-identically");
+        assert_eq!(q.fingerprint, r.fingerprint);
+        assert_eq!(q.top.len(), 2);
+    }
+
+    #[test]
+    fn status_reply_round_trips() {
+        let r = StatusReply {
+            uptime_ms: 5,
+            workers: 8,
+            requests: 3,
+            search: SearchCounters { requests: 2, cold: 1, warm: 1, scheduler_evals_total: 9 },
+            coalescer: CoalescerCounters { led: 2, coalesced: 0, in_flight: 0 },
+            db: DbCounters { path: None, entries: 4, loaded: 0, appended: 4, hits: 6, misses: 4 },
+        };
+        let q = StatusReply::from_json(&parse(&r.to_json()).unwrap()).unwrap();
+        assert_eq!(q, r);
+        let with_path = StatusReply {
+            db: DbCounters { path: Some("designs.jsonl".into()), ..r.db.clone() },
+            ..r
+        };
+        let q = StatusReply::from_json(&parse(&with_path.to_json()).unwrap()).unwrap();
+        assert_eq!(q.db.path.as_deref(), Some("designs.jsonl"));
+    }
+
+    #[test]
+    fn global_reply_round_trips_byte_identically() {
+        let row = |m: &str| GlobalRow {
+            model: m.into(),
+            configs: vec!["<2, 128x128, 2, 128>".into()],
+            throughput: 10.5,
+            perf_per_tdp: 0.25,
+            vs_tpuv2: 1.5,
+        };
+        let r = GlobalReply {
+            models: vec!["opt-1.3b".into(), "gpt2-xl".into()],
+            depth: 8,
+            tmp: 1,
+            scheme: Scheme::PipeDream1F1B,
+            metric: Metric::Throughput,
+            backend: "native".into(),
+            candidate_pool: 14,
+            candidates_evaluated: 9,
+            local_searches: 3,
+            common_config: presets::tpuv2(),
+            common: vec![row("opt-1.3b"), row("gpt2-xl")],
+            individual: vec![row("opt-1.3b"), row("gpt2-xl")],
+            mosaic: vec![row("opt-1.3b"), row("gpt2-xl")],
+            cancelled: false,
+            wall_ms: 99.0,
+        };
+        let bytes = r.to_json();
+        let q = GlobalReply::from_json(&parse(&bytes).unwrap()).unwrap();
+        assert_eq!(q.to_json(), bytes);
+        assert_eq!(q.scheme, Scheme::PipeDream1F1B);
+    }
+
+    #[test]
+    fn models_reply_round_trips() {
+        let r = ModelsReply {
+            models: vec![ModelEntry {
+                name: "bert-base".into(),
+                task: "language".into(),
+                batch: 4,
+                accelerators: 1,
+                distributed_only: false,
+            }],
+        };
+        assert_eq!(ModelsReply::from_json(&parse(&r.to_json()).unwrap()).unwrap(), r);
+    }
+}

@@ -1,0 +1,693 @@
+//! Typed requests — the single definition of every front door's inputs.
+//!
+//! Each request type has:
+//! * a builder (`SearchRequest::new("bert-base").top_k(5)…`) for library
+//!   callers;
+//! * a `from_args` constructor so the CLI subcommands and `wham client`
+//!   parse flags identically;
+//! * [`ToJson`]/[`FromJson`] so the HTTP client and server share one wire
+//!   codec;
+//! * `validate()`, which resolves registry names and bounds-checks fields
+//!   into an executable plan ([`crate::api::plan`]).
+
+use crate::api::error::ApiError;
+use crate::api::plan::{resolve_workload, CommonPlan, EvaluatePlan, GlobalPlan, SearchPlan};
+use crate::api::wire::{
+    config_arr, opt_bool, opt_str, opt_str_list, opt_u64, parse_config, req_str, FromJson, ToJson,
+};
+use crate::arch::ArchConfig;
+use crate::coordinator::BackendChoice;
+use crate::distributed::Scheme;
+use crate::graph::fingerprint;
+use crate::metrics::Metric;
+use crate::search::engine::SearchOptions;
+use crate::util::cli::Args;
+use crate::util::json::{str_arr, JsonValue, Obj};
+
+/// The backend flag is session-level (one cost backend per [`crate::api::Session`]),
+/// parsed here so the CLI subcommands share one definition.
+pub fn backend_from_args(args: &Args) -> Result<BackendChoice, ApiError> {
+    args.get_or("backend", "auto").parse().map_err(ApiError::invalid)
+}
+
+/// Canonical wire name of a pipeline scheme (parseable by
+/// `Scheme::from_str`, unlike the Debug form).
+pub fn scheme_wire_name(s: Scheme) -> &'static str {
+    match s {
+        Scheme::GPipe => "gpipe",
+        Scheme::PipeDream1F1B => "1f1b",
+    }
+}
+
+/// Parse `TXxTYxVW` (e.g. `128x128x256`) — shared by `--dims` flags.
+pub fn parse_dims(s: &str) -> Result<(u64, u64, u64), ApiError> {
+    let parts: Vec<u64> = s
+        .split('x')
+        .map(|p| {
+            p.parse::<u64>()
+                .map_err(|_| ApiError::invalid("--dims expects TXxTYxVW, e.g. 128x128x128"))
+        })
+        .collect::<Result<_, _>>()?;
+    match parts.as_slice() {
+        [tx, ty, vw] => Ok((*tx, *ty, *vw)),
+        _ => Err(ApiError::invalid("--dims expects three values, e.g. 128x128x128")),
+    }
+}
+
+fn cli_err(e: crate::util::cli::CliError) -> ApiError {
+    ApiError::invalid(e.to_string())
+}
+
+fn parse_metric(v: &JsonValue) -> Result<Option<Metric>, ApiError> {
+    match opt_str(v, "metric")? {
+        None => Ok(None),
+        Some(m) => m.parse::<Metric>().map(Some).map_err(ApiError::invalid),
+    }
+}
+
+// The four search-shaping knobs (`metric`, `k`, `hysteresis`, `ilp`)
+// appear on every search-shaped request; their flag names, wire names,
+// and parsing exist only in the three helpers below.
+
+fn knobs_from_args(
+    args: &Args,
+    metric: &mut Metric,
+    top_k: &mut usize,
+    hysteresis: &mut u32,
+    use_ilp: &mut bool,
+) -> Result<(), ApiError> {
+    if let Some(m) = args.get("metric") {
+        *metric = m.parse().map_err(ApiError::invalid)?;
+    }
+    *top_k = args.get_as_or("k", *top_k).map_err(cli_err)?;
+    *hysteresis = args.get_as_or("hysteresis", *hysteresis).map_err(cli_err)?;
+    *use_ilp = args.flag("ilp");
+    Ok(())
+}
+
+fn knobs_from_json(
+    v: &JsonValue,
+    metric: &mut Metric,
+    top_k: &mut usize,
+    hysteresis: &mut u32,
+    use_ilp: &mut bool,
+) -> Result<(), ApiError> {
+    if let Some(m) = parse_metric(v)? {
+        *metric = m;
+    }
+    if let Some(k) = opt_u64(v, "k")? {
+        *top_k = k as usize;
+    }
+    if let Some(h) = opt_u64(v, "hysteresis")? {
+        *hysteresis = h as u32;
+    }
+    if let Some(b) = opt_bool(v, "ilp")? {
+        *use_ilp = b;
+    }
+    Ok(())
+}
+
+fn knobs_json(o: Obj, metric: Metric, top_k: usize, hysteresis: u32, use_ilp: bool) -> Obj {
+    o.str("metric", &metric.to_string())
+        .u64("k", top_k as u64)
+        .u64("hysteresis", hysteresis as u64)
+        .bool("ilp", use_ilp)
+}
+
+// ---- /search ------------------------------------------------------------
+
+/// Per-workload accelerator search (paper section 4).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SearchRequest {
+    pub model: String,
+    pub metric: Metric,
+    /// Designs retained for the global search / reply `top` list (>= 1).
+    pub top_k: usize,
+    /// Pruner hysteresis levels (Algorithm 2).
+    pub hysteresis: u32,
+    /// Exact B&B "ILP" instead of the MCR heuristics.
+    pub use_ilp: bool,
+    /// Optional wall-clock budget; on expiry the search cancels
+    /// cooperatively and replies with best-so-far (`cancelled: true`).
+    pub deadline_ms: Option<u64>,
+}
+
+impl SearchRequest {
+    /// New request with the engine's default options.
+    pub fn new(model: impl Into<String>) -> Self {
+        let d = SearchOptions::default();
+        Self {
+            model: model.into(),
+            metric: d.metric,
+            top_k: d.top_k,
+            hysteresis: d.hysteresis,
+            use_ilp: d.use_ilp,
+            deadline_ms: None,
+        }
+    }
+
+    pub fn metric(mut self, m: Metric) -> Self {
+        self.metric = m;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    pub fn hysteresis(mut self, h: u32) -> Self {
+        self.hysteresis = h;
+        self
+    }
+
+    pub fn ilp(mut self, on: bool) -> Self {
+        self.use_ilp = on;
+        self
+    }
+
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Build from CLI flags: `--model --metric --k --hysteresis --ilp
+    /// --deadline-ms`. `wham search` and `wham client search` both call
+    /// this, so the two frontends cannot diverge.
+    pub fn from_args(args: &Args) -> Result<Self, ApiError> {
+        let model = args.get("model").ok_or_else(|| ApiError::invalid("--model required"))?;
+        let mut r = Self::new(model);
+        knobs_from_args(args, &mut r.metric, &mut r.top_k, &mut r.hysteresis, &mut r.use_ilp)?;
+        r.deadline_ms = args.get_as::<u64>("deadline-ms").map_err(cli_err)?;
+        Ok(r)
+    }
+
+    /// Resolve and bounds-check into an executable plan.
+    pub fn validate(&self) -> Result<SearchPlan, ApiError> {
+        let (graph, batch) = resolve_workload(&self.model)?;
+        let opts = SearchOptions {
+            metric: self.metric,
+            top_k: self.top_k.max(1),
+            hysteresis: self.hysteresis,
+            use_ilp: self.use_ilp,
+            ..Default::default()
+        };
+        Ok(SearchPlan {
+            model: self.model.clone(),
+            fingerprint: fingerprint(&graph),
+            graph,
+            batch,
+            opts,
+            deadline_ms: self.deadline_ms,
+        })
+    }
+}
+
+impl ToJson for SearchRequest {
+    fn to_json(&self) -> String {
+        knobs_json(
+            Obj::new().str("model", &self.model),
+            self.metric,
+            self.top_k,
+            self.hysteresis,
+            self.use_ilp,
+        )
+        .opt_u64("deadline_ms", self.deadline_ms)
+        .finish()
+    }
+}
+
+impl FromJson for SearchRequest {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let mut r = Self::new(req_str(v, "model")?);
+        knobs_from_json(v, &mut r.metric, &mut r.top_k, &mut r.hysteresis, &mut r.use_ilp)?;
+        r.deadline_ms = opt_u64(v, "deadline_ms")?;
+        Ok(r)
+    }
+}
+
+// ---- /evaluate ----------------------------------------------------------
+
+/// Evaluate one fixed design on a workload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EvaluateRequest {
+    pub model: String,
+    pub config: ArchConfig,
+}
+
+impl EvaluateRequest {
+    pub fn new(model: impl Into<String>, config: ArchConfig) -> Self {
+        Self { model: model.into(), config }
+    }
+
+    /// Build from CLI flags: `--model --dims TXxTYxVW [--tc N --vc N]`.
+    pub fn from_args(args: &Args) -> Result<Self, ApiError> {
+        let model = args.get("model").ok_or_else(|| ApiError::invalid("--model required"))?;
+        let dims =
+            args.get("dims").ok_or_else(|| ApiError::invalid("--dims TXxTYxVW required"))?;
+        let (tx, ty, vw) = parse_dims(dims)?;
+        let config = ArchConfig {
+            num_tc: args.get_as_or("tc", 2u64).map_err(cli_err)?,
+            tc_x: tx,
+            tc_y: ty,
+            num_vc: args.get_as_or("vc", 2u64).map_err(cli_err)?,
+            vc_w: vw,
+        };
+        Ok(Self::new(model, config))
+    }
+
+    /// Resolve and bounds-check into an executable plan.
+    pub fn validate(&self) -> Result<EvaluatePlan, ApiError> {
+        if !self.config.in_template() {
+            return Err(ApiError::invalid(format!(
+                "{} is outside the template bounds",
+                self.config.display()
+            )));
+        }
+        let (graph, batch) = resolve_workload(&self.model)?;
+        Ok(EvaluatePlan {
+            model: self.model.clone(),
+            fingerprint: fingerprint(&graph),
+            graph,
+            batch,
+            config: self.config,
+        })
+    }
+}
+
+impl ToJson for EvaluateRequest {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .str("model", &self.model)
+            .raw("config", &config_arr(&self.config))
+            .finish()
+    }
+}
+
+impl FromJson for EvaluateRequest {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let model = req_str(v, "model")?;
+        let config = parse_config(v.get("config").ok_or_else(|| {
+            ApiError::invalid("body must include \"config\":[num_tc,tc_x,tc_y,num_vc,vc_w]")
+        })?)?;
+        Ok(Self::new(model, config))
+    }
+}
+
+// ---- /common ------------------------------------------------------------
+
+/// WHAM-common: one design across a workload set (paper section 4.6).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommonRequest {
+    /// Workload set; empty means the single-accelerator zoo.
+    pub models: Vec<String>,
+    pub metric: Metric,
+    pub top_k: usize,
+    pub hysteresis: u32,
+    pub use_ilp: bool,
+}
+
+impl CommonRequest {
+    /// New request over the default (single-accelerator) workload set.
+    pub fn new() -> Self {
+        let d = SearchOptions::default();
+        Self {
+            models: Vec::new(),
+            metric: d.metric,
+            top_k: d.top_k,
+            hysteresis: d.hysteresis,
+            use_ilp: d.use_ilp,
+        }
+    }
+
+    pub fn models<I: IntoIterator<Item = S>, S: Into<String>>(mut self, names: I) -> Self {
+        self.models = names.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn metric(mut self, m: Metric) -> Self {
+        self.metric = m;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    pub fn ilp(mut self, on: bool) -> Self {
+        self.use_ilp = on;
+        self
+    }
+
+    /// Build from CLI flags: `--models a,b,c --metric --k --hysteresis --ilp`.
+    pub fn from_args(args: &Args) -> Result<Self, ApiError> {
+        let mut r = Self::new();
+        r.models = args.get_list("models");
+        knobs_from_args(args, &mut r.metric, &mut r.top_k, &mut r.hysteresis, &mut r.use_ilp)?;
+        Ok(r)
+    }
+
+    /// Resolve the workload set into an executable plan.
+    pub fn validate(&self) -> Result<CommonPlan, ApiError> {
+        let names: Vec<String> = if self.models.is_empty() {
+            crate::models::single_acc_models().iter().map(|s| s.to_string()).collect()
+        } else {
+            self.models.clone()
+        };
+        let mut workloads = Vec::with_capacity(names.len());
+        for n in &names {
+            let (graph, batch) = resolve_workload(n)?;
+            workloads.push((n.clone(), graph, batch));
+        }
+        let opts = SearchOptions {
+            metric: self.metric,
+            top_k: self.top_k.max(1),
+            hysteresis: self.hysteresis,
+            use_ilp: self.use_ilp,
+            ..Default::default()
+        };
+        Ok(CommonPlan { models: names, workloads, opts })
+    }
+}
+
+impl Default for CommonRequest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ToJson for CommonRequest {
+    fn to_json(&self) -> String {
+        let mut o = Obj::new();
+        if !self.models.is_empty() {
+            o = o.raw("models", &str_arr(self.models.iter().map(String::as_str)));
+        }
+        knobs_json(o, self.metric, self.top_k, self.hysteresis, self.use_ilp).finish()
+    }
+}
+
+impl FromJson for CommonRequest {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let mut r = Self::new();
+        if let Some(models) = opt_str_list(v, "models")? {
+            if models.is_empty() {
+                return Err(ApiError::invalid("\"models\" must not be empty"));
+            }
+            r.models = models;
+        }
+        knobs_from_json(v, &mut r.metric, &mut r.top_k, &mut r.hysteresis, &mut r.use_ilp)?;
+        Ok(r)
+    }
+}
+
+// ---- /global ------------------------------------------------------------
+
+/// Distributed pipeline/TMP global search (paper section 5).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GlobalRequest {
+    /// LLM workloads; empty means `opt-1.3b, gpt2-xl`.
+    pub models: Vec<String>,
+    /// Pipeline depth (stages).
+    pub depth: u64,
+    /// Tensor-model-parallel degree.
+    pub tmp: u64,
+    pub scheme: Scheme,
+    pub metric: Metric,
+    pub top_k: usize,
+    /// Pruner hysteresis of the per-stage local searches.
+    pub hysteresis: u32,
+    /// Exact B&B "ILP" in the per-stage local searches.
+    pub use_ilp: bool,
+    /// Optional wall-clock budget (cooperative, best-so-far on expiry).
+    pub deadline_ms: Option<u64>,
+}
+
+impl GlobalRequest {
+    pub fn new() -> Self {
+        let d = SearchOptions::default();
+        Self {
+            models: Vec::new(),
+            depth: 32,
+            tmp: 1,
+            scheme: Scheme::GPipe,
+            metric: Metric::Throughput,
+            top_k: 10,
+            hysteresis: d.hysteresis,
+            use_ilp: d.use_ilp,
+            deadline_ms: None,
+        }
+    }
+
+    pub fn models<I: IntoIterator<Item = S>, S: Into<String>>(mut self, names: I) -> Self {
+        self.models = names.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn depth(mut self, d: u64) -> Self {
+        self.depth = d;
+        self
+    }
+
+    pub fn tmp(mut self, t: u64) -> Self {
+        self.tmp = t;
+        self
+    }
+
+    pub fn scheme(mut self, s: Scheme) -> Self {
+        self.scheme = s;
+        self
+    }
+
+    pub fn metric(mut self, m: Metric) -> Self {
+        self.metric = m;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    pub fn hysteresis(mut self, h: u32) -> Self {
+        self.hysteresis = h;
+        self
+    }
+
+    pub fn ilp(mut self, on: bool) -> Self {
+        self.use_ilp = on;
+        self
+    }
+
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Build from CLI flags: `--models --depth --tmp --scheme --metric
+    /// --k --hysteresis --ilp --deadline-ms`.
+    pub fn from_args(args: &Args) -> Result<Self, ApiError> {
+        let mut r = Self::new();
+        r.models = args.get_list("models");
+        r.depth = args.get_as_or("depth", r.depth).map_err(cli_err)?;
+        r.tmp = args.get_as_or("tmp", r.tmp).map_err(cli_err)?;
+        if let Some(s) = args.get("scheme") {
+            r.scheme = s.parse().map_err(ApiError::invalid)?;
+        }
+        knobs_from_args(args, &mut r.metric, &mut r.top_k, &mut r.hysteresis, &mut r.use_ilp)?;
+        r.deadline_ms = args.get_as::<u64>("deadline-ms").map_err(cli_err)?;
+        Ok(r)
+    }
+
+    /// Resolve workloads, partition them, and bounds-check into a plan.
+    pub fn validate(&self) -> Result<GlobalPlan, ApiError> {
+        // partition_transformer asserts on zero values; reject them (and
+        // absurd sizes) at the API boundary instead of panicking a worker.
+        if !(1..=1024).contains(&self.depth) || !(1..=1024).contains(&self.tmp) {
+            return Err(ApiError::invalid("\"depth\" and \"tmp\" must be in 1..=1024"));
+        }
+        let names: Vec<String> = if self.models.is_empty() {
+            vec!["opt-1.3b".to_string(), "gpt2-xl".to_string()]
+        } else {
+            self.models.clone()
+        };
+        let mut parts = Vec::with_capacity(names.len());
+        for n in &names {
+            match crate::models::transformer_cfg(n) {
+                Some(cfg) if crate::models::info(n).is_some() => {
+                    parts.push(crate::distributed::partition::partition_transformer(
+                        n,
+                        &cfg,
+                        self.depth,
+                        self.tmp,
+                        crate::graph::autodiff::Optimizer::Adam,
+                    ))
+                }
+                _ => {
+                    return Err(ApiError::not_found(format!("{n:?} is not an LLM workload")))
+                }
+            }
+        }
+        Ok(GlobalPlan {
+            models: names,
+            parts,
+            depth: self.depth,
+            tmp: self.tmp,
+            scheme: self.scheme,
+            metric: self.metric,
+            top_k: self.top_k.max(1),
+            hysteresis: self.hysteresis,
+            use_ilp: self.use_ilp,
+            deadline_ms: self.deadline_ms,
+        })
+    }
+}
+
+impl Default for GlobalRequest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ToJson for GlobalRequest {
+    fn to_json(&self) -> String {
+        let mut o = Obj::new();
+        if !self.models.is_empty() {
+            o = o.raw("models", &str_arr(self.models.iter().map(String::as_str)));
+        }
+        o = o
+            .u64("depth", self.depth)
+            .u64("tmp", self.tmp)
+            .str("scheme", scheme_wire_name(self.scheme));
+        knobs_json(o, self.metric, self.top_k, self.hysteresis, self.use_ilp)
+            .opt_u64("deadline_ms", self.deadline_ms)
+            .finish()
+    }
+}
+
+impl FromJson for GlobalRequest {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let mut r = Self::new();
+        if let Some(models) = opt_str_list(v, "models")? {
+            if models.is_empty() {
+                return Err(ApiError::invalid("\"models\" must not be empty"));
+            }
+            r.models = models;
+        }
+        if let Some(d) = opt_u64(v, "depth")? {
+            r.depth = d;
+        }
+        if let Some(t) = opt_u64(v, "tmp")? {
+            r.tmp = t;
+        }
+        if let Some(s) = opt_str(v, "scheme")? {
+            r.scheme = s.parse().map_err(ApiError::invalid)?;
+        }
+        knobs_from_json(v, &mut r.metric, &mut r.top_k, &mut r.hysteresis, &mut r.use_ilp)?;
+        r.deadline_ms = opt_u64(v, "deadline_ms")?;
+        Ok(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(raw: &[&str]) -> Args {
+        Args::parse(
+            raw.iter().map(|s| s.to_string()),
+            &["model", "models", "metric", "k", "depth", "tmp", "scheme", "hysteresis", "dims", "tc", "vc", "deadline-ms", "backend"],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn search_request_args_and_json_agree() {
+        let a = SearchRequest::from_args(&args(&[
+            "--model", "bert-base", "--metric", "perf/tdp", "--k", "5", "--ilp",
+        ]))
+        .unwrap();
+        let j = SearchRequest::from_json_str(&a.to_json()).unwrap();
+        assert_eq!(a, j);
+        assert_eq!(a.metric, Metric::PerfPerTdp);
+        assert_eq!(a.top_k, 5);
+        assert!(a.use_ilp);
+    }
+
+    #[test]
+    fn search_request_requires_model() {
+        assert_eq!(SearchRequest::from_args(&args(&[])).unwrap_err().http_status(), 400);
+        assert_eq!(SearchRequest::from_json_str("{}").unwrap_err().http_status(), 400);
+    }
+
+    #[test]
+    fn unknown_model_is_not_found() {
+        let e = SearchRequest::new("no-such-model").validate().unwrap_err();
+        assert_eq!(e.http_status(), 404);
+    }
+
+    #[test]
+    fn evaluate_request_round_trips() {
+        let r = EvaluateRequest::from_args(&args(&[
+            "--model", "bert-base", "--dims", "128x64x32", "--tc", "4",
+        ]))
+        .unwrap();
+        assert_eq!(r.config.tc_x, 128);
+        assert_eq!(r.config.num_tc, 4);
+        assert_eq!(r.config.num_vc, 2);
+        assert_eq!(EvaluateRequest::from_json_str(&r.to_json()).unwrap(), r);
+    }
+
+    #[test]
+    fn evaluate_rejects_non_numeric_config() {
+        let e = EvaluateRequest::from_json_str(
+            "{\"model\":\"bert-base\",\"config\":[2,\"x\",128,2,128]}",
+        )
+        .unwrap_err();
+        assert_eq!(e.http_status(), 400);
+    }
+
+    #[test]
+    fn global_request_defaults_and_bounds() {
+        let r = GlobalRequest::from_json_str("{}").unwrap();
+        assert_eq!(r.depth, 32);
+        let plan = r.validate().unwrap();
+        assert_eq!(plan.models, vec!["opt-1.3b".to_string(), "gpt2-xl".to_string()]);
+        assert_eq!(
+            GlobalRequest::new().depth(0).validate().unwrap_err().http_status(),
+            400
+        );
+        assert_eq!(
+            GlobalRequest::from_json_str("{\"models\":[]}").unwrap_err().http_status(),
+            400
+        );
+        let e = GlobalRequest::new().models(["vgg16"]).validate().unwrap_err();
+        assert_eq!(e.http_status(), 404);
+    }
+
+    #[test]
+    fn global_request_wire_round_trips() {
+        let r = GlobalRequest::new()
+            .models(["gpt2-xl"])
+            .depth(8)
+            .tmp(2)
+            .scheme(Scheme::PipeDream1F1B)
+            .metric(Metric::PerfPerTdp)
+            .top_k(4)
+            .hysteresis(2)
+            .ilp(true)
+            .deadline_ms(250);
+        assert_eq!(GlobalRequest::from_json_str(&r.to_json()).unwrap(), r);
+    }
+
+    #[test]
+    fn common_request_wire_round_trips() {
+        let r = CommonRequest::new().models(["bert-base", "vgg16"]).top_k(3).ilp(true);
+        assert_eq!(CommonRequest::from_json_str(&r.to_json()).unwrap(), r);
+        // Default (empty) models expand to the single-accelerator zoo.
+        assert_eq!(
+            CommonRequest::new().validate().unwrap().models.len(),
+            crate::models::single_acc_models().len()
+        );
+    }
+}

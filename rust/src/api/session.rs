@@ -1,0 +1,373 @@
+//! The [`Session`] facade: one cost backend (plus an optional shared
+//! design database) executing validated plans into typed replies.
+//!
+//! Every front door funnels here — `main.rs` subcommands, the HTTP
+//! service's worker threads (one session each; PJRT clients are not
+//! `Sync`), and library callers (`examples/api_session.rs`). The
+//! TPUv2 floor, the design-database context scoping, and the reply
+//! assembly exist only in this file.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::api::error::ApiError;
+use crate::api::plan::{context_key, CommonPlan, EvaluatePlan, GlobalPlan, SearchPlan};
+use crate::api::progress::{DeadlineSink, NullSink, ProgressSink};
+use crate::api::reply::{
+    CommonReply, EvaluateReply, GlobalReply, GlobalRow, ModelEntry, ModelsReply, SearchReply,
+};
+use crate::api::request::{CommonRequest, EvaluateRequest, GlobalRequest, SearchRequest};
+use crate::arch::presets;
+use crate::coordinator::{make_backend, BackendChoice};
+use crate::cost::{CostBackend, Dims};
+use crate::distributed::global_search::{
+    global_search_observed, GlobalOptions, ModelPipelineResult,
+};
+use crate::distributed::network::Network;
+use crate::graph::OperatorGraph;
+use crate::metrics::{Evaluation, Metric};
+use crate::search::common::{search_common, Workload};
+use crate::search::engine::{evaluate_design, NoSharedCache, SearchOptions, WhamSearch};
+use crate::search::DesignPoint;
+use crate::service::cache::DesignDb;
+
+/// TPUv2 baseline evaluation of a workload — the single definition of
+/// the Perf/TDP throughput floor (paper section 6.1) and of the
+/// `vs_tpuv2` comparison denominator.
+pub fn tpuv2_baseline(
+    graph: &OperatorGraph,
+    batch: u64,
+    backend: &mut dyn CostBackend,
+) -> Evaluation {
+    evaluate_design(graph, batch, &presets::tpuv2(), backend)
+}
+
+/// The Perf/TDP throughput floor: what a TPUv2 sustains on the workload.
+pub fn tpuv2_floor(graph: &OperatorGraph, batch: u64, backend: &mut dyn CostBackend) -> f64 {
+    tpuv2_baseline(graph, batch, backend).throughput
+}
+
+fn ratio(num: f64, denom: f64) -> f64 {
+    num / denom.max(1e-12)
+}
+
+/// One mining session: a cost backend plus an optional shared design
+/// database, executing requests (or pre-validated plans) into replies.
+pub struct Session {
+    backend: Box<dyn CostBackend>,
+    db: Option<Arc<DesignDb>>,
+    /// `(fingerprint, batch)` → (TPUv2, NVDLA) baseline evaluations, so
+    /// warm repeat searches skip the two baseline scheduler runs. Valid
+    /// for the session's lifetime because the backend never changes.
+    baselines: HashMap<(u64, u64), (Evaluation, Evaluation)>,
+}
+
+impl Session {
+    /// Session over a backend choice (`auto` falls back to native).
+    pub fn new(choice: BackendChoice) -> Result<Self, ApiError> {
+        make_backend(choice)
+            .map(Self::with_backend)
+            .map_err(|e| ApiError::internal(format!("cost backend unavailable: {e}")))
+    }
+
+    /// Session over an already-built backend.
+    pub fn with_backend(backend: Box<dyn CostBackend>) -> Self {
+        Self { backend, db: None, baselines: HashMap::new() }
+    }
+
+    /// Attach a shared design database: searches are answered from (and
+    /// mined points persisted to) it, scoped by [`context_key`].
+    pub fn with_db(mut self, db: Arc<DesignDb>) -> Self {
+        self.db = Some(db);
+        self
+    }
+
+    /// Name of the cost backend this session evaluates with.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Mutable access to the session's cost backend — for callers that
+    /// need raw engine access (graph annotation, traces) without paying
+    /// for a second backend.
+    pub fn backend_mut(&mut self) -> &mut dyn CostBackend {
+        self.backend.as_mut()
+    }
+
+    /// The workload zoo (Table 4).
+    pub fn models(&self) -> ModelsReply {
+        ModelsReply {
+            models: crate::models::MODELS
+                .iter()
+                .map(|m| ModelEntry {
+                    name: m.name.to_string(),
+                    task: m.task.to_string(),
+                    batch: m.batch,
+                    accelerators: m.accelerators,
+                    distributed_only: m.distributed_only,
+                })
+                .collect(),
+        }
+    }
+
+    /// Validate and run a per-workload search.
+    pub fn search(&mut self, req: &SearchRequest) -> Result<SearchReply, ApiError> {
+        self.run_search(&req.validate()?, &mut NullSink)
+    }
+
+    /// Run a pre-validated search plan, streaming progress to `sink`.
+    pub fn run_search(
+        &mut self,
+        plan: &SearchPlan,
+        sink: &mut dyn ProgressSink,
+    ) -> Result<SearchReply, ApiError> {
+        let t0 = Instant::now();
+        let backend = self.backend.as_mut();
+        // The reply's vs_tpuv2 / vs_nvdla fields (and the Perf/TDP floor)
+        // need the two baseline evaluations; the memo bounds that cost to
+        // two scheduler runs per (workload, batch) per session.
+        let (tpu, nvdla) =
+            *self.baselines.entry((plan.fingerprint.0, plan.batch)).or_insert_with(|| {
+                (
+                    tpuv2_baseline(&plan.graph, plan.batch, backend),
+                    evaluate_design(&plan.graph, plan.batch, &presets::nvdla_scaled(), backend),
+                )
+            });
+        let mut opts = plan.opts;
+        if opts.metric == Metric::PerfPerTdp {
+            opts.min_throughput = tpu.throughput;
+        }
+        let mut guard;
+        let sink: &mut dyn ProgressSink = match plan.deadline_ms {
+            Some(ms) => {
+                guard = DeadlineSink::wrapping(Duration::from_millis(ms), sink);
+                &mut guard
+            }
+            None => sink,
+        };
+        let search = WhamSearch::new(&plan.graph, plan.batch, opts);
+        let r = match &self.db {
+            Some(db) => {
+                let ctx = context_key(plan.fingerprint, plan.batch, &opts, backend.name());
+                let mut cache = db.scoped(ctx);
+                search.run_with(backend, &mut cache, sink)
+            }
+            None => {
+                let mut cache: HashMap<Dims, DesignPoint> = HashMap::new();
+                search.run_with(backend, &mut cache, sink)
+            }
+        };
+        Ok(SearchReply {
+            model: plan.model.clone(),
+            fingerprint: plan.fingerprint,
+            backend: backend.name().to_string(),
+            metric: opts.metric,
+            vs_tpuv2: ratio(r.best.eval.throughput, tpu.throughput),
+            vs_nvdla: ratio(r.best.eval.throughput, nvdla.throughput),
+            best: r.best,
+            top: r.top.points().to_vec(),
+            dims_evaluated: r.dims_evaluated as u64,
+            scheduler_evals: r.scheduler_evals as u64,
+            cache_hits: r.cache_hits as u64,
+            cancelled: r.cancelled,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Evaluate one fixed design on a workload.
+    pub fn evaluate(&mut self, req: &EvaluateRequest) -> Result<EvaluateReply, ApiError> {
+        self.run_evaluate(&req.validate()?)
+    }
+
+    /// Run a pre-validated evaluate plan.
+    pub fn run_evaluate(&mut self, plan: &EvaluatePlan) -> Result<EvaluateReply, ApiError> {
+        let eval = evaluate_design(&plan.graph, plan.batch, &plan.config, self.backend.as_mut());
+        Ok(EvaluateReply {
+            model: plan.model.clone(),
+            fingerprint: plan.fingerprint,
+            config: plan.config,
+            eval,
+        })
+    }
+
+    /// Validate and run a WHAM-common search over a workload set.
+    pub fn common(&mut self, req: &CommonRequest) -> Result<CommonReply, ApiError> {
+        self.run_common(&req.validate()?)
+    }
+
+    /// Run a pre-validated common plan.
+    pub fn run_common(&mut self, plan: &CommonPlan) -> Result<CommonReply, ApiError> {
+        let t0 = Instant::now();
+        let backend = self.backend.as_mut();
+        let workloads: Vec<Workload<'_>> = plan
+            .workloads
+            .iter()
+            .map(|(name, graph, batch)| {
+                let min = if plan.opts.metric == Metric::PerfPerTdp {
+                    tpuv2_floor(graph, *batch, backend)
+                } else {
+                    0.0
+                };
+                Workload {
+                    name: name.clone(),
+                    graph,
+                    batch: *batch,
+                    min_throughput: min,
+                    weight: 1.0,
+                }
+            })
+            .collect();
+        let r = search_common(&workloads, plan.opts, backend);
+        let per_workload: Vec<(String, DesignPoint)> =
+            plan.models.iter().cloned().zip(r.per_workload.iter().copied()).collect();
+        Ok(CommonReply {
+            models: plan.models.clone(),
+            metric: plan.opts.metric,
+            backend: backend.name().to_string(),
+            config: r.best.0,
+            score: r.best.1,
+            per_workload,
+            dims_evaluated: r.dims_evaluated as u64,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Validate and run the distributed global search.
+    pub fn global(&mut self, req: &GlobalRequest) -> Result<GlobalReply, ApiError> {
+        self.run_global(&req.validate()?, &mut NullSink)
+    }
+
+    /// Run a pre-validated global plan, streaming progress to `sink`.
+    pub fn run_global(
+        &mut self,
+        plan: &GlobalPlan,
+        sink: &mut dyn ProgressSink,
+    ) -> Result<GlobalReply, ApiError> {
+        let t0 = Instant::now();
+        let backend = self.backend.as_mut();
+        let net = Network::default();
+        // TPUv2 pipeline baseline, simulated once per model: both the
+        // Perf/TDP floor and the `vs_tpuv2` denominator.
+        let tpu: Vec<f64> = plan
+            .parts
+            .iter()
+            .map(|p| {
+                let cfgs = vec![presets::tpuv2(); p.stages.len()];
+                crate::distributed::pipeline::simulate(p, &cfgs, plan.scheme, &net, backend)
+                    .throughput
+            })
+            .collect();
+        let local = SearchOptions {
+            metric: plan.metric,
+            top_k: plan.top_k,
+            hysteresis: plan.hysteresis,
+            use_ilp: plan.use_ilp,
+            ..Default::default()
+        };
+        let mut gopts =
+            GlobalOptions { metric: plan.metric, scheme: plan.scheme, top_k: plan.top_k, local, ..Default::default() };
+        if plan.metric == Metric::PerfPerTdp {
+            gopts.min_throughput = tpu.iter().copied().fold(f64::INFINITY, f64::min);
+        }
+        let mut guard;
+        let sink: &mut dyn ProgressSink = match plan.deadline_ms {
+            Some(ms) => {
+                guard = DeadlineSink::wrapping(Duration::from_millis(ms), sink);
+                &mut guard
+            }
+            None => sink,
+        };
+        let r = match &self.db {
+            Some(db) => global_search_observed(&plan.parts, &gopts, &net, backend, &**db, sink),
+            None => {
+                global_search_observed(&plan.parts, &gopts, &net, backend, &NoSharedCache, sink)
+            }
+        };
+        let family = |list: &[ModelPipelineResult]| -> Vec<GlobalRow> {
+            list.iter()
+                .enumerate()
+                .map(|(i, m)| {
+                    let uniq: std::collections::BTreeSet<String> =
+                        m.configs.iter().map(|c| c.display()).collect();
+                    GlobalRow {
+                        model: m.model.clone(),
+                        configs: uniq.into_iter().collect(),
+                        throughput: m.eval.throughput,
+                        perf_per_tdp: m.eval.perf_per_tdp,
+                        vs_tpuv2: ratio(m.eval.throughput, tpu[i]),
+                    }
+                })
+                .collect()
+        };
+        Ok(GlobalReply {
+            models: plan.models.clone(),
+            depth: plan.depth,
+            tmp: plan.tmp,
+            scheme: plan.scheme,
+            metric: plan.metric,
+            backend: backend.name().to_string(),
+            candidate_pool: r.candidate_pool as u64,
+            candidates_evaluated: r.candidates_evaluated as u64,
+            local_searches: r.local_searches as u64,
+            common_config: r.common.0,
+            common: family(&r.common.1),
+            individual: family(&r.individual),
+            mosaic: family(&r.mosaic),
+            cancelled: r.cancelled,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::native::NativeCost;
+
+    fn session() -> Session {
+        Session::with_backend(Box::new(NativeCost))
+    }
+
+    #[test]
+    fn models_reply_lists_the_zoo() {
+        assert_eq!(session().models().models.len(), crate::models::MODELS.len());
+    }
+
+    #[test]
+    fn evaluate_matches_engine_direct() {
+        let mut s = session();
+        let req = EvaluateRequest::new("bert-base", presets::tpuv2());
+        let reply = s.evaluate(&req).unwrap();
+        let (graph, batch) = crate::api::plan::resolve_workload("bert-base").unwrap();
+        let direct = evaluate_design(&graph, batch, &presets::tpuv2(), &mut NativeCost);
+        assert_eq!(reply.eval.cycles, direct.cycles);
+        assert_eq!(reply.model, "bert-base");
+    }
+
+    #[test]
+    fn zero_deadline_cancels_search_quickly() {
+        let mut s = session();
+        let reply = s.search(&SearchRequest::new("bert-base").deadline_ms(0)).unwrap();
+        assert!(reply.cancelled, "zero deadline must cancel");
+        assert!(
+            reply.dims_evaluated <= 2,
+            "cancelled search explored {} dims",
+            reply.dims_evaluated
+        );
+        assert!(reply.best.config.in_template());
+    }
+
+    #[test]
+    fn shared_db_answers_repeat_searches_without_scheduler() {
+        let db = Arc::new(DesignDb::in_memory());
+        let mut s = Session::with_backend(Box::new(NativeCost)).with_db(Arc::clone(&db));
+        let req = SearchRequest::new("bert-base");
+        let cold = s.search(&req).unwrap();
+        assert!(cold.scheduler_evals > 0);
+        let warm = s.search(&req).unwrap();
+        assert_eq!(warm.scheduler_evals, 0);
+        assert_eq!(warm.best.config, cold.best.config);
+        assert_eq!(warm.cache_hits, warm.dims_evaluated);
+    }
+}

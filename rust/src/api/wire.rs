@@ -1,0 +1,276 @@
+//! The wire layer: one (de)serialization code path per type.
+//!
+//! Every request and reply implements [`ToJson`] and [`FromJson`], so the
+//! bytes a client emits are parsed by the same code the server uses (and
+//! vice versa) — the CLI `wham client`, the HTTP service, and library
+//! callers can no longer drift apart. Field accessors here are *strict*:
+//! a present-but-mistyped field is an [`ApiError`] rather than a silent
+//! default (the old `/evaluate` handler `unwrap_or(0)`-ed non-numeric
+//! config entries into a zero-core design).
+
+use crate::api::error::ApiError;
+use crate::arch::ArchConfig;
+use crate::metrics::Evaluation;
+use crate::search::DesignPoint;
+use crate::util::json::{self, JsonValue, Obj};
+
+/// Serialize to canonical wire JSON.
+pub trait ToJson {
+    fn to_json(&self) -> String;
+}
+
+/// Parse from wire JSON, with typed errors.
+pub trait FromJson: Sized {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError>;
+
+    /// Parse from raw body text. An empty (or whitespace) body is treated
+    /// as `{}` so endpoints with all-optional fields accept bare POSTs.
+    fn from_json_str(text: &str) -> Result<Self, ApiError> {
+        Self::from_json(&parse_body(text)?)
+    }
+}
+
+/// Parse a request body: empty text means the empty object.
+pub fn parse_body(text: &str) -> Result<JsonValue, ApiError> {
+    if text.trim().is_empty() {
+        return Ok(JsonValue::Obj(Default::default()));
+    }
+    json::parse(text).map_err(|e| ApiError::invalid(format!("invalid JSON body: {e}")))
+}
+
+// ---- strict field accessors --------------------------------------------
+
+/// `v` as a non-negative integer JSON number (rejects floats and
+/// anything beyond exact f64 integer range).
+pub fn strict_u64(v: &JsonValue) -> Option<u64> {
+    match v {
+        JsonValue::Num(n)
+            if n.is_finite() && *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) =>
+        {
+            Some(*n as u64)
+        }
+        _ => None,
+    }
+}
+
+/// Required string field.
+pub fn req_str(v: &JsonValue, key: &str) -> Result<String, ApiError> {
+    match v.get(key) {
+        Some(JsonValue::Str(s)) => Ok(s.clone()),
+        Some(_) => Err(ApiError::invalid(format!("\"{key}\" must be a string"))),
+        None => Err(ApiError::invalid(format!("body must include \"{key}\""))),
+    }
+}
+
+/// Optional string field (present-but-mistyped is an error).
+pub fn opt_str(v: &JsonValue, key: &str) -> Result<Option<String>, ApiError> {
+    match v.get(key) {
+        None | Some(JsonValue::Null) => Ok(None),
+        Some(JsonValue::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => Err(ApiError::invalid(format!("\"{key}\" must be a string"))),
+    }
+}
+
+/// Optional non-negative-integer field.
+pub fn opt_u64(v: &JsonValue, key: &str) -> Result<Option<u64>, ApiError> {
+    match v.get(key) {
+        None | Some(JsonValue::Null) => Ok(None),
+        Some(x) => strict_u64(x)
+            .map(Some)
+            .ok_or_else(|| ApiError::invalid(format!("\"{key}\" must be a non-negative integer"))),
+    }
+}
+
+/// Optional boolean field.
+pub fn opt_bool(v: &JsonValue, key: &str) -> Result<Option<bool>, ApiError> {
+    match v.get(key) {
+        None | Some(JsonValue::Null) => Ok(None),
+        Some(JsonValue::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(ApiError::invalid(format!("\"{key}\" must be a boolean"))),
+    }
+}
+
+/// Required float field.
+pub fn req_f64(v: &JsonValue, key: &str) -> Result<f64, ApiError> {
+    v.get(key)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| ApiError::invalid(format!("\"{key}\" must be a number")))
+}
+
+/// Required non-negative-integer field.
+pub fn req_u64(v: &JsonValue, key: &str) -> Result<u64, ApiError> {
+    v.get(key)
+        .and_then(strict_u64)
+        .ok_or_else(|| ApiError::invalid(format!("\"{key}\" must be a non-negative integer")))
+}
+
+/// Required boolean field.
+pub fn req_bool(v: &JsonValue, key: &str) -> Result<bool, ApiError> {
+    v.get(key)
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| ApiError::invalid(format!("\"{key}\" must be a boolean")))
+}
+
+/// Required array field.
+pub fn req_arr<'v>(v: &'v JsonValue, key: &str) -> Result<&'v [JsonValue], ApiError> {
+    v.get(key)
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| ApiError::invalid(format!("\"{key}\" must be an array")))
+}
+
+/// Optional array-of-strings field (e.g. `"models"`).
+pub fn opt_str_list(v: &JsonValue, key: &str) -> Result<Option<Vec<String>>, ApiError> {
+    let a = match v.get(key) {
+        None | Some(JsonValue::Null) => return Ok(None),
+        Some(x) => x
+            .as_arr()
+            .ok_or_else(|| ApiError::invalid(format!("\"{key}\" must be an array of names")))?,
+    };
+    let mut out = Vec::with_capacity(a.len());
+    for item in a {
+        match item.as_str() {
+            Some(s) => out.push(s.to_string()),
+            None => {
+                return Err(ApiError::invalid(format!("\"{key}\" must be an array of names")))
+            }
+        }
+    }
+    Ok(Some(out))
+}
+
+// ---- domain-type wire forms --------------------------------------------
+
+/// `[num_tc, tc_x, tc_y, num_vc, vc_w]` — the wire form of a config.
+pub fn config_arr(c: &ArchConfig) -> String {
+    format!("[{},{},{},{},{}]", c.num_tc, c.tc_x, c.tc_y, c.num_vc, c.vc_w)
+}
+
+/// Parse the [`config_arr`] form, strictly: exactly five non-negative
+/// integer entries.
+pub fn parse_config(v: &JsonValue) -> Result<ArchConfig, ApiError> {
+    let bad = || ApiError::invalid("\"config\" must be [num_tc,tc_x,tc_y,num_vc,vc_w]");
+    let a = v.as_arr().ok_or_else(bad)?;
+    if a.len() != 5 {
+        return Err(bad());
+    }
+    let n = |i: usize| -> Result<u64, ApiError> {
+        strict_u64(&a[i]).ok_or_else(|| {
+            ApiError::invalid(format!("\"config\"[{i}] must be a non-negative integer"))
+        })
+    };
+    Ok(ArchConfig { num_tc: n(0)?, tc_x: n(1)?, tc_y: n(2)?, num_vc: n(3)?, vc_w: n(4)? })
+}
+
+impl ToJson for Evaluation {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .u64("cycles", self.cycles)
+            .f64("seconds", self.seconds)
+            .f64("throughput", self.throughput)
+            .f64("energy_j", self.energy_j)
+            .f64("tdp_w", self.tdp_w)
+            .f64("area_mm2", self.area_mm2)
+            .f64("perf_per_tdp", self.perf_per_tdp)
+            .finish()
+    }
+}
+
+/// Parse the [`Evaluation`] wire object (`None` on shape mismatch).
+pub fn parse_eval(v: &JsonValue) -> Option<Evaluation> {
+    Some(Evaluation {
+        cycles: v.get("cycles")?.as_u64()?,
+        seconds: v.get("seconds")?.as_f64()?,
+        throughput: v.get("throughput")?.as_f64()?,
+        energy_j: v.get("energy_j")?.as_f64()?,
+        tdp_w: v.get("tdp_w")?.as_f64()?,
+        area_mm2: v.get("area_mm2")?.as_f64()?,
+        perf_per_tdp: v.get("perf_per_tdp")?.as_f64()?,
+    })
+}
+
+impl FromJson for Evaluation {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        parse_eval(v).ok_or_else(|| ApiError::invalid("malformed \"eval\" object"))
+    }
+}
+
+impl ToJson for DesignPoint {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .raw("config", &config_arr(&self.config))
+            .str("display", &self.config.display())
+            .f64("score", self.score)
+            .raw("eval", &self.eval.to_json())
+            .finish()
+    }
+}
+
+/// Parse the [`DesignPoint`] wire object (`None` on shape mismatch).
+pub fn parse_design_point(v: &JsonValue) -> Option<DesignPoint> {
+    let config = parse_config(v.get("config")?).ok()?;
+    Some(DesignPoint { config, eval: parse_eval(v.get("eval")?)?, score: v.get("score")?.as_f64()? })
+}
+
+impl FromJson for DesignPoint {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        parse_design_point(v).ok_or_else(|| ApiError::invalid("malformed design-point object"))
+    }
+}
+
+/// Serialize an [`Evaluation`] — compatibility alias for the design
+/// database and older call sites.
+pub fn eval_json(e: &Evaluation) -> String {
+    e.to_json()
+}
+
+/// Serialize a [`DesignPoint`] — compatibility alias.
+pub fn design_point_json(p: &DesignPoint) -> String {
+    p.to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    fn point() -> DesignPoint {
+        let cfg = presets::tpuv2();
+        DesignPoint { config: cfg, eval: crate::metrics::evaluate(&cfg, 1_000_000, 8, 1e9), score: 2.5 }
+    }
+
+    #[test]
+    fn design_point_round_trips() {
+        let p = point();
+        let v = json::parse(&p.to_json()).unwrap();
+        let q = DesignPoint::from_json(&v).unwrap();
+        assert_eq!(p.config, q.config);
+        assert_eq!(p.score, q.score);
+        assert_eq!(p.eval.cycles, q.eval.cycles);
+        assert_eq!(p.eval.throughput, q.eval.throughput);
+        assert_eq!(v.get("display").unwrap().as_str(), Some(p.config.display().as_str()));
+    }
+
+    #[test]
+    fn strict_u64_rejects_non_integers() {
+        assert_eq!(strict_u64(&JsonValue::Num(2.0)), Some(2));
+        assert_eq!(strict_u64(&JsonValue::Num(2.5)), None);
+        assert_eq!(strict_u64(&JsonValue::Num(-1.0)), None);
+        assert_eq!(strict_u64(&JsonValue::Str("2".into())), None);
+    }
+
+    #[test]
+    fn parse_config_rejects_non_numeric_entries() {
+        let v = json::parse("[2,\"x\",128,2,128]").unwrap();
+        let e = parse_config(&v).unwrap_err();
+        assert_eq!(e.http_status(), 400);
+        assert!(e.message.contains("[1]"), "{}", e.message);
+        assert!(parse_config(&json::parse("[2,128,128,2]").unwrap()).is_err());
+        assert!(parse_config(&json::parse("[2,128,128,2,128]").unwrap()).is_ok());
+    }
+
+    #[test]
+    fn empty_body_parses_as_empty_object() {
+        assert_eq!(parse_body("  ").unwrap(), JsonValue::Obj(Default::default()));
+        assert!(parse_body("{oops").is_err());
+    }
+}

@@ -15,6 +15,7 @@ use super::network::Network;
 use super::partition::PartitionedModel;
 use super::pipeline::{simulate_with_times, stage_times, PipelineEval, StageTimes};
 use super::Scheme;
+use crate::api::progress::{NullSink, Progress, ProgressSink};
 use crate::arch::ArchConfig;
 use crate::cost::CostBackend;
 use crate::metrics::Metric;
@@ -75,6 +76,10 @@ pub struct GlobalResult {
     pub wall: Duration,
     /// Stage-level local searches actually run (after dedup).
     pub local_searches: usize,
+    /// True when a [`ProgressSink`] cancelled the search cooperatively;
+    /// all three families are still populated, from the candidates
+    /// evaluated so far.
+    pub cancelled: bool,
 }
 
 /// Precomputed per-model stage-time tables, keyed by config.
@@ -149,8 +154,26 @@ pub fn global_search_cached(
     backend: &mut dyn CostBackend,
     caches: &dyn CacheProvider,
 ) -> GlobalResult {
+    global_search_observed(models, opts, net, backend, caches, &mut NullSink)
+}
+
+/// [`global_search_cached`] reporting progress to `sink` — per-stage
+/// local searches stream `"search"` events, the top-level pruner streams
+/// `"global"` events — and honoring cooperative cancellation: on a
+/// `false` return the remaining pool is skipped and the best designs
+/// found so far are assembled (at least one candidate is always
+/// evaluated, so the result is well-formed).
+pub fn global_search_observed(
+    models: &[PartitionedModel],
+    opts: &GlobalOptions,
+    net: &Network,
+    backend: &mut dyn CostBackend,
+    caches: &dyn CacheProvider,
+    sink: &mut dyn ProgressSink,
+) -> GlobalResult {
     assert!(!models.is_empty());
     let t0 = Instant::now();
+    let mut cancelled = false;
 
     // ---- 1. Local search: top-k designs per unique stage ----------------
     let mut local_searches = 0usize;
@@ -172,18 +195,14 @@ pub fn global_search_cached(
             if let Metric::PerfPerTdp = opts.metric {
                 // Per-stage throughput floor: what a TPUv2 achieves on
                 // this stage graph — keeps local winners pipeline-viable.
-                lopts.min_throughput = crate::search::engine::evaluate_design(
-                    &stage.graph,
-                    part.micro_batch,
-                    &crate::arch::presets::tpuv2(),
-                    backend,
-                )
-                .throughput;
+                lopts.min_throughput =
+                    crate::api::session::tpuv2_floor(&stage.graph, part.micro_batch, backend);
             }
             let mut cache =
                 caches.cache_for(&stage.graph, part.micro_batch, &lopts, backend.name());
             let r = WhamSearch::new(&stage.graph, part.micro_batch, lopts)
-                .run_cached(backend, cache.as_mut());
+                .run_with(backend, cache.as_mut(), sink);
+            cancelled |= r.cancelled;
             local_searches += 1;
             for p in r.top.points() {
                 if !pool.contains(&p.config) {
@@ -267,6 +286,20 @@ pub fn global_search_cached(
                 best_common = Some((mean, *cfg, results));
                 improved_level = true;
             }
+            // Cancellation check *after* the evaluation so at least one
+            // candidate is always scored and the families are populated.
+            let best_score =
+                best_common.as_ref().map(|(s, _, _)| *s).unwrap_or(f64::NEG_INFINITY);
+            let go = sink.on_progress(&Progress {
+                phase: "global",
+                elapsed: t0.elapsed(),
+                points: evaluated,
+                best_score,
+            });
+            if !go || cancelled {
+                cancelled = true;
+                break 'levels;
+            }
         }
         if opts.no_prune {
             continue; // unpruned arm: exhaust the pool
@@ -331,6 +364,7 @@ pub fn global_search_cached(
         candidate_pool,
         wall: t0.elapsed(),
         local_searches,
+        cancelled,
     }
 }
 
@@ -379,6 +413,29 @@ mod tests {
                 com.eval.throughput
             );
         }
+    }
+
+    #[test]
+    fn observed_cancellation_still_populates_families() {
+        let ms = mini_models();
+        let mut sink = crate::api::progress::DeadlineSink::new(std::time::Duration::ZERO);
+        let r = global_search_observed(
+            &ms,
+            &GlobalOptions::default(),
+            &Network::default(),
+            &mut NativeCost,
+            &NoSharedCache,
+            &mut sink,
+        );
+        assert!(r.cancelled, "zero deadline must cancel");
+        assert_eq!(r.common.1.len(), 2);
+        assert_eq!(r.individual.len(), 2);
+        assert_eq!(r.mosaic.len(), 2);
+        assert!(r.candidates_evaluated >= 1, "one candidate is always scored");
+        let full =
+            global_search(&ms, &GlobalOptions::default(), &Network::default(), &mut NativeCost);
+        assert!(!full.cancelled);
+        assert!(full.candidates_evaluated >= r.candidates_evaluated);
     }
 
     #[test]

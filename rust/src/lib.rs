@@ -15,6 +15,9 @@
 //! in [`cost::native`]. Python never runs on the search path.
 //!
 //! Module map (see DESIGN.md for the full inventory):
+//! * [`api`] — the typed request/plan/reply layer every front door
+//!   (CLI, HTTP service, library callers) shares: request builders,
+//!   validation, wire codec, [`api::Session`], progress/cancellation
 //! * [`graph`] — training operator-graph IR + mirrored autodiff + fusion
 //! * [`models`] — the 11-workload zoo of Table 4
 //! * [`arch`] — architectural template, area/power, TPUv2/NVDLA presets
@@ -31,6 +34,7 @@
 //!   request coalescing, persistent fingerprint-keyed design database
 //! * [`metrics`], [`report`], [`util`] — supporting substrates
 
+pub mod api;
 pub mod arch;
 pub mod baselines;
 pub mod coordinator;
@@ -46,6 +50,10 @@ pub mod search;
 pub mod service;
 pub mod util;
 
+pub use api::{
+    ApiError, CommonRequest, EvaluateRequest, FromJson, GlobalRequest, SearchRequest, Session,
+    ToJson,
+};
 pub use arch::{ArchConfig, Constraints};
 pub use graph::{fingerprint, CoreType, Fingerprint, OpKind, OperatorGraph};
 pub use metrics::Metric;

@@ -1,27 +1,32 @@
 //! `wham` — CLI for the WHAM accelerator-mining reproduction.
 //!
+//! Every mining subcommand is a thin adapter over [`wham::api`]: flags
+//! build the same typed request (`SearchRequest`, `EvaluateRequest`,
+//! `CommonRequest`, `GlobalRequest`) that the HTTP service deserializes
+//! from JSON, and a [`wham::api::Session`] executes it. `wham client`
+//! serializes those requests onto the wire with the same codec the
+//! server parses — the CLI and the service cannot drift apart.
+//!
 //! Subcommands:
 //! * `models` — list the Table-4 workload zoo;
 //! * `search` — per-workload accelerator search (section 4);
+//! * `evaluate` — evaluate one fixed design on a workload;
 //! * `common` — one design across a workload set (section 4.6);
 //! * `global` — distributed pipeline/TMP search (section 5);
 //! * `baseline` — run ConfuciuX+ / Spotlight+ / hand-optimized designs;
-//! * `serve` — long-running design-mining service with a persistent
-//!   design database (see [`wham::service`]);
+//! * `serve` — long-running design-mining service (see [`wham::service`]);
 //! * `client` — drive a running `wham serve` over HTTP;
 //! * `selftest` — verify the PJRT artifact against the native mirror.
 
 use anyhow::{anyhow, bail, Result};
-use wham::arch::presets;
+use wham::api::request::{backend_from_args, parse_dims};
+use wham::api::{
+    resolve_workload, CommonRequest, EvaluateRequest, GlobalRequest, NullSink, Progress,
+    ProgressSink, SearchRequest, Session, ToJson,
+};
 use wham::baselines::{confuciux, spotlight};
 use wham::coordinator::{make_backend, run_parallel, BackendChoice, SearchJob};
-use wham::distributed::global_search::{global_search, GlobalOptions};
-use wham::distributed::network::Network;
-use wham::distributed::partition::partition_transformer;
-use wham::distributed::Scheme;
 use wham::graph::autodiff::Optimizer;
-use wham::graph::OperatorGraph;
-use wham::metrics::Metric;
 use wham::report;
 use wham::search::engine::{evaluate_design, SearchOptions};
 use wham::util::cli::Args;
@@ -30,7 +35,7 @@ use wham::util::table::Table;
 const VALUE_KEYS: &[&str] = &[
     "model", "models", "metric", "backend", "k", "depth", "tmp", "scheme", "framework",
     "iterations", "workers", "hysteresis", "seed", "out", "tc", "vc", "dims", "port", "db",
-    "addr",
+    "addr", "deadline-ms",
 ];
 
 fn main() -> Result<()> {
@@ -38,6 +43,7 @@ fn main() -> Result<()> {
     match args.pos(0) {
         Some("models") => cmd_models(),
         Some("search") => cmd_search(&args),
+        Some("evaluate") => cmd_evaluate(&args),
         Some("common") => cmd_common(&args),
         Some("global") => cmd_global(&args),
         Some("baseline") => cmd_baseline(&args),
@@ -60,44 +66,26 @@ fn print_usage() {
          usage:\n  \
          wham models\n  \
          wham search --model <name> [--metric throughput|perf/tdp] [--ilp]\n              \
-         [--backend auto|native|pjrt] [--k 10] [--hysteresis 1]\n  \
+         [--backend auto|native|pjrt] [--k 10] [--hysteresis 1]\n              \
+         [--deadline-ms N] [--progress]\n  \
+         wham evaluate --model <name> --dims TXxTYxVW [--tc 2 --vc 2]\n  \
          wham common [--models a,b,c] [--metric ...]\n  \
          wham global [--models opt-1.3b,gpt2-xl] [--depth 32] [--tmp 1]\n              \
-         [--scheme gpipe|1f1b] [--k 10] [--metric ...]\n  \
+         [--scheme gpipe|1f1b] [--k 10] [--metric ...] [--deadline-ms N]\n  \
          wham baseline --model <name> --framework confuciux|spotlight|tpuv2|nvdla\n              \
          [--iterations 500]\n  \
          wham trace --model <name> [--out trace.json] [--tc 2 --vc 2 --dims 128x128x128]\n  \
          wham partition --model <llm> [--depth 32] [--tmp 1] [--scheme gpipe]\n  \
          wham space --model <name>\n  \
          wham serve [--port 8484] [--workers 8] [--db designs.jsonl] [--backend auto]\n  \
-         wham client <models|search|evaluate|global|status> [--addr 127.0.0.1:8484] ...\n  \
+         wham client <models|search|evaluate|common|global|status> [--addr 127.0.0.1:8484] ...\n  \
          wham selftest"
     );
 }
 
-/// Resolve a registry workload to its training graph and batch size —
-/// the lookup every per-workload subcommand starts with.
-fn resolve_workload(name: &str) -> Result<(OperatorGraph, u64)> {
-    let graph = wham::models::training(name, Optimizer::Adam)
-        .ok_or_else(|| anyhow!("unknown model {name:?} (see `wham models`)"))?;
-    let batch = wham::models::info(name)
-        .ok_or_else(|| anyhow!("model {name:?} missing from the registry"))?
-        .batch;
-    Ok((graph, batch))
-}
-
-fn parse_common(args: &Args) -> Result<(Metric, BackendChoice, SearchOptions)> {
-    let metric: Metric = args.get_or("metric", "throughput").parse().map_err(|e| anyhow!("{e}"))?;
-    let backend: BackendChoice =
-        args.get_or("backend", "auto").parse().map_err(|e| anyhow!("{e}"))?;
-    let opts = SearchOptions {
-        metric,
-        top_k: args.get_as_or("k", 10usize).map_err(|e| anyhow!("{e}"))?,
-        hysteresis: args.get_as_or("hysteresis", 1u32).map_err(|e| anyhow!("{e}"))?,
-        use_ilp: args.flag("ilp"),
-        ..Default::default()
-    };
-    Ok((metric, backend, opts))
+/// Session over the `--backend` flag.
+fn session_from_args(args: &Args) -> Result<Session> {
+    Ok(Session::new(backend_from_args(args)?)?)
 }
 
 fn cmd_models() -> Result<()> {
@@ -119,165 +107,110 @@ fn cmd_models() -> Result<()> {
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
-    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
-    let (metric, backend_choice, mut opts) = parse_common(args)?;
-    let (graph, batch) = resolve_workload(name)?;
-    let mut backend = make_backend(backend_choice)?;
-
-    if metric == Metric::PerfPerTdp {
-        opts.min_throughput =
-            evaluate_design(&graph, batch, &presets::tpuv2(), backend.as_mut()).throughput;
-    }
+    let req = SearchRequest::from_args(args)?;
+    let plan = req.validate()?;
+    let mut session = session_from_args(args)?;
     println!(
-        "searching {name} ({} ops, backend={}, metric={metric}, {})",
-        graph.len(),
-        backend.name(),
-        if opts.use_ilp { "ILP" } else { "MCR heuristics" },
+        "searching {} ({} ops, backend={}, metric={}, {})",
+        req.model,
+        plan.graph.len(),
+        session.backend_name(),
+        req.metric,
+        if req.use_ilp { "ILP" } else { "MCR heuristics" },
     );
-    let r = wham::search::engine::WhamSearch::new(&graph, batch, opts).run(backend.as_mut());
+    let mut progress = |p: &Progress| {
+        println!(
+            "  [{:>8.1}ms] {:>3} dims  best={:.4}",
+            p.elapsed.as_secs_f64() * 1e3,
+            p.points,
+            p.best_score
+        );
+        true
+    };
+    let mut null = NullSink;
+    let sink: &mut dyn ProgressSink =
+        if args.flag("progress") { &mut progress } else { &mut null };
+    let r = session.run_search(&plan, sink)?;
     println!(
-        "best: {}  score={:.4}  ({} dims, {} scheduler evals, {:?})",
+        "best: {}  score={:.4}  ({} dims, {} scheduler evals, {:.0}ms{})",
         r.best.config.display(),
         r.best.score,
         r.dims_evaluated,
         r.scheduler_evals,
-        r.wall
+        r.wall_ms,
+        if r.cancelled { ", deadline hit" } else { "" },
     );
     println!("  {}", report::eval_line(&r.best.eval));
-    let tpu = evaluate_design(&graph, batch, &presets::tpuv2(), backend.as_mut());
-    let nvdla = evaluate_design(&graph, batch, &presets::nvdla_scaled(), backend.as_mut());
-    println!("  vs TPUv2  : {:.3}x throughput", r.best.eval.throughput / tpu.throughput);
-    println!("  vs NVDLA  : {:.3}x throughput", r.best.eval.throughput / nvdla.throughput);
+    println!("  vs TPUv2  : {:.3}x throughput", r.vs_tpuv2);
+    println!("  vs NVDLA  : {:.3}x throughput", r.vs_nvdla);
     println!("top-{}:", r.top.len());
     let rows: Vec<(String, wham::search::DesignPoint)> =
-        r.top.points().iter().map(|p| (name.to_string(), *p)).collect();
+        r.top.iter().map(|p| (req.model.clone(), *p)).collect();
     print!("{}", report::design_table(&rows));
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let req = EvaluateRequest::from_args(args)?;
+    let mut session = session_from_args(args)?;
+    let r = session.evaluate(&req)?;
+    println!("{} on {} (fingerprint {})", r.config.display(), r.model, r.fingerprint);
+    println!("  {}", report::eval_line(&r.eval));
     Ok(())
 }
 
 fn cmd_common(args: &Args) -> Result<()> {
-    let names: Vec<String> = {
-        let l = args.get_list("models");
-        if l.is_empty() {
-            wham::models::single_acc_models().iter().map(|s| s.to_string()).collect()
-        } else {
-            l
-        }
-    };
-    let (metric, backend_choice, mut opts) = parse_common(args)?;
-    opts.metric = metric;
-    let mut backend = make_backend(backend_choice)?;
-    let graphs: Vec<(String, wham::graph::OperatorGraph, u64)> = names
-        .iter()
-        .map(|n| {
-            let (g, b) = resolve_workload(n)?;
-            Ok((n.clone(), g, b))
-        })
-        .collect::<Result<_>>()?;
-    let workloads: Vec<wham::search::common::Workload> = graphs
-        .iter()
-        .map(|(n, g, b)| {
-            let min = if metric == Metric::PerfPerTdp {
-                evaluate_design(g, *b, &presets::tpuv2(), backend.as_mut()).throughput
-            } else {
-                0.0
-            };
-            wham::search::common::Workload {
-                name: n.clone(),
-                graph: g,
-                batch: *b,
-                min_throughput: min,
-                weight: 1.0,
-            }
-        })
-        .collect();
-    println!("WHAM-common over {} workloads (metric={metric})", workloads.len());
-    let r = wham::search::common::search_common(&workloads, opts, backend.as_mut());
+    let req = CommonRequest::from_args(args)?;
+    let mut session = session_from_args(args)?;
+    let r = session.common(&req)?;
+    println!("WHAM-common over {} workloads (metric={})", r.models.len(), r.metric);
     println!(
-        "common design: {}  weighted score={:.4}  ({} dims, {:?})",
-        r.best.0.display(),
-        r.best.1,
+        "common design: {}  weighted score={:.4}  ({} dims, {:.0}ms)",
+        r.config.display(),
+        r.score,
         r.dims_evaluated,
-        r.wall
+        r.wall_ms
     );
-    let rows: Vec<(String, wham::search::DesignPoint)> = names
-        .iter()
-        .cloned()
-        .zip(r.per_workload.iter().copied())
-        .collect();
-    print!("{}", report::design_table(&rows));
+    print!("{}", report::design_table(&r.per_workload));
     Ok(())
 }
 
 fn cmd_global(args: &Args) -> Result<()> {
-    let names: Vec<String> = {
-        let l = args.get_list("models");
-        if l.is_empty() {
-            vec!["opt-1.3b".into(), "gpt2-xl".into()]
-        } else {
-            l
-        }
-    };
-    let depth: u64 = args.get_as_or("depth", 32).map_err(|e| anyhow!("{e}"))?;
-    let tmp: u64 = args.get_as_or("tmp", 1).map_err(|e| anyhow!("{e}"))?;
-    let scheme: Scheme = args.get_or("scheme", "gpipe").parse().map_err(|e| anyhow!("{e}"))?;
-    let (metric, backend_choice, local) = parse_common(args)?;
-    let mut backend = make_backend(backend_choice)?;
-
-    let parts: Vec<_> = names
-        .iter()
-        .map(|n| {
-            let cfg = wham::models::transformer_cfg(n)
-                .ok_or_else(|| anyhow!("{n:?} is not an LLM workload"))?;
-            Ok(partition_transformer(n, &cfg, depth, tmp, Optimizer::Adam))
-        })
-        .collect::<Result<_>>()?;
-    let net = Network::default();
-    // TPUv2 pipeline baseline, simulated once per model: it serves as
-    // both the Perf/TDP floor and the comparison column of the table.
-    let tpu_pipe: Vec<wham::distributed::pipeline::PipelineEval> = parts
-        .iter()
-        .map(|p| {
-            let cfgs = vec![presets::tpuv2(); p.stages.len()];
-            wham::distributed::pipeline::simulate(p, &cfgs, scheme, &net, backend.as_mut())
-        })
-        .collect();
-    let mut gopts = GlobalOptions { metric, scheme, top_k: local.top_k, local, ..Default::default() };
-    if metric == Metric::PerfPerTdp {
-        // TPUv2 pipeline throughput as the floor (min across models).
-        gopts.min_throughput =
-            tpu_pipe.iter().map(|e| e.throughput).fold(f64::INFINITY, f64::min);
-    }
+    let req = GlobalRequest::from_args(args)?;
+    let plan = req.validate()?;
+    let mut session = session_from_args(args)?;
     println!(
-        "global search: {} models, depth={depth}, tmp={tmp}, scheme={scheme:?}, metric={metric}",
-        parts.len()
+        "global search: {} models, depth={}, tmp={}, scheme={:?}, metric={}",
+        plan.models.len(),
+        req.depth,
+        req.tmp,
+        req.scheme,
+        req.metric
     );
-    let r = global_search(&parts, &gopts, &net, backend.as_mut());
+    let r = session.run_global(&plan, &mut NullSink)?;
     println!(
-        "pool={} evaluated={} local_searches={} wall={:?}",
-        r.candidate_pool, r.candidates_evaluated, r.local_searches, r.wall
+        "pool={} evaluated={} local_searches={} wall={:.0}ms{}",
+        r.candidate_pool,
+        r.candidates_evaluated,
+        r.local_searches,
+        r.wall_ms,
+        if r.cancelled { " (deadline hit)" } else { "" },
     );
-    println!("WHAM-common config: {}", r.common.0.display());
+    println!("WHAM-common config: {}", r.common_config.display());
     let mut t = Table::new(["model", "family", "config(s)", "thpt", "perf/TDP", "vs TPUv2 thpt"]);
-    for (p, tpu) in parts.iter().zip(&tpu_pipe) {
-        let add_row =
-            |t: &mut Table, fam: &str, m: &wham::distributed::global_search::ModelPipelineResult| {
-                let uniq: std::collections::BTreeSet<String> =
-                    m.configs.iter().map(|c| c.display()).collect();
+    for name in &r.models {
+        for (fam, list) in
+            [("common", &r.common), ("individual", &r.individual), ("mosaic", &r.mosaic)]
+        {
+            if let Some(m) = list.iter().find(|m| &m.model == name) {
                 t.row([
                     m.model.clone(),
                     fam.to_string(),
-                    uniq.into_iter().collect::<Vec<_>>().join(" "),
-                    format!("{:.3}", m.eval.throughput),
-                    format!("{:.4}", m.eval.perf_per_tdp),
-                    format!("{:.3}x", m.eval.throughput / tpu.throughput),
+                    m.configs.join(" "),
+                    format!("{:.3}", m.throughput),
+                    format!("{:.4}", m.perf_per_tdp),
+                    format!("{:.3}x", m.vs_tpuv2),
                 ]);
-            };
-        for (fam, list) in
-            [("common", &r.common.1), ("individual", &r.individual), ("mosaic", &r.mosaic)]
-        {
-            if let Some(m) = list.iter().find(|m| m.model == p.name) {
-                add_row(&mut t, fam, m);
             }
         }
     }
@@ -289,9 +222,11 @@ fn cmd_baseline(args: &Args) -> Result<()> {
     let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
     let framework = args.get("framework").unwrap_or("confuciux");
     let iterations: usize = args.get_as_or("iterations", 500).map_err(|e| anyhow!("{e}"))?;
-    let (metric, backend_choice, _) = parse_common(args)?;
+    // The shared request parser supplies the metric; baselines have no
+    // other search options.
+    let metric = SearchRequest::from_args(args)?.metric;
     let (graph, batch) = resolve_workload(name)?;
-    let mut backend = make_backend(backend_choice)?;
+    let mut backend = make_backend(backend_from_args(args)?)?;
 
     match framework {
         "confuciux" => {
@@ -327,7 +262,11 @@ fn cmd_baseline(args: &Args) -> Result<()> {
             println!("  {}", report::eval_line(&r.eval));
         }
         "tpuv2" | "nvdla" => {
-            let cfg = if framework == "tpuv2" { presets::tpuv2() } else { presets::nvdla_scaled() };
+            let cfg = if framework == "tpuv2" {
+                wham::arch::presets::tpuv2()
+            } else {
+                wham::arch::presets::nvdla_scaled()
+            };
             let e = evaluate_design(&graph, batch, &cfg, backend.as_mut());
             println!("{framework} on {name}: {}", cfg.display());
             println!("  {}", report::eval_line(&e));
@@ -341,24 +280,15 @@ fn cmd_baseline(args: &Args) -> Result<()> {
 fn cmd_trace(args: &Args) -> Result<()> {
     let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
     let out = args.get_or("out", "trace.json");
-    let (graph, batch) = resolve_workload(name)?;
-    let (_, backend_choice, _) = parse_common(args)?;
-    let mut backend = make_backend(backend_choice)?;
+    let (graph, _batch) = resolve_workload(name)?;
+    let mut session = session_from_args(args)?;
 
     // Design: explicit --tc/--vc/--dims, else the search's best.
     let dims_s = args.get_or("dims", "");
     let config = if dims_s.is_empty() {
-        wham::search::engine::WhamSearch::new(&graph, batch, SearchOptions::default())
-            .run(backend.as_mut())
-            .best
-            .config
+        session.search(&SearchRequest::new(name))?.best.config
     } else {
-        let parts: Vec<u64> = dims_s
-            .split('x')
-            .map(|p| p.parse().map_err(|_| anyhow!("--dims expects TXxTYxVW, e.g. 128x128x128")))
-            .collect::<Result<_>>()?;
-        let [tx, ty, vw]: [u64; 3] =
-            parts.try_into().map_err(|_| anyhow!("--dims expects three values"))?;
+        let (tx, ty, vw) = parse_dims(&dims_s)?;
         wham::arch::ArchConfig {
             num_tc: args.get_as_or("tc", 2u64).map_err(|e| anyhow!("{e}"))?,
             tc_x: tx,
@@ -370,7 +300,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let ann = wham::cost::annotate::AnnotatedGraph::new(
         &graph,
         wham::cost::Dims::of(&config),
-        backend.as_mut(),
+        session.backend_mut(),
     );
     let cp = wham::sched::asap_alap(&ann);
     let cores = wham::sched::CoreCount { tc: config.num_tc, vc: config.num_vc };
@@ -392,10 +322,17 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
     let depth: u64 = args.get_as_or("depth", 32).map_err(|e| anyhow!("{e}"))?;
     let tmp: u64 = args.get_as_or("tmp", 1).map_err(|e| anyhow!("{e}"))?;
-    let scheme: Scheme = args.get_or("scheme", "gpipe").parse().map_err(|e| anyhow!("{e}"))?;
+    let scheme: wham::distributed::Scheme =
+        args.get_or("scheme", "gpipe").parse().map_err(|e: String| anyhow!("{e}"))?;
     let cfg = wham::models::transformer_cfg(name)
         .ok_or_else(|| anyhow!("{name:?} is not an LLM workload"))?;
-    let p = partition_transformer(name, &cfg, depth, tmp, Optimizer::Adam);
+    let p = wham::distributed::partition::partition_transformer(
+        name,
+        &cfg,
+        depth,
+        tmp,
+        Optimizer::Adam,
+    );
     println!(
         "{name}: {} stages x tmp {}, microbatch {}, {} microbatches/iter",
         p.stages.len(),
@@ -422,18 +359,22 @@ fn cmd_partition(args: &Args) -> Result<()> {
 
 /// Print the Table-3 search-space accounting for a workload.
 fn cmd_space(args: &Args) -> Result<()> {
-    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
-    let (graph, batch) = resolve_workload(name)?;
-    let (_, backend_choice, opts) = parse_common(args)?;
-    let mut backend = make_backend(backend_choice)?;
-    let r = wham::search::engine::WhamSearch::new(&graph, batch, opts).run(backend.as_mut());
+    let req = SearchRequest::from_args(args)?;
+    let (graph, _batch) = resolve_workload(&req.model)?;
+    let mut session = session_from_args(args)?;
+    let r = session.search(&req)?;
     let ann = wham::cost::annotate::AnnotatedGraph::new(
         &graph,
         wham::cost::Dims { tc_x: 128, tc_y: 128, vc_w: 128 },
-        backend.as_mut(),
+        session.backend_mut(),
     );
-    let s = wham::search::space::space_sizes(&ann, r.dims_evaluated);
-    println!("{name}: {} ops, {} dims evaluated by the pruner", graph.len(), r.dims_evaluated);
+    let s = wham::search::space::space_sizes(&ann, r.dims_evaluated as usize);
+    println!(
+        "{}: {} ops, {} dims evaluated by the pruner",
+        req.model,
+        graph.len(),
+        r.dims_evaluated
+    );
     println!("  exhaustive      10^{:.0}", s.exhaustive);
     println!("  ILP unpruned    10^{:.0}", s.ilp_unpruned);
     println!("  ILP pruned      10^{:.0}", s.ilp_pruned);
@@ -446,80 +387,33 @@ fn cmd_space(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let port: u16 = args.get_as_or("port", 8484).map_err(|e| anyhow!("{e}"))?;
     let workers: usize = args.get_as_or("workers", 8).map_err(|e| anyhow!("{e}"))?;
-    let backend: BackendChoice =
-        args.get_or("backend", "auto").parse().map_err(|e| anyhow!("{e}"))?;
+    let backend = backend_from_args(args)?;
     let db_path = args.get("db").map(std::path::PathBuf::from);
     let opts = wham::service::ServeOptions { workers, db_path, backend };
     wham::service::serve_forever(&format!("127.0.0.1:{port}"), opts)
 }
 
-/// Drive a running `wham serve` instance over HTTP.
+/// Drive a running `wham serve` instance over HTTP. Bodies are the typed
+/// requests' canonical wire form — the same bytes the server parses.
 fn cmd_client(args: &Args) -> Result<()> {
     let addr_s = args.get_or("addr", "127.0.0.1:8484");
     let addr: std::net::SocketAddr =
         addr_s.parse().map_err(|_| anyhow!("--addr expects host:port, got {addr_s:?}"))?;
     let sub = args.pos(1).ok_or_else(|| {
-        anyhow!("usage: wham client <models|search|evaluate|global|status> [--addr host:port]")
+        anyhow!("usage: wham client <models|search|evaluate|common|global|status> [--addr host:port]")
     })?;
 
-    let with_model = |body: &mut String| -> Result<()> {
-        let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
-        body.push_str(&format!("\"model\":{}", wham::util::json::esc(model)));
-        Ok(())
-    };
     let (method, path, body) = match sub {
         "models" => ("GET", "/models", None),
         "status" => ("GET", "/status", None),
-        "search" => {
-            let mut b = String::from("{");
-            with_model(&mut b)?;
-            b.push_str(&format!(",\"metric\":{}", wham::util::json::esc(&args.get_or("metric", "throughput"))));
-            if let Some(k) = args.get("k") {
-                b.push_str(&format!(",\"k\":{k}"));
-            }
-            if args.flag("ilp") {
-                b.push_str(",\"ilp\":true");
-            }
-            b.push('}');
-            ("POST", "/search", Some(b))
-        }
-        "evaluate" => {
-            let mut b = String::from("{");
-            with_model(&mut b)?;
-            // --dims TXxTYxVW with --tc/--vc counts, like `wham trace`.
-            let dims_s = args.get("dims").ok_or_else(|| anyhow!("--dims TXxTYxVW required"))?;
-            let parts: Vec<u64> = dims_s
-                .split('x')
-                .map(|p| p.parse().map_err(|_| anyhow!("--dims expects TXxTYxVW")))
-                .collect::<Result<_>>()?;
-            let [tx, ty, vw]: [u64; 3] =
-                parts.try_into().map_err(|_| anyhow!("--dims expects three values"))?;
-            let tc: u64 = args.get_as_or("tc", 2).map_err(|e| anyhow!("{e}"))?;
-            let vc: u64 = args.get_as_or("vc", 2).map_err(|e| anyhow!("{e}"))?;
-            b.push_str(&format!(",\"config\":[{tc},{tx},{ty},{vc},{vw}]}}"));
-            ("POST", "/evaluate", Some(b))
-        }
-        "global" => {
-            let models = args.get_list("models");
-            let mut b = String::from("{");
-            if !models.is_empty() {
-                let quoted: Vec<String> =
-                    models.iter().map(|m| wham::util::json::esc(m)).collect();
-                b.push_str(&format!("\"models\":[{}],", quoted.join(",")));
-            }
-            b.push_str(&format!(
-                "\"depth\":{},\"tmp\":{},\"scheme\":{}}}",
-                args.get_as_or("depth", 32u64).map_err(|e| anyhow!("{e}"))?,
-                args.get_as_or("tmp", 1u64).map_err(|e| anyhow!("{e}"))?,
-                wham::util::json::esc(&args.get_or("scheme", "gpipe")),
-            ));
-            ("POST", "/global", Some(b))
-        }
+        "search" => ("POST", "/search", Some(SearchRequest::from_args(args)?.to_json())),
+        "evaluate" => ("POST", "/evaluate", Some(EvaluateRequest::from_args(args)?.to_json())),
+        "common" => ("POST", "/common", Some(CommonRequest::from_args(args)?.to_json())),
+        "global" => ("POST", "/global", Some(GlobalRequest::from_args(args)?.to_json())),
         other => bail!("unknown client subcommand {other:?}"),
     };
-    let (status, resp) =
-        wham::service::http::request(addr, method, path, body.as_deref())
-            .map_err(|e| anyhow!("request to {addr} failed: {e} (is `wham serve` running?)"))?;
+    let (status, resp) = wham::service::http::request(addr, method, path, body.as_deref())
+        .map_err(|e| anyhow!("request to {addr} failed: {e} (is `wham serve` running?)"))?;
     println!("{resp}");
     if status != 200 {
         bail!("server returned HTTP {status}");
@@ -531,13 +425,13 @@ fn cmd_selftest() -> Result<()> {
     println!("1/3 native backend ...");
     let graph = wham::models::training("bert-base", Optimizer::Adam).unwrap();
     let mut native = make_backend(BackendChoice::Native)?;
-    let en = evaluate_design(&graph, 4, &presets::tpuv2(), native.as_mut());
+    let en = evaluate_design(&graph, 4, &wham::arch::presets::tpuv2(), native.as_mut());
     println!("    bert-base on TPUv2 (native): {}", report::eval_line(&en));
 
     println!("2/3 PJRT artifact ...");
     let mut pjrt = make_backend(BackendChoice::Pjrt)
         .map_err(|e| anyhow!("PJRT backend unavailable ({e}); run `make artifacts`"))?;
-    let ep = evaluate_design(&graph, 4, &presets::tpuv2(), pjrt.as_mut());
+    let ep = evaluate_design(&graph, 4, &wham::arch::presets::tpuv2(), pjrt.as_mut());
     println!("    bert-base on TPUv2 (pjrt)  : {}", report::eval_line(&ep));
 
     println!("3/3 agreement ...");

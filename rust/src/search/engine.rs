@@ -10,6 +10,7 @@ use super::ilp::ilp_search;
 use super::mcr::mcr;
 use super::pruner::prune_tree;
 use super::{dims, DesignPoint, TopK};
+use crate::api::progress::{NullSink, Progress, ProgressSink};
 use crate::arch::{ArchConfig, Constraints, DIM_MAX};
 use crate::cost::annotate::AnnotatedGraph;
 use crate::cost::{CostBackend, Dims};
@@ -67,6 +68,10 @@ pub struct SearchResult {
     pub wall: Duration,
     /// (elapsed, best-score-so-far) log for convergence plots (Fig. 8).
     pub trajectory: Vec<(Duration, f64)>,
+    /// True when a [`ProgressSink`] cancelled the search cooperatively
+    /// (deadline hit, client gone): `best`/`top` are best-so-far, not
+    /// the full exploration's.
+    pub cancelled: bool,
 }
 
 /// Memoization layer for per-`Dims` design-point evaluations.
@@ -147,16 +152,29 @@ impl<'a> WhamSearch<'a> {
         self.run_cached(backend, &mut local)
     }
 
+    /// [`WhamSearch::run_with`] without progress observation.
+    pub fn run_cached(
+        &self,
+        backend: &mut dyn CostBackend,
+        cache: &mut dyn EvalCache,
+    ) -> SearchResult {
+        self.run_with(backend, cache, &mut NullSink)
+    }
+
     /// Run the full two-phase dimension search:
     /// 1. prune tensor-core dims with the vector width at max;
     /// 2. prune vector width at the winning tensor dims.
     /// Each dimension evaluation runs MCR (or B&B) to pick core counts,
     /// consulting `cache` first — with a warm shared design database the
     /// whole search completes without a single scheduler invocation.
-    pub fn run_cached(
+    /// Every evaluated point is reported to `sink`; a `false` return
+    /// cancels cooperatively (remaining dims are skipped and the result
+    /// is flagged [`SearchResult::cancelled`]).
+    pub fn run_with(
         &self,
         backend: &mut dyn CostBackend,
         cache: &mut dyn EvalCache,
+        sink: &mut dyn ProgressSink,
     ) -> SearchResult {
         let t0 = Instant::now();
         // Intra-run memo: the pruner revisits dims (phase 2 starts at the
@@ -168,9 +186,16 @@ impl<'a> WhamSearch<'a> {
         let mut trajectory: Vec<(Duration, f64)> = Vec::new();
         let mut scheduler_evals = 0usize;
         let mut cache_hits = 0usize;
+        let mut cancelled = false;
 
         {
             let mut eval_dims = |d: Dims| -> f64 {
+                // After cancellation the pruner's remaining probes are
+                // answered with the worst score so it terminates fast
+                // without recording phantom evaluations.
+                if cancelled {
+                    return f64::NEG_INFINITY;
+                }
                 if let Some(&score) = seen.get(&d) {
                     return score;
                 }
@@ -191,6 +216,15 @@ impl<'a> WhamSearch<'a> {
                 top.offer(point);
                 let best = top.best().map(|b| b.score).unwrap_or(f64::NEG_INFINITY);
                 trajectory.push((t0.elapsed(), best));
+                let go = sink.on_progress(&Progress {
+                    phase: "search",
+                    elapsed: t0.elapsed(),
+                    points: explored.len(),
+                    best_score: best,
+                });
+                if !go {
+                    cancelled = true;
+                }
                 point.score
             };
 
@@ -222,6 +256,7 @@ impl<'a> WhamSearch<'a> {
             cache_hits,
             wall: t0.elapsed(),
             trajectory,
+            cancelled,
         }
     }
 
@@ -367,6 +402,26 @@ mod tests {
         assert_eq!(warm.cache_hits, warm.dims_evaluated);
         assert_eq!(warm.best.config, cold.best.config);
         assert_eq!(warm.dims_evaluated, cold.dims_evaluated);
+    }
+
+    #[test]
+    fn sink_cancellation_returns_best_so_far() {
+        let g = bert1_graph();
+        let s = WhamSearch::new(&g, 4, SearchOptions::default());
+        let full = s.run(&mut NativeCost);
+        assert!(!full.cancelled);
+
+        let mut cache: HashMap<Dims, DesignPoint> = HashMap::new();
+        let mut calls = 0usize;
+        let mut sink = |_: &crate::api::progress::Progress| {
+            calls += 1;
+            calls < 2
+        };
+        let r = s.run_with(&mut NativeCost, &mut cache, &mut sink);
+        assert!(r.cancelled, "sink returned false, search must flag cancellation");
+        assert_eq!(r.dims_evaluated, 2, "no evaluations after the cancel signal");
+        assert!(full.dims_evaluated > r.dims_evaluated);
+        assert!(r.best.config.in_template());
     }
 
     #[test]

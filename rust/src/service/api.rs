@@ -1,41 +1,42 @@
-//! JSON endpoints of the mining service.
+//! HTTP endpoints of the mining service — thin adapters over
+//! [`crate::api`].
 //!
-//! | endpoint        | body                                                  | result |
-//! |-----------------|-------------------------------------------------------|--------|
-//! | `GET /models`   | —                                                     | the Table-4 workload zoo |
-//! | `POST /search`  | `{"model", "metric"?, "k"?, "hysteresis"?, "ilp"?}`   | per-workload search (coalesced + cached) |
-//! | `POST /evaluate`| `{"model", "config":[#tc,tcx,tcy,#vc,vcw]}`           | evaluate a fixed design |
-//! | `POST /global`  | `{"models":[..], "depth"?, "tmp"?, "scheme"?, "k"?}`  | distributed pipeline search |
-//! | `GET /status`   | —                                                     | counters: cache, coalescing, uptime |
+//! Each endpoint deserializes its body into the corresponding typed
+//! request, validates it into a plan, and executes it on the worker's
+//! [`Session`]; replies are the typed reply's `to_json()` bytes. The
+//! request/reply schemas live with the types:
 //!
-//! JSON is hand-rolled on the way out (the idiom of
-//! [`crate::report::trace`]) and parsed on the way in by
-//! [`crate::util::json`].
+//! | endpoint         | request type                      | reply type |
+//! |------------------|-----------------------------------|------------|
+//! | `GET /models`    | —                                 | [`crate::api::ModelsReply`] |
+//! | `POST /search`   | [`crate::api::SearchRequest`]     | [`crate::api::SearchReply`] (coalesced + cached) |
+//! | `POST /evaluate` | [`crate::api::EvaluateRequest`]   | [`crate::api::EvaluateReply`] |
+//! | `POST /common`   | [`crate::api::CommonRequest`]     | [`crate::api::CommonReply`] |
+//! | `POST /global`   | [`crate::api::GlobalRequest`]     | [`crate::api::GlobalReply`] |
+//! | `GET /status`    | —                                 | [`crate::api::StatusReply`] |
+//!
+//! [`ApiError`] kinds map to HTTP statuses (400/404/500); `/search`,
+//! `/common`, and `/global` coalesce identical in-flight requests by the
+//! plan's canonical coalescing key ([`crate::api::plan`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::api::reply::{CoalescerCounters, DbCounters, SearchCounters};
+use crate::api::{
+    ApiError, CommonRequest, EvaluateRequest, FromJson, GlobalRequest, NullSink, SearchRequest,
+    Session, StatusReply, ToJson,
+};
 use crate::coordinator::{make_backend, BackendChoice};
 use crate::cost::native::NativeCost;
-use crate::cost::CostBackend;
-use crate::distributed::global_search::{global_search_cached, GlobalOptions, ModelPipelineResult};
-use crate::distributed::network::Network;
-use crate::distributed::partition::partition_transformer;
-use crate::distributed::Scheme;
-use crate::graph::autodiff::Optimizer;
-use crate::graph::{fingerprint, OperatorGraph};
-use crate::metrics::Metric;
-use crate::search::engine::{evaluate_design, SearchOptions, WhamSearch};
-use crate::service::cache::{context_key, design_point_json, eval_json, DesignDb};
+use crate::service::cache::DesignDb;
 use crate::service::http::{Handler, Request, Response};
 use crate::service::queue::Coalescer;
-use crate::util::fnv::Fnv;
-use crate::util::json::{self, esc, num, JsonValue};
 
 /// Shared state of one running service.
 pub struct ServiceState {
-    pub db: DesignDb,
+    pub db: Arc<DesignDb>,
     pub coalescer: Coalescer,
     pub backend_choice: BackendChoice,
     pub workers: usize,
@@ -52,7 +53,7 @@ pub struct ServiceState {
 }
 
 impl ServiceState {
-    pub fn new(db: DesignDb, backend_choice: BackendChoice, workers: usize) -> Self {
+    pub fn new(db: Arc<DesignDb>, backend_choice: BackendChoice, workers: usize) -> Self {
         Self {
             db,
             coalescer: Coalescer::new(),
@@ -66,354 +67,137 @@ impl ServiceState {
             scheduler_evals_total: AtomicU64::new(0),
         }
     }
+
+    /// Snapshot of the service counters as the typed `/status` reply.
+    pub fn status(&self) -> StatusReply {
+        let db = self.db.stats();
+        StatusReply {
+            uptime_ms: self.started.elapsed().as_millis() as u64,
+            workers: self.workers as u64,
+            requests: self.requests.load(Ordering::Relaxed),
+            search: SearchCounters {
+                requests: self.search_requests.load(Ordering::Relaxed),
+                cold: self.cold_searches.load(Ordering::Relaxed),
+                warm: self.warm_searches.load(Ordering::Relaxed),
+                scheduler_evals_total: self.scheduler_evals_total.load(Ordering::Relaxed),
+            },
+            coalescer: CoalescerCounters {
+                led: self.coalescer.led.load(Ordering::Relaxed),
+                coalesced: self.coalescer.coalesced.load(Ordering::Relaxed),
+                in_flight: self.coalescer.in_flight() as u64,
+            },
+            db: DbCounters {
+                path: self.db.path().map(|p| p.display().to_string()),
+                entries: db.entries as u64,
+                loaded: db.loaded as u64,
+                appended: db.appended,
+                hits: db.hits,
+                misses: db.misses,
+            },
+        }
+    }
 }
 
-/// The HTTP handler: one cost backend per worker thread (PJRT clients are
-/// not `Sync` — same policy as [`crate::coordinator`]).
+/// The HTTP handler: one [`Session`] (cost backend + shared design
+/// database) per worker thread — PJRT clients are not `Sync`, the same
+/// policy as [`crate::coordinator`].
 pub struct Api {
     pub state: Arc<ServiceState>,
 }
 
 impl Handler for Api {
-    type Ctx = Box<dyn CostBackend>;
+    type Ctx = Session;
 
     fn make_ctx(&self) -> Self::Ctx {
         // `start()` validated the choice once; an explicit-PJRT failure
         // here can only race an artifact deletion, so fall back rather
         // than serve nothing.
-        make_backend(self.state.backend_choice).unwrap_or_else(|_| Box::new(NativeCost))
+        let backend = make_backend(self.state.backend_choice)
+            .unwrap_or_else(|_| Box::new(NativeCost));
+        Session::with_backend(backend).with_db(Arc::clone(&self.state.db))
     }
 
-    fn handle(&self, backend: &mut Self::Ctx, req: &Request) -> Response {
+    fn handle(&self, session: &mut Self::Ctx, req: &Request) -> Response {
         let s = &self.state;
         s.requests.fetch_add(1, Ordering::Relaxed);
         match (req.method.as_str(), req.path.as_str()) {
-            ("GET", "/models") => models_response(),
-            ("GET", "/status") => status_response(s),
-            ("POST", "/search") => search_response(s, backend.as_mut(), &req.body),
-            ("POST", "/evaluate") => evaluate_response(backend.as_mut(), &req.body),
-            ("POST", "/global") => global_response(s, backend.as_mut(), &req.body),
-            (_, "/models" | "/status" | "/search" | "/evaluate" | "/global") => {
+            ("GET", "/models") => Response::json(session.models().to_json()),
+            ("GET", "/status") => Response::json(s.status().to_json()),
+            ("POST", "/search") => search_response(s, session, &req.body),
+            ("POST", "/evaluate") => api_result(
+                EvaluateRequest::from_json_str(&req.body)
+                    .and_then(|r| session.evaluate(&r))
+                    .map(|reply| reply.to_json()),
+            ),
+            ("POST", "/common") => common_response(s, session, &req.body),
+            ("POST", "/global") => global_response(s, session, &req.body),
+            (_, "/models" | "/status" | "/search" | "/evaluate" | "/common" | "/global") => {
                 Response::error(405, "wrong method for this endpoint")
             }
-            _ => Response::error(404, "unknown endpoint; see GET /models, POST /search, POST /evaluate, POST /global, GET /status"),
+            _ => Response::error(
+                404,
+                "unknown endpoint; see GET /models, POST /search, POST /evaluate, POST /common, POST /global, GET /status",
+            ),
         }
     }
 }
 
-fn models_response() -> Response {
-    let rows: Vec<String> = crate::models::MODELS
-        .iter()
-        .map(|m| {
-            format!(
-                "{{\"name\":{},\"task\":{},\"batch\":{},\"accelerators\":{},\"distributed_only\":{}}}",
-                esc(m.name),
-                esc(m.task),
-                m.batch,
-                m.accelerators,
-                m.distributed_only
-            )
-        })
-        .collect();
-    Response::json(format!("{{\"models\":[{}]}}", rows.join(",")))
-}
-
-fn status_response(s: &ServiceState) -> Response {
-    let db = s.db.stats();
-    let path = match s.db.path() {
-        Some(p) => esc(&p.display().to_string()),
-        None => "null".to_string(),
-    };
-    // `search` counts only `/search` work; the coalescer is shared by
-    // `/search` and `/global`, so its counters get their own block.
-    Response::json(format!(
-        "{{\"uptime_ms\":{},\"workers\":{},\"requests\":{},\
-         \"search\":{{\"requests\":{},\"cold\":{},\"warm\":{},\"scheduler_evals_total\":{}}},\
-         \"coalescer\":{{\"led\":{},\"coalesced\":{},\"in_flight\":{}}},\
-         \"db\":{{\"path\":{},\"entries\":{},\"loaded\":{},\"appended\":{},\"hits\":{},\"misses\":{}}}}}",
-        s.started.elapsed().as_millis(),
-        s.workers,
-        s.requests.load(Ordering::Relaxed),
-        s.search_requests.load(Ordering::Relaxed),
-        s.cold_searches.load(Ordering::Relaxed),
-        s.warm_searches.load(Ordering::Relaxed),
-        s.scheduler_evals_total.load(Ordering::Relaxed),
-        s.coalescer.led.load(Ordering::Relaxed),
-        s.coalescer.coalesced.load(Ordering::Relaxed),
-        s.coalescer.in_flight(),
-        path,
-        db.entries,
-        db.loaded,
-        db.appended,
-        db.hits,
-        db.misses,
-    ))
-}
-
-/// Parse the request body as a JSON object (empty body → empty object).
-fn parse_body(body: &str) -> Result<JsonValue, Response> {
-    if body.trim().is_empty() {
-        return Ok(JsonValue::Obj(Default::default()));
+/// Map a typed API outcome onto an HTTP response.
+fn api_result(r: Result<String, ApiError>) -> Response {
+    match r {
+        Ok(body) => Response::json(body),
+        Err(e) => Response::error(e.http_status(), &e.message),
     }
-    json::parse(body).map_err(|e| Response::error(400, &format!("invalid JSON body: {e}")))
 }
 
-fn resolve_model(v: &JsonValue) -> Result<(String, OperatorGraph, u64), Response> {
-    let name = v
-        .get("model")
-        .and_then(|m| m.as_str())
-        .ok_or_else(|| Response::error(400, "body must include \"model\""))?;
-    let graph = crate::models::training(name, Optimizer::Adam)
-        .ok_or_else(|| Response::error(404, &format!("unknown model {name:?}; see GET /models")))?;
-    let batch = crate::models::info(name).map(|i| i.batch).unwrap_or(1);
-    Ok((name.to_string(), graph, batch))
-}
-
-fn parse_search_options(v: &JsonValue) -> Result<SearchOptions, Response> {
-    let metric = match v.get("metric").and_then(|m| m.as_str()) {
-        None => Metric::Throughput,
-        Some(m) => m
-            .parse::<Metric>()
-            .map_err(|e| Response::error(400, &e))?,
-    };
-    let d = SearchOptions::default();
-    Ok(SearchOptions {
-        metric,
-        top_k: v.get("k").and_then(|k| k.as_u64()).unwrap_or(d.top_k as u64).max(1) as usize,
-        hysteresis: v
-            .get("hysteresis")
-            .and_then(|h| h.as_u64())
-            .unwrap_or(d.hysteresis as u64) as u32,
-        use_ilp: v.get("ilp").and_then(|b| b.as_bool()).unwrap_or(d.use_ilp),
-        ..d
-    })
-}
-
-fn search_response(s: &ServiceState, backend: &mut dyn CostBackend, body: &str) -> Response {
-    let parsed = match parse_body(body) {
-        Ok(v) => v,
-        Err(r) => return r,
-    };
-    let (name, graph, batch) = match resolve_model(&parsed) {
-        Ok(t) => t,
-        Err(r) => return r,
-    };
-    let mut opts = match parse_search_options(&parsed) {
-        Ok(o) => o,
-        Err(r) => return r,
-    };
-    s.search_requests.fetch_add(1, Ordering::Relaxed);
-
-    let fp = fingerprint(&graph);
-    // Coalescing key: everything that shapes the *response*, so followers
-    // can share the leader's bytes verbatim.
-    let mut key = crate::service::cache::context_key(fp, batch, &opts, backend.name());
-    key = key
-        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
-        .wrapping_add(opts.top_k as u64)
-        .wrapping_add((opts.hysteresis as u64) << 32);
-
-    let (outcome, _leader) = s.coalescer.run(key, || {
-        if opts.metric == Metric::PerfPerTdp {
-            // TPUv2 throughput floor, mirroring `wham search`.
-            opts.min_throughput =
-                evaluate_design(&graph, batch, &crate::arch::presets::tpuv2(), backend).throughput;
-        }
-        let ctx = context_key(fp, batch, &opts, backend.name());
-        let t0 = Instant::now();
-        let mut cache = s.db.scoped(ctx);
-        let r = WhamSearch::new(&graph, batch, opts).run_cached(backend, &mut cache);
-        if r.scheduler_evals > 0 {
-            s.cold_searches.fetch_add(1, Ordering::Relaxed);
-        } else {
-            s.warm_searches.fetch_add(1, Ordering::Relaxed);
-        }
-        s.scheduler_evals_total.fetch_add(r.scheduler_evals as u64, Ordering::Relaxed);
-        let top: Vec<String> = r.top.points().iter().map(design_point_json).collect();
-        Ok(format!(
-            "{{\"model\":{},\"fingerprint\":\"{}\",\"backend\":{},\"metric\":{},\
-             \"best\":{},\"top\":[{}],\"dims_evaluated\":{},\"scheduler_evals\":{},\
-             \"cache_hits\":{},\"wall_ms\":{}}}",
-            esc(&name),
-            fp,
-            esc(backend.name()),
-            esc(&opts.metric.to_string()),
-            design_point_json(&r.best),
-            top.join(","),
-            r.dims_evaluated,
-            r.scheduler_evals,
-            r.cache_hits,
-            num(t0.elapsed().as_secs_f64() * 1e3),
-        ))
-    });
-    into_response(&outcome)
-}
-
-fn evaluate_response(backend: &mut dyn CostBackend, body: &str) -> Response {
-    let parsed = match parse_body(body) {
-        Ok(v) => v,
-        Err(r) => return r,
-    };
-    let (name, graph, batch) = match resolve_model(&parsed) {
-        Ok(t) => t,
-        Err(r) => return r,
-    };
-    let cfg = match parsed.get("config").and_then(|c| c.as_arr()) {
-        Some(a) if a.len() == 5 => a,
-        _ => {
-            return Response::error(
-                400,
-                "body must include \"config\":[num_tc,tc_x,tc_y,num_vc,vc_w]",
-            )
-        }
-    };
-    let n = |i: usize| cfg[i].as_u64().unwrap_or(0);
-    let config = crate::arch::ArchConfig {
-        num_tc: n(0),
-        tc_x: n(1),
-        tc_y: n(2),
-        num_vc: n(3),
-        vc_w: n(4),
-    };
-    if !config.in_template() {
-        return Response::error(400, &format!("{} is outside the template bounds", config.display()));
-    }
-    let e = evaluate_design(&graph, batch, &config, backend);
-    Response::json(format!(
-        "{{\"model\":{},\"fingerprint\":\"{}\",\"config\":{},\"eval\":{}}}",
-        esc(&name),
-        fingerprint(&graph),
-        esc(&config.display()),
-        eval_json(&e),
-    ))
-}
-
-fn global_response(s: &ServiceState, backend: &mut dyn CostBackend, body: &str) -> Response {
-    let parsed = match parse_body(body) {
-        Ok(v) => v,
-        Err(r) => return r,
-    };
-    let names: Vec<String> = match parsed.get("models").and_then(|m| m.as_arr()) {
-        Some(a) => {
-            let mut out = Vec::new();
-            for v in a {
-                match v.as_str() {
-                    Some(s) => out.push(s.to_string()),
-                    None => return Response::error(400, "\"models\" must be an array of names"),
-                }
-            }
-            out
-        }
-        None => vec!["opt-1.3b".to_string(), "gpt2-xl".to_string()],
-    };
-    if names.is_empty() {
-        return Response::error(400, "\"models\" must not be empty");
-    }
-    let depth = parsed.get("depth").and_then(|d| d.as_u64()).unwrap_or(32);
-    let tmp = parsed.get("tmp").and_then(|d| d.as_u64()).unwrap_or(1);
-    // partition_transformer asserts on zero values; reject them (and
-    // absurd sizes) at the API boundary instead of panicking a worker.
-    if !(1..=1024).contains(&depth) || !(1..=1024).contains(&tmp) {
-        return Response::error(400, "\"depth\" and \"tmp\" must be in 1..=1024");
-    }
-    let scheme: Scheme = match parsed.get("scheme").and_then(|x| x.as_str()).unwrap_or("gpipe").parse()
-    {
-        Ok(sc) => sc,
-        Err(e) => return Response::error(400, &e),
-    };
-    let metric = match parsed.get("metric").and_then(|m| m.as_str()) {
-        None => Metric::Throughput,
-        Some(m) => match m.parse::<Metric>() {
-            Ok(m) => m,
-            Err(e) => return Response::error(400, &e),
-        },
-    };
-    let top_k = parsed.get("k").and_then(|k| k.as_u64()).unwrap_or(10).max(1) as usize;
-
-    let mut parts = Vec::with_capacity(names.len());
-    for n in &names {
-        match crate::models::transformer_cfg(n) {
-            Some(cfg) if crate::models::info(n).is_some() => {
-                parts.push(partition_transformer(n, &cfg, depth, tmp, Optimizer::Adam))
-            }
-            _ => return Response::error(404, &format!("{n:?} is not an LLM workload")),
-        }
-    }
-
-    // Request-level coalescing key (0x67 tags the /global namespace).
-    let mut key = Fnv::new().word(0x67);
-    for n in &names {
-        key = key.bytes(n.as_bytes()).word(0);
-    }
-    let key = key
-        .word(depth)
-        .word(tmp)
-        .word(top_k as u64)
-        .word(matches!(scheme, Scheme::GPipe) as u64)
-        .word(matches!(metric, Metric::PerfPerTdp) as u64)
-        .0;
-
-    let (outcome, _leader) = s.coalescer.run(key, || {
-        let net = Network::default();
-        // TPUv2 pipeline baseline, computed once per model: it is both
-        // the Perf/TDP floor and the speedup denominator in the response.
-        let tpu: Vec<f64> = parts
-            .iter()
-            .map(|p| {
-                let cfgs = vec![crate::arch::presets::tpuv2(); p.stages.len()];
-                crate::distributed::pipeline::simulate(p, &cfgs, scheme, &net, backend).throughput
-            })
-            .collect();
-        let local = SearchOptions { metric, top_k, ..Default::default() };
-        let mut gopts =
-            GlobalOptions { metric, scheme, top_k, local, ..Default::default() };
-        if metric == Metric::PerfPerTdp {
-            gopts.min_throughput = tpu.iter().copied().fold(f64::INFINITY, f64::min);
-        }
-        let t0 = Instant::now();
-        let r = global_search_cached(&parts, &gopts, &net, backend, &s.db);
-        let family = |list: &[ModelPipelineResult]| -> String {
-            let rows: Vec<String> = list
-                .iter()
-                .enumerate()
-                .map(|(i, m)| {
-                    let uniq: std::collections::BTreeSet<String> =
-                        m.configs.iter().map(|c| c.display()).collect();
-                    format!(
-                        "{{\"model\":{},\"configs\":{:?},\"throughput\":{},\"perf_per_tdp\":{},\"vs_tpuv2\":{}}}",
-                        esc(&m.model),
-                        uniq.into_iter().collect::<Vec<_>>(),
-                        num(m.eval.throughput),
-                        num(m.eval.perf_per_tdp),
-                        num(m.eval.throughput / tpu[i].max(1e-12)),
-                    )
-                })
-                .collect();
-            format!("[{}]", rows.join(","))
-        };
-        Ok(format!(
-            "{{\"models\":{:?},\"depth\":{depth},\"tmp\":{tmp},\"scheme\":{},\"metric\":{},\
-             \"candidate_pool\":{},\"candidates_evaluated\":{},\"local_searches\":{},\
-             \"common_config\":{},\"common\":{},\"individual\":{},\"mosaic\":{},\"wall_ms\":{}}}",
-            names,
-            esc(&format!("{scheme:?}").to_lowercase()),
-            esc(&metric.to_string()),
-            r.candidate_pool,
-            r.candidates_evaluated,
-            r.local_searches,
-            esc(&r.common.0.display()),
-            family(&r.common.1),
-            family(&r.individual),
-            family(&r.mosaic),
-            num(t0.elapsed().as_secs_f64() * 1e3),
-        ))
-    });
-    into_response(&outcome)
-}
-
+/// Unwrap a coalesced (string-typed) leader outcome.
 fn into_response(outcome: &Result<String, String>) -> Response {
     match outcome {
         Ok(body) => Response::json(body.clone()),
         Err(e) => Response::error(500, e),
     }
+}
+
+fn search_response(s: &ServiceState, session: &mut Session, body: &str) -> Response {
+    let plan = match SearchRequest::from_json_str(body).and_then(|r| r.validate()) {
+        Ok(p) => p,
+        Err(e) => return api_result(Err(e)),
+    };
+    s.search_requests.fetch_add(1, Ordering::Relaxed);
+    let key = plan.coalescing_key(session.backend_name());
+    let (outcome, _led) = s.coalescer.run(key, || {
+        let reply = session.run_search(&plan, &mut NullSink).map_err(|e| e.message)?;
+        if reply.scheduler_evals > 0 {
+            s.cold_searches.fetch_add(1, Ordering::Relaxed);
+        } else {
+            s.warm_searches.fetch_add(1, Ordering::Relaxed);
+        }
+        s.scheduler_evals_total.fetch_add(reply.scheduler_evals, Ordering::Relaxed);
+        Ok(reply.to_json())
+    });
+    into_response(&outcome)
+}
+
+fn common_response(s: &ServiceState, session: &mut Session, body: &str) -> Response {
+    let plan = match CommonRequest::from_json_str(body).and_then(|r| r.validate()) {
+        Ok(p) => p,
+        Err(e) => return api_result(Err(e)),
+    };
+    let key = plan.coalescing_key(session.backend_name());
+    let (outcome, _led) = s.coalescer.run(key, || {
+        session.run_common(&plan).map(|r| r.to_json()).map_err(|e| e.message)
+    });
+    into_response(&outcome)
+}
+
+fn global_response(s: &ServiceState, session: &mut Session, body: &str) -> Response {
+    let plan = match GlobalRequest::from_json_str(body).and_then(|r| r.validate()) {
+        Ok(p) => p,
+        Err(e) => return api_result(Err(e)),
+    };
+    let key = plan.coalescing_key(session.backend_name());
+    let (outcome, _led) = s.coalescer.run(key, || {
+        session.run_global(&plan, &mut NullSink).map(|r| r.to_json()).map_err(|e| e.message)
+    });
+    into_response(&outcome)
 }

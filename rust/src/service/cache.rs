@@ -1,7 +1,8 @@
 //! The persistent, fingerprint-keyed design database.
 //!
 //! Every `<TC-Dim, VC-Width>` point the engine evaluates is memoized
-//! under a *context key* — the workload [`Fingerprint`] combined with
+//! under a *context key* — the workload
+//! [`Fingerprint`](crate::graph::Fingerprint) combined with
 //! batch size, metric, throughput floor, constraints, solver choice, and
 //! backend name (anything that changes the evaluation's value changes
 //! the key). The map is striped across [`SHARDS`] `RwLock`s so concurrent
@@ -16,37 +17,21 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
 
-use crate::arch::ArchConfig;
 use crate::cost::Dims;
-use crate::graph::{fingerprint, Fingerprint, OperatorGraph};
-use crate::metrics::Evaluation;
+use crate::graph::{fingerprint, OperatorGraph};
 use crate::search::engine::{CacheProvider, EvalCache, SearchOptions};
 use crate::search::DesignPoint;
 use crate::util::fnv::Fnv;
-use crate::util::json::{self, JsonValue};
+use crate::util::json;
+
+// The canonical key/codec definitions live in the API layer; re-exported
+// here so database callers keep one import site.
+pub use crate::api::plan::context_key;
+pub use crate::api::wire::{design_point_json, eval_json, parse_design_point};
 
 /// Lock stripes. 16 keeps contention negligible at the service's worker
 /// counts while staying cache-friendly.
 pub const SHARDS: usize = 16;
-
-/// Key identifying one evaluation context (see module docs). Two
-/// searches with the same context key may share every per-dims point.
-pub fn context_key(fp: Fingerprint, batch: u64, opts: &SearchOptions, backend: &str) -> u64 {
-    Fnv::new()
-        .word(fp.0)
-        .word(batch)
-        .word(match opts.metric {
-            crate::metrics::Metric::Throughput => 0,
-            crate::metrics::Metric::PerfPerTdp => 1,
-        })
-        .word(opts.min_throughput.to_bits())
-        .word(opts.constraints.max_area_mm2.to_bits())
-        .word(opts.constraints.max_power_w.to_bits())
-        .word(opts.use_ilp as u64)
-        .word(opts.ilp_node_budget)
-        .bytes(backend.as_bytes())
-        .0
-}
 
 fn shard_of(ctx: u64, d: &Dims) -> usize {
     let h = Fnv::new().word(ctx).word(d.tc_x).word(d.tc_y).word(d.vc_w).0;
@@ -202,36 +187,8 @@ impl CacheProvider for DesignDb {
 }
 
 // ---- JSONL (de)serialization -------------------------------------------
-
-/// Serialize an [`Evaluation`] as a JSON object.
-pub fn eval_json(e: &Evaluation) -> String {
-    format!(
-        "{{\"cycles\":{},\"seconds\":{},\"throughput\":{},\"energy_j\":{},\"tdp_w\":{},\"area_mm2\":{},\"perf_per_tdp\":{}}}",
-        e.cycles,
-        json::num(e.seconds),
-        json::num(e.throughput),
-        json::num(e.energy_j),
-        json::num(e.tdp_w),
-        json::num(e.area_mm2),
-        json::num(e.perf_per_tdp),
-    )
-}
-
-/// Serialize a [`DesignPoint`] as a JSON object.
-pub fn design_point_json(p: &DesignPoint) -> String {
-    let c = &p.config;
-    format!(
-        "{{\"config\":[{},{},{},{},{}],\"display\":{},\"score\":{},\"eval\":{}}}",
-        c.num_tc,
-        c.tc_x,
-        c.tc_y,
-        c.num_vc,
-        c.vc_w,
-        json::esc(&c.display()),
-        json::num(p.score),
-        eval_json(&p.eval),
-    )
-}
+// The per-type codecs ([`design_point_json`] / [`parse_design_point`])
+// are the API wire layer's; only the JSONL envelope is database-specific.
 
 fn entry_json(ctx: u64, d: &Dims, p: &DesignPoint) -> String {
     format!(
@@ -241,35 +198,6 @@ fn entry_json(ctx: u64, d: &Dims, p: &DesignPoint) -> String {
         d.vc_w,
         design_point_json(p),
     )
-}
-
-fn parse_eval(v: &JsonValue) -> Option<Evaluation> {
-    Some(Evaluation {
-        cycles: v.get("cycles")?.as_u64()?,
-        seconds: v.get("seconds")?.as_f64()?,
-        throughput: v.get("throughput")?.as_f64()?,
-        energy_j: v.get("energy_j")?.as_f64()?,
-        tdp_w: v.get("tdp_w")?.as_f64()?,
-        area_mm2: v.get("area_mm2")?.as_f64()?,
-        perf_per_tdp: v.get("perf_per_tdp")?.as_f64()?,
-    })
-}
-
-/// Parse the `point` object written by [`design_point_json`].
-pub fn parse_design_point(v: &JsonValue) -> Option<DesignPoint> {
-    let cfg = v.get("config")?.as_arr()?;
-    if cfg.len() != 5 {
-        return None;
-    }
-    let n = |i: usize| cfg[i].as_u64();
-    let config = ArchConfig {
-        num_tc: n(0)?,
-        tc_x: n(1)?,
-        tc_y: n(2)?,
-        num_vc: n(3)?,
-        vc_w: n(4)?,
-    };
-    Some(DesignPoint { config, eval: parse_eval(v.get("eval")?)?, score: v.get("score")?.as_f64()? })
 }
 
 fn parse_entry(line: &str) -> Option<(u64, Dims, DesignPoint)> {

@@ -57,10 +57,10 @@ pub fn start(listener: TcpListener, opts: ServeOptions) -> anyhow::Result<Server
     // Fail fast on an unusable backend choice (e.g. explicit PJRT with no
     // artifacts) instead of erroring per-request in every worker.
     drop(make_backend(opts.backend)?);
-    let db = match &opts.db_path {
+    let db = Arc::new(match &opts.db_path {
         Some(p) => DesignDb::open(p)?,
         None => DesignDb::in_memory(),
-    };
+    });
     let workers = opts.workers.max(1);
     let addr = listener.local_addr()?;
     let state = Arc::new(ServiceState::new(db, opts.backend, workers));
@@ -83,7 +83,9 @@ pub fn serve_forever(addr: &str, opts: ServeOptions) -> anyhow::Result<()> {
         handle.addr,
         handle.state.db.stats().loaded,
     );
-    println!("endpoints: GET /models  POST /search  POST /evaluate  POST /global  GET /status");
+    println!(
+        "endpoints: GET /models  POST /search  POST /evaluate  POST /common  POST /global  GET /status"
+    );
     loop {
         std::thread::park();
     }

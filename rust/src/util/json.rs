@@ -102,6 +102,105 @@ pub fn num(v: f64) -> String {
     }
 }
 
+/// Incremental JSON-object emitter. The wire layer (`crate::api::wire`)
+/// builds every request/reply body through this instead of hand-rolled
+/// `format!` assembly, so key escaping and number formatting share one
+/// code path with [`esc`]/[`num`] — the same helpers the parser's tests
+/// round-trip through.
+#[derive(Debug, Clone)]
+pub struct Obj {
+    buf: String,
+}
+
+impl Default for Obj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Obj {
+    /// Start an empty object.
+    pub fn new() -> Self {
+        Obj { buf: String::from("{") }
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+        self.buf.push_str(&esc(k));
+        self.buf.push(':');
+    }
+
+    /// Field whose value is already-serialized JSON.
+    pub fn raw(mut self, k: &str, raw: &str) -> Self {
+        self.key(k);
+        self.buf.push_str(raw);
+        self
+    }
+
+    /// String field (escaped).
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.key(k);
+        self.buf.push_str(&esc(v));
+        self
+    }
+
+    /// Unsigned-integer field.
+    pub fn u64(mut self, k: &str, v: u64) -> Self {
+        self.key(k);
+        let _ = write!(self.buf, "{v}");
+        self
+    }
+
+    /// Float field (non-finite becomes `null`, see [`num`]).
+    pub fn f64(mut self, k: &str, v: f64) -> Self {
+        self.key(k);
+        self.buf.push_str(&num(v));
+        self
+    }
+
+    /// Boolean field.
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Optional unsigned-integer field — omitted entirely when `None`.
+    pub fn opt_u64(self, k: &str, v: Option<u64>) -> Self {
+        match v {
+            Some(x) => self.u64(k, x),
+            None => self,
+        }
+    }
+
+    /// String-or-null field.
+    pub fn nullable_str(self, k: &str, v: Option<&str>) -> Self {
+        match v {
+            Some(s) => self.str(k, s),
+            None => self.raw(k, "null"),
+        }
+    }
+
+    /// Close the object and return its serialized bytes.
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// Serialize pre-serialized items as a JSON array.
+pub fn arr<I: IntoIterator<Item = String>>(items: I) -> String {
+    let items: Vec<String> = items.into_iter().collect();
+    format!("[{}]", items.join(","))
+}
+
+/// Serialize strings as a JSON array of (escaped) strings.
+pub fn str_arr<'a, I: IntoIterator<Item = &'a str>>(items: I) -> String {
+    arr(items.into_iter().map(esc))
+}
+
 /// Parse a JSON document. Errors carry a byte offset and a message.
 pub fn parse(text: &str) -> Result<JsonValue, String> {
     let bytes = text.as_bytes();
@@ -307,6 +406,29 @@ mod tests {
             assert_eq!(v.as_f64(), Some(x));
         }
         assert_eq!(num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn obj_emitter_round_trips_through_parser() {
+        let s = Obj::new()
+            .str("name", "bërt \"x\"\n")
+            .u64("k", 10)
+            .f64("score", 1.5)
+            .bool("ilp", true)
+            .opt_u64("absent", None)
+            .nullable_str("path", None)
+            .raw("top", &arr(["1".to_string(), "2".to_string()]))
+            .finish();
+        let v = parse(&s).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("bërt \"x\"\n"));
+        assert_eq!(v.get("k").unwrap().as_u64(), Some(10));
+        assert_eq!(v.get("score").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("ilp").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("absent"), None);
+        assert_eq!(v.get("path"), Some(&JsonValue::Null));
+        assert_eq!(v.get("top").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(parse(&Obj::new().finish()).unwrap(), JsonValue::Obj(Default::default()));
+        assert_eq!(str_arr(["a", "b"]), "[\"a\",\"b\"]");
     }
 
     #[test]

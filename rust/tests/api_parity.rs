@@ -1,0 +1,286 @@
+//! CLI / HTTP parity and wire-regression tests for `wham::api`.
+//!
+//! The typed layer's whole point is that a request built from CLI flags
+//! and the same request parsed from a JSON body are *the same value* —
+//! identical canonical keys, equal replies — and that every reply the
+//! service emits parses back through the same codec. These tests pin
+//! that, plus the wire bugs the layer fixed (Debug-escaped non-ASCII in
+//! `/global`, `unwrap_or(0)` configs in `/evaluate`, the silent batch-1
+//! fallback on registry misses).
+
+use std::net::TcpListener;
+
+use wham::api::{
+    CommonReply, CommonRequest, EvaluateReply, EvaluateRequest, FromJson, GlobalRequest,
+    ModelsReply, SearchReply, SearchRequest, Session, StatusReply, ToJson,
+};
+use wham::coordinator::BackendChoice;
+use wham::cost::native::NativeCost;
+use wham::metrics::Metric;
+use wham::service::http::request;
+use wham::service::{start, ServeOptions, ServerHandle};
+use wham::util::cli::Args;
+use wham::util::json::{parse, JsonValue};
+
+const KEYS: &[&str] = &[
+    "model", "models", "metric", "k", "depth", "tmp", "scheme", "hysteresis", "dims", "tc",
+    "vc", "deadline-ms", "backend",
+];
+
+fn args(raw: &[&str]) -> Args {
+    Args::parse(raw.iter().map(|s| s.to_string()), KEYS).unwrap()
+}
+
+fn boot(workers: usize) -> ServerHandle {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    start(listener, ServeOptions { workers, db_path: None, backend: BackendChoice::Native })
+        .unwrap()
+}
+
+/// Strip volatile fields before comparing two reply documents.
+fn strip_wall(v: &JsonValue) -> JsonValue {
+    match v {
+        JsonValue::Obj(m) => {
+            let mut m = m.clone();
+            m.remove("wall_ms");
+            JsonValue::Obj(m)
+        }
+        other => other.clone(),
+    }
+}
+
+#[test]
+fn args_and_json_requests_produce_identical_canonical_keys() {
+    // Property: however a SearchRequest reaches us — CLI flags or its own
+    // wire bytes — the validated plan derives byte-identical keys.
+    wham::util::prop::forall(
+        0xA11CE,
+        24,
+        |g| {
+            let metric = *g.rng.choose(&["throughput", "perf/tdp"]);
+            let k = g.rng.range(1, 20) as usize;
+            let hysteresis = g.rng.range(0, 3) as u32;
+            let ilp = g.rng.chance(0.5);
+            let deadline = g.rng.chance(0.3).then(|| g.rng.range(1, 10_000) as u64);
+            (metric, k, hysteresis, ilp, deadline)
+        },
+        |&(metric, k, hysteresis, ilp, deadline)| {
+            let mut raw: Vec<String> = vec![
+                "--model".into(),
+                "bert-base".into(),
+                "--metric".into(),
+                metric.into(),
+                "--k".into(),
+                k.to_string(),
+                "--hysteresis".into(),
+                hysteresis.to_string(),
+            ];
+            if ilp {
+                raw.push("--ilp".into());
+            }
+            if let Some(d) = deadline {
+                raw.push("--deadline-ms".into());
+                raw.push(d.to_string());
+            }
+            let a = Args::parse(raw, KEYS).map_err(|e| e.to_string())?;
+            let from_cli = SearchRequest::from_args(&a).map_err(|e| e.to_string())?;
+            let from_wire =
+                SearchRequest::from_json_str(&from_cli.to_json()).map_err(|e| e.to_string())?;
+            if from_cli != from_wire {
+                return Err(format!("requests diverged: {from_cli:?} vs {from_wire:?}"));
+            }
+            let (pa, pb) = (
+                from_cli.validate().map_err(|e| e.to_string())?,
+                from_wire.validate().map_err(|e| e.to_string())?,
+            );
+            for backend in ["native", "pjrt"] {
+                if pa.coalescing_key(backend) != pb.coalescing_key(backend) {
+                    return Err(format!("coalescing keys diverged on {backend}"));
+                }
+                if wham::api::context_key(pa.fingerprint, pa.batch, &pa.opts, backend)
+                    != wham::api::context_key(pb.fingerprint, pb.batch, &pb.opts, backend)
+                {
+                    return Err(format!("context keys diverged on {backend}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn args_and_json_requests_produce_equal_replies() {
+    // Full-path parity for one representative request: run the search
+    // from the CLI-built request and from its wire round-trip; apart from
+    // wall-clock the replies must be identical documents.
+    let cli_req =
+        SearchRequest::from_args(&args(&["--model", "bert-base", "--k", "3"])).unwrap();
+    let wire_req = SearchRequest::from_json_str(&cli_req.to_json()).unwrap();
+    assert_eq!(cli_req, wire_req);
+
+    let mut s1 = Session::with_backend(Box::new(NativeCost));
+    let mut s2 = Session::with_backend(Box::new(NativeCost));
+    let r1 = s1.search(&cli_req).unwrap();
+    let r2 = s2.search(&wire_req).unwrap();
+    assert_eq!(
+        strip_wall(&parse(&r1.to_json()).unwrap()),
+        strip_wall(&parse(&r2.to_json()).unwrap()),
+        "equivalent requests must produce equal replies"
+    );
+}
+
+#[test]
+fn every_reply_type_round_trips_through_the_service() {
+    let h = boot(2);
+
+    let (status, body) = request(h.addr, "GET", "/models", None).unwrap();
+    assert_eq!(status, 200);
+    let models = ModelsReply::from_json_str(&body).unwrap();
+    assert_eq!(models.models.len(), 11);
+
+    // /search with a deadline: exercises the ProgressSink cancellation
+    // path end-to-end and keeps the test fast.
+    let req = SearchRequest::new("bert-base").deadline_ms(0);
+    let (status, body) =
+        request(h.addr, "POST", "/search", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let reply = SearchReply::from_json_str(&body).unwrap();
+    assert!(reply.cancelled, "zero deadline must cancel");
+    assert!(reply.dims_evaluated >= 1);
+    assert_eq!(reply.model, "bert-base");
+
+    let ev = EvaluateRequest::from_args(&args(&[
+        "--model", "bert-base", "--dims", "128x128x128",
+    ]))
+    .unwrap();
+    let (status, body) = request(h.addr, "POST", "/evaluate", Some(&ev.to_json())).unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let reply = EvaluateReply::from_json_str(&body).unwrap();
+    assert_eq!(reply.config, ev.config);
+    // Wire-compat: `config` stays the display string.
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("config").unwrap().as_str(), Some("<2, 128x128, 2, 128>"));
+
+    let common = CommonRequest::new().models(["bert-base"]).top_k(2);
+    let (status, body) = request(h.addr, "POST", "/common", Some(&common.to_json())).unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let reply = CommonReply::from_json_str(&body).unwrap();
+    assert_eq!(reply.per_workload.len(), 1);
+    assert!(reply.config.in_template());
+
+    let (status, body) = request(h.addr, "GET", "/status", None).unwrap();
+    assert_eq!(status, 200);
+    let st = StatusReply::from_json_str(&body).unwrap();
+    assert!(st.requests >= 4);
+    assert_eq!(st.search.requests, 1, "only /search increments the search counter");
+}
+
+#[test]
+fn non_ascii_model_names_stay_valid_json() {
+    // Regression: the old /global emitted `format!("{:?}", names)`, which
+    // Debug-escapes non-ASCII/control characters into Rust-style
+    // `\u{..}` — invalid JSON. The typed layer escapes through `esc()`
+    // everywhere, including error bodies.
+    let h = boot(2);
+    let weird = "gpt-модель-模型\u{7}";
+
+    let body = GlobalRequest::new().models([weird]).to_json();
+    let (status, resp) = request(h.addr, "POST", "/global", Some(&body)).unwrap();
+    assert_eq!(status, 404, "unknown workload must 404: {resp}");
+    let v = parse(&resp).unwrap_or_else(|e| panic!("response is not valid JSON ({e}): {resp}"));
+    assert!(
+        v.get("error").unwrap().as_str().unwrap().contains("模型"),
+        "error must carry the name verbatim: {resp}"
+    );
+
+    let body = SearchRequest::new(weird).to_json();
+    let (status, resp) = request(h.addr, "POST", "/search", Some(&body)).unwrap();
+    assert_eq!(status, 404);
+    let v = parse(&resp).unwrap_or_else(|e| panic!("response is not valid JSON ({e}): {resp}"));
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("модель"));
+}
+
+#[test]
+fn evaluate_rejects_malformed_configs_and_misses_404() {
+    let h = boot(2);
+
+    // Non-numeric entry: used to be `unwrap_or(0)`-ed into a zero-core
+    // design; must now be a 400.
+    let (status, resp) = request(
+        h.addr,
+        "POST",
+        "/evaluate",
+        Some("{\"model\":\"bert-base\",\"config\":[2,\"x\",128,2,128]}"),
+    )
+    .unwrap();
+    assert_eq!(status, 400, "body: {resp}");
+
+    // Float entries are not silently truncated either.
+    let (status, _) = request(
+        h.addr,
+        "POST",
+        "/evaluate",
+        Some("{\"model\":\"bert-base\",\"config\":[2,128.5,128,2,128]}"),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+
+    // Registry miss: 404, never a silent batch-1 search.
+    let (status, _) = request(
+        h.addr,
+        "POST",
+        "/evaluate",
+        Some("{\"model\":\"no-such\",\"config\":[2,128,128,2,128]}"),
+    )
+    .unwrap();
+    assert_eq!(status, 404);
+
+    // Out-of-template configs are still rejected.
+    let (status, _) = request(
+        h.addr,
+        "POST",
+        "/evaluate",
+        Some("{\"model\":\"bert-base\",\"config\":[2,7000,128,2,128]}"),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+
+    // Mistyped option on /search: strict accessors reject it.
+    let (status, _) = request(
+        h.addr,
+        "POST",
+        "/search",
+        Some("{\"model\":\"bert-base\",\"k\":\"ten\"}"),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+}
+
+#[test]
+fn client_wire_bytes_parse_back_to_the_same_request() {
+    // What `wham client` puts on the wire is exactly what the server's
+    // codec produces for the same flags — golden round-trips per type.
+    let s = SearchRequest::from_args(&args(&[
+        "--model", "gnmt4", "--metric", "perf/tdp", "--k", "7", "--deadline-ms", "1500",
+    ]))
+    .unwrap();
+    assert_eq!(SearchRequest::from_json_str(&s.to_json()).unwrap(), s);
+
+    let e = EvaluateRequest::from_args(&args(&[
+        "--model", "vgg16", "--dims", "64x32x16", "--tc", "8", "--vc", "1",
+    ]))
+    .unwrap();
+    assert_eq!(EvaluateRequest::from_json_str(&e.to_json()).unwrap(), e);
+
+    let c = CommonRequest::from_args(&args(&["--models", "bert-base,vgg16", "--k", "2"]))
+        .unwrap();
+    assert_eq!(CommonRequest::from_json_str(&c.to_json()).unwrap(), c);
+
+    let g = GlobalRequest::from_args(&args(&[
+        "--models", "opt-1.3b", "--depth", "16", "--tmp", "2", "--scheme", "1f1b",
+    ]))
+    .unwrap();
+    assert_eq!(GlobalRequest::from_json_str(&g.to_json()).unwrap(), g);
+    assert_eq!(g.scheme, wham::distributed::Scheme::PipeDream1F1B);
+    assert_eq!(g.metric, Metric::Throughput);
+}
