@@ -1,0 +1,55 @@
+//! Mine an accelerator for a workload that exists only as data — no
+//! Rust edit, no recompile.
+//!
+//! `examples/workloads/llama-decoder.json` describes a llama-style
+//! decoder (RMSNorm-ish pre-norms, rotary eltwise on Q/K, SwiGLU MLP,
+//! untied LM head) that is *not* in the paper's Table-4 zoo. This
+//! example loads it through the workload-dir layer of the registry and
+//! searches it exactly like a builtin:
+//!
+//! ```bash
+//! cargo run --release --example custom_workload
+//! # equivalently, from the CLI:
+//! #   wham search --model llama-decoder --workload-dir examples/workloads
+//! ```
+
+use wham::api::{SearchRequest, Session};
+use wham::coordinator::BackendChoice;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Register every spec in the directory (the CLI's --workload-dir
+    //    / WHAM_WORKLOAD_DIR do exactly this).
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/workloads");
+    let names = wham::workload::add_dir(dir)?;
+    println!("registered from {dir}: {names:?}");
+
+    // 2. The spec lowers through the same shape-inference pass the
+    //    builtins use; lint-level stats come back with the registration.
+    let report = wham::workload::lint(&std::fs::read_to_string(
+        format!("{dir}/llama-decoder.json"),
+    )?)?;
+    println!(
+        "llama-decoder: {} forward ops -> {} training ops, fingerprint {}",
+        report.forward_ops, report.training_ops, report.fingerprint
+    );
+
+    // 3. Search it by name, like any Table-4 workload.
+    let mut session = Session::new(BackendChoice::Auto)?;
+    let reply = session.search(&SearchRequest::new("llama-decoder"))?;
+    println!(
+        "best design {} — {:.1} samples/s ({:.3}x TPUv2, {} dims explored)",
+        reply.best.config.display(),
+        reply.best.eval.throughput,
+        reply.vs_tpuv2,
+        reply.dims_evaluated,
+    );
+
+    // 4. Its `transformer` section also opts it into the distributed
+    //    paths (`wham global` / `wham partition`).
+    let cfg = wham::workload::transformer_cfg("llama-decoder").expect("transformer section");
+    println!(
+        "pipeline-eligible: {} layers, hidden {}, seq {} (partition like a builtin LLM)",
+        cfg.layers, cfg.hidden, cfg.seq
+    );
+    Ok(())
+}

@@ -47,7 +47,7 @@ pub use plan::{context_key, resolve_workload};
 pub use progress::{DeadlineSink, NullSink, Progress, ProgressSink};
 pub use reply::{
     CommonReply, EvaluateReply, GlobalReply, GlobalRow, ModelEntry, ModelsReply, SearchReply,
-    StatusReply,
+    StatusReply, WorkloadReply,
 };
 pub use request::{CommonRequest, EvaluateRequest, GlobalRequest, SearchRequest};
 pub use session::{tpuv2_floor, Session};

@@ -28,19 +28,32 @@ const NS_COMMON: u64 = 0x63; // 'c'
 const NS_GLOBAL: u64 = 0x67; // 'g'
 
 /// Resolve a registry workload to its training graph and batch size —
-/// the lookup every per-workload frontend starts with. A registry miss is
-/// a [`404`](crate::api::ErrorKind::NotFound), never a silent default.
+/// the lookup every per-workload frontend starts with. Builtin Table-4
+/// constructors win first (map-backed, no JSON); everything else comes
+/// from the layered spec registry ([`crate::workload`]), so specs
+/// dropped in `--workload-dir` or uploaded to `POST /workloads` resolve
+/// exactly like builtins — including fingerprint-keyed design-database
+/// caching. A miss in both is a
+/// [`404`](crate::api::ErrorKind::NotFound), never a silent default.
 pub fn resolve_workload(name: &str) -> Result<(OperatorGraph, u64), ApiError> {
-    let graph = crate::models::training(name, crate::graph::autodiff::Optimizer::Adam)
-        .ok_or_else(|| {
-            ApiError::not_found(format!(
-                "unknown model {name:?} (see `wham models` / GET /models)"
-            ))
-        })?;
-    let batch = crate::models::info(name)
-        .ok_or_else(|| ApiError::not_found(format!("model {name:?} missing from the registry")))?
-        .batch;
-    Ok((graph, batch))
+    if let Some(info) = crate::models::info(name) {
+        let graph = crate::models::training(name, crate::graph::autodiff::Optimizer::Adam)
+            .ok_or_else(|| {
+                ApiError::internal(format!("builtin model {name:?} failed to build"))
+            })?;
+        return Ok((graph, info.batch));
+    }
+    match crate::workload::resolve(name) {
+        Some(Ok(pair)) => Ok(pair),
+        // Specs are validated at registration, so a lowering failure here
+        // is an internal inconsistency, not a caller error.
+        Some(Err(e)) => {
+            Err(ApiError::internal(format!("registered workload {name:?} failed to lower: {e}")))
+        }
+        None => Err(ApiError::not_found(format!(
+            "unknown model {name:?} (see `wham workloads list` / GET /models)"
+        ))),
+    }
 }
 
 /// Key identifying one evaluation context (see module docs). Two
@@ -218,5 +231,24 @@ mod tests {
         let (g, batch) = resolve_workload("bert-base").unwrap();
         assert!(g.len() > 20);
         assert_eq!(batch, 4);
+    }
+
+    #[test]
+    fn registered_specs_resolve_like_builtins() {
+        crate::workload::add_spec_text(
+            r#"{"name":"plan-test-net","batch":3,"graph":[
+                {"op":"linear","m":8,"n":8,"k":8},
+                {"op":"activation","elems":64}
+            ]}"#,
+            crate::workload::Source::User,
+        )
+        .unwrap();
+        let (g, batch) = resolve_workload("plan-test-net").unwrap();
+        assert_eq!(batch, 3);
+        assert!(g.len() >= 2);
+        // Spec workloads flow through the same plan machinery.
+        let p = SearchRequest::new("plan-test-net").validate().unwrap();
+        assert_eq!(p.batch, 3);
+        assert_eq!(p.fingerprint, crate::graph::fingerprint(&p.graph));
     }
 }

@@ -41,7 +41,7 @@ fn parse_points(v: &JsonValue, key: &str) -> Result<Vec<DesignPoint>, ApiError> 
 
 // ---- GET /models --------------------------------------------------------
 
-/// One workload-zoo row (paper Table 4).
+/// One workload-registry row: a Table-4 builtin or a registered spec.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelEntry {
     pub name: String,
@@ -49,6 +49,8 @@ pub struct ModelEntry {
     pub batch: u64,
     pub accelerators: u64,
     pub distributed_only: bool,
+    /// Registry layer: `"builtin"` | `"user"` | `"uploaded"`.
+    pub source: String,
 }
 
 /// Reply of `GET /models` / [`crate::api::Session::models`].
@@ -66,6 +68,7 @@ impl ToJson for ModelsReply {
                 .u64("batch", m.batch)
                 .u64("accelerators", m.accelerators)
                 .bool("distributed_only", m.distributed_only)
+                .str("source", &m.source)
                 .finish()
         });
         Obj::new().raw("models", &arr(rows)).finish()
@@ -83,10 +86,55 @@ impl FromJson for ModelsReply {
                     batch: req_u64(m, "batch")?,
                     accelerators: req_u64(m, "accelerators")?,
                     distributed_only: req_bool(m, "distributed_only")?,
+                    // Lenient for pre-registry replies.
+                    source: opt_str(m, "source")?.unwrap_or_else(|| "builtin".to_string()),
                 })
             })
             .collect::<Result<_, ApiError>>()?;
         Ok(Self { models })
+    }
+}
+
+// ---- POST /workloads ----------------------------------------------------
+
+/// Reply of `POST /workloads`: the registered spec's identity plus the
+/// lowering stats callers need to sanity-check what they uploaded.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadReply {
+    pub name: String,
+    /// Fingerprint of the lowered training graph — the same key `/search`
+    /// replies carry and the design database is scoped by.
+    pub fingerprint: Fingerprint,
+    pub batch: u64,
+    pub forward_ops: u64,
+    pub training_ops: u64,
+    /// Registry layer the spec landed in (`"uploaded"` for this endpoint).
+    pub source: String,
+}
+
+impl ToJson for WorkloadReply {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .str("name", &self.name)
+            .str("fingerprint", &self.fingerprint.to_string())
+            .u64("batch", self.batch)
+            .u64("forward_ops", self.forward_ops)
+            .u64("training_ops", self.training_ops)
+            .str("source", &self.source)
+            .finish()
+    }
+}
+
+impl FromJson for WorkloadReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        Ok(Self {
+            name: req_str(v, "name")?,
+            fingerprint: parse_fingerprint(v)?,
+            batch: req_u64(v, "batch")?,
+            forward_ops: req_u64(v, "forward_ops")?,
+            training_ops: req_u64(v, "training_ops")?,
+            source: req_str(v, "source")?,
+        })
     }
 }
 
@@ -585,8 +633,30 @@ mod tests {
                 batch: 4,
                 accelerators: 1,
                 distributed_only: false,
+                source: "builtin".into(),
             }],
         };
         assert_eq!(ModelsReply::from_json(&parse(&r.to_json()).unwrap()).unwrap(), r);
+        // Pre-registry replies without a source still parse.
+        let legacy = r#"{"models":[{"name":"x","task":"t","batch":1,
+            "accelerators":1,"distributed_only":false}]}"#;
+        let q = ModelsReply::from_json(&parse(legacy).unwrap()).unwrap();
+        assert_eq!(q.models[0].source, "builtin");
+    }
+
+    #[test]
+    fn workload_reply_round_trips() {
+        let r = WorkloadReply {
+            name: "llama-decoder".into(),
+            fingerprint: Fingerprint(0x0123_4567_89ab_cdef),
+            batch: 8,
+            forward_ops: 131,
+            training_ops: 402,
+            source: "uploaded".into(),
+        };
+        let bytes = r.to_json();
+        let q = WorkloadReply::from_json(&parse(&bytes).unwrap()).unwrap();
+        assert_eq!(q, r);
+        assert_eq!(q.to_json(), bytes);
     }
 }

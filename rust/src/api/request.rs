@@ -513,18 +513,21 @@ impl GlobalRequest {
         };
         let mut parts = Vec::with_capacity(names.len());
         for n in &names {
-            match crate::models::transformer_cfg(n) {
-                Some(cfg) if crate::models::info(n).is_some() => {
-                    parts.push(crate::distributed::partition::partition_transformer(
-                        n,
-                        &cfg,
-                        self.depth,
-                        self.tmp,
-                        crate::graph::autodiff::Optimizer::Adam,
-                    ))
-                }
-                _ => {
-                    return Err(ApiError::not_found(format!("{n:?} is not an LLM workload")))
+            // Builtin LLMs or any registered spec carrying a
+            // `transformer` section — custom workloads partition too.
+            match crate::workload::transformer_cfg(n) {
+                Some(cfg) => parts.push(crate::distributed::partition::partition_transformer(
+                    n,
+                    &cfg,
+                    self.depth,
+                    self.tmp,
+                    crate::graph::autodiff::Optimizer::Adam,
+                )),
+                None => {
+                    return Err(ApiError::not_found(format!(
+                        "{n:?} is not an LLM workload (builtin LLM or spec with a \
+                         \"transformer\" section required)"
+                    )))
                 }
             }
         }

@@ -95,17 +95,20 @@ impl Session {
         self.backend.as_mut()
     }
 
-    /// The workload zoo (Table 4).
+    /// Every workload the registry can resolve: the Table-4 zoo plus
+    /// registered specs (user dir / uploads), each tagged with its
+    /// registry layer.
     pub fn models(&self) -> ModelsReply {
         ModelsReply {
-            models: crate::models::MODELS
-                .iter()
-                .map(|m| ModelEntry {
-                    name: m.name.to_string(),
-                    task: m.task.to_string(),
-                    batch: m.batch,
-                    accelerators: m.accelerators,
-                    distributed_only: m.distributed_only,
+            models: crate::workload::all_entries()
+                .into_iter()
+                .map(|e| ModelEntry {
+                    name: e.name,
+                    task: e.task,
+                    batch: e.batch,
+                    accelerators: e.accelerators,
+                    distributed_only: e.distributed_only,
+                    source: e.source.label().to_string(),
                 })
                 .collect(),
         }
@@ -331,7 +334,32 @@ mod tests {
 
     #[test]
     fn models_reply_lists_the_zoo() {
-        assert_eq!(session().models().models.len(), crate::models::MODELS.len());
+        // Other tests in this binary may register specs in the global
+        // registry; the builtin layer is always exactly the Table-4 zoo.
+        let reply = session().models();
+        let builtin = reply.models.iter().filter(|m| m.source == "builtin").count();
+        assert_eq!(builtin, crate::models::MODELS.len());
+        assert!(reply.models.len() >= builtin);
+    }
+
+    #[test]
+    fn registered_spec_is_searchable_through_a_session() {
+        crate::workload::add_spec_text(
+            r#"{"name":"session-test-mlp","batch":2,"graph":[
+                {"op":"embed","elems":64,"params":32},
+                {"op":"linear","m":8,"n":8,"k":8},
+                {"op":"activation","elems":64}
+            ]}"#,
+            crate::workload::Source::Uploaded,
+        )
+        .unwrap();
+        let mut s = session();
+        let reply = s.search(&SearchRequest::new("session-test-mlp")).unwrap();
+        assert_eq!(reply.model, "session-test-mlp");
+        assert!(reply.best.config.in_template());
+        assert!(reply.dims_evaluated > 0);
+        assert!(s.models().models.iter().any(|m| m.name == "session-test-mlp"
+            && m.source == "uploaded"));
     }
 
     #[test]

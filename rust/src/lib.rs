@@ -20,6 +20,9 @@
 //!   validation, wire codec, [`api::Session`], progress/cancellation
 //! * [`graph`] — training operator-graph IR + mirrored autodiff + fusion
 //! * [`models`] — the 11-workload zoo of Table 4
+//! * [`workload`] — declarative JSON workload specs, shape-inference
+//!   lowering onto the same IR, and the layered registry (builtin specs,
+//!   `--workload-dir`, service uploads) behind `resolve_workload`
 //! * [`arch`] — architectural template, area/power, TPUv2/NVDLA presets
 //! * [`cost`] — architecture estimator (native + PJRT backends)
 //! * [`sched`] — ASAP/ALAP, criticality, greedy list scheduler
@@ -49,6 +52,7 @@ pub mod sched;
 pub mod search;
 pub mod service;
 pub mod util;
+pub mod workload;
 
 pub use api::{
     ApiError, CommonRequest, EvaluateRequest, FromJson, GlobalRequest, SearchRequest, Session,

@@ -35,13 +35,32 @@ use wham::util::table::Table;
 const VALUE_KEYS: &[&str] = &[
     "model", "models", "metric", "backend", "k", "depth", "tmp", "scheme", "framework",
     "iterations", "workers", "hysteresis", "seed", "out", "tc", "vc", "dims", "port", "db",
-    "addr", "deadline-ms",
+    "addr", "deadline-ms", "workload-dir",
 ];
 
 fn main() -> Result<()> {
     let args = Args::from_env(VALUE_KEYS).map_err(|e| anyhow!("{e}"))?;
+    // Populate the workload registry's user layer before dispatch, so
+    // every subcommand (search/evaluate/common/global/serve/...) resolves
+    // spec workloads by name. The env var applies always; the flag is
+    // per-invocation.
+    // Ambient config must not brick the CLI: a broken spec in the env
+    // dir would otherwise abort even `wham workloads lint`, the tool for
+    // diagnosing it. Warn and continue; the explicit flag stays fatal.
+    match wham::workload::load_env_dir() {
+        Ok(names) if !names.is_empty() => {
+            eprintln!("loaded {} workload spec(s) from WHAM_WORKLOAD_DIR", names.len());
+        }
+        Ok(_) => {}
+        Err(e) => eprintln!("warning: WHAM_WORKLOAD_DIR not loaded: {e}"),
+    }
+    if let Some(dir) = args.get("workload-dir") {
+        let names = wham::workload::add_dir(dir).map_err(|e| anyhow!("--workload-dir: {e}"))?;
+        eprintln!("loaded {} workload spec(s) from {dir}: {names:?}", names.len());
+    }
     match args.pos(0) {
         Some("models") => cmd_models(),
+        Some("workloads") => cmd_workloads(&args),
         Some("search") => cmd_search(&args),
         Some("evaluate") => cmd_evaluate(&args),
         Some("common") => cmd_common(&args),
@@ -63,8 +82,10 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "wham — Workload-Aware Hardware Accelerator Mining (CS.AR 2024 reproduction)\n\n\
+         global flags: [--workload-dir DIR]  (or WHAM_WORKLOAD_DIR) — load *.json workload specs\n\n\
          usage:\n  \
          wham models\n  \
+         wham workloads <list|show <name>|lint <path...>>\n  \
          wham search --model <name> [--metric throughput|perf/tdp] [--ilp]\n              \
          [--backend auto|native|pjrt] [--k 10] [--hysteresis 1]\n              \
          [--deadline-ms N] [--progress]\n  \
@@ -78,7 +99,7 @@ fn print_usage() {
          wham partition --model <llm> [--depth 32] [--tmp 1] [--scheme gpipe]\n  \
          wham space --model <name>\n  \
          wham serve [--port 8484] [--workers 8] [--db designs.jsonl] [--backend auto]\n  \
-         wham client <models|search|evaluate|common|global|status> [--addr 127.0.0.1:8484] ...\n  \
+         wham client <models|search|evaluate|common|global|status|upload> [--addr 127.0.0.1:8484] ...\n  \
          wham selftest"
     );
 }
@@ -88,22 +109,114 @@ fn session_from_args(args: &Args) -> Result<Session> {
     Ok(Session::new(backend_from_args(args)?)?)
 }
 
+/// Forward-graph parameter count of any registry entry, pretty-printed
+/// (builtin constructors or spec lowering, depending on the layer).
+fn entry_params(e: &wham::workload::SpecEntry) -> String {
+    let g = match e.source {
+        wham::workload::Source::Builtin => wham::models::forward(&e.name),
+        _ => wham::workload::resolve_forward(&e.name).and_then(Result::ok),
+    };
+    g.map(|g| wham::util::human_count(g.param_elems() as f64)).unwrap_or_default()
+}
+
 fn cmd_models() -> Result<()> {
-    let mut t = Table::new(["model", "task", "batch", "accelerators", "params"]);
-    for m in wham::models::MODELS {
-        let params = wham::models::forward(m.name)
-            .map(|g| wham::util::human_count(g.param_elems() as f64))
-            .unwrap_or_default();
+    let mut t = Table::new(["model", "task", "batch", "accelerators", "source", "params"]);
+    for e in wham::workload::all_entries() {
+        let params = entry_params(&e);
         t.row([
-            m.name.to_string(),
-            m.task.to_string(),
-            m.batch.to_string(),
-            m.accelerators.to_string(),
+            e.name.clone(),
+            e.task.clone(),
+            e.batch.to_string(),
+            e.accelerators.to_string(),
+            e.source.label().to_string(),
             params,
         ]);
     }
     print!("{t}");
     Ok(())
+}
+
+/// `wham workloads <list|show <name>|lint <path...>>` — the registry's
+/// CLI mirror.
+fn cmd_workloads(args: &Args) -> Result<()> {
+    match args.pos(1) {
+        None | Some("list") => {
+            let mut t = Table::new(["workload", "task", "batch", "source", "transformer"]);
+            for e in wham::workload::all_entries() {
+                t.row([
+                    e.name.clone(),
+                    e.task.clone(),
+                    e.batch.to_string(),
+                    e.source.label().to_string(),
+                    wham::workload::transformer_cfg(&e.name).is_some().to_string(),
+                ]);
+            }
+            print!("{t}");
+            Ok(())
+        }
+        Some("show") => {
+            let name = args
+                .pos(2)
+                .ok_or_else(|| anyhow!("usage: wham workloads show <name>"))?;
+            if let Some(info) = wham::models::info(name) {
+                println!("{name}: builtin Table-4 model (task={}, batch={})", info.task, info.batch);
+            } else {
+                let reg = wham::workload::get_spec(name)
+                    .ok_or_else(|| anyhow!("unknown workload {name:?} (see `wham workloads list`)"))?;
+                println!(
+                    "{name}: {} spec (task={}, batch={}, transformer section: {})",
+                    reg.source.label(),
+                    reg.spec.task,
+                    reg.spec.batch,
+                    reg.spec.transformer.is_some(),
+                );
+            }
+            let (graph, batch) = resolve_workload(name)?;
+            println!(
+                "  training graph: {} ops, {} edges, batch {batch}, fingerprint {}",
+                graph.len(),
+                graph.num_edges(),
+                wham::graph::fingerprint(&graph),
+            );
+            let passes = graph.pass_counts();
+            println!(
+                "  passes: {} fwd / {} bwd / {} update / {} loss; {} param elems",
+                passes[0],
+                passes[1],
+                passes[2],
+                passes[3],
+                wham::util::human_count(graph.param_elems() as f64),
+            );
+            Ok(())
+        }
+        Some("lint") => {
+            let paths = &args.positionals()[2..];
+            if paths.is_empty() {
+                bail!("usage: wham workloads lint <spec.json> [more.json ...]");
+            }
+            let mut failed = 0usize;
+            for path in paths {
+                match std::fs::read_to_string(path)
+                    .map_err(|e| format!("cannot read: {e}"))
+                    .and_then(|text| wham::workload::lint(&text).map_err(|e| e.to_string()))
+                {
+                    Ok(r) => println!(
+                        "OK   {path}: {} (batch {}, {} fwd ops -> {} training ops, fingerprint {})",
+                        r.name, r.batch, r.forward_ops, r.training_ops, r.fingerprint
+                    ),
+                    Err(e) => {
+                        println!("FAIL {path}: {e}");
+                        failed += 1;
+                    }
+                }
+            }
+            if failed > 0 {
+                bail!("{failed} of {} spec file(s) failed lint", paths.len());
+            }
+            Ok(())
+        }
+        Some(other) => bail!("unknown workloads subcommand {other:?} (list, show, lint)"),
+    }
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
@@ -324,7 +437,8 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let tmp: u64 = args.get_as_or("tmp", 1).map_err(|e| anyhow!("{e}"))?;
     let scheme: wham::distributed::Scheme =
         args.get_or("scheme", "gpipe").parse().map_err(|e: String| anyhow!("{e}"))?;
-    let cfg = wham::models::transformer_cfg(name)
+    // Builtin LLMs or any registered spec with a `transformer` section.
+    let cfg = wham::workload::transformer_cfg(name)
         .ok_or_else(|| anyhow!("{name:?} is not an LLM workload"))?;
     let p = wham::distributed::partition::partition_transformer(
         name,
@@ -400,7 +514,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     let addr: std::net::SocketAddr =
         addr_s.parse().map_err(|_| anyhow!("--addr expects host:port, got {addr_s:?}"))?;
     let sub = args.pos(1).ok_or_else(|| {
-        anyhow!("usage: wham client <models|search|evaluate|common|global|status> [--addr host:port]")
+        anyhow!("usage: wham client <models|search|evaluate|common|global|status|upload> [--addr host:port]")
     })?;
 
     let (method, path, body) = match sub {
@@ -410,6 +524,13 @@ fn cmd_client(args: &Args) -> Result<()> {
         "evaluate" => ("POST", "/evaluate", Some(EvaluateRequest::from_args(args)?.to_json())),
         "common" => ("POST", "/common", Some(CommonRequest::from_args(args)?.to_json())),
         "global" => ("POST", "/global", Some(GlobalRequest::from_args(args)?.to_json())),
+        // Upload a workload spec file to the server's registry.
+        "upload" => {
+            let spec = args
+                .pos(2)
+                .ok_or_else(|| anyhow!("usage: wham client upload <spec.json>"))?;
+            ("POST", "/workloads", Some(std::fs::read_to_string(spec)?))
+        }
         other => bail!("unknown client subcommand {other:?}"),
     };
     let (status, resp) = wham::service::http::request(addr, method, path, body.as_deref())

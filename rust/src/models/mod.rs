@@ -1,9 +1,14 @@
 //! The workload zoo: all 11 DNNs of paper Table 4 as forward operator
-//! graphs, plus the registry the CLI / benches / searches iterate over.
+//! graphs, plus the builtin layer of the workload registry. Arbitrary
+//! (non-Table-4) workloads come from [`crate::workload`] — declarative
+//! JSON specs resolved behind [`crate::api::plan::resolve_workload`].
 
 pub mod gnmt;
 pub mod transformer;
 pub mod vision;
+
+use std::collections::HashMap;
+use std::sync::OnceLock;
 
 use crate::graph::autodiff::{training_graph, Optimizer};
 use crate::graph::fusion::fuse;
@@ -47,9 +52,17 @@ pub fn llm_models() -> Vec<&'static str> {
     MODELS.iter().filter(|m| m.distributed_only).map(|m| m.name).collect()
 }
 
-/// Look up registry info.
+/// Name → row index, built once. `info` runs on every request
+/// (`api::plan::resolve_workload`), so lookups are map-backed rather
+/// than linear scans over [`MODELS`].
+fn index() -> &'static HashMap<&'static str, &'static ModelInfo> {
+    static INDEX: OnceLock<HashMap<&'static str, &'static ModelInfo>> = OnceLock::new();
+    INDEX.get_or_init(|| MODELS.iter().map(|m| (m.name, m)).collect())
+}
+
+/// Look up registry info (O(1)).
 pub fn info(name: &str) -> Option<&'static ModelInfo> {
-    MODELS.iter().find(|m| m.name == name)
+    index().get(name).copied()
 }
 
 /// Transformer hyper-parameters for LLM workloads (used by the pipeline
@@ -130,5 +143,14 @@ mod tests {
     fn unknown_model_is_none() {
         assert!(forward("alexnet").is_none());
         assert!(info("alexnet").is_none());
+    }
+
+    #[test]
+    fn map_index_agrees_with_linear_scan() {
+        for m in MODELS {
+            let found = info(m.name).unwrap();
+            assert_eq!(found.name, m.name);
+            assert_eq!(found.batch, m.batch);
+        }
     }
 }

@@ -6,14 +6,20 @@
 //! [`Session`]; replies are the typed reply's `to_json()` bytes. The
 //! request/reply schemas live with the types:
 //!
-//! | endpoint         | request type                      | reply type |
-//! |------------------|-----------------------------------|------------|
-//! | `GET /models`    | —                                 | [`crate::api::ModelsReply`] |
-//! | `POST /search`   | [`crate::api::SearchRequest`]     | [`crate::api::SearchReply`] (coalesced + cached) |
-//! | `POST /evaluate` | [`crate::api::EvaluateRequest`]   | [`crate::api::EvaluateReply`] |
-//! | `POST /common`   | [`crate::api::CommonRequest`]     | [`crate::api::CommonReply`] |
-//! | `POST /global`   | [`crate::api::GlobalRequest`]     | [`crate::api::GlobalReply`] |
-//! | `GET /status`    | —                                 | [`crate::api::StatusReply`] |
+//! | endpoint          | request type                      | reply type |
+//! |-------------------|-----------------------------------|------------|
+//! | `GET /models`     | —                                 | [`crate::api::ModelsReply`] |
+//! | `POST /workloads` | a workload spec document          | [`crate::api::WorkloadReply`] |
+//! | `POST /search`    | [`crate::api::SearchRequest`]     | [`crate::api::SearchReply`] (coalesced + cached) |
+//! | `POST /evaluate`  | [`crate::api::EvaluateRequest`]   | [`crate::api::EvaluateReply`] |
+//! | `POST /common`    | [`crate::api::CommonRequest`]     | [`crate::api::CommonReply`] |
+//! | `POST /global`    | [`crate::api::GlobalRequest`]     | [`crate::api::GlobalReply`] |
+//! | `GET /status`     | —                                 | [`crate::api::StatusReply`] |
+//!
+//! `POST /workloads` validates and registers a declarative spec
+//! ([`crate::workload`]); the name is then mineable by every other
+//! endpoint, with design points cached under the spec's graph
+//! fingerprint exactly like builtins.
 //!
 //! [`ApiError`] kinds map to HTTP statuses (400/404/500); `/search`,
 //! `/common`, and `/global` coalesce identical in-flight requests by the
@@ -26,7 +32,7 @@ use std::time::Instant;
 use crate::api::reply::{CoalescerCounters, DbCounters, SearchCounters};
 use crate::api::{
     ApiError, CommonRequest, EvaluateRequest, FromJson, GlobalRequest, NullSink, SearchRequest,
-    Session, StatusReply, ToJson,
+    Session, StatusReply, ToJson, WorkloadReply,
 };
 use crate::coordinator::{make_backend, BackendChoice};
 use crate::cost::native::NativeCost;
@@ -131,12 +137,15 @@ impl Handler for Api {
             ),
             ("POST", "/common") => common_response(s, session, &req.body),
             ("POST", "/global") => global_response(s, session, &req.body),
-            (_, "/models" | "/status" | "/search" | "/evaluate" | "/common" | "/global") => {
-                Response::error(405, "wrong method for this endpoint")
-            }
+            ("POST", "/workloads") => api_result(upload_workload(&req.body)),
+            (
+                _,
+                "/models" | "/status" | "/search" | "/evaluate" | "/common" | "/global"
+                | "/workloads",
+            ) => Response::error(405, "wrong method for this endpoint"),
             _ => Response::error(
                 404,
-                "unknown endpoint; see GET /models, POST /search, POST /evaluate, POST /common, POST /global, GET /status",
+                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, GET /status",
             ),
         }
     }
@@ -156,6 +165,23 @@ fn into_response(outcome: &Result<String, String>) -> Response {
         Ok(body) => Response::json(body.clone()),
         Err(e) => Response::error(500, e),
     }
+}
+
+/// Validate and register an uploaded workload spec. Spec diagnostics
+/// (with layer paths) surface as 400s; the reply carries the training
+/// fingerprint the design database will key the workload's points by.
+fn upload_workload(body: &str) -> Result<String, ApiError> {
+    let report = crate::workload::add_spec_text(body, crate::workload::Source::Uploaded)
+        .map_err(|e| ApiError::invalid(e.to_string()))?;
+    Ok(WorkloadReply {
+        name: report.name,
+        fingerprint: report.fingerprint,
+        batch: report.batch,
+        forward_ops: report.forward_ops as u64,
+        training_ops: report.training_ops as u64,
+        source: crate::workload::Source::Uploaded.label().to_string(),
+    }
+    .to_json())
 }
 
 fn search_response(s: &ServiceState, session: &mut Session, body: &str) -> Response {

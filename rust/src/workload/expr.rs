@@ -1,0 +1,194 @@
+//! Integer dimension expressions over named workload hyper-parameters.
+//!
+//! Spec files write shapes as either JSON numbers or small arithmetic
+//! expressions (`"batch*seq"`, `"4*hidden"`, `"chunks-1"`) evaluated
+//! against the spec's `params` map. The grammar is deliberately tiny —
+//! `+ - * /` with the usual precedence, parentheses, decimal literals,
+//! and identifiers — and all arithmetic is checked `u64` (overflow,
+//! underflow, and division by zero are spec errors, not panics).
+
+use std::collections::BTreeMap;
+
+/// Parenthesis-nesting cap. The parser is recursive-descent, so depth
+/// costs stack frames; uploaded specs are untrusted and a worker-thread
+/// stack overflow aborts the whole process, not just the request.
+const MAX_DEPTH: usize = 64;
+
+/// Evaluate `text` against `params`. Errors are human-readable and name
+/// the offending token.
+pub fn eval(text: &str, params: &BTreeMap<String, u64>) -> Result<u64, String> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0, params };
+    let v = p.expr()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing content at byte {} of {text:?}", p.pos));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+    params: &'a BTreeMap<String, u64>,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expr(&mut self) -> Result<u64, String> {
+        let mut v = self.term()?;
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'+') => {
+                    self.pos += 1;
+                    let r = self.term()?;
+                    v = v.checked_add(r).ok_or_else(|| "addition overflows u64".to_string())?;
+                }
+                Some(b'-') => {
+                    self.pos += 1;
+                    let r = self.term()?;
+                    v = v
+                        .checked_sub(r)
+                        .ok_or_else(|| format!("{v} - {r} is negative (dims are unsigned)"))?;
+                }
+                _ => return Ok(v),
+            }
+        }
+    }
+
+    fn term(&mut self) -> Result<u64, String> {
+        let mut v = self.factor()?;
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'*') => {
+                    self.pos += 1;
+                    let r = self.factor()?;
+                    v = v
+                        .checked_mul(r)
+                        .ok_or_else(|| "multiplication overflows u64".to_string())?;
+                }
+                Some(b'/') => {
+                    self.pos += 1;
+                    let r = self.factor()?;
+                    if r == 0 {
+                        return Err("division by zero".to_string());
+                    }
+                    v /= r;
+                }
+                _ => return Ok(v),
+            }
+        }
+    }
+
+    fn factor(&mut self) -> Result<u64, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'(') => {
+                self.depth += 1;
+                if self.depth > MAX_DEPTH {
+                    return Err(format!("expression nests deeper than {MAX_DEPTH} parentheses"));
+                }
+                self.pos += 1;
+                let v = self.expr()?;
+                self.skip_ws();
+                if self.peek() != Some(b')') {
+                    return Err(format!("expected ')' at byte {}", self.pos));
+                }
+                self.pos += 1;
+                self.depth -= 1;
+                Ok(v)
+            }
+            Some(c) if c.is_ascii_digit() => {
+                let start = self.pos;
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+                std::str::from_utf8(&self.bytes[start..self.pos])
+                    .unwrap()
+                    .parse::<u64>()
+                    .map_err(|_| "integer literal overflows u64".to_string())
+            }
+            Some(c) if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = self.pos;
+                while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == b'_') {
+                    self.pos += 1;
+                }
+                let name = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+                self.params
+                    .get(name)
+                    .copied()
+                    .ok_or_else(|| format!("unknown parameter {name:?}"))
+            }
+            _ => Err(format!("expected a number, parameter, or '(' at byte {}", self.pos)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(pairs: &[(&str, u64)]) -> BTreeMap<String, u64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn precedence_and_parens() {
+        let p = params(&[("h", 8)]);
+        assert_eq!(eval("2+3*4", &p), Ok(14));
+        assert_eq!(eval("(2+3)*4", &p), Ok(20));
+        assert_eq!(eval("4*h/2", &p), Ok(16));
+        assert_eq!(eval(" h - 1 ", &p), Ok(7));
+        assert_eq!(eval("h*h*h", &p), Ok(512));
+    }
+
+    #[test]
+    fn identifiers_resolve() {
+        let p = params(&[("batch", 4), ("seq", 512)]);
+        assert_eq!(eval("batch*seq", &p), Ok(2048));
+        assert!(eval("batch*missing", &p).unwrap_err().contains("missing"));
+    }
+
+    #[test]
+    fn checked_arithmetic() {
+        let p = params(&[]);
+        assert!(eval("1-2", &p).unwrap_err().contains("negative"));
+        assert!(eval("3/0", &p).unwrap_err().contains("zero"));
+        assert!(eval("18446744073709551615*2", &p).unwrap_err().contains("overflow"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = params(&[("a", 1)]);
+        assert!(eval("", &p).is_err());
+        assert!(eval("a a", &p).is_err());
+        assert!(eval("(a", &p).is_err());
+        assert!(eval("a+", &p).is_err());
+    }
+
+    #[test]
+    fn integer_division_truncates() {
+        let p = params(&[("c", 7)]);
+        assert_eq!(eval("c/2", &p), Ok(3));
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_not_a_stack_overflow() {
+        let p = params(&[]);
+        let ok = format!("{}1{}", "(".repeat(60), ")".repeat(60));
+        assert_eq!(eval(&ok, &p), Ok(1));
+        let deep = format!("{}1{}", "(".repeat(100_000), ")".repeat(100_000));
+        assert!(eval(&deep, &p).unwrap_err().contains("nests deeper"));
+    }
+}

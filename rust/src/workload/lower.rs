@@ -1,0 +1,630 @@
+//! Shape inference + lowering: a parsed [`WorkloadSpec`] into the same
+//! [`OperatorGraph`] form the builtin Rust constructors produce.
+//!
+//! The pass runs in three steps:
+//!
+//! 1. **Parameter resolution** — the spec's `params` (which may reference
+//!    each other and the injected `batch`) are evaluated to a fixed
+//!    point; unresolvable or cyclic definitions are spec errors.
+//! 2. **Lowering** — the item tree is walked in order, blocks unrolled,
+//!    references resolved, and every op emitted through the shared
+//!    [`GraphBuilder`] with the exact `OpKind` / `param_elems` the model
+//!    zoo uses (`rust/tests/workload_spec.rs` pins fingerprint equality
+//!    between the shipped specs and their Rust constructors). Each op's
+//!    cost row is checked *before* emission, so zero or over-`i32` dims
+//!    surface as diagnostics with the layer's path, not as a
+//!    [`crate::graph::validate`] failure naming an anonymous node id.
+//! 3. **Training expansion** — [`training`] applies the same pipeline as
+//!    [`crate::models::training`]: fuse, then mirror into the training
+//!    graph, then a final `validate()` backstop.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::spec::{Dim, Item, LayerKind, OpSpec, WorkloadSpec};
+use super::SpecError;
+use crate::graph::autodiff::{training_graph, Optimizer};
+use crate::graph::fusion::fuse;
+use crate::graph::validate::validate;
+use crate::graph::{GraphBuilder, NodeId, OpKind, OperatorGraph};
+
+fn err(path: &str, message: impl Into<String>) -> SpecError {
+    SpecError { path: path.to_string(), message: message.into() }
+}
+
+/// Hard cap on lowered forward operators per spec. Roughly 50x the
+/// largest builtin (GPT-3's forward pass is ~1.3k ops), it bounds the
+/// CPU/memory a single uploaded document can consume during validation —
+/// `repeat` is otherwise an arbitrary u64, and `POST /workloads` is an
+/// open endpoint.
+pub const MAX_SPEC_OPS: usize = 250_000;
+
+/// Resolve the spec's hyper-parameters (plus the injected `batch`) to
+/// concrete values, tolerating forward references via fixed-point
+/// iteration.
+pub fn resolve_params(spec: &WorkloadSpec) -> Result<BTreeMap<String, u64>, SpecError> {
+    let mut env: BTreeMap<String, u64> = BTreeMap::new();
+    env.insert("batch".to_string(), spec.batch);
+    let mut pending: Vec<(&String, &Dim)> = spec.params.iter().map(|(k, d)| (k, d)).collect();
+    while !pending.is_empty() {
+        let before = pending.len();
+        let mut next = Vec::new();
+        let mut last_err = String::new();
+        for (k, d) in pending {
+            match d.eval(&env) {
+                Ok(v) => {
+                    env.insert(k.clone(), v);
+                }
+                Err(e) => {
+                    last_err = format!("param {k:?}: {e}");
+                    next.push((k, d));
+                }
+            }
+        }
+        if next.len() == before {
+            // A full pass resolved nothing: a cycle or an unknown name.
+            return Err(err("spec.params", last_err));
+        }
+        pending = next;
+    }
+    Ok(env)
+}
+
+fn eval_dim(
+    d: &Dim,
+    params: &BTreeMap<String, u64>,
+    path: &str,
+    field: &str,
+) -> Result<u64, SpecError> {
+    d.eval(params).map_err(|e| err(path, format!("field {field:?}: {e}")))
+}
+
+/// Check the cost row, then emit through the shared builder.
+fn push_op(
+    b: &mut GraphBuilder,
+    kind: OpKind,
+    params: u64,
+    preds: &[NodeId],
+    name: String,
+) -> Result<NodeId, SpecError> {
+    if b.len() >= MAX_SPEC_OPS {
+        return Err(err(
+            &name,
+            format!("workload exceeds the {MAX_SPEC_OPS}-operator budget (runaway \"repeat\"?)"),
+        ));
+    }
+    check_row(&kind, &name)?;
+    Ok(b.fwd(name, kind, params, preds))
+}
+
+/// Checked product of cost-row components, bounded by the i32 cost-model
+/// contract. Every multiplication that feeds a cost row or `out_elems`
+/// goes through here *before* an [`OpKind`] is constructed, so huge spec
+/// dims are path-tagged 400s rather than debug-build overflow panics (or
+/// silent release-build wraparound) inside `cost_row()`.
+fn row_dim(path: &str, what: &str, xs: &[u64]) -> Result<u64, SpecError> {
+    let mut acc: u64 = 1;
+    for &x in xs {
+        acc = acc
+            .checked_mul(x)
+            .ok_or_else(|| err(path, format!("{what} overflows u64")))?;
+    }
+    if acc > i32::MAX as u64 {
+        return Err(err(
+            path,
+            format!("{what} ({acc}) exceeds the i32 cost-model contract"),
+        ));
+    }
+    Ok(acc)
+}
+
+/// Checked parameter count. Weights feed the optimizer update op's cost
+/// row (`Elementwise { elems: param_elems }`), so they carry the same
+/// i32 bound — enforced here with the layer's path rather than by the
+/// training-graph validator's anonymous node-id backstop.
+fn param_count(path: &str, what: &str, xs: &[u64]) -> Result<u64, SpecError> {
+    row_dim(path, what, xs)
+}
+
+/// Pre-emission check of one cost row, with a path-tagged diagnostic.
+/// All products inside `cost_row()`/`out_elems()` are already bounded by
+/// [`row_dim`] at this point; this is the zero/backstop check.
+fn check_row(kind: &OpKind, path: &str) -> Result<(), SpecError> {
+    let r = kind.cost_row();
+    if r.m == 0 || r.n == 0 || r.k == 0 {
+        return Err(err(
+            path,
+            format!("lowers to a zero dimension (cost row m={}, n={}, k={})", r.m, r.n, r.k),
+        ));
+    }
+    if r.m > i32::MAX as u64 || r.n > i32::MAX as u64 || r.k > i32::MAX as u64 {
+        return Err(err(path, "dimensions exceed the i32 cost-model contract"));
+    }
+    Ok(())
+}
+
+struct Ctx<'s> {
+    b: GraphBuilder,
+    params: &'s BTreeMap<String, u64>,
+    /// Name scopes, innermost last; one frame per sequence (so each block
+    /// iteration rebinds its names freshly).
+    scopes: Vec<HashMap<String, NodeId>>,
+}
+
+impl<'s> Ctx<'s> {
+    fn resolve_ref(
+        &self,
+        r: &str,
+        prev: Option<NodeId>,
+        input: Option<NodeId>,
+        path: &str,
+    ) -> Result<NodeId, SpecError> {
+        match r {
+            "prev" => prev.ok_or_else(|| err(path, "\"prev\" has no previous layer here")),
+            "in" => input.ok_or_else(|| {
+                err(path, "\"in\" is only valid inside a block that has an input")
+            }),
+            name => self
+                .scopes
+                .iter()
+                .rev()
+                .find_map(|f| f.get(name))
+                .copied()
+                .ok_or_else(|| err(path, format!("unknown layer reference {name:?}"))),
+        }
+    }
+
+    fn bind(&mut self, name: &str, node: NodeId, path: &str) -> Result<(), SpecError> {
+        let frame = self.scopes.last_mut().expect("scope stack is never empty here");
+        if frame.insert(name.to_string(), node).is_some() {
+            return Err(err(path, format!("duplicate layer name {name:?} in this sequence")));
+        }
+        Ok(())
+    }
+
+    fn emit(&mut self, op: &OpSpec, preds: &[NodeId], path: &str) -> Result<NodeId, SpecError> {
+        // Copied out so the closure doesn't hold a borrow of `self`
+        // across the `&mut self.b` builder calls below.
+        let pmap = self.params;
+        let e = |field: &str, d: &Dim| eval_dim(d, pmap, path, field);
+        // Single dims feeding a cost row get the same i32 bound as
+        // products (row_dim over one factor).
+        let one = |field: &str, d: &Dim| row_dim(path, field, &[eval_dim(d, pmap, path, field)?]);
+        let b = &mut self.b;
+        match &op.kind {
+            LayerKind::Embed { elems, params, intensity } => {
+                let kind = OpKind::Elementwise {
+                    elems: one("elems", elems)?,
+                    intensity: one("intensity", intensity)?,
+                };
+                let p = param_count(path, "params", &[e("params", params)?])?;
+                push_op(b, kind, p, preds, path.to_string())
+            }
+            LayerKind::Linear { m, n, k, weights, params } => {
+                let (m, n, k) = (one("m", m)?, one("n", n)?, one("k", k)?);
+                let p = match params {
+                    Some(d) => param_count(path, "params", &[e("params", d)?])?,
+                    None if *weights => param_count(path, "weight count k*n", &[k, n])?,
+                    None => 0,
+                };
+                push_op(b, OpKind::Gemm { m, n, k }, p, preds, path.to_string())
+            }
+            LayerKind::Conv { batch, in_c, out_c, kh, kw, oh, ow, params } => {
+                let (batch, in_c, out_c) =
+                    (e("batch", batch)?, e("in_c", in_c)?, one("out_c", out_c)?);
+                let (kh, kw, oh, ow) = (e("kh", kh)?, e("kw", kw)?, e("oh", oh)?, e("ow", ow)?);
+                // The implicit-GEMM row and out_elems multiply these.
+                row_dim(path, "batch*oh*ow", &[batch, oh, ow])?;
+                row_dim(path, "in_c*kh*kw", &[in_c, kh, kw])?;
+                let p = match params {
+                    Some(d) => param_count(path, "params", &[e("params", d)?])?,
+                    None => param_count(
+                        path,
+                        "weight count in_c*out_c*kh*kw",
+                        &[in_c, out_c, kh, kw],
+                    )?,
+                };
+                push_op(
+                    b,
+                    OpKind::Conv2d { batch, in_c, out_c, kh, kw, oh, ow },
+                    p,
+                    preds,
+                    path.to_string(),
+                )
+            }
+            LayerKind::BatchNorm { elems, channels } => {
+                let c = e("channels", channels)?;
+                push_op(
+                    b,
+                    OpKind::Elementwise { elems: one("elems", elems)?, intensity: 2 },
+                    param_count(path, "affine params 2*channels", &[2, c])?,
+                    preds,
+                    path.to_string(),
+                )
+            }
+            LayerKind::LayerNorm { rows, cols } => {
+                let (rows, cols) = (e("rows", rows)?, e("cols", cols)?);
+                row_dim(path, "rows*cols", &[rows, cols])?;
+                push_op(
+                    b,
+                    OpKind::LayerNorm { rows, cols },
+                    param_count(path, "affine params 2*cols", &[2, cols])?,
+                    preds,
+                    path.to_string(),
+                )
+            }
+            LayerKind::Activation { elems, intensity, residual } => {
+                if *residual && preds.len() < 2 {
+                    return Err(err(
+                        path,
+                        format!(
+                            "residual is a join and expects >= 2 inputs, got {} (use \
+                             \"activation\" for a unary op)",
+                            preds.len()
+                        ),
+                    ));
+                }
+                push_op(
+                    b,
+                    OpKind::Elementwise {
+                        elems: one("elems", elems)?,
+                        intensity: one("intensity", intensity)?,
+                    },
+                    0,
+                    preds,
+                    path.to_string(),
+                )
+            }
+            LayerKind::Pool { elems, intensity } => push_op(
+                b,
+                OpKind::Reduction {
+                    elems: one("elems", elems)?,
+                    intensity: one("intensity", intensity)?,
+                },
+                0,
+                preds,
+                path.to_string(),
+            ),
+            LayerKind::Softmax { rows, cols } => {
+                let (rows, cols) = (e("rows", rows)?, e("cols", cols)?);
+                row_dim(path, "rows*cols", &[rows, cols])?;
+                push_op(b, OpKind::Softmax { rows, cols }, 0, preds, path.to_string())
+            }
+            LayerKind::Attention { tokens, dim, seq, softmax_rows } => {
+                if preds.len() != 3 {
+                    return Err(err(
+                        path,
+                        format!(
+                            "attention expects exactly 3 inputs [query, key, value], got {}",
+                            preds.len()
+                        ),
+                    ));
+                }
+                let (t, d, s) = (one("tokens", tokens)?, one("dim", dim)?, one("seq", seq)?);
+                let rows = match softmax_rows {
+                    Some(r) => e("softmax_rows", r)?,
+                    None => t,
+                };
+                row_dim(path, "softmax_rows*seq", &[rows, s])?;
+                let scores = push_op(
+                    b,
+                    OpKind::Gemm { m: t, n: s, k: d },
+                    0,
+                    &[preds[0], preds[1]][..],
+                    format!("{path}/scores"),
+                )?;
+                let sm = push_op(
+                    b,
+                    OpKind::Softmax { rows, cols: s },
+                    0,
+                    &[scores][..],
+                    format!("{path}/softmax"),
+                )?;
+                push_op(
+                    b,
+                    OpKind::Gemm { m: t, n: d, k: s },
+                    0,
+                    &[sm, preds[2]][..],
+                    format!("{path}/ctx"),
+                )
+            }
+        }
+    }
+}
+
+/// Lower one item sequence. `input` is the sequence's dataflow input
+/// (`"in"`); returns the output of the last item.
+fn lower_seq(
+    ctx: &mut Ctx<'_>,
+    items: &[Item],
+    input: Option<NodeId>,
+    path: &str,
+) -> Result<Option<NodeId>, SpecError> {
+    ctx.scopes.push(HashMap::new());
+    let mut prev = input;
+    let result = (|| {
+        for (i, item) in items.iter().enumerate() {
+            match item {
+                Item::Op(op) => {
+                    let ipath = match &op.name {
+                        Some(n) => format!("{path}/{n}"),
+                        None => format!("{path}[{i}]"),
+                    };
+                    let preds: Vec<NodeId> = match &op.inputs {
+                        Some(refs) => refs
+                            .iter()
+                            .map(|r| ctx.resolve_ref(r, prev, input, &ipath))
+                            .collect::<Result<_, _>>()?,
+                        None => prev.into_iter().collect(),
+                    };
+                    let node = ctx.emit(op, &preds, &ipath)?;
+                    if let Some(n) = &op.name {
+                        ctx.bind(n, node, &ipath)?;
+                    }
+                    prev = Some(node);
+                }
+                Item::Block(blk) => {
+                    let bpath = match &blk.name {
+                        Some(n) => format!("{path}/{n}"),
+                        None => format!("{path}[{i}]"),
+                    };
+                    let n = eval_dim(&blk.repeat, ctx.params, &bpath, "repeat")?;
+                    if n == 0 {
+                        return Err(err(&bpath, "\"repeat\" must be >= 1"));
+                    }
+                    let mut cur = prev;
+                    for it in 0..n {
+                        cur = lower_seq(ctx, &blk.layers, cur, &format!("{bpath}[{it}]"))?;
+                    }
+                    if let Some(name) = &blk.name {
+                        let out = cur.ok_or_else(|| err(&bpath, "block produced no output"))?;
+                        ctx.bind(name, out, &bpath)?;
+                    }
+                    prev = cur;
+                }
+            }
+        }
+        Ok(prev)
+    })();
+    ctx.scopes.pop();
+    result
+}
+
+/// Lower a spec into its **forward** operator graph.
+pub fn lower(spec: &WorkloadSpec) -> Result<OperatorGraph, SpecError> {
+    let params = resolve_params(spec)?;
+    let mut ctx = Ctx { b: GraphBuilder::new(), params: &params, scopes: Vec::new() };
+    lower_seq(&mut ctx, &spec.graph, None, "graph")?;
+    let g = ctx.b.finish();
+    validate(&g).map_err(|e| {
+        err(&format!("workload {:?}", spec.name), format!("lowered forward graph is invalid: {e}"))
+    })?;
+    Ok(g)
+}
+
+/// Lower a spec into the full **training** graph — the same
+/// fuse-then-mirror pipeline as [`crate::models::training`], so a spec
+/// re-expressing a builtin fingerprints identically to it.
+pub fn training(spec: &WorkloadSpec) -> Result<OperatorGraph, SpecError> {
+    training_of(&spec.name, &lower(spec)?)
+}
+
+/// Training expansion of an already-lowered forward graph (lets callers
+/// that need both forms — lint, `wham workloads show` — lower once).
+pub fn training_of(name: &str, fwd: &OperatorGraph) -> Result<OperatorGraph, SpecError> {
+    let (fused, _) = fuse(fwd);
+    let g = training_graph(&fused, Optimizer::Adam);
+    validate(&g).map_err(|e| {
+        err(&format!("workload {name:?}"), format!("lowered training graph is invalid: {e}"))
+    })?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::fingerprint;
+    use crate::workload::spec::parse_spec;
+
+    const MLP: &str = r#"{
+        "name": "mlp", "batch": 2,
+        "params": {"h": 16, "bs": "batch*8"},
+        "graph": [
+            {"op": "embed", "elems": "bs*h", "params": "32*h"},
+            {"block": "body", "repeat": 3, "layers": [
+                {"op": "linear", "name": "fc", "m": "bs", "n": "h", "k": "h"},
+                {"op": "activation", "elems": "bs*h", "intensity": 1},
+                {"op": "residual", "inputs": ["prev", "in"], "elems": "bs*h"}
+            ]},
+            {"op": "linear", "weights": false, "m": "bs", "n": 10, "k": "h"}
+        ]
+    }"#;
+
+    #[test]
+    fn lowers_blocks_and_references() {
+        let spec = parse_spec(MLP).unwrap();
+        let g = lower(&spec).unwrap();
+        // 1 embed + 3 iterations x 3 ops + 1 head.
+        assert_eq!(g.len(), 1 + 3 * 3 + 1);
+        assert_eq!(g.sources(), vec![0]);
+        // Residuals join the activation and the iteration input.
+        let res = g.ops.iter().position(|o| o.name.contains("body[0][2]")).unwrap();
+        assert_eq!(g.preds[res].len(), 2);
+        // Deterministic lowering.
+        assert_eq!(fingerprint(&lower(&spec).unwrap()), fingerprint(&g));
+    }
+
+    #[test]
+    fn training_pipeline_matches_models_shape() {
+        let spec = parse_spec(MLP).unwrap();
+        let t = training(&spec).unwrap();
+        assert!(t.len() > lower(&spec).unwrap().len());
+        crate::graph::validate::validate(&t).unwrap();
+        let passes = t.pass_counts();
+        assert!(passes[1] > 0, "backward ops exist");
+        assert!(passes[2] > 0, "update ops exist");
+    }
+
+    #[test]
+    fn params_resolve_in_any_order() {
+        // "a" references "z" which sorts after it in the BTreeMap.
+        let spec = parse_spec(
+            r#"{"name":"p","batch":1,"params":{"a":"z*2","z":4},
+                "graph":[{"op":"pool","elems":"a"}]}"#,
+        )
+        .unwrap();
+        let p = resolve_params(&spec).unwrap();
+        assert_eq!(p.get("a"), Some(&8));
+        assert_eq!(p.get("batch"), Some(&1));
+    }
+
+    #[test]
+    fn cyclic_or_unknown_params_error() {
+        let spec = parse_spec(
+            r#"{"name":"p","batch":1,"params":{"a":"b","b":"a"},
+                "graph":[{"op":"pool","elems":1}]}"#,
+        )
+        .unwrap();
+        let e = resolve_params(&spec).unwrap_err();
+        assert_eq!(e.path, "spec.params");
+
+        let spec = parse_spec(
+            r#"{"name":"p","batch":1,"graph":[{"op":"pool","elems":"nope"}]}"#,
+        )
+        .unwrap();
+        let e = lower(&spec).unwrap_err();
+        assert!(e.message.contains("nope"), "{e}");
+        assert!(e.path.contains("graph[0]"), "{e}");
+    }
+
+    #[test]
+    fn zero_dims_are_path_tagged() {
+        let spec = parse_spec(
+            r#"{"name":"z","batch":1,"graph":[
+                {"op":"linear","name":"bad","m":0,"n":4,"k":4}
+            ]}"#,
+        )
+        .unwrap();
+        let e = lower(&spec).unwrap_err();
+        assert_eq!(e.path, "graph/bad");
+        assert!(e.message.contains("zero dimension"), "{e}");
+    }
+
+    #[test]
+    fn oversized_dims_and_params_are_path_tagged() {
+        // A cost-row product past the i32 contract is a spec diagnostic,
+        // not a validator error naming an anonymous node.
+        let spec = parse_spec(
+            r#"{"name":"big","batch":1,"graph":[
+                {"op":"softmax","name":"sm","rows":100000,"cols":100000}
+            ]}"#,
+        )
+        .unwrap();
+        let e = lower(&spec).unwrap_err();
+        assert_eq!(e.path, "graph/sm");
+        assert!(e.message.contains("i32"), "{e}");
+
+        // Explicit weight counts hit the same bound (they become the
+        // update op's cost row).
+        let spec = parse_spec(
+            r#"{"name":"big","batch":1,"graph":[
+                {"op":"linear","name":"fat","m":4,"n":4,"k":4,"params":3000000000}
+            ]}"#,
+        )
+        .unwrap();
+        let e = lower(&spec).unwrap_err();
+        assert_eq!(e.path, "graph/fat");
+        assert!(e.message.contains("i32"), "{e}");
+    }
+
+    #[test]
+    fn bad_references_are_path_tagged() {
+        let spec = parse_spec(
+            r#"{"name":"r","batch":1,"graph":[
+                {"op":"pool","elems":4},
+                {"op":"pool","inputs":["ghost"],"elems":4}
+            ]}"#,
+        )
+        .unwrap();
+        let e = lower(&spec).unwrap_err();
+        assert!(e.message.contains("ghost"), "{e}");
+
+        // "in" at top level has no input.
+        let spec = parse_spec(
+            r#"{"name":"r","batch":1,"graph":[{"op":"pool","inputs":["in"],"elems":4}]}"#,
+        )
+        .unwrap();
+        assert!(lower(&spec).unwrap_err().message.contains("in"));
+    }
+
+    #[test]
+    fn attention_expands_to_three_ops() {
+        let spec = parse_spec(
+            r#"{"name":"a","batch":1,"params":{"t":8,"d":4,"s":6},"graph":[
+                {"op":"embed","name":"x","elems":"t*d"},
+                {"op":"linear","name":"q","inputs":["x"],"m":"t","n":"d","k":"d"},
+                {"op":"linear","name":"k","inputs":["x"],"m":"t","n":"d","k":"d"},
+                {"op":"linear","name":"v","inputs":["x"],"m":"t","n":"d","k":"d"},
+                {"op":"attention","inputs":["q","k","v"],"tokens":"t","dim":"d","seq":"s"}
+            ]}"#,
+        )
+        .unwrap();
+        let g = lower(&spec).unwrap();
+        assert_eq!(g.len(), 4 + 3);
+        let scores = g.ops.iter().position(|o| o.name.ends_with("/scores")).unwrap();
+        let sm = g.ops.iter().position(|o| o.name.ends_with("/softmax")).unwrap();
+        let ctx = g.ops.iter().position(|o| o.name.ends_with("/ctx")).unwrap();
+        assert_eq!(g.preds[scores].len(), 2);
+        assert_eq!(g.preds[sm], vec![scores]);
+        assert_eq!(g.preds[ctx].len(), 2);
+        assert!(matches!(g.ops[ctx].kind, OpKind::Gemm { m: 8, n: 4, k: 6 }));
+        assert_eq!(g.ops[scores].param_elems, 0);
+    }
+
+    #[test]
+    fn runaway_repeat_hits_the_op_budget() {
+        let spec = parse_spec(
+            r#"{"name":"bomb","batch":1,"graph":[
+                {"block":"b","repeat":4000000000,"layers":[{"op":"pool","elems":1}]}
+            ]}"#,
+        )
+        .unwrap();
+        let e = lower(&spec).unwrap_err();
+        assert!(e.message.contains("operator budget"), "{e}");
+    }
+
+    #[test]
+    fn residual_requires_a_join() {
+        let spec = parse_spec(
+            r#"{"name":"r","batch":1,"graph":[
+                {"op":"embed","elems":4},
+                {"op":"residual","name":"lonely","elems":4}
+            ]}"#,
+        )
+        .unwrap();
+        let e = lower(&spec).unwrap_err();
+        assert_eq!(e.path, "graph/lonely");
+        assert!(e.message.contains(">= 2"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_names_rejected_but_iterations_rebind() {
+        let dup = parse_spec(
+            r#"{"name":"d","batch":1,"graph":[
+                {"op":"pool","name":"x","elems":4},
+                {"op":"pool","name":"x","elems":4}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(lower(&dup).unwrap_err().message.contains("duplicate"));
+
+        // The same name in successive block iterations is fine.
+        let ok = parse_spec(
+            r#"{"name":"d","batch":1,"graph":[
+                {"op":"embed","elems":4},
+                {"repeat":3,"layers":[{"op":"pool","name":"x","elems":4}]}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(lower(&ok).is_ok());
+    }
+}

@@ -1,0 +1,225 @@
+//! `wham::workload` — declarative workload specs, shape inference, and
+//! the layered registry.
+//!
+//! The Table-4 zoo ([`crate::models`]) is code: adding a workload means a
+//! Rust edit plus a recompile. This subsystem makes workloads *data*: a
+//! JSON spec ([`spec`]) names hyper-parameters and a dataflow program
+//! over a small set of layer kinds; a shape-inference + lowering pass
+//! ([`lower`]) turns it into the exact [`crate::graph::OperatorGraph`]
+//! form the builtins produce (same builder, same fusion, same autodiff
+//! mirror — the shipped specs fingerprint-identical to their Rust
+//! constructors); and a layered registry ([`registry`]) resolves names
+//! from embedded builtin specs, a user directory (`--workload-dir` /
+//! `WHAM_WORKLOAD_DIR`), and service uploads (`POST /workloads`).
+//!
+//! Every front door goes through
+//! [`crate::api::plan::resolve_workload`], which consults this module
+//! after the builtin fast path — so the CLI, the HTTP service, the
+//! fingerprint-keyed design database, and `wham global` all accept any
+//! registered workload by name with zero recompilation.
+//!
+//! The registry is process-global (like `models::MODELS`): one
+//! `RwLock`ed instance shared by every session and service worker.
+
+pub mod expr;
+pub mod lower;
+pub mod registry;
+pub mod spec;
+
+use std::path::Path;
+use std::sync::{OnceLock, RwLock};
+
+use crate::graph::{fingerprint, Fingerprint, OperatorGraph};
+use crate::models::transformer::TransformerCfg;
+
+pub use registry::{RegisteredSpec, Registry, Source, SpecEntry, BUILTIN_SPECS};
+pub use spec::{parse_spec, WorkloadSpec};
+
+/// A spec-level diagnostic: the path of the offending item
+/// (`graph/enc[2]/q`) plus a message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecError {
+    pub path: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.path, self.message)
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// What `lint` learned about a valid spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LintReport {
+    pub name: String,
+    pub batch: u64,
+    pub forward_ops: usize,
+    pub forward_edges: usize,
+    pub training_ops: usize,
+    /// Fingerprint of the full training graph (the design-database key).
+    pub fingerprint: Fingerprint,
+}
+
+/// Validate spec text without registering it: parse, lower, expand to
+/// the training graph, and run the graph validator. This is what
+/// `wham workloads lint` and the upload endpoint run.
+pub fn lint(text: &str) -> Result<LintReport, SpecError> {
+    lint_spec(&spec::parse_spec(text)?)
+}
+
+/// [`lint`] over an already-parsed spec — one parse, one lowering.
+pub fn lint_spec(spec: &WorkloadSpec) -> Result<LintReport, SpecError> {
+    let fwd = lower::lower(spec)?;
+    let training = lower::training_of(&spec.name, &fwd)?;
+    Ok(LintReport {
+        name: spec.name.clone(),
+        batch: spec.batch,
+        forward_ops: fwd.len(),
+        forward_edges: fwd.num_edges(),
+        training_ops: training.len(),
+        fingerprint: fingerprint(&training),
+    })
+}
+
+static REGISTRY: OnceLock<RwLock<Registry>> = OnceLock::new();
+
+/// The process-global registry (builtin specs pre-loaded).
+pub fn global_registry() -> &'static RwLock<Registry> {
+    REGISTRY.get_or_init(|| RwLock::new(Registry::with_builtins()))
+}
+
+/// Validate and register spec text under `source`. Returns the lint
+/// report of the registered spec.
+pub fn add_spec_text(text: &str, source: Source) -> Result<LintReport, SpecError> {
+    let spec = spec::parse_spec(text)?;
+    let report = lint_spec(&spec)?;
+    global_registry().write().unwrap().insert(spec, source)?;
+    Ok(report)
+}
+
+/// Load every `*.json` spec in `dir` into the user layer. Returns the
+/// registered names.
+pub fn add_dir(dir: impl AsRef<Path>) -> Result<Vec<String>, SpecError> {
+    global_registry().write().unwrap().add_dir(dir.as_ref())
+}
+
+/// Load `WHAM_WORKLOAD_DIR` (if set and non-empty) into the user layer.
+pub fn load_env_dir() -> Result<Vec<String>, SpecError> {
+    match std::env::var("WHAM_WORKLOAD_DIR") {
+        Ok(dir) if !dir.trim().is_empty() => add_dir(dir.trim()),
+        _ => Ok(Vec::new()),
+    }
+}
+
+/// Resolve a registered spec to its training graph + batch. `None` when
+/// the name is not in the spec layers (the builtin Rust constructors are
+/// checked by [`crate::api::plan::resolve_workload`], not here).
+pub fn resolve(name: &str) -> Option<Result<(OperatorGraph, u64), SpecError>> {
+    // Clone the spec out so lowering (which can be long for deep
+    // models) never holds the registry lock against uploads.
+    let r = global_registry().read().unwrap().get(name).cloned()?;
+    Some(lower::training(&r.spec).map(|g| (g, r.spec.batch)))
+}
+
+/// Forward graph of a registered spec (for `wham models` param counts
+/// and `wham workloads show`).
+pub fn resolve_forward(name: &str) -> Option<Result<OperatorGraph, SpecError>> {
+    let r = global_registry().read().unwrap().get(name).cloned()?;
+    Some(lower::lower(&r.spec))
+}
+
+/// The registered spec (cloned) — `wham workloads show`.
+pub fn get_spec(name: &str) -> Option<RegisteredSpec> {
+    global_registry().read().unwrap().get(name).cloned()
+}
+
+/// Spec-layer entries not shadowed by a Rust builtin, sorted by name.
+pub fn spec_entries() -> Vec<SpecEntry> {
+    global_registry().read().unwrap().entries()
+}
+
+/// Every resolvable workload: the Table-4 builtins (in zoo order)
+/// followed by the spec-layer entries (sorted by name). The single
+/// registry view behind `GET /models`, `wham models`, and
+/// `wham workloads list`.
+pub fn all_entries() -> Vec<SpecEntry> {
+    let mut out: Vec<SpecEntry> = crate::models::MODELS
+        .iter()
+        .map(|m| SpecEntry {
+            name: m.name.to_string(),
+            task: m.task.to_string(),
+            batch: m.batch,
+            accelerators: m.accelerators,
+            distributed_only: m.distributed_only,
+            source: Source::Builtin,
+        })
+        .collect();
+    out.extend(spec_entries());
+    out
+}
+
+/// Transformer hyper-parameters for a workload name: the builtin LLMs
+/// first, then any registered spec with a `transformer` section. This is
+/// what makes `wham global` / `wham partition` accept spec workloads.
+pub fn transformer_cfg(name: &str) -> Option<TransformerCfg> {
+    if crate::models::info(name).is_some() {
+        return crate::models::transformer_cfg(name);
+    }
+    global_registry().read().unwrap().transformer_cfg(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_reports_graph_shape() {
+        let r = lint(
+            r#"{"name":"lint-me","batch":2,"graph":[
+                {"op":"embed","elems":64,"params":32},
+                {"op":"linear","m":8,"n":8,"k":8}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.name, "lint-me");
+        assert_eq!(r.forward_ops, 2);
+        assert_eq!(r.forward_edges, 1);
+        assert!(r.training_ops > r.forward_ops);
+    }
+
+    #[test]
+    fn every_builtin_spec_lints_clean() {
+        for (file, text) in BUILTIN_SPECS {
+            let r = lint(text).unwrap_or_else(|e| panic!("{file}: {e}"));
+            assert!(r.forward_ops > 10, "{file} suspiciously small");
+        }
+    }
+
+    #[test]
+    fn global_registry_round_trip() {
+        let report = add_spec_text(
+            r#"{"name":"mod-test-mlp","batch":2,"graph":[
+                {"op":"linear","m":8,"n":8,"k":8},
+                {"op":"activation","elems":64}
+            ]}"#,
+            Source::Uploaded,
+        )
+        .unwrap();
+        let (g, batch) = resolve("mod-test-mlp").unwrap().unwrap();
+        assert_eq!(batch, 2);
+        assert_eq!(fingerprint(&g), report.fingerprint);
+        assert!(resolve("never-registered").is_none());
+        assert!(spec_entries().iter().any(|e| e.name == "mod-test-mlp"));
+    }
+
+    #[test]
+    fn transformer_cfg_prefers_builtins() {
+        let cfg = transformer_cfg("bert-base").unwrap();
+        assert_eq!(cfg.hidden, 768);
+        assert!(transformer_cfg("vgg16").is_none());
+        assert!(transformer_cfg("not-registered").is_none());
+    }
+}

@@ -1,0 +1,323 @@
+//! The layered workload registry.
+//!
+//! Three sources feed one map-backed index (no linear scans on the
+//! request path):
+//!
+//! 1. **Builtin** — specs embedded in the binary via `include_str!`
+//!    ([`BUILTIN_SPECS`]); the Table-4 Rust constructors also count as
+//!    builtin and always win lookups for their names.
+//! 2. **User** — `*.json` files discovered from `--workload-dir` /
+//!    `WHAM_WORKLOAD_DIR` ([`Registry::add_dir`]).
+//! 3. **Uploaded** — specs POSTed to a running service's `/workloads`.
+//!
+//! Later sources take precedence on name collisions (uploaded > user >
+//! builtin spec), except that Table-4 builtin names are reserved: a user
+//! or uploaded spec may not shadow them, so a cached fingerprint for
+//! `"bert-base"` always means the Table-4 BERT.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::spec::{parse_spec, WorkloadSpec};
+use super::SpecError;
+use crate::models::transformer::TransformerCfg;
+
+/// Shipped builtin specs, embedded at compile time. The first three
+/// re-express Table-4 builtins (one vision, one GNMT-class, one
+/// transformer LLM); `rust/tests/workload_spec.rs` pins their training
+/// graphs fingerprint-equal to the Rust constructors, which is the
+/// expressiveness proof for the spec language.
+pub const BUILTIN_SPECS: &[(&str, &str)] = &[
+    ("vgg16.json", include_str!("specs/vgg16.json")),
+    ("gnmt4.json", include_str!("specs/gnmt4.json")),
+    ("bert-base.json", include_str!("specs/bert-base.json")),
+];
+
+/// Which layer a registry entry came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Source {
+    Builtin = 0,
+    User = 1,
+    Uploaded = 2,
+}
+
+impl Source {
+    /// Wire label (`GET /models` `source` field).
+    pub fn label(self) -> &'static str {
+        match self {
+            Source::Builtin => "builtin",
+            Source::User => "user",
+            Source::Uploaded => "uploaded",
+        }
+    }
+}
+
+/// One registered spec.
+#[derive(Debug, Clone)]
+pub struct RegisteredSpec {
+    pub spec: WorkloadSpec,
+    pub source: Source,
+}
+
+/// Registry row surfaced by `GET /models` / `wham workloads list`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecEntry {
+    pub name: String,
+    pub task: String,
+    pub batch: u64,
+    pub accelerators: u64,
+    pub distributed_only: bool,
+    pub source: Source,
+}
+
+/// The spec layers of the workload registry (the Rust builtins stay in
+/// [`crate::models`]; [`crate::workload`]'s module-level helpers merge
+/// the two views).
+#[derive(Debug, Default)]
+pub struct Registry {
+    specs: HashMap<String, RegisteredSpec>,
+}
+
+impl Registry {
+    /// Empty registry (no builtin specs) — for tests.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Registry pre-loaded with the shipped builtin specs. Builtins are
+    /// validated by unit tests and the CI `workloads lint` step, so a
+    /// parse failure here is a packaging bug; the entry is skipped rather
+    /// than poisoning every caller.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::default();
+        for (file, text) in BUILTIN_SPECS {
+            match parse_spec(text) {
+                Ok(spec) => {
+                    r.specs.insert(
+                        spec.name.clone(),
+                        RegisteredSpec { spec, source: Source::Builtin },
+                    );
+                }
+                Err(e) => debug_assert!(false, "embedded spec {file} failed to parse: {e}"),
+            }
+        }
+        r
+    }
+
+    /// Number of registered specs (all layers).
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// True when no specs are registered.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Look up a spec by name (map-backed, O(1)).
+    pub fn get(&self, name: &str) -> Option<&RegisteredSpec> {
+        self.specs.get(name)
+    }
+
+    /// Register a validated spec. The caller is expected to have run
+    /// [`crate::workload::lint`]-level validation first (the module-level
+    /// `add_*` helpers do). Collisions: Table-4 builtin names are
+    /// rejected for non-builtin sources; an existing entry from a
+    /// higher-precedence source is kept (returns `Ok` without
+    /// replacing); same-or-lower precedence is replaced.
+    pub fn insert(&mut self, spec: WorkloadSpec, source: Source) -> Result<(), SpecError> {
+        if source != Source::Builtin && crate::models::info(&spec.name).is_some() {
+            return Err(SpecError {
+                path: format!("workload {:?}", spec.name),
+                message: "this name is reserved by a builtin Table-4 model".to_string(),
+            });
+        }
+        // The registry never evicts, and `/workloads` is unauthenticated:
+        // cap how many distinct uploaded names a process retains
+        // (re-uploading an existing name still replaces it).
+        const MAX_UPLOADED: usize = 1024;
+        if source == Source::Uploaded
+            && !self.specs.contains_key(&spec.name)
+            && self.specs.values().filter(|r| r.source == Source::Uploaded).count()
+                >= MAX_UPLOADED
+        {
+            return Err(SpecError {
+                path: format!("workload {:?}", spec.name),
+                message: format!(
+                    "uploaded-workload capacity reached ({MAX_UPLOADED} specs); restart the \
+                     service or reuse an existing name"
+                ),
+            });
+        }
+        match self.specs.get(&spec.name) {
+            Some(existing) if existing.source > source => Ok(()),
+            _ => {
+                self.specs.insert(spec.name.clone(), RegisteredSpec { spec, source });
+                Ok(())
+            }
+        }
+    }
+
+    /// Load every `*.json` spec in `dir` (sorted by file name) as
+    /// [`Source::User`] entries. Returns the registered names; the first
+    /// unreadable or invalid file aborts with its path in the error.
+    pub fn add_dir(&mut self, dir: &Path) -> Result<Vec<String>, SpecError> {
+        let fail = |m: String| SpecError { path: dir.display().to_string(), message: m };
+        let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+            .map_err(|e| fail(format!("cannot read workload dir: {e}")))?
+            .filter_map(|entry| entry.ok().map(|e| e.path()))
+            .filter(|p| p.extension() == Some(std::ffi::OsStr::new("json")))
+            .collect();
+        files.sort();
+        let mut names = Vec::with_capacity(files.len());
+        for path in files {
+            let text = std::fs::read_to_string(&path).map_err(|e| SpecError {
+                path: path.display().to_string(),
+                message: format!("cannot read spec file: {e}"),
+            })?;
+            let tag = |e: SpecError| SpecError {
+                path: format!("{}: {}", path.display(), e.path),
+                message: e.message,
+            };
+            let spec = parse_spec(&text).map_err(tag)?;
+            let report = super::lint_spec(&spec).map_err(tag)?;
+            self.insert(spec, Source::User).map_err(tag)?;
+            names.push(report.name);
+        }
+        Ok(names)
+    }
+
+    /// All spec entries whose names are not shadowed by a Rust builtin,
+    /// sorted by name.
+    pub fn entries(&self) -> Vec<SpecEntry> {
+        let mut out: Vec<SpecEntry> = self
+            .specs
+            .values()
+            .filter(|r| crate::models::info(&r.spec.name).is_none())
+            .map(|r| SpecEntry {
+                name: r.spec.name.clone(),
+                task: r.spec.task.clone(),
+                batch: r.spec.batch,
+                accelerators: r.spec.accelerators,
+                distributed_only: r.spec.distributed_only,
+                source: r.source,
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Transformer hyper-parameters of a registered spec, if its
+    /// `transformer` section opts it into the distributed paths.
+    pub fn transformer_cfg(&self, name: &str) -> Option<TransformerCfg> {
+        let r = self.specs.get(name)?;
+        let t = r.spec.transformer.as_ref()?;
+        Some(TransformerCfg {
+            layers: t.layers,
+            hidden: t.hidden,
+            heads: t.heads,
+            seq: t.seq,
+            batch: r.spec.batch,
+            vocab: t.vocab,
+            ffn_mult: t.ffn_mult,
+            tmp: 1,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(name: &str) -> WorkloadSpec {
+        parse_spec(&format!(
+            "{{\"name\":{:?},\"batch\":2,\"graph\":[{{\"op\":\"linear\",\"m\":4,\"n\":4,\"k\":4}}]}}",
+            name
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn builtin_specs_all_parse_and_load() {
+        let r = Registry::with_builtins();
+        assert_eq!(r.len(), BUILTIN_SPECS.len());
+        for name in ["vgg16", "gnmt4", "bert-base"] {
+            let e = r.get(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(e.source, Source::Builtin);
+            assert_eq!(e.spec.batch, crate::models::info(name).unwrap().batch);
+        }
+    }
+
+    #[test]
+    fn reserved_builtin_names_reject_user_specs() {
+        let mut r = Registry::empty();
+        let e = r.insert(tiny("bert-base"), Source::User).unwrap_err();
+        assert!(e.message.contains("reserved"), "{e}");
+        assert!(r.insert(tiny("my-model"), Source::User).is_ok());
+    }
+
+    #[test]
+    fn precedence_uploaded_over_user_over_builtin() {
+        let mut r = Registry::empty();
+        let mut a = tiny("m");
+        a.task = "builtin-spec".into();
+        // Builtin-source inserts are allowed any name.
+        r.insert(a, Source::Builtin).unwrap();
+        let mut b = tiny("m");
+        b.task = "user".into();
+        r.insert(b, Source::User).unwrap();
+        assert_eq!(r.get("m").unwrap().spec.task, "user");
+        let mut c = tiny("m");
+        c.task = "uploaded".into();
+        r.insert(c, Source::Uploaded).unwrap();
+        assert_eq!(r.get("m").unwrap().spec.task, "uploaded");
+        // A later user-layer load does not clobber the upload.
+        let mut d = tiny("m");
+        d.task = "user2".into();
+        r.insert(d, Source::User).unwrap();
+        assert_eq!(r.get("m").unwrap().spec.task, "uploaded");
+    }
+
+    #[test]
+    fn entries_hide_shadowed_builtins_and_sort() {
+        let mut r = Registry::with_builtins();
+        r.insert(tiny("zeta"), Source::User).unwrap();
+        r.insert(tiny("alpha"), Source::Uploaded).unwrap();
+        let names: Vec<String> = r.entries().iter().map(|e| e.name.clone()).collect();
+        // vgg16/gnmt4/bert-base are shadowed by the Rust builtins.
+        assert_eq!(names, vec!["alpha".to_string(), "zeta".to_string()]);
+    }
+
+    #[test]
+    fn uploaded_layer_has_a_capacity_cap() {
+        let mut r = Registry::empty();
+        for i in 0..1024 {
+            r.insert(tiny(&format!("u{i}")), Source::Uploaded).unwrap();
+        }
+        let e = r.insert(tiny("one-too-many"), Source::Uploaded).unwrap_err();
+        assert!(e.message.contains("capacity"), "{e}");
+        // Replacing an existing name is still allowed at capacity.
+        assert!(r.insert(tiny("u7"), Source::Uploaded).is_ok());
+        // And the user layer (operator-controlled) is not capped.
+        assert!(r.insert(tiny("from-disk"), Source::User).is_ok());
+    }
+
+    #[test]
+    fn transformer_cfg_needs_the_section() {
+        let mut r = Registry::empty();
+        r.insert(tiny("plain"), Source::User).unwrap();
+        assert!(r.transformer_cfg("plain").is_none());
+        let spec = parse_spec(
+            r#"{"name":"llm","batch":8,
+                "transformer":{"layers":4,"hidden":64,"heads":4,"seq":32,"vocab":100},
+                "graph":[{"op":"linear","m":4,"n":4,"k":4}]}"#,
+        )
+        .unwrap();
+        r.insert(spec, Source::User).unwrap();
+        let cfg = r.transformer_cfg("llm").unwrap();
+        assert_eq!(cfg.layers, 4);
+        assert_eq!(cfg.batch, 8);
+        assert_eq!(cfg.ffn_mult, 4, "ffn_mult defaults to 4");
+        assert_eq!(cfg.tmp, 1);
+    }
+}

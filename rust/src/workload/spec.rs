@@ -1,0 +1,792 @@
+//! The declarative workload spec: parsed form + symmetric JSON codec.
+//!
+//! A spec is a JSON document describing a DNN as data — hyper-parameters,
+//! then a dataflow program over a small set of layer kinds:
+//!
+//! | kind         | dimension fields                              | lowers to |
+//! |--------------|-----------------------------------------------|-----------|
+//! | `embed`      | `elems`, `params`, `intensity?` (2)           | element-wise lookup+add owning the table |
+//! | `linear`     | `m`, `n`, `k`, `weights?` (true), `params?`   | GEMM (`params` defaults to `k*n`; `weights:false` → 0) |
+//! | `conv`       | `batch?`, `in_c`, `out_c`, `k`\|`kh`+`kw`, `hw`\|`oh`+`ow`, `params?` | 2-D convolution (implicit GEMM) |
+//! | `norm`       | `type:"batch"` `elems`+`channels`, `type:"layer"` `rows`+`cols` | BatchNorm / LayerNorm |
+//! | `activation` | `elems`, `intensity?` (1)                     | element-wise |
+//! | `residual`   | `elems`, `intensity?` (1), ≥2 `inputs`        | element-wise join |
+//! | `pool`       | `elems`, `intensity?` (1)                     | reduction |
+//! | `softmax`    | `rows`, `cols`                                | row-wise softmax |
+//! | `attention`  | `tokens`, `dim`, `seq`, `softmax_rows?`, 3 `inputs` | scores GEMM + softmax + context GEMM |
+//!
+//! Every dimension is a [`Dim`]: a literal or an expression over the
+//! spec's `params` ([`crate::workload::expr`]). Items sequence implicitly
+//! (each op's default input is the previous item's output); `inputs`
+//! names earlier layers explicitly, with two reserved references:
+//! `"prev"` (previous output) and `"in"` (the enclosing block's input for
+//! the current iteration). A *block* (`{"block": name?, "repeat": N,
+//! "layers": [...]}`) repeats its body, chaining each iteration's output
+//! into the next — residual stacks, LSTM chunk chains, encoder layers.
+//!
+//! Parsing is strict: unknown fields, mistyped values, and reserved
+//! names are [`SpecError`]s carrying the item's path (`graph/enc[2]/q`).
+
+use std::collections::BTreeMap;
+
+use super::SpecError;
+use crate::util::json::{self, esc, JsonValue, Obj};
+
+/// One dimension: a literal or an expression over the spec params.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Dim {
+    Lit(u64),
+    Expr(String),
+}
+
+impl Dim {
+    /// Evaluate against resolved params.
+    pub fn eval(&self, params: &BTreeMap<String, u64>) -> Result<u64, String> {
+        match self {
+            Dim::Lit(v) => Ok(*v),
+            Dim::Expr(e) => super::expr::eval(e, params),
+        }
+    }
+
+    fn emit(&self) -> String {
+        match self {
+            Dim::Lit(v) => v.to_string(),
+            Dim::Expr(e) => esc(e),
+        }
+    }
+}
+
+/// Transformer hyper-parameters: opts a spec into the distributed
+/// pipeline/TMP paths (`wham global`, `wham partition`), which partition
+/// by layer rather than by lowered graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransformerSection {
+    pub layers: u64,
+    pub hidden: u64,
+    pub heads: u64,
+    pub seq: u64,
+    pub vocab: u64,
+    pub ffn_mult: u64,
+}
+
+/// Dense computation of one spec layer (field semantics in the module
+/// docs; lowering in [`crate::workload::lower`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerKind {
+    Embed { elems: Dim, params: Dim, intensity: Dim },
+    Linear { m: Dim, n: Dim, k: Dim, weights: bool, params: Option<Dim> },
+    Conv { batch: Dim, in_c: Dim, out_c: Dim, kh: Dim, kw: Dim, oh: Dim, ow: Dim, params: Option<Dim> },
+    BatchNorm { elems: Dim, channels: Dim },
+    LayerNorm { rows: Dim, cols: Dim },
+    /// `residual: true` lowers identically but is arity-checked as a
+    /// join (>= 2 inputs).
+    Activation { elems: Dim, intensity: Dim, residual: bool },
+    Pool { elems: Dim, intensity: Dim },
+    Softmax { rows: Dim, cols: Dim },
+    Attention { tokens: Dim, dim: Dim, seq: Dim, softmax_rows: Option<Dim> },
+}
+
+impl LayerKind {
+    /// Wire name of the kind (the `"op"` field).
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            LayerKind::Embed { .. } => "embed",
+            LayerKind::Linear { .. } => "linear",
+            LayerKind::Conv { .. } => "conv",
+            LayerKind::BatchNorm { .. } | LayerKind::LayerNorm { .. } => "norm",
+            LayerKind::Activation { residual: false, .. } => "activation",
+            LayerKind::Activation { residual: true, .. } => "residual",
+            LayerKind::Pool { .. } => "pool",
+            LayerKind::Softmax { .. } => "softmax",
+            LayerKind::Attention { .. } => "attention",
+        }
+    }
+}
+
+/// One operator item.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpSpec {
+    pub name: Option<String>,
+    /// `None` means "the previous item's output" (or no input for the
+    /// first item of the top-level sequence).
+    pub inputs: Option<Vec<String>>,
+    pub kind: LayerKind,
+}
+
+/// A repeatable sub-sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockSpec {
+    pub name: Option<String>,
+    pub repeat: Dim,
+    pub layers: Vec<Item>,
+}
+
+/// One entry of a `graph`/`layers` sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Item {
+    Op(OpSpec),
+    Block(BlockSpec),
+}
+
+/// A parsed workload spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub task: String,
+    /// Training batch size (the registry's `batch`, like Table 4).
+    pub batch: u64,
+    pub accelerators: u64,
+    pub distributed_only: bool,
+    pub transformer: Option<TransformerSection>,
+    /// Hyper-parameters, sorted by name; values may reference each other
+    /// (resolved to a fixed point by the lowering pass). `batch` is
+    /// injected from the top-level field and is reserved.
+    pub params: Vec<(String, Dim)>,
+    pub graph: Vec<Item>,
+}
+
+// ---- parsing ------------------------------------------------------------
+
+fn err(path: &str, message: impl Into<String>) -> SpecError {
+    SpecError { path: path.to_string(), message: message.into() }
+}
+
+/// Strict non-negative-integer JSON number.
+fn strict_u64(v: &JsonValue) -> Option<u64> {
+    match v {
+        JsonValue::Num(n)
+            if n.is_finite() && *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) =>
+        {
+            Some(*n as u64)
+        }
+        _ => None,
+    }
+}
+
+fn as_obj<'v>(v: &'v JsonValue, path: &str) -> Result<&'v BTreeMap<String, JsonValue>, SpecError> {
+    match v {
+        JsonValue::Obj(m) => Ok(m),
+        _ => Err(err(path, "must be a JSON object")),
+    }
+}
+
+fn check_fields(
+    o: &BTreeMap<String, JsonValue>,
+    allowed: &[&str],
+    path: &str,
+) -> Result<(), SpecError> {
+    for k in o.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(err(path, format!("unknown field {k:?} (allowed: {allowed:?})")));
+        }
+    }
+    Ok(())
+}
+
+fn get_str(o: &BTreeMap<String, JsonValue>, key: &str, path: &str) -> Result<String, SpecError> {
+    match o.get(key) {
+        Some(JsonValue::Str(s)) => Ok(s.clone()),
+        Some(_) => Err(err(path, format!("{key:?} must be a string"))),
+        None => Err(err(path, format!("missing required field {key:?}"))),
+    }
+}
+
+fn opt_str(
+    o: &BTreeMap<String, JsonValue>,
+    key: &str,
+    path: &str,
+) -> Result<Option<String>, SpecError> {
+    match o.get(key) {
+        None | Some(JsonValue::Null) => Ok(None),
+        Some(JsonValue::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => Err(err(path, format!("{key:?} must be a string"))),
+    }
+}
+
+fn get_u64(o: &BTreeMap<String, JsonValue>, key: &str, path: &str) -> Result<u64, SpecError> {
+    o.get(key)
+        .and_then(strict_u64)
+        .ok_or_else(|| err(path, format!("{key:?} must be a non-negative integer")))
+}
+
+fn opt_u64_or(
+    o: &BTreeMap<String, JsonValue>,
+    key: &str,
+    default: u64,
+    path: &str,
+) -> Result<u64, SpecError> {
+    match o.get(key) {
+        None | Some(JsonValue::Null) => Ok(default),
+        Some(v) => strict_u64(v)
+            .ok_or_else(|| err(path, format!("{key:?} must be a non-negative integer"))),
+    }
+}
+
+fn opt_bool_or(
+    o: &BTreeMap<String, JsonValue>,
+    key: &str,
+    default: bool,
+    path: &str,
+) -> Result<bool, SpecError> {
+    match o.get(key) {
+        None | Some(JsonValue::Null) => Ok(default),
+        Some(JsonValue::Bool(b)) => Ok(*b),
+        Some(_) => Err(err(path, format!("{key:?} must be a boolean"))),
+    }
+}
+
+fn parse_dim(v: &JsonValue, key: &str, path: &str) -> Result<Dim, SpecError> {
+    match v {
+        JsonValue::Str(s) if !s.trim().is_empty() => Ok(Dim::Expr(s.clone())),
+        _ => strict_u64(v).map(Dim::Lit).ok_or_else(|| {
+            err(path, format!("{key:?} must be a non-negative integer or an expression string"))
+        }),
+    }
+}
+
+fn get_dim(o: &BTreeMap<String, JsonValue>, key: &str, path: &str) -> Result<Dim, SpecError> {
+    match o.get(key) {
+        Some(v) => parse_dim(v, key, path),
+        None => Err(err(path, format!("missing required field {key:?}"))),
+    }
+}
+
+fn opt_dim(
+    o: &BTreeMap<String, JsonValue>,
+    key: &str,
+    path: &str,
+) -> Result<Option<Dim>, SpecError> {
+    match o.get(key) {
+        None | Some(JsonValue::Null) => Ok(None),
+        Some(v) => parse_dim(v, key, path).map(Some),
+    }
+}
+
+fn opt_dim_or(
+    o: &BTreeMap<String, JsonValue>,
+    key: &str,
+    default: Dim,
+    path: &str,
+) -> Result<Dim, SpecError> {
+    Ok(opt_dim(o, key, path)?.unwrap_or(default))
+}
+
+/// Names an item may bind; `prev`/`in` are reserved references.
+fn check_name(name: &Option<String>, path: &str) -> Result<(), SpecError> {
+    if let Some(n) = name {
+        if n.is_empty() || n == "prev" || n == "in" {
+            return Err(err(path, format!("{n:?} is not a usable layer name")));
+        }
+    }
+    Ok(())
+}
+
+fn parse_op(o: &BTreeMap<String, JsonValue>, path: &str) -> Result<OpSpec, SpecError> {
+    let name = opt_str(o, "name", path)?;
+    check_name(&name, path)?;
+    let inputs = match o.get("inputs") {
+        None | Some(JsonValue::Null) => None,
+        Some(JsonValue::Arr(a)) => {
+            let mut refs = Vec::with_capacity(a.len());
+            for r in a {
+                match r {
+                    JsonValue::Str(s) if !s.is_empty() => refs.push(s.clone()),
+                    _ => return Err(err(path, "\"inputs\" must be an array of layer names")),
+                }
+            }
+            Some(refs)
+        }
+        Some(_) => return Err(err(path, "\"inputs\" must be an array of layer names")),
+    };
+
+    let base = &["op", "name", "inputs"];
+    let allow = |extra: &[&str]| {
+        let mut v: Vec<&str> = base.to_vec();
+        v.extend_from_slice(extra);
+        v
+    };
+    let kind_name = get_str(o, "op", path)?;
+    let kind = match kind_name.as_str() {
+        "embed" => {
+            check_fields(o, &allow(&["elems", "params", "intensity"]), path)?;
+            LayerKind::Embed {
+                elems: get_dim(o, "elems", path)?,
+                params: opt_dim_or(o, "params", Dim::Lit(0), path)?,
+                intensity: opt_dim_or(o, "intensity", Dim::Lit(2), path)?,
+            }
+        }
+        "linear" => {
+            check_fields(o, &allow(&["m", "n", "k", "weights", "params"]), path)?;
+            LayerKind::Linear {
+                m: get_dim(o, "m", path)?,
+                n: get_dim(o, "n", path)?,
+                k: get_dim(o, "k", path)?,
+                weights: opt_bool_or(o, "weights", true, path)?,
+                params: opt_dim(o, "params", path)?,
+            }
+        }
+        "conv" => {
+            check_fields(
+                o,
+                &allow(&["batch", "in_c", "out_c", "k", "kh", "kw", "hw", "oh", "ow", "params"]),
+                path,
+            )?;
+            let square_k = opt_dim(o, "k", path)?;
+            let (kh, kw) = match square_k {
+                Some(k) => {
+                    if o.contains_key("kh") || o.contains_key("kw") {
+                        return Err(err(path, "give either \"k\" or both \"kh\" and \"kw\""));
+                    }
+                    (k.clone(), k)
+                }
+                None => (get_dim(o, "kh", path)?, get_dim(o, "kw", path)?),
+            };
+            let square_hw = opt_dim(o, "hw", path)?;
+            let (oh, ow) = match square_hw {
+                Some(hw) => {
+                    if o.contains_key("oh") || o.contains_key("ow") {
+                        return Err(err(path, "give either \"hw\" or both \"oh\" and \"ow\""));
+                    }
+                    (hw.clone(), hw)
+                }
+                None => (get_dim(o, "oh", path)?, get_dim(o, "ow", path)?),
+            };
+            LayerKind::Conv {
+                batch: opt_dim_or(o, "batch", Dim::Expr("batch".to_string()), path)?,
+                in_c: get_dim(o, "in_c", path)?,
+                out_c: get_dim(o, "out_c", path)?,
+                kh,
+                kw,
+                oh,
+                ow,
+                params: opt_dim(o, "params", path)?,
+            }
+        }
+        "norm" => match get_str(o, "type", path)?.as_str() {
+            "batch" => {
+                check_fields(o, &allow(&["type", "elems", "channels"]), path)?;
+                LayerKind::BatchNorm {
+                    elems: get_dim(o, "elems", path)?,
+                    channels: get_dim(o, "channels", path)?,
+                }
+            }
+            "layer" => {
+                check_fields(o, &allow(&["type", "rows", "cols"]), path)?;
+                LayerKind::LayerNorm {
+                    rows: get_dim(o, "rows", path)?,
+                    cols: get_dim(o, "cols", path)?,
+                }
+            }
+            other => {
+                return Err(err(
+                    path,
+                    format!("norm \"type\" must be \"batch\" or \"layer\", got {other:?}"),
+                ))
+            }
+        },
+        "activation" | "residual" => {
+            check_fields(o, &allow(&["elems", "intensity"]), path)?;
+            LayerKind::Activation {
+                elems: get_dim(o, "elems", path)?,
+                intensity: opt_dim_or(o, "intensity", Dim::Lit(1), path)?,
+                residual: kind_name == "residual",
+            }
+        }
+        "pool" => {
+            check_fields(o, &allow(&["elems", "intensity"]), path)?;
+            LayerKind::Pool {
+                elems: get_dim(o, "elems", path)?,
+                intensity: opt_dim_or(o, "intensity", Dim::Lit(1), path)?,
+            }
+        }
+        "softmax" => {
+            check_fields(o, &allow(&["rows", "cols"]), path)?;
+            LayerKind::Softmax { rows: get_dim(o, "rows", path)?, cols: get_dim(o, "cols", path)? }
+        }
+        "attention" => {
+            check_fields(o, &allow(&["tokens", "dim", "seq", "softmax_rows"]), path)?;
+            LayerKind::Attention {
+                tokens: get_dim(o, "tokens", path)?,
+                dim: get_dim(o, "dim", path)?,
+                seq: get_dim(o, "seq", path)?,
+                softmax_rows: opt_dim(o, "softmax_rows", path)?,
+            }
+        }
+        other => {
+            return Err(err(
+                path,
+                format!(
+                    "unknown op kind {other:?} (known: embed, linear, conv, norm, activation, \
+                     residual, pool, softmax, attention)"
+                ),
+            ))
+        }
+    };
+    Ok(OpSpec { name, inputs, kind })
+}
+
+fn parse_item(v: &JsonValue, path: &str) -> Result<Item, SpecError> {
+    let o = as_obj(v, path)?;
+    if o.contains_key("op") {
+        return Ok(Item::Op(parse_op(o, path)?));
+    }
+    if o.contains_key("layers") {
+        check_fields(o, &["block", "repeat", "layers"], path)?;
+        let name = opt_str(o, "block", path)?;
+        check_name(&name, path)?;
+        let bpath = match &name {
+            Some(n) => format!("{path}/{n}"),
+            None => path.to_string(),
+        };
+        let layers = parse_items(
+            o.get("layers").unwrap(),
+            &format!("{bpath}.layers"),
+        )?;
+        if layers.is_empty() {
+            return Err(err(&bpath, "\"layers\" must not be empty"));
+        }
+        return Ok(Item::Block(BlockSpec {
+            name,
+            repeat: opt_dim_or(o, "repeat", Dim::Lit(1), &bpath)?,
+            layers,
+        }));
+    }
+    Err(err(path, "item must be an op ({\"op\": ...}) or a block ({\"layers\": [...]})"))
+}
+
+fn parse_items(v: &JsonValue, path: &str) -> Result<Vec<Item>, SpecError> {
+    match v {
+        JsonValue::Arr(a) => a
+            .iter()
+            .enumerate()
+            .map(|(i, item)| parse_item(item, &format!("{path}[{i}]")))
+            .collect(),
+        _ => Err(err(path, "must be an array of items")),
+    }
+}
+
+fn parse_transformer(v: &JsonValue, path: &str) -> Result<TransformerSection, SpecError> {
+    let o = as_obj(v, path)?;
+    check_fields(o, &["layers", "hidden", "heads", "seq", "vocab", "ffn_mult"], path)?;
+    let t = TransformerSection {
+        layers: get_u64(o, "layers", path)?,
+        hidden: get_u64(o, "hidden", path)?,
+        heads: get_u64(o, "heads", path)?,
+        seq: get_u64(o, "seq", path)?,
+        vocab: get_u64(o, "vocab", path)?,
+        ffn_mult: opt_u64_or(o, "ffn_mult", 4, path)?,
+    };
+    // The pipeline partitioner divides by these; zeros must be rejected
+    // here, not panic a `/global` worker later.
+    for (field, v) in [
+        ("layers", t.layers),
+        ("hidden", t.hidden),
+        ("heads", t.heads),
+        ("seq", t.seq),
+        ("vocab", t.vocab),
+        ("ffn_mult", t.ffn_mult),
+    ] {
+        if v == 0 {
+            return Err(err(path, format!("{field:?} must be >= 1")));
+        }
+    }
+    Ok(t)
+}
+
+/// Parse a spec document from JSON text.
+pub fn parse_spec(text: &str) -> Result<WorkloadSpec, SpecError> {
+    let v = json::parse(text).map_err(|e| err("spec", format!("invalid JSON: {e}")))?;
+    let o = as_obj(&v, "spec")?;
+    check_fields(
+        o,
+        &["name", "task", "batch", "accelerators", "distributed_only", "transformer", "params", "graph"],
+        "spec",
+    )?;
+    let name = get_str(o, "name", "spec")?;
+    if name.is_empty() {
+        return Err(err("spec", "\"name\" must not be empty"));
+    }
+    let batch = get_u64(o, "batch", "spec")?;
+    if batch == 0 {
+        return Err(err("spec", "\"batch\" must be >= 1"));
+    }
+    let params = match o.get("params") {
+        None | Some(JsonValue::Null) => Vec::new(),
+        Some(pv) => {
+            let po = as_obj(pv, "spec.params")?;
+            // Fixed-point resolution is O(n^2) worst-case; bound n so an
+            // untrusted upload cannot pin a worker on param chains.
+            const MAX_PARAMS: usize = 4096;
+            if po.len() > MAX_PARAMS {
+                return Err(err(
+                    "spec.params",
+                    format!("at most {MAX_PARAMS} hyper-parameters are supported"),
+                ));
+            }
+            let mut out = Vec::with_capacity(po.len());
+            for (k, v) in po {
+                if k == "batch" {
+                    return Err(err(
+                        "spec.params",
+                        "\"batch\" is reserved (injected from the top-level field)",
+                    ));
+                }
+                out.push((k.clone(), parse_dim(v, k, "spec.params")?));
+            }
+            out
+        }
+    };
+    let graph = parse_items(
+        o.get("graph").ok_or_else(|| err("spec", "missing required field \"graph\""))?,
+        "graph",
+    )?;
+    if graph.is_empty() {
+        return Err(err("spec", "\"graph\" must not be empty"));
+    }
+    Ok(WorkloadSpec {
+        name,
+        task: opt_str(o, "task", "spec")?.unwrap_or_else(|| "custom".to_string()),
+        batch,
+        accelerators: opt_u64_or(o, "accelerators", 1, "spec")?,
+        distributed_only: opt_bool_or(o, "distributed_only", false, "spec")?,
+        transformer: match o.get("transformer") {
+            None | Some(JsonValue::Null) => None,
+            Some(t) => Some(parse_transformer(t, "spec.transformer")?),
+        },
+        params,
+        graph,
+    })
+}
+
+// ---- serialization ------------------------------------------------------
+
+fn emit_op(op: &OpSpec) -> String {
+    let mut o = Obj::new().str("op", op.kind.wire_name());
+    if let Some(n) = &op.name {
+        o = o.str("name", n);
+    }
+    if let Some(inputs) = &op.inputs {
+        o = o.raw("inputs", &json::str_arr(inputs.iter().map(String::as_str)));
+    }
+    o = match &op.kind {
+        LayerKind::Embed { elems, params, intensity } => o
+            .raw("elems", &elems.emit())
+            .raw("params", &params.emit())
+            .raw("intensity", &intensity.emit()),
+        LayerKind::Linear { m, n, k, weights, params } => {
+            let mut o = o
+                .raw("m", &m.emit())
+                .raw("n", &n.emit())
+                .raw("k", &k.emit())
+                .bool("weights", *weights);
+            if let Some(p) = params {
+                o = o.raw("params", &p.emit());
+            }
+            o
+        }
+        LayerKind::Conv { batch, in_c, out_c, kh, kw, oh, ow, params } => {
+            let mut o = o
+                .raw("batch", &batch.emit())
+                .raw("in_c", &in_c.emit())
+                .raw("out_c", &out_c.emit())
+                .raw("kh", &kh.emit())
+                .raw("kw", &kw.emit())
+                .raw("oh", &oh.emit())
+                .raw("ow", &ow.emit());
+            if let Some(p) = params {
+                o = o.raw("params", &p.emit());
+            }
+            o
+        }
+        LayerKind::BatchNorm { elems, channels } => o
+            .str("type", "batch")
+            .raw("elems", &elems.emit())
+            .raw("channels", &channels.emit()),
+        LayerKind::LayerNorm { rows, cols } => {
+            o.str("type", "layer").raw("rows", &rows.emit()).raw("cols", &cols.emit())
+        }
+        LayerKind::Activation { elems, intensity, .. } => {
+            o.raw("elems", &elems.emit()).raw("intensity", &intensity.emit())
+        }
+        LayerKind::Pool { elems, intensity } => {
+            o.raw("elems", &elems.emit()).raw("intensity", &intensity.emit())
+        }
+        LayerKind::Softmax { rows, cols } => {
+            o.raw("rows", &rows.emit()).raw("cols", &cols.emit())
+        }
+        LayerKind::Attention { tokens, dim, seq, softmax_rows } => {
+            let mut o = o
+                .raw("tokens", &tokens.emit())
+                .raw("dim", &dim.emit())
+                .raw("seq", &seq.emit());
+            if let Some(r) = softmax_rows {
+                o = o.raw("softmax_rows", &r.emit());
+            }
+            o
+        }
+    };
+    o.finish()
+}
+
+fn emit_item(item: &Item) -> String {
+    match item {
+        Item::Op(op) => emit_op(op),
+        Item::Block(b) => {
+            let mut o = Obj::new();
+            if let Some(n) = &b.name {
+                o = o.str("block", n);
+            }
+            o.raw("repeat", &b.repeat.emit())
+                .raw("layers", &json::arr(b.layers.iter().map(emit_item)))
+                .finish()
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// Canonical wire form; `parse_spec(to_json(s))` reproduces `s`
+    /// field-for-field (defaults made explicit, conv sugar expanded).
+    pub fn to_json(&self) -> String {
+        let mut o = Obj::new()
+            .str("name", &self.name)
+            .str("task", &self.task)
+            .u64("batch", self.batch)
+            .u64("accelerators", self.accelerators)
+            .bool("distributed_only", self.distributed_only);
+        if let Some(t) = &self.transformer {
+            o = o.raw(
+                "transformer",
+                &Obj::new()
+                    .u64("layers", t.layers)
+                    .u64("hidden", t.hidden)
+                    .u64("heads", t.heads)
+                    .u64("seq", t.seq)
+                    .u64("vocab", t.vocab)
+                    .u64("ffn_mult", t.ffn_mult)
+                    .finish(),
+            );
+        }
+        if !self.params.is_empty() {
+            let mut p = Obj::new();
+            for (k, d) in &self.params {
+                p = p.raw(k, &d.emit());
+            }
+            o = o.raw("params", &p.finish());
+        }
+        o.raw("graph", &json::arr(self.graph.iter().map(emit_item))).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"{
+        "name": "tiny", "task": "test", "batch": 2,
+        "params": {"h": 8, "bs": "batch*4"},
+        "graph": [
+            {"op": "embed", "elems": "bs*h", "params": "16*h"},
+            {"block": "body", "repeat": 2, "layers": [
+                {"op": "linear", "name": "fc", "m": "bs", "n": "h", "k": "h"},
+                {"op": "residual", "inputs": ["fc", "in"], "elems": "bs*h"}
+            ]},
+            {"op": "linear", "weights": false, "m": "bs", "n": 10, "k": "h"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_round_trips() {
+        let s = parse_spec(TINY).unwrap();
+        assert_eq!(s.name, "tiny");
+        assert_eq!(s.batch, 2);
+        assert_eq!(s.graph.len(), 3);
+        let emitted = s.to_json();
+        let s2 = parse_spec(&emitted).unwrap();
+        assert_eq!(s, s2, "parse(to_json(s)) must reproduce s");
+        assert_eq!(s2.to_json(), emitted, "second serialization must be byte-identical");
+    }
+
+    #[test]
+    fn conv_sugar_expands() {
+        let s = parse_spec(
+            r#"{"name":"c","batch":4,"graph":[
+                {"op":"conv","in_c":3,"out_c":8,"k":3,"hw":16}
+            ]}"#,
+        )
+        .unwrap();
+        match &s.graph[0] {
+            Item::Op(op) => match &op.kind {
+                LayerKind::Conv { kh, kw, oh, ow, batch, .. } => {
+                    assert_eq!(kh, &Dim::Lit(3));
+                    assert_eq!(kw, &Dim::Lit(3));
+                    assert_eq!(oh, &Dim::Lit(16));
+                    assert_eq!(ow, &Dim::Lit(16));
+                    assert_eq!(batch, &Dim::Expr("batch".to_string()));
+                }
+                other => panic!("not a conv: {other:?}"),
+            },
+            other => panic!("not an op: {other:?}"),
+        }
+        // Round-trips through the expanded form.
+        assert!(parse_spec(&s.to_json()).is_ok());
+    }
+
+    #[test]
+    fn unknown_fields_and_kinds_carry_paths() {
+        let e = parse_spec(
+            r#"{"name":"x","batch":1,"graph":[{"op":"linear","m":1,"n":1,"k":1,"parms":5}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.path.contains("graph[0]"), "{e}");
+        assert!(e.message.contains("parms"), "{e}");
+
+        let e = parse_spec(r#"{"name":"x","batch":1,"graph":[{"op":"lstm"}]}"#).unwrap_err();
+        assert!(e.message.contains("unknown op kind"), "{e}");
+
+        // Fields of the *other* norm type are rejected, not ignored.
+        let e = parse_spec(
+            r#"{"name":"x","batch":1,"graph":[
+                {"op":"norm","type":"layer","rows":4,"cols":4,"elems":99}
+            ]}"#,
+        )
+        .unwrap_err();
+        assert!(e.message.contains("elems"), "{e}");
+    }
+
+    #[test]
+    fn reserved_names_rejected() {
+        let e = parse_spec(
+            r#"{"name":"x","batch":1,"graph":[{"op":"pool","name":"prev","elems":4}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.message.contains("prev"), "{e}");
+        let e = parse_spec(r#"{"name":"x","batch":1,"params":{"batch":3},"graph":[{"op":"pool","elems":4}]}"#)
+            .unwrap_err();
+        assert!(e.message.contains("reserved"), "{e}");
+    }
+
+    #[test]
+    fn transformer_section_rejects_zeros() {
+        let e = parse_spec(
+            r#"{"name":"t","batch":1,
+                "transformer":{"layers":0,"hidden":64,"heads":4,"seq":32,"vocab":100},
+                "graph":[{"op":"pool","elems":4}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.message.contains("layers"), "{e}");
+        assert!(parse_spec(
+            r#"{"name":"t","batch":1,
+                "transformer":{"layers":2,"hidden":64,"heads":4,"seq":32,"vocab":100},
+                "graph":[{"op":"pool","elems":4}]}"#,
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn missing_required_fields_error() {
+        assert!(parse_spec(r#"{"batch":1,"graph":[]}"#).is_err());
+        assert!(parse_spec(r#"{"name":"x","graph":[]}"#).is_err());
+        assert!(parse_spec(r#"{"name":"x","batch":1,"graph":[]}"#).is_err());
+        assert!(parse_spec(r#"{"name":"x","batch":0,"graph":[{"op":"pool","elems":1}]}"#).is_err());
+    }
+}

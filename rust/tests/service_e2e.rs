@@ -136,13 +136,77 @@ fn restart_with_same_db_answers_without_scheduler() {
 }
 
 #[test]
+fn uploaded_spec_is_mined_end_to_end() {
+    let h = boot(None, 2);
+
+    // A tiny custom workload, defined purely as data.
+    let spec = r#"{
+        "name": "e2e-tiny", "task": "test", "batch": 2,
+        "params": {"h": 8, "bs": "batch*4"},
+        "graph": [
+            {"op": "embed", "elems": "bs*h", "params": "16*h"},
+            {"op": "linear", "name": "fc1", "m": "bs", "n": "h", "k": "h"},
+            {"op": "activation", "elems": "bs*h"},
+            {"op": "linear", "m": "bs", "n": 4, "k": "h"}
+        ]
+    }"#;
+    let (status, up) = get_json(&h, "POST", "/workloads", Some(spec));
+    assert_eq!(status, 200, "upload failed: {up:?}");
+    assert_eq!(up.get("name").unwrap().as_str(), Some("e2e-tiny"));
+    assert_eq!(up.get("source").unwrap().as_str(), Some("uploaded"));
+    let fp = up.get("fingerprint").unwrap().as_str().unwrap().to_string();
+    assert_eq!(fp.len(), 16);
+    assert!(u(&up, &["training_ops"]) > u(&up, &["forward_ops"]));
+
+    // The uploaded name is now searchable like any builtin, and the
+    // reply's fingerprint matches the upload's (one design-DB context).
+    let (status, cold) = get_json(&h, "POST", "/search", Some("{\"model\":\"e2e-tiny\"}"));
+    assert_eq!(status, 200, "search failed: {cold:?}");
+    assert_eq!(cold.get("fingerprint").unwrap().as_str().unwrap(), fp);
+    assert!(u(&cold, &["scheduler_evals"]) > 0);
+
+    // And warm-cached by fingerprint, exactly like builtins.
+    let (_, warm) = get_json(&h, "POST", "/search", Some("{\"model\":\"e2e-tiny\"}"));
+    assert_eq!(u(&warm, &["scheduler_evals"]), 0, "repeat search must hit the design DB");
+
+    // GET /models lists it with its registry layer.
+    let (_, models) = get_json(&h, "GET", "/models", None);
+    let list = models.get("models").unwrap().as_arr().unwrap();
+    assert!(list.iter().any(|m| m.get("name").unwrap().as_str() == Some("e2e-tiny")
+        && m.get("source").unwrap().as_str() == Some("uploaded")));
+
+    // Malformed specs are 400s carrying the layer path.
+    let bad = "{\"name\":\"bad\",\"batch\":1,\"graph\":[{\"op\":\"linear\",\"name\":\"z\",\"m\":0,\"n\":4,\"k\":4}]}";
+    let (status, err) = get_json(&h, "POST", "/workloads", Some(bad));
+    assert_eq!(status, 400);
+    assert!(
+        err.get("error").unwrap().as_str().unwrap().contains("graph/z"),
+        "diagnostic must carry the layer path: {err:?}"
+    );
+
+    // Builtin names are reserved.
+    let shadow = "{\"name\":\"bert-base\",\"batch\":1,\"graph\":[{\"op\":\"linear\",\"m\":4,\"n\":4,\"k\":4}]}";
+    let (status, err) = get_json(&h, "POST", "/workloads", Some(shadow));
+    assert_eq!(status, 400, "{err:?}");
+
+    // Wrong method on the new endpoint.
+    let (status, _) = get_json(&h, "GET", "/workloads", None);
+    assert_eq!(status, 405);
+}
+
+#[test]
 fn models_evaluate_and_errors() {
     let h = boot(None, 2);
 
     let (status, models) = get_json(&h, "GET", "/models", None);
     assert_eq!(status, 200);
     let list = models.get("models").unwrap().as_arr().unwrap();
-    assert_eq!(list.len(), 11);
+    // The workload registry is process-global, so other tests in this
+    // binary may have registered extra specs; the builtin layer is
+    // always exactly the Table-4 zoo.
+    let builtin =
+        list.iter().filter(|m| m.get("source").unwrap().as_str() == Some("builtin")).count();
+    assert_eq!(builtin, 11);
     assert!(list.iter().any(|m| m.get("name").unwrap().as_str() == Some("bert-base")));
 
     let (status, ev) = get_json(

@@ -1,0 +1,300 @@
+//! Integration tests of `wham::workload` — the declarative spec
+//! subsystem.
+//!
+//! The load-bearing guarantee: the spec language is expressive enough to
+//! re-express the builtin zoo *exactly*. The three shipped specs (one
+//! vision, one GNMT-class, one transformer LLM) must produce forward and
+//! training graphs whose structural fingerprints are identical to the
+//! Rust constructors' — same ops, shapes, edges, parameter counts — so a
+//! design database mined against a builtin stays valid for the spec form
+//! and vice versa. On top of that: serialize/parse round-trip goldens, a
+//! shape-inference property test (every generated valid spec lowers to a
+//! `validate()`-clean graph, deterministically), and the end-to-end
+//! `--workload-dir` path acceptance criterion.
+
+use wham::api::{resolve_workload, GlobalRequest, SearchRequest, Session};
+use wham::cost::native::NativeCost;
+use wham::graph::autodiff::Optimizer;
+use wham::graph::fingerprint;
+use wham::util::prop::forall;
+use wham::workload::{self, lower, parse_spec, Source, BUILTIN_SPECS};
+
+fn builtin_text(file: &str) -> &'static str {
+    BUILTIN_SPECS
+        .iter()
+        .find(|(f, _)| *f == file)
+        .unwrap_or_else(|| panic!("{file} not shipped"))
+        .1
+}
+
+#[test]
+fn shipped_specs_fingerprint_identical_to_rust_constructors() {
+    for (file, name) in
+        [("vgg16.json", "vgg16"), ("gnmt4.json", "gnmt4"), ("bert-base.json", "bert-base")]
+    {
+        let spec = parse_spec(builtin_text(file)).unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert_eq!(spec.name, name);
+        assert_eq!(spec.batch, wham::models::info(name).unwrap().batch, "{name} batch");
+
+        let spec_fwd = lower::lower(&spec).unwrap_or_else(|e| panic!("{file}: {e}"));
+        let rust_fwd = wham::models::forward(name).unwrap();
+        assert_eq!(spec_fwd.len(), rust_fwd.len(), "{name}: forward op count");
+        assert_eq!(spec_fwd.num_edges(), rust_fwd.num_edges(), "{name}: forward edge count");
+        assert_eq!(spec_fwd.param_elems(), rust_fwd.param_elems(), "{name}: parameter count");
+        assert_eq!(
+            fingerprint(&spec_fwd),
+            fingerprint(&rust_fwd),
+            "{name}: forward graphs must be structurally identical"
+        );
+
+        let spec_training = lower::training(&spec).unwrap();
+        let rust_training = wham::models::training(name, Optimizer::Adam).unwrap();
+        assert_eq!(
+            fingerprint(&spec_training),
+            fingerprint(&rust_training),
+            "{name}: training graphs must be structurally identical"
+        );
+    }
+}
+
+#[test]
+fn spec_serialization_round_trips_golden() {
+    for (file, text) in BUILTIN_SPECS {
+        let spec = parse_spec(text).unwrap_or_else(|e| panic!("{file}: {e}"));
+        let emitted = spec.to_json();
+        let reparsed = parse_spec(&emitted)
+            .unwrap_or_else(|e| panic!("{file}: canonical form does not reparse: {e}"));
+        assert_eq!(reparsed, spec, "{file}: parse(to_json(spec)) must reproduce the spec");
+        assert_eq!(
+            reparsed.to_json(),
+            emitted,
+            "{file}: second serialization must be byte-identical"
+        );
+        // And the canonical form lowers to the same graph.
+        assert_eq!(
+            fingerprint(&lower::training(&reparsed).unwrap()),
+            fingerprint(&lower::training(&spec).unwrap()),
+            "{file}: round-trip must preserve the lowered graph"
+        );
+    }
+}
+
+/// Build a random — but by construction valid — spec document.
+fn random_spec_json(g: &mut wham::util::prop::Gen) -> String {
+    let dim = |g: &mut wham::util::prop::Gen| g.rng.range(1, 32);
+    let mut items: Vec<String> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+
+    let op = |g: &mut wham::util::prop::Gen, names: &[String], idx: usize| -> (String, String) {
+        let first = idx == 0;
+        let name = format!("n{idx}");
+        let d1 = dim(g);
+        let d2 = dim(g);
+        let d3 = dim(g);
+        // Explicit inputs sometimes reference an earlier named op;
+        // "prev" only once a previous item exists.
+        let inputs = if !first && !names.is_empty() && g.rng.chance(0.4) {
+            let a = g.rng.choose(names).clone();
+            if g.rng.chance(0.5) {
+                format!(",\"inputs\":[{:?},\"prev\"]", a)
+            } else {
+                format!(",\"inputs\":[{a:?}]")
+            }
+        } else if first {
+            ",\"inputs\":[]".to_string()
+        } else {
+            String::new()
+        };
+        let body = match g.rng.below(7) {
+            0 => format!("\"op\":\"linear\",\"m\":{d1},\"n\":{d2},\"k\":{d3}"),
+            1 => format!("\"op\":\"activation\",\"elems\":{},\"intensity\":{}", d1 * d2, 1 + g.rng.below(5)),
+            2 => format!("\"op\":\"pool\",\"elems\":{}", d1 * d2),
+            3 => format!("\"op\":\"softmax\",\"rows\":{d1},\"cols\":{d2}"),
+            4 => format!(
+                "\"op\":\"conv\",\"in_c\":{d1},\"out_c\":{d2},\"k\":3,\"hw\":{}",
+                1 + g.rng.below(16)
+            ),
+            5 => format!("\"op\":\"norm\",\"type\":\"layer\",\"rows\":{d1},\"cols\":{d2}"),
+            _ => format!("\"op\":\"embed\",\"elems\":{},\"params\":{}", d1 * d2, d2 * d3),
+        };
+        (format!("{{{body},\"name\":{name:?}{inputs}}}"), name)
+    };
+
+    let n_items = 1 + g.len(6);
+    for i in 0..n_items {
+        if i > 0 && g.rng.chance(0.3) {
+            // A block of 1-3 ops repeated 1-3 times; inner ops chain by
+            // default and may reference the block input via "in".
+            let reps = 1 + g.rng.below(3);
+            let n_inner = 1 + g.rng.below(3);
+            let mut inner = Vec::new();
+            for j in 0..n_inner {
+                let e = dim(g) * dim(g);
+                if j > 0 && g.rng.chance(0.3) {
+                    inner.push(format!(
+                        "{{\"op\":\"residual\",\"inputs\":[\"prev\",\"in\"],\"elems\":{e}}}"
+                    ));
+                } else {
+                    inner.push(format!("{{\"op\":\"activation\",\"elems\":{e}}}"));
+                }
+            }
+            items.push(format!(
+                "{{\"block\":\"b{i}\",\"repeat\":{reps},\"layers\":[{}]}}",
+                inner.join(",")
+            ));
+            names.push(format!("b{i}"));
+        } else {
+            let (text, name) = op(g, &names, i);
+            items.push(text);
+            names.push(name);
+        }
+    }
+    format!(
+        "{{\"name\":\"prop-{}\",\"batch\":{},\"graph\":[{}]}}",
+        g.rng.below(1_000_000),
+        1 + g.rng.below(8),
+        items.join(",")
+    )
+}
+
+#[test]
+fn random_valid_specs_always_lower_to_clean_graphs() {
+    forall(
+        0x5EED_0A11,
+        40,
+        random_spec_json,
+        |text| {
+            let spec = parse_spec(text).map_err(|e| format!("parse: {e}"))?;
+            let fwd = lower::lower(&spec).map_err(|e| format!("lower: {e}"))?;
+            wham::graph::validate::validate(&fwd).map_err(|e| format!("validate fwd: {e}"))?;
+            let t = lower::training(&spec).map_err(|e| format!("training: {e}"))?;
+            wham::graph::validate::validate(&t).map_err(|e| format!("validate training: {e}"))?;
+            // Lowering is deterministic: same spec, same fingerprint.
+            let t2 = lower::training(&spec).map_err(|e| format!("relower: {e}"))?;
+            if fingerprint(&t) != fingerprint(&t2) {
+                return Err("lowering is nondeterministic".to_string());
+            }
+            // Serialization round-trip preserves the graph.
+            let spec2 = parse_spec(&spec.to_json()).map_err(|e| format!("reparse: {e}"))?;
+            if fingerprint(&lower::training(&spec2).map_err(|e| e.to_string())?)
+                != fingerprint(&t)
+            {
+                return Err("round-trip changed the lowered graph".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn workload_dir_spec_mines_end_to_end_without_recompiling() {
+    // Acceptance criterion: a JSON file dropped in a workload dir is
+    // mineable by name through the same path `wham search` uses.
+    let dir = std::env::temp_dir().join(format!("wham-workload-dir-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("dir-tiny-mlp.json"),
+        r#"{
+            "name": "dir-tiny-mlp", "task": "test", "batch": 2,
+            "params": {"h": 8},
+            "graph": [
+                {"op": "embed", "elems": "8*h", "params": "4*h"},
+                {"op": "linear", "m": 8, "n": "h", "k": "h"},
+                {"op": "activation", "elems": "8*h"}
+            ]
+        }"#,
+    )
+    .unwrap();
+    // Non-spec files are ignored.
+    std::fs::write(dir.join("README.txt"), "not a spec").unwrap();
+
+    let names = workload::add_dir(&dir).unwrap();
+    assert_eq!(names, vec!["dir-tiny-mlp".to_string()]);
+
+    let (graph, batch) = resolve_workload("dir-tiny-mlp").unwrap();
+    assert_eq!(batch, 2);
+    assert!(graph.len() >= 3);
+
+    let mut session = Session::with_backend(Box::new(NativeCost));
+    let reply = session.search(&SearchRequest::new("dir-tiny-mlp")).unwrap();
+    assert_eq!(reply.model, "dir-tiny-mlp");
+    assert_eq!(reply.fingerprint, fingerprint(&graph));
+    assert!(reply.best.config.in_template());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn invalid_dir_specs_fail_with_file_and_path() {
+    let dir = std::env::temp_dir().join(format!("wham-workload-bad-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("broken.json"),
+        r#"{"name":"broken","batch":1,"graph":[{"op":"linear","name":"z","m":0,"n":4,"k":4}]}"#,
+    )
+    .unwrap();
+    let e = workload::add_dir(&dir).unwrap_err();
+    assert!(e.path.contains("broken.json"), "{e}");
+    assert!(e.path.contains("graph/z"), "{e}");
+    assert!(resolve_workload("broken").is_err(), "invalid specs must not register");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn llama_example_spec_lints_registers_and_partitions() {
+    // The shipped non-Table-4 example: a llama-style decoder with a
+    // `transformer` section, so it is eligible for the distributed paths.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/workloads/llama-decoder.json");
+    let text = std::fs::read_to_string(path).unwrap();
+    let report = workload::lint(&text).unwrap();
+    assert_eq!(report.name, "llama-decoder");
+    assert_eq!(report.batch, 8);
+    // 1 embed + 8 layers x 18 ops (16 items, attention lowers to 3) +
+    // final norm + head.
+    assert_eq!(report.forward_ops, 1 + 8 * 18 + 2);
+    assert!(report.training_ops > report.forward_ops);
+
+    workload::add_spec_text(&text, Source::User).unwrap();
+    let cfg = workload::transformer_cfg("llama-decoder").expect("transformer section");
+    assert_eq!((cfg.layers, cfg.hidden, cfg.tmp), (8, 1024, 1));
+
+    // `wham global`-shaped validation partitions it like a builtin LLM.
+    let plan = GlobalRequest::new().models(["llama-decoder"]).depth(2).validate().unwrap();
+    assert_eq!(plan.parts.len(), 1);
+    assert_eq!(plan.parts[0].stages.len(), 2);
+    assert!(plan.parts[0].stages.iter().all(|s| s.graph.len() > 10));
+
+    // A spec without the section still 404s on /global.
+    workload::add_spec_text(
+        r#"{"name":"no-tf-section","batch":1,"graph":[{"op":"linear","m":4,"n":4,"k":4}]}"#,
+        Source::User,
+    )
+    .unwrap();
+    let e = GlobalRequest::new().models(["no-tf-section"]).validate().unwrap_err();
+    assert_eq!(e.http_status(), 404);
+}
+
+#[test]
+fn uploaded_specs_warm_start_the_design_db_like_builtins() {
+    use std::sync::Arc;
+    // Acceptance criterion: custom specs cache under their fingerprint
+    // exactly like builtins — a second session over the same DB answers
+    // without scheduler work.
+    workload::add_spec_text(
+        r#"{"name":"db-warm-spec","batch":2,"graph":[
+            {"op":"embed","elems":64,"params":32},
+            {"op":"linear","m":8,"n":8,"k":8},
+            {"op":"activation","elems":64}
+        ]}"#,
+        Source::Uploaded,
+    )
+    .unwrap();
+    let db = Arc::new(wham::service::cache::DesignDb::in_memory());
+    let mut a = Session::with_backend(Box::new(NativeCost)).with_db(Arc::clone(&db));
+    let cold = a.search(&SearchRequest::new("db-warm-spec")).unwrap();
+    assert!(cold.scheduler_evals > 0);
+    let mut b = Session::with_backend(Box::new(NativeCost)).with_db(db);
+    let warm = b.search(&SearchRequest::new("db-warm-spec")).unwrap();
+    assert_eq!(warm.scheduler_evals, 0, "spec workloads must warm-start from the DB");
+    assert_eq!(warm.best.config, cold.best.config);
+}
