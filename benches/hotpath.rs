@@ -1,6 +1,13 @@
 //! Hot-path micro-benchmarks for the performance pass (EXPERIMENTS.md
-//! section Perf): cost annotation (native + PJRT), ASAP/ALAP, the greedy
-//! list scheduler, the MCR loop, and a full per-workload search.
+//! section Perf): cost annotation (interned vs naive, native + PJRT),
+//! ASAP/ALAP, the greedy list scheduler, the MCR loop (galloping vs
+//! one-at-a-time), and a full per-workload search (fast vs legacy
+//! paths).
+//!
+//! Besides the human-readable report, writes `BENCH_hotpath.json` —
+//! per-phase timings plus backend-row and scheduler-eval counts — so CI
+//! can archive the bench trajectory (`--smoke` runs a fast variant with
+//! the same schema; set `--out PATH` to redirect the artifact).
 
 use wham::arch::Constraints;
 use wham::coordinator::{make_backend, BackendChoice};
@@ -8,59 +15,159 @@ use wham::cost::annotate::AnnotatedGraph;
 use wham::cost::Dims;
 use wham::graph::autodiff::Optimizer;
 use wham::search::engine::{SearchOptions, WhamSearch};
-use wham::search::mcr::mcr;
+use wham::search::mcr::{mcr_with, GrowthMode};
 use wham::sched::{asap_alap, greedy_schedule, CoreCount};
-use wham::util::bench::{banner, bench};
+use wham::util::bench::{banner, bench, BenchStats};
+use wham::util::json::{arr, Obj};
+
+fn phase_json(s: &BenchStats) -> String {
+    Obj::new()
+        .str("name", &s.name)
+        .u64("iters", s.iters as u64)
+        .u64("median_ns", s.median.as_nanos() as u64)
+        .u64("mean_ns", s.mean.as_nanos() as u64)
+        .u64("min_ns", s.min.as_nanos() as u64)
+        .finish()
+}
 
 fn main() {
-    banner("hotpath", "L3 hot-path micro-benchmarks");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke") || std::env::var("BENCH_SMOKE").is_ok();
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_hotpath.json".to_string());
+    let (warm, iters) = if smoke { (1, 3) } else { (2, 20) };
+    let search_iters = if smoke { 1 } else { 5 };
+
+    banner("hotpath", "L3 hot-path micro-benchmarks (fast vs legacy paths)");
     let graph = wham::models::training("bert-large", Optimizer::Adam).unwrap();
     let d = Dims { tc_x: 128, tc_y: 128, vc_w: 128 };
-    println!("workload: bert-large training graph, {} ops, {} edges", graph.len(), graph.num_edges());
+    let ops = graph.len() as u64;
+    let classes = graph.cost_classes().len() as u64;
+    let row_ratio = ops as f64 / classes as f64;
+    println!(
+        "workload: bert-large training graph, {} ops, {} edges",
+        graph.len(),
+        graph.num_edges()
+    );
+    println!(
+        "cost-backend rows per dims evaluation: naive {ops} -> interned {classes} ({row_ratio:.1}x fewer)"
+    );
+
+    let mut phases: Vec<BenchStats> = Vec::new();
+    let mut record = |s: BenchStats| {
+        println!("{s}");
+        phases.push(s);
+    };
 
     let mut native = make_backend(BackendChoice::Native).unwrap();
-    println!(
-        "{}",
-        bench("annotate/native", 2, 20, || {
-            std::hint::black_box(AnnotatedGraph::new(&graph, d, native.as_mut()));
-        })
-    );
+    record(bench("annotate/native (interned classes)", warm, iters, || {
+        std::hint::black_box(AnnotatedGraph::new(&graph, d, native.as_mut()));
+    }));
+    record(bench("annotate/native-naive (per-op rows)", warm, iters, || {
+        std::hint::black_box(AnnotatedGraph::new_naive(&graph, d, native.as_mut()));
+    }));
     if let Ok(mut pjrt) = make_backend(BackendChoice::Pjrt) {
-        println!(
-            "{}",
-            bench("annotate/pjrt (batched artifact call)", 2, 20, || {
-                std::hint::black_box(AnnotatedGraph::new(&graph, d, pjrt.as_mut()));
-            })
-        );
+        record(bench("annotate/pjrt (batched artifact call)", warm, iters, || {
+            std::hint::black_box(AnnotatedGraph::new(&graph, d, pjrt.as_mut()));
+        }));
     }
 
     let ann = AnnotatedGraph::new(&graph, d, native.as_mut());
-    println!(
-        "{}",
-        bench("asap_alap", 2, 50, || {
-            std::hint::black_box(asap_alap(&ann));
-        })
-    );
+    record(bench("asap_alap", warm, iters.max(10), || {
+        std::hint::black_box(asap_alap(&ann));
+    }));
     let cp = asap_alap(&ann);
-    println!(
-        "{}",
-        bench("greedy_schedule tc=4 vc=4", 2, 50, || {
-            std::hint::black_box(greedy_schedule(&ann, &cp, CoreCount { tc: 4, vc: 4 }));
-        })
+    record(bench("greedy_schedule tc=4 vc=4", warm, iters.max(10), || {
+        std::hint::black_box(greedy_schedule(&ann, &cp, CoreCount { tc: 4, vc: 4 }));
+    }));
+    record(bench("mcr/gallop (default)", warm, iters, || {
+        std::hint::black_box(mcr_with(&ann, &Constraints::default(), GrowthMode::Gallop));
+    }));
+    record(bench("mcr/one-at-a-time (legacy)", warm, iters, || {
+        std::hint::black_box(mcr_with(&ann, &Constraints::default(), GrowthMode::OneAtATime));
+    }));
+
+    // Scheduler-eval accounting per MCR run — the Figure-8 cost unit the
+    // galloping growth shrinks.
+    let fast_mcr = mcr_with(&ann, &Constraints::default(), GrowthMode::Gallop);
+    let slow_mcr = mcr_with(&ann, &Constraints::default(), GrowthMode::OneAtATime);
+    assert_eq!(
+        (fast_mcr.cores, fast_mcr.schedule.makespan),
+        (slow_mcr.cores, slow_mcr.schedule.makespan),
+        "gallop and one-at-a-time must land on the same design"
     );
+    let mcr_ratio = slow_mcr.evals as f64 / fast_mcr.evals.max(1) as f64;
     println!(
-        "{}",
-        bench("mcr (full Algorithm 1)", 2, 20, || {
-            std::hint::black_box(mcr(&ann, &Constraints::default()));
-        })
+        "mcr scheduler evals: one-at-a-time {} -> gallop {} ({mcr_ratio:.1}x fewer), cores {:?}",
+        slow_mcr.evals, fast_mcr.evals, fast_mcr.cores
     );
-    println!(
-        "{}",
-        bench("wham_search/bert-large (end-to-end)", 1, 5, || {
-            std::hint::black_box(
-                WhamSearch::new(&graph, 8, SearchOptions::default()).run(native.as_mut()),
-            );
-        })
+
+    // End-to-end search: the fast default vs the legacy knobs.
+    let fast_stats = bench("wham_search/bert-large (fast paths)", 1, search_iters, || {
+        std::hint::black_box(
+            WhamSearch::new(&graph, 8, SearchOptions::default()).run(native.as_mut()),
+        );
+    });
+    let legacy_opts = SearchOptions {
+        mcr_one_at_a_time: true,
+        naive_annotation: true,
+        ..Default::default()
+    };
+    let legacy_stats = bench("wham_search/bert-large (legacy paths)", 1, search_iters, || {
+        std::hint::black_box(WhamSearch::new(&graph, 8, legacy_opts).run(native.as_mut()));
+    });
+    let speedup = legacy_stats.median.as_secs_f64() / fast_stats.median.as_secs_f64().max(1e-12);
+    println!("{fast_stats}");
+    println!("{legacy_stats}");
+    println!("end-to-end wham_search speedup: {speedup:.2}x (legacy median / fast median)");
+    let fast_search = WhamSearch::new(&graph, 8, SearchOptions::default()).run(native.as_mut());
+    let legacy_search = WhamSearch::new(&graph, 8, legacy_opts).run(native.as_mut());
+    assert_eq!(
+        fast_search.best.config, legacy_search.best.config,
+        "fast and legacy searches must find the same design"
     );
-    println!("\nhotpath OK");
+    phases.push(fast_stats);
+    phases.push(legacy_stats);
+
+    let json = Obj::new()
+        .str("bench", "hotpath")
+        .bool("smoke", smoke)
+        .str("workload", "bert-large")
+        .u64("ops", ops)
+        .u64("cost_classes", classes)
+        .u64("rows_per_dims_naive", ops)
+        .u64("rows_per_dims_interned", classes)
+        .f64("row_ratio", row_ratio)
+        .raw(
+            "mcr",
+            &Obj::new()
+                .u64("evals_gallop", fast_mcr.evals as u64)
+                .u64("evals_one_at_a_time", slow_mcr.evals as u64)
+                .f64("eval_ratio", mcr_ratio)
+                .finish(),
+        )
+        .raw(
+            "search",
+            &Obj::new()
+                .f64("wall_ms_fast", fast_search.wall.as_secs_f64() * 1e3)
+                .u64("scheduler_evals_fast", fast_search.scheduler_evals as u64)
+                .u64("scheduler_evals_legacy", legacy_search.scheduler_evals as u64)
+                .f64("speedup", speedup)
+                .finish(),
+        )
+        .raw("phases", &arr(phases.iter().map(phase_json)))
+        .raw(
+            "process",
+            &Obj::new()
+                .u64("backend_rows_total", wham::cost::backend_rows_total())
+                .u64("scheduler_evals_total", wham::sched::evals_total())
+                .finish(),
+        )
+        .finish();
+    std::fs::write(&out_path, &json).expect("writing bench artifact");
+    println!("\nwrote {out_path}");
+    println!("hotpath OK");
 }

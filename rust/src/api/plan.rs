@@ -71,6 +71,13 @@ pub fn context_key(fp: Fingerprint, batch: u64, opts: &SearchOptions, backend: &
         .word(opts.constraints.max_power_w.to_bits())
         .word(opts.use_ilp as u64)
         .word(opts.ilp_node_budget)
+        // The MCR growth mode is outcome-preserving on the pinned
+        // workload classes, but a pathological plateau-then-improve
+        // makespan staircase could let the two walks land on different
+        // core counts — keep their mined points in separate contexts so
+        // a cached design can never cross modes. (`naive_annotation` and
+        // `jobs` are provably bit-identical and deliberately excluded.)
+        .word(opts.mcr_one_at_a_time as u64)
         .bytes(backend.as_bytes())
         .0
 }

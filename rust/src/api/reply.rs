@@ -459,8 +459,36 @@ pub struct DbCounters {
     pub misses: u64,
 }
 
+/// Wall-clock digest of one endpoint (sliding window of recent requests).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EndpointStat {
+    pub endpoint: String,
+    /// Requests served since boot.
+    pub count: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+/// Hot-path perf observability (EXPERIMENTS.md section Perf): the
+/// counters a service operator needs to see an eval-cost regression
+/// without attaching a profiler.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PerfCounters {
+    /// Cost-backend rows evaluated process-wide — the unit operator-class
+    /// interning shrinks (one row per unique `(kind, shape)` class).
+    pub backend_rows_total: u64,
+    /// Greedy-scheduler runs process-wide. Unlike
+    /// [`SearchCounters::scheduler_evals_total`] (per-`/search` leader
+    /// accounting) this includes `/common`, `/global`, and baseline work.
+    pub scheduler_evals_total: u64,
+    /// Design-database hits / (hits + misses); 0 before any probe.
+    pub db_hit_rate: f64,
+    /// Per-endpoint latency digests, endpoints that served >= 1 request.
+    pub endpoints: Vec<EndpointStat>,
+}
+
 /// Reply of `GET /status`.
-#[derive(Debug, Clone, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct StatusReply {
     pub uptime_ms: u64,
     pub workers: u64,
@@ -468,6 +496,7 @@ pub struct StatusReply {
     pub search: SearchCounters,
     pub coalescer: CoalescerCounters,
     pub db: DbCounters,
+    pub perf: PerfCounters,
 }
 
 impl ToJson for StatusReply {
@@ -491,6 +520,20 @@ impl ToJson for StatusReply {
             .u64("hits", self.db.hits)
             .u64("misses", self.db.misses)
             .finish();
+        let endpoints = arr(self.perf.endpoints.iter().map(|e| {
+            Obj::new()
+                .str("endpoint", &e.endpoint)
+                .u64("count", e.count)
+                .f64("p50_ms", e.p50_ms)
+                .f64("p95_ms", e.p95_ms)
+                .finish()
+        }));
+        let perf = Obj::new()
+            .u64("backend_rows_total", self.perf.backend_rows_total)
+            .u64("scheduler_evals_total", self.perf.scheduler_evals_total)
+            .f64("db_hit_rate", self.perf.db_hit_rate)
+            .raw("endpoints", &endpoints)
+            .finish();
         Obj::new()
             .u64("uptime_ms", self.uptime_ms)
             .u64("workers", self.workers)
@@ -498,6 +541,7 @@ impl ToJson for StatusReply {
             .raw("search", &search)
             .raw("coalescer", &coalescer)
             .raw("db", &db)
+            .raw("perf", &perf)
             .finish()
     }
 }
@@ -510,6 +554,26 @@ impl FromJson for StatusReply {
         let s = sub("search")?;
         let c = sub("coalescer")?;
         let d = sub("db")?;
+        // Lenient for pre-perf replies.
+        let perf = match v.get("perf") {
+            None => PerfCounters::default(),
+            Some(p) => PerfCounters {
+                backend_rows_total: req_u64(p, "backend_rows_total")?,
+                scheduler_evals_total: req_u64(p, "scheduler_evals_total")?,
+                db_hit_rate: req_f64(p, "db_hit_rate")?,
+                endpoints: req_arr(p, "endpoints")?
+                    .iter()
+                    .map(|e| {
+                        Ok(EndpointStat {
+                            endpoint: req_str(e, "endpoint")?,
+                            count: req_u64(e, "count")?,
+                            p50_ms: req_f64(e, "p50_ms")?,
+                            p95_ms: req_f64(e, "p95_ms")?,
+                        })
+                    })
+                    .collect::<Result<_, ApiError>>()?,
+            },
+        };
         Ok(Self {
             uptime_ms: req_u64(v, "uptime_ms")?,
             workers: req_u64(v, "workers")?,
@@ -533,6 +597,7 @@ impl FromJson for StatusReply {
                 hits: req_u64(d, "hits")?,
                 misses: req_u64(d, "misses")?,
             },
+            perf,
         })
     }
 }
@@ -581,6 +646,17 @@ mod tests {
             search: SearchCounters { requests: 2, cold: 1, warm: 1, scheduler_evals_total: 9 },
             coalescer: CoalescerCounters { led: 2, coalesced: 0, in_flight: 0 },
             db: DbCounters { path: None, entries: 4, loaded: 0, appended: 4, hits: 6, misses: 4 },
+            perf: PerfCounters {
+                backend_rows_total: 1234,
+                scheduler_evals_total: 99,
+                db_hit_rate: 0.6,
+                endpoints: vec![EndpointStat {
+                    endpoint: "/search".into(),
+                    count: 2,
+                    p50_ms: 1.5,
+                    p95_ms: 3.25,
+                }],
+            },
         };
         let q = StatusReply::from_json(&parse(&r.to_json()).unwrap()).unwrap();
         assert_eq!(q, r);
@@ -590,6 +666,17 @@ mod tests {
         };
         let q = StatusReply::from_json(&parse(&with_path.to_json()).unwrap()).unwrap();
         assert_eq!(q.db.path.as_deref(), Some("designs.jsonl"));
+    }
+
+    #[test]
+    fn status_reply_without_perf_still_parses() {
+        // Pre-perf servers omit the "perf" object entirely.
+        let legacy = r#"{"uptime_ms":1,"workers":2,"requests":0,
+            "search":{"requests":0,"cold":0,"warm":0,"scheduler_evals_total":0},
+            "coalescer":{"led":0,"coalesced":0,"in_flight":0},
+            "db":{"path":null,"entries":0,"loaded":0,"appended":0,"hits":0,"misses":0}}"#;
+        let q = StatusReply::from_json(&parse(legacy).unwrap()).unwrap();
+        assert_eq!(q.perf, PerfCounters::default());
     }
 
     #[test]

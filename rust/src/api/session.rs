@@ -61,6 +61,11 @@ pub struct Session {
     /// warm repeat searches skip the two baseline scheduler runs. Valid
     /// for the session's lifetime because the backend never changes.
     baselines: HashMap<(u64, u64), (Evaluation, Evaluation)>,
+    /// Worker threads for the engine's sibling-evaluation fan-out and
+    /// the global search's per-stage local searches (1 = serial; the CLI
+    /// sets `--jobs`, the service derives a per-request budget from its
+    /// worker count). Outcome-preserving — see `SearchOptions::jobs`.
+    jobs: usize,
 }
 
 impl Session {
@@ -73,13 +78,20 @@ impl Session {
 
     /// Session over an already-built backend.
     pub fn with_backend(backend: Box<dyn CostBackend>) -> Self {
-        Self { backend, db: None, baselines: HashMap::new() }
+        Self { backend, db: None, baselines: HashMap::new(), jobs: 1 }
     }
 
     /// Attach a shared design database: searches are answered from (and
     /// mined points persisted to) it, scoped by [`context_key`].
     pub fn with_db(mut self, db: Arc<DesignDb>) -> Self {
         self.db = Some(db);
+        self
+    }
+
+    /// Evaluation fan-out width for this session's searches (clamped to
+    /// at least 1). Results are identical at any width.
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs.max(1);
         self
     }
 
@@ -138,6 +150,7 @@ impl Session {
                 )
             });
         let mut opts = plan.opts;
+        opts.jobs = self.jobs;
         if opts.metric == Metric::PerfPerTdp {
             opts.min_throughput = tpu.throughput;
         }
@@ -268,8 +281,14 @@ impl Session {
             use_ilp: plan.use_ilp,
             ..Default::default()
         };
-        let mut gopts =
-            GlobalOptions { metric: plan.metric, scheme: plan.scheme, top_k: plan.top_k, local, ..Default::default() };
+        let mut gopts = GlobalOptions {
+            metric: plan.metric,
+            scheme: plan.scheme,
+            top_k: plan.top_k,
+            local,
+            jobs: self.jobs,
+            ..Default::default()
+        };
         if plan.metric == Metric::PerfPerTdp {
             gopts.min_throughput = tpu.iter().copied().fold(f64::INFINITY, f64::min);
         }

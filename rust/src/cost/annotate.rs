@@ -19,11 +19,35 @@ pub struct AnnotatedGraph<'g> {
 }
 
 impl<'g> AnnotatedGraph<'g> {
-    /// Run the estimator over the whole graph.
+    /// Run the estimator over the graph's *cost classes*: the backend
+    /// sees one row per unique `(kind, shape)` class and the results are
+    /// scattered back per op by class id. Training graphs repeat the
+    /// same layer shapes dozens of times, so this evaluates an order of
+    /// magnitude fewer rows than [`Self::new_naive`] while producing a
+    /// bit-identical annotation (same rows in, same `OpCost` out — the
+    /// backends are pure functions of the row).
     pub fn new(graph: &'g OperatorGraph, dims: Dims, backend: &mut dyn CostBackend) -> Self {
+        let classes = graph.cost_classes();
+        super::note_backend_rows(classes.len() as u64);
+        let class_costs = backend.evaluate(&classes.rows, dims);
+        assert_eq!(class_costs.len(), classes.len(), "backend returned wrong row count");
+        let costs: Vec<OpCost> =
+            classes.class_of.iter().map(|&c| class_costs[c as usize]).collect();
+        Self::from_costs(graph, dims, costs)
+    }
+
+    /// Legacy per-op path: evaluate the backend on the full operator
+    /// table, one row per op. Kept as the parity baseline for the
+    /// interned path (`rust/tests/hotpath_parity.rs`) and for ablations.
+    pub fn new_naive(graph: &'g OperatorGraph, dims: Dims, backend: &mut dyn CostBackend) -> Self {
         let rows = graph.cost_rows();
+        super::note_backend_rows(rows.len() as u64);
         let costs = backend.evaluate(&rows, dims);
         assert_eq!(costs.len(), graph.len(), "backend returned wrong row count");
+        Self::from_costs(graph, dims, costs)
+    }
+
+    fn from_costs(graph: &'g OperatorGraph, dims: Dims, costs: Vec<OpCost>) -> Self {
         let cycles = costs.iter().map(|c| (c.latency.ceil() as u64).max(1)).collect();
         let core = graph.ops.iter().map(|o| o.kind.core_type()).collect();
         Self { graph, dims, costs, cycles, core }
@@ -90,6 +114,24 @@ mod tests {
         let g = tiny();
         let ann = AnnotatedGraph::new(&g, Dims { tc_x: 64, tc_y: 64, vc_w: 64 }, &mut NativeCost);
         assert_eq!(ann.serial_cycles(), ann.cycles[0] + ann.cycles[1]);
+    }
+
+    #[test]
+    fn interned_annotation_matches_naive() {
+        // Two ops of the same class + one distinct: the interned path
+        // evaluates 2 backend rows, the naive path 3 — same annotation.
+        let mut b = GraphBuilder::new();
+        let a = b.gemm("a", 64, 64, 64, &[]);
+        let c = b.gemm("c", 64, 64, 64, &[a]);
+        let _ = b.eltwise("r", 64 * 64, 1, &[c]);
+        let g = b.finish();
+        assert_eq!(g.cost_classes().len(), 2);
+        let d = Dims { tc_x: 64, tc_y: 64, vc_w: 64 };
+        let fast = AnnotatedGraph::new(&g, d, &mut NativeCost);
+        let naive = AnnotatedGraph::new_naive(&g, d, &mut NativeCost);
+        assert_eq!(fast.costs, naive.costs);
+        assert_eq!(fast.cycles, naive.cycles);
+        assert_eq!(fast.core, naive.core);
     }
 
     #[test]

@@ -36,6 +36,12 @@ pub struct GlobalOptions {
     /// Disable the top-level pruner (evaluate the whole k x s x m pool) —
     /// the "unpruned" arm of paper Figure 7.
     pub no_prune: bool,
+    /// Worker threads for the independent per-stage local searches
+    /// (`1` = serial; `wham global --jobs` and the service default to
+    /// the machine's parallelism). The fan-out prefetches results on
+    /// per-thread backends behind a mutex-guarded [`CacheProvider`];
+    /// merge order and outcomes are identical to the serial walk.
+    pub jobs: usize,
 }
 
 impl Default for GlobalOptions {
@@ -48,6 +54,7 @@ impl Default for GlobalOptions {
             local: SearchOptions::default(),
             min_throughput: 0.0,
             no_prune: false,
+            jobs: 1,
         }
     }
 }
@@ -176,43 +183,151 @@ pub fn global_search_observed(
     let mut cancelled = false;
 
     // ---- 1. Local search: top-k designs per unique stage ----------------
+    // Collect the unique (model, stage-signature) searches first, in the
+    // same deterministic order the serial walk used — they are mutually
+    // independent, which is what lets `--jobs` fan them out.
+    struct LocalTask<'m> {
+        model: usize,
+        sig: usize,
+        graph: &'m crate::graph::OperatorGraph,
+        micro_batch: u64,
+    }
+    let mut sigs_per_model: Vec<Vec<usize>> = Vec::new();
+    let mut tasks: Vec<LocalTask> = Vec::new();
+    for (mi, part) in models.iter().enumerate() {
+        let sigs = stage_signatures(part);
+        for (i, stage) in part.stages.iter().enumerate() {
+            if sigs[..i].iter().all(|&s| s != sigs[i]) {
+                tasks.push(LocalTask {
+                    model: mi,
+                    sig: sigs[i],
+                    graph: &stage.graph,
+                    micro_batch: part.micro_batch,
+                });
+            }
+        }
+        sigs_per_model.push(sigs);
+    }
+    let lopts_for = |t: &LocalTask, backend: &mut dyn CostBackend| -> SearchOptions {
+        let mut lopts = opts.local;
+        lopts.metric = opts.metric;
+        lopts.top_k = opts.top_k;
+        if let Metric::PerfPerTdp = opts.metric {
+            // Per-stage throughput floor: what a TPUv2 achieves on
+            // this stage graph — keeps local winners pipeline-viable.
+            lopts.min_throughput =
+                crate::api::session::tpuv2_floor(t.graph, t.micro_batch, backend);
+        }
+        lopts
+    };
+
+    // Parallel prefetch (tentpole 3): run the local searches concurrently
+    // on per-thread backends, handing each worker a cache from the
+    // mutex-guarded provider. Progress flows back through a channel and
+    // is forwarded to the caller's sink on this thread (sinks are not
+    // `Send`); a cancellation from the sink stops the remaining searches
+    // cooperatively. The serial merge below consumes the prefetched
+    // results in task order, so outcomes match the jobs=1 walk.
+    let mut prefetched: Vec<Option<crate::search::engine::SearchResult>> =
+        (0..tasks.len()).map(|_| None).collect();
+    if opts.jobs > 1 && tasks.len() > 1 {
+        if let Ok(choice) = backend.name().parse::<crate::coordinator::BackendChoice>() {
+            use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+            // Serializes `cache_for` invocations on the shared provider
+            // (the returned caches themselves are used concurrently —
+            // `CacheProvider: Sync` and implementors are internally
+            // locked).
+            let provider_gate = std::sync::Mutex::new(());
+            let cancel = AtomicBool::new(false);
+            let next = AtomicUsize::new(0);
+            let results: Vec<std::sync::Mutex<Option<crate::search::engine::SearchResult>>> =
+                (0..tasks.len()).map(|_| std::sync::Mutex::new(None)).collect();
+            let (tx, rx) = std::sync::mpsc::channel::<Progress>();
+            {
+                let tasks = &tasks;
+                let results = &results;
+                let next = &next;
+                let cancel = &cancel;
+                let provider_gate = &provider_gate;
+                let lopts_for = &lopts_for;
+                std::thread::scope(|scope| {
+                    for _ in 0..opts.jobs.min(tasks.len()) {
+                        let tx = tx.clone();
+                        scope.spawn(move || {
+                            let Ok(mut wb) = crate::coordinator::make_backend(choice) else {
+                                return; // tasks fall back to the serial path
+                            };
+                            loop {
+                                let i = next.fetch_add(1, Ordering::Relaxed);
+                                if i >= tasks.len() {
+                                    break;
+                                }
+                                let t = &tasks[i];
+                                let lopts = lopts_for(t, wb.as_mut());
+                                let mut cache = {
+                                    let _gate = provider_gate.lock().unwrap();
+                                    caches.cache_for(t.graph, t.micro_batch, &lopts, wb.name())
+                                };
+                                let mut wsink = |p: &Progress| {
+                                    let _ = tx.send(*p);
+                                    !cancel.load(Ordering::Relaxed)
+                                };
+                                let r = WhamSearch::new(t.graph, t.micro_batch, lopts)
+                                    .run_with(wb.as_mut(), cache.as_mut(), &mut wsink);
+                                *results[i].lock().unwrap() = Some(r);
+                            }
+                        });
+                    }
+                    drop(tx);
+                    // Forward worker progress on this thread until every
+                    // sender is gone (= all workers finished).
+                    for p in rx {
+                        if !sink.on_progress(&p) {
+                            cancel.store(true, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+            cancelled |= cancel.load(Ordering::Relaxed);
+            for (slot, m) in prefetched.iter_mut().zip(results) {
+                *slot = m.into_inner().unwrap();
+            }
+        }
+    }
+
+    // Serial merge, in task order: identical pool order, mosaic configs,
+    // and counters to the serial walk. Tasks the prefetch did not cover
+    // (jobs=1, or a worker backend that failed to build) run here.
     let mut local_searches = 0usize;
     let mut pool: Vec<ArchConfig> = Vec::new();
+    let mut best_per_sig: Vec<HashMap<usize, ArchConfig>> = vec![HashMap::new(); models.len()];
+    for (ti, t) in tasks.iter().enumerate() {
+        let r = match prefetched[ti].take() {
+            Some(r) => r,
+            None => {
+                let lopts = lopts_for(t, backend);
+                let mut cache = caches.cache_for(t.graph, t.micro_batch, &lopts, backend.name());
+                WhamSearch::new(t.graph, t.micro_batch, lopts)
+                    .run_with(backend, cache.as_mut(), sink)
+            }
+        };
+        cancelled |= r.cancelled;
+        local_searches += 1;
+        for p in r.top.points() {
+            if !pool.contains(&p.config) {
+                pool.push(p.config);
+            }
+        }
+        best_per_sig[t.model].insert(t.sig, r.best.config);
+    }
     // Per model: best local design per stage (for Mosaic).
     let mut mosaic_cfgs: Vec<Vec<ArchConfig>> = Vec::new();
     let mut tables: Vec<ModelTable> = Vec::new();
-    for part in models {
-        let sigs = stage_signatures(part);
-        let mut best_per_sig: HashMap<usize, ArchConfig> = HashMap::new();
-        for (i, stage) in part.stages.iter().enumerate() {
-            let sig = sigs[i];
-            if best_per_sig.contains_key(&sig) {
-                continue;
-            }
-            let mut lopts = opts.local;
-            lopts.metric = opts.metric;
-            lopts.top_k = opts.top_k;
-            if let Metric::PerfPerTdp = opts.metric {
-                // Per-stage throughput floor: what a TPUv2 achieves on
-                // this stage graph — keeps local winners pipeline-viable.
-                lopts.min_throughput =
-                    crate::api::session::tpuv2_floor(&stage.graph, part.micro_batch, backend);
-            }
-            let mut cache =
-                caches.cache_for(&stage.graph, part.micro_batch, &lopts, backend.name());
-            let r = WhamSearch::new(&stage.graph, part.micro_batch, lopts)
-                .run_with(backend, cache.as_mut(), sink);
-            cancelled |= r.cancelled;
-            local_searches += 1;
-            for p in r.top.points() {
-                if !pool.contains(&p.config) {
-                    pool.push(p.config);
-                }
-            }
-            best_per_sig.insert(sig, r.best.config);
-        }
-        mosaic_cfgs.push((0..part.stages.len()).map(|i| best_per_sig[&sigs[i]]).collect());
-        tables.push(ModelTable { part, sig_of_stage: sigs, times: HashMap::new() });
+    for (mi, part) in models.iter().enumerate() {
+        let sigs = &sigs_per_model[mi];
+        mosaic_cfgs
+            .push((0..part.stages.len()).map(|i| best_per_sig[mi][&sigs[i]]).collect());
+        tables.push(ModelTable { part, sig_of_stage: sigs.to_vec(), times: HashMap::new() });
     }
     let candidate_pool = pool.len();
 
@@ -436,6 +551,26 @@ mod tests {
             global_search(&ms, &GlobalOptions::default(), &Network::default(), &mut NativeCost);
         assert!(!full.cancelled);
         assert!(full.candidates_evaluated >= r.candidates_evaluated);
+    }
+
+    #[test]
+    fn parallel_local_searches_match_serial() {
+        let ms = mini_models();
+        let serial =
+            global_search(&ms, &GlobalOptions::default(), &Network::default(), &mut NativeCost);
+        let jopts = GlobalOptions { jobs: 4, ..Default::default() };
+        let par = global_search(&ms, &jopts, &Network::default(), &mut NativeCost);
+        assert_eq!(par.common.0, serial.common.0, "common config must not depend on --jobs");
+        assert_eq!(par.candidate_pool, serial.candidate_pool);
+        assert_eq!(par.candidates_evaluated, serial.candidates_evaluated);
+        assert_eq!(par.local_searches, serial.local_searches);
+        for (a, b) in par.individual.iter().zip(&serial.individual) {
+            assert_eq!(a.configs, b.configs);
+            assert_eq!(a.eval.throughput, b.eval.throughput);
+        }
+        for (a, b) in par.mosaic.iter().zip(&serial.mosaic) {
+            assert_eq!(a.configs, b.configs);
+        }
     }
 
     #[test]

@@ -21,12 +21,84 @@ pub use op::{CoreType, CostRow, Op, OpKind, Pass};
 /// Index of a node in an [`OperatorGraph`].
 pub type NodeId = usize;
 
-/// A DAG of training operators with adjacency in both directions.
+/// Cost-class interning table: training graphs are dozens of identical
+/// transformer/conv layers, so the unique `(kind, shape)` classes are an
+/// order of magnitude fewer than the operators. The estimator evaluates
+/// the cost backend once per *class* and scatters the results by id
+/// (see [`crate::cost::annotate::AnnotatedGraph::new`]), which shrinks
+/// every backend call — and, for the batched PJRT backend, the number of
+/// artifact dispatches — by the same factor.
 #[derive(Debug, Clone, Default)]
+pub struct CostClasses {
+    /// One representative row per unique `(kind, m, n, k)` class, in
+    /// first-appearance order (deterministic across runs).
+    pub rows: Vec<CostRow>,
+    /// Class id per operator — an index into `rows`.
+    pub class_of: Vec<u32>,
+}
+
+impl CostClasses {
+    fn build(ops: &[Op]) -> Self {
+        let mut index: std::collections::HashMap<CostRow, u32> = std::collections::HashMap::new();
+        let mut rows: Vec<CostRow> = Vec::new();
+        let mut class_of = Vec::with_capacity(ops.len());
+        for o in ops {
+            let row = o.kind.cost_row();
+            let id = *index.entry(row).or_insert_with(|| {
+                rows.push(row);
+                (rows.len() - 1) as u32
+            });
+            class_of.push(id);
+        }
+        Self { rows, class_of }
+    }
+
+    /// Number of unique classes.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the graph had no operators.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Per-graph derived state built once and shared by every evaluation
+/// (the search annotates the same graph at dozens of `<TC-Dim,
+/// VC-Width>` candidates — none of this depends on the dims).
+#[derive(Debug, Clone, Default)]
+struct GraphAnalysis {
+    classes: CostClasses,
+    topo: Vec<NodeId>,
+}
+
+/// A DAG of training operators with adjacency in both directions.
+#[derive(Debug, Default)]
 pub struct OperatorGraph {
     pub ops: Vec<Op>,
     pub preds: Vec<Vec<NodeId>>,
     pub succs: Vec<Vec<NodeId>>,
+    /// Lazily-built cost-class table + topo order. Graphs are immutable
+    /// once handed to the estimator/schedulers, so first use freezes the
+    /// cache; construction-time mutation (builder pushes, partition
+    /// slicing) happens before anything reads it.
+    analysis: std::sync::OnceLock<GraphAnalysis>,
+}
+
+impl Clone for OperatorGraph {
+    fn clone(&self) -> Self {
+        Self {
+            ops: self.ops.clone(),
+            preds: self.preds.clone(),
+            succs: self.succs.clone(),
+            // Deliberately NOT cloned: graphs are cloned precisely to be
+            // mutated (autodiff appends the backward mirror onto a
+            // forward clone), and a frozen class table / topo order must
+            // not survive onto a different node set.
+            analysis: std::sync::OnceLock::new(),
+        }
+    }
 }
 
 impl OperatorGraph {
@@ -101,6 +173,25 @@ impl OperatorGraph {
         self.ops.iter().map(|o| o.kind.cost_row()).collect()
     }
 
+    fn analysis(&self) -> &GraphAnalysis {
+        self.analysis
+            .get_or_init(|| GraphAnalysis { classes: CostClasses::build(&self.ops), topo: self.topo_order() })
+    }
+
+    /// The graph's cost-class interning table, built on first use and
+    /// cached for the graph's lifetime (thread-safe; concurrent sibling
+    /// evaluations share one table).
+    pub fn cost_classes(&self) -> &CostClasses {
+        &self.analysis().classes
+    }
+
+    /// Cached topological order — the hot-path form of [`Self::topo_order`]
+    /// for callers that re-traverse the same graph per candidate design
+    /// (ASAP/ALAP, the exact solver).
+    pub fn topo_order_cached(&self) -> &[NodeId] {
+        &self.analysis().topo
+    }
+
     /// Count operators per pass.
     pub fn pass_counts(&self) -> [usize; 4] {
         let mut c = [0usize; 4];
@@ -149,6 +240,47 @@ mod tests {
         assert_eq!(g.sources(), vec![0]);
         assert_eq!(g.sinks(), vec![3]);
         assert_eq!(g.num_edges(), 4);
+    }
+
+    #[test]
+    fn cost_classes_intern_repeated_shapes() {
+        let mut b = GraphBuilder::new();
+        let a = b.gemm("a", 8, 8, 8, &[]);
+        let c = b.gemm("c", 8, 8, 8, &[a]); // same (kind, shape) class as a
+        let _d = b.eltwise("d", 64, 1, &[c]);
+        let g = b.finish();
+        let cls = g.cost_classes();
+        assert_eq!(cls.len(), 2);
+        assert_eq!(cls.class_of, vec![0, 0, 1]);
+        // Scattering by class id reconstructs the naive table exactly.
+        let scattered: Vec<CostRow> =
+            cls.class_of.iter().map(|&i| cls.rows[i as usize]).collect();
+        assert_eq!(scattered, g.cost_rows());
+        // The cached topo order matches the allocating form.
+        assert_eq!(g.topo_order_cached(), &g.topo_order()[..]);
+    }
+
+    #[test]
+    fn clone_drops_the_analysis_cache() {
+        // Regression: training_graph clones a forward graph and appends
+        // nodes — a cloned-and-frozen class table / topo order would be
+        // stale for the longer graph (out-of-bounds cycles at schedule
+        // time).
+        let g = diamond();
+        assert_eq!(g.cost_classes().class_of.len(), g.len()); // freeze on the original
+        let mut h = g.clone();
+        h.ops.push(Op {
+            name: "extra".into(),
+            kind: OpKind::Elementwise { elems: 4, intensity: 1 },
+            pass: Pass::Forward,
+            param_elems: 0,
+            out_elems: 4,
+            fwd_peer: None,
+        });
+        h.preds.push(Vec::new());
+        h.succs.push(Vec::new());
+        assert_eq!(h.cost_classes().class_of.len(), h.len());
+        assert_eq!(h.topo_order_cached().len(), h.len());
     }
 
     #[test]

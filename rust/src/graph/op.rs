@@ -29,7 +29,9 @@ pub enum Pass {
 }
 
 /// One row of the cost-model input table (contract of ref.py).
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// `Eq`/`Hash` are derived so rows can be interned into cost classes
+/// ([`crate::graph::CostClasses`]) — all fields are integers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CostRow {
     /// 0 = tensor, 1 = vector, 2 = fused (< 0 is padding, never emitted).
     pub kind: i32,

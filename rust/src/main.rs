@@ -34,8 +34,8 @@ use wham::util::table::Table;
 
 const VALUE_KEYS: &[&str] = &[
     "model", "models", "metric", "backend", "k", "depth", "tmp", "scheme", "framework",
-    "iterations", "workers", "hysteresis", "seed", "out", "tc", "vc", "dims", "port", "db",
-    "addr", "deadline-ms", "workload-dir",
+    "iterations", "workers", "jobs", "hysteresis", "seed", "out", "tc", "vc", "dims", "port",
+    "db", "addr", "deadline-ms", "workload-dir",
 ];
 
 fn main() -> Result<()> {
@@ -71,7 +71,7 @@ fn main() -> Result<()> {
         Some("space") => cmd_space(&args),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
-        Some("selftest") => cmd_selftest(),
+        Some("selftest") => cmd_selftest(&args),
         _ => {
             print_usage();
             Ok(())
@@ -87,26 +87,34 @@ fn print_usage() {
          wham models\n  \
          wham workloads <list|show <name>|lint <path...>>\n  \
          wham search --model <name> [--metric throughput|perf/tdp] [--ilp]\n              \
-         [--backend auto|native|pjrt] [--k 10] [--hysteresis 1]\n              \
+         [--backend auto|native|pjrt] [--k 10] [--hysteresis 1] [--jobs N]\n              \
          [--deadline-ms N] [--progress]\n  \
          wham evaluate --model <name> --dims TXxTYxVW [--tc 2 --vc 2]\n  \
          wham common [--models a,b,c] [--metric ...]\n  \
          wham global [--models opt-1.3b,gpt2-xl] [--depth 32] [--tmp 1]\n              \
-         [--scheme gpipe|1f1b] [--k 10] [--metric ...] [--deadline-ms N]\n  \
+         [--scheme gpipe|1f1b] [--k 10] [--metric ...] [--jobs N] [--deadline-ms N]\n  \
          wham baseline --model <name> --framework confuciux|spotlight|tpuv2|nvdla\n              \
          [--iterations 500]\n  \
          wham trace --model <name> [--out trace.json] [--tc 2 --vc 2 --dims 128x128x128]\n  \
          wham partition --model <llm> [--depth 32] [--tmp 1] [--scheme gpipe]\n  \
          wham space --model <name>\n  \
-         wham serve [--port 8484] [--workers 8] [--db designs.jsonl] [--backend auto]\n  \
+         wham serve [--port 8484] [--workers <cores>] [--db designs.jsonl] [--backend auto]\n  \
          wham client <models|search|evaluate|common|global|status|upload> [--addr 127.0.0.1:8484] ...\n  \
          wham selftest"
     );
 }
 
-/// Session over the `--backend` flag.
+/// `--jobs N`: evaluation fan-out width, defaulting to the machine's
+/// parallelism (searches are outcome-identical at any width).
+fn jobs_from_args(args: &Args) -> Result<usize> {
+    let jobs: usize =
+        args.get_as_or("jobs", wham::util::default_jobs()).map_err(|e| anyhow!("{e}"))?;
+    Ok(jobs.max(1))
+}
+
+/// Session over the `--backend` and `--jobs` flags.
 fn session_from_args(args: &Args) -> Result<Session> {
-    Ok(Session::new(backend_from_args(args)?)?)
+    Ok(Session::new(backend_from_args(args)?)?.with_jobs(jobs_from_args(args)?))
 }
 
 /// Forward-graph parameter count of any registry entry, pretty-printed
@@ -500,7 +508,10 @@ fn cmd_space(args: &Args) -> Result<()> {
 /// Run the long-lived design-mining service (see `wham::service`).
 fn cmd_serve(args: &Args) -> Result<()> {
     let port: u16 = args.get_as_or("port", 8484).map_err(|e| anyhow!("{e}"))?;
-    let workers: usize = args.get_as_or("workers", 8).map_err(|e| anyhow!("{e}"))?;
+    // Worker-count default follows the machine, not a magic constant;
+    // `--jobs` is accepted as an alias so the serve/search flags match.
+    let workers: usize =
+        args.get_as_or("workers", jobs_from_args(args)?).map_err(|e| anyhow!("{e}"))?;
     let backend = backend_from_args(args)?;
     let db_path = args.get("db").map(std::path::PathBuf::from);
     let opts = wham::service::ServeOptions { workers, db_path, backend };
@@ -542,7 +553,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_selftest() -> Result<()> {
+fn cmd_selftest(args: &Args) -> Result<()> {
     println!("1/3 native backend ...");
     let graph = wham::models::training("bert-base", Optimizer::Adam).unwrap();
     let mut native = make_backend(BackendChoice::Native)?;
@@ -563,10 +574,11 @@ fn cmd_selftest() -> Result<()> {
     }
     println!("    latency rel={rel:.2e}, energy rel={rel_e:.2e}  — OK");
 
-    // Exercise the parallel coordinator too.
+    // Exercise the parallel coordinator too, at the machine's width
+    // (previously hardcoded to 2 workers).
     let jobs =
         vec![SearchJob { name: "bert-base".into(), graph, batch: 4, opts: SearchOptions::default() }];
-    let rs = run_parallel(jobs, BackendChoice::Auto, 2);
+    let rs = run_parallel(jobs, BackendChoice::Auto, jobs_from_args(args)?);
     let coord = rs[0].1.as_ref().map_err(|e| anyhow!("coordinator job failed: {e}"))?;
     println!("coordinator: best {}", coord.best.config.display());
     println!("selftest OK");

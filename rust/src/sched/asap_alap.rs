@@ -62,10 +62,12 @@ impl CriticalPath {
 pub fn asap_alap(ann: &AnnotatedGraph) -> CriticalPath {
     let g = ann.graph;
     let n = g.len();
-    let order = g.topo_order();
+    // Cached on the graph: the search calls this once per candidate dims
+    // and the order never changes.
+    let order = g.topo_order_cached();
 
     let mut asap = vec![0u64; n];
-    for &v in &order {
+    for &v in order {
         for &p in &g.preds[v] {
             asap[v] = asap[v].max(asap[p] + ann.cycles[p]);
         }

@@ -16,6 +16,19 @@ use super::asap_alap::CriticalPath;
 use crate::cost::annotate::AnnotatedGraph;
 use crate::graph::CoreType;
 
+/// Ready-queue key: (slack|asap, asap|id, id) — see `push_ready`.
+type Prio = Reverse<(u64, u64, usize)>;
+
+/// Cumulative greedy-scheduler invocations process-wide — the paper's
+/// search-cost unit (Figure 8), surfaced by `GET /status` and the
+/// hot-path bench so eval regressions are visible without a profiler.
+static EVALS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Total greedy-scheduler runs since process start.
+pub fn evals_total() -> u64 {
+    EVALS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
 /// Number of cores of each type available to the scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CoreCount {
@@ -50,31 +63,31 @@ impl Schedule {
         self.first_conflict_where(cp, |_| true)
     }
 
+    /// The single pass both conflict queries share: ops that waited on a
+    /// core and thereby started past their ALAP time, keyed by
+    /// `(start, id)` for deterministic ordering.
+    fn conflicts<'a>(&'a self, cp: &'a CriticalPath) -> impl Iterator<Item = (u64, usize)> + 'a {
+        (0..self.start.len()).filter_map(move |v| {
+            (self.resource_delay(v) > 0 && self.start[v] > cp.alap[v])
+                .then_some((self.start[v], v))
+        })
+    }
+
     /// Earliest critical conflict accepted by `pred` — single pass
     /// (perf: this runs once per MCR iteration on the hot path; sorting
     /// the whole op list was the top profile entry, see EXPERIMENTS.md
     /// section Perf).
     pub fn first_conflict_where<F: Fn(usize) -> bool>(&self, cp: &CriticalPath, pred: F) -> Option<usize> {
-        let mut best: Option<(u64, usize)> = None;
-        for v in 0..self.start.len() {
-            if self.resource_delay(v) > 0
-                && self.start[v] > cp.alap[v]
-                && pred(v)
-                && best.map_or(true, |(bs, bv)| (self.start[v], v) < (bs, bv))
-            {
-                best = Some((self.start[v], v));
-            }
-        }
-        best.map(|(_, v)| v)
+        self.conflicts(cp).filter(|&(_, v)| pred(v)).min().map(|(_, v)| v)
     }
 
-    /// All critical resource conflicts in start-time order.
+    /// All critical resource conflicts in start-time order. One pass
+    /// over the conflicts (the shared [`Self::first_conflict_where`]
+    /// machinery), sorting only the conflict set — not the full op list.
     pub fn critical_conflicts(&self, cp: &CriticalPath) -> Vec<usize> {
-        let mut order: Vec<usize> = (0..self.start.len())
-            .filter(|&v| self.resource_delay(v) > 0 && self.start[v] > cp.alap[v])
-            .collect();
-        order.sort_by_key(|&v| (self.start[v], v));
-        order
+        let mut order: Vec<(u64, usize)> = self.conflicts(cp).collect();
+        order.sort_unstable();
+        order.into_iter().map(|(_, v)| v).collect()
     }
 }
 
@@ -89,37 +102,69 @@ pub enum Priority {
     Fifo,
 }
 
+/// Reusable scheduler buffers. The MCR loop invokes the greedy scheduler
+/// dozens of times per `<TC-Dim, VC-Width>`; reusing the in-degree
+/// vector and the four heaps across invocations removes the per-call
+/// allocations that led the profile (EXPERIMENTS.md section Perf). The
+/// `start`/`finish`/`ready_at` vectors are *not* here — they are the
+/// returned [`Schedule`] and must be owned per result.
+#[derive(Default)]
+pub struct SchedScratch {
+    indeg: Vec<u32>,
+    // Per-core-type ready queues ordered by (slack, asap, id).
+    ready_t: BinaryHeap<Prio>,
+    ready_v: BinaryHeap<Prio>,
+    ready_f: BinaryHeap<Prio>,
+    // Completion events: (finish_time, op).
+    events: BinaryHeap<Reverse<(u64, usize)>>,
+}
+
+impl SchedScratch {
+    /// Empty scratch; buffers grow on first use and are kept after.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Greedy-schedule `ann` on `cores` with criticality priorities.
 pub fn greedy_schedule(ann: &AnnotatedGraph, cp: &CriticalPath, cores: CoreCount) -> Schedule {
     greedy_schedule_with_priority(ann, cp, cores, Priority::Criticality)
 }
 
-/// Greedy-schedule with an explicit ready-queue policy.
+/// Greedy-schedule with an explicit ready-queue policy (fresh buffers).
 pub fn greedy_schedule_with_priority(
     ann: &AnnotatedGraph,
     cp: &CriticalPath,
     cores: CoreCount,
     priority: Priority,
 ) -> Schedule {
+    greedy_schedule_scratch(ann, cp, cores, priority, &mut SchedScratch::new())
+}
+
+/// Greedy-schedule reusing caller-owned buffers — the MCR hot-loop form.
+pub fn greedy_schedule_scratch(
+    ann: &AnnotatedGraph,
+    cp: &CriticalPath,
+    cores: CoreCount,
+    priority: Priority,
+    scratch: &mut SchedScratch,
+) -> Schedule {
     assert!(cores.tc >= 1 && cores.vc >= 1, "need at least one core of each type");
+    EVALS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let g = ann.graph;
     let n = g.len();
 
-    let mut indeg: Vec<u32> = g.preds.iter().map(|p| p.len() as u32).collect();
+    scratch.indeg.clear();
+    scratch.indeg.extend(g.preds.iter().map(|p| p.len() as u32));
+    scratch.ready_t.clear();
+    scratch.ready_v.clear();
+    scratch.ready_f.clear();
+    scratch.events.clear();
+    let SchedScratch { indeg, ready_t, ready_v, ready_f, events } = scratch;
+
     let mut ready_at = vec![0u64; n];
     let mut start = vec![0u64; n];
     let mut finish = vec![0u64; n];
-
-    // Per-core-type ready queues ordered by (slack, asap, id).
-    // Capacities sized up front: heap regrowth showed up in the MCR hot
-    // loop (EXPERIMENTS.md section Perf).
-    type Prio = Reverse<(u64, u64, usize)>;
-    let mut ready_t: BinaryHeap<Prio> = BinaryHeap::with_capacity(n / 2 + 1);
-    let mut ready_v: BinaryHeap<Prio> = BinaryHeap::with_capacity(n / 2 + 1);
-    let mut ready_f: BinaryHeap<Prio> = BinaryHeap::with_capacity(16);
-    // Completion events: (finish_time, op).
-    let mut events: BinaryHeap<Reverse<(u64, usize)>> =
-        BinaryHeap::with_capacity((cores.tc + cores.vc) as usize + 1);
 
     let mut free_tc = cores.tc;
     let mut free_vc = cores.vc;
@@ -138,7 +183,7 @@ pub fn greedy_schedule_with_priority(
 
     for v in 0..n {
         if indeg[v] == 0 {
-            push_ready(v, &mut ready_t, &mut ready_v, &mut ready_f);
+            push_ready(v, ready_t, ready_v, ready_f);
         }
     }
 
@@ -149,9 +194,9 @@ pub fn greedy_schedule_with_priority(
         // across the three queues until nothing fits.
         loop {
             let head = |q: &BinaryHeap<Prio>| q.peek().map(|Reverse(k)| *k);
-            let cand_t = (free_tc > 0).then(|| head(&ready_t)).flatten();
-            let cand_v = (free_vc > 0).then(|| head(&ready_v)).flatten();
-            let cand_f = (free_tc > 0 && free_vc > 0).then(|| head(&ready_f)).flatten();
+            let cand_t = (free_tc > 0).then(|| head(ready_t)).flatten();
+            let cand_v = (free_vc > 0).then(|| head(ready_v)).flatten();
+            let cand_f = (free_tc > 0 && free_vc > 0).then(|| head(ready_f)).flatten();
             let best = [cand_t, cand_v, cand_f].into_iter().flatten().min();
             let Some(key) = best else { break };
             let v = key.2;
@@ -196,7 +241,7 @@ pub fn greedy_schedule_with_priority(
                 indeg[s] -= 1;
                 ready_at[s] = ready_at[s].max(now);
                 if indeg[s] == 0 {
-                    push_ready(s, &mut ready_t, &mut ready_v, &mut ready_f);
+                    push_ready(s, ready_t, ready_v, ready_f);
                 }
             }
         }
@@ -273,6 +318,25 @@ mod tests {
         let (s3, _) = sched(&g, 3, 1);
         assert!(s2.makespan <= s1.makespan);
         assert!(s3.makespan <= s2.makespan);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_buffers() {
+        let g = crate::sched::fanout3();
+        let ann = AnnotatedGraph::new(&g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        let mut scratch = SchedScratch::new();
+        for cores in
+            [CoreCount { tc: 1, vc: 1 }, CoreCount { tc: 3, vc: 1 }, CoreCount { tc: 2, vc: 2 }]
+        {
+            let fresh = greedy_schedule(&ann, &cp, cores);
+            let reused =
+                greedy_schedule_scratch(&ann, &cp, cores, Priority::Criticality, &mut scratch);
+            assert_eq!(fresh.start, reused.start);
+            assert_eq!(fresh.finish, reused.finish);
+            assert_eq!(fresh.ready_at, reused.ready_at);
+            assert_eq!(fresh.makespan, reused.makespan);
+        }
     }
 
     #[test]

@@ -14,7 +14,10 @@ pub mod asap_alap;
 pub mod list;
 
 pub use asap_alap::{asap_alap, CriticalPath};
-pub use list::{greedy_schedule, greedy_schedule_with_priority, CoreCount, Priority, Schedule};
+pub use list::{
+    evals_total, greedy_schedule, greedy_schedule_scratch, greedy_schedule_with_priority,
+    CoreCount, Priority, SchedScratch, Schedule,
+};
 
 /// Shared test fixture: a fan-out/fan-in graph with tensor parallelism 3.
 #[cfg(test)]

@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use super::engine::SearchOptions;
 use super::ilp::ilp_search;
-use super::mcr::mcr;
+use super::mcr::{mcr_with, GrowthMode};
 use super::pruner::prune_tree;
 use super::{dims, DesignPoint, TopK};
 use crate::arch::{ArchConfig, DIM_MAX};
@@ -72,7 +72,12 @@ pub fn search_common(
                 let o = ilp_search(&ann, &opts.constraints, opts.ilp_node_budget);
                 candidates.insert((o.cores.tc, o.cores.vc));
             } else {
-                for (c, _) in mcr(&ann, &opts.constraints).trajectory {
+                // One-at-a-time growth on purpose: the common search's
+                // candidate pool is the *full* trajectory — the galloping
+                // mode records only its measured landing points and would
+                // starve the pool of intermediate core counts.
+                for (c, _) in mcr_with(&ann, &opts.constraints, GrowthMode::OneAtATime).trajectory
+                {
                     candidates.insert((c.tc, c.vc));
                 }
             }

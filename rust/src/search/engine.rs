@@ -7,8 +7,8 @@ use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use super::ilp::ilp_search;
-use super::mcr::mcr;
-use super::pruner::prune_tree;
+use super::mcr::{mcr_with, GrowthMode};
+use super::pruner::prune_tree_batched;
 use super::{dims, DesignPoint, TopK};
 use crate::api::progress::{NullSink, Progress, ProgressSink};
 use crate::arch::{ArchConfig, Constraints, DIM_MAX};
@@ -33,6 +33,19 @@ pub struct SearchOptions {
     pub use_ilp: bool,
     /// Node budget for the exact solver.
     pub ilp_node_budget: u64,
+    /// Worker threads for evaluating pruner siblings concurrently
+    /// (`1` = fully serial, the library default; the CLI defaults to
+    /// `available_parallelism` via `--jobs`). The fan-out is a pure
+    /// prefetch — results, exploration order, and counters are identical
+    /// to the serial walk. Not part of the design-DB context key.
+    pub jobs: usize,
+    /// Force the paper-literal one-core-per-reschedule MCR growth
+    /// (ablation / parity knob; Perf/TDP searches use it regardless, to
+    /// score every intermediate trajectory point).
+    pub mcr_one_at_a_time: bool,
+    /// Evaluate the cost backend per-op instead of per cost class
+    /// (ablation / parity knob — annotations are bit-identical).
+    pub naive_annotation: bool,
 }
 
 impl Default for SearchOptions {
@@ -45,6 +58,9 @@ impl Default for SearchOptions {
             hysteresis: 1,
             use_ilp: false,
             ilp_node_budget: 1_000_000,
+            jobs: 1,
+            mcr_one_at_a_time: false,
+            naive_annotation: false,
         }
     }
 }
@@ -104,7 +120,12 @@ impl EvalCache for HashMap<Dims, DesignPoint> {
 /// distributed global search thread a shared design database through its
 /// internal per-stage local searches without depending on the service
 /// layer (see [`crate::distributed::global_search::global_search_cached`]).
-pub trait CacheProvider {
+///
+/// `Sync` is a supertrait: the global search fans its per-stage local
+/// searches out across threads, each obtaining its cache from the shared
+/// provider behind a mutex (implementors like the design database are
+/// internally locked anyway).
+pub trait CacheProvider: Sync {
     /// Cache scoped to `(graph, batch, opts, backend)`.
     fn cache_for<'a>(
         &'a self,
@@ -189,59 +210,135 @@ impl<'a> WhamSearch<'a> {
         let mut cancelled = false;
 
         {
-            let mut eval_dims = |d: Dims| -> f64 {
+            // Per-slot outcome of the probe pass over one sibling batch.
+            enum Slot {
+                /// Engine-level repeat (phase 2 revisits phase-1 dims):
+                /// neither a fresh evaluation nor a cache hit.
+                Known(f64),
+                /// Served by the [`EvalCache`].
+                Hit(DesignPoint),
+                /// Needs a scheduler evaluation.
+                Miss,
+            }
+            let mut eval_batch = |ds: &[Dims]| -> Vec<f64> {
                 // After cancellation the pruner's remaining probes are
                 // answered with the worst score so it terminates fast
                 // without recording phantom evaluations.
                 if cancelled {
-                    return f64::NEG_INFINITY;
+                    return vec![f64::NEG_INFINITY; ds.len()];
                 }
-                if let Some(&score) = seen.get(&d) {
-                    return score;
+                // Probe pass: exactly one engine-seen / cache lookup per
+                // dims (the cache probe feeds the design-DB hit/miss
+                // counters, so it must not repeat).
+                let slots: Vec<Slot> = ds
+                    .iter()
+                    .map(|d| {
+                        if let Some(&score) = seen.get(d) {
+                            Slot::Known(score)
+                        } else {
+                            match cache.get(d) {
+                                Some(p) => Slot::Hit(p),
+                                None => Slot::Miss,
+                            }
+                        }
+                    })
+                    .collect();
+                // Parallel prefetch (tentpole 3): evaluate this sibling
+                // group's misses concurrently, each worker on its own
+                // backend (PJRT clients are not `Sync` — the coordinator's
+                // policy). The threads only warm a private map; all
+                // bookkeeping below stays serial and in batch order, so
+                // results are bit-identical to the jobs=1 walk.
+                let mut prefetched: HashMap<Dims, (DesignPoint, usize)> = HashMap::new();
+                let misses: Vec<Dims> = ds
+                    .iter()
+                    .zip(&slots)
+                    .filter(|(_, s)| matches!(s, Slot::Miss))
+                    .map(|(d, _)| *d)
+                    .collect();
+                // Native only: workers build a fresh backend per sibling
+                // batch, which is free for `NativeCost` but would repeat
+                // the PJRT client + artifact load dozens of times per
+                // search (PJRT fan-out happens one level up, in the
+                // global search, where construction is per worker per
+                // phase).
+                if self.opts.jobs > 1
+                    && misses.len() > 1
+                    && backend.name().parse::<crate::coordinator::BackendChoice>()
+                        == Ok(crate::coordinator::BackendChoice::Native)
+                {
+                    prefetched =
+                        self.prefetch_parallel(&misses, crate::coordinator::BackendChoice::Native);
                 }
-                let point = match cache.get(&d) {
-                    Some(p) => {
-                        cache_hits += 1;
-                        p
+                // Record pass: serial, in batch order — identical
+                // explored order, trajectory, and cancellation points to
+                // the per-node walk.
+                let mut scores = Vec::with_capacity(ds.len());
+                for (d, slot) in ds.iter().zip(slots) {
+                    if cancelled {
+                        scores.push(f64::NEG_INFINITY);
+                        continue;
                     }
-                    None => {
-                        let (p, evals) = self.evaluate_dims(d, backend);
-                        scheduler_evals += evals;
-                        cache.put(d, p);
-                        p
+                    let point = match slot {
+                        Slot::Known(score) => {
+                            scores.push(score);
+                            continue;
+                        }
+                        Slot::Hit(p) => {
+                            cache_hits += 1;
+                            p
+                        }
+                        Slot::Miss => {
+                            let (p, evals) = match prefetched.remove(d) {
+                                Some(r) => r,
+                                None => self.evaluate_dims(*d, backend),
+                            };
+                            scheduler_evals += evals;
+                            cache.put(*d, p);
+                            p
+                        }
+                    };
+                    seen.insert(*d, point.score);
+                    explored.push(point);
+                    top.offer(point);
+                    let best = top.best().map(|b| b.score).unwrap_or(f64::NEG_INFINITY);
+                    trajectory.push((t0.elapsed(), best));
+                    let go = sink.on_progress(&Progress {
+                        phase: "search",
+                        elapsed: t0.elapsed(),
+                        points: explored.len(),
+                        best_score: best,
+                    });
+                    if !go {
+                        cancelled = true;
                     }
-                };
-                seen.insert(d, point.score);
-                explored.push(point);
-                top.offer(point);
-                let best = top.best().map(|b| b.score).unwrap_or(f64::NEG_INFINITY);
-                trajectory.push((t0.elapsed(), best));
-                let go = sink.on_progress(&Progress {
-                    phase: "search",
-                    elapsed: t0.elapsed(),
-                    points: explored.len(),
-                    best_score: best,
-                });
-                if !go {
-                    cancelled = true;
+                    scores.push(point.score);
                 }
-                point.score
+                scores
             };
 
             // Phase 1: tensor dims, vector width fixed at the maximum.
-            let p1 = prune_tree(
+            let p1 = prune_tree_batched(
                 vec![(DIM_MAX, DIM_MAX)],
                 |n| dims::tc_children(*n),
-                |&(x, y)| eval_dims(Dims { tc_x: x, tc_y: y, vc_w: DIM_MAX }),
+                |ns: &[(u64, u64)]| {
+                    let ds: Vec<Dims> =
+                        ns.iter().map(|&(x, y)| Dims { tc_x: x, tc_y: y, vc_w: DIM_MAX }).collect();
+                    eval_batch(&ds)
+                },
                 self.opts.hysteresis,
             );
             let (bx, by) = p1.best.expect("phase 1 explored at least the root").0;
 
             // Phase 2: vector width at the winning tensor dims.
-            let _p2 = prune_tree(
+            let _p2 = prune_tree_batched(
                 vec![DIM_MAX],
                 |&w| dims::vc_children(w),
-                |&w| eval_dims(Dims { tc_x: bx, tc_y: by, vc_w: w }),
+                |ws: &[u64]| {
+                    let ds: Vec<Dims> =
+                        ws.iter().map(|&w| Dims { tc_x: bx, tc_y: by, vc_w: w }).collect();
+                    eval_batch(&ds)
+                },
                 self.opts.hysteresis,
             );
         }
@@ -260,10 +357,52 @@ impl<'a> WhamSearch<'a> {
         }
     }
 
+    /// Evaluate `ds` concurrently on up to `opts.jobs` threads, each with
+    /// its own cost backend built from `choice` (the coordinator's
+    /// per-thread-backend pattern). Returns whatever finished; on
+    /// backend-construction failure the map is simply incomplete and the
+    /// caller evaluates the rest on its own backend.
+    fn prefetch_parallel(
+        &self,
+        ds: &[Dims],
+        choice: crate::coordinator::BackendChoice,
+    ) -> HashMap<Dims, (DesignPoint, usize)> {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let workers = self.opts.jobs.min(ds.len());
+        let next = AtomicUsize::new(0);
+        let results: Vec<std::sync::Mutex<Option<(DesignPoint, usize)>>> =
+            (0..ds.len()).map(|_| std::sync::Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let Ok(mut backend) = crate::coordinator::make_backend(choice) else {
+                        return;
+                    };
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= ds.len() {
+                            break;
+                        }
+                        let out = self.evaluate_dims(ds[i], backend.as_mut());
+                        *results[i].lock().unwrap() = Some(out);
+                    }
+                });
+            }
+        });
+        ds.iter()
+            .zip(results)
+            .filter_map(|(d, r)| r.into_inner().unwrap().map(|out| (*d, out)))
+            .collect()
+    }
+
     /// Evaluate one `<TC-Dim, VC-Width>`: annotate, pick core counts,
     /// schedule, score. Returns the design point and scheduler-eval count.
     fn evaluate_dims(&self, d: Dims, backend: &mut dyn CostBackend) -> (DesignPoint, usize) {
-        let ann = AnnotatedGraph::new(self.graph, d, backend);
+        let ann = if self.opts.naive_annotation {
+            AnnotatedGraph::new_naive(self.graph, d, backend)
+        } else {
+            AnnotatedGraph::new(self.graph, d, backend)
+        };
         let energy = ann.total_energy_pj();
         let mk_point = |cores: CoreCount, makespan: u64| -> DesignPoint {
             let config = ArchConfig {
@@ -284,8 +423,14 @@ impl<'a> WhamSearch<'a> {
             // Score every accepted point of the MCR trajectory: under
             // Perf/TDP the most efficient design is often an intermediate
             // core count (paper: "maximize Perf/TDP while maintaining a
-            // minimum throughput").
-            let out = mcr(&ann, &self.opts.constraints);
+            // minimum throughput") — which is also why Perf/TDP keeps the
+            // one-at-a-time growth (gallop skips intermediate points).
+            let mode = if self.opts.mcr_one_at_a_time || self.opts.metric == Metric::PerfPerTdp {
+                GrowthMode::OneAtATime
+            } else {
+                GrowthMode::Gallop
+            };
+            let out = mcr_with(&ann, &self.opts.constraints, mode);
             let best = out
                 .trajectory
                 .iter()
@@ -387,6 +532,49 @@ mod tests {
         let opts = SearchOptions { use_ilp: true, ilp_node_budget: 100_000, ..Default::default() };
         let r = WhamSearch::new(&g, 1, opts).run(&mut NativeCost);
         assert!(r.best.config.num_tc >= 1);
+    }
+
+    #[test]
+    fn parallel_sibling_evaluation_matches_serial() {
+        let g = bert1_graph();
+        let serial = WhamSearch::new(&g, 4, SearchOptions::default()).run(&mut NativeCost);
+        let par = WhamSearch::new(&g, 4, SearchOptions { jobs: 4, ..Default::default() })
+            .run(&mut NativeCost);
+        assert_eq!(par.best.config, serial.best.config);
+        assert_eq!(par.best.score, serial.best.score);
+        assert_eq!(par.dims_evaluated, serial.dims_evaluated);
+        assert_eq!(par.scheduler_evals, serial.scheduler_evals);
+        let s_top: Vec<_> = serial.top.points().iter().map(|p| p.config).collect();
+        let p_top: Vec<_> = par.top.points().iter().map(|p| p.config).collect();
+        assert_eq!(s_top, p_top, "top-k set must not depend on --jobs");
+        for (a, b) in serial.explored.iter().zip(&par.explored) {
+            assert_eq!(a.config, b.config, "exploration order must not depend on --jobs");
+        }
+    }
+
+    #[test]
+    fn legacy_knobs_pin_the_fast_paths() {
+        // The whole perf pass is outcome-preserving: naive per-op
+        // annotation + one-core-at-a-time MCR must land on the same best
+        // design as the interned + galloping defaults, with the legacy
+        // path paying strictly more scheduler evals.
+        let g = bert1_graph();
+        let fast = WhamSearch::new(&g, 4, SearchOptions::default()).run(&mut NativeCost);
+        let legacy_opts = SearchOptions {
+            mcr_one_at_a_time: true,
+            naive_annotation: true,
+            ..Default::default()
+        };
+        let legacy = WhamSearch::new(&g, 4, legacy_opts).run(&mut NativeCost);
+        assert_eq!(fast.best.config, legacy.best.config);
+        assert_eq!(fast.best.eval.cycles, legacy.best.eval.cycles);
+        assert_eq!(fast.dims_evaluated, legacy.dims_evaluated);
+        assert!(
+            fast.scheduler_evals <= legacy.scheduler_evals,
+            "gallop must not pay more evals: {} vs {}",
+            fast.scheduler_evals,
+            legacy.scheduler_evals
+        );
     }
 
     #[test]

@@ -109,7 +109,7 @@ impl<'a> BranchBound<'a> {
     fn new(ann: &'a AnnotatedGraph<'a>, tc: u64, vc: u64, budget: u64) -> Self {
         let g = ann.graph;
         let mut tail = vec![0u64; g.len()];
-        for &v in g.topo_order().iter().rev() {
+        for &v in g.topo_order_cached().iter().rev() {
             let succ_max = g.succs[v].iter().map(|&s| tail[s]).max().unwrap_or(0);
             tail[v] = ann.cycles[v] + succ_max;
         }

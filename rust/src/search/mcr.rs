@@ -12,7 +12,33 @@
 use crate::arch::{ArchConfig, Constraints, CORES_MAX};
 use crate::cost::annotate::AnnotatedGraph;
 use crate::graph::CoreType;
-use crate::sched::{asap_alap, greedy_schedule, CoreCount, CriticalPath, Schedule};
+use crate::sched::{
+    asap_alap, greedy_schedule_scratch, CoreCount, CriticalPath, Priority, SchedScratch, Schedule,
+};
+
+/// How the loop grows a conflicted core type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GrowthMode {
+    /// Grow geometrically (1, 2, 4, …) and binary-search back to the
+    /// smallest count whose schedule passes the accept checks:
+    /// O(log final cores) scheduler runs per conflict instead of
+    /// O(final cores). Lands on the same `(cores, makespan)` as
+    /// [`GrowthMode::OneAtATime`] whenever makespan plateaus stop both
+    /// walks at the same count — true of the branching structure of the
+    /// Table-4 workloads, and pinned by `rust/tests/hotpath_parity.rs`.
+    /// (A plateau-then-improve staircase at an unmeasured count *could*
+    /// make gallop land deeper/better; the design-DB context key keeps
+    /// the two modes' mined points separate for exactly that reason.)
+    /// Records only the measured points in the trajectory.
+    #[default]
+    Gallop,
+    /// Paper-literal Algorithm 1: one core per iteration, one greedy
+    /// reschedule per addition. The parity baseline — and the mode the
+    /// engine picks for Perf/TDP, where every intermediate trajectory
+    /// point is scored (the most efficient design is often before the
+    /// last addition).
+    OneAtATime,
+}
 
 /// Outcome of the MCR loop for one dimension configuration.
 #[derive(Debug, Clone)]
@@ -27,30 +53,182 @@ pub struct McrOutcome {
     pub evals: usize,
     /// Whether the theoretical best latency was reached.
     pub hit_bound: bool,
-    /// Every accepted `(cores, makespan)` along the growth trajectory —
+    /// Accepted `(cores, makespan)` points along the growth trajectory —
     /// metric-aware callers (Perf/TDP with a throughput floor) score all
     /// of them, since the most efficient point is often before the last
-    /// core addition.
+    /// core addition. Under [`GrowthMode::OneAtATime`] this is *every*
+    /// accepted addition; under [`GrowthMode::Gallop`] only the measured
+    /// landing points (the endpoint is identical).
     pub trajectory: Vec<(CoreCount, u64)>,
 }
 
-/// Run Algorithm 1 over an annotated graph.
+/// One core count plus `k` cores of `t` (a whole TC+VC unit if fused).
+fn add_cores(c: CoreCount, t: CoreType, k: u64) -> CoreCount {
+    match t {
+        CoreType::Tensor => CoreCount { tc: c.tc + k, vc: c.vc },
+        CoreType::Vector => CoreCount { tc: c.tc, vc: c.vc + k },
+        CoreType::Fused => CoreCount { tc: c.tc + k, vc: c.vc + k },
+    }
+}
+
+/// Run Algorithm 1 over an annotated graph with the default (galloping)
+/// growth mode.
 pub fn mcr(ann: &AnnotatedGraph, constraints: &Constraints) -> McrOutcome {
+    mcr_with(ann, constraints, GrowthMode::default())
+}
+
+/// Shared machinery of one MCR run: the critical-path bounds, the
+/// reusable scheduler scratch, and the galloping axis growth used by
+/// both the conflict loop and the polish loop.
+struct McrCtx<'a> {
+    ann: &'a AnnotatedGraph<'a>,
+    cp: &'a CriticalPath,
+    constraints: &'a Constraints,
+    max_tc: u64,
+    max_vc: u64,
+    // One scratch for the whole run: every reschedule reuses the
+    // in-degree vector and the ready/event heaps.
+    scratch: SchedScratch,
+    evals: usize,
+}
+
+impl McrCtx<'_> {
+    fn eval(&mut self, cand: CoreCount) -> Schedule {
+        self.evals += 1;
+        greedy_schedule_scratch(self.ann, self.cp, cand, Priority::Criticality, &mut self.scratch)
+    }
+
+    fn cfg_of(&self, c: CoreCount) -> ArchConfig {
+        ArchConfig {
+            num_tc: c.tc,
+            tc_x: self.ann.dims.tc_x,
+            tc_y: self.ann.dims.tc_y,
+            num_vc: c.vc,
+            vc_w: self.ann.dims.vc_w,
+        }
+    }
+
+    fn feasible(&self, c: CoreCount) -> bool {
+        c.tc <= self.max_tc && c.vc <= self.max_vc && self.constraints.allows(&self.cfg_of(c))
+    }
+
+    /// Largest feasible addition along `axis` from `cores`. Area/power
+    /// are monotone in counts, so feasibility is a prefix: O(log)
+    /// constraint checks, zero scheduler runs.
+    fn room(&self, cores: CoreCount, axis: CoreType) -> u64 {
+        let lim = match axis {
+            CoreType::Tensor => self.max_tc - cores.tc.min(self.max_tc),
+            CoreType::Vector => self.max_vc - cores.vc.min(self.max_vc),
+            CoreType::Fused => (self.max_tc - cores.tc.min(self.max_tc))
+                .min(self.max_vc - cores.vc.min(self.max_vc)),
+        };
+        if lim == 0 || self.feasible(add_cores(cores, axis, lim)) {
+            return lim;
+        }
+        let (mut lo, mut hi) = (0u64, lim);
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if self.feasible(add_cores(cores, axis, mid)) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Galloping growth along one axis: measure additions k = 1, 2, 4, …
+    /// (clamped to the feasible room) while each measured point strictly
+    /// improves on the previous one — the same accept check Algorithm 1
+    /// applies per single addition, at doubling distance — then
+    /// binary-search back to the smallest addition whose schedule
+    /// reaches the best measured makespan. With the scheduler's makespan
+    /// non-increasing in the count, that is exactly where the
+    /// one-at-a-time accept chain stops (each unit step up to it
+    /// strictly improves). Returns `Some((k, landing))` with `k >= 1`,
+    /// or `None` when a single addition is infeasible or does not
+    /// improve on `cur_ms`.
+    fn gallop_axis(
+        &mut self,
+        cores: CoreCount,
+        cur_ms: u64,
+        axis: CoreType,
+        best_latency: u64,
+    ) -> Option<(u64, Schedule)> {
+        let room = self.room(cores, axis);
+        if room == 0 {
+            return None;
+        }
+        let mut prev_k = 0u64; // measured improving point below `last_k`
+        let mut last_k = 0u64; // best measured improving point
+        let mut last_ms = cur_ms;
+        let mut last_sched: Option<Schedule> = None;
+        let mut k = 1u64;
+        loop {
+            let s = self.eval(add_cores(cores, axis, k));
+            if s.makespan < last_ms {
+                prev_k = last_k;
+                last_k = k;
+                last_ms = s.makespan;
+                last_sched = Some(s);
+                if last_ms == best_latency || k == room {
+                    break;
+                }
+                k = (k * 2).min(room);
+            } else {
+                break; // first non-improving measured point brackets the landing
+            }
+        }
+        let mut landing = last_sched?; // None: even +1 does not improve
+        let (mut lo, mut hi) = (prev_k, last_k);
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            let s = self.eval(add_cores(cores, axis, mid));
+            if s.makespan <= last_ms {
+                last_ms = s.makespan;
+                hi = mid;
+                landing = s;
+            } else {
+                lo = mid;
+            }
+        }
+        Some((hi, landing))
+    }
+}
+
+/// Run Algorithm 1 with an explicit growth mode.
+pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMode) -> McrOutcome {
     let cp = asap_alap(ann);
     // Critical-path bound on useful core counts (section 3): adding more
     // cores than the graph's peak parallelism cannot help.
     let max_tc = cp.max_parallelism(ann, CoreType::Tensor).clamp(1, CORES_MAX);
     let max_vc = cp.max_parallelism(ann, CoreType::Vector).clamp(1, CORES_MAX);
+    let mut ctx = McrCtx {
+        ann,
+        cp: &cp,
+        constraints,
+        max_tc,
+        max_vc,
+        scratch: SchedScratch::new(),
+        evals: 0,
+    };
 
     let mut cores = CoreCount { tc: 1, vc: 1 };
-    let mut sched = greedy_schedule(ann, &cp, cores);
-    let mut evals = 1usize;
+    let mut sched = ctx.eval(cores);
     let mut trajectory = vec![(cores, sched.makespan)];
     // A core type saturates when growing it stops helping (constraint hit
     // or CheckRuntimeIsWorse); a successful addition of the other type can
     // change the schedule, so saturation resets on acceptance.
     let mut sat_tc = false;
     let mut sat_vc = false;
+    let saturate = |t: CoreType, sat_tc: &mut bool, sat_vc: &mut bool| match t {
+        CoreType::Tensor => *sat_tc = true,
+        CoreType::Vector => *sat_vc = true,
+        CoreType::Fused => {
+            *sat_tc = true;
+            *sat_vc = true;
+        }
+    };
 
     loop {
         if sched.makespan == cp.best_latency {
@@ -67,47 +245,44 @@ pub fn mcr(ann: &AnnotatedGraph, constraints: &Constraints) -> McrOutcome {
             break; // no resolvable conflicts remain
         };
         let needed = ann.core[conflict];
-        let saturate = |t: CoreType, sat_tc: &mut bool, sat_vc: &mut bool| match t {
-            CoreType::Tensor => *sat_tc = true,
-            CoreType::Vector => *sat_vc = true,
-            CoreType::Fused => {
-                *sat_tc = true;
-                *sat_vc = true;
+
+        match mode {
+            GrowthMode::OneAtATime => {
+                // Paper-literal: add the one core the conflicted operator
+                // needs (whole unit if fused), accept iff strictly better.
+                let cand = add_cores(cores, needed, 1);
+                if cand.tc > max_tc || cand.vc > max_vc {
+                    saturate(needed, &mut sat_tc, &mut sat_vc); // parallelizability bound
+                    continue;
+                }
+                if !constraints.allows(&ctx.cfg_of(cand)) {
+                    saturate(needed, &mut sat_tc, &mut sat_vc); // AddCoreCheckConstraints
+                    continue;
+                }
+                let cand_sched = ctx.eval(cand);
+                if cand_sched.makespan >= sched.makespan {
+                    saturate(needed, &mut sat_tc, &mut sat_vc); // CheckRuntimeIsWorse
+                    continue;
+                }
+                cores = cand;
+                sched = cand_sched;
             }
-        };
-        // Add the core the conflicted operator needs (whole unit if fused).
-        let mut cand = cores;
-        match needed {
-            CoreType::Tensor => cand.tc += 1,
-            CoreType::Vector => cand.vc += 1,
-            CoreType::Fused => {
-                cand.tc += 1;
-                cand.vc += 1;
+            GrowthMode::Gallop => {
+                // Run the whole accept chain for this core type at
+                // doubling distance (Algorithm 1 would re-find the same
+                // conflict type until the type stops helping).
+                let Some((k, landing)) =
+                    ctx.gallop_axis(cores, sched.makespan, needed, cp.best_latency)
+                else {
+                    // Infeasible or not an improvement — the same three
+                    // saturation cases as the one-at-a-time walk.
+                    saturate(needed, &mut sat_tc, &mut sat_vc);
+                    continue;
+                };
+                cores = add_cores(cores, needed, k);
+                sched = landing;
             }
         }
-        if cand.tc > max_tc || cand.vc > max_vc {
-            saturate(needed, &mut sat_tc, &mut sat_vc); // parallelizability bound
-            continue;
-        }
-        let cfg = ArchConfig {
-            num_tc: cand.tc,
-            tc_x: ann.dims.tc_x,
-            tc_y: ann.dims.tc_y,
-            num_vc: cand.vc,
-            vc_w: ann.dims.vc_w,
-        };
-        if !constraints.allows(&cfg) {
-            saturate(needed, &mut sat_tc, &mut sat_vc); // AddCoreCheckConstraints
-            continue;
-        }
-        let cand_sched = greedy_schedule(ann, &cp, cand);
-        evals += 1;
-        if cand_sched.makespan >= sched.makespan {
-            saturate(needed, &mut sat_tc, &mut sat_vc); // CheckRuntimeIsWorse
-            continue;
-        }
-        cores = cand;
-        sched = cand_sched;
         trajectory.push((cores, sched.makespan));
         sat_tc = false;
         sat_vc = false;
@@ -116,41 +291,47 @@ pub fn mcr(ann: &AnnotatedGraph, constraints: &Constraints) -> McrOutcome {
     // Polish: aggregate contention can shorten the makespan even when no
     // single operator crosses its ALAP (the conflict criterion). Greedily
     // grow either core type while it strictly improves the schedule —
-    // still bounded by the parallelism limit and constraints.
+    // still bounded by the parallelism limit and constraints. Under
+    // galloping growth a run of same-axis improvements costs O(log run)
+    // reschedules (the one-at-a-time walk retries the same axis first
+    // after every accept, so a maximal run is the identical chain).
     let mut improved = true;
     while improved && sched.makespan > cp.best_latency {
         improved = false;
-        for add_tc in [true, false] {
-            let cand = CoreCount {
-                tc: cores.tc + u64::from(add_tc),
-                vc: cores.vc + u64::from(!add_tc),
-            };
-            if cand.tc > max_tc || cand.vc > max_vc {
-                continue;
-            }
-            let cfg = ArchConfig {
-                num_tc: cand.tc,
-                tc_x: ann.dims.tc_x,
-                tc_y: ann.dims.tc_y,
-                num_vc: cand.vc,
-                vc_w: ann.dims.vc_w,
-            };
-            if !constraints.allows(&cfg) {
-                continue;
-            }
-            let cand_sched = greedy_schedule(ann, &cp, cand);
-            evals += 1;
-            if cand_sched.makespan < sched.makespan {
-                cores = cand;
-                sched = cand_sched;
-                trajectory.push((cores, sched.makespan));
-                improved = true;
-                break;
+        for axis in [CoreType::Tensor, CoreType::Vector] {
+            match mode {
+                GrowthMode::Gallop => {
+                    if let Some((k, landing)) =
+                        ctx.gallop_axis(cores, sched.makespan, axis, cp.best_latency)
+                    {
+                        cores = add_cores(cores, axis, k);
+                        sched = landing;
+                        trajectory.push((cores, sched.makespan));
+                        improved = true;
+                        break;
+                    }
+                }
+                GrowthMode::OneAtATime => {
+                    let cand = add_cores(cores, axis, 1);
+                    if !ctx.feasible(cand) {
+                        continue;
+                    }
+                    let cand_sched = ctx.eval(cand);
+                    if cand_sched.makespan < sched.makespan {
+                        cores = cand;
+                        sched = cand_sched;
+                        trajectory.push((cores, sched.makespan));
+                        improved = true;
+                        break;
+                    }
+                }
             }
         }
     }
 
     let hit_bound = sched.makespan == cp.best_latency;
+    let evals = ctx.evals;
+    drop(ctx); // ends the ctx borrow of `cp` before the move below
     McrOutcome { cores, schedule: sched, critical: cp, evals, hit_bound, trajectory }
 }
 
@@ -160,6 +341,7 @@ mod tests {
     use crate::cost::native::NativeCost;
     use crate::cost::Dims;
     use crate::graph::GraphBuilder;
+    use crate::sched::greedy_schedule;
 
     const D: Dims = Dims { tc_x: 64, tc_y: 64, vc_w: 64 };
 
@@ -217,5 +399,45 @@ mod tests {
         let g = crate::sched::fanout3();
         let out = run(&g);
         assert!(out.schedule.makespan >= out.critical.best_latency);
+    }
+
+    #[test]
+    fn gallop_lands_where_one_at_a_time_lands() {
+        // The tentpole contract: same `(cores, makespan)`, fewer evals.
+        let fwd = crate::models::transformer::forward_range(
+            &crate::models::transformer::bert_base(),
+            0,
+            2,
+        );
+        let bert2 =
+            crate::graph::autodiff::training_graph(&fwd, crate::graph::autodiff::Optimizer::Adam);
+        for (g, d) in [
+            (crate::sched::fanout3(), D),
+            (bert2, Dims { tc_x: 128, tc_y: 64, vc_w: 128 }),
+        ] {
+            let ann = AnnotatedGraph::new(&g, d, &mut NativeCost);
+            let fast = mcr_with(&ann, &Constraints::default(), GrowthMode::Gallop);
+            let slow = mcr_with(&ann, &Constraints::default(), GrowthMode::OneAtATime);
+            assert_eq!(fast.cores, slow.cores, "gallop endpoint must match");
+            assert_eq!(fast.schedule.makespan, slow.schedule.makespan);
+            assert_eq!(fast.hit_bound, slow.hit_bound);
+            assert!(
+                fast.evals <= slow.evals,
+                "gallop must not pay more scheduler runs: {} vs {}",
+                fast.evals,
+                slow.evals
+            );
+        }
+    }
+
+    #[test]
+    fn gallop_respects_tight_constraints_like_one_at_a_time() {
+        let g = crate::sched::fanout3();
+        let ann = AnnotatedGraph::new(&g, Dims { tc_x: 256, tc_y: 256, vc_w: 256 }, &mut NativeCost);
+        let tight = Constraints { max_area_mm2: 170.0, max_power_w: 80.0 };
+        let fast = mcr_with(&ann, &tight, GrowthMode::Gallop);
+        let slow = mcr_with(&ann, &tight, GrowthMode::OneAtATime);
+        assert_eq!(fast.cores, slow.cores);
+        assert_eq!(fast.schedule.makespan, slow.schedule.makespan);
     }
 }

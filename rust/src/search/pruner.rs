@@ -24,7 +24,7 @@ pub struct PruneOutcome<N> {
     pub pruned_estimate: usize,
 }
 
-/// Breadth-first prune (Algorithm 2).
+/// Breadth-first prune (Algorithm 2) with per-node scoring.
 ///
 /// * `roots` — the starting (largest) configuration(s);
 /// * `children(n)` — next-level configurations derived from `n`;
@@ -35,7 +35,7 @@ pub struct PruneOutcome<N> {
 ///   are worse than the node itself.
 pub fn prune_tree<N, FC, FS>(
     roots: Vec<N>,
-    mut children: FC,
+    children: FC,
     mut score: FS,
     hysteresis: u32,
 ) -> PruneOutcome<N>
@@ -44,6 +44,27 @@ where
     FC: FnMut(&N) -> Vec<N>,
     FS: FnMut(&N) -> f64,
 {
+    prune_tree_batched(roots, children, |ns: &[N]| ns.iter().map(&mut score).collect(), hysteresis)
+}
+
+/// Breadth-first prune scoring whole *sibling groups* per call.
+///
+/// Identical exploration to [`prune_tree`] — same node order, same
+/// pruning decisions — but the evaluator sees each node's fresh children
+/// as one slice, which is the unit the engine fans out across threads
+/// (per-thread cost backends; see `search/engine.rs`). `score_batch`
+/// must return one score per node, in order.
+pub fn prune_tree_batched<N, FC, FB>(
+    roots: Vec<N>,
+    mut children: FC,
+    mut score_batch: FB,
+    hysteresis: u32,
+) -> PruneOutcome<N>
+where
+    N: Clone + Eq + Hash,
+    FC: FnMut(&N) -> Vec<N>,
+    FB: FnMut(&[N]) -> Vec<f64>,
+{
     let mut seen: HashMap<N, f64> = HashMap::new();
     let mut explored: Vec<(N, f64)> = Vec::new();
     let mut best: Option<(N, f64)> = None;
@@ -51,25 +72,39 @@ where
 
     // Queue entries carry the hysteresis budget left on their branch.
     let mut queue: VecDeque<(N, u32)> = VecDeque::new();
-    let mut eval = |n: &N,
-                    seen: &mut HashMap<N, f64>,
-                    explored: &mut Vec<(N, f64)>,
-                    best: &mut Option<(N, f64)>|
-     -> f64 {
-        if let Some(&s) = seen.get(n) {
-            return s;
+    // Score the not-yet-seen members of `batch` (first occurrence wins —
+    // duplicate dimensions reached via another path are skipped exactly
+    // like the per-node walk did) and record them in order. Returns the
+    // fresh `(node, score)` pairs.
+    let mut eval_batch = |batch: &[N],
+                          seen: &mut HashMap<N, f64>,
+                          explored: &mut Vec<(N, f64)>,
+                          best: &mut Option<(N, f64)>|
+     -> Vec<(N, f64)> {
+        let mut fresh: Vec<N> = Vec::new();
+        for n in batch {
+            if !seen.contains_key(n) && !fresh.contains(n) {
+                fresh.push(n.clone());
+            }
         }
-        let s = score(n);
-        seen.insert(n.clone(), s);
-        explored.push((n.clone(), s));
-        if best.as_ref().map_or(true, |(_, bs)| s > *bs) {
-            *best = Some((n.clone(), s));
+        if fresh.is_empty() {
+            return Vec::new();
         }
-        s
+        let scores = score_batch(&fresh);
+        assert_eq!(scores.len(), fresh.len(), "score_batch must return one score per node");
+        let out: Vec<(N, f64)> = fresh.into_iter().zip(scores).collect();
+        for (n, s) in &out {
+            seen.insert(n.clone(), *s);
+            explored.push((n.clone(), *s));
+            if best.as_ref().map_or(true, |(_, bs)| *s > *bs) {
+                *best = Some((n.clone(), *s));
+            }
+        }
+        out
     };
 
+    let _ = eval_batch(&roots, &mut seen, &mut explored, &mut best);
     for r in roots {
-        let _ = eval(&r, &mut seen, &mut explored, &mut best);
         queue.push_back((r, hysteresis));
     }
 
@@ -79,18 +114,8 @@ where
         if kids.is_empty() {
             continue;
         }
-        let mut any_better = false;
-        let mut fresh: Vec<(N, f64)> = Vec::new();
-        for k in kids {
-            if seen.contains_key(&k) {
-                continue; // duplicate dimension reached via another path
-            }
-            let s = eval(&k, &mut seen, &mut explored, &mut best);
-            fresh.push((k, s));
-            if s > parent_score {
-                any_better = true;
-            }
-        }
+        let fresh = eval_batch(&kids, &mut seen, &mut explored, &mut best);
+        let any_better = fresh.iter().any(|(_, s)| *s > parent_score);
         if any_better {
             // GetBetterConfigs: only the improving children continue with
             // a refreshed hysteresis budget; the worse siblings' subtrees
@@ -180,6 +205,28 @@ mod tests {
         let deep = prune_tree(vec![(256u64, 256u64)], |n| dims::tc_children(*n), score, 3);
         assert_eq!(shallow.best.unwrap().1, 10.0);
         assert_eq!(deep.best.unwrap().0, (64, 64));
+    }
+
+    #[test]
+    fn batched_walk_matches_per_node_walk() {
+        let per_node =
+            prune_tree(vec![(256u64, 256u64)], |n| dims::tc_children(*n), peaked((64, 32)), 2);
+        let mut batches = 0usize;
+        let mut f = peaked((64, 32));
+        let batched = prune_tree_batched(
+            vec![(256u64, 256u64)],
+            |n| dims::tc_children(*n),
+            |ns: &[(u64, u64)]| {
+                batches += 1;
+                ns.iter().map(&mut f).collect()
+            },
+            2,
+        );
+        assert_eq!(per_node.best, batched.best);
+        assert_eq!(per_node.explored, batched.explored);
+        assert_eq!(per_node.pruned_estimate, batched.pruned_estimate);
+        // Whole sibling groups per call: far fewer calls than nodes.
+        assert!(batches < per_node.explored.len(), "{batches} batches");
     }
 
     #[test]

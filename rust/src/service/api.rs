@@ -29,7 +29,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::api::reply::{CoalescerCounters, DbCounters, SearchCounters};
+use crate::api::reply::{
+    CoalescerCounters, DbCounters, EndpointStat, PerfCounters, SearchCounters,
+};
 use crate::api::{
     ApiError, CommonRequest, EvaluateRequest, FromJson, GlobalRequest, NullSink, SearchRequest,
     Session, StatusReply, ToJson, WorkloadReply,
@@ -39,6 +41,57 @@ use crate::cost::native::NativeCost;
 use crate::service::cache::DesignDb;
 use crate::service::http::{Handler, Request, Response};
 use crate::service::queue::Coalescer;
+
+/// Sliding-window latency recorder for one endpoint: a ring of the most
+/// recent [`LatencyRing::CAP`] request walls (microseconds), enough for
+/// p50/p95 without unbounded memory or a histogram dependency.
+pub struct LatencyRing {
+    name: &'static str,
+    count: AtomicU64,
+    samples: std::sync::Mutex<Vec<u32>>,
+}
+
+impl LatencyRing {
+    const CAP: usize = 512;
+
+    fn new(name: &'static str) -> Self {
+        Self { name, count: AtomicU64::new(0), samples: std::sync::Mutex::new(Vec::new()) }
+    }
+
+    /// Record one request's wall clock.
+    pub fn note(&self, wall: std::time::Duration) {
+        let v = wall.as_micros().min(u128::from(u32::MAX)) as u32;
+        let mut s = self.samples.lock().unwrap();
+        // Ticket taken under the lock so the slot index stays consistent
+        // with the vec length during warm-up and wrap-around.
+        let n = self.count.fetch_add(1, Ordering::Relaxed) as usize;
+        if s.len() < Self::CAP {
+            s.push(v);
+        } else {
+            s[n % Self::CAP] = v;
+        }
+    }
+
+    /// Digest over the current window; `None` before the first request.
+    pub fn stat(&self) -> Option<EndpointStat> {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return None;
+        }
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return None;
+        }
+        s.sort_unstable();
+        let pick = |q: f64| s[((s.len() - 1) as f64 * q).round() as usize] as f64 / 1e3;
+        Some(EndpointStat {
+            endpoint: self.name.to_string(),
+            count,
+            p50_ms: pick(0.5),
+            p95_ms: pick(0.95),
+        })
+    }
+}
 
 /// Shared state of one running service.
 pub struct ServiceState {
@@ -56,6 +109,8 @@ pub struct ServiceState {
     pub warm_searches: AtomicU64,
     /// Scheduler invocations across all leader computations.
     pub scheduler_evals_total: AtomicU64,
+    /// Per-endpoint latency windows (perf observability — `/status`).
+    pub latency: Vec<LatencyRing>,
 }
 
 impl ServiceState {
@@ -71,13 +126,25 @@ impl ServiceState {
             cold_searches: AtomicU64::new(0),
             warm_searches: AtomicU64::new(0),
             scheduler_evals_total: AtomicU64::new(0),
+            latency: ["/models", "/status", "/search", "/evaluate", "/common", "/global", "/workloads"]
+                .into_iter()
+                .map(LatencyRing::new)
+                .collect(),
         }
     }
 
     /// Snapshot of the service counters as the typed `/status` reply.
     pub fn status(&self) -> StatusReply {
         let db = self.db.stats();
+        let probes = db.hits + db.misses;
+        let perf = PerfCounters {
+            backend_rows_total: crate::cost::backend_rows_total(),
+            scheduler_evals_total: crate::sched::evals_total(),
+            db_hit_rate: if probes == 0 { 0.0 } else { db.hits as f64 / probes as f64 },
+            endpoints: self.latency.iter().filter_map(LatencyRing::stat).collect(),
+        };
         StatusReply {
+            perf,
             uptime_ms: self.started.elapsed().as_millis() as u64,
             workers: self.workers as u64,
             requests: self.requests.load(Ordering::Relaxed),
@@ -120,13 +187,19 @@ impl Handler for Api {
         // than serve nothing.
         let backend = make_backend(self.state.backend_choice)
             .unwrap_or_else(|_| Box::new(NativeCost));
-        Session::with_backend(backend).with_db(Arc::clone(&self.state.db))
+        // Per-request fan-out budget: split the machine across the
+        // request workers, so a lone heavy `/global` on a low-worker
+        // deployment still scales with cores without oversubscribing a
+        // fully-parallel one.
+        let jobs = (crate::util::default_jobs() / self.state.workers.max(1)).max(1);
+        Session::with_backend(backend).with_db(Arc::clone(&self.state.db)).with_jobs(jobs)
     }
 
     fn handle(&self, session: &mut Self::Ctx, req: &Request) -> Response {
         let s = &self.state;
         s.requests.fetch_add(1, Ordering::Relaxed);
-        match (req.method.as_str(), req.path.as_str()) {
+        let t0 = Instant::now();
+        let resp = match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/models") => Response::json(session.models().to_json()),
             ("GET", "/status") => Response::json(s.status().to_json()),
             ("POST", "/search") => search_response(s, session, &req.body),
@@ -147,7 +220,13 @@ impl Handler for Api {
                 404,
                 "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, GET /status",
             ),
+        };
+        // Latency window per known endpoint (coalesced followers count
+        // too — their wait is what a client experienced).
+        if let Some(ring) = s.latency.iter().find(|r| r.name == req.path) {
+            ring.note(t0.elapsed());
         }
+        resp
     }
 }
 

@@ -290,6 +290,13 @@ mod tests {
         // they share the cache.
         let wide = SearchOptions { top_k: 50, hysteresis: 3, ..base };
         assert_eq!(k0, context_key(fp, 4, &wide, "native"));
+        // The MCR growth modes keep separate contexts (a staircase
+        // makespan could land them on different cores); the interning
+        // and jobs knobs are bit-identical and share the cache.
+        let legacy_mcr = SearchOptions { mcr_one_at_a_time: true, ..base };
+        assert_ne!(k0, context_key(fp, 4, &legacy_mcr, "native"));
+        let fast_knobs = SearchOptions { naive_annotation: true, jobs: 8, ..base };
+        assert_eq!(k0, context_key(fp, 4, &fast_knobs, "native"));
     }
 
     #[test]

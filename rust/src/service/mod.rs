@@ -41,7 +41,9 @@ pub struct ServeOptions {
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { workers: 8, db_path: None, backend: BackendChoice::Auto }
+        // Worker count follows the machine (the CLI's --workers/--jobs
+        // default), not a magic constant.
+        Self { workers: crate::util::default_jobs(), db_path: None, backend: BackendChoice::Auto }
     }
 }
 

@@ -24,6 +24,13 @@ pub fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Machine parallelism, the default for every `--jobs`-shaped knob (CLI
+/// `--jobs`, `wham serve --workers`). Falls back to 1 where the OS
+/// refuses to answer.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
+}
+
 /// Integer ceiling division. The cost model and schedulers use this in
 /// many places; keep it `u64` so GEMM tile products cannot overflow.
 #[inline]

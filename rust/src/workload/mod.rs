@@ -25,6 +25,7 @@ pub mod expr;
 pub mod lower;
 pub mod registry;
 pub mod spec;
+pub mod testgen;
 
 use std::path::Path;
 use std::sync::{OnceLock, RwLock};

@@ -1,0 +1,92 @@
+//! Random-but-valid workload-spec generation for property tests.
+//!
+//! Lives in the library (rather than one test binary) so every
+//! integration suite can draw the same distribution:
+//! `rust/tests/workload_spec.rs` proves random specs lower to clean
+//! graphs; `rust/tests/hotpath_parity.rs` proves the interned/galloping
+//! hot paths reproduce the legacy paths bit-for-bit across the same
+//! random specs.
+
+use crate::util::prop::Gen;
+
+/// Build a random — but by construction valid — spec document.
+pub fn random_spec_json(g: &mut Gen) -> String {
+    let dim = |g: &mut Gen| g.rng.range(1, 32);
+    let mut items: Vec<String> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+
+    let op = |g: &mut Gen, names: &[String], idx: usize| -> (String, String) {
+        let first = idx == 0;
+        let name = format!("n{idx}");
+        let d1 = dim(g);
+        let d2 = dim(g);
+        let d3 = dim(g);
+        // Explicit inputs sometimes reference an earlier named op;
+        // "prev" only once a previous item exists.
+        let inputs = if !first && !names.is_empty() && g.rng.chance(0.4) {
+            let a = g.rng.choose(names).clone();
+            if g.rng.chance(0.5) {
+                format!(",\"inputs\":[{:?},\"prev\"]", a)
+            } else {
+                format!(",\"inputs\":[{a:?}]")
+            }
+        } else if first {
+            ",\"inputs\":[]".to_string()
+        } else {
+            String::new()
+        };
+        let body = match g.rng.below(7) {
+            0 => format!("\"op\":\"linear\",\"m\":{d1},\"n\":{d2},\"k\":{d3}"),
+            1 => format!(
+                "\"op\":\"activation\",\"elems\":{},\"intensity\":{}",
+                d1 * d2,
+                1 + g.rng.below(5)
+            ),
+            2 => format!("\"op\":\"pool\",\"elems\":{}", d1 * d2),
+            3 => format!("\"op\":\"softmax\",\"rows\":{d1},\"cols\":{d2}"),
+            4 => format!(
+                "\"op\":\"conv\",\"in_c\":{d1},\"out_c\":{d2},\"k\":3,\"hw\":{}",
+                1 + g.rng.below(16)
+            ),
+            5 => format!("\"op\":\"norm\",\"type\":\"layer\",\"rows\":{d1},\"cols\":{d2}"),
+            _ => format!("\"op\":\"embed\",\"elems\":{},\"params\":{}", d1 * d2, d2 * d3),
+        };
+        (format!("{{{body},\"name\":{name:?}{inputs}}}"), name)
+    };
+
+    let n_items = 1 + g.len(6);
+    for i in 0..n_items {
+        if i > 0 && g.rng.chance(0.3) {
+            // A block of 1-3 ops repeated 1-3 times; inner ops chain by
+            // default and may reference the block input via "in".
+            let reps = 1 + g.rng.below(3);
+            let n_inner = 1 + g.rng.below(3);
+            let mut inner = Vec::new();
+            for j in 0..n_inner {
+                let e = dim(g) * dim(g);
+                if j > 0 && g.rng.chance(0.3) {
+                    inner.push(format!(
+                        "{{\"op\":\"residual\",\"inputs\":[\"prev\",\"in\"],\"elems\":{e}}}"
+                    ));
+                } else {
+                    inner.push(format!("{{\"op\":\"activation\",\"elems\":{e}}}"));
+                }
+            }
+            items.push(format!(
+                "{{\"block\":\"b{i}\",\"repeat\":{reps},\"layers\":[{}]}}",
+                inner.join(",")
+            ));
+            names.push(format!("b{i}"));
+        } else {
+            let (text, name) = op(g, &names, i);
+            items.push(text);
+            names.push(name);
+        }
+    }
+    format!(
+        "{{\"name\":\"prop-{}\",\"batch\":{},\"graph\":[{}]}}",
+        g.rng.below(1_000_000),
+        1 + g.rng.below(8),
+        items.join(",")
+    )
+}

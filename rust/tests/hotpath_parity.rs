@@ -1,0 +1,165 @@
+//! Parity suite for the hot-path overhaul: the interned cost annotation,
+//! the galloping MCR growth, and the parallel sibling evaluation are all
+//! *outcome-preserving* optimizations. These tests pin the contract —
+//! identical per-op costs, identical `best.config`, identical top-k set,
+//! identical workload fingerprints — between the fast (default) paths
+//! and the legacy paths kept behind `SearchOptions` knobs, on random
+//! specs and on Table-4 workloads, while the fast paths pay no more (and
+//! on real workloads strictly fewer) scheduler evaluations.
+
+use wham::api::resolve_workload;
+use wham::arch::Constraints;
+use wham::coordinator::{make_backend, BackendChoice};
+use wham::cost::annotate::AnnotatedGraph;
+use wham::cost::native::NativeCost;
+use wham::cost::Dims;
+use wham::graph::fingerprint;
+use wham::search::engine::{SearchOptions, WhamSearch};
+use wham::search::mcr::{mcr_with, GrowthMode};
+use wham::util::prop::forall;
+use wham::workload::testgen::random_spec_json;
+use wham::workload::{lower, parse_spec};
+
+/// The pre-overhaul configuration: per-op backend rows + one reschedule
+/// per core addition.
+fn legacy_opts() -> SearchOptions {
+    SearchOptions { mcr_one_at_a_time: true, naive_annotation: true, ..Default::default() }
+}
+
+/// A power-of-two dims ladder value in [4, 256].
+fn pick_dim(g: &mut wham::util::prop::Gen) -> u64 {
+    1u64 << (2 + g.rng.below(7))
+}
+
+#[test]
+fn interned_annotation_equals_naive_across_random_specs_and_dims() {
+    forall(
+        0x1A7E_12BE,
+        30,
+        |g| {
+            let text = random_spec_json(g);
+            let d = Dims { tc_x: pick_dim(g), tc_y: pick_dim(g), vc_w: pick_dim(g) };
+            (text, d)
+        },
+        |(text, d)| {
+            let spec = parse_spec(text).map_err(|e| format!("parse: {e}"))?;
+            let graph = lower::training(&spec).map_err(|e| format!("lower: {e}"))?;
+            let fast = AnnotatedGraph::new(&graph, *d, &mut NativeCost);
+            let naive = AnnotatedGraph::new_naive(&graph, *d, &mut NativeCost);
+            if fast.costs != naive.costs {
+                return Err("interned costs differ from naive per-op costs".into());
+            }
+            if fast.cycles != naive.cycles {
+                return Err("interned cycles differ".into());
+            }
+            if (fast.total_energy_pj() - naive.total_energy_pj()).abs() > 0.0 {
+                return Err("interned energy differs".into());
+            }
+            // The class table really is smaller or equal, never larger.
+            if graph.cost_classes().len() > graph.len() {
+                return Err("more classes than ops".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn search_best_config_identical_with_and_without_interning_across_random_specs() {
+    // Isolates the interning knob: the class table feeds the backend
+    // bit-identical rows, so the whole search — pruner walk, MCR, best
+    // design — must be exactly reproduced on arbitrary graphs.
+    forall(0x5EA2_C4B1, 10, random_spec_json, |text| {
+        let spec = parse_spec(text).map_err(|e| format!("parse: {e}"))?;
+        let graph = lower::training(&spec).map_err(|e| format!("lower: {e}"))?;
+        let interned = WhamSearch::new(&graph, spec.batch, SearchOptions::default())
+            .run(&mut NativeCost);
+        let naive_opts = SearchOptions { naive_annotation: true, ..Default::default() };
+        let naive = WhamSearch::new(&graph, spec.batch, naive_opts).run(&mut NativeCost);
+        if interned.best.config != naive.best.config {
+            return Err(format!(
+                "best diverged: interned {} vs naive {}",
+                interned.best.config.display(),
+                naive.best.config.display()
+            ));
+        }
+        if interned.best.eval.cycles != naive.best.eval.cycles {
+            return Err("best makespan diverged".into());
+        }
+        if interned.scheduler_evals != naive.scheduler_evals {
+            return Err(format!(
+                "eval counts diverged: {} vs {}",
+                interned.scheduler_evals, naive.scheduler_evals
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn interned_annotation_matches_naive_on_pjrt_backend_when_available() {
+    // The batched artifact backend must scatter identically too; skipped
+    // (like `wham selftest`) when no artifacts are installed.
+    let Ok(mut pjrt) = make_backend(BackendChoice::Pjrt) else {
+        return;
+    };
+    let (graph, _) = resolve_workload("bert-base").unwrap();
+    let d = Dims { tc_x: 128, tc_y: 128, vc_w: 128 };
+    let fast = AnnotatedGraph::new(&graph, d, pjrt.as_mut());
+    let naive = AnnotatedGraph::new_naive(&graph, d, pjrt.as_mut());
+    assert_eq!(fast.cycles, naive.cycles);
+    assert_eq!(fast.costs, naive.costs);
+}
+
+#[test]
+fn table4_workloads_pin_fast_vs_legacy_best_topk_and_fingerprint() {
+    // Acceptance criterion: `best.config`, the top-k set, and the
+    // workload fingerprint are identical between the fast paths and the
+    // legacy paths on Table-4 workloads.
+    for name in ["bert-base", "vgg16"] {
+        let (graph, batch) = resolve_workload(name).unwrap();
+        let (graph2, _) = resolve_workload(name).unwrap();
+        assert_eq!(
+            fingerprint(&graph),
+            fingerprint(&graph2),
+            "{name}: fingerprint must be stable across resolutions"
+        );
+        let fast = WhamSearch::new(&graph, batch, SearchOptions::default()).run(&mut NativeCost);
+        let slow = WhamSearch::new(&graph, batch, legacy_opts()).run(&mut NativeCost);
+        assert_eq!(
+            fast.best.config, slow.best.config,
+            "{name}: fast and legacy paths must find the same best design"
+        );
+        assert_eq!(fast.best.eval.cycles, slow.best.eval.cycles, "{name}: best makespan");
+        let fast_top: Vec<_> = fast.top.points().iter().map(|p| p.config).collect();
+        let slow_top: Vec<_> = slow.top.points().iter().map(|p| p.config).collect();
+        assert_eq!(fast_top, slow_top, "{name}: top-k set must be identical");
+        assert_eq!(fast.dims_evaluated, slow.dims_evaluated, "{name}: same pruner walk");
+        assert!(
+            fast.scheduler_evals <= slow.scheduler_evals,
+            "{name}: fast {} vs legacy {} evals",
+            fast.scheduler_evals,
+            slow.scheduler_evals
+        );
+    }
+}
+
+#[test]
+fn gallop_matches_one_at_a_time_on_table4_graphs() {
+    // The MCR-level pin at a fixed dims (engine-level pins above cover
+    // the full pruner walk).
+    for name in ["bert-base", "gnmt4"] {
+        let (graph, _) = resolve_workload(name).unwrap();
+        let ann = AnnotatedGraph::new(&graph, Dims { tc_x: 128, tc_y: 128, vc_w: 128 }, &mut NativeCost);
+        let fast = mcr_with(&ann, &Constraints::default(), GrowthMode::Gallop);
+        let slow = mcr_with(&ann, &Constraints::default(), GrowthMode::OneAtATime);
+        assert_eq!(fast.cores, slow.cores, "{name}: MCR endpoint");
+        assert_eq!(fast.schedule.makespan, slow.schedule.makespan, "{name}: MCR makespan");
+        assert!(
+            fast.evals <= slow.evals,
+            "{name}: gallop evals {} vs one-at-a-time {}",
+            fast.evals,
+            slow.evals
+        );
+    }
+}

@@ -195,6 +195,30 @@ fn uploaded_spec_is_mined_end_to_end() {
 }
 
 #[test]
+fn status_exposes_perf_counters() {
+    let h = boot(None, 2);
+    let (status, _) = get_json(&h, "POST", "/search", Some(SEARCH_BODY));
+    assert_eq!(status, 200);
+    let (status, st) = get_json(&h, "GET", "/status", None);
+    assert_eq!(status, 200);
+    // Process-wide hot-path counters (shared with other tests in this
+    // binary, so only monotone assertions are safe).
+    assert!(u(&st, &["perf", "backend_rows_total"]) > 0, "status: {st:?}");
+    assert!(u(&st, &["perf", "scheduler_evals_total"]) > 0, "status: {st:?}");
+    let rate = st.get("perf").unwrap().get("db_hit_rate").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&rate), "hit rate {rate}");
+    let eps = st.get("perf").unwrap().get("endpoints").unwrap().as_arr().unwrap();
+    let search = eps
+        .iter()
+        .find(|e| e.get("endpoint").unwrap().as_str() == Some("/search"))
+        .expect("per-endpoint digest for /search");
+    assert!(u(search, &["count"]) >= 1);
+    let p50 = search.get("p50_ms").unwrap().as_f64().unwrap();
+    let p95 = search.get("p95_ms").unwrap().as_f64().unwrap();
+    assert!(p95 >= p50 && p50 >= 0.0, "p50={p50} p95={p95}");
+}
+
+#[test]
 fn models_evaluate_and_errors() {
     let h = boot(None, 2);
 
