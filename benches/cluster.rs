@@ -1,0 +1,156 @@
+//! Cluster-subsystem benchmarks: discrete-event simulator throughput
+//! (events/second per schedule) and strategy-sweep wall time.
+//!
+//! Besides the human-readable report, writes `BENCH_cluster.json` so CI
+//! can archive the trajectory alongside `BENCH_hotpath.json` (`--smoke`
+//! runs a fast variant with the same schema; `--out PATH` redirects the
+//! artifact).
+
+use wham::api::progress::NullSink;
+use wham::arch::presets;
+use wham::cluster::{
+    events_total, simulate_events, sweep, Placement, SimSchedule, SweepOptions, Topology,
+};
+use wham::cost::native::NativeCost;
+use wham::distributed::network::Network;
+use wham::distributed::partition::partition_transformer;
+use wham::distributed::pipeline::{stage_times, StageTimes};
+use wham::graph::autodiff::Optimizer;
+use wham::search::engine::{NoSharedCache, SearchOptions};
+use wham::util::bench::{banner, bench, time_once, BenchStats};
+use wham::util::json::{arr, Obj};
+
+fn phase_json(s: &BenchStats) -> String {
+    Obj::new()
+        .str("name", &s.name)
+        .u64("iters", s.iters as u64)
+        .u64("median_ns", s.median.as_nanos() as u64)
+        .u64("mean_ns", s.mean.as_nanos() as u64)
+        .u64("min_ns", s.min.as_nanos() as u64)
+        .finish()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke") || std::env::var("BENCH_SMOKE").is_ok();
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_cluster.json".to_string());
+    let (warm, iters) = if smoke { (1, 3) } else { (2, 20) };
+
+    banner("cluster", "event-sim events/sec + strategy-sweep wall time");
+
+    // ---- event-sim throughput --------------------------------------
+    // An 8-rank pipeline driven far past its natural microbatch count
+    // so the event queue, not setup, dominates.
+    let mut cfg = wham::models::transformer::gpt2_xl();
+    cfg.layers = 8;
+    let mut part = partition_transformer("mini-gpt2", &cfg, 8, 1, Optimizer::SgdMomentum);
+    part.num_micro = if smoke { 64 } else { 256 };
+    let net = Network::default();
+    let times: Vec<StageTimes> = part
+        .stages
+        .iter()
+        .map(|s| stage_times(s, &presets::tpuv2(), part.tmp, &net, &mut NativeCost))
+        .collect();
+    let topo = Topology::preset("nvlink-island", 8).unwrap();
+    println!(
+        "workload: 8-stage mini gpt2-xl pipeline, {} microbatches, nvlink-island topology",
+        part.num_micro
+    );
+
+    let mut phases: Vec<BenchStats> = Vec::new();
+    let mut rates: Vec<(String, f64)> = Vec::new();
+    for schedule in [
+        SimSchedule::GPipe,
+        SimSchedule::OneF1B,
+        SimSchedule::Interleaved1F1B { devices: 4 },
+    ] {
+        // Interleaved folds the 8 virtual stages onto 4 ranks; the
+        // plain schedules place one stage per rank.
+        let ranks = match schedule {
+            SimSchedule::Interleaved1F1B { devices } => devices,
+            _ => part.stages.len() as u64,
+        };
+        let placement = Placement::linear(&topo, ranks, 1).unwrap();
+        let run = || {
+            simulate_events(&part, &times, schedule, &topo, &placement)
+                .expect("valid simulation shape")
+        };
+        let events = run().events;
+        let stats = bench(&format!("event_sim/{}", schedule.name()), warm, iters, || {
+            std::hint::black_box(run());
+        });
+        let rate = events as f64 / stats.median.as_secs_f64().max(1e-12);
+        println!("{stats}");
+        println!("  {} events/iteration -> {:.0} events/sec", events, rate);
+        rates.push((schedule.name().to_string(), rate));
+        phases.push(stats);
+    }
+
+    // ---- strategy-sweep wall time ----------------------------------
+    let tiny = wham::models::transformer::TransformerCfg {
+        layers: 4,
+        hidden: 128,
+        heads: 4,
+        seq: 64,
+        batch: 8,
+        vocab: 1000,
+        ffn_mult: 4,
+        tmp: 1,
+    };
+    let quick = SearchOptions { top_k: 2, hysteresis: 0, ..Default::default() };
+    let opts = SweepOptions {
+        devices: if smoke { 4 } else { 8 },
+        mine_top: if smoke { 0 } else { 1 },
+        local: quick,
+        ..Default::default()
+    };
+    let (report, sweep_wall) = time_once(|| {
+        sweep("tiny", &tiny, &opts, &mut NativeCost, &NoSharedCache, &mut NullSink).unwrap()
+    });
+    println!(
+        "strategy sweep: {} candidates, {} mined, wall {:.1}ms (devices={})",
+        report.candidates,
+        report.mined,
+        sweep_wall.as_secs_f64() * 1e3,
+        opts.devices,
+    );
+    if report.baseline.fits_hbm {
+        assert!(report.ranked[0].throughput >= report.baseline.throughput);
+    }
+
+    let json = Obj::new()
+        .str("bench", "cluster")
+        .bool("smoke", smoke)
+        .str("workload", "mini-gpt2")
+        .u64("microbatches", part.num_micro)
+        .raw(
+            "event_sim",
+            &arr(rates.iter().map(|(name, rate)| {
+                Obj::new().str("schedule", name).f64("events_per_sec", *rate).finish()
+            })),
+        )
+        .raw(
+            "sweep",
+            &Obj::new()
+                .u64("devices", opts.devices)
+                .u64("candidates", report.candidates as u64)
+                .u64("mined", report.mined as u64)
+                .f64("wall_ms", sweep_wall.as_secs_f64() * 1e3)
+                .f64("best_throughput", report.ranked[0].throughput)
+                .f64("baseline_throughput", report.baseline.throughput)
+                .finish(),
+        )
+        .raw("phases", &arr(phases.iter().map(phase_json)))
+        .raw(
+            "process",
+            &Obj::new().u64("cluster_sim_events_total", events_total()).finish(),
+        )
+        .finish();
+    std::fs::write(&out_path, &json).expect("writing bench artifact");
+    println!("\nwrote {out_path}");
+    println!("cluster OK");
+}

@@ -46,9 +46,11 @@ pub use error::{ApiError, ErrorKind};
 pub use plan::{context_key, resolve_workload};
 pub use progress::{DeadlineSink, NullSink, Progress, ProgressSink};
 pub use reply::{
-    CommonReply, EvaluateReply, GlobalReply, GlobalRow, ModelEntry, ModelsReply, SearchReply,
-    StatusReply, WorkloadReply,
+    ClusterReply, CommonReply, EvaluateReply, GlobalReply, GlobalRow, ModelEntry, ModelsReply,
+    SearchReply, StatusReply, StrategyRow, WorkloadReply,
 };
-pub use request::{CommonRequest, EvaluateRequest, GlobalRequest, SearchRequest};
+pub use request::{
+    ClusterRequest, CommonRequest, EvaluateRequest, GlobalRequest, SearchRequest,
+};
 pub use session::{tpuv2_floor, Session};
 pub use wire::{FromJson, ToJson};

@@ -26,6 +26,7 @@ use crate::util::fnv::Fnv;
 const NS_SEARCH: u64 = 0x73; // 's'
 const NS_COMMON: u64 = 0x63; // 'c'
 const NS_GLOBAL: u64 = 0x67; // 'g'
+const NS_CLUSTER: u64 = 0x6b; // 'k'
 
 /// Resolve a registry workload to its training graph and batch size —
 /// the lookup every per-workload frontend starts with. Builtin Table-4
@@ -190,10 +191,61 @@ impl GlobalPlan {
     }
 }
 
+/// Validated `/cluster` work: the resolved transformer shape plus the
+/// sweep's full request surface. The design database needs no new key
+/// form — the sweep's mining phase caches per-stage points under the
+/// stage-graph fingerprints via [`CacheProvider`], so strategies that
+/// share a (pp, tp) partition share mined designs across requests —
+/// but the coalescing key must separate every reply-shaping field:
+/// (workload, topology, strategy-space) in the issue's terms.
+///
+/// [`CacheProvider`]: crate::search::engine::CacheProvider
+pub struct ClusterPlan {
+    pub model: String,
+    pub cfg: crate::models::transformer::TransformerCfg,
+    pub devices: u64,
+    pub topology: String,
+    pub schedules: Vec<String>,
+    pub metric: Metric,
+    pub mine_top: u64,
+    pub chunks: u64,
+    pub top_k: usize,
+    pub hysteresis: u32,
+    pub use_ilp: bool,
+    pub deadline_ms: Option<u64>,
+}
+
+impl ClusterPlan {
+    /// Single-flight key over (fingerprint-bearing workload name,
+    /// topology, strategy shape, search knobs, backend).
+    pub fn coalescing_key(&self, backend: &str) -> u64 {
+        let mut f = Fnv::new()
+            .word(NS_CLUSTER)
+            .bytes(self.model.as_bytes())
+            .word(0)
+            .bytes(self.topology.as_bytes())
+            .word(self.devices);
+        for s in &self.schedules {
+            f = f.bytes(s.as_bytes()).word(0);
+        }
+        fold_deadline(
+            f.word(self.mine_top)
+                .word(self.chunks)
+                .word(self.top_k as u64)
+                .word(self.hysteresis as u64)
+                .word(self.use_ilp as u64)
+                .word(matches!(self.metric, Metric::PerfPerTdp) as u64)
+                .bytes(backend.as_bytes()),
+            self.deadline_ms,
+        )
+        .0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::request::{GlobalRequest, SearchRequest};
+    use crate::api::request::{ClusterRequest, GlobalRequest, SearchRequest};
 
     #[test]
     fn coalescing_key_fixes_the_additive_salt_collision() {
@@ -230,6 +282,22 @@ mod tests {
         assert_ne!(a.coalescing_key("native"), b.coalescing_key("native"));
         let c = GlobalRequest::new().depth(4).scheme(Scheme::PipeDream1F1B).validate().unwrap();
         assert_ne!(a.coalescing_key("native"), c.coalescing_key("native"));
+    }
+
+    #[test]
+    fn cluster_key_separates_workload_topology_and_strategy_space() {
+        let base = ClusterRequest::new("gpt2-xl").validate().unwrap();
+        assert_eq!(base.coalescing_key("native"), base.coalescing_key("native"));
+        let topo = ClusterRequest::new("gpt2-xl").topology("ring").validate().unwrap();
+        assert_ne!(base.coalescing_key("native"), topo.coalescing_key("native"));
+        let devs = ClusterRequest::new("gpt2-xl").devices(16).validate().unwrap();
+        assert_ne!(base.coalescing_key("native"), devs.coalescing_key("native"));
+        let sched =
+            ClusterRequest::new("gpt2-xl").schedules(["gpipe"]).validate().unwrap();
+        assert_ne!(base.coalescing_key("native"), sched.coalescing_key("native"));
+        let model = ClusterRequest::new("opt-1.3b").validate().unwrap();
+        assert_ne!(base.coalescing_key("native"), model.coalescing_key("native"));
+        assert_ne!(base.coalescing_key("native"), base.coalescing_key("pjrt"));
     }
 
     #[test]

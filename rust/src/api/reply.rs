@@ -10,8 +10,8 @@
 use crate::api::error::ApiError;
 use crate::api::request::scheme_wire_name;
 use crate::api::wire::{
-    config_arr, opt_str, parse_config, parse_design_point, req_arr, req_bool, req_f64, req_str,
-    req_u64, FromJson, ToJson,
+    config_arr, opt_str, opt_u64, parse_config, parse_design_point, req_arr, req_bool, req_f64,
+    req_str, req_u64, FromJson, ToJson,
 };
 use crate::arch::ArchConfig;
 use crate::distributed::Scheme;
@@ -427,6 +427,137 @@ impl FromJson for GlobalReply {
     }
 }
 
+// ---- POST /cluster ------------------------------------------------------
+
+/// One evaluated parallelism strategy of a cluster sweep.
+#[derive(Debug, Clone)]
+pub struct StrategyRow {
+    pub pp: u64,
+    pub tp: u64,
+    pub dp: u64,
+    /// Virtual chunks per device (1 unless interleaved).
+    pub chunks: u64,
+    /// `gpipe` | `1f1b` | `interleaved`.
+    pub schedule: String,
+    pub micro_batch: u64,
+    pub num_micro: u64,
+    /// Accelerator config the numbers were simulated with.
+    pub config: ArchConfig,
+    /// True when the config came from the global hardware search.
+    pub mined: bool,
+    pub iter_seconds: f64,
+    pub throughput: f64,
+    pub perf_per_tdp: f64,
+    pub bubble_fraction: f64,
+    pub fits_hbm: bool,
+}
+
+impl ToJson for StrategyRow {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .u64("pp", self.pp)
+            .u64("tp", self.tp)
+            .u64("dp", self.dp)
+            .u64("chunks", self.chunks)
+            .str("schedule", &self.schedule)
+            .u64("micro_batch", self.micro_batch)
+            .u64("num_micro", self.num_micro)
+            .str("config", &self.config.display())
+            .raw("config_vec", &config_arr(&self.config))
+            .bool("mined", self.mined)
+            .f64("iter_seconds", self.iter_seconds)
+            .f64("throughput", self.throughput)
+            .f64("perf_per_tdp", self.perf_per_tdp)
+            .f64("bubble_fraction", self.bubble_fraction)
+            .bool("fits_hbm", self.fits_hbm)
+            .finish()
+    }
+}
+
+impl FromJson for StrategyRow {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        Ok(Self {
+            pp: req_u64(v, "pp")?,
+            tp: req_u64(v, "tp")?,
+            dp: req_u64(v, "dp")?,
+            chunks: req_u64(v, "chunks")?,
+            schedule: req_str(v, "schedule")?,
+            micro_batch: req_u64(v, "micro_batch")?,
+            num_micro: req_u64(v, "num_micro")?,
+            config: parse_config(v.get("config_vec").ok_or_else(|| {
+                ApiError::invalid("strategy row must include \"config_vec\"")
+            })?)?,
+            mined: req_bool(v, "mined")?,
+            iter_seconds: req_f64(v, "iter_seconds")?,
+            throughput: req_f64(v, "throughput")?,
+            perf_per_tdp: req_f64(v, "perf_per_tdp")?,
+            bubble_fraction: req_f64(v, "bubble_fraction")?,
+            fits_hbm: req_bool(v, "fits_hbm")?,
+        })
+    }
+}
+
+/// Reply of `POST /cluster` / [`crate::api::Session::cluster`].
+#[derive(Debug, Clone)]
+pub struct ClusterReply {
+    pub model: String,
+    pub devices: u64,
+    pub topology: String,
+    pub metric: Metric,
+    pub backend: String,
+    /// Strategies screened (== `ranked.len()`).
+    pub candidates: u64,
+    /// Strategies actually upgraded with mined hardware.
+    pub mined: u64,
+    /// The fixed-(pp, tp) reference strategy.
+    pub baseline: StrategyRow,
+    /// All strategies, best simulated score first.
+    pub ranked: Vec<StrategyRow>,
+    pub cancelled: bool,
+    pub wall_ms: f64,
+}
+
+impl ToJson for ClusterReply {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .str("model", &self.model)
+            .u64("devices", self.devices)
+            .str("topology", &self.topology)
+            .str("metric", &self.metric.to_string())
+            .str("backend", &self.backend)
+            .u64("candidates", self.candidates)
+            .u64("mined", self.mined)
+            .raw("baseline", &self.baseline.to_json())
+            .raw("ranked", &arr(self.ranked.iter().map(|r| r.to_json())))
+            .bool("cancelled", self.cancelled)
+            .f64("wall_ms", self.wall_ms)
+            .finish()
+    }
+}
+
+impl FromJson for ClusterReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        Ok(Self {
+            model: req_str(v, "model")?,
+            devices: req_u64(v, "devices")?,
+            topology: req_str(v, "topology")?,
+            metric: parse_metric_field(v)?,
+            backend: req_str(v, "backend")?,
+            candidates: req_u64(v, "candidates")?,
+            mined: req_u64(v, "mined")?,
+            baseline: StrategyRow::from_json(v.get("baseline").ok_or_else(|| {
+                ApiError::invalid("body must include \"baseline\"")
+            })?)?,
+            ranked: req_arr(v, "ranked")?
+                .iter()
+                .map(StrategyRow::from_json)
+                .collect::<Result<_, _>>()?,
+            cancelled: req_bool(v, "cancelled")?,
+            wall_ms: req_f64(v, "wall_ms")?,
+        })
+    }
+}
+
 // ---- GET /status --------------------------------------------------------
 
 /// `/search` work counters.
@@ -481,6 +612,9 @@ pub struct PerfCounters {
     /// [`SearchCounters::scheduler_evals_total`] (per-`/search` leader
     /// accounting) this includes `/common`, `/global`, and baseline work.
     pub scheduler_evals_total: u64,
+    /// Cluster-simulator events (tasks + transfers) process-wide —
+    /// the `/cluster` work unit ([`crate::cluster::events_total`]).
+    pub cluster_sim_events_total: u64,
     /// Design-database hits / (hits + misses); 0 before any probe.
     pub db_hit_rate: f64,
     /// Per-endpoint latency digests, endpoints that served >= 1 request.
@@ -531,6 +665,7 @@ impl ToJson for StatusReply {
         let perf = Obj::new()
             .u64("backend_rows_total", self.perf.backend_rows_total)
             .u64("scheduler_evals_total", self.perf.scheduler_evals_total)
+            .u64("cluster_sim_events_total", self.perf.cluster_sim_events_total)
             .f64("db_hit_rate", self.perf.db_hit_rate)
             .raw("endpoints", &endpoints)
             .finish();
@@ -560,6 +695,8 @@ impl FromJson for StatusReply {
             Some(p) => PerfCounters {
                 backend_rows_total: req_u64(p, "backend_rows_total")?,
                 scheduler_evals_total: req_u64(p, "scheduler_evals_total")?,
+                // Lenient for pre-cluster replies.
+                cluster_sim_events_total: opt_u64(p, "cluster_sim_events_total")?.unwrap_or(0),
                 db_hit_rate: req_f64(p, "db_hit_rate")?,
                 endpoints: req_arr(p, "endpoints")?
                     .iter()
@@ -649,6 +786,7 @@ mod tests {
             perf: PerfCounters {
                 backend_rows_total: 1234,
                 scheduler_evals_total: 99,
+                cluster_sim_events_total: 4321,
                 db_hit_rate: 0.6,
                 endpoints: vec![EndpointStat {
                     endpoint: "/search".into(),
@@ -709,6 +847,45 @@ mod tests {
         let q = GlobalReply::from_json(&parse(&bytes).unwrap()).unwrap();
         assert_eq!(q.to_json(), bytes);
         assert_eq!(q.scheme, Scheme::PipeDream1F1B);
+    }
+
+    #[test]
+    fn cluster_reply_round_trips_byte_identically() {
+        let row = |pp: u64, mined: bool| StrategyRow {
+            pp,
+            tp: 2,
+            dp: 1,
+            chunks: 1,
+            schedule: "1f1b".into(),
+            micro_batch: 4,
+            num_micro: 8,
+            config: presets::tpuv2(),
+            mined,
+            iter_seconds: 0.125,
+            throughput: 256.0,
+            perf_per_tdp: 0.5,
+            bubble_fraction: 0.21,
+            fits_hbm: true,
+        };
+        let r = ClusterReply {
+            model: "gpt2-xl".into(),
+            devices: 8,
+            topology: "nvlink-island".into(),
+            metric: Metric::Throughput,
+            backend: "native".into(),
+            candidates: 9,
+            mined: 2,
+            baseline: row(8, false),
+            ranked: vec![row(4, true), row(8, false)],
+            cancelled: false,
+            wall_ms: 42.5,
+        };
+        let bytes = r.to_json();
+        let q = ClusterReply::from_json(&parse(&bytes).unwrap()).unwrap();
+        assert_eq!(q.to_json(), bytes, "reply wire form must round-trip byte-identically");
+        assert_eq!(q.ranked.len(), 2);
+        assert!(q.ranked[0].mined);
+        assert_eq!(q.baseline.pp, 8);
     }
 
     #[test]

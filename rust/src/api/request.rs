@@ -11,7 +11,9 @@
 //!   into an executable plan ([`crate::api::plan`]).
 
 use crate::api::error::ApiError;
-use crate::api::plan::{resolve_workload, CommonPlan, EvaluatePlan, GlobalPlan, SearchPlan};
+use crate::api::plan::{
+    resolve_workload, ClusterPlan, CommonPlan, EvaluatePlan, GlobalPlan, SearchPlan,
+};
 use crate::api::wire::{
     config_arr, opt_bool, opt_str, opt_str_list, opt_u64, parse_config, req_str, FromJson, ToJson,
 };
@@ -592,6 +594,221 @@ impl FromJson for GlobalRequest {
     }
 }
 
+// ---- /cluster -----------------------------------------------------------
+
+/// Cluster-level parallelism-strategy sweep ([`crate::cluster`]): place
+/// one LLM workload on a topology, enumerate (pp, tp, dp, schedule)
+/// strategies, and mine hardware for the best of them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterRequest {
+    pub model: String,
+    /// Total accelerators in the cluster.
+    pub devices: u64,
+    /// Topology preset (`flat` | `ring` | `fat-tree` | `nvlink-island`).
+    pub topology: String,
+    /// Schedules to consider; empty = gpipe, 1f1b, and interleaved.
+    pub schedules: Vec<String>,
+    pub metric: Metric,
+    /// Screened strategies to mine hardware for (0 = screening only).
+    pub mine_top: u64,
+    /// Virtual chunks per device for interleaved-1F1B candidates.
+    pub chunks: u64,
+    pub top_k: usize,
+    pub hysteresis: u32,
+    pub use_ilp: bool,
+    /// Optional wall-clock budget (cooperative, best-so-far on expiry).
+    pub deadline_ms: Option<u64>,
+}
+
+impl ClusterRequest {
+    pub fn new(model: impl Into<String>) -> Self {
+        let d = SearchOptions::default();
+        Self {
+            model: model.into(),
+            devices: 8,
+            topology: "flat".to_string(),
+            schedules: Vec::new(),
+            metric: Metric::Throughput,
+            mine_top: 2,
+            chunks: 2,
+            top_k: d.top_k,
+            hysteresis: d.hysteresis,
+            use_ilp: d.use_ilp,
+            deadline_ms: None,
+        }
+    }
+
+    pub fn devices(mut self, n: u64) -> Self {
+        self.devices = n;
+        self
+    }
+
+    pub fn topology(mut self, t: impl Into<String>) -> Self {
+        self.topology = t.into();
+        self
+    }
+
+    pub fn schedules<I: IntoIterator<Item = S>, S: Into<String>>(mut self, names: I) -> Self {
+        self.schedules = names.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn metric(mut self, m: Metric) -> Self {
+        self.metric = m;
+        self
+    }
+
+    pub fn mine_top(mut self, n: u64) -> Self {
+        self.mine_top = n;
+        self
+    }
+
+    pub fn chunks(mut self, v: u64) -> Self {
+        self.chunks = v;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    pub fn hysteresis(mut self, h: u32) -> Self {
+        self.hysteresis = h;
+        self
+    }
+
+    pub fn ilp(mut self, on: bool) -> Self {
+        self.use_ilp = on;
+        self
+    }
+
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Build from CLI flags: `--model --devices --topology --schedules
+    /// --mine --chunks --metric --k --hysteresis --ilp --deadline-ms`.
+    /// `wham cluster` and `wham client cluster` both call this.
+    pub fn from_args(args: &Args) -> Result<Self, ApiError> {
+        let model = args.get("model").ok_or_else(|| ApiError::invalid("--model required"))?;
+        let mut r = Self::new(model);
+        r.devices = args.get_as_or("devices", r.devices).map_err(cli_err)?;
+        if let Some(t) = args.get("topology") {
+            r.topology = t.to_string();
+        }
+        r.schedules = args.get_list("schedules");
+        r.mine_top = args.get_as_or("mine", r.mine_top).map_err(cli_err)?;
+        r.chunks = args.get_as_or("chunks", r.chunks).map_err(cli_err)?;
+        knobs_from_args(args, &mut r.metric, &mut r.top_k, &mut r.hysteresis, &mut r.use_ilp)?;
+        r.deadline_ms = args.get_as::<u64>("deadline-ms").map_err(cli_err)?;
+        Ok(r)
+    }
+
+    /// Resolve the workload and bounds-check into an executable plan.
+    pub fn validate(&self) -> Result<ClusterPlan, ApiError> {
+        if !(1..=4096).contains(&self.devices) {
+            return Err(ApiError::invalid("\"devices\" must be in 1..=4096"));
+        }
+        if !(1..=8).contains(&self.chunks) {
+            return Err(ApiError::invalid("\"chunks\" must be in 1..=8"));
+        }
+        // Fail the request, not the worker, on a bad preset or schedule.
+        crate::cluster::Topology::preset(&self.topology, self.devices as usize)
+            .map_err(ApiError::invalid)?;
+        for s in &self.schedules {
+            if !crate::cluster::strategy::schedule_names().contains(&s.as_str()) {
+                return Err(ApiError::invalid(format!(
+                    "unknown schedule {s:?} (expected gpipe, 1f1b, or interleaved)"
+                )));
+            }
+        }
+        let cfg = match crate::workload::transformer_cfg(&self.model) {
+            Some(cfg) => cfg,
+            None => {
+                return Err(ApiError::not_found(format!(
+                    "{:?} is not an LLM workload (builtin LLM or spec with a \
+                     \"transformer\" section required)",
+                    self.model
+                )))
+            }
+        };
+        // An empty strategy space is a caller error (e.g. interleaved-only
+        // on 1 device, or chunks deeper than the layer budget), not a
+        // worker failure — reject it here as a 400.
+        if !crate::cluster::strategy::has_feasible_strategy(
+            &cfg,
+            self.devices,
+            &self.schedules,
+            self.chunks,
+        ) {
+            return Err(ApiError::invalid(format!(
+                "no feasible (pp, tp, dp) strategy for {:?} on {} devices with schedules {:?} \
+                 and {} chunks",
+                self.model, self.devices, self.schedules, self.chunks
+            )));
+        }
+        Ok(ClusterPlan {
+            model: self.model.clone(),
+            cfg,
+            devices: self.devices,
+            topology: self.topology.clone(),
+            schedules: self.schedules.clone(),
+            metric: self.metric,
+            mine_top: self.mine_top,
+            chunks: self.chunks,
+            top_k: self.top_k.max(1),
+            hysteresis: self.hysteresis,
+            use_ilp: self.use_ilp,
+            deadline_ms: self.deadline_ms,
+        })
+    }
+}
+
+impl ToJson for ClusterRequest {
+    fn to_json(&self) -> String {
+        let mut o = Obj::new()
+            .str("model", &self.model)
+            .u64("devices", self.devices)
+            .str("topology", &self.topology);
+        if !self.schedules.is_empty() {
+            o = o.raw("schedules", &str_arr(self.schedules.iter().map(String::as_str)));
+        }
+        o = o.u64("mine", self.mine_top).u64("chunks", self.chunks);
+        knobs_json(o, self.metric, self.top_k, self.hysteresis, self.use_ilp)
+            .opt_u64("deadline_ms", self.deadline_ms)
+            .finish()
+    }
+}
+
+impl FromJson for ClusterRequest {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let mut r = Self::new(req_str(v, "model")?);
+        if let Some(d) = opt_u64(v, "devices")? {
+            r.devices = d;
+        }
+        if let Some(t) = opt_str(v, "topology")? {
+            r.topology = t;
+        }
+        if let Some(s) = opt_str_list(v, "schedules")? {
+            if s.is_empty() {
+                return Err(ApiError::invalid("\"schedules\" must not be empty"));
+            }
+            r.schedules = s;
+        }
+        if let Some(m) = opt_u64(v, "mine")? {
+            r.mine_top = m;
+        }
+        if let Some(c) = opt_u64(v, "chunks")? {
+            r.chunks = c;
+        }
+        knobs_from_json(v, &mut r.metric, &mut r.top_k, &mut r.hysteresis, &mut r.use_ilp)?;
+        r.deadline_ms = opt_u64(v, "deadline_ms")?;
+        Ok(r)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -599,7 +816,7 @@ mod tests {
     fn args(raw: &[&str]) -> Args {
         Args::parse(
             raw.iter().map(|s| s.to_string()),
-            &["model", "models", "metric", "k", "depth", "tmp", "scheme", "hysteresis", "dims", "tc", "vc", "deadline-ms", "backend"],
+            &["model", "models", "metric", "k", "depth", "tmp", "scheme", "hysteresis", "dims", "tc", "vc", "deadline-ms", "backend", "devices", "topology", "schedules", "mine", "chunks"],
         )
         .unwrap()
     }
@@ -681,6 +898,58 @@ mod tests {
             .ilp(true)
             .deadline_ms(250);
         assert_eq!(GlobalRequest::from_json_str(&r.to_json()).unwrap(), r);
+    }
+
+    #[test]
+    fn cluster_request_args_json_and_bounds_agree() {
+        let a = ClusterRequest::from_args(&args(&[
+            "--model", "gpt2-xl", "--devices", "16", "--topology", "nvlink-island",
+            "--schedules", "gpipe,interleaved", "--mine", "1", "--chunks", "3",
+            "--metric", "perf/tdp", "--k", "4",
+        ]))
+        .unwrap();
+        assert_eq!(a.devices, 16);
+        assert_eq!(a.topology, "nvlink-island");
+        assert_eq!(a.schedules, vec!["gpipe".to_string(), "interleaved".to_string()]);
+        assert_eq!(a.mine_top, 1);
+        assert_eq!(a.chunks, 3);
+        assert_eq!(a.metric, Metric::PerfPerTdp);
+        let j = ClusterRequest::from_json_str(&a.to_json()).unwrap();
+        assert_eq!(a, j, "wire round-trip must preserve the request");
+        // Defaults survive an empty body except the required model.
+        assert_eq!(ClusterRequest::from_json_str("{}").unwrap_err().http_status(), 400);
+        let d = ClusterRequest::from_json_str("{\"model\":\"gpt2-xl\"}").unwrap();
+        assert_eq!(d.devices, 8);
+        assert!(d.validate().is_ok());
+    }
+
+    #[test]
+    fn cluster_request_rejects_bad_shapes() {
+        assert_eq!(
+            ClusterRequest::new("gpt2-xl").devices(0).validate().unwrap_err().http_status(),
+            400
+        );
+        assert_eq!(
+            ClusterRequest::new("gpt2-xl")
+                .topology("moebius")
+                .validate()
+                .unwrap_err()
+                .http_status(),
+            400
+        );
+        assert_eq!(
+            ClusterRequest::new("gpt2-xl")
+                .schedules(["zigzag"])
+                .validate()
+                .unwrap_err()
+                .http_status(),
+            400
+        );
+        // Non-LLM workloads cannot be partitioned into a pipeline.
+        assert_eq!(
+            ClusterRequest::new("vgg16").validate().unwrap_err().http_status(),
+            404
+        );
     }
 
     #[test]

@@ -12,12 +12,17 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::api::error::ApiError;
-use crate::api::plan::{context_key, CommonPlan, EvaluatePlan, GlobalPlan, SearchPlan};
+use crate::api::plan::{
+    context_key, ClusterPlan, CommonPlan, EvaluatePlan, GlobalPlan, SearchPlan,
+};
 use crate::api::progress::{DeadlineSink, NullSink, ProgressSink};
 use crate::api::reply::{
-    CommonReply, EvaluateReply, GlobalReply, GlobalRow, ModelEntry, ModelsReply, SearchReply,
+    ClusterReply, CommonReply, EvaluateReply, GlobalReply, GlobalRow, ModelEntry, ModelsReply,
+    SearchReply, StrategyRow,
 };
-use crate::api::request::{CommonRequest, EvaluateRequest, GlobalRequest, SearchRequest};
+use crate::api::request::{
+    ClusterRequest, CommonRequest, EvaluateRequest, GlobalRequest, SearchRequest,
+};
 use crate::arch::presets;
 use crate::coordinator::{make_backend, BackendChoice};
 use crate::cost::{CostBackend, Dims};
@@ -340,6 +345,95 @@ impl Session {
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         })
     }
+
+    /// Validate and run a cluster parallelism-strategy sweep.
+    pub fn cluster(&mut self, req: &ClusterRequest) -> Result<ClusterReply, ApiError> {
+        self.run_cluster(&req.validate()?, &mut NullSink)
+    }
+
+    /// Run a pre-validated cluster plan, streaming progress to `sink`.
+    /// The mining phase shares the session's design database (per-stage
+    /// points cached under the stage-graph fingerprints), so repeat
+    /// sweeps over the same strategies mine for free.
+    pub fn run_cluster(
+        &mut self,
+        plan: &ClusterPlan,
+        sink: &mut dyn ProgressSink,
+    ) -> Result<ClusterReply, ApiError> {
+        let t0 = Instant::now();
+        let backend = self.backend.as_mut();
+        let local = SearchOptions {
+            metric: plan.metric,
+            top_k: plan.top_k,
+            hysteresis: plan.hysteresis,
+            use_ilp: plan.use_ilp,
+            ..Default::default()
+        };
+        let opts = crate::cluster::SweepOptions {
+            devices: plan.devices,
+            topology: plan.topology.clone(),
+            schedules: plan.schedules.clone(),
+            metric: plan.metric,
+            mine_top: plan.mine_top as usize,
+            chunks: plan.chunks,
+            local,
+            jobs: self.jobs,
+            ..Default::default()
+        };
+        let mut guard;
+        let sink: &mut dyn ProgressSink = match plan.deadline_ms {
+            Some(ms) => {
+                guard = DeadlineSink::wrapping(Duration::from_millis(ms), sink);
+                &mut guard
+            }
+            None => sink,
+        };
+        let r = match &self.db {
+            Some(db) => {
+                crate::cluster::sweep(&plan.model, &plan.cfg, &opts, backend, &**db, sink)
+            }
+            None => crate::cluster::sweep(
+                &plan.model,
+                &plan.cfg,
+                &opts,
+                backend,
+                &NoSharedCache,
+                sink,
+            ),
+        }
+        // The plan pre-validated the topology and schedules, so a sweep
+        // error here is an internal inconsistency, not a caller error.
+        .map_err(ApiError::internal)?;
+        let row = |p: &crate::cluster::StrategyPoint| StrategyRow {
+            pp: p.pp,
+            tp: p.tp,
+            dp: p.dp,
+            chunks: p.chunks,
+            schedule: p.schedule.clone(),
+            micro_batch: p.micro_batch,
+            num_micro: p.num_micro,
+            config: p.config,
+            mined: p.mined,
+            iter_seconds: p.iter_seconds,
+            throughput: p.throughput,
+            perf_per_tdp: p.perf_per_tdp,
+            bubble_fraction: p.bubble_fraction,
+            fits_hbm: p.fits_hbm,
+        };
+        Ok(ClusterReply {
+            model: r.model,
+            devices: r.devices,
+            topology: r.topology,
+            metric: r.metric,
+            backend: backend.name().to_string(),
+            candidates: r.candidates as u64,
+            mined: r.mined as u64,
+            baseline: row(&r.baseline),
+            ranked: r.ranked.iter().map(row).collect(),
+            cancelled: r.cancelled,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -403,6 +497,24 @@ mod tests {
             reply.dims_evaluated
         );
         assert!(reply.best.config.in_template());
+    }
+
+    #[test]
+    fn cluster_sweep_runs_through_a_session() {
+        let mut s = session();
+        let req = ClusterRequest::new("bert-base")
+            .devices(2)
+            .schedules(["gpipe"])
+            .mine_top(0);
+        let reply = s.cluster(&req).unwrap();
+        assert_eq!(reply.model, "bert-base");
+        assert_eq!(reply.devices, 2);
+        assert!(reply.candidates >= 2, "only {} candidates", reply.candidates);
+        assert_eq!(reply.ranked.len(), reply.candidates as usize);
+        assert!(reply.ranked[0].throughput >= reply.baseline.throughput);
+        for w in reply.ranked.windows(2) {
+            assert!(w[0].throughput >= w[1].throughput);
+        }
     }
 
     #[test]

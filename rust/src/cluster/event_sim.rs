@@ -1,0 +1,632 @@
+//! Discrete-event pipeline simulator.
+//!
+//! The closed-form `distributed::pipeline::simulate` covers GPipe
+//! exactly and PipeDream-1F1B as a steady-state bound, but it cannot
+//! express interleaved schedules, per-link contention, or placement on
+//! a hierarchical topology. This simulator replays one training
+//! iteration as an explicit event timeline: every pipeline rank owns a
+//! static task order (forward/backward per microbatch, per virtual
+//! stage), tasks wait on their cross-rank inputs, and every boundary
+//! transfer is serialized on its directed rank-to-rank link (routed
+//! over the [`Topology`]). It supports:
+//!
+//! * **GPipe** — all forwards, flush, all backwards; reproduces the
+//!   closed-form wavefront recurrence *exactly* (the parity tests pin
+//!   this), including heterogeneous per-stage accelerators;
+//! * **1F1B** — Megatron/PipeDream warmup-steady-cooldown order
+//!   (`min(s-1-rank, m)` warmup forwards, then alternate);
+//! * **interleaved 1F1B** — `v` virtual chunks per device in Megatron's
+//!   slot order (`2(s-d-1) + (v-1)s` warmup slots, chunk-grouped
+//!   rounds), shrinking the pipeline bubble by ~`1/v`;
+//!
+//! and reports per-rank busy/bubble fractions, per-stage peak
+//! microbatch stash (the memory-feasibility input for the strategy
+//! sweep), link-contention waits, and the events-per-second counter the
+//! cluster bench and `GET /status` surface.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::topology::Topology;
+use crate::distributed::partition::PartitionedModel;
+use crate::distributed::pipeline::StageTimes;
+
+/// Cumulative simulator events (tasks + transfers) process-wide —
+/// surfaced by `GET /status` and `benches/cluster.rs`, following the
+/// `sched::evals_total` perf-counter pattern.
+static EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Total cluster-simulator events since process start.
+pub fn events_total() -> u64 {
+    EVENTS.load(Ordering::Relaxed)
+}
+
+/// Pipeline schedule simulated at event granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimSchedule {
+    /// Flush-at-end pipelining (one stage per rank).
+    GPipe,
+    /// PipeDream/Megatron one-forward-one-backward (one stage per rank).
+    OneF1B,
+    /// Interleaved 1F1B: the partition's stages are *virtual* stages
+    /// assigned round-robin to `devices` ranks (stage `k` lives on rank
+    /// `k % devices`; chunks per rank = `stages / devices`).
+    Interleaved1F1B { devices: u64 },
+}
+
+impl SimSchedule {
+    /// Canonical wire/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimSchedule::GPipe => "gpipe",
+            SimSchedule::OneF1B => "1f1b",
+            SimSchedule::Interleaved1F1B { .. } => "interleaved",
+        }
+    }
+}
+
+/// Device placement: topology device ids per pipeline rank (each rank
+/// owns a TMP group of `tmp` devices).
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub groups: Vec<Vec<usize>>,
+}
+
+impl Placement {
+    /// Contiguous block placement starting at device `offset`: rank `r`
+    /// owns devices `[offset + r*tmp, offset + (r+1)*tmp)`.
+    pub fn linear_at(
+        topo: &Topology,
+        ranks: u64,
+        tmp: u64,
+        offset: u64,
+    ) -> Result<Self, String> {
+        let need = offset + ranks * tmp;
+        if need > topo.devices as u64 {
+            return Err(format!(
+                "placement needs {need} devices but topology {:?} has {}",
+                topo.name, topo.devices
+            ));
+        }
+        Ok(Self {
+            groups: (0..ranks)
+                .map(|r| {
+                    ((offset + r * tmp)..(offset + (r + 1) * tmp))
+                        .map(|d| d as usize)
+                        .collect()
+                })
+                .collect(),
+        })
+    }
+
+    /// [`Placement::linear_at`] from device 0.
+    pub fn linear(topo: &Topology, ranks: u64, tmp: u64) -> Result<Self, String> {
+        Self::linear_at(topo, ranks, tmp, 0)
+    }
+
+    /// Representative device of a rank (boundary transfers are priced
+    /// between representatives).
+    fn rep(&self, rank: usize) -> usize {
+        self.groups[rank][0]
+    }
+}
+
+/// Outcome of one simulated training iteration.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Iteration makespan in seconds.
+    pub iter_seconds: f64,
+    /// Compute-busy seconds per rank.
+    pub per_rank_busy: Vec<f64>,
+    /// 1 - mean(busy)/iter over ranks: the pipeline bubble.
+    pub bubble_fraction: f64,
+    /// Peak simultaneously-stashed microbatches per stage (forward done,
+    /// backward not yet) — the memory-accounting input.
+    pub per_stage_peak_stash: Vec<u64>,
+    /// Total seconds links spent moving boundary activations/gradients.
+    pub comm_seconds: f64,
+    /// Total seconds transfers queued behind a busy link (contention).
+    pub link_wait_seconds: f64,
+    /// Simulator events processed (tasks + transfers).
+    pub events: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum P {
+    F,
+    B,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Task {
+    pass: P,
+    stage: usize,
+    mb: usize,
+}
+
+/// Build the static per-rank task orders for a schedule.
+fn build_orders(
+    schedule: SimSchedule,
+    s: usize,
+    m: usize,
+    ranks: usize,
+) -> Result<Vec<Vec<Task>>, String> {
+    match schedule {
+        SimSchedule::GPipe => Ok((0..ranks)
+            .map(|r| {
+                let mut o: Vec<Task> =
+                    (0..m).map(|j| Task { pass: P::F, stage: r, mb: j }).collect();
+                o.extend((0..m).map(|j| Task { pass: P::B, stage: r, mb: j }));
+                o
+            })
+            .collect()),
+        SimSchedule::OneF1B => Ok((0..ranks)
+            .map(|r| {
+                let warmup = (s - 1 - r).min(m);
+                let mut o: Vec<Task> = Vec::with_capacity(2 * m);
+                for j in 0..warmup {
+                    o.push(Task { pass: P::F, stage: r, mb: j });
+                }
+                for j in warmup..m {
+                    o.push(Task { pass: P::F, stage: r, mb: j });
+                    o.push(Task { pass: P::B, stage: r, mb: j - warmup });
+                }
+                for j in (m - warmup)..m {
+                    o.push(Task { pass: P::B, stage: r, mb: j });
+                }
+                o
+            })
+            .collect()),
+        SimSchedule::Interleaved1F1B { .. } => {
+            let v = s / ranks;
+            if v <= 1 {
+                // One chunk per device degenerates to plain 1F1B.
+                return build_orders(SimSchedule::OneF1B, s, m, ranks);
+            }
+            if m % ranks != 0 {
+                return Err(format!(
+                    "interleaved-1F1B needs microbatches ({m}) divisible by devices ({ranks})"
+                ));
+            }
+            let total = m * v;
+            let group = ranks * v;
+            let mut orders = Vec::with_capacity(ranks);
+            for d in 0..ranks {
+                // Megatron's interleaved slot order: forward slot `fi`
+                // runs chunk (fi % (s*v)) / s; backward slots mirror.
+                let warmup = (2 * (ranks - d - 1) + (v - 1) * ranks).min(total);
+                let mut fwd_seen = vec![0usize; v];
+                let mut bwd_seen = vec![0usize; v];
+                let mut o: Vec<Task> = Vec::with_capacity(2 * total);
+                let mut fi = 0usize;
+                let mut bi = 0usize;
+                while fi < warmup {
+                    let chunk = (fi % group) / ranks;
+                    o.push(Task { pass: P::F, stage: chunk * ranks + d, mb: fwd_seen[chunk] });
+                    fwd_seen[chunk] += 1;
+                    fi += 1;
+                }
+                while fi < total {
+                    let chunk = (fi % group) / ranks;
+                    o.push(Task { pass: P::F, stage: chunk * ranks + d, mb: fwd_seen[chunk] });
+                    fwd_seen[chunk] += 1;
+                    fi += 1;
+                    let chunk = v - 1 - (bi % group) / ranks;
+                    o.push(Task { pass: P::B, stage: chunk * ranks + d, mb: bwd_seen[chunk] });
+                    bwd_seen[chunk] += 1;
+                    bi += 1;
+                }
+                while bi < total {
+                    let chunk = v - 1 - (bi % group) / ranks;
+                    o.push(Task { pass: P::B, stage: chunk * ranks + d, mb: bwd_seen[chunk] });
+                    bwd_seen[chunk] += 1;
+                    bi += 1;
+                }
+                orders.push(o);
+            }
+            Ok(orders)
+        }
+    }
+}
+
+/// Simulate one training iteration of `part` (stage `k` timed by
+/// `times[k]`) under `schedule`, placed on `topo` by `placement`.
+///
+/// Transfers between adjacent (virtual) stages are routed between the
+/// owning ranks' representative devices and serialized per directed
+/// rank pair — contention on a shared boundary link delays downstream
+/// work, which the closed-form model cannot express.
+pub fn simulate_events(
+    part: &PartitionedModel,
+    times: &[StageTimes],
+    schedule: SimSchedule,
+    topo: &Topology,
+    placement: &Placement,
+) -> Result<SimResult, String> {
+    let s = part.stages.len();
+    let m = part.num_micro as usize;
+    if times.len() != s {
+        return Err(format!("times has {} entries for {s} stages", times.len()));
+    }
+    if s == 0 || m == 0 {
+        return Err("empty pipeline".to_string());
+    }
+    let ranks = match schedule {
+        SimSchedule::Interleaved1F1B { devices } => {
+            let d = devices as usize;
+            if d == 0 || s % d != 0 {
+                return Err(format!(
+                    "interleaved-1F1B needs stages ({s}) divisible by devices ({d})"
+                ));
+            }
+            d
+        }
+        _ => s,
+    };
+    if placement.groups.len() != ranks {
+        return Err(format!(
+            "placement has {} rank groups for {ranks} ranks",
+            placement.groups.len()
+        ));
+    }
+    let rank_of = |stage: usize| -> usize {
+        match schedule {
+            SimSchedule::Interleaved1F1B { .. } => stage % ranks,
+            _ => stage,
+        }
+    };
+    let orders = build_orders(schedule, s, m, ranks)?;
+
+    // Task state. `arrive[t]` is when task `t`'s cross-rank input is
+    // available at its rank; `done[t]` its completion time.
+    let tid = |pass: P, stage: usize, mb: usize| -> usize {
+        (match pass {
+            P::F => 0,
+            P::B => 1,
+        }) * s
+            * m
+            + stage * m
+            + mb
+    };
+    let n_tasks = 2 * s * m;
+    let mut arrive = vec![0.0f64; n_tasks];
+    let mut arrived = vec![false; n_tasks];
+    let mut done = vec![0.0f64; n_tasks];
+    for j in 0..m {
+        arrived[tid(P::F, 0, j)] = true; // inputs are resident
+    }
+
+    let mut rank_free = vec![0.0f64; ranks];
+    let mut busy = vec![0.0f64; ranks];
+    let mut link_free: HashMap<(usize, usize), f64> = HashMap::new();
+    let mut comm_seconds = 0.0f64;
+    let mut link_wait = 0.0f64;
+    let mut events = 0u64;
+    let mut stash_events: Vec<(f64, usize, i64)> = Vec::with_capacity(n_tasks);
+    let mut idx = vec![0usize; ranks];
+    let mut remaining: usize = orders.iter().map(Vec::len).sum();
+
+    // One routed transfer: serialize on the directed (from, to) rank
+    // link, return the arrival time at the consumer.
+    let mut transfer = |from: usize,
+                        to: usize,
+                        ready: f64,
+                        bytes: u64,
+                        link_free: &mut HashMap<(usize, usize), f64>|
+     -> f64 {
+        let free = link_free.entry((from, to)).or_insert(0.0);
+        let start = ready.max(*free);
+        let dur = topo.p2p_seconds(placement.rep(from), placement.rep(to), bytes);
+        *free = start + dur;
+        comm_seconds += dur;
+        link_wait += start - ready;
+        start + dur
+    };
+
+    while remaining > 0 {
+        let mut progress = false;
+        for r in 0..ranks {
+            while idx[r] < orders[r].len() {
+                let t = orders[r][idx[r]];
+                let id = tid(t.pass, t.stage, t.mb);
+                if !arrived[id] {
+                    break;
+                }
+                let dur = match t.pass {
+                    P::F => times[t.stage].fwd_s,
+                    P::B => times[t.stage].bwd_s,
+                };
+                let start = rank_free[r].max(arrive[id]);
+                let end = start + dur;
+                done[id] = end;
+                rank_free[r] = end;
+                busy[r] += dur;
+                events += 1;
+                match t.pass {
+                    P::F => {
+                        stash_events.push((end, t.stage, 1));
+                        if t.stage + 1 < s {
+                            let to = tid(P::F, t.stage + 1, t.mb);
+                            let r2 = rank_of(t.stage + 1);
+                            arrive[to] = if r2 == r {
+                                end
+                            } else {
+                                events += 1;
+                                transfer(
+                                    r,
+                                    r2,
+                                    end,
+                                    part.stages[t.stage].boundary_bytes,
+                                    &mut link_free,
+                                )
+                            };
+                            arrived[to] = true;
+                        } else {
+                            // Loss at the last stage: its backward is
+                            // ready the moment the forward completes.
+                            let to = tid(P::B, t.stage, t.mb);
+                            arrive[to] = end;
+                            arrived[to] = true;
+                        }
+                    }
+                    P::B => {
+                        stash_events.push((end, t.stage, -1));
+                        if t.stage > 0 {
+                            let to = tid(P::B, t.stage - 1, t.mb);
+                            let r2 = rank_of(t.stage - 1);
+                            arrive[to] = if r2 == r {
+                                end
+                            } else {
+                                events += 1;
+                                transfer(
+                                    r,
+                                    r2,
+                                    end,
+                                    part.stages[t.stage - 1].boundary_bytes,
+                                    &mut link_free,
+                                )
+                            };
+                            arrived[to] = true;
+                        }
+                    }
+                }
+                idx[r] += 1;
+                remaining -= 1;
+                progress = true;
+            }
+        }
+        if !progress {
+            return Err(format!(
+                "pipeline schedule deadlocked with {remaining} tasks pending (invalid order)"
+            ));
+        }
+    }
+
+    let iter_seconds = done.iter().fold(0.0f64, |a, &b| a.max(b));
+    // Peak stash per stage: replay the +/- events in time order
+    // (forward completions first on ties, the conservative peak).
+    stash_events.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.2.cmp(&a.2)));
+    let mut in_flight = vec![0i64; s];
+    let mut peak = vec![0i64; s];
+    for &(_, stage, delta) in &stash_events {
+        in_flight[stage] += delta;
+        peak[stage] = peak[stage].max(in_flight[stage]);
+    }
+    EVENTS.fetch_add(events, Ordering::Relaxed);
+
+    let mean_busy: f64 = busy.iter().sum::<f64>() / ranks as f64;
+    Ok(SimResult {
+        iter_seconds,
+        bubble_fraction: if iter_seconds > 0.0 { 1.0 - mean_busy / iter_seconds } else { 0.0 },
+        per_rank_busy: busy,
+        per_stage_peak_stash: peak.iter().map(|&p| p.max(0) as u64).collect(),
+        comm_seconds,
+        link_wait_seconds: link_wait,
+        events,
+    })
+}
+
+/// Peak HBM footprint of one rank under a simulated schedule: optimizer
+/// state of every stage hosted by the rank plus its peak activation
+/// stash.
+pub fn rank_footprint_bytes(
+    part: &PartitionedModel,
+    result: &SimResult,
+    schedule: SimSchedule,
+    rank: usize,
+) -> u64 {
+    let ranks = match schedule {
+        SimSchedule::Interleaved1F1B { devices } => devices as usize,
+        _ => part.stages.len(),
+    };
+    part.stages
+        .iter()
+        .enumerate()
+        .filter(|(k, _)| match schedule {
+            SimSchedule::Interleaved1F1B { .. } => k % ranks == rank,
+            _ => *k == rank,
+        })
+        .map(|(k, st)| st.state_bytes + st.stash_bytes * result.per_stage_peak_stash[k])
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::native::NativeCost;
+    use crate::distributed::network::Network;
+    use crate::distributed::partition::partition_transformer;
+    use crate::distributed::pipeline::{simulate, stage_times};
+    use crate::distributed::Scheme;
+    use crate::graph::autodiff::Optimizer;
+
+    fn mini_part(stages: u64) -> PartitionedModel {
+        let mut cfg = crate::models::transformer::gpt2_xl();
+        cfg.layers = 8;
+        partition_transformer("mini", &cfg, stages, 1, Optimizer::SgdMomentum)
+    }
+
+    fn mini_times(part: &PartitionedModel) -> Vec<StageTimes> {
+        let net = Network::default();
+        part.stages
+            .iter()
+            .map(|s| stage_times(s, &presets::tpuv2(), part.tmp, &net, &mut NativeCost))
+            .collect()
+    }
+
+    #[test]
+    fn gpipe_event_sim_matches_closed_form_exactly() {
+        let part = mini_part(4);
+        let times = mini_times(&part);
+        let net = Network::default();
+        let closed = simulate(&part, &vec![presets::tpuv2(); 4], Scheme::GPipe, &net, &mut NativeCost);
+        let topo = Topology::flat(&net, 4);
+        let placement = Placement::linear(&topo, 4, 1).unwrap();
+        let sim = simulate_events(&part, &times, SimSchedule::GPipe, &topo, &placement).unwrap();
+        let rel = (sim.iter_seconds - closed.iter_seconds).abs() / closed.iter_seconds;
+        assert!(rel < 1e-6, "event {} vs closed {}", sim.iter_seconds, closed.iter_seconds);
+        assert!(sim.events > 0 && events_total() > 0);
+    }
+
+    #[test]
+    fn gpipe_parity_holds_for_heterogeneous_stages() {
+        let part = mini_part(4);
+        let net = Network::default();
+        let mut cfgs = vec![presets::tpuv2(); 4];
+        cfgs[2] = crate::arch::ArchConfig::new(1, 32, 32, 1, 32); // weak stage
+        let times: Vec<StageTimes> = part
+            .stages
+            .iter()
+            .zip(&cfgs)
+            .map(|(s, c)| stage_times(s, c, part.tmp, &net, &mut NativeCost))
+            .collect();
+        let closed = simulate(&part, &cfgs, Scheme::GPipe, &net, &mut NativeCost);
+        let topo = Topology::flat(&net, 4);
+        let placement = Placement::linear(&topo, 4, 1).unwrap();
+        let sim = simulate_events(&part, &times, SimSchedule::GPipe, &topo, &placement).unwrap();
+        let rel = (sim.iter_seconds - closed.iter_seconds).abs() / closed.iter_seconds;
+        assert!(rel < 1e-6, "event {} vs closed {}", sim.iter_seconds, closed.iter_seconds);
+    }
+
+    #[test]
+    fn one_f1b_event_sim_within_one_percent_of_closed_form() {
+        // The closed-form 1F1B model is a steady-state bound, defined
+        // for homogeneous stage times — compare on exactly that case.
+        let part = mini_part(4);
+        let times = vec![StageTimes { fwd_s: 1e-2, bwd_s: 2e-2, energy_j: 0.0 }; 4];
+        let net = Network::default();
+        let closed = crate::distributed::pipeline::simulate_with_times(
+            &part,
+            &vec![presets::tpuv2(); 4],
+            &times,
+            Scheme::PipeDream1F1B,
+            &net,
+        );
+        let topo = Topology::flat(&net, 4);
+        let placement = Placement::linear(&topo, 4, 1).unwrap();
+        let sim = simulate_events(&part, &times, SimSchedule::OneF1B, &topo, &placement).unwrap();
+        let rel = (sim.iter_seconds - closed.iter_seconds).abs() / closed.iter_seconds;
+        assert!(rel < 0.01, "event {} vs closed {}", sim.iter_seconds, closed.iter_seconds);
+    }
+
+    #[test]
+    fn one_f1b_stashes_less_than_gpipe() {
+        let mut part = mini_part(4);
+        // More microbatches than stages so the 1F1B stash bound bites.
+        part.num_micro = 12;
+        let times = mini_times(&part);
+        let topo = Topology::flat(&Network::default(), 4);
+        let placement = Placement::linear(&topo, 4, 1).unwrap();
+        let g = simulate_events(&part, &times, SimSchedule::GPipe, &topo, &placement).unwrap();
+        let d = simulate_events(&part, &times, SimSchedule::OneF1B, &topo, &placement).unwrap();
+        // GPipe stashes every microbatch on every stage.
+        assert!(g.per_stage_peak_stash.iter().all(|&p| p == part.num_micro));
+        // 1F1B stage 0 keeps at most `stages` in flight.
+        assert!(d.per_stage_peak_stash[0] <= part.stages.len() as u64);
+        assert!(d.per_stage_peak_stash[0] < g.per_stage_peak_stash[0]);
+        assert!(rank_footprint_bytes(&part, &d, SimSchedule::OneF1B, 0)
+            <= rank_footprint_bytes(&part, &g, SimSchedule::GPipe, 0));
+    }
+
+    #[test]
+    fn interleaved_with_one_chunk_is_plain_1f1b() {
+        let part = mini_part(4);
+        let times = mini_times(&part);
+        let topo = Topology::flat(&Network::default(), 4);
+        let placement = Placement::linear(&topo, 4, 1).unwrap();
+        let plain = simulate_events(&part, &times, SimSchedule::OneF1B, &topo, &placement).unwrap();
+        let inter = simulate_events(
+            &part,
+            &times,
+            SimSchedule::Interleaved1F1B { devices: 4 },
+            &topo,
+            &placement,
+        )
+        .unwrap();
+        assert_eq!(plain.iter_seconds, inter.iter_seconds);
+    }
+
+    #[test]
+    fn interleaving_shrinks_the_bubble() {
+        // 8 virtual stages on 4 devices (2 chunks each) vs the same
+        // model as 4 plain stages: the bubble fraction must shrink.
+        let part8 = mini_part(8);
+        let part4 = mini_part(4);
+        let times8 = mini_times(&part8);
+        let times4 = mini_times(&part4);
+        let topo = Topology::flat(&Network::default(), 4);
+        let placement = Placement::linear(&topo, 4, 1).unwrap();
+        let plain =
+            simulate_events(&part4, &times4, SimSchedule::OneF1B, &topo, &placement).unwrap();
+        let inter = simulate_events(
+            &part8,
+            &times8,
+            SimSchedule::Interleaved1F1B { devices: 4 },
+            &topo,
+            &placement,
+        )
+        .unwrap();
+        assert!(
+            inter.bubble_fraction < plain.bubble_fraction,
+            "interleaved bubble {} !< plain {}",
+            inter.bubble_fraction,
+            plain.bubble_fraction
+        );
+        assert!(inter.iter_seconds > 0.0 && inter.iter_seconds.is_finite());
+    }
+
+    #[test]
+    fn slower_topology_slows_the_pipeline() {
+        let part = mini_part(4);
+        let times = mini_times(&part);
+        let fast = Topology::flat(&Network::default(), 4);
+        let slow = Topology::flat(&Network { link_gbps: 1.0, latency_us: 200.0 }, 4);
+        let placement = Placement::linear(&fast, 4, 1).unwrap();
+        let f = simulate_events(&part, &times, SimSchedule::GPipe, &fast, &placement).unwrap();
+        let s = simulate_events(&part, &times, SimSchedule::GPipe, &slow, &placement).unwrap();
+        assert!(s.iter_seconds > f.iter_seconds);
+        assert!(s.comm_seconds > f.comm_seconds);
+    }
+
+    #[test]
+    fn invalid_shapes_are_errors_not_panics() {
+        let part = mini_part(4);
+        let times = mini_times(&part);
+        let topo = Topology::flat(&Network::default(), 4);
+        let placement = Placement::linear(&topo, 4, 1).unwrap();
+        // 3 devices do not divide 4 virtual stages.
+        assert!(simulate_events(
+            &part,
+            &times,
+            SimSchedule::Interleaved1F1B { devices: 3 },
+            &topo,
+            &placement,
+        )
+        .is_err());
+        // Wrong times length.
+        assert!(simulate_events(&part, &times[..2], SimSchedule::GPipe, &topo, &placement).is_err());
+        // Placement smaller than the pipeline.
+        assert!(Placement::linear(&topo, 8, 1).is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! `wham::cluster` — topology-aware cluster simulation and
+//! parallelism-strategy search.
+//!
+//! The paper's distributed layer (section 5) models the interconnect as
+//! one flat latency/bandwidth pair and evaluates pipelines with
+//! closed-form schedules at caller-fixed (pp, tp) degrees. This
+//! subsystem scales that into a cluster-level system:
+//!
+//! * [`topology`] — hierarchical node/switch interconnects (ring,
+//!   fat-tree, NVLink-island-plus-IB presets) with per-link
+//!   latency/bandwidth, min-hop routing, and collective cost models
+//!   (ring/tree all-reduce, all-gather, reduce-scatter, routed p2p).
+//!   The flat `Network` survives as the single-hop special case behind
+//!   a compatibility shim.
+//! * [`event_sim`] — a discrete-event pipeline simulator: explicit
+//!   per-microbatch/per-stage task timelines for GPipe, 1F1B, and
+//!   interleaved-1F1B, heterogeneous per-stage accelerators, serialized
+//!   link contention, and per-stage memory/bubble accounting. Validated
+//!   against the closed-form `distributed::pipeline::simulate` on the
+//!   cases the formulas cover (exact for GPipe, within 1% for
+//!   homogeneous 1F1B).
+//! * [`strategy`] — the auto-sweep: enumerate feasible
+//!   (pp, tp, dp, microbatch, schedule) splits under device-count and
+//!   HBM constraints, screen them with the event simulator, mine
+//!   hardware for the best with the existing `global_search` (fanning
+//!   out via `--jobs`), and return a ranked [`strategy::StrategyReport`].
+//!
+//! Front doors: `wham cluster` (CLI), `POST /cluster` (service), and
+//! [`crate::api::ClusterRequest`] (library) — all through
+//! [`crate::api::Session::run_cluster`], with design points cached in
+//! the fingerprint-keyed design database exactly like `wham global`.
+
+pub mod event_sim;
+pub mod strategy;
+pub mod topology;
+
+pub use event_sim::{events_total, simulate_events, Placement, SimResult, SimSchedule};
+pub use strategy::{sweep, StrategyPoint, StrategyReport, SweepOptions};
+pub use topology::{AllReduceAlgo, Link, PathCost, Topology};

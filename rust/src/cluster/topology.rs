@@ -1,0 +1,452 @@
+//! Hierarchical interconnect topologies and routed collective cost
+//! models.
+//!
+//! The flat [`Network`](crate::distributed::network::Network) (one
+//! latency + one bandwidth between every device pair) is the paper's
+//! section-5 model; real training clusters are hierarchical — NVLink
+//! islands behind InfiniBand spines, fat-tree pods, TPU-style rings —
+//! and the latency a collective pays depends on how many physical hops
+//! each step's message crosses. This module models a cluster as a graph
+//! of devices and switches with per-link latency/bandwidth, routes
+//! point-to-point transfers over it (min-hop paths: latency adds per
+//! hop, bandwidth bottlenecks), and prices the standard collectives —
+//! ring/tree all-reduce, all-gather, reduce-scatter — over the routed
+//! paths.
+//!
+//! The flat `Network` survives as a compatibility shim: it is exactly
+//! the single-hop uniform topology ([`Topology::flat`]), and its
+//! `allreduce_seconds` delegates to the shared ring-collective model
+//! here ([`ring_allreduce_uniform`]), so the two layers cannot drift.
+
+use crate::distributed::network::Network;
+
+/// One physical link class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// Bandwidth in GB/s.
+    pub gbps: f64,
+    /// Per-hop latency in microseconds.
+    pub latency_us: f64,
+}
+
+/// ICI/NVLink-class default link — matches `Network::default()`.
+pub const ICI: Link = Link { gbps: 100.0, latency_us: 2.0 };
+/// NVLink/NVSwitch-class intra-island link.
+pub const NVLINK: Link = Link { gbps: 300.0, latency_us: 1.0 };
+/// InfiniBand-class inter-node link.
+pub const IB: Link = Link { gbps: 25.0, latency_us: 5.0 };
+/// Fat-tree uplink (leaf switch to spine): double-width IB.
+pub const FAT_TREE_UP: Link = Link { gbps: 50.0, latency_us: 5.0 };
+
+/// Routed cost of one device-to-device path.
+#[derive(Debug, Clone, Copy)]
+pub struct PathCost {
+    /// Sum of per-hop latencies, in seconds.
+    pub latency_s: f64,
+    /// Bottleneck (minimum) bandwidth along the path, GB/s.
+    pub gbps: f64,
+    /// Number of links crossed.
+    pub hops: u32,
+}
+
+impl PathCost {
+    /// Seconds to move `bytes` along this path.
+    pub fn seconds(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / (self.gbps * 1e9)
+    }
+}
+
+/// All-reduce algorithm choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllReduceAlgo {
+    /// Bandwidth-optimal ring: 2(g-1) steps of `bytes/g` chunks.
+    Ring,
+    /// Latency-optimal binomial tree: 2*ceil(log2 g) rounds of full
+    /// buffers (reduce to the root, broadcast back).
+    Tree,
+    /// Whichever of ring/tree is cheaper for this group and size.
+    Auto,
+}
+
+/// A cluster interconnect: devices `0..devices` plus internal switch
+/// nodes, connected by links. Paths are min-hop routes (unique in the
+/// tree-shaped presets; shortest arc on rings).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    /// Device (accelerator) count; node ids `0..devices` are devices,
+    /// higher ids are switches.
+    pub devices: usize,
+    /// Single-hop uniform shim: every device pair is directly connected
+    /// with this link (the flat `Network` compatibility case).
+    uniform: Option<Link>,
+    /// Undirected adjacency over devices + switches (both directions
+    /// stored).
+    adj: Vec<Vec<(usize, Link)>>,
+}
+
+/// Shared ring all-reduce model over a uniform single-hop group:
+/// 2(n-1) steps, each paying one hop of latency plus a `bytes/n` chunk
+/// at `gbps` — i.e. 2(n-1) latency terms and 2(n-1)/n of the buffer
+/// per link. `Network::allreduce_seconds` is this with its own link.
+pub fn ring_allreduce_uniform(latency_s: f64, gbps: f64, bytes: u64, n: u64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    2.0 * (nf - 1.0) * (latency_s + bytes as f64 / nf / (gbps * 1e9))
+}
+
+impl Topology {
+    fn empty(name: &str, devices: usize, nodes: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            devices,
+            uniform: None,
+            adj: vec![Vec::new(); nodes],
+        }
+    }
+
+    fn connect(&mut self, a: usize, b: usize, link: Link) {
+        self.adj[a].push((b, link));
+        self.adj[b].push((a, link));
+    }
+
+    /// Every device pair directly connected by `link` (single hop).
+    pub fn uniform(devices: usize, link: Link, name: &str) -> Self {
+        let mut t = Self::empty(name, devices, devices);
+        t.uniform = Some(link);
+        t
+    }
+
+    /// The flat-`Network` compatibility shim: a uniform single-hop
+    /// topology with the network's latency and bandwidth. Collectives
+    /// over it price identically to the `Network` formulas.
+    pub fn flat(net: &Network, devices: usize) -> Self {
+        Self::uniform(devices, Link { gbps: net.link_gbps, latency_us: net.latency_us }, "flat")
+    }
+
+    /// Bidirectional ring of `devices` (TPU-pod style): device `i`
+    /// links to `(i+1) % devices`.
+    pub fn ring(devices: usize, link: Link) -> Self {
+        let mut t = Self::empty("ring", devices, devices);
+        for i in 0..devices {
+            let j = (i + 1) % devices;
+            if j == i || (devices == 2 && i == 1) {
+                continue; // 1 device: no links; 2 devices: one link
+            }
+            t.connect(i, j, link);
+        }
+        t
+    }
+
+    /// Two-level fat tree: `radix` devices per leaf switch, all leaf
+    /// switches on one spine. Same-leaf traffic crosses 2 `leaf` links;
+    /// cross-leaf traffic crosses 2 `leaf` + 2 `up` links.
+    pub fn fat_tree(devices: usize, radix: usize, leaf: Link, up: Link) -> Self {
+        assert!(radix >= 1);
+        let leaves = (devices + radix - 1) / radix;
+        let spine = leaves > 1;
+        let nodes = devices + leaves + usize::from(spine);
+        let mut t = Self::empty("fat-tree", devices, nodes);
+        for d in 0..devices {
+            t.connect(d, devices + d / radix, leaf);
+        }
+        if spine {
+            let root = devices + leaves;
+            for l in 0..leaves {
+                t.connect(devices + l, root, up);
+            }
+        }
+        t
+    }
+
+    /// NVLink islands behind an InfiniBand spine: `island` devices per
+    /// NVSwitch, island switches joined by a spine. Intra-island
+    /// traffic crosses 2 `nvlink` hops; cross-island traffic crosses
+    /// 2 `nvlink` + 2 `ib` hops.
+    pub fn nvlink_island(devices: usize, island: usize, nvlink: Link, ib: Link) -> Self {
+        assert!(island >= 1);
+        let islands = (devices + island - 1) / island;
+        let spine = islands > 1;
+        let nodes = devices + islands + usize::from(spine);
+        let mut t = Self::empty("nvlink-island", devices, nodes);
+        for d in 0..devices {
+            t.connect(d, devices + d / island, nvlink);
+        }
+        if spine {
+            let root = devices + islands;
+            for i in 0..islands {
+                t.connect(devices + i, root, ib);
+            }
+        }
+        t
+    }
+
+    /// Named preset constructors — the CLI/API surface. `flat` is the
+    /// paper's homogeneous interconnect; the others are the
+    /// hierarchical shapes real clusters use.
+    pub fn preset(name: &str, devices: usize) -> Result<Self, String> {
+        if devices == 0 {
+            return Err("topology needs at least one device".to_string());
+        }
+        match name {
+            "flat" => Ok(Self::uniform(devices, ICI, "flat")),
+            "ring" => Ok(Self::ring(devices, ICI)),
+            "fat-tree" | "fattree" => Ok(Self::fat_tree(devices, 8, IB, FAT_TREE_UP)),
+            "nvlink-island" | "island" => Ok(Self::nvlink_island(devices, 8, NVLINK, IB)),
+            other => Err(format!(
+                "unknown topology preset {other:?} (expected one of: flat, ring, fat-tree, nvlink-island)"
+            )),
+        }
+    }
+
+    /// The preset names [`Topology::preset`] accepts.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["flat", "ring", "fat-tree", "nvlink-island"]
+    }
+
+    /// Min-hop routed path between two devices (BFS over devices +
+    /// switches; deterministic tie-break by construction order).
+    pub fn path(&self, a: usize, b: usize) -> PathCost {
+        assert!(a < self.devices && b < self.devices, "path endpoints must be devices");
+        if a == b {
+            return PathCost { latency_s: 0.0, gbps: f64::INFINITY, hops: 0 };
+        }
+        if let Some(l) = self.uniform {
+            return PathCost { latency_s: l.latency_us * 1e-6, gbps: l.gbps, hops: 1 };
+        }
+        // BFS from `a`; first arrival at each node is a min-hop path.
+        let mut seen = vec![false; self.adj.len()];
+        let mut frontier: Vec<(usize, PathCost)> =
+            vec![(a, PathCost { latency_s: 0.0, gbps: f64::INFINITY, hops: 0 })];
+        seen[a] = true;
+        while !frontier.is_empty() {
+            let mut next = Vec::new();
+            for (node, cost) in frontier {
+                for &(peer, link) in &self.adj[node] {
+                    if seen[peer] {
+                        continue;
+                    }
+                    seen[peer] = true;
+                    let c = PathCost {
+                        latency_s: cost.latency_s + link.latency_us * 1e-6,
+                        gbps: cost.gbps.min(link.gbps),
+                        hops: cost.hops + 1,
+                    };
+                    if peer == b {
+                        return c;
+                    }
+                    next.push((peer, c));
+                }
+            }
+            frontier = next;
+        }
+        panic!("topology {:?} is disconnected between {a} and {b}", self.name);
+    }
+
+    /// Seconds to move `bytes` point-to-point over the routed path.
+    pub fn p2p_seconds(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        self.path(a, b).seconds(bytes)
+    }
+
+    /// Ring all-reduce over `group` (ring order = group order): 2(g-1)
+    /// steps; each step every member sends a `bytes/g` chunk to its
+    /// ring successor, so the step costs the worst routed neighbor
+    /// path. Reduces to [`ring_allreduce_uniform`] on uniform shims.
+    pub fn ring_allreduce_seconds(&self, group: &[usize], bytes: u64) -> f64 {
+        let g = group.len() as u64;
+        if g <= 1 {
+            return 0.0;
+        }
+        let chunk = bytes as f64 / g as f64;
+        let mut step = 0.0f64;
+        for (i, &a) in group.iter().enumerate() {
+            let b = group[(i + 1) % group.len()];
+            let p = self.path(a, b);
+            step = step.max(p.latency_s + chunk / (p.gbps * 1e9));
+        }
+        2.0 * (g as f64 - 1.0) * step
+    }
+
+    /// Binomial-tree all-reduce rooted at `group[0]`: `ceil(log2 g)`
+    /// reduce rounds plus the mirror broadcast, each round moving the
+    /// full buffer over the worst root-to-member path.
+    pub fn tree_allreduce_seconds(&self, group: &[usize], bytes: u64) -> f64 {
+        let g = group.len() as u64;
+        if g <= 1 {
+            return 0.0;
+        }
+        let rounds = (64 - (g - 1).leading_zeros()) as f64; // ceil(log2 g)
+        let mut worst = 0.0f64;
+        for &m in &group[1..] {
+            worst = worst.max(self.path(group[0], m).seconds(bytes));
+        }
+        2.0 * rounds * worst
+    }
+
+    /// All-reduce over `group` with the chosen algorithm.
+    pub fn allreduce_seconds(&self, group: &[usize], bytes: u64, algo: AllReduceAlgo) -> f64 {
+        match algo {
+            AllReduceAlgo::Ring => self.ring_allreduce_seconds(group, bytes),
+            AllReduceAlgo::Tree => self.tree_allreduce_seconds(group, bytes),
+            AllReduceAlgo::Auto => self
+                .ring_allreduce_seconds(group, bytes)
+                .min(self.tree_allreduce_seconds(group, bytes)),
+        }
+    }
+
+    /// Ring all-gather: (g-1) steps, each member forwarding a
+    /// `shard_bytes` shard to its ring successor.
+    pub fn allgather_seconds(&self, group: &[usize], shard_bytes: u64) -> f64 {
+        let g = group.len();
+        if g <= 1 {
+            return 0.0;
+        }
+        let mut step = 0.0f64;
+        for (i, &a) in group.iter().enumerate() {
+            let b = group[(i + 1) % g];
+            step = step.max(self.path(a, b).seconds(shard_bytes));
+        }
+        (g as f64 - 1.0) * step
+    }
+
+    /// Ring reduce-scatter of a full `bytes` buffer: (g-1) steps of
+    /// `bytes/g` chunks.
+    pub fn reduce_scatter_seconds(&self, group: &[usize], bytes: u64) -> f64 {
+        let g = group.len() as u64;
+        if g <= 1 {
+            return 0.0;
+        }
+        self.allgather_seconds(group, bytes / g.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MIB: u64 = 1 << 20;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= b.abs() * 1e-6
+    }
+
+    // ---- golden costs pinning the preset models (satellite: golden
+    // tests for p2p/all-reduce on the presets) --------------------------
+
+    #[test]
+    fn golden_flat_p2p_and_allreduce() {
+        let t = Topology::preset("flat", 8).unwrap();
+        // 2 us + 1 MiB / 100 GB/s.
+        assert!(close(t.p2p_seconds(0, 5, MIB), 1.248576e-5));
+        // 14 hops of 2 us + (14/8) MiB / 100 GB/s.
+        assert!(close(t.ring_allreduce_seconds(&[0, 1, 2, 3, 4, 5, 6, 7], MIB), 4.635008e-5));
+    }
+
+    #[test]
+    fn flat_matches_network_shim_exactly() {
+        // The compatibility shim: the flat topology and the Network
+        // formulas are the same model, bit for bit.
+        let net = Network::default();
+        let t = Topology::flat(&net, 16);
+        let group: Vec<usize> = (0..16).collect();
+        assert_eq!(t.ring_allreduce_seconds(&group, MIB), net.allreduce_seconds(MIB, 16));
+        assert_eq!(t.p2p_seconds(0, 9, MIB), net.p2p_seconds(MIB));
+    }
+
+    #[test]
+    fn golden_ring_p2p_routes_around_the_ring() {
+        let t = Topology::preset("ring", 8).unwrap();
+        // 4 hops x 2 us + 1 MiB / 100 GB/s.
+        assert!(close(t.p2p_seconds(0, 4, MIB), 1.848576e-5));
+        assert_eq!(t.path(0, 4).hops, 4);
+        assert_eq!(t.path(0, 7).hops, 1, "shortest arc must wrap");
+        // Neighbor steps are single hops, so the all-reduce matches flat.
+        let group: Vec<usize> = (0..8).collect();
+        assert!(close(t.ring_allreduce_seconds(&group, MIB), 4.635008e-5));
+    }
+
+    #[test]
+    fn golden_fat_tree_p2p() {
+        let t = Topology::preset("fat-tree", 16).unwrap();
+        // Same leaf: 2 IB hops = 10 us + 1 MiB / 25 GB/s.
+        assert!(close(t.p2p_seconds(0, 1, MIB), 5.194304e-5));
+        assert_eq!(t.path(0, 1).hops, 2);
+        // Cross leaf: leaf + up + up + leaf = 20 us, bottleneck 25 GB/s.
+        assert!(close(t.p2p_seconds(0, 8, MIB), 6.194304e-5));
+        assert_eq!(t.path(0, 8).hops, 4);
+    }
+
+    #[test]
+    fn golden_nvlink_island_p2p_and_allreduce() {
+        let t = Topology::preset("nvlink-island", 16).unwrap();
+        // Intra-island: 2 NVLink hops = 2 us + 1 MiB / 300 GB/s.
+        assert!(close(t.p2p_seconds(0, 1, MIB), 5.495253e-6));
+        // Cross-island: nvlink + ib + ib + nvlink = 12 us, 25 GB/s.
+        assert!(close(t.p2p_seconds(0, 8, MIB), 5.394304e-5));
+        // Ring all-reduce over all 16: the two island-crossing steps
+        // dominate every step: 30 * (12 us + (1 MiB / 16) / 25 GB/s).
+        let group: Vec<usize> = (0..16).collect();
+        assert!(close(t.ring_allreduce_seconds(&group, MIB), 4.386432e-4));
+        // Staying inside one island is far cheaper.
+        let island: Vec<usize> = (0..8).collect();
+        assert!(t.ring_allreduce_seconds(&island, MIB) < 1e-4);
+    }
+
+    // ---- structural properties ----------------------------------------
+
+    #[test]
+    fn path_is_symmetric_and_zero_on_self() {
+        for name in Topology::preset_names() {
+            let t = Topology::preset(name, 16).unwrap();
+            let ab = t.path(2, 11);
+            let ba = t.path(11, 2);
+            assert_eq!(ab.hops, ba.hops, "{name}");
+            assert!(close(ab.latency_s.max(1e-30), ba.latency_s.max(1e-30)), "{name}");
+            assert_eq!(t.path(3, 3).hops, 0);
+            assert_eq!(t.p2p_seconds(3, 3, MIB), 0.0);
+        }
+    }
+
+    #[test]
+    fn tree_allreduce_beats_ring_for_tiny_buffers() {
+        let t = Topology::preset("flat", 32).unwrap();
+        let group: Vec<usize> = (0..32).collect();
+        // 8 bytes across 32 devices: latency-dominated, tree wins.
+        let ring = t.ring_allreduce_seconds(&group, 8);
+        let tree = t.tree_allreduce_seconds(&group, 8);
+        assert!(tree < ring, "tree {tree} !< ring {ring}");
+        assert_eq!(t.allreduce_seconds(&group, 8, AllReduceAlgo::Auto), tree.min(ring));
+        // 1 GiB: bandwidth-dominated, ring wins.
+        let big = 1u64 << 30;
+        assert!(
+            t.ring_allreduce_seconds(&group, big) < t.tree_allreduce_seconds(&group, big)
+        );
+    }
+
+    #[test]
+    fn collectives_are_free_for_singleton_groups() {
+        let t = Topology::preset("fat-tree", 8).unwrap();
+        assert_eq!(t.ring_allreduce_seconds(&[3], MIB), 0.0);
+        assert_eq!(t.tree_allreduce_seconds(&[3], MIB), 0.0);
+        assert_eq!(t.allgather_seconds(&[3], MIB), 0.0);
+        assert_eq!(t.reduce_scatter_seconds(&[3], MIB), 0.0);
+    }
+
+    #[test]
+    fn reduce_scatter_plus_allgather_bounds_ring_allreduce() {
+        let t = Topology::preset("nvlink-island", 16).unwrap();
+        let group: Vec<usize> = (0..16).collect();
+        let rs = t.reduce_scatter_seconds(&group, MIB);
+        let ag = t.allgather_seconds(&group, MIB / 16);
+        let ar = t.ring_allreduce_seconds(&group, MIB);
+        assert!(close(rs + ag, ar), "rs {rs} + ag {ag} != ar {ar}");
+    }
+
+    #[test]
+    fn unknown_preset_is_an_error() {
+        assert!(Topology::preset("torus9d", 8).is_err());
+        assert!(Topology::preset("flat", 0).is_err());
+    }
+}

@@ -39,21 +39,40 @@ pub fn data_parallel(
     net: &Network,
     exposed: f64,
 ) -> DataParallelEval {
-    assert!(replicas >= 1);
-    assert!((0.0..=1.0).contains(&exposed));
-    // Per-stage gradient bytes; the per-iteration all-reduce is bounded by
-    // the largest stage (stages reduce concurrently on disjoint links).
-    let max_grad_bytes = part
-        .stages
-        .iter()
-        .map(|s| s.graph.param_elems() * DTYPE_BYTES)
-        .max()
-        .unwrap_or(0);
-    let ar = if replicas > 1 {
-        net.allreduce_seconds(max_grad_bytes, replicas) * exposed
+    let full_ar = if replicas > 1 {
+        net.allreduce_seconds(gradient_bytes(part), replicas)
     } else {
         0.0
     };
+    data_parallel_with_allreduce(part, pipeline, replicas, full_ar, exposed)
+}
+
+/// Per-replica gradient bytes the DP all-reduce moves: bounded by the
+/// largest stage (stages reduce concurrently on disjoint links).
+pub fn gradient_bytes(part: &PartitionedModel) -> u64 {
+    part.stages
+        .iter()
+        .map(|s| s.graph.param_elems() * DTYPE_BYTES)
+        .max()
+        .unwrap_or(0)
+}
+
+/// [`data_parallel`] with the full (un-overlapped) all-reduce cost
+/// already priced. This is the flat-path definition of the DP
+/// composition; the cluster sweep ([`crate::cluster::strategy`])
+/// performs the same composition with the collective routed over a
+/// [`crate::cluster::Topology`], sharing [`gradient_bytes`] so the
+/// gradient volume cannot drift between the two.
+pub fn data_parallel_with_allreduce(
+    part: &PartitionedModel,
+    pipeline: &PipelineEval,
+    replicas: u64,
+    full_allreduce_s: f64,
+    exposed: f64,
+) -> DataParallelEval {
+    assert!(replicas >= 1);
+    assert!((0.0..=1.0).contains(&exposed));
+    let ar = if replicas > 1 { full_allreduce_s * exposed } else { 0.0 };
     let iter = pipeline.iter_seconds + ar;
     let global_batch = part.micro_batch * part.num_micro * replicas;
     let throughput = global_batch as f64 / iter;
@@ -124,5 +143,68 @@ mod tests {
         let (p, e) = pipe();
         let d3 = data_parallel(&p, &e, 3, &Network::default(), 0.3);
         assert!((d3.total_tdp_w / e.total_tdp_w - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaling_efficiency_curve_is_monotone_in_replicas() {
+        // Efficiency = throughput(r) / (r * throughput(1)) must decay
+        // monotonically toward the all-reduce-limited floor, staying in
+        // (0, 1] throughout.
+        let (p, e) = pipe();
+        let net = Network::default();
+        let t1 = data_parallel(&p, &e, 1, &net, 0.3).throughput;
+        let mut last_eff = 1.0 + 1e-12;
+        for r in [1u64, 2, 4, 8, 16, 32] {
+            let d = data_parallel(&p, &e, r, &net, 0.3);
+            let eff = d.throughput / (r as f64 * t1);
+            assert!(eff > 0.0 && eff <= 1.0 + 1e-12, "r={r}: eff={eff}");
+            assert!(eff <= last_eff + 1e-12, "r={r}: efficiency must not increase");
+            last_eff = eff;
+        }
+    }
+
+    #[test]
+    fn faster_interconnect_improves_scaling_efficiency() {
+        let (p, e) = pipe();
+        let slow = Network { link_gbps: 5.0, latency_us: 10.0 };
+        let fast = Network { link_gbps: 500.0, latency_us: 1.0 };
+        let ds = data_parallel(&p, &e, 8, &slow, 0.3);
+        let df = data_parallel(&p, &e, 8, &fast, 0.3);
+        assert!(df.throughput > ds.throughput);
+        assert!(df.allreduce_seconds < ds.allreduce_seconds);
+    }
+
+    #[test]
+    fn exposed_fraction_interpolates_the_allreduce_cost() {
+        let (p, e) = pipe();
+        let net = Network::default();
+        let full = data_parallel(&p, &e, 4, &net, 1.0);
+        let half = data_parallel(&p, &e, 4, &net, 0.5);
+        let none = data_parallel(&p, &e, 4, &net, 0.0);
+        assert!((half.allreduce_seconds - full.allreduce_seconds / 2.0).abs() < 1e-15);
+        assert_eq!(none.allreduce_seconds, 0.0);
+        assert!(none.throughput > half.throughput && half.throughput > full.throughput);
+    }
+
+    #[test]
+    fn with_allreduce_variant_matches_flat_composition() {
+        // The topology-aware entry point with the flat network's
+        // all-reduce cost is exactly the flat composition.
+        let (p, e) = pipe();
+        let net = Network::default();
+        let flat = data_parallel(&p, &e, 4, &net, 0.3);
+        let ar = net.allreduce_seconds(gradient_bytes(&p), 4);
+        let via = data_parallel_with_allreduce(&p, &e, 4, ar, 0.3);
+        assert_eq!(flat.iter_seconds, via.iter_seconds);
+        assert_eq!(flat.throughput, via.throughput);
+    }
+
+    #[test]
+    fn gradient_bytes_tracks_the_largest_stage() {
+        let (p, _) = pipe();
+        let max_params =
+            p.stages.iter().map(|s| s.graph.param_elems()).max().unwrap();
+        assert_eq!(gradient_bytes(&p), max_params * crate::graph::op::DTYPE_BYTES);
+        assert!(gradient_bytes(&p) > 0);
     }
 }

@@ -124,7 +124,8 @@ impl<'p> ModelTable<'p> {
 
 /// Signature for stage-graph dedup: identical op-count + layer-span +
 /// boundary position produces identical graphs for transformer stacks.
-fn stage_signatures(part: &PartitionedModel) -> Vec<usize> {
+/// Shared with the cluster strategy sweep's screening pass.
+pub(crate) fn stage_signatures(part: &PartitionedModel) -> Vec<usize> {
     let mut map: HashMap<(usize, u64, bool, bool), usize> = HashMap::new();
     let mut out = Vec::with_capacity(part.stages.len());
     for s in &part.stages {

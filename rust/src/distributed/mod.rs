@@ -9,6 +9,11 @@
 //!   simulation over per-stage compute times;
 //! * [`global_search`] — the top-k-per-stage global architecture search
 //!   with the area-ordered tree pruner (section 5.1).
+//!
+//! The cluster-level extensions — hierarchical topologies, the
+//! discrete-event schedule simulator, and the parallelism-strategy
+//! auto-sweep — live in [`crate::cluster`]; the flat [`network`] model
+//! is its single-hop special case.
 
 pub mod data_parallel;
 pub mod global_search;

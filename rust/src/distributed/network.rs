@@ -2,6 +2,17 @@
 //! links between all devices; pipeline parallelism moves boundary
 //! activations point-to-point, tensor model parallelism ring-all-reduces
 //! partial activations.
+//!
+//! This flat model is the single-hop special case of the routed
+//! [`crate::cluster::topology::Topology`]; the collective costs
+//! delegate to the shared model there ([`ring_allreduce_uniform`]), so
+//! the flat and hierarchical layers price the same algorithm with the
+//! same code. For a hierarchical cluster a ring step can cross several
+//! physical hops — latency the flat model undercounts — which is why
+//! the cluster simulator routes over a `Topology` instead; convert with
+//! [`Network::topology`].
+
+use crate::cluster::topology::{ring_allreduce_uniform, Topology};
 
 /// Interconnect description.
 #[derive(Debug, Clone, Copy)]
@@ -25,15 +36,19 @@ impl Network {
     }
 
     /// Seconds for a ring all-reduce of `bytes` across `n` devices:
-    /// 2*(n-1)/n of the data crosses each link, plus 2*(n-1) hops of
-    /// latency.
+    /// 2(n-1) steps, each paying one hop of latency plus a `bytes/n`
+    /// chunk — so 2(n-1)/n of the data crosses each link and every step
+    /// pays the per-hop latency. Delegates to the shared collective
+    /// model in [`crate::cluster::topology`].
     pub fn allreduce_seconds(&self, bytes: u64, n: u64) -> f64 {
-        if n <= 1 {
-            return 0.0;
-        }
-        let nf = n as f64;
-        2.0 * (nf - 1.0) * self.latency_us * 1e-6
-            + 2.0 * (nf - 1.0) / nf * bytes as f64 / (self.link_gbps * 1e9)
+        ring_allreduce_uniform(self.latency_us * 1e-6, self.link_gbps, bytes, n)
+    }
+
+    /// The compatibility view of this flat network as a single-hop
+    /// uniform [`Topology`] over `devices` — collectives over it price
+    /// identically to the formulas here.
+    pub fn topology(&self, devices: usize) -> Topology {
+        Topology::flat(self, devices)
     }
 }
 
@@ -68,5 +83,47 @@ mod tests {
     fn allreduce_latency_grows_with_ring() {
         let n = Network { link_gbps: 1e9, latency_us: 5.0 }; // latency-dominated
         assert!(n.allreduce_seconds(8, 16) > n.allreduce_seconds(8, 4));
+    }
+
+    // ---- golden costs (satellite: pin the collective model) ----------
+
+    #[test]
+    fn golden_default_network_costs() {
+        let n = Network::default();
+        let mib = 1u64 << 20;
+        let close = |a: f64, b: f64| (a - b).abs() <= b * 1e-6;
+        // 2 us + 1 MiB / 100 GB/s.
+        assert!(close(n.p2p_seconds(mib), 1.248576e-5), "{}", n.p2p_seconds(mib));
+        // 2*(8-1) steps of (2 us + (1 MiB / 8) / 100 GB/s):
+        // 14 latency hops + 14/8 of the buffer over one link.
+        assert!(
+            close(n.allreduce_seconds(mib, 8), 4.635008e-5),
+            "{}",
+            n.allreduce_seconds(mib, 8)
+        );
+        // 2 devices: 2 steps, each moving half the buffer.
+        assert!(close(n.allreduce_seconds(mib, 2), 1.448576e-5));
+    }
+
+    #[test]
+    fn allreduce_counts_every_per_hop_latency_term() {
+        // Latency term must be 2(n-1) hops, not a single constant: with
+        // infinite bandwidth the cost is purely the hop count.
+        let n = Network { link_gbps: 1e12, latency_us: 3.0 };
+        for devs in [2u64, 4, 9, 33] {
+            let t = n.allreduce_seconds(1, devs);
+            let hops = 2.0 * (devs as f64 - 1.0) * 3.0e-6;
+            assert!((t - hops).abs() < 1e-9, "devs={devs}: {t} vs {hops}");
+        }
+    }
+
+    #[test]
+    fn topology_shim_matches_network_formulas() {
+        let n = Network { link_gbps: 42.0, latency_us: 7.5 };
+        let t = n.topology(6);
+        let group: Vec<usize> = (0..6).collect();
+        let bytes = 3 << 20;
+        assert_eq!(t.ring_allreduce_seconds(&group, bytes), n.allreduce_seconds(bytes, 6));
+        assert_eq!(t.p2p_seconds(1, 4, bytes), n.p2p_seconds(bytes));
     }
 }

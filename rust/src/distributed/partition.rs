@@ -279,6 +279,82 @@ mod tests {
     }
 
     #[test]
+    fn microbatch_accounting_is_exact_across_depths() {
+        // micro_batch * num_micro must always reproduce the global
+        // batch (up to the minimum-1 clamp), at every pipeline depth.
+        let cfg = gpt2_xl(); // batch 32
+        for depth in [1u64, 2, 4, 8, 16, 32, 48] {
+            let p = partition_transformer("gpt2-xl", &cfg, depth, 1, Optimizer::Adam);
+            assert_eq!(
+                p.micro_batch * p.num_micro,
+                cfg.batch,
+                "depth {depth}: {} x {}",
+                p.micro_batch,
+                p.num_micro
+            );
+            assert!(p.micro_batch >= 1 && p.num_micro >= 1);
+            assert_eq!(p.stages.len() as u64, depth.min(cfg.layers));
+        }
+        // Depth beyond the batch clamps the microbatch to 1.
+        let deep = partition_transformer("gpt2-xl", &cfg, 48, 1, Optimizer::Adam);
+        assert_eq!(deep.micro_batch, 1);
+        assert_eq!(deep.num_micro, cfg.batch);
+    }
+
+    #[test]
+    fn stage_op_counts_are_balanced_for_middle_stages() {
+        // Stages without the embedding/head surcharge host contiguous
+        // identical transformer layers: their graphs must be the same
+        // size, and no middle stage may differ by more than one layer's
+        // worth of ops.
+        let p = partition_transformer("gpt2-xl", &gpt2_xl(), 8, 1, Optimizer::Adam);
+        let ops: Vec<usize> = p.stages.iter().map(|s| s.graph.len()).collect();
+        let spans: Vec<u64> = p.stages.iter().map(|s| s.layers.1 - s.layers.0).collect();
+        let per_layer_ops: Vec<f64> = ops
+            .iter()
+            .zip(&spans)
+            .skip(1)
+            .take(p.stages.len() - 2)
+            .map(|(&o, &s)| o as f64 / s as f64)
+            .collect();
+        let max = per_layer_ops.iter().cloned().fold(0.0f64, f64::max);
+        let min = per_layer_ops.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 1.05, "middle stages imbalanced: {per_layer_ops:?}");
+        // The embedding stage carries the vocab table, so it hosts the
+        // fewest layers; the embedding-free stages differ by <= 1.
+        let mid_max = *spans[1..].iter().max().unwrap();
+        let mid_min = *spans[1..].iter().min().unwrap();
+        assert!(mid_max - mid_min <= 1, "spans {spans:?}");
+        assert!(spans[0] <= mid_min, "embedding stage must not be the largest: {spans:?}");
+    }
+
+    #[test]
+    fn boundary_bytes_match_the_activation_shape() {
+        let cfg = gpt2_xl();
+        let p = partition_transformer("gpt2-xl", &cfg, 8, 1, Optimizer::Adam);
+        let expect = p.micro_batch * cfg.seq * cfg.hidden * DTYPE_BYTES;
+        for s in &p.stages {
+            assert_eq!(s.boundary_bytes, expect);
+        }
+    }
+
+    #[test]
+    fn footprint_grows_with_in_flight_microbatches() {
+        let p = partition_transformer("gpt2-xl", &gpt2_xl(), 8, 1, Optimizer::Adam);
+        let s0 = &p.stages[0];
+        let stages = p.stages.len() as u64;
+        let gpipe = s0.footprint_bytes(Scheme::GPipe, p.num_micro, stages);
+        let f1b = s0.footprint_bytes(Scheme::PipeDream1F1B, p.num_micro, stages);
+        // GPipe stashes every microbatch; 1F1B at most `stages`.
+        assert!(gpipe >= f1b);
+        assert_eq!(gpipe, s0.state_bytes + s0.stash_bytes * p.num_micro);
+        assert_eq!(
+            f1b,
+            s0.state_bytes + s0.stash_bytes * stages.min(p.num_micro)
+        );
+    }
+
+    #[test]
     fn split_passes_separates_fwd_bwd() {
         let p = partition_transformer("gpt2-xl", &gpt2_xl(), 32, 1, Optimizer::Adam);
         let g = &p.stages[1].graph;

@@ -37,13 +37,15 @@ pub struct PipelineEval {
     pub stage_times: Vec<StageTimes>,
 }
 
-/// Compute per-microbatch stage times for one accelerator config by
-/// scheduling the stage's forward and backward subgraphs separately.
-pub fn stage_times(
+/// Compute-only per-microbatch stage times (no interconnect terms) for
+/// one accelerator config, by scheduling the stage's forward and
+/// backward subgraphs separately. The cluster layer
+/// ([`crate::cluster`]) prices the TMP all-reduce over a routed
+/// topology and adds it with [`StageTimes::with_allreduce`];
+/// [`stage_times`] is the flat-network composition.
+pub fn stage_compute_times(
     stage: &super::partition::Stage,
     config: &ArchConfig,
-    tmp: u64,
-    net: &Network,
     backend: &mut dyn CostBackend,
 ) -> StageTimes {
     let (fg, bg) = split_passes(&stage.graph);
@@ -57,15 +59,38 @@ pub fn stage_times(
         let sched = greedy_schedule(&ann, &cp, cores);
         (sched.makespan as f64 / (CLOCK_GHZ * 1e9), ann.total_energy_pj() * 1e-12)
     };
-    let (mut fwd_s, fe) = run(&fg);
-    let (mut bwd_s, be) = run(&bg);
-    // Megatron TMP all-reduces: 2 per layer forward, mirrored backward.
-    if tmp > 1 {
-        let ar = net.allreduce_seconds(stage.tmp_allreduce_fwd_bytes, tmp);
-        fwd_s += ar;
-        bwd_s += ar;
-    }
+    let (fwd_s, fe) = run(&fg);
+    let (bwd_s, be) = run(&bg);
     StageTimes { fwd_s, bwd_s, energy_j: fe + be }
+}
+
+impl StageTimes {
+    /// Add a tensor-model-parallel all-reduce cost to both passes
+    /// (Megatron TMP: 2 all-reduces per layer forward, mirrored
+    /// backward — `ar_s` is the already-priced per-microbatch total).
+    pub fn with_allreduce(mut self, ar_s: f64) -> Self {
+        self.fwd_s += ar_s;
+        self.bwd_s += ar_s;
+        self
+    }
+}
+
+/// Compute per-microbatch stage times for one accelerator config by
+/// scheduling the stage's forward and backward subgraphs separately,
+/// with the TMP all-reduce priced on the flat `net`.
+pub fn stage_times(
+    stage: &super::partition::Stage,
+    config: &ArchConfig,
+    tmp: u64,
+    net: &Network,
+    backend: &mut dyn CostBackend,
+) -> StageTimes {
+    let base = stage_compute_times(stage, config, backend);
+    if tmp > 1 {
+        base.with_allreduce(net.allreduce_seconds(stage.tmp_allreduce_fwd_bytes, tmp))
+    } else {
+        base
+    }
 }
 
 /// Simulate one training iteration of a partitioned model where stage `i`

@@ -31,6 +31,9 @@
 //! * [`baselines`] — ConfuciuX+, Spotlight+, hand-optimized designs
 //! * [`distributed`] — pipeline partitioner, Megatron TMP, GPipe/1F1B
 //!   simulation, interconnect model, global top-k search
+//! * [`cluster`] — hierarchical topologies with routed collective
+//!   costs, the discrete-event pipeline simulator (GPipe / 1F1B /
+//!   interleaved-1F1B), and the (pp, tp, dp) strategy auto-sweep
 //! * [`runtime`] — PJRT client wrapper for the AOT artifacts
 //! * [`coordinator`] — parallel per-stage search orchestration
 //! * [`service`] — the `wham serve` mining service: HTTP front end,
@@ -40,6 +43,7 @@
 pub mod api;
 pub mod arch;
 pub mod baselines;
+pub mod cluster;
 pub mod coordinator;
 pub mod cost;
 pub mod distributed;

@@ -13,6 +13,8 @@
 //! * `evaluate` — evaluate one fixed design on a workload;
 //! * `common` — one design across a workload set (section 4.6);
 //! * `global` — distributed pipeline/TMP search (section 5);
+//! * `cluster` — topology-aware parallelism-strategy sweep over a
+//!   device budget (see [`wham::cluster`]);
 //! * `baseline` — run ConfuciuX+ / Spotlight+ / hand-optimized designs;
 //! * `serve` — long-running design-mining service (see [`wham::service`]);
 //! * `client` — drive a running `wham serve` over HTTP;
@@ -21,8 +23,8 @@
 use anyhow::{anyhow, bail, Result};
 use wham::api::request::{backend_from_args, parse_dims};
 use wham::api::{
-    resolve_workload, CommonRequest, EvaluateRequest, GlobalRequest, NullSink, Progress,
-    ProgressSink, SearchRequest, Session, ToJson,
+    resolve_workload, ClusterRequest, CommonRequest, EvaluateRequest, GlobalRequest, NullSink,
+    Progress, ProgressSink, SearchRequest, Session, ToJson,
 };
 use wham::baselines::{confuciux, spotlight};
 use wham::coordinator::{make_backend, run_parallel, BackendChoice, SearchJob};
@@ -35,7 +37,8 @@ use wham::util::table::Table;
 const VALUE_KEYS: &[&str] = &[
     "model", "models", "metric", "backend", "k", "depth", "tmp", "scheme", "framework",
     "iterations", "workers", "jobs", "hysteresis", "seed", "out", "tc", "vc", "dims", "port",
-    "db", "addr", "deadline-ms", "workload-dir",
+    "db", "addr", "deadline-ms", "workload-dir", "devices", "topology", "schedules", "mine",
+    "chunks",
 ];
 
 fn main() -> Result<()> {
@@ -65,6 +68,7 @@ fn main() -> Result<()> {
         Some("evaluate") => cmd_evaluate(&args),
         Some("common") => cmd_common(&args),
         Some("global") => cmd_global(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("baseline") => cmd_baseline(&args),
         Some("trace") => cmd_trace(&args),
         Some("partition") => cmd_partition(&args),
@@ -93,13 +97,16 @@ fn print_usage() {
          wham common [--models a,b,c] [--metric ...]\n  \
          wham global [--models opt-1.3b,gpt2-xl] [--depth 32] [--tmp 1]\n              \
          [--scheme gpipe|1f1b] [--k 10] [--metric ...] [--jobs N] [--deadline-ms N]\n  \
+         wham cluster --model <llm> [--devices 8] [--topology flat|ring|fat-tree|nvlink-island]\n              \
+         [--schedules gpipe,1f1b,interleaved] [--mine 2] [--chunks 2]\n              \
+         [--metric ...] [--jobs N] [--deadline-ms N]\n  \
          wham baseline --model <name> --framework confuciux|spotlight|tpuv2|nvdla\n              \
          [--iterations 500]\n  \
          wham trace --model <name> [--out trace.json] [--tc 2 --vc 2 --dims 128x128x128]\n  \
          wham partition --model <llm> [--depth 32] [--tmp 1] [--scheme gpipe]\n  \
          wham space --model <name>\n  \
          wham serve [--port 8484] [--workers <cores>] [--db designs.jsonl] [--backend auto]\n  \
-         wham client <models|search|evaluate|common|global|status|upload> [--addr 127.0.0.1:8484] ...\n  \
+         wham client <models|search|evaluate|common|global|cluster|status|upload> [--addr 127.0.0.1:8484] ...\n  \
          wham selftest"
     );
 }
@@ -339,6 +346,76 @@ fn cmd_global(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `wham cluster` — topology-aware parallelism-strategy sweep
+/// ([`wham::cluster`]): enumerate (pp, tp, dp, schedule) splits, screen
+/// them with the discrete-event simulator, mine hardware for the best.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let req = ClusterRequest::from_args(args)?;
+    let plan = req.validate()?;
+    let mut session = session_from_args(args)?;
+    println!(
+        "cluster sweep: {} on {} devices ({} topology, metric={}, mine top {})",
+        req.model, req.devices, req.topology, req.metric, req.mine_top
+    );
+    let mut progress = |p: &Progress| {
+        println!(
+            "  [{:>8.1}ms] {} {:>3}  best={:.4}",
+            p.elapsed.as_secs_f64() * 1e3,
+            p.phase,
+            p.points,
+            p.best_score
+        );
+        true
+    };
+    let mut null = NullSink;
+    let sink: &mut dyn ProgressSink =
+        if args.flag("progress") { &mut progress } else { &mut null };
+    let r = session.run_cluster(&plan, sink)?;
+    println!(
+        "{} strategies screened, {} mined, wall={:.0}ms{}",
+        r.candidates,
+        r.mined,
+        r.wall_ms,
+        if r.cancelled { " (deadline hit)" } else { "" },
+    );
+    let mut t = Table::new([
+        "rank", "pp", "tp", "dp", "schedule", "micro", "config", "thpt", "perf/TDP", "bubble",
+        "fits",
+    ]);
+    for (i, p) in r.ranked.iter().enumerate() {
+        let sched = if p.chunks > 1 {
+            format!("{}x{}", p.schedule, p.chunks)
+        } else {
+            p.schedule.clone()
+        };
+        t.row([
+            (i + 1).to_string(),
+            p.pp.to_string(),
+            p.tp.to_string(),
+            p.dp.to_string(),
+            sched,
+            format!("{}x{}", p.micro_batch, p.num_micro),
+            format!("{}{}", p.config.display(), if p.mined { " *" } else { "" }),
+            format!("{:.3}", p.throughput),
+            format!("{:.4}", p.perf_per_tdp),
+            format!("{:.1}%", p.bubble_fraction * 100.0),
+            p.fits_hbm.to_string(),
+        ]);
+    }
+    print!("{t}");
+    let b = &r.baseline;
+    println!(
+        "baseline (fixed pp={}, tp={}, {}): {:.3} samples/s — best strategy is {:.3}x",
+        b.pp,
+        b.tp,
+        b.schedule,
+        b.throughput,
+        r.ranked.first().map(|p| p.throughput / b.throughput.max(1e-12)).unwrap_or(1.0),
+    );
+    println!("(* = config mined by the global hardware search)");
+    Ok(())
+}
+
 fn cmd_baseline(args: &Args) -> Result<()> {
     let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
     let framework = args.get("framework").unwrap_or("confuciux");
@@ -525,7 +602,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     let addr: std::net::SocketAddr =
         addr_s.parse().map_err(|_| anyhow!("--addr expects host:port, got {addr_s:?}"))?;
     let sub = args.pos(1).ok_or_else(|| {
-        anyhow!("usage: wham client <models|search|evaluate|common|global|status|upload> [--addr host:port]")
+        anyhow!("usage: wham client <models|search|evaluate|common|global|cluster|status|upload> [--addr host:port]")
     })?;
 
     let (method, path, body) = match sub {
@@ -535,6 +612,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         "evaluate" => ("POST", "/evaluate", Some(EvaluateRequest::from_args(args)?.to_json())),
         "common" => ("POST", "/common", Some(CommonRequest::from_args(args)?.to_json())),
         "global" => ("POST", "/global", Some(GlobalRequest::from_args(args)?.to_json())),
+        "cluster" => ("POST", "/cluster", Some(ClusterRequest::from_args(args)?.to_json())),
         // Upload a workload spec file to the server's registry.
         "upload" => {
             let spec = args

@@ -14,6 +14,7 @@
 //! | `POST /evaluate`  | [`crate::api::EvaluateRequest`]   | [`crate::api::EvaluateReply`] |
 //! | `POST /common`    | [`crate::api::CommonRequest`]     | [`crate::api::CommonReply`] |
 //! | `POST /global`    | [`crate::api::GlobalRequest`]     | [`crate::api::GlobalReply`] |
+//! | `POST /cluster`   | [`crate::api::ClusterRequest`]    | [`crate::api::ClusterReply`] (coalesced + cached) |
 //! | `GET /status`     | —                                 | [`crate::api::StatusReply`] |
 //!
 //! `POST /workloads` validates and registers a declarative spec
@@ -22,8 +23,9 @@
 //! fingerprint exactly like builtins.
 //!
 //! [`ApiError`] kinds map to HTTP statuses (400/404/500); `/search`,
-//! `/common`, and `/global` coalesce identical in-flight requests by the
-//! plan's canonical coalescing key ([`crate::api::plan`]).
+//! `/common`, `/global`, and `/cluster` coalesce identical in-flight
+//! requests by the plan's canonical coalescing key
+//! ([`crate::api::plan`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -33,8 +35,8 @@ use crate::api::reply::{
     CoalescerCounters, DbCounters, EndpointStat, PerfCounters, SearchCounters,
 };
 use crate::api::{
-    ApiError, CommonRequest, EvaluateRequest, FromJson, GlobalRequest, NullSink, SearchRequest,
-    Session, StatusReply, ToJson, WorkloadReply,
+    ApiError, ClusterRequest, CommonRequest, EvaluateRequest, FromJson, GlobalRequest, NullSink,
+    SearchRequest, Session, StatusReply, ToJson, WorkloadReply,
 };
 use crate::coordinator::{make_backend, BackendChoice};
 use crate::cost::native::NativeCost;
@@ -126,10 +128,13 @@ impl ServiceState {
             cold_searches: AtomicU64::new(0),
             warm_searches: AtomicU64::new(0),
             scheduler_evals_total: AtomicU64::new(0),
-            latency: ["/models", "/status", "/search", "/evaluate", "/common", "/global", "/workloads"]
-                .into_iter()
-                .map(LatencyRing::new)
-                .collect(),
+            latency: [
+                "/models", "/status", "/search", "/evaluate", "/common", "/global", "/cluster",
+                "/workloads",
+            ]
+            .into_iter()
+            .map(LatencyRing::new)
+            .collect(),
         }
     }
 
@@ -140,6 +145,7 @@ impl ServiceState {
         let perf = PerfCounters {
             backend_rows_total: crate::cost::backend_rows_total(),
             scheduler_evals_total: crate::sched::evals_total(),
+            cluster_sim_events_total: crate::cluster::events_total(),
             db_hit_rate: if probes == 0 { 0.0 } else { db.hits as f64 / probes as f64 },
             endpoints: self.latency.iter().filter_map(LatencyRing::stat).collect(),
         };
@@ -210,15 +216,16 @@ impl Handler for Api {
             ),
             ("POST", "/common") => common_response(s, session, &req.body),
             ("POST", "/global") => global_response(s, session, &req.body),
+            ("POST", "/cluster") => cluster_response(s, session, &req.body),
             ("POST", "/workloads") => api_result(upload_workload(&req.body)),
             (
                 _,
                 "/models" | "/status" | "/search" | "/evaluate" | "/common" | "/global"
-                | "/workloads",
+                | "/cluster" | "/workloads",
             ) => Response::error(405, "wrong method for this endpoint"),
             _ => Response::error(
                 404,
-                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, GET /status",
+                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, POST /cluster, GET /status",
             ),
         };
         // Latency window per known endpoint (coalesced followers count
@@ -303,6 +310,18 @@ fn global_response(s: &ServiceState, session: &mut Session, body: &str) -> Respo
     let key = plan.coalescing_key(session.backend_name());
     let (outcome, _led) = s.coalescer.run(key, || {
         session.run_global(&plan, &mut NullSink).map(|r| r.to_json()).map_err(|e| e.message)
+    });
+    into_response(&outcome)
+}
+
+fn cluster_response(s: &ServiceState, session: &mut Session, body: &str) -> Response {
+    let plan = match ClusterRequest::from_json_str(body).and_then(|r| r.validate()) {
+        Ok(p) => p,
+        Err(e) => return api_result(Err(e)),
+    };
+    let key = plan.coalescing_key(session.backend_name());
+    let (outcome, _led) = s.coalescer.run(key, || {
+        session.run_cluster(&plan, &mut NullSink).map(|r| r.to_json()).map_err(|e| e.message)
     });
     into_response(&outcome)
 }

@@ -1,0 +1,125 @@
+//! Cluster-subsystem acceptance tests: event-simulator parity against
+//! the closed-form pipeline formulas on the cases they cover, and the
+//! strategy sweep's ranked-report guarantees on Table-4 models.
+
+use wham::api::{ClusterRequest, Session};
+use wham::arch::presets;
+use wham::cluster::{simulate_events, Placement, SimSchedule, Topology};
+use wham::coordinator::BackendChoice;
+use wham::cost::native::NativeCost;
+use wham::distributed::network::Network;
+use wham::distributed::partition::partition_transformer;
+use wham::distributed::pipeline::{simulate_with_times, stage_times, StageTimes};
+use wham::distributed::Scheme;
+use wham::graph::autodiff::Optimizer;
+
+fn mini_part(stages: u64) -> wham::distributed::partition::PartitionedModel {
+    let mut cfg = wham::models::transformer::gpt2_xl();
+    cfg.layers = 8;
+    partition_transformer("mini", &cfg, stages, 1, Optimizer::SgdMomentum)
+}
+
+/// Acceptance: the event-driven simulator agrees with the closed-form
+/// `pipeline::simulate` within 1% on homogeneous GPipe and 1F1B cases.
+#[test]
+fn event_sim_matches_closed_form_on_homogeneous_schedules() {
+    let part = mini_part(4);
+    let net = Network::default();
+    let topo = Topology::flat(&net, 4);
+    let placement = Placement::linear(&topo, 4, 1).unwrap();
+    let cfgs = vec![presets::tpuv2(); 4];
+    // Homogeneous stage times: what the closed 1F1B bound is defined for.
+    let uniform = vec![StageTimes { fwd_s: 8e-3, bwd_s: 16e-3, energy_j: 0.0 }; 4];
+    for (scheme, schedule) in [
+        (Scheme::GPipe, SimSchedule::GPipe),
+        (Scheme::PipeDream1F1B, SimSchedule::OneF1B),
+    ] {
+        let closed = simulate_with_times(&part, &cfgs, &uniform, scheme, &net);
+        let sim = simulate_events(&part, &uniform, schedule, &topo, &placement).unwrap();
+        let rel = (sim.iter_seconds - closed.iter_seconds).abs() / closed.iter_seconds;
+        assert!(
+            rel < 0.01,
+            "{schedule:?}: event {} vs closed {} (rel {rel:.4})",
+            sim.iter_seconds,
+            closed.iter_seconds
+        );
+    }
+}
+
+/// GPipe parity is exact even with heterogeneous real stage times —
+/// the event timeline reproduces the wavefront recurrence.
+#[test]
+fn event_sim_gpipe_parity_with_real_stage_times() {
+    let part = mini_part(4);
+    let net = Network::default();
+    let cfgs = vec![presets::tpuv2(); 4];
+    let times: Vec<StageTimes> = part
+        .stages
+        .iter()
+        .map(|s| stage_times(s, &presets::tpuv2(), part.tmp, &net, &mut NativeCost))
+        .collect();
+    let closed = simulate_with_times(&part, &cfgs, &times, Scheme::GPipe, &net);
+    let topo = Topology::flat(&net, 4);
+    let placement = Placement::linear(&topo, 4, 1).unwrap();
+    let sim = simulate_events(&part, &times, SimSchedule::GPipe, &topo, &placement).unwrap();
+    let rel = (sim.iter_seconds - closed.iter_seconds).abs() / closed.iter_seconds;
+    assert!(rel < 1e-6, "event {} vs closed {}", sim.iter_seconds, closed.iter_seconds);
+}
+
+/// Acceptance: the sweep returns a ranked report whose top strategy's
+/// simulated throughput is at least the fixed-(pp, tp) baseline's, on
+/// every Table-4 model it runs on.
+#[test]
+fn sweep_top_strategy_beats_fixed_baseline_on_table4_models() {
+    for model in ["bert-base"] {
+        let mut session = Session::new(BackendChoice::Native).unwrap();
+        let req = ClusterRequest::new(model)
+            .devices(2)
+            .schedules(["gpipe", "1f1b"])
+            .mine_top(0);
+        let reply = session.cluster(&req).unwrap();
+        assert!(
+            reply.baseline.fits_hbm,
+            "{model}: the Table-4 baseline placement must fit HBM"
+        );
+        assert!(
+            reply.ranked[0].throughput >= reply.baseline.throughput,
+            "{model}: top {} < baseline {}",
+            reply.ranked[0].throughput,
+            reply.baseline.throughput
+        );
+        for w in reply.ranked.windows(2) {
+            assert!(w[0].throughput >= w[1].throughput, "{model}: report must be ranked");
+        }
+        assert_eq!(reply.baseline.tp, 1, "{model}: baseline is the fixed-(pp, tp=1) strategy");
+        assert!(reply.candidates as usize == reply.ranked.len());
+    }
+}
+
+/// Interleaved-1F1B on a hierarchical topology end to end: virtual
+/// stages round-robin over devices, transfers routed over the islands.
+#[test]
+fn interleaved_on_hierarchical_topology_runs() {
+    let part = mini_part(8); // 8 virtual stages on 4 devices
+    let net = Network::default();
+    let times: Vec<StageTimes> = part
+        .stages
+        .iter()
+        .map(|s| stage_times(s, &presets::tpuv2(), part.tmp, &net, &mut NativeCost))
+        .collect();
+    let topo = Topology::preset("nvlink-island", 4).unwrap();
+    let placement = Placement::linear(&topo, 4, 1).unwrap();
+    let sim = simulate_events(
+        &part,
+        &times,
+        SimSchedule::Interleaved1F1B { devices: 4 },
+        &topo,
+        &placement,
+    )
+    .unwrap();
+    assert!(sim.iter_seconds > 0.0 && sim.iter_seconds.is_finite());
+    assert!(sim.events > 0);
+    assert!(sim.comm_seconds > 0.0);
+    // Every virtual stage stashed at least one microbatch.
+    assert!(sim.per_stage_peak_stash.iter().all(|&p| p >= 1));
+}

@@ -195,6 +195,40 @@ fn uploaded_spec_is_mined_end_to_end() {
 }
 
 #[test]
+fn cluster_endpoint_sweeps_and_counts_events() {
+    let h = boot(None, 2);
+
+    // Screening-only sweep on a 2-device cluster keeps the test fast.
+    let body = "{\"model\":\"bert-base\",\"devices\":2,\"schedules\":[\"gpipe\"],\"mine\":0}";
+    let (status, r) = get_json(&h, "POST", "/cluster", Some(body));
+    assert_eq!(status, 200, "cluster sweep failed: {r:?}");
+    assert_eq!(r.get("model").unwrap().as_str(), Some("bert-base"));
+    assert_eq!(u(&r, &["devices"]), 2);
+    assert!(u(&r, &["candidates"]) >= 2, "{r:?}");
+    let ranked = r.get("ranked").unwrap().as_arr().unwrap();
+    assert_eq!(ranked.len() as u64, u(&r, &["candidates"]));
+    let top = ranked[0].get("throughput").unwrap().as_f64().unwrap();
+    let base = r.get("baseline").unwrap().get("throughput").unwrap().as_f64().unwrap();
+    assert!(top >= base, "top {top} must not fall below the fixed baseline {base}");
+
+    // The cluster-sim event counter surfaces in /status (process-wide,
+    // so only monotone assertions are safe across tests).
+    let (_, st) = get_json(&h, "GET", "/status", None);
+    assert!(u(&st, &["perf", "cluster_sim_events_total"]) > 0, "status: {st:?}");
+
+    // Bad shapes are request errors, not worker panics.
+    let (status, _) = get_json(&h, "POST", "/cluster", Some("{\"model\":\"bert-base\",\"devices\":0}"));
+    assert_eq!(status, 400);
+    let (status, _) =
+        get_json(&h, "POST", "/cluster", Some("{\"model\":\"bert-base\",\"topology\":\"torus\"}"));
+    assert_eq!(status, 400);
+    let (status, _) = get_json(&h, "POST", "/cluster", Some("{\"model\":\"vgg16\"}"));
+    assert_eq!(status, 404, "non-LLM workloads cannot be pipelined");
+    let (status, _) = get_json(&h, "GET", "/cluster", None);
+    assert_eq!(status, 405);
+}
+
+#[test]
 fn status_exposes_perf_counters() {
     let h = boot(None, 2);
     let (status, _) = get_json(&h, "POST", "/search", Some(SEARCH_BODY));
