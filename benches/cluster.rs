@@ -149,6 +149,9 @@ fn main() {
             "process",
             &Obj::new().u64("cluster_sim_events_total", events_total()).finish(),
         )
+        // Full registry snapshot (every `wham_*` counter this process
+        // touched) so counter trajectories ride the bench artifact.
+        .raw("metrics", &wham::telemetry::snapshot_json())
         .finish();
     std::fs::write(&out_path, &json).expect("writing bench artifact");
     println!("\nwrote {out_path}");

@@ -166,6 +166,9 @@ fn main() {
                 .u64("scheduler_evals_total", wham::sched::evals_total())
                 .finish(),
         )
+        // Full registry snapshot (every `wham_*` counter this process
+        // touched) so counter trajectories ride the bench artifact.
+        .raw("metrics", &wham::telemetry::snapshot_json())
         .finish();
     std::fs::write(&out_path, &json).expect("writing bench artifact");
     println!("\nwrote {out_path}");

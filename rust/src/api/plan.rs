@@ -99,6 +99,10 @@ pub struct SearchPlan {
     pub batch: u64,
     pub opts: SearchOptions,
     pub deadline_ms: Option<u64>,
+    /// Attach flight-recorder rows to the reply — reply-shaping, so it
+    /// participates in the coalescing key (a follower without `explain`
+    /// must not receive the leader's recorder dump, and vice versa).
+    pub explain: bool,
 }
 
 impl SearchPlan {
@@ -110,7 +114,8 @@ impl SearchPlan {
                 .word(NS_SEARCH)
                 .word(context_key(self.fingerprint, self.batch, &self.opts, backend))
                 .word(self.opts.top_k as u64)
-                .word(self.opts.hysteresis as u64),
+                .word(self.opts.hysteresis as u64)
+                .word(self.explain as u64),
             self.deadline_ms,
         )
         .0
@@ -273,6 +278,8 @@ mod tests {
         assert_ne!(p.coalescing_key("native"), q.coalescing_key("native"));
         let d = SearchRequest::new("bert-base").deadline_ms(5).validate().unwrap();
         assert_ne!(p.coalescing_key("native"), d.coalescing_key("native"));
+        let e = SearchRequest::new("bert-base").explain(true).validate().unwrap();
+        assert_ne!(p.coalescing_key("native"), e.coalescing_key("native"));
     }
 
     #[test]

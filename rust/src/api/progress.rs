@@ -16,7 +16,8 @@ use std::time::{Duration, Instant};
 pub struct Progress {
     /// Which layer emitted the event: `"search"` for per-workload
     /// dimension evaluations, `"global"` for top-level candidate
-    /// evaluations of the distributed search.
+    /// evaluations of the distributed search, `"cluster"` for strategy
+    /// screening in the auto-sweep.
     pub phase: &'static str,
     /// Wall-clock since that layer's search started.
     pub elapsed: Duration,
@@ -24,6 +25,26 @@ pub struct Progress {
     pub points: usize,
     /// Best score seen so far (higher is better).
     pub best_score: f64,
+    /// Evaluation rate since the phase started (points per second; 0.0
+    /// until the clock has advanced).
+    pub rate: f64,
+    /// How deep the emitting layer is in its own phase structure: the
+    /// engine reports its pruning phase (1 = tensor dims, 2 = vector
+    /// width); the global and cluster sweeps report 1 for their
+    /// top-level loops.
+    pub depth: usize,
+}
+
+impl Progress {
+    /// Points-per-second rate, 0.0 while `elapsed` is still zero.
+    pub fn rate_of(points: usize, elapsed: Duration) -> f64 {
+        let secs = elapsed.as_secs_f64();
+        if secs > 0.0 {
+            points as f64 / secs
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Observer of search progress; also the cancellation channel.
@@ -84,7 +105,20 @@ mod tests {
     use super::*;
 
     fn step() -> Progress {
-        Progress { phase: "search", elapsed: Duration::ZERO, points: 1, best_score: 1.0 }
+        Progress {
+            phase: "search",
+            elapsed: Duration::ZERO,
+            points: 1,
+            best_score: 1.0,
+            rate: 0.0,
+            depth: 1,
+        }
+    }
+
+    #[test]
+    fn rate_of_handles_zero_elapsed() {
+        assert_eq!(Progress::rate_of(5, Duration::ZERO), 0.0);
+        assert_eq!(Progress::rate_of(10, Duration::from_secs(2)), 5.0);
     }
 
     #[test]

@@ -14,10 +14,12 @@ use crate::api::wire::{
     req_str, req_u64, FromJson, ToJson,
 };
 use crate::arch::ArchConfig;
+use crate::cost::Dims;
 use crate::distributed::Scheme;
 use crate::graph::Fingerprint;
 use crate::metrics::{Evaluation, Metric};
 use crate::search::DesignPoint;
+use crate::telemetry::ExplainRecord;
 use crate::util::json::{arr, str_arr, JsonValue, Obj};
 
 fn parse_fingerprint(v: &JsonValue) -> Result<Fingerprint, ApiError> {
@@ -159,11 +161,73 @@ pub struct SearchReply {
     /// True when a deadline/cancellation truncated the search.
     pub cancelled: bool,
     pub wall_ms: f64,
+    /// Flight-recorder attribution of the search's most recent
+    /// iterations ([`crate::telemetry::FlightRecorder`]). Only attached
+    /// when the request asked for it (`"explain": true`); omitted from
+    /// the wire form when `None`, so pre-telemetry replies are
+    /// byte-identical.
+    pub explain: Option<Vec<ExplainRecord>>,
+}
+
+/// Wire form of one flight-recorder record (`"explain"` rows).
+fn explain_record_json(r: &ExplainRecord) -> String {
+    Obj::new()
+        .raw("dims", &format!("[{},{},{}]", r.dims.tc_x, r.dims.tc_y, r.dims.vc_w))
+        .f64("score", r.score)
+        .f64("best", r.best)
+        .bool("improved", r.improved)
+        .bool("cache_hit", r.cache_hit)
+        .u64("evals", r.evals)
+        .raw("cores", &format!("[{},{}]", r.cores.0, r.cores.1))
+        .raw("grants", &format!("[{},{},{}]", r.grants.0, r.grants.1, r.grants.2))
+        .nullable_str("conflict_op", r.conflict_op.as_deref())
+        .finish()
+}
+
+fn parse_explain_record(v: &JsonValue) -> Option<ExplainRecord> {
+    let d = v.get("dims")?.as_arr()?;
+    let cores = v.get("cores")?.as_arr()?;
+    let grants = v.get("grants")?.as_arr()?;
+    if d.len() != 3 || cores.len() != 2 || grants.len() != 3 {
+        return None;
+    }
+    let conflict_op = match v.get("conflict_op") {
+        None | Some(JsonValue::Null) => None,
+        Some(s) => Some(s.as_str()?.to_string()),
+    };
+    Some(ExplainRecord {
+        dims: Dims { tc_x: d[0].as_u64()?, tc_y: d[1].as_u64()?, vc_w: d[2].as_u64()? },
+        score: v.get("score")?.as_f64()?,
+        best: v.get("best")?.as_f64()?,
+        improved: v.get("improved")?.as_bool()?,
+        cache_hit: v.get("cache_hit")?.as_bool()?,
+        evals: v.get("evals")?.as_u64()?,
+        cores: (cores[0].as_u64()?, cores[1].as_u64()?),
+        grants: (grants[0].as_u64()?, grants[1].as_u64()?, grants[2].as_u64()?),
+        conflict_op,
+    })
+}
+
+/// Lenient `"explain"` parse: absent or null means not requested.
+fn parse_explain(v: &JsonValue) -> Result<Option<Vec<ExplainRecord>>, ApiError> {
+    let a = match v.get("explain") {
+        None | Some(JsonValue::Null) => return Ok(None),
+        Some(x) => x
+            .as_arr()
+            .ok_or_else(|| ApiError::invalid("\"explain\" must be an array"))?,
+    };
+    a.iter()
+        .map(|r| {
+            parse_explain_record(r)
+                .ok_or_else(|| ApiError::invalid("malformed \"explain\" record"))
+        })
+        .collect::<Result<_, _>>()
+        .map(Some)
 }
 
 impl ToJson for SearchReply {
     fn to_json(&self) -> String {
-        Obj::new()
+        let o = Obj::new()
             .str("model", &self.model)
             .str("fingerprint", &self.fingerprint.to_string())
             .str("backend", &self.backend)
@@ -176,8 +240,13 @@ impl ToJson for SearchReply {
             .f64("vs_tpuv2", self.vs_tpuv2)
             .f64("vs_nvdla", self.vs_nvdla)
             .bool("cancelled", self.cancelled)
-            .f64("wall_ms", self.wall_ms)
-            .finish()
+            .f64("wall_ms", self.wall_ms);
+        match &self.explain {
+            Some(records) => {
+                o.raw("explain", &arr(records.iter().map(explain_record_json))).finish()
+            }
+            None => o.finish(),
+        }
     }
 }
 
@@ -199,6 +268,7 @@ impl FromJson for SearchReply {
             vs_nvdla: req_f64(v, "vs_nvdla")?,
             cancelled: req_bool(v, "cancelled")?,
             wall_ms: req_f64(v, "wall_ms")?,
+            explain: parse_explain(v)?,
         })
     }
 }
@@ -766,12 +836,53 @@ mod tests {
             vs_nvdla: 2.5,
             cancelled: false,
             wall_ms: 17.25,
+            explain: None,
         };
         let bytes = r.to_json();
+        assert!(!bytes.contains("explain"), "unrequested explain must stay off the wire");
         let q = SearchReply::from_json(&parse(&bytes).unwrap()).unwrap();
         assert_eq!(q.to_json(), bytes, "reply wire form must round-trip byte-identically");
         assert_eq!(q.fingerprint, r.fingerprint);
         assert_eq!(q.top.len(), 2);
+        assert_eq!(q.explain, None);
+    }
+
+    #[test]
+    fn search_reply_explain_round_trips() {
+        let rec = |hit: bool, op: Option<&str>| ExplainRecord {
+            dims: Dims { tc_x: 128, tc_y: 64, vc_w: 256 },
+            score: 2.5,
+            best: 3.0,
+            improved: false,
+            cache_hit: hit,
+            evals: if hit { 0 } else { 7 },
+            cores: (2, 3),
+            grants: (1, 2, 0),
+            conflict_op: op.map(str::to_string),
+        };
+        let r = SearchReply {
+            model: "bert-base".into(),
+            fingerprint: Fingerprint(0xdead_beef_0123_4567),
+            backend: "native".into(),
+            metric: Metric::Throughput,
+            best: point(3.0),
+            top: vec![point(3.0)],
+            dims_evaluated: 2,
+            scheduler_evals: 7,
+            cache_hits: 1,
+            vs_tpuv2: 1.0,
+            vs_nvdla: 1.0,
+            cancelled: false,
+            wall_ms: 1.0,
+            explain: Some(vec![rec(false, Some("attn.qk")), rec(true, None)]),
+        };
+        let bytes = r.to_json();
+        let q = SearchReply::from_json(&parse(&bytes).unwrap()).unwrap();
+        assert_eq!(q.to_json(), bytes, "explain rows must round-trip byte-identically");
+        assert_eq!(q.explain, r.explain);
+        let ex = q.explain.unwrap();
+        assert_eq!(ex[0].conflict_op.as_deref(), Some("attn.qk"));
+        assert!(ex[1].cache_hit && ex[1].conflict_op.is_none());
     }
 
     #[test]

@@ -132,6 +132,9 @@ pub struct SearchRequest {
     /// Optional wall-clock budget; on expiry the search cancels
     /// cooperatively and replies with best-so-far (`cancelled: true`).
     pub deadline_ms: Option<u64>,
+    /// Attach the search flight recorder's per-iteration attribution to
+    /// the reply (`"explain"` rows — see [`crate::telemetry::recorder`]).
+    pub explain: bool,
 }
 
 impl SearchRequest {
@@ -145,6 +148,7 @@ impl SearchRequest {
             hysteresis: d.hysteresis,
             use_ilp: d.use_ilp,
             deadline_ms: None,
+            explain: false,
         }
     }
 
@@ -173,14 +177,20 @@ impl SearchRequest {
         self
     }
 
+    pub fn explain(mut self, on: bool) -> Self {
+        self.explain = on;
+        self
+    }
+
     /// Build from CLI flags: `--model --metric --k --hysteresis --ilp
-    /// --deadline-ms`. `wham search` and `wham client search` both call
-    /// this, so the two frontends cannot diverge.
+    /// --deadline-ms --explain`. `wham search` and `wham client search`
+    /// both call this, so the two frontends cannot diverge.
     pub fn from_args(args: &Args) -> Result<Self, ApiError> {
         let model = args.get("model").ok_or_else(|| ApiError::invalid("--model required"))?;
         let mut r = Self::new(model);
         knobs_from_args(args, &mut r.metric, &mut r.top_k, &mut r.hysteresis, &mut r.use_ilp)?;
         r.deadline_ms = args.get_as::<u64>("deadline-ms").map_err(cli_err)?;
+        r.explain = args.flag("explain");
         Ok(r)
     }
 
@@ -201,6 +211,7 @@ impl SearchRequest {
             batch,
             opts,
             deadline_ms: self.deadline_ms,
+            explain: self.explain,
         })
     }
 }
@@ -215,6 +226,7 @@ impl ToJson for SearchRequest {
             self.use_ilp,
         )
         .opt_u64("deadline_ms", self.deadline_ms)
+        .bool("explain", self.explain)
         .finish()
     }
 }
@@ -224,6 +236,9 @@ impl FromJson for SearchRequest {
         let mut r = Self::new(req_str(v, "model")?);
         knobs_from_json(v, &mut r.metric, &mut r.top_k, &mut r.hysteresis, &mut r.use_ilp)?;
         r.deadline_ms = opt_u64(v, "deadline_ms")?;
+        if let Some(b) = opt_bool(v, "explain")? {
+            r.explain = b;
+        }
         Ok(r)
     }
 }

@@ -193,6 +193,7 @@ impl Session {
             cache_hits: r.cache_hits as u64,
             cancelled: r.cancelled,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            explain: if plan.explain { Some(r.explain) } else { None },
         })
     }
 
@@ -515,6 +516,18 @@ mod tests {
         for w in reply.ranked.windows(2) {
             assert!(w[0].throughput >= w[1].throughput);
         }
+    }
+
+    #[test]
+    fn explain_rows_attach_only_when_requested() {
+        let mut s = session();
+        let plain = s.search(&SearchRequest::new("bert-base")).unwrap();
+        assert!(plain.explain.is_none(), "unrequested replies must omit explain");
+        let with = s.search(&SearchRequest::new("bert-base").explain(true)).unwrap();
+        let rows = with.explain.expect("requested explain rows");
+        let cap = crate::telemetry::FlightRecorder::DEFAULT_CAP as u64;
+        assert_eq!(rows.len() as u64, with.dims_evaluated.min(cap));
+        assert!(rows.iter().any(|r| !r.cache_hit), "cold search must have misses");
     }
 
     #[test]

@@ -25,20 +25,23 @@
 //! cluster bench and `GET /status` surface.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::topology::Topology;
 use crate::distributed::partition::PartitionedModel;
 use crate::distributed::pipeline::StageTimes;
 
 /// Cumulative simulator events (tasks + transfers) process-wide —
-/// surfaced by `GET /status` and `benches/cluster.rs`, following the
-/// `sched::evals_total` perf-counter pattern.
-static EVENTS: AtomicU64 = AtomicU64::new(0);
+/// surfaced by `GET /status`, `GET /metrics`, and `benches/cluster.rs`,
+/// following the `sched::evals_total` perf-counter pattern. Registered
+/// in the [`crate::telemetry::registry`].
+static EVENTS: crate::telemetry::Counter = crate::telemetry::Counter::new(
+    "wham_cluster_sim_events_total",
+    "Cluster event-simulator events (tasks + transfers) since process start.",
+);
 
 /// Total cluster-simulator events since process start.
 pub fn events_total() -> u64 {
-    EVENTS.load(Ordering::Relaxed)
+    EVENTS.get()
 }
 
 /// Pipeline schedule simulated at event granularity.
@@ -245,6 +248,10 @@ pub fn simulate_events(
 ) -> Result<SimResult, String> {
     let s = part.stages.len();
     let m = part.num_micro as usize;
+    let _span = crate::telemetry::trace::span("event_sim")
+        .arg("schedule", schedule.name())
+        .arg("stages", s)
+        .arg("micro", m);
     if times.len() != s {
         return Err(format!("times has {} entries for {s} stages", times.len()));
     }
@@ -412,7 +419,7 @@ pub fn simulate_events(
         in_flight[stage] += delta;
         peak[stage] = peak[stage].max(in_flight[stage]);
     }
-    EVENTS.fetch_add(events, Ordering::Relaxed);
+    EVENTS.add(events);
 
     let mean_busy: f64 = busy.iter().sum::<f64>() / ranks as f64;
     Ok(SimResult {

@@ -360,6 +360,11 @@ pub fn sweep(
     let mut screened: Vec<StrategyPoint> = Vec::new();
     let mut best = f64::NEG_INFINITY;
     for c in &candidates {
+        let _span = crate::telemetry::trace::span("strategy_screen")
+            .arg("pp", c.pp)
+            .arg("tp", c.tp)
+            .arg("dp", c.dp)
+            .arg("schedule", c.name);
         let depth = c.pp * c.chunks;
         let part = parts
             .entry((depth, c.tp))
@@ -367,11 +372,14 @@ pub fn sweep(
         let p = evaluate_candidate(c, part, &reference, false, &topo, opts, &mut times_cache, backend)?;
         best = best.max(p.score);
         screened.push(p);
+        let elapsed = t0.elapsed();
         let go = sink.on_progress(&Progress {
             phase: "cluster",
-            elapsed: t0.elapsed(),
+            elapsed,
             points: screened.len(),
             best_score: best,
+            rate: Progress::rate_of(screened.len(), elapsed),
+            depth: 1,
         });
         if !go {
             cancelled = true;

@@ -27,6 +27,10 @@ impl<'g> AnnotatedGraph<'g> {
     /// bit-identical annotation (same rows in, same `OpCost` out — the
     /// backends are pure functions of the row).
     pub fn new(graph: &'g OperatorGraph, dims: Dims, backend: &mut dyn CostBackend) -> Self {
+        let _span = crate::telemetry::trace::span("annotate")
+            .arg("ops", graph.len())
+            .arg("tc", format!("{}x{}", dims.tc_x, dims.tc_y))
+            .arg("vc", dims.vc_w);
         let classes = graph.cost_classes();
         super::note_backend_rows(classes.len() as u64);
         let class_costs = backend.evaluate(&classes.rows, dims);
@@ -40,6 +44,11 @@ impl<'g> AnnotatedGraph<'g> {
     /// table, one row per op. Kept as the parity baseline for the
     /// interned path (`rust/tests/hotpath_parity.rs`) and for ablations.
     pub fn new_naive(graph: &'g OperatorGraph, dims: Dims, backend: &mut dyn CostBackend) -> Self {
+        let _span = crate::telemetry::trace::span("annotate")
+            .arg("ops", graph.len())
+            .arg("naive", true)
+            .arg("tc", format!("{}x{}", dims.tc_x, dims.tc_y))
+            .arg("vc", dims.vc_w);
         let rows = graph.cost_rows();
         super::note_backend_rows(rows.len() as u64);
         let costs = backend.evaluate(&rows, dims);

@@ -44,18 +44,22 @@ impl Dims {
 
 /// Cumulative cost-backend rows evaluated process-wide. Fed by the
 /// annotation paths ([`annotate::AnnotatedGraph`]), surfaced by the
-/// service's `GET /status` perf counters and the hot-path bench — the
-/// unit the operator-class interner shrinks.
-static BACKEND_ROWS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+/// service's `GET /status` perf counters, `GET /metrics`, and the
+/// hot-path bench — the unit the operator-class interner shrinks.
+/// Registered in the [`crate::telemetry::registry`].
+static BACKEND_ROWS: crate::telemetry::Counter = crate::telemetry::Counter::new(
+    "wham_backend_rows_total",
+    "Cost-backend rows evaluated since process start.",
+);
 
 /// Record `n` rows handed to a cost backend.
 pub fn note_backend_rows(n: u64) {
-    BACKEND_ROWS.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+    BACKEND_ROWS.add(n);
 }
 
 /// Total rows handed to cost backends since process start.
 pub fn backend_rows_total() -> u64 {
-    BACKEND_ROWS.load(std::sync::atomic::Ordering::Relaxed)
+    BACKEND_ROWS.get()
 }
 
 /// A batched cost evaluator.

@@ -306,6 +306,9 @@ pub fn global_search_observed(
         let r = match prefetched[ti].take() {
             Some(r) => r,
             None => {
+                let _span = crate::telemetry::trace::span("global_stage")
+                    .arg("model", models[t.model].name.clone())
+                    .arg("sig", t.sig);
                 let lopts = lopts_for(t, backend);
                 let mut cache = caches.cache_for(t.graph, t.micro_batch, &lopts, backend.name());
                 WhamSearch::new(t.graph, t.micro_batch, lopts)
@@ -387,6 +390,7 @@ pub fn global_search_observed(
     // Top-level pruning (section 5.1): stop when `hysteresis`+1
     // consecutive whole area-levels improve no model.
     'levels: for level in &levels {
+        let _span = crate::telemetry::trace::span("global_prune").arg("level", level.len());
         let mut improved_level = false;
         for cfg in level {
             let results = evaluate_cfg(cfg, &mut tables, backend);
@@ -406,11 +410,14 @@ pub fn global_search_observed(
             // candidate is always scored and the families are populated.
             let best_score =
                 best_common.as_ref().map(|(s, _, _)| *s).unwrap_or(f64::NEG_INFINITY);
+            let elapsed = t0.elapsed();
             let go = sink.on_progress(&Progress {
                 phase: "global",
-                elapsed: t0.elapsed(),
+                elapsed,
                 points: evaluated,
                 best_score,
+                rate: Progress::rate_of(evaluated, elapsed),
+                depth: 1,
             });
             if !go || cancelled {
                 cancelled = true;

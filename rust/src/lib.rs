@@ -38,6 +38,9 @@
 //! * [`coordinator`] — parallel per-stage search orchestration
 //! * [`service`] — the `wham serve` mining service: HTTP front end,
 //!   request coalescing, persistent fingerprint-keyed design database
+//! * [`telemetry`] — span tracing (Chrome-trace/Perfetto output), the
+//!   unified metrics registry behind `GET /metrics`, and the search
+//!   flight recorder (`wham trace explain`)
 //! * [`metrics`], [`report`], [`util`] — supporting substrates
 
 pub mod api;
@@ -55,6 +58,7 @@ pub mod runtime;
 pub mod sched;
 pub mod search;
 pub mod service;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 

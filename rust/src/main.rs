@@ -38,7 +38,7 @@ const VALUE_KEYS: &[&str] = &[
     "model", "models", "metric", "backend", "k", "depth", "tmp", "scheme", "framework",
     "iterations", "workers", "jobs", "hysteresis", "seed", "out", "tc", "vc", "dims", "port",
     "db", "addr", "deadline-ms", "workload-dir", "devices", "topology", "schedules", "mine",
-    "chunks",
+    "chunks", "trace-out",
 ];
 
 fn main() -> Result<()> {
@@ -92,20 +92,23 @@ fn print_usage() {
          wham workloads <list|show <name>|lint <path...>>\n  \
          wham search --model <name> [--metric throughput|perf/tdp] [--ilp]\n              \
          [--backend auto|native|pjrt] [--k 10] [--hysteresis 1] [--jobs N]\n              \
-         [--deadline-ms N] [--progress]\n  \
+         [--deadline-ms N] [--progress] [--explain] [--trace-out spans.json]\n  \
          wham evaluate --model <name> --dims TXxTYxVW [--tc 2 --vc 2]\n  \
          wham common [--models a,b,c] [--metric ...]\n  \
          wham global [--models opt-1.3b,gpt2-xl] [--depth 32] [--tmp 1]\n              \
-         [--scheme gpipe|1f1b] [--k 10] [--metric ...] [--jobs N] [--deadline-ms N]\n  \
+         [--scheme gpipe|1f1b] [--k 10] [--metric ...] [--jobs N] [--deadline-ms N]\n              \
+         [--progress] [--trace-out spans.json]\n  \
          wham cluster --model <llm> [--devices 8] [--topology flat|ring|fat-tree|nvlink-island]\n              \
          [--schedules gpipe,1f1b,interleaved] [--mine 2] [--chunks 2]\n              \
-         [--metric ...] [--jobs N] [--deadline-ms N]\n  \
+         [--metric ...] [--jobs N] [--deadline-ms N] [--progress] [--trace-out spans.json]\n  \
          wham baseline --model <name> --framework confuciux|spotlight|tpuv2|nvdla\n              \
          [--iterations 500]\n  \
          wham trace --model <name> [--out trace.json] [--tc 2 --vc 2 --dims 128x128x128]\n  \
+         wham trace explain <model> — per-iteration search attribution (flight recorder)\n  \
          wham partition --model <llm> [--depth 32] [--tmp 1] [--scheme gpipe]\n  \
          wham space --model <name>\n  \
-         wham serve [--port 8484] [--workers <cores>] [--db designs.jsonl] [--backend auto]\n  \
+         wham serve [--port 8484] [--workers <cores>] [--db designs.jsonl] [--backend auto]\n              \
+         [--trace-out spans.json]\n  \
          wham client <models|search|evaluate|common|global|cluster|status|upload> [--addr 127.0.0.1:8484] ...\n  \
          wham selftest"
     );
@@ -122,6 +125,48 @@ fn jobs_from_args(args: &Args) -> Result<usize> {
 /// Session over the `--backend` and `--jobs` flags.
 fn session_from_args(args: &Args) -> Result<Session> {
     Ok(Session::new(backend_from_args(args)?)?.with_jobs(jobs_from_args(args)?))
+}
+
+/// `--trace-out FILE`: turn on span tracing for this invocation and
+/// return the output path. Tracing stays fully off (one relaxed atomic
+/// load per span site) when the flag is absent.
+fn trace_out_from_args(args: &Args) -> Option<String> {
+    let out = args.get("trace-out").map(str::to_string);
+    if out.is_some() {
+        wham::telemetry::trace::enable();
+    }
+    out
+}
+
+/// Flush the span buffer as Chrome-trace JSON if `--trace-out` was given.
+fn flush_trace(out: &Option<String>) -> Result<()> {
+    if let Some(path) = out {
+        wham::telemetry::trace::write_to(std::path::Path::new(path))?;
+        eprintln!(
+            "wrote {} span event(s) to {path} — open in ui.perfetto.dev",
+            wham::telemetry::trace::event_count()
+        );
+    }
+    Ok(())
+}
+
+/// `--progress` emits one NDJSON object per event on stdout — machine
+/// consumers get `{"phase":...,"ms":...,"points":...,"best":...,
+/// "rate":...,"depth":...}` lines they can stream without a parser for
+/// the human tables.
+fn ndjson_progress(p: &Progress) -> bool {
+    println!(
+        "{}",
+        wham::util::json::Obj::new()
+            .str("phase", p.phase)
+            .f64("ms", p.elapsed.as_secs_f64() * 1e3)
+            .u64("points", p.points as u64)
+            .f64("best", p.best_score)
+            .f64("rate", p.rate)
+            .u64("depth", p.depth as u64)
+            .finish()
+    );
+    true
 }
 
 /// Forward-graph parameter count of any registry entry, pretty-printed
@@ -235,6 +280,7 @@ fn cmd_workloads(args: &Args) -> Result<()> {
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
+    let trace_out = trace_out_from_args(args);
     let req = SearchRequest::from_args(args)?;
     let plan = req.validate()?;
     let mut session = session_from_args(args)?;
@@ -246,19 +292,12 @@ fn cmd_search(args: &Args) -> Result<()> {
         req.metric,
         if req.use_ilp { "ILP" } else { "MCR heuristics" },
     );
-    let mut progress = |p: &Progress| {
-        println!(
-            "  [{:>8.1}ms] {:>3} dims  best={:.4}",
-            p.elapsed.as_secs_f64() * 1e3,
-            p.points,
-            p.best_score
-        );
-        true
-    };
+    let mut progress = ndjson_progress;
     let mut null = NullSink;
     let sink: &mut dyn ProgressSink =
         if args.flag("progress") { &mut progress } else { &mut null };
     let r = session.run_search(&plan, sink)?;
+    flush_trace(&trace_out)?;
     println!(
         "best: {}  score={:.4}  ({} dims, {} scheduler evals, {:.0}ms{})",
         r.best.config.display(),
@@ -304,6 +343,7 @@ fn cmd_common(args: &Args) -> Result<()> {
 }
 
 fn cmd_global(args: &Args) -> Result<()> {
+    let trace_out = trace_out_from_args(args);
     let req = GlobalRequest::from_args(args)?;
     let plan = req.validate()?;
     let mut session = session_from_args(args)?;
@@ -315,7 +355,12 @@ fn cmd_global(args: &Args) -> Result<()> {
         req.scheme,
         req.metric
     );
-    let r = session.run_global(&plan, &mut NullSink)?;
+    let mut progress = ndjson_progress;
+    let mut null = NullSink;
+    let sink: &mut dyn ProgressSink =
+        if args.flag("progress") { &mut progress } else { &mut null };
+    let r = session.run_global(&plan, sink)?;
+    flush_trace(&trace_out)?;
     println!(
         "pool={} evaluated={} local_searches={} wall={:.0}ms{}",
         r.candidate_pool,
@@ -350,6 +395,7 @@ fn cmd_global(args: &Args) -> Result<()> {
 /// ([`wham::cluster`]): enumerate (pp, tp, dp, schedule) splits, screen
 /// them with the discrete-event simulator, mine hardware for the best.
 fn cmd_cluster(args: &Args) -> Result<()> {
+    let trace_out = trace_out_from_args(args);
     let req = ClusterRequest::from_args(args)?;
     let plan = req.validate()?;
     let mut session = session_from_args(args)?;
@@ -357,20 +403,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "cluster sweep: {} on {} devices ({} topology, metric={}, mine top {})",
         req.model, req.devices, req.topology, req.metric, req.mine_top
     );
-    let mut progress = |p: &Progress| {
-        println!(
-            "  [{:>8.1}ms] {} {:>3}  best={:.4}",
-            p.elapsed.as_secs_f64() * 1e3,
-            p.phase,
-            p.points,
-            p.best_score
-        );
-        true
-    };
+    let mut progress = ndjson_progress;
     let mut null = NullSink;
     let sink: &mut dyn ProgressSink =
         if args.flag("progress") { &mut progress } else { &mut null };
     let r = session.run_cluster(&plan, sink)?;
+    flush_trace(&trace_out)?;
     println!(
         "{} strategies screened, {} mined, wall={:.0}ms{}",
         r.candidates,
@@ -474,8 +512,12 @@ fn cmd_baseline(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Export a workload's schedule on a given design as Chrome-trace JSON.
+/// Export a workload's schedule on a given design as Chrome-trace JSON,
+/// or (`wham trace explain <model>`) dump the search flight recorder.
 fn cmd_trace(args: &Args) -> Result<()> {
+    if args.pos(1) == Some("explain") {
+        return cmd_trace_explain(args);
+    }
     let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
     let out = args.get_or("out", "trace.json");
     let (graph, _batch) = resolve_workload(name)?;
@@ -512,6 +554,48 @@ fn cmd_trace(args: &Args) -> Result<()> {
         sched.makespan,
         config.display()
     );
+    Ok(())
+}
+
+/// `wham trace explain <model>` — run the search with the flight
+/// recorder attached and print per-iteration critical-path attribution:
+/// which dimensions were probed, what the scheduler granted, which op
+/// class sat on the critical path, and whether the eval cache answered.
+fn cmd_trace_explain(args: &Args) -> Result<()> {
+    let name = args
+        .get("model")
+        .or_else(|| args.pos(2))
+        .ok_or_else(|| anyhow!("usage: wham trace explain <model> (or --model <name>)"))?;
+    let plan = SearchRequest::new(name).explain(true).validate()?;
+    let mut session = session_from_args(args)?;
+    let r = session.run_search(&plan, &mut NullSink)?;
+    let rows = r.explain.unwrap_or_default();
+    println!(
+        "flight recorder for {name}: {} of {} evaluations retained (ring cap {}), best {} score={:.4}",
+        rows.len(),
+        r.dims_evaluated,
+        wham::telemetry::FlightRecorder::DEFAULT_CAP,
+        r.best.config.display(),
+        r.best.score,
+    );
+    let mut t = Table::new([
+        "#", "dims", "score", "best", "cache", "evals", "tc/vc", "grants t/v/f", "conflict",
+    ]);
+    for (i, rec) in rows.iter().enumerate() {
+        t.row([
+            (i + 1).to_string(),
+            format!("{}x{}x{}", rec.dims.tc_x, rec.dims.tc_y, rec.dims.vc_w),
+            format!("{:.4}", rec.score),
+            format!("{}{:.4}", if rec.improved { "*" } else { " " }, rec.best),
+            if rec.cache_hit { "hit" } else { "miss" }.to_string(),
+            rec.evals.to_string(),
+            format!("{}/{}", rec.cores.0, rec.cores.1),
+            format!("{}/{}/{}", rec.grants.0, rec.grants.1, rec.grants.2),
+            rec.conflict_op.clone().unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    print!("{t}");
+    println!("(* = new best; grants t/v/f = tensor-core / vector-core / fused issue grants)");
     Ok(())
 }
 
@@ -591,6 +675,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.get_as_or("workers", jobs_from_args(args)?).map_err(|e| anyhow!("{e}"))?;
     let backend = backend_from_args(args)?;
     let db_path = args.get("db").map(std::path::PathBuf::from);
+    // A server has no "end of run" to flush at, so `--trace-out` snapshots
+    // the span buffer to disk periodically (writes are whole-file, so the
+    // file is always a complete Chrome-trace document).
+    if let Some(path) = trace_out_from_args(args) {
+        eprintln!("span tracing on: snapshotting to {path} every 5s");
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            let _ = wham::telemetry::trace::write_to(std::path::Path::new(&path));
+        });
+    }
     let opts = wham::service::ServeOptions { workers, db_path, backend };
     wham::service::serve_forever(&format!("127.0.0.1:{port}"), opts)
 }

@@ -20,13 +20,18 @@ use crate::graph::CoreType;
 type Prio = Reverse<(u64, u64, usize)>;
 
 /// Cumulative greedy-scheduler invocations process-wide — the paper's
-/// search-cost unit (Figure 8), surfaced by `GET /status` and the
-/// hot-path bench so eval regressions are visible without a profiler.
-static EVALS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+/// search-cost unit (Figure 8), surfaced by `GET /status`,
+/// `GET /metrics`, and the hot-path bench so eval regressions are
+/// visible without a profiler. Registered in the
+/// [`crate::telemetry::registry`].
+static EVALS: crate::telemetry::Counter = crate::telemetry::Counter::new(
+    "wham_scheduler_evals_total",
+    "Greedy list-scheduler runs since process start (the paper's search-cost unit).",
+);
 
 /// Total greedy-scheduler runs since process start.
 pub fn evals_total() -> u64 {
-    EVALS.load(std::sync::atomic::Ordering::Relaxed)
+    EVALS.get()
 }
 
 /// Number of cores of each type available to the scheduler.
@@ -150,7 +155,8 @@ pub fn greedy_schedule_scratch(
     scratch: &mut SchedScratch,
 ) -> Schedule {
     assert!(cores.tc >= 1 && cores.vc >= 1, "need at least one core of each type");
-    EVALS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    EVALS.add(1);
+    let _span = crate::telemetry::trace::span("schedule");
     let g = ann.graph;
     let n = g.len();
 

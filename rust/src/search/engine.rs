@@ -17,6 +17,7 @@ use crate::cost::{CostBackend, Dims};
 use crate::metrics::{evaluate, Metric};
 use crate::graph::OperatorGraph;
 use crate::sched::{asap_alap, greedy_schedule, CoreCount};
+use crate::telemetry::recorder::{ExplainRecord, FlightRecorder};
 
 /// Search configuration.
 #[derive(Debug, Clone, Copy)]
@@ -88,6 +89,11 @@ pub struct SearchResult {
     /// (deadline hit, client gone): `best`/`top` are best-so-far, not
     /// the full exploration's.
     pub cancelled: bool,
+    /// Flight-recorder log: per-evaluation critical-path attribution in
+    /// exploration order, bounded to the most recent
+    /// [`FlightRecorder::DEFAULT_CAP`] entries. Pure observation — the
+    /// search result is bit-identical with or without a reader.
+    pub explain: Vec<ExplainRecord>,
 }
 
 /// Memoization layer for per-`Dims` design-point evaluations.
@@ -152,6 +158,17 @@ impl CacheProvider for NoSharedCache {
     }
 }
 
+/// Attribution of one dims evaluation, fed to the flight recorder:
+/// where the MCR loop granted cores and which operator conflicted last.
+/// Empty (`Default`) for cache hits and exact-solver runs.
+#[derive(Debug, Clone, Default)]
+pub struct EvalAttribution {
+    /// Cores granted per conflicted class (tensor, vector, fused units).
+    pub grants: (u64, u64, u64),
+    /// Name of the last operator whose critical conflict MCR resolved.
+    pub conflict_op: Option<String>,
+}
+
 /// WHAM per-workload search (paper Figure 4).
 pub struct WhamSearch<'a> {
     pub graph: &'a OperatorGraph,
@@ -208,6 +225,11 @@ impl<'a> WhamSearch<'a> {
         let mut scheduler_evals = 0usize;
         let mut cache_hits = 0usize;
         let mut cancelled = false;
+        let mut recorder = FlightRecorder::new(FlightRecorder::DEFAULT_CAP);
+        // Which pruning phase is running (1 = tensor dims, 2 = vector
+        // width) — reported as `Progress::depth`. A `Cell` because the
+        // batch closure below holds a shared borrow across both phases.
+        let phase = std::cell::Cell::new(1usize);
 
         {
             // Per-slot outcome of the probe pass over one sibling batch.
@@ -227,6 +249,9 @@ impl<'a> WhamSearch<'a> {
                 if cancelled {
                     return vec![f64::NEG_INFINITY; ds.len()];
                 }
+                let _span = crate::telemetry::trace::span("prune_batch")
+                    .arg("siblings", ds.len())
+                    .arg("phase", phase.get());
                 // Probe pass: exactly one engine-seen / cache lookup per
                 // dims (the cache probe feeds the design-DB hit/miss
                 // counters, so it must not repeat).
@@ -249,7 +274,8 @@ impl<'a> WhamSearch<'a> {
                 // policy). The threads only warm a private map; all
                 // bookkeeping below stays serial and in batch order, so
                 // results are bit-identical to the jobs=1 walk.
-                let mut prefetched: HashMap<Dims, (DesignPoint, usize)> = HashMap::new();
+                let mut prefetched: HashMap<Dims, (DesignPoint, usize, EvalAttribution)> =
+                    HashMap::new();
                 let misses: Vec<Dims> = ds
                     .iter()
                     .zip(&slots)
@@ -279,35 +305,50 @@ impl<'a> WhamSearch<'a> {
                         scores.push(f64::NEG_INFINITY);
                         continue;
                     }
-                    let point = match slot {
+                    let (point, iter_evals, attr, hit) = match slot {
                         Slot::Known(score) => {
                             scores.push(score);
                             continue;
                         }
                         Slot::Hit(p) => {
                             cache_hits += 1;
-                            p
+                            (p, 0usize, EvalAttribution::default(), true)
                         }
                         Slot::Miss => {
-                            let (p, evals) = match prefetched.remove(d) {
+                            let (p, evals, attr) = match prefetched.remove(d) {
                                 Some(r) => r,
                                 None => self.evaluate_dims(*d, backend),
                             };
                             scheduler_evals += evals;
                             cache.put(*d, p);
-                            p
+                            (p, evals, attr, false)
                         }
                     };
                     seen.insert(*d, point.score);
                     explored.push(point);
+                    let prev_best = top.best().map(|b| b.score).unwrap_or(f64::NEG_INFINITY);
                     top.offer(point);
                     let best = top.best().map(|b| b.score).unwrap_or(f64::NEG_INFINITY);
-                    trajectory.push((t0.elapsed(), best));
+                    recorder.push(ExplainRecord {
+                        dims: *d,
+                        score: point.score,
+                        best,
+                        improved: best > prev_best,
+                        cache_hit: hit,
+                        evals: iter_evals as u64,
+                        cores: (point.config.num_tc, point.config.num_vc),
+                        grants: attr.grants,
+                        conflict_op: attr.conflict_op,
+                    });
+                    let elapsed = t0.elapsed();
+                    trajectory.push((elapsed, best));
                     let go = sink.on_progress(&Progress {
                         phase: "search",
-                        elapsed: t0.elapsed(),
+                        elapsed,
                         points: explored.len(),
                         best_score: best,
+                        rate: Progress::rate_of(explored.len(), elapsed),
+                        depth: phase.get(),
                     });
                     if !go {
                         cancelled = true;
@@ -318,29 +359,38 @@ impl<'a> WhamSearch<'a> {
             };
 
             // Phase 1: tensor dims, vector width fixed at the maximum.
-            let p1 = prune_tree_batched(
-                vec![(DIM_MAX, DIM_MAX)],
-                |n| dims::tc_children(*n),
-                |ns: &[(u64, u64)]| {
-                    let ds: Vec<Dims> =
-                        ns.iter().map(|&(x, y)| Dims { tc_x: x, tc_y: y, vc_w: DIM_MAX }).collect();
-                    eval_batch(&ds)
-                },
-                self.opts.hysteresis,
-            );
+            let p1 = {
+                let _span = crate::telemetry::trace::span("search_phase").arg("phase", 1);
+                prune_tree_batched(
+                    vec![(DIM_MAX, DIM_MAX)],
+                    |n| dims::tc_children(*n),
+                    |ns: &[(u64, u64)]| {
+                        let ds: Vec<Dims> = ns
+                            .iter()
+                            .map(|&(x, y)| Dims { tc_x: x, tc_y: y, vc_w: DIM_MAX })
+                            .collect();
+                        eval_batch(&ds)
+                    },
+                    self.opts.hysteresis,
+                )
+            };
             let (bx, by) = p1.best.expect("phase 1 explored at least the root").0;
 
             // Phase 2: vector width at the winning tensor dims.
-            let _p2 = prune_tree_batched(
-                vec![DIM_MAX],
-                |&w| dims::vc_children(w),
-                |ws: &[u64]| {
-                    let ds: Vec<Dims> =
-                        ws.iter().map(|&w| Dims { tc_x: bx, tc_y: by, vc_w: w }).collect();
-                    eval_batch(&ds)
-                },
-                self.opts.hysteresis,
-            );
+            phase.set(2);
+            let _p2 = {
+                let _span = crate::telemetry::trace::span("search_phase").arg("phase", 2);
+                prune_tree_batched(
+                    vec![DIM_MAX],
+                    |&w| dims::vc_children(w),
+                    |ws: &[u64]| {
+                        let ds: Vec<Dims> =
+                            ws.iter().map(|&w| Dims { tc_x: bx, tc_y: by, vc_w: w }).collect();
+                        eval_batch(&ds)
+                    },
+                    self.opts.hysteresis,
+                )
+            };
         }
 
         let best = *top.best().expect("search evaluated at least one point");
@@ -354,6 +404,7 @@ impl<'a> WhamSearch<'a> {
             wall: t0.elapsed(),
             trajectory,
             cancelled,
+            explain: recorder.into_records(),
         }
     }
 
@@ -366,11 +417,11 @@ impl<'a> WhamSearch<'a> {
         &self,
         ds: &[Dims],
         choice: crate::coordinator::BackendChoice,
-    ) -> HashMap<Dims, (DesignPoint, usize)> {
+    ) -> HashMap<Dims, (DesignPoint, usize, EvalAttribution)> {
         use std::sync::atomic::{AtomicUsize, Ordering};
         let workers = self.opts.jobs.min(ds.len());
         let next = AtomicUsize::new(0);
-        let results: Vec<std::sync::Mutex<Option<(DesignPoint, usize)>>> =
+        let results: Vec<std::sync::Mutex<Option<(DesignPoint, usize, EvalAttribution)>>> =
             (0..ds.len()).map(|_| std::sync::Mutex::new(None)).collect();
         std::thread::scope(|scope| {
             for _ in 0..workers {
@@ -396,8 +447,13 @@ impl<'a> WhamSearch<'a> {
     }
 
     /// Evaluate one `<TC-Dim, VC-Width>`: annotate, pick core counts,
-    /// schedule, score. Returns the design point and scheduler-eval count.
-    fn evaluate_dims(&self, d: Dims, backend: &mut dyn CostBackend) -> (DesignPoint, usize) {
+    /// schedule, score. Returns the design point, the scheduler-eval
+    /// count, and the flight-recorder attribution.
+    fn evaluate_dims(
+        &self,
+        d: Dims,
+        backend: &mut dyn CostBackend,
+    ) -> (DesignPoint, usize, EvalAttribution) {
         let ann = if self.opts.naive_annotation {
             AnnotatedGraph::new_naive(self.graph, d, backend)
         } else {
@@ -418,7 +474,7 @@ impl<'a> WhamSearch<'a> {
         };
         if self.opts.use_ilp {
             let out = ilp_search(&ann, &self.opts.constraints, self.opts.ilp_node_budget);
-            (mk_point(out.cores, out.makespan), out.nodes.max(1) as usize)
+            (mk_point(out.cores, out.makespan), out.nodes.max(1) as usize, EvalAttribution::default())
         } else {
             // Score every accepted point of the MCR trajectory: under
             // Perf/TDP the most efficient design is often an intermediate
@@ -437,7 +493,11 @@ impl<'a> WhamSearch<'a> {
                 .map(|&(c, ms)| mk_point(c, ms))
                 .max_by(|a, b| a.score.total_cmp(&b.score))
                 .expect("trajectory is non-empty");
-            (best, out.evals)
+            let attr = EvalAttribution {
+                grants: out.grants,
+                conflict_op: out.last_conflict.map(|v| self.graph.ops[v].name.clone()),
+            };
+            (best, out.evals, attr)
         }
     }
 }
@@ -610,6 +670,28 @@ mod tests {
         assert_eq!(r.dims_evaluated, 2, "no evaluations after the cancel signal");
         assert!(full.dims_evaluated > r.dims_evaluated);
         assert!(r.best.config.in_template());
+    }
+
+    #[test]
+    fn flight_recorder_logs_every_evaluation() {
+        let g = bert1_graph();
+        let s = WhamSearch::new(&g, 4, SearchOptions::default());
+        let mut shared: HashMap<Dims, DesignPoint> = HashMap::new();
+        let cold = s.run_cached(&mut NativeCost, &mut shared);
+        assert_eq!(cold.explain.len(), cold.dims_evaluated.min(FlightRecorder::DEFAULT_CAP));
+        assert!(cold.explain.iter().all(|e| !e.cache_hit));
+        // The search must attribute at least one core grant somewhere.
+        assert!(cold.explain.iter().any(|e| e.grants.0 + e.grants.1 + e.grants.2 > 0));
+        // Exactly the improving records raise the running best.
+        let mut best = f64::NEG_INFINITY;
+        for e in &cold.explain {
+            assert!(e.best >= best);
+            assert_eq!(e.improved, e.best > best);
+            best = e.best;
+        }
+        // Warm run: every record is a cache hit with no scheduler cost.
+        let warm = s.run_cached(&mut NativeCost, &mut shared);
+        assert!(warm.explain.iter().all(|e| e.cache_hit && e.evals == 0));
     }
 
     #[test]

@@ -60,6 +60,14 @@ pub struct McrOutcome {
     /// accepted addition; under [`GrowthMode::Gallop`] only the measured
     /// landing points (the endpoint is identical).
     pub trajectory: Vec<(CoreCount, u64)>,
+    /// Cores granted per conflicted class over the run (tensor, vector,
+    /// fused units) — the flight recorder's attribution of *where* the
+    /// growth went. Polish-loop additions count toward their axis.
+    pub grants: (u64, u64, u64),
+    /// Graph index of the last operator whose critical conflict the loop
+    /// resolved (`None` when the single-core schedule already met the
+    /// bound or only the polish loop grew cores).
+    pub last_conflict: Option<usize>,
 }
 
 /// One core count plus `k` cores of `t` (a whole TC+VC unit if fused).
@@ -95,6 +103,8 @@ struct McrCtx<'a> {
 impl McrCtx<'_> {
     fn eval(&mut self, cand: CoreCount) -> Schedule {
         self.evals += 1;
+        let _span =
+            crate::telemetry::trace::span("mcr_probe").arg("tc", cand.tc).arg("vc", cand.vc);
         greedy_schedule_scratch(self.ann, self.cp, cand, Priority::Criticality, &mut self.scratch)
     }
 
@@ -159,6 +169,9 @@ impl McrCtx<'_> {
         if room == 0 {
             return None;
         }
+        let _span = crate::telemetry::trace::span("mcr_gallop")
+            .arg("axis", format!("{axis:?}"))
+            .arg("room", room);
         let mut prev_k = 0u64; // measured improving point below `last_k`
         let mut last_k = 0u64; // best measured improving point
         let mut last_ms = cur_ms;
@@ -198,6 +211,7 @@ impl McrCtx<'_> {
 
 /// Run Algorithm 1 with an explicit growth mode.
 pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMode) -> McrOutcome {
+    let _span = crate::telemetry::trace::span("mcr").arg("ops", ann.graph.len());
     let cp = asap_alap(ann);
     // Critical-path bound on useful core counts (section 3): adding more
     // cores than the graph's peak parallelism cannot help.
@@ -216,6 +230,16 @@ pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMod
     let mut cores = CoreCount { tc: 1, vc: 1 };
     let mut sched = ctx.eval(cores);
     let mut trajectory = vec![(cores, sched.makespan)];
+    // Flight-recorder attribution: cores granted per conflicted class
+    // and the last conflict resolved. Pure observation — never read by
+    // the growth decisions above it.
+    let mut grants = (0u64, 0u64, 0u64);
+    let mut last_conflict: Option<usize> = None;
+    let grant = |g: &mut (u64, u64, u64), t: CoreType, k: u64| match t {
+        CoreType::Tensor => g.0 += k,
+        CoreType::Vector => g.1 += k,
+        CoreType::Fused => g.2 += k,
+    };
     // A core type saturates when growing it stops helping (constraint hit
     // or CheckRuntimeIsWorse); a successful addition of the other type can
     // change the schedule, so saturation resets on acceptance.
@@ -266,6 +290,8 @@ pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMod
                 }
                 cores = cand;
                 sched = cand_sched;
+                grant(&mut grants, needed, 1);
+                last_conflict = Some(conflict);
             }
             GrowthMode::Gallop => {
                 // Run the whole accept chain for this core type at
@@ -281,6 +307,8 @@ pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMod
                 };
                 cores = add_cores(cores, needed, k);
                 sched = landing;
+                grant(&mut grants, needed, k);
+                last_conflict = Some(conflict);
             }
         }
         trajectory.push((cores, sched.makespan));
@@ -307,6 +335,7 @@ pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMod
                         cores = add_cores(cores, axis, k);
                         sched = landing;
                         trajectory.push((cores, sched.makespan));
+                        grant(&mut grants, axis, k);
                         improved = true;
                         break;
                     }
@@ -321,6 +350,7 @@ pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMod
                         cores = cand;
                         sched = cand_sched;
                         trajectory.push((cores, sched.makespan));
+                        grant(&mut grants, axis, 1);
                         improved = true;
                         break;
                     }
@@ -332,7 +362,16 @@ pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMod
     let hit_bound = sched.makespan == cp.best_latency;
     let evals = ctx.evals;
     drop(ctx); // ends the ctx borrow of `cp` before the move below
-    McrOutcome { cores, schedule: sched, critical: cp, evals, hit_bound, trajectory }
+    McrOutcome {
+        cores,
+        schedule: sched,
+        critical: cp,
+        evals,
+        hit_bound,
+        trajectory,
+        grants,
+        last_conflict,
+    }
 }
 
 #[cfg(test)]

@@ -16,6 +16,7 @@
 //! | `POST /global`    | [`crate::api::GlobalRequest`]     | [`crate::api::GlobalReply`] |
 //! | `POST /cluster`   | [`crate::api::ClusterRequest`]    | [`crate::api::ClusterReply`] (coalesced + cached) |
 //! | `GET /status`     | —                                 | [`crate::api::StatusReply`] |
+//! | `GET /metrics`    | —                                 | Prometheus text exposition ([`crate::telemetry::registry`]) |
 //!
 //! `POST /workloads` validates and registers a declarative spec
 //! ([`crate::workload`]); the name is then mineable by every other
@@ -43,6 +44,7 @@ use crate::cost::native::NativeCost;
 use crate::service::cache::DesignDb;
 use crate::service::http::{Handler, Request, Response};
 use crate::service::queue::Coalescer;
+use crate::telemetry::{Collect, Sample};
 
 /// Sliding-window latency recorder for one endpoint: a ring of the most
 /// recent [`LatencyRing::CAP`] request walls (microseconds), enough for
@@ -130,7 +132,7 @@ impl ServiceState {
             scheduler_evals_total: AtomicU64::new(0),
             latency: [
                 "/models", "/status", "/search", "/evaluate", "/common", "/global", "/cluster",
-                "/workloads",
+                "/workloads", "/metrics",
             ]
             .into_iter()
             .map(LatencyRing::new)
@@ -177,6 +179,92 @@ impl ServiceState {
     }
 }
 
+/// Scrape-time samples for `GET /metrics`: per-instance state that must
+/// NOT live in the process-global registry (tests start several services
+/// in one process, and their counters would collide). The process-global
+/// counters (`wham_backend_rows_total`, …) render alongside these from
+/// the registry itself.
+impl Collect for ServiceState {
+    fn collect(&self, out: &mut Vec<Sample>) {
+        let n = |v: &AtomicU64| v.load(Ordering::Relaxed);
+        let label = |k: &str, v: &str| vec![(k.to_string(), v.to_string())];
+        out.push(Sample::Counter {
+            name: "wham_http_requests_total".into(),
+            help: "HTTP requests handled by this service instance.".into(),
+            labels: vec![],
+            value: n(&self.requests),
+        });
+        out.push(Sample::Counter {
+            name: "wham_search_requests_total".into(),
+            help: "POST /search requests that validated into a plan.".into(),
+            labels: vec![],
+            value: n(&self.search_requests),
+        });
+        for (kind, v) in
+            [("cold", n(&self.cold_searches)), ("warm", n(&self.warm_searches))]
+        {
+            out.push(Sample::Counter {
+                name: "wham_search_leader_computations_total".into(),
+                help: "Search leader computations by outcome: cold ran the \
+                       scheduler, warm answered entirely from the database."
+                    .into(),
+                labels: label("result", kind),
+                value: v,
+            });
+        }
+        out.push(Sample::Counter {
+            name: "wham_service_scheduler_evals_total".into(),
+            help: "Scheduler invocations across this instance's leader computations.".into(),
+            labels: vec![],
+            value: n(&self.scheduler_evals_total),
+        });
+        for (role, v) in [
+            ("led", self.coalescer.led.load(Ordering::Relaxed)),
+            ("coalesced", self.coalescer.coalesced.load(Ordering::Relaxed)),
+        ] {
+            out.push(Sample::Counter {
+                name: "wham_coalescer_requests_total".into(),
+                help: "Coalescable requests by role (leader vs follower).".into(),
+                labels: label("role", role),
+                value: v,
+            });
+        }
+        out.push(Sample::Gauge {
+            name: "wham_coalescer_in_flight".into(),
+            help: "Coalesced computations currently executing.".into(),
+            labels: vec![],
+            value: self.coalescer.in_flight() as f64,
+        });
+        let db = self.db.stats();
+        let probes = db.hits + db.misses;
+        out.push(Sample::Gauge {
+            name: "wham_db_hit_rate".into(),
+            help: "Design-database probe hit rate since start (0 before any probe).".into(),
+            labels: vec![],
+            value: if probes == 0 { 0.0 } else { db.hits as f64 / probes as f64 },
+        });
+        out.push(Sample::Gauge {
+            name: "wham_db_entries".into(),
+            help: "Design points currently in the database.".into(),
+            labels: vec![],
+            value: db.entries as f64,
+        });
+        for ring in &self.latency {
+            if let Some(stat) = ring.stat() {
+                out.push(Sample::Summary {
+                    name: "wham_http_request_duration_ms".into(),
+                    help: "Request wall-clock per endpoint over the latest window \
+                           (includes error responses and coalesced followers)."
+                        .into(),
+                    labels: label("endpoint", &stat.endpoint),
+                    quantiles: vec![(0.5, stat.p50_ms), (0.95, stat.p95_ms)],
+                    count: stat.count,
+                });
+            }
+        }
+    }
+}
+
 /// The HTTP handler: one [`Session`] (cost backend + shared design
 /// database) per worker thread — PJRT clients are not `Sync`, the same
 /// policy as [`crate::coordinator`].
@@ -208,6 +296,7 @@ impl Handler for Api {
         let resp = match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/models") => Response::json(session.models().to_json()),
             ("GET", "/status") => Response::json(s.status().to_json()),
+            ("GET", "/metrics") => metrics_response(s),
             ("POST", "/search") => search_response(s, session, &req.body),
             ("POST", "/evaluate") => api_result(
                 EvaluateRequest::from_json_str(&req.body)
@@ -220,21 +309,39 @@ impl Handler for Api {
             ("POST", "/workloads") => api_result(upload_workload(&req.body)),
             (
                 _,
-                "/models" | "/status" | "/search" | "/evaluate" | "/common" | "/global"
-                | "/cluster" | "/workloads",
+                "/models" | "/status" | "/metrics" | "/search" | "/evaluate" | "/common"
+                | "/global" | "/cluster" | "/workloads",
             ) => Response::error(405, "wrong method for this endpoint"),
             _ => Response::error(
                 404,
-                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, POST /cluster, GET /status",
+                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, POST /cluster, GET /status, GET /metrics",
             ),
         };
-        // Latency window per known endpoint (coalesced followers count
-        // too — their wait is what a client experienced).
+        // Latency-window recording policy (pinned by the tests below):
+        // every request whose path names a known endpoint records its
+        // wall, regardless of outcome — 4xx/5xx responses count because
+        // the client waited for them, and coalesced followers count
+        // because their wait is what that client experienced (the leader
+        // and its followers each record once). Unknown paths are not
+        // tracked: their cardinality is attacker-controlled.
         if let Some(ring) = s.latency.iter().find(|r| r.name == req.path) {
             ring.note(t0.elapsed());
         }
         resp
     }
+}
+
+/// `GET /metrics` — the Prometheus text exposition: every registered
+/// process-global counter plus this instance's scrape-time samples.
+fn metrics_response(s: &ServiceState) -> Response {
+    // Touch the process-global counters so a scrape before any search
+    // still exposes every counter `/status.perf` reports (`get()`
+    // lazily registers them).
+    crate::cost::backend_rows_total();
+    crate::sched::evals_total();
+    crate::cluster::events_total();
+    let collect: &dyn Collect = s;
+    Response::prometheus(crate::telemetry::render_prometheus(&[collect]))
 }
 
 /// Map a typed API outcome onto an HTTP response.
@@ -324,4 +431,87 @@ fn cluster_response(s: &ServiceState, session: &mut Session, body: &str) -> Resp
         session.run_cluster(&plan, &mut NullSink).map(|r| r.to_json()).map_err(|e| e.message)
     });
     into_response(&outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn api() -> (Api, Session) {
+        let state =
+            Arc::new(ServiceState::new(Arc::new(DesignDb::in_memory()), BackendChoice::Native, 1));
+        let api = Api { state };
+        let session = api.make_ctx();
+        (api, session)
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            query: String::new(),
+            body: body.to_string(),
+        }
+    }
+
+    fn ring_count(state: &ServiceState, path: &str) -> u64 {
+        let ring = state.latency.iter().find(|r| r.name == path).expect("known endpoint");
+        ring.stat().map_or(0, |s| s.count)
+    }
+
+    /// Pins the latency-recording policy: error responses (400 and 405)
+    /// record under the endpoint the client hit, unknown paths are not
+    /// tracked at all, and successes record too. Coalesced followers
+    /// share this path structurally — `handle` notes the ring after
+    /// `Coalescer::run` returns for leaders and followers alike.
+    #[test]
+    fn latency_rings_record_errors_and_skip_unknown_paths() {
+        let (api, mut s) = api();
+        let r = api.handle(&mut s, &req("POST", "/search", "{"));
+        assert_eq!(r.status, 400, "malformed body: {}", r.body);
+        assert_eq!(ring_count(&api.state, "/search"), 1, "4xx responses must record");
+
+        let r = api.handle(&mut s, &req("DELETE", "/search", ""));
+        assert_eq!(r.status, 405);
+        assert_eq!(ring_count(&api.state, "/search"), 2, "405 responses must record");
+
+        let r = api.handle(&mut s, &req("GET", "/nope", ""));
+        assert_eq!(r.status, 404);
+        assert!(
+            api.state.latency.iter().all(|ring| ring.name != "/nope"),
+            "unknown paths must not grow the ring set"
+        );
+
+        let r = api.handle(&mut s, &req("GET", "/status", ""));
+        assert_eq!(r.status, 200);
+        assert_eq!(ring_count(&api.state, "/status"), 1);
+    }
+
+    #[test]
+    fn metrics_exposes_status_perf_counters_as_prometheus_text() {
+        let (api, mut s) = api();
+        let r = api.handle(&mut s, &req("POST", "/search", "{\"model\":\"bert-base\"}"));
+        assert_eq!(r.status, 200, "search failed: {}", r.body);
+
+        let m = api.handle(&mut s, &req("GET", "/metrics", ""));
+        assert_eq!(m.status, 200);
+        assert!(m.content_type.starts_with("text/plain"), "{}", m.content_type);
+        for name in [
+            "wham_backend_rows_total",
+            "wham_scheduler_evals_total",
+            "wham_db_hit_rate",
+            "wham_http_requests_total",
+            "wham_search_leader_computations_total{result=\"cold\"}",
+            "wham_http_request_duration_ms{endpoint=\"/search\",quantile=\"0.5\"}",
+        ] {
+            assert!(
+                m.body.lines().any(|l| l.starts_with(name)),
+                "missing {name} in exposition:\n{}",
+                m.body
+            );
+        }
+        // Scrapes record into their own ring (the body is rendered
+        // before the note, so a scrape never sees itself).
+        assert_eq!(ring_count(&api.state, "/metrics"), 1);
+    }
 }

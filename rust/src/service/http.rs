@@ -41,17 +41,33 @@ pub struct Request {
 pub struct Response {
     pub status: u16,
     pub body: String,
+    /// `Content-Type` header value. Everything in the API is JSON except
+    /// `GET /metrics`, which serves the Prometheus text exposition.
+    pub content_type: &'static str,
 }
 
 impl Response {
     /// 200 with a JSON body.
     pub fn json(body: impl Into<String>) -> Self {
-        Self { status: 200, body: body.into() }
+        Self { status: 200, body: body.into(), content_type: "application/json" }
+    }
+
+    /// 200 with a Prometheus text-exposition body (`GET /metrics`).
+    pub fn prometheus(body: impl Into<String>) -> Self {
+        Self {
+            status: 200,
+            body: body.into(),
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+        }
     }
 
     /// An error with a `{"error": ...}` JSON body.
     pub fn error(status: u16, msg: &str) -> Self {
-        Self { status, body: format!("{{\"error\":{}}}", crate::util::json::esc(msg)) }
+        Self {
+            status,
+            body: format!("{{\"error\":{}}}", crate::util::json::esc(msg)),
+            content_type: "application/json",
+        }
     }
 
     fn reason(&self) -> &'static str {
@@ -191,9 +207,10 @@ fn read_request(stream: &TcpStream) -> std::io::Result<Request> {
 
 fn write_response(mut stream: &TcpStream, resp: &Response) -> std::io::Result<()> {
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         resp.status,
         resp.reason(),
+        resp.content_type,
         resp.body.len()
     );
     stream.write_all(head.as_bytes())?;

@@ -86,7 +86,7 @@ pub fn serve_forever(addr: &str, opts: ServeOptions) -> anyhow::Result<()> {
         handle.state.db.stats().loaded,
     );
     println!(
-        "endpoints: GET /models  POST /search  POST /evaluate  POST /common  POST /global  POST /cluster  GET /status"
+        "endpoints: GET /models  POST /search  POST /evaluate  POST /common  POST /global  POST /cluster  GET /status  GET /metrics"
     );
     loop {
         std::thread::park();

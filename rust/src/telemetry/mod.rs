@@ -1,0 +1,35 @@
+//! `wham::telemetry` — structured tracing, the unified metrics
+//! registry, and the search flight recorder (std-only, zero-cost when
+//! disabled).
+//!
+//! Three layers, one module:
+//!
+//! * [`trace`] — RAII spans (`span!("mcr_probe", tc = c.tc)`) with
+//!   thread-local span stacks and a bounded, lock-free-indexed event
+//!   buffer serializing to Chrome-trace/Perfetto JSON. Enabled by
+//!   `--trace-out` on `wham search|global|cluster|serve`. The span
+//!   taxonomy covers the hot layers end to end: `annotate`,
+//!   `schedule`, `mcr`, `mcr_probe`, `mcr_gallop`, `prune_batch`,
+//!   `search_phase`, `global_stage`, `global_prune`,
+//!   `strategy_screen`, `event_sim`.
+//! * [`registry`] — named counters plus scrape-time gauges/summaries.
+//!   The formerly ad-hoc statics (`cost::backend_rows_total`,
+//!   `sched::evals_total`, `cluster::events_total`) register here, the
+//!   service's `GET /metrics` renders the Prometheus text exposition,
+//!   and the benches snapshot it into `BENCH_*.json`.
+//! * [`recorder`] — the flight recorder: per-iteration critical-path
+//!   attribution of the local search (conflicted op class, cores
+//!   granted, score delta, cache hit/miss) in a bounded ring, attached
+//!   to `SearchReply.explain` and printed by `wham trace explain`.
+//!
+//! Everything here *observes*; nothing feeds back into search
+//! decisions, so the bit-identical parity guarantees of the fast paths
+//! are untouched.
+
+pub mod recorder;
+pub mod registry;
+pub mod trace;
+
+pub use recorder::{ExplainRecord, FlightRecorder};
+pub use registry::{render_prometheus, snapshot_json, Collect, Counter, Sample};
+pub use trace::{span, Span};

@@ -1,0 +1,131 @@
+//! The search flight recorder: per-iteration critical-path attribution
+//! for the local (per-workload) search.
+//!
+//! The paper's efficiency claim is *why*-shaped — MCR steers core
+//! additions to the operators that actually conflict on the critical
+//! path. The engine records, for every `<TC-Dim, VC-Width>` it
+//! evaluates, which core classes were granted cores, which operator was
+//! the last critical conflict, what the point scored, and whether the
+//! design cache served it — into a bounded ring that rides
+//! [`crate::search::engine::SearchResult::explain`], surfaces as the
+//! optional `explain` section of a `SearchReply`, and prints via
+//! `wham trace explain`. Recording is a few dozen bytes per evaluated
+//! dims (bounded by [`FlightRecorder::DEFAULT_CAP`]) and never changes
+//! search outcomes.
+
+use std::collections::VecDeque;
+
+use crate::cost::Dims;
+
+/// One evaluated `<TC-Dim, VC-Width>` with its critical-path attribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExplainRecord {
+    /// The dims evaluated.
+    pub dims: Dims,
+    /// Score of the point under the search metric.
+    pub score: f64,
+    /// Best score over the whole search *after* this evaluation.
+    pub best: f64,
+    /// Whether this point raised the running best.
+    pub improved: bool,
+    /// Served by the eval cache / design DB (attribution fields below
+    /// are zero: no scheduler ran).
+    pub cache_hit: bool,
+    /// Greedy-scheduler (or B&B node) invocations this evaluation cost.
+    pub evals: u64,
+    /// Final `(num_tc, num_vc)` the MCR loop granted.
+    pub cores: (u64, u64),
+    /// Cores granted to resolve tensor / vector / fused-class conflicts
+    /// (fused grants add a whole TC+VC unit each).
+    pub grants: (u64, u64, u64),
+    /// Name of the last operator whose critical conflict MCR resolved.
+    pub conflict_op: Option<String>,
+}
+
+/// Bounded ring of [`ExplainRecord`]s: keeps the most recent `cap`
+/// entries and counts what it sheds.
+#[derive(Debug, Clone, Default)]
+pub struct FlightRecorder {
+    records: VecDeque<ExplainRecord>,
+    cap: usize,
+    dropped: usize,
+}
+
+impl FlightRecorder {
+    /// Default ring capacity — a full two-phase dimension search of the
+    /// Table-4 workloads evaluates fewer points than this, so the usual
+    /// case is a complete record.
+    pub const DEFAULT_CAP: usize = 256;
+
+    /// A recorder keeping the most recent `cap` records.
+    pub fn new(cap: usize) -> Self {
+        Self { records: VecDeque::with_capacity(cap.min(Self::DEFAULT_CAP)), cap, dropped: 0 }
+    }
+
+    /// Append, shedding the oldest record when full.
+    pub fn push(&mut self, r: ExplainRecord) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.records.len() == self.cap {
+            self.records.pop_front();
+            self.dropped += 1;
+        }
+        self.records.push_back(r);
+    }
+
+    /// Records in evaluation order (oldest surviving first).
+    pub fn records(&self) -> impl Iterator<Item = &ExplainRecord> {
+        self.records.iter()
+    }
+
+    /// Records shed by the ring (0 = the log is complete).
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Consume into a plain vector (evaluation order).
+    pub fn into_records(self) -> Vec<ExplainRecord> {
+        self.records.into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u64) -> ExplainRecord {
+        ExplainRecord {
+            dims: Dims { tc_x: i, tc_y: i, vc_w: i },
+            score: i as f64,
+            best: i as f64,
+            improved: true,
+            cache_hit: false,
+            evals: i,
+            cores: (1, 1),
+            grants: (0, 0, 0),
+            conflict_op: None,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_most_recent_and_counts_shed() {
+        let mut fr = FlightRecorder::new(2);
+        fr.push(rec(1));
+        fr.push(rec(2));
+        fr.push(rec(3));
+        assert_eq!(fr.dropped(), 1);
+        let kept: Vec<u64> = fr.records().map(|r| r.dims.tc_x).collect();
+        assert_eq!(kept, vec![2, 3]);
+        assert_eq!(fr.into_records().len(), 2);
+    }
+
+    #[test]
+    fn zero_cap_records_nothing() {
+        let mut fr = FlightRecorder::new(0);
+        fr.push(rec(1));
+        assert_eq!(fr.dropped(), 1);
+        assert_eq!(fr.records().count(), 0);
+    }
+}

@@ -1,0 +1,307 @@
+//! The unified metrics registry: every process-wide counter the repo
+//! used to keep as a loose `static AtomicU64` registers itself here on
+//! first touch, so one scrape path ([`render_prometheus`]) and one
+//! snapshot path ([`snapshot_json`], used by the benches) see them all.
+//!
+//! Design constraints, in order:
+//! * **Hot-path cost is one relaxed atomic op.** [`Counter::add`] is
+//!   called once per greedy-scheduler run; after the one-time
+//!   registration (`Once` fast path is a single load) it is exactly the
+//!   `fetch_add` the old ad-hoc statics paid.
+//! * **No global init order.** Counters are `const`-constructed statics
+//!   that lazily self-register — a module never has to call into the
+//!   registry at startup, and a counter that is never touched simply
+//!   does not appear in the scrape.
+//! * **Scrape-time values stay scrape-time.** Derived gauges (DB
+//!   hit-rate) and quantile summaries (`LatencyRing` p50/p95) are not
+//!   stored here; their owners implement [`Collect`] and are passed to
+//!   [`render_prometheus`] per scrape, which keeps per-instance service
+//!   state out of the process-global namespace (tests start several
+//!   services in one process).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+use crate::util::json::Obj;
+
+/// A process-wide monotonically increasing counter. Declare as a
+/// `static`; it registers itself in the global registry on first use.
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    cell: AtomicU64,
+    registered: Once,
+}
+
+impl Counter {
+    /// A new unregistered counter (registration happens on first touch).
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, cell: AtomicU64::new(0), registered: Once::new() }
+    }
+
+    /// Prometheus metric name (`wham_*_total`).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// One-line help text for the exposition format.
+    pub fn help(&self) -> &'static str {
+        self.help
+    }
+
+    /// Add `n` (relaxed; the counters are statistics, not synchronization).
+    pub fn add(&'static self, n: u64) {
+        self.registered.call_once(|| register(self));
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&'static self) -> u64 {
+        self.registered.call_once(|| register(self));
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// One scrape-time sample contributed by a [`Collect`] implementor.
+#[derive(Debug, Clone)]
+pub enum Sample {
+    /// A monotone counter owned outside the registry (e.g. per-service
+    /// request totals).
+    Counter { name: String, help: String, labels: Vec<(String, String)>, value: u64 },
+    /// A point-in-time value (e.g. the design-DB hit rate).
+    Gauge { name: String, help: String, labels: Vec<(String, String)>, value: f64 },
+    /// A quantile summary (the histogram-shaped export of
+    /// [`crate::service::api::LatencyRing`]): `(quantile, value)` pairs
+    /// plus an observation count.
+    Summary {
+        name: String,
+        help: String,
+        labels: Vec<(String, String)>,
+        quantiles: Vec<(f64, f64)>,
+        count: u64,
+    },
+}
+
+/// Scrape-time metric source. Owners of non-static state (the service)
+/// implement this and hand themselves to [`render_prometheus`].
+pub trait Collect {
+    /// Append this source's samples.
+    fn collect(&self, out: &mut Vec<Sample>);
+}
+
+fn registry() -> &'static Mutex<Vec<&'static Counter>> {
+    static REGISTRY: OnceLock<Mutex<Vec<&'static Counter>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn register(c: &'static Counter) {
+    let mut v = registry().lock().unwrap();
+    debug_assert!(
+        v.iter().all(|e| e.name != c.name),
+        "duplicate metric name registered: {}",
+        c.name
+    );
+    v.push(c);
+}
+
+/// Snapshot of every registered counter, sorted by name.
+pub fn counters() -> Vec<(&'static str, u64)> {
+    let mut v: Vec<(&'static str, u64)> =
+        registry().lock().unwrap().iter().map(|c| (c.name, c.cell.load(Ordering::Relaxed))).collect();
+    v.sort_unstable_by_key(|&(n, _)| n);
+    v
+}
+
+/// Value of one registered counter by name (test / bench convenience).
+pub fn counter_value(name: &str) -> Option<u64> {
+    registry()
+        .lock()
+        .unwrap()
+        .iter()
+        .find(|c| c.name == name)
+        .map(|c| c.cell.load(Ordering::Relaxed))
+}
+
+fn label_str(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}={}", prom_quote(v))).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Quote a label value per the exposition format (`\\`, `\"`, `\n`).
+fn prom_quote(v: &str) -> String {
+    let mut out = String::with_capacity(v.len() + 2);
+    out.push('"');
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Escape a HELP line (`\\` and newline only, per the format spec).
+fn prom_help(h: &str) -> String {
+    h.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Format a sample value; Prometheus text accepts integer or float forms.
+fn prom_num(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render the Prometheus text exposition: every registered counter
+/// (sorted by name) followed by the scrape-time samples from `extra`.
+/// `# HELP`/`# TYPE` headers are emitted once per metric name even when
+/// several labeled sample lines share it (the `LatencyRing` summaries).
+pub fn render_prometheus(extra: &[&dyn Collect]) -> String {
+    let mut out = String::new();
+    {
+        let reg = registry().lock().unwrap();
+        let mut sorted: Vec<&'static Counter> = reg.iter().copied().collect();
+        sorted.sort_unstable_by_key(|c| c.name);
+        for c in sorted {
+            out.push_str(&format!("# HELP {} {}\n", c.name, prom_help(c.help)));
+            out.push_str(&format!("# TYPE {} counter\n", c.name));
+            out.push_str(&format!("{} {}\n", c.name, c.cell.load(Ordering::Relaxed)));
+        }
+    }
+    let mut samples = Vec::new();
+    for src in extra {
+        src.collect(&mut samples);
+    }
+    let mut seen_header: Vec<String> = Vec::new();
+    let mut header = |out: &mut String, name: &str, help: &str, kind: &str| {
+        if !seen_header.iter().any(|h| h == name) {
+            out.push_str(&format!("# HELP {name} {}\n", prom_help(help)));
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            seen_header.push(name.to_string());
+        }
+    };
+    for s in &samples {
+        match s {
+            Sample::Counter { name, help, labels, value } => {
+                header(&mut out, name, help, "counter");
+                out.push_str(&format!("{name}{} {value}\n", label_str(labels)));
+            }
+            Sample::Gauge { name, help, labels, value } => {
+                header(&mut out, name, help, "gauge");
+                out.push_str(&format!("{name}{} {}\n", label_str(labels), prom_num(*value)));
+            }
+            Sample::Summary { name, help, labels, quantiles, count } => {
+                header(&mut out, name, help, "summary");
+                for &(q, v) in quantiles {
+                    let mut ls = labels.clone();
+                    ls.push(("quantile".to_string(), format!("{q}")));
+                    out.push_str(&format!("{name}{} {}\n", label_str(&ls), prom_num(v)));
+                }
+                out.push_str(&format!("{name}_count{} {count}\n", label_str(labels)));
+            }
+        }
+    }
+    out
+}
+
+/// JSON snapshot of every registered counter (sorted by name) — the
+/// benches embed this in their `BENCH_*.json` so counter trajectories
+/// ride the existing artifacts.
+pub fn snapshot_json() -> String {
+    let mut o = Obj::new();
+    for (name, value) in counters() {
+        o = o.u64(name, value);
+    }
+    o.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static TEST_A: Counter = Counter::new("wham_test_registry_a_total", "Test counter A.");
+    static TEST_B: Counter = Counter::new("wham_test_registry_b_total", "Test counter B.");
+
+    #[test]
+    fn counters_register_on_first_touch_and_accumulate() {
+        TEST_A.add(2);
+        TEST_A.add(3);
+        assert_eq!(TEST_A.get(), 5);
+        assert_eq!(counter_value("wham_test_registry_a_total"), Some(5));
+    }
+
+    #[test]
+    fn exposition_has_one_header_per_metric_and_sorted_counters() {
+        TEST_A.add(1);
+        TEST_B.add(1);
+        struct Extra;
+        impl Collect for Extra {
+            fn collect(&self, out: &mut Vec<Sample>) {
+                out.push(Sample::Gauge {
+                    name: "wham_test_gauge".into(),
+                    help: "A gauge.".into(),
+                    labels: vec![],
+                    value: 0.5,
+                });
+                out.push(Sample::Summary {
+                    name: "wham_test_summary_seconds".into(),
+                    help: "A summary.".into(),
+                    labels: vec![("endpoint".into(), "/a".into())],
+                    quantiles: vec![(0.5, 0.001), (0.95, 0.002)],
+                    count: 7,
+                });
+                out.push(Sample::Summary {
+                    name: "wham_test_summary_seconds".into(),
+                    help: "A summary.".into(),
+                    labels: vec![("endpoint".into(), "/b".into())],
+                    quantiles: vec![(0.5, 0.003)],
+                    count: 1,
+                });
+            }
+        }
+        let text = render_prometheus(&[&Extra]);
+        assert!(text.contains("# TYPE wham_test_registry_a_total counter"), "{text}");
+        assert!(text.contains("# HELP wham_test_gauge A gauge.\n# TYPE wham_test_gauge gauge"));
+        assert!(text.contains("wham_test_gauge 0.5\n"));
+        assert!(text
+            .contains("wham_test_summary_seconds{endpoint=\"/a\",quantile=\"0.5\"} 0.001\n"));
+        assert!(text.contains("wham_test_summary_seconds_count{endpoint=\"/b\"} 1\n"));
+        // One TYPE header per metric name, even across labeled series.
+        let type_lines: Vec<&str> =
+            text.lines().filter(|l| l.starts_with("# TYPE wham_test_summary_seconds ")).collect();
+        assert_eq!(type_lines.len(), 1, "{text}");
+        // No duplicate metric names among TYPE headers.
+        let mut names: Vec<&str> =
+            text.lines().filter_map(|l| l.strip_prefix("# TYPE ")).map(|l| l.split(' ').next().unwrap()).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(before, names.len());
+    }
+
+    #[test]
+    fn snapshot_json_parses_and_includes_registered_counters() {
+        TEST_A.add(1);
+        let v = crate::util::json::parse(&snapshot_json()).unwrap();
+        assert!(v.get("wham_test_registry_a_total").and_then(|x| x.as_u64()).unwrap() >= 1);
+    }
+
+    #[test]
+    fn label_quoting_escapes_specials() {
+        assert_eq!(prom_quote("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(prom_num(f64::INFINITY), "+Inf");
+    }
+}

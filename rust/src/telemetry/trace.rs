@@ -1,0 +1,311 @@
+//! Span-based tracing with Chrome-trace/Perfetto output.
+//!
+//! `let _s = span!("mcr_probe", tc = cand.tc);` opens an RAII span: the
+//! guard pushes onto a thread-local span stack (so nesting depth is
+//! queryable and Perfetto renders proper flame nesting per thread) and,
+//! on drop, records one complete event into a process-global bounded
+//! buffer. Serialization ([`chrome_json`] / [`write_to`]) produces the
+//! Chrome trace-event JSON array the per-op `wham trace` command already
+//! emits ([`crate::report::trace::chrome_trace`]), so both load in
+//! <https://ui.perfetto.dev>.
+//!
+//! Cost model:
+//! * **Disabled (default):** [`span`] is one relaxed atomic load and a
+//!   branch — the guard holds `None`, `arg` and `Drop` no-op. The <2%
+//!   hot-path budget of the observability PR rides on this.
+//! * **Enabled:** two `Instant::now()` calls plus a lock-free buffer
+//!   append — the write index is reserved with a single `fetch_add`, and
+//!   the payload store takes an uncontended per-slot lock (no thread
+//!   ever blocks on another's slot). When the buffer is full, events
+//!   are dropped and counted in `wham_trace_events_dropped_total`
+//!   rather than grown without bound.
+//!
+//! Tracing never changes search outcomes: spans only observe, and the
+//! parity suites (`hotpath_parity`, `parallel_*_match_serial`) run with
+//! it both off and on in `rust/tests/telemetry.rs`.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::registry::Counter;
+use crate::util::json::{esc, Obj};
+
+/// Buffer capacity in events (~6 MiB fully populated). A smoke search
+/// emits a few thousand events; deep traces drop the tail and say so.
+const CAP: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+/// Events recorded into the trace buffer since process start.
+static EVENTS_RECORDED: Counter =
+    Counter::new("wham_trace_events_total", "Trace events recorded into the span buffer.");
+/// Events dropped because the bounded buffer was full.
+static EVENTS_DROPPED: Counter = Counter::new(
+    "wham_trace_events_dropped_total",
+    "Trace events dropped because the bounded span buffer was full.",
+);
+
+#[derive(Debug, Clone)]
+struct Event {
+    name: &'static str,
+    tid: u32,
+    ts_us: u64,
+    dur_us: u64,
+    /// Pre-rendered `"key":"value"` pairs, comma-joined (empty = none).
+    args: String,
+}
+
+struct Buffer {
+    /// Slot locks are uncontended by construction: each index is owned
+    /// by exactly the thread that reserved it from `cursor`.
+    slots: Vec<Mutex<Option<Event>>>,
+    cursor: AtomicUsize,
+}
+
+fn buffer() -> &'static Buffer {
+    static BUFFER: OnceLock<Buffer> = OnceLock::new();
+    BUFFER.get_or_init(|| Buffer {
+        slots: (0..CAP).map(|_| Mutex::new(None)).collect(),
+        cursor: AtomicUsize::new(0),
+    })
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static TID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    static STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Turn tracing on (idempotent). Allocates the buffer and pins the
+/// trace epoch on first call.
+pub fn enable() {
+    epoch();
+    buffer();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn tracing off; already-recorded events stay in the buffer.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Whether spans are currently being recorded.
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Current span-nesting depth on this thread (0 when tracing is off or
+/// no span is open) — the `Progress::depth` source.
+pub fn depth() -> usize {
+    if !is_enabled() {
+        return 0;
+    }
+    STACK.with(|s| s.borrow().len())
+}
+
+/// Drop all buffered events (test isolation; callers serialize).
+pub fn reset() {
+    let b = buffer();
+    let n = b.cursor.swap(0, Ordering::SeqCst).min(CAP);
+    for slot in &b.slots[..n] {
+        *slot.lock().unwrap() = None;
+    }
+}
+
+fn record(ev: Event) {
+    let b = buffer();
+    let i = b.cursor.fetch_add(1, Ordering::Relaxed);
+    if i < CAP {
+        *b.slots[i].lock().unwrap() = Some(ev);
+        EVENTS_RECORDED.add(1);
+    } else {
+        EVENTS_DROPPED.add(1);
+    }
+}
+
+/// An open span. Created by [`span`] (or the `span!` macro); records one
+/// complete trace event when dropped. Holds `None` when tracing is off.
+pub struct Span(Option<ActiveSpan>);
+
+struct ActiveSpan {
+    name: &'static str,
+    start: Instant,
+    args: String,
+}
+
+/// Open a span named `name` on this thread. Binding matters:
+/// `let _span = span("x");` keeps it open for the scope — a bare `_`
+/// pattern would drop it immediately.
+pub fn span(name: &'static str) -> Span {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span(None);
+    }
+    STACK.with(|s| s.borrow_mut().push(name));
+    Span(Some(ActiveSpan { name, start: Instant::now(), args: String::new() }))
+}
+
+impl Span {
+    /// Attach a key/value attribute (rendered into the event's `args`
+    /// object). No-op — including the `Display` formatting — when
+    /// tracing is off.
+    pub fn arg(mut self, key: &str, value: impl std::fmt::Display) -> Self {
+        if let Some(a) = self.0.as_mut() {
+            if !a.args.is_empty() {
+                a.args.push(',');
+            }
+            a.args.push_str(&esc(key));
+            a.args.push(':');
+            a.args.push_str(&esc(&value.to_string()));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(a) = self.0.take() else { return };
+        STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+        let dur = a.start.elapsed();
+        let ts = a.start.saturating_duration_since(epoch());
+        record(Event {
+            name: a.name,
+            tid: TID.with(|t| *t),
+            ts_us: ts.as_micros() as u64,
+            dur_us: dur.as_micros() as u64,
+            args: a.args,
+        });
+    }
+}
+
+/// Open a span: `span!("name")` or `span!("name", key = value, ...)`.
+/// Attribute values are formatted with `Display`, only when tracing is
+/// enabled.
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {
+        $crate::telemetry::trace::span($name)
+    };
+    ($name:literal, $($k:ident = $v:expr),+ $(,)?) => {
+        $crate::telemetry::trace::span($name)$(.arg(stringify!($k), $v))+
+    };
+}
+
+/// Snapshot of the buffered events in record order.
+fn snapshot() -> Vec<Event> {
+    let b = buffer();
+    let n = b.cursor.load(Ordering::SeqCst).min(CAP);
+    b.slots[..n].iter().filter_map(|s| s.lock().unwrap().clone()).collect()
+}
+
+/// Number of events currently buffered.
+pub fn event_count() -> usize {
+    let b = buffer();
+    b.cursor.load(Ordering::SeqCst).min(CAP)
+}
+
+/// Serialize the buffer as a Chrome trace-event JSON array (complete
+/// `"ph":"X"` events; open <https://ui.perfetto.dev> and drop the file
+/// in). Same top-level shape as [`crate::report::trace::chrome_trace`].
+pub fn chrome_json() -> String {
+    let events = snapshot();
+    let mut out = String::with_capacity(events.len() * 96 + 2);
+    out.push('[');
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let mut o = Obj::new()
+            .str("name", e.name)
+            .str("cat", "wham")
+            .str("ph", "X")
+            .u64("ts", e.ts_us)
+            .u64("dur", e.dur_us)
+            .u64("pid", 1)
+            .u64("tid", u64::from(e.tid));
+        if !e.args.is_empty() {
+            o = o.raw("args", &format!("{{{}}}", e.args));
+        }
+        out.push_str(&o.finish());
+    }
+    out.push(']');
+    out
+}
+
+/// Write [`chrome_json`] to `path` (the `--trace-out` sink).
+pub fn write_to(path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, chrome_json())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The buffer and the enabled flag are process-global; tests in this
+    // module (and the integration suite) serialize through this lock.
+    static GUARD: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = GUARD.lock().unwrap();
+        disable();
+        reset();
+        {
+            let _s = span("never").arg("k", 1);
+        }
+        assert_eq!(event_count(), 0);
+        assert_eq!(depth(), 0);
+    }
+
+    #[test]
+    fn spans_nest_and_serialize() {
+        let _g = GUARD.lock().unwrap();
+        enable();
+        reset();
+        {
+            let _outer = span("outer").arg("model", "bert");
+            assert_eq!(depth(), 1);
+            {
+                let _inner = crate::span!("inner", k = 42);
+                assert_eq!(depth(), 2);
+            }
+            assert_eq!(depth(), 1);
+        }
+        disable();
+        assert_eq!(event_count(), 2);
+        let v = crate::util::json::parse(&chrome_json()).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        // Inner drops first; both are complete events on the same tid.
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("inner"));
+        assert_eq!(arr[1].get("name").unwrap().as_str(), Some("outer"));
+        assert_eq!(arr[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(arr[0].get("tid").unwrap().as_u64(), arr[1].get("tid").unwrap().as_u64());
+        assert_eq!(
+            arr[1].get("args").unwrap().get("model").unwrap().as_str(),
+            Some("bert")
+        );
+    }
+
+    #[test]
+    fn overflow_drops_instead_of_growing() {
+        let _g = GUARD.lock().unwrap();
+        enable();
+        reset();
+        // Simulate a full buffer by pushing the cursor to the cap.
+        buffer().cursor.store(CAP, Ordering::SeqCst);
+        let before = EVENTS_DROPPED.get();
+        drop(span("overflow"));
+        assert_eq!(EVENTS_DROPPED.get(), before + 1);
+        disable();
+        reset();
+    }
+}

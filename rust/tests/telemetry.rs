@@ -1,0 +1,245 @@
+//! Integration tests of `wham::telemetry`: span nesting across scoped
+//! threads, the Prometheus text exposition, `/metrics` vs `/status`
+//! counter agreement on a live service, the Chrome-trace schema of a
+//! smoke search, and outcome parity with tracing on vs off.
+//!
+//! The trace buffer, the enabled flag, and the metrics registry are
+//! process-global; every test here serializes through [`GUARD`].
+
+use std::net::TcpListener;
+use std::sync::Mutex;
+
+use wham::api::SearchRequest;
+use wham::api::Session;
+use wham::coordinator::BackendChoice;
+use wham::cost::native::NativeCost;
+use wham::service::http::request;
+use wham::service::{start, ServeOptions, ServerHandle};
+use wham::telemetry::{render_prometheus, trace, Collect, Sample};
+use wham::util::json::{parse, JsonValue};
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking test must not wedge the rest of the suite.
+    GUARD.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn session() -> Session {
+    Session::with_backend(Box::new(NativeCost))
+}
+
+#[test]
+fn spans_nest_per_thread_under_scoped_threads() {
+    let _g = lock();
+    trace::reset();
+    trace::enable();
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(|| {
+                let _outer = trace::span("outer_scoped").arg("who", "telemetry-test");
+                assert_eq!(trace::depth(), 1);
+                {
+                    let _inner = trace::span("inner_scoped");
+                    assert_eq!(trace::depth(), 2);
+                }
+                assert_eq!(trace::depth(), 1);
+            });
+        }
+    });
+    trace::disable();
+
+    let v = parse(&trace::chrome_json()).unwrap();
+    let events = v.as_arr().unwrap();
+    assert_eq!(events.len(), 4, "two spans per thread, two threads");
+    let named = |n: &str| -> Vec<&JsonValue> {
+        events.iter().filter(|e| e.get("name").unwrap().as_str() == Some(n)).collect()
+    };
+    let outers = named("outer_scoped");
+    let inners = named("inner_scoped");
+    assert_eq!(outers.len(), 2);
+    assert_eq!(inners.len(), 2);
+    // Each thread serializes under its own tid, and the two threads'
+    // stacks are independent.
+    let tid = |e: &JsonValue| e.get("tid").unwrap().as_u64().unwrap();
+    assert_ne!(tid(outers[0]), tid(outers[1]), "threads must get distinct tids");
+    for inner in &inners {
+        let outer = outers
+            .iter()
+            .find(|o| tid(o) == tid(inner))
+            .expect("every inner span has an outer on its own tid");
+        // Complete events: the inner opened after (and dropped before)
+        // its outer, so it is recorded first and starts no earlier.
+        let ts = |e: &JsonValue| e.get("ts").unwrap().as_u64().unwrap();
+        assert!(ts(inner) >= ts(outer), "inner starts inside outer");
+        assert_eq!(inner.get("args"), None, "no args were attached to inner");
+        assert_eq!(
+            outer.get("args").unwrap().get("who").unwrap().as_str(),
+            Some("telemetry-test")
+        );
+    }
+}
+
+#[test]
+fn prometheus_exposition_matches_golden_block() {
+    let _g = lock();
+    struct Golden;
+    impl Collect for Golden {
+        fn collect(&self, out: &mut Vec<Sample>) {
+            out.push(Sample::Gauge {
+                name: "wham_golden_hit_rate".into(),
+                help: "Fraction of probes answered from cache.".into(),
+                labels: vec![],
+                value: 0.25,
+            });
+            out.push(Sample::Summary {
+                name: "wham_golden_latency_ms".into(),
+                help: "Request wall-clock.".into(),
+                labels: vec![("endpoint".into(), "/search".into())],
+                quantiles: vec![(0.5, 1.5), (0.95, 9.0)],
+                count: 100,
+            });
+        }
+    }
+    let text = render_prometheus(&[&Golden]);
+    // The scrape-time section renders contiguously after the registered
+    // counters, so the whole block can be pinned verbatim.
+    let golden = "# HELP wham_golden_hit_rate Fraction of probes answered from cache.\n\
+                  # TYPE wham_golden_hit_rate gauge\n\
+                  wham_golden_hit_rate 0.25\n\
+                  # HELP wham_golden_latency_ms Request wall-clock.\n\
+                  # TYPE wham_golden_latency_ms summary\n\
+                  wham_golden_latency_ms{endpoint=\"/search\",quantile=\"0.5\"} 1.5\n\
+                  wham_golden_latency_ms{endpoint=\"/search\",quantile=\"0.95\"} 9\n\
+                  wham_golden_latency_ms_count{endpoint=\"/search\"} 100\n";
+    assert!(text.contains(golden), "exposition:\n{text}");
+    assert_no_duplicate_metric_names(&text);
+}
+
+/// Every metric name may carry exactly one `# TYPE` header.
+fn assert_no_duplicate_metric_names(text: &str) {
+    let mut names: Vec<&str> = text
+        .lines()
+        .filter_map(|l| l.strip_prefix("# TYPE "))
+        .map(|l| l.split(' ').next().unwrap())
+        .collect();
+    let total = names.len();
+    assert!(total > 0, "exposition must not be empty");
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(total, names.len(), "duplicate metric names in exposition:\n{text}");
+}
+
+fn boot() -> ServerHandle {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    start(listener, ServeOptions { workers: 2, db_path: None, backend: BackendChoice::Native })
+        .unwrap()
+}
+
+/// Value of an unlabeled metric in an exposition document.
+fn metric_value(text: &str, name: &str) -> Option<f64> {
+    text.lines().filter(|l| !l.starts_with('#')).find_map(|l| {
+        let (n, v) = l.split_once(' ')?;
+        (n == name).then(|| v.trim().parse().ok())?
+    })
+}
+
+#[test]
+fn metrics_scrape_agrees_with_status_counters() {
+    let _g = lock();
+    let h = boot();
+    let (status, _) = request(h.addr, "POST", "/search", Some("{\"model\":\"bert-base\"}")).unwrap();
+    assert_eq!(status, 200);
+
+    let (code, st) = request(h.addr, "GET", "/status", None).unwrap();
+    assert_eq!(code, 200);
+    let st = parse(&st).unwrap();
+    let (code, text) = request(h.addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(code, 200);
+    assert!(!text.is_empty());
+    assert_no_duplicate_metric_names(&text);
+
+    // Process-global counters: `/metrics` must report exactly what
+    // `/status.perf` reported (nothing ran between the two scrapes —
+    // GUARD serializes this binary, and the service is otherwise idle).
+    let perf = st.get("perf").unwrap();
+    for (metric, field) in [
+        ("wham_backend_rows_total", "backend_rows_total"),
+        ("wham_scheduler_evals_total", "scheduler_evals_total"),
+        ("wham_cluster_sim_events_total", "cluster_sim_events_total"),
+    ] {
+        let scraped = metric_value(&text, metric)
+            .unwrap_or_else(|| panic!("{metric} missing from exposition:\n{text}"));
+        let reported = perf.get(field).unwrap().as_u64().unwrap() as f64;
+        assert_eq!(scraped, reported, "{metric} vs perf.{field}");
+    }
+    // Instance-local: the /metrics request itself is the only request
+    // after the /status snapshot, so the totals differ by exactly one.
+    let reported_requests = st.get("requests").unwrap().as_u64().unwrap() as f64;
+    assert_eq!(metric_value(&text, "wham_http_requests_total"), Some(reported_requests + 1.0));
+    // The per-endpoint latency summaries ride along.
+    assert!(
+        text.contains("wham_http_request_duration_ms{endpoint=\"/search\",quantile=\"0.5\"}"),
+        "missing /search latency summary:\n{text}"
+    );
+    // And the wire shape of /status itself is untouched by all of this:
+    // the perf block still carries exactly its pre-telemetry fields.
+    for field in
+        ["backend_rows_total", "scheduler_evals_total", "cluster_sim_events_total", "db_hit_rate"]
+    {
+        assert!(perf.get(field).is_some(), "perf.{field} missing from /status");
+    }
+}
+
+#[test]
+fn smoke_search_trace_file_covers_the_span_taxonomy() {
+    let _g = lock();
+    trace::reset();
+    trace::enable();
+    let reply = session().search(&SearchRequest::new("bert-base")).unwrap();
+    trace::disable();
+    assert!(reply.scheduler_evals > 0, "smoke search must be cold");
+
+    let path = std::env::temp_dir()
+        .join(format!("wham-telemetry-smoke-{}.json", std::process::id()));
+    trace::write_to(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let v = parse(&text).unwrap();
+    let events = v.as_arr().expect("chrome trace is a top-level array");
+    assert!(!events.is_empty());
+    for e in events {
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"), "complete events only: {e:?}");
+        assert_eq!(e.get("cat").unwrap().as_str(), Some("wham"));
+        assert_eq!(e.get("pid").unwrap().as_u64(), Some(1));
+        assert!(e.get("tid").unwrap().as_u64().unwrap() >= 1);
+        assert!(e.get("name").unwrap().as_str().is_some());
+        assert!(e.get("ts").unwrap().as_u64().is_some());
+        assert!(e.get("dur").unwrap().as_u64().is_some());
+    }
+    let names: Vec<&str> =
+        events.iter().filter_map(|e| e.get("name").unwrap().as_str()).collect();
+    for required in ["annotate", "schedule", "mcr", "mcr_probe", "prune_batch", "search_phase"] {
+        assert!(
+            names.contains(&required),
+            "span {required:?} missing from smoke-search trace; saw {names:?}"
+        );
+    }
+}
+
+#[test]
+fn tracing_does_not_change_search_outcomes() {
+    let _g = lock();
+    trace::disable();
+    let off = session().search(&SearchRequest::new("resnet18")).unwrap();
+    trace::reset();
+    trace::enable();
+    let on = session().search(&SearchRequest::new("resnet18")).unwrap();
+    trace::disable();
+    assert!(trace::event_count() > 0, "enabled run must have recorded spans");
+    assert_eq!(off.best.config.display(), on.best.config.display());
+    assert_eq!(off.best.score, on.best.score, "tracing must not perturb scores");
+    assert_eq!(off.dims_evaluated, on.dims_evaluated);
+    assert_eq!(off.scheduler_evals, on.scheduler_evals);
+}
