@@ -46,7 +46,12 @@ fn main() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let h = start(
         listener,
-        ServeOptions { workers: 8, db_path: None, backend: BackendChoice::Native },
+        ServeOptions {
+            workers: 8,
+            db_path: None,
+            backend: BackendChoice::Native,
+            ..Default::default()
+        },
     )
     .unwrap();
     let body = format!("{{\"model\":\"{model}\"}}");

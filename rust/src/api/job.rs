@@ -1,0 +1,527 @@
+//! Typed requests and replies for the async job tier ([`crate::jobs`]).
+//!
+//! A job wraps one of the long-running mining requests — `search`,
+//! `common`, `global`, or `cluster` — behind `POST /jobs`: the service
+//! answers with an id immediately and runs the work on a dispatcher
+//! thread, so clients poll `GET /jobs/:id` or stream `GET
+//! /jobs/:id/events` instead of holding an HTTP connection for the
+//! whole search. The wire shapes here follow the [`crate::api`]
+//! conventions exactly: builders for library callers, `from_args` for
+//! the CLI, and a symmetric [`ToJson`]/[`FromJson`] codec shared by
+//! `wham client` and the server.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::api::error::ApiError;
+use crate::api::plan::{ClusterPlan, CommonPlan, GlobalPlan, SearchPlan};
+use crate::api::request::{ClusterRequest, CommonRequest, GlobalRequest, SearchRequest};
+use crate::api::wire::{opt_str, req_str, FromJson, ToJson};
+use crate::util::cli::Args;
+use crate::util::fnv::Fnv;
+use crate::util::json::{self, JsonValue, Obj};
+
+/// Job-key namespace tag ('j'), keeping job coalescing keys disjoint
+/// from the synchronous per-kind namespaces in [`crate::api::plan`].
+const NS_JOB: u64 = 0x6a;
+
+/// Clients that do not identify themselves share one quota bucket.
+pub const ANON_CLIENT: &str = "anon";
+
+/// Which long-running request a job wraps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobKind {
+    Search,
+    Common,
+    Global,
+    Cluster,
+}
+
+impl JobKind {
+    /// Wire/CLI label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobKind::Search => "search",
+            JobKind::Common => "common",
+            JobKind::Global => "global",
+            JobKind::Cluster => "cluster",
+        }
+    }
+}
+
+impl fmt::Display for JobKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl FromStr for JobKind {
+    type Err = ApiError;
+    fn from_str(s: &str) -> Result<Self, ApiError> {
+        match s {
+            "search" => Ok(JobKind::Search),
+            "common" => Ok(JobKind::Common),
+            "global" => Ok(JobKind::Global),
+            "cluster" => Ok(JobKind::Cluster),
+            other => Err(ApiError::invalid(format!(
+                "unknown job kind {other:?} (expected search|common|global|cluster)"
+            ))),
+        }
+    }
+}
+
+/// Lifecycle of a job. Transitions are `Queued → Running → {Done,
+/// Failed, Cancelled}`, with `Running → Queued` on a transient failure
+/// (retry with backoff) or a crash-interrupted attempt found during
+/// write-ahead-log replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    /// Wire label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// A terminal job never runs again (its live progress channel is
+    /// gone; watchers are served from the store).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+impl fmt::Display for JobState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl FromStr for JobState {
+    type Err = ApiError;
+    fn from_str(s: &str) -> Result<Self, ApiError> {
+        match s {
+            "queued" => Ok(JobState::Queued),
+            "running" => Ok(JobState::Running),
+            "done" => Ok(JobState::Done),
+            "failed" => Ok(JobState::Failed),
+            "cancelled" => Ok(JobState::Cancelled),
+            other => Err(ApiError::invalid(format!("unknown job state {other:?}"))),
+        }
+    }
+}
+
+/// The typed inner request a job carries.
+#[derive(Debug, Clone)]
+pub enum JobSpec {
+    Search(SearchRequest),
+    Common(CommonRequest),
+    Global(GlobalRequest),
+    Cluster(ClusterRequest),
+}
+
+impl JobSpec {
+    pub fn kind(&self) -> JobKind {
+        match self {
+            JobSpec::Search(_) => JobKind::Search,
+            JobSpec::Common(_) => JobKind::Common,
+            JobSpec::Global(_) => JobKind::Global,
+            JobSpec::Cluster(_) => JobKind::Cluster,
+        }
+    }
+
+    fn inner_json(&self) -> String {
+        match self {
+            JobSpec::Search(r) => r.to_json(),
+            JobSpec::Common(r) => r.to_json(),
+            JobSpec::Global(r) => r.to_json(),
+            JobSpec::Cluster(r) => r.to_json(),
+        }
+    }
+}
+
+/// `POST /jobs` body: `{"kind":"search","client":"ci","request":{...}}`.
+/// `kind` defaults to `"search"`, `client` to [`ANON_CLIENT`]; the
+/// `request` object is the same body the synchronous endpoint of that
+/// kind accepts.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub client: String,
+    pub spec: JobSpec,
+}
+
+impl JobRequest {
+    /// A search job for `model` — the common case, used by tests and
+    /// library callers.
+    pub fn search(model: &str) -> Self {
+        JobRequest {
+            client: ANON_CLIENT.to_string(),
+            spec: JobSpec::Search(SearchRequest::new(model)),
+        }
+    }
+
+    /// Set the client (quota bucket) name.
+    pub fn with_client(mut self, client: &str) -> Self {
+        self.client = client.to_string();
+        self
+    }
+
+    /// Build from CLI flags: `--type search|common|global|cluster`
+    /// selects the inner request parser (which consumes its own flags),
+    /// `--client NAME` names the quota bucket.
+    pub fn from_args(args: &Args) -> Result<Self, ApiError> {
+        let kind: JobKind = args.get("type").unwrap_or("search").parse()?;
+        let spec = match kind {
+            JobKind::Search => JobSpec::Search(SearchRequest::from_args(args)?),
+            JobKind::Common => JobSpec::Common(CommonRequest::from_args(args)?),
+            JobKind::Global => JobSpec::Global(GlobalRequest::from_args(args)?),
+            JobKind::Cluster => JobSpec::Cluster(ClusterRequest::from_args(args)?),
+        };
+        let client = args.get("client").unwrap_or(ANON_CLIENT).to_string();
+        Ok(JobRequest { client, spec })
+    }
+
+    /// Validate into an executable [`JobPlan`] (inner request validation
+    /// runs at admission, so a bad job is a 400 at `POST /jobs`, not a
+    /// failed job discovered by polling).
+    pub fn validate(&self) -> Result<JobPlan, ApiError> {
+        if self.client.is_empty() || self.client.len() > 64 {
+            return Err(ApiError::invalid("\"client\" must be 1..=64 characters"));
+        }
+        let inner = match &self.spec {
+            JobSpec::Search(r) => InnerPlan::Search(r.validate()?),
+            JobSpec::Common(r) => InnerPlan::Common(r.validate()?),
+            JobSpec::Global(r) => InnerPlan::Global(r.validate()?),
+            JobSpec::Cluster(r) => InnerPlan::Cluster(r.validate()?),
+        };
+        Ok(JobPlan {
+            kind: self.spec.kind(),
+            client: self.client.clone(),
+            request_json: self.spec.inner_json(),
+            inner,
+        })
+    }
+}
+
+impl ToJson for JobRequest {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .str("kind", self.spec.kind().label())
+            .str("client", &self.client)
+            .raw("request", &self.spec.inner_json())
+            .finish()
+    }
+}
+
+impl FromJson for JobRequest {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let kind: JobKind = match opt_str(v, "kind")? {
+            Some(k) => k.parse()?,
+            None => JobKind::Search,
+        };
+        let client = opt_str(v, "client")?.unwrap_or_else(|| ANON_CLIENT.to_string());
+        let inner = match v.get("request") {
+            Some(obj @ JsonValue::Obj(_)) => obj,
+            Some(_) => return Err(ApiError::invalid("\"request\" must be an object")),
+            None => {
+                return Err(ApiError::invalid(
+                    "body must include \"request\" (the inner search/common/global/cluster body)",
+                ))
+            }
+        };
+        let spec = match kind {
+            JobKind::Search => JobSpec::Search(SearchRequest::from_json(inner)?),
+            JobKind::Common => JobSpec::Common(CommonRequest::from_json(inner)?),
+            JobKind::Global => JobSpec::Global(GlobalRequest::from_json(inner)?),
+            JobKind::Cluster => JobSpec::Cluster(ClusterRequest::from_json(inner)?),
+        };
+        Ok(JobRequest { client, spec })
+    }
+}
+
+/// The validated inner plan (kept so executing a job re-uses the exact
+/// plan admission checked, not a re-parse). Not `Clone`/`Debug`: the
+/// plans carry resolved operator graphs.
+pub enum InnerPlan {
+    Search(SearchPlan),
+    Common(CommonPlan),
+    Global(GlobalPlan),
+    Cluster(ClusterPlan),
+}
+
+/// A validated, executable job.
+pub struct JobPlan {
+    pub kind: JobKind,
+    pub client: String,
+    /// Canonical wire form of the inner request — what the write-ahead
+    /// store persists, so a replayed job revalidates the same bytes.
+    pub request_json: String,
+    pub inner: InnerPlan,
+}
+
+impl JobPlan {
+    /// Single-flight identity of the wrapped work, namespaced under
+    /// [`NS_JOB`] so a job never coalesces with a synchronous request.
+    pub fn coalescing_key(&self, backend: &str) -> u64 {
+        let inner = match &self.inner {
+            InnerPlan::Search(p) => p.coalescing_key(backend),
+            InnerPlan::Common(p) => p.coalescing_key(backend),
+            InnerPlan::Global(p) => p.coalescing_key(backend),
+            InnerPlan::Cluster(p) => p.coalescing_key(backend),
+        };
+        Fnv::new().word(NS_JOB).word(inner).0
+    }
+}
+
+/// `GET /jobs/:id` reply — the full visible state of one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobReply {
+    pub id: String,
+    pub kind: JobKind,
+    pub client: String,
+    pub state: JobState,
+    /// Execution attempts so far (1 on the first run; transient
+    /// failures and crash-resumes increment it).
+    pub attempts: u64,
+    pub submitted_ms: u64,
+    pub started_ms: Option<u64>,
+    pub finished_ms: Option<u64>,
+    /// Terminal error text (`state == failed`).
+    pub error: Option<String>,
+    /// Raw JSON reply of the wrapped request (`state == done`) —
+    /// byte-identical to what the synchronous endpoint would have sent.
+    pub reply: Option<String>,
+}
+
+impl JobReply {
+    fn base_json(&self) -> Obj {
+        let o = Obj::new()
+            .str("id", &self.id)
+            .str("kind", self.kind.label())
+            .str("client", &self.client)
+            .str("state", self.state.label())
+            .u64("attempts", self.attempts)
+            .u64("submitted_ms", self.submitted_ms)
+            .opt_u64("started_ms", self.started_ms)
+            .opt_u64("finished_ms", self.finished_ms);
+        match &self.error {
+            Some(e) => o.str("error", e),
+            None => o,
+        }
+    }
+
+    /// Wire form without the (possibly large) embedded reply — what
+    /// `GET /jobs` lists and SSE state frames carry.
+    pub fn to_json_brief(&self) -> String {
+        self.base_json().finish()
+    }
+}
+
+impl ToJson for JobReply {
+    fn to_json(&self) -> String {
+        let o = self.base_json();
+        match &self.reply {
+            Some(r) => o.raw("reply", r).finish(),
+            None => o.finish(),
+        }
+    }
+}
+
+impl FromJson for JobReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let kind: JobKind = req_str(v, "kind")?.parse()?;
+        let state: JobState = req_str(v, "state")?.parse()?;
+        let ms = |key: &str| v.get(key).and_then(JsonValue::as_u64);
+        Ok(JobReply {
+            id: req_str(v, "id")?,
+            kind,
+            client: req_str(v, "client")?,
+            state,
+            attempts: ms("attempts").unwrap_or(0),
+            submitted_ms: ms("submitted_ms").unwrap_or(0),
+            started_ms: ms("started_ms"),
+            finished_ms: ms("finished_ms"),
+            error: opt_str(v, "error")?,
+            // Re-serialized canonically (sorted keys); byte-level
+            // consumers fetch `GET /jobs/:id/reply` instead.
+            reply: v.get("reply").map(json::dump),
+        })
+    }
+}
+
+/// `GET /jobs` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobListReply {
+    pub jobs: Vec<JobReply>,
+}
+
+impl ToJson for JobListReply {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .raw("jobs", &json::arr(self.jobs.iter().map(|j| j.to_json_brief())))
+            .finish()
+    }
+}
+
+impl FromJson for JobListReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let arr = v
+            .get("jobs")
+            .and_then(JsonValue::as_arr)
+            .ok_or_else(|| ApiError::invalid("\"jobs\" must be an array"))?;
+        let jobs = arr.iter().map(JobReply::from_json).collect::<Result<Vec<_>, _>>()?;
+        Ok(JobListReply { jobs })
+    }
+}
+
+/// `POST /db/import` / `wham db import` reply: what merging a JSONL
+/// export into the design database did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DbImportReply {
+    /// New entries inserted.
+    pub added: u64,
+    /// Entries whose fingerprint key was already present (kept local).
+    pub duplicate: u64,
+    /// Lines that did not parse as design-DB entries.
+    pub malformed: u64,
+    /// Database size after the import.
+    pub entries: u64,
+}
+
+impl ToJson for DbImportReply {
+    fn to_json(&self) -> String {
+        Obj::new()
+            .u64("added", self.added)
+            .u64("duplicate", self.duplicate)
+            .u64("malformed", self.malformed)
+            .u64("entries", self.entries)
+            .finish()
+    }
+}
+
+impl FromJson for DbImportReply {
+    fn from_json(v: &JsonValue) -> Result<Self, ApiError> {
+        let n = |key: &str| {
+            v.get(key)
+                .and_then(JsonValue::as_u64)
+                .ok_or_else(|| ApiError::invalid(format!("\"{key}\" must be a number")))
+        };
+        Ok(DbImportReply {
+            added: n("added")?,
+            duplicate: n("duplicate")?,
+            malformed: n("malformed")?,
+            entries: n("entries")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_request_round_trips_and_validates() {
+        let r = JobRequest::search("bert-base").with_client("ci");
+        let v = json::parse(&r.to_json()).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("search"));
+        let back = JobRequest::from_json(&v).unwrap();
+        assert_eq!(back.client, "ci");
+        let plan = back.validate().unwrap();
+        assert_eq!(plan.kind, JobKind::Search);
+        assert_eq!(plan.client, "ci");
+        // The persisted request is the canonical inner wire form, which
+        // the sync endpoint's parser accepts unchanged.
+        assert!(SearchRequest::from_json_str(&plan.request_json).is_ok());
+    }
+
+    #[test]
+    fn job_request_defaults_and_rejects() {
+        let v = json::parse(r#"{"request":{"model":"vgg16"}}"#).unwrap();
+        let r = JobRequest::from_json(&v).unwrap();
+        assert_eq!(r.spec.kind(), JobKind::Search);
+        assert_eq!(r.client, ANON_CLIENT);
+
+        let v = json::parse(r#"{"kind":"search"}"#).unwrap();
+        let e = JobRequest::from_json(&v).unwrap_err();
+        assert!(e.message.contains("request"), "{}", e.message);
+
+        let v = json::parse(r#"{"kind":"mine-faster","request":{}}"#).unwrap();
+        assert!(JobRequest::from_json(&v).is_err());
+
+        let bad = JobRequest::search("bert-base").with_client("");
+        assert_eq!(bad.validate().unwrap_err().http_status(), 400);
+    }
+
+    #[test]
+    fn job_keys_are_namespaced_away_from_sync_requests() {
+        let plan = JobRequest::search("bert-base").validate().unwrap();
+        let sync = SearchRequest::new("bert-base").validate().unwrap();
+        assert_ne!(plan.coalescing_key("native"), sync.coalescing_key("native"));
+        // Same work, same key; different client must not split the key.
+        let other = JobRequest::search("bert-base").with_client("b").validate().unwrap();
+        assert_eq!(plan.coalescing_key("native"), other.coalescing_key("native"));
+        let vgg = JobRequest::search("vgg16").validate().unwrap();
+        assert_ne!(plan.coalescing_key("native"), vgg.coalescing_key("native"));
+    }
+
+    #[test]
+    fn job_reply_codec_round_trips() {
+        let r = JobReply {
+            id: "j-1f-0001".into(),
+            kind: JobKind::Search,
+            client: "ci".into(),
+            state: JobState::Done,
+            attempts: 2,
+            submitted_ms: 1_700_000_000_000,
+            started_ms: Some(1_700_000_000_100),
+            finished_ms: Some(1_700_000_000_900),
+            error: None,
+            reply: Some(r#"{"best":1,"model":"bert-base"}"#.to_string()),
+        };
+        let v = json::parse(&r.to_json()).unwrap();
+        let back = JobReply::from_json(&v).unwrap();
+        assert_eq!(back, r);
+        // Brief form drops the embedded reply but keeps the lifecycle.
+        let brief = json::parse(&r.to_json_brief()).unwrap();
+        assert!(brief.get("reply").is_none());
+        assert_eq!(brief.get("state").unwrap().as_str(), Some("done"));
+
+        let failed = JobReply { state: JobState::Failed, error: Some("boom".into()), reply: None, ..r };
+        let v = json::parse(&failed.to_json()).unwrap();
+        assert_eq!(JobReply::from_json(&v).unwrap(), failed);
+    }
+
+    #[test]
+    fn list_and_import_replies_round_trip() {
+        let j = JobReply {
+            id: "j-a".into(),
+            kind: JobKind::Global,
+            client: ANON_CLIENT.into(),
+            state: JobState::Queued,
+            attempts: 0,
+            submitted_ms: 5,
+            started_ms: None,
+            finished_ms: None,
+            error: None,
+            reply: None,
+        };
+        let list = JobListReply { jobs: vec![j] };
+        let v = json::parse(&list.to_json()).unwrap();
+        assert_eq!(JobListReply::from_json(&v).unwrap(), list);
+
+        let imp = DbImportReply { added: 3, duplicate: 1, malformed: 2, entries: 9 };
+        let v = json::parse(&imp.to_json()).unwrap();
+        assert_eq!(DbImportReply::from_json(&v).unwrap(), imp);
+    }
+}

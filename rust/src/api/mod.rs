@@ -21,6 +21,8 @@
 //! * [`request`] — [`SearchRequest`], [`EvaluateRequest`],
 //!   [`CommonRequest`], [`GlobalRequest`]: builders, CLI-flag parsing,
 //!   wire codec, validation.
+//! * [`job`] — [`JobRequest`]/[`JobReply`]: the async job tier's wire
+//!   types, wrapping the long-running requests for [`crate::jobs`].
 //! * [`plan`] — validated, executable work + the canonical
 //!   [`context_key`](plan::context_key) / coalescing-key derivations.
 //! * [`reply`] — [`SearchReply`], [`EvaluateReply`], [`CommonReply`],
@@ -35,6 +37,7 @@
 //!   accessors.
 
 pub mod error;
+pub mod job;
 pub mod plan;
 pub mod progress;
 pub mod reply;
@@ -43,6 +46,9 @@ pub mod session;
 pub mod wire;
 
 pub use error::{ApiError, ErrorKind};
+pub use job::{
+    DbImportReply, JobKind, JobListReply, JobPlan, JobReply, JobRequest, JobSpec, JobState,
+};
 pub use plan::{context_key, resolve_workload};
 pub use progress::{DeadlineSink, NullSink, Progress, ProgressSink};
 pub use reply::{

@@ -45,6 +45,20 @@ impl Progress {
             0.0
         }
     }
+
+    /// One NDJSON line (no trailing newline) describing this event — the
+    /// schema shared by the CLI's `--progress` stream and the service's
+    /// `GET /jobs/:id/events` SSE data frames.
+    pub fn to_ndjson(&self) -> String {
+        crate::util::json::Obj::new()
+            .str("phase", self.phase)
+            .u64("ms", self.elapsed.as_millis() as u64)
+            .u64("points", self.points as u64)
+            .f64("best", self.best_score)
+            .f64("rate", self.rate)
+            .u64("depth", self.depth as u64)
+            .finish()
+    }
 }
 
 /// Observer of search progress; also the cancellation channel.

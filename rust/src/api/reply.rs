@@ -691,6 +691,30 @@ pub struct PerfCounters {
     pub endpoints: Vec<EndpointStat>,
 }
 
+/// Async job-tier counters (`wham::jobs`): per-state population of the
+/// job store plus dispatcher admission/retry totals. Mirrored one-to-one
+/// by the `wham_jobs_*` series of `GET /metrics`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct JobsCounters {
+    pub queued: u64,
+    pub running: u64,
+    pub done: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Jobs currently waiting in the dispatcher queue (== `queued`).
+    pub queue_depth: u64,
+    /// Age of the oldest still-queued job, 0 when the queue is empty.
+    pub oldest_age_ms: u64,
+    /// Submissions admitted since boot.
+    pub submitted: u64,
+    /// Submissions rejected by per-client quota (429).
+    pub rejected_quota: u64,
+    /// Submissions rejected by queue depth (429).
+    pub rejected_depth: u64,
+    /// Transient-failure retries scheduled since boot.
+    pub retries: u64,
+}
+
 /// Reply of `GET /status`.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct StatusReply {
@@ -701,6 +725,7 @@ pub struct StatusReply {
     pub coalescer: CoalescerCounters,
     pub db: DbCounters,
     pub perf: PerfCounters,
+    pub jobs: JobsCounters,
 }
 
 impl ToJson for StatusReply {
@@ -739,6 +764,19 @@ impl ToJson for StatusReply {
             .f64("db_hit_rate", self.perf.db_hit_rate)
             .raw("endpoints", &endpoints)
             .finish();
+        let jobs = Obj::new()
+            .u64("queued", self.jobs.queued)
+            .u64("running", self.jobs.running)
+            .u64("done", self.jobs.done)
+            .u64("failed", self.jobs.failed)
+            .u64("cancelled", self.jobs.cancelled)
+            .u64("queue_depth", self.jobs.queue_depth)
+            .u64("oldest_age_ms", self.jobs.oldest_age_ms)
+            .u64("submitted", self.jobs.submitted)
+            .u64("rejected_quota", self.jobs.rejected_quota)
+            .u64("rejected_depth", self.jobs.rejected_depth)
+            .u64("retries", self.jobs.retries)
+            .finish();
         Obj::new()
             .u64("uptime_ms", self.uptime_ms)
             .u64("workers", self.workers)
@@ -747,6 +785,7 @@ impl ToJson for StatusReply {
             .raw("coalescer", &coalescer)
             .raw("db", &db)
             .raw("perf", &perf)
+            .raw("jobs", &jobs)
             .finish()
     }
 }
@@ -781,6 +820,23 @@ impl FromJson for StatusReply {
                     .collect::<Result<_, ApiError>>()?,
             },
         };
+        // Lenient for pre-jobs replies.
+        let jobs = match v.get("jobs") {
+            None => JobsCounters::default(),
+            Some(j) => JobsCounters {
+                queued: req_u64(j, "queued")?,
+                running: req_u64(j, "running")?,
+                done: req_u64(j, "done")?,
+                failed: req_u64(j, "failed")?,
+                cancelled: req_u64(j, "cancelled")?,
+                queue_depth: req_u64(j, "queue_depth")?,
+                oldest_age_ms: req_u64(j, "oldest_age_ms")?,
+                submitted: req_u64(j, "submitted")?,
+                rejected_quota: req_u64(j, "rejected_quota")?,
+                rejected_depth: req_u64(j, "rejected_depth")?,
+                retries: req_u64(j, "retries")?,
+            },
+        };
         Ok(Self {
             uptime_ms: req_u64(v, "uptime_ms")?,
             workers: req_u64(v, "workers")?,
@@ -805,6 +861,7 @@ impl FromJson for StatusReply {
                 misses: req_u64(d, "misses")?,
             },
             perf,
+            jobs,
         })
     }
 }
@@ -906,6 +963,19 @@ mod tests {
                     p95_ms: 3.25,
                 }],
             },
+            jobs: JobsCounters {
+                queued: 1,
+                running: 1,
+                done: 3,
+                failed: 0,
+                cancelled: 1,
+                queue_depth: 1,
+                oldest_age_ms: 250,
+                submitted: 6,
+                rejected_quota: 2,
+                rejected_depth: 1,
+                retries: 1,
+            },
         };
         let q = StatusReply::from_json(&parse(&r.to_json()).unwrap()).unwrap();
         assert_eq!(q, r);
@@ -926,6 +996,8 @@ mod tests {
             "db":{"path":null,"entries":0,"loaded":0,"appended":0,"hits":0,"misses":0}}"#;
         let q = StatusReply::from_json(&parse(legacy).unwrap()).unwrap();
         assert_eq!(q.perf, PerfCounters::default());
+        // Pre-jobs servers omit the "jobs" object entirely.
+        assert_eq!(q.jobs, JobsCounters::default());
     }
 
     #[test]

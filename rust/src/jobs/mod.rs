@@ -1,0 +1,684 @@
+//! `wham::jobs` — the durable async job tier.
+//!
+//! `wham serve` originally ran every search inside the HTTP request that
+//! asked for it: the connection pinned a worker for the whole search,
+//! a restart lost all in-flight work, and the only backpressure was the
+//! worker pool itself (ROADMAP open item #1). This subsystem splits
+//! *admission* from *execution*:
+//!
+//! ```text
+//! POST /jobs ── quota + depth check ──> JobStore (WAL) ──> queue
+//!                     │ 429/503                              │
+//!                     ▼                                      ▼
+//!               rejected at door                   dispatcher workers
+//!                                                  (own Sessions, run
+//!                                                   search w/ sink)
+//! ```
+//!
+//! * [`store`] — crash-safe JSONL write-ahead log of every lifecycle
+//!   transition; replay on boot re-queues interrupted jobs, which then
+//!   warm-start from the design DB (0 scheduler evals when the dead
+//!   attempt had finished mining).
+//! * [`quota`] — per-client token buckets; saturation is `429 +
+//!   Retry-After`, not unbounded queueing.
+//! * [`JobManager`] — bounded queue, dispatcher threads, retry with
+//!   exponential backoff for transient failures, cooperative
+//!   cancellation, live SSE frame fan-out, and graceful drain.
+
+pub mod quota;
+pub mod store;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::api::job::{JobPlan, JobState};
+use crate::api::request::{ClusterRequest, CommonRequest, GlobalRequest, SearchRequest};
+use crate::api::wire::{FromJson, ToJson};
+use crate::api::{ApiError, Progress, Session};
+use quota::QuotaGate;
+use store::{JobCounts, JobRecord, JobStore};
+
+/// Dispatcher configuration.
+#[derive(Debug, Clone)]
+pub struct JobsOptions {
+    /// Dispatcher threads (each owns a [`Session`]). Independent of the
+    /// HTTP worker pool: HTTP stays responsive while jobs mine.
+    pub workers: usize,
+    /// Max jobs waiting in the queue; beyond it `POST /jobs` is 429.
+    pub queue_depth: usize,
+    /// Token-bucket refill rate per client (tokens/second); `<= 0`
+    /// disables quotas.
+    pub quota_rate: f64,
+    /// Token-bucket capacity per client.
+    pub quota_burst: f64,
+    /// Total execution attempts per job (1 = never retry).
+    pub max_attempts: u64,
+    /// Base backoff before a retry; doubles per failed attempt.
+    pub backoff_ms: u64,
+}
+
+impl Default for JobsOptions {
+    fn default() -> Self {
+        JobsOptions {
+            workers: 2,
+            queue_depth: 64,
+            quota_rate: 1.0,
+            quota_burst: 32.0,
+            max_attempts: 3,
+            backoff_ms: 250,
+        }
+    }
+}
+
+/// Why a submission was rejected at the door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Client bucket empty — retry after the given seconds.
+    QuotaExhausted { retry_after_secs: u64 },
+    /// Queue at capacity — retry after the given seconds.
+    QueueFull { retry_after_secs: u64 },
+    /// Server is draining for shutdown.
+    Draining,
+}
+
+impl SubmitError {
+    pub fn message(&self) -> String {
+        match self {
+            SubmitError::QuotaExhausted { retry_after_secs } => {
+                format!("client quota exhausted; retry in {retry_after_secs}s")
+            }
+            SubmitError::QueueFull { retry_after_secs } => {
+                format!("job queue full; retry in {retry_after_secs}s")
+            }
+            SubmitError::Draining => "server is draining; jobs are not accepted".to_string(),
+        }
+    }
+
+    /// HTTP status + optional `Retry-After` seconds.
+    pub fn http(&self) -> (u16, Option<u64>) {
+        match self {
+            SubmitError::QuotaExhausted { retry_after_secs }
+            | SubmitError::QueueFull { retry_after_secs } => (429, Some(*retry_after_secs)),
+            SubmitError::Draining => (503, Some(5)),
+        }
+    }
+}
+
+/// Admission/queue counters (monotonic; the per-state totals live in
+/// [`JobStore::counts`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JobsStats {
+    pub submitted: u64,
+    pub rejected_quota: u64,
+    pub rejected_depth: u64,
+    pub retries: u64,
+}
+
+/// Bounded frame ring: watchers index frames absolutely, old frames age
+/// out from the front so an unbounded search cannot grow memory.
+struct FrameLog {
+    buf: VecDeque<String>,
+    /// Absolute index of `buf[0]`.
+    base: usize,
+}
+
+const FRAME_CAP: usize = 1024;
+
+/// Live (non-terminal) execution channel of one job: pre-rendered SSE
+/// frames plus the cooperative cancellation flags.
+pub struct JobLive {
+    frames: Mutex<FrameLog>,
+    cv: Condvar,
+    cancel: AtomicBool,
+    requeue: AtomicBool,
+    terminal: AtomicBool,
+}
+
+impl JobLive {
+    fn new() -> Self {
+        JobLive {
+            frames: Mutex::new(FrameLog { buf: VecDeque::new(), base: 0 }),
+            cv: Condvar::new(),
+            cancel: AtomicBool::new(false),
+            requeue: AtomicBool::new(false),
+            terminal: AtomicBool::new(false),
+        }
+    }
+
+    fn push(&self, frame: String) {
+        let mut log = self.frames.lock().unwrap();
+        if log.buf.len() >= FRAME_CAP {
+            log.buf.pop_front();
+            log.base += 1;
+        }
+        log.buf.push_back(frame);
+        drop(log);
+        self.cv.notify_all();
+    }
+
+    fn finish(&self) {
+        self.terminal.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// Request cooperative cancellation (user intent: terminal state
+    /// becomes `cancelled`).
+    pub fn request_cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// Request cooperative re-queue (drain intent: job goes back to
+    /// `queued` and resumes on the next boot).
+    pub fn request_requeue(&self) {
+        self.requeue.store(true, Ordering::SeqCst);
+    }
+
+    fn should_stop(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst) || self.requeue.load(Ordering::SeqCst)
+    }
+
+    /// Frames from absolute index `from` (clamped to what the ring still
+    /// holds). Blocks up to `timeout` when nothing new is available.
+    /// Returns `(frames, next_from, terminal)`.
+    pub fn wait(&self, from: usize, timeout: Duration) -> (Vec<String>, usize, bool) {
+        let mut log = self.frames.lock().unwrap();
+        if from >= log.base + log.buf.len() && !self.terminal.load(Ordering::SeqCst) {
+            let (l, _) = self.cv.wait_timeout(log, timeout).unwrap();
+            log = l;
+        }
+        let start = from.max(log.base);
+        let frames: Vec<String> =
+            log.buf.iter().skip(start - log.base).cloned().collect();
+        let next = log.base + log.buf.len();
+        (frames, next, self.terminal.load(Ordering::SeqCst))
+    }
+}
+
+/// One Server-Sent-Events frame (`event:` line optional).
+pub fn sse_frame(event: Option<&str>, data: &str) -> String {
+    match event {
+        Some(e) => format!("event: {e}\ndata: {data}\n\n"),
+        None => format!("data: {data}\n\n"),
+    }
+}
+
+struct QueueItem {
+    due: Instant,
+    id: String,
+}
+
+/// What a graceful drain accomplished.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DrainSummary {
+    /// Jobs that reached a terminal state during the drain window.
+    pub completed: u64,
+    /// Jobs re-queued for the next boot (budget ran out).
+    pub requeued: u64,
+    /// Jobs left queued untouched (never started).
+    pub queued_left: u64,
+}
+
+/// The dispatcher: owns the queue, the worker threads, admission
+/// control, and the live-progress fan-out.
+pub struct JobManager {
+    store: Arc<JobStore>,
+    opts: JobsOptions,
+    queue: Mutex<Vec<QueueItem>>,
+    queue_cv: Condvar,
+    live: Mutex<HashMap<String, Arc<JobLive>>>,
+    quota: QuotaGate,
+    accepting: AtomicBool,
+    shutdown: AtomicBool,
+    submitted: AtomicU64,
+    rejected_quota: AtomicU64,
+    rejected_depth: AtomicU64,
+    retries: AtomicU64,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl JobManager {
+    /// Spawn the dispatcher over `store`. Jobs already queued in the
+    /// store (including crash-interrupted ones its replay re-queued) are
+    /// enqueued immediately; `make_session` runs on each worker thread
+    /// to build its private [`Session`].
+    pub fn start<F>(store: Arc<JobStore>, opts: JobsOptions, make_session: F) -> Arc<JobManager>
+    where
+        F: Fn() -> Session + Send + Sync + 'static,
+    {
+        let opts = JobsOptions { workers: opts.workers.max(1), ..opts };
+        let mgr = Arc::new(JobManager {
+            store,
+            quota: QuotaGate::new(opts.quota_rate, opts.quota_burst),
+            opts,
+            queue: Mutex::new(Vec::new()),
+            queue_cv: Condvar::new(),
+            live: Mutex::new(HashMap::new()),
+            accepting: AtomicBool::new(true),
+            shutdown: AtomicBool::new(false),
+            submitted: AtomicU64::new(0),
+            rejected_quota: AtomicU64::new(0),
+            rejected_depth: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            workers: Mutex::new(Vec::new()),
+        });
+        {
+            // Resume whatever the WAL replay left queued.
+            let now = Instant::now();
+            let mut q = mgr.queue.lock().unwrap();
+            for id in mgr.store.queued_ids() {
+                q.push(QueueItem { due: now, id });
+            }
+        }
+        let make_session = Arc::new(make_session);
+        let mut workers = mgr.workers.lock().unwrap();
+        for i in 0..mgr.opts.workers {
+            let mgr2 = Arc::clone(&mgr);
+            let mk = Arc::clone(&make_session);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("wham-jobs-{i}"))
+                    .spawn(move || {
+                        let mut session = mk();
+                        while let Some(id) = mgr2.next_job() {
+                            mgr2.execute(&mut session, &id);
+                        }
+                    })
+                    .expect("spawning job worker"),
+            );
+        }
+        drop(workers);
+        mgr
+    }
+
+    /// The backing store.
+    pub fn store(&self) -> &Arc<JobStore> {
+        &self.store
+    }
+
+    /// Per-state totals (authoritative: the store).
+    pub fn counts(&self) -> JobCounts {
+        self.store.counts()
+    }
+
+    /// Admission counters.
+    pub fn stats(&self) -> JobsStats {
+        JobsStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected_quota: self.rejected_quota.load(Ordering::Relaxed),
+            rejected_depth: self.rejected_depth.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Jobs waiting in the dispatcher queue right now.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// Admit a validated job: quota, then queue depth, then WAL + queue.
+    pub fn submit(&self, plan: &JobPlan) -> Result<JobRecord, SubmitError> {
+        if !self.accepting.load(Ordering::SeqCst) {
+            return Err(SubmitError::Draining);
+        }
+        if let Err(retry_after_secs) = self.quota.take(&plan.client) {
+            self.rejected_quota.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::QuotaExhausted { retry_after_secs });
+        }
+        let mut q = self.queue.lock().unwrap();
+        if q.len() >= self.opts.queue_depth {
+            self.rejected_depth.fetch_add(1, Ordering::Relaxed);
+            // One queue slot frees when any running job finishes; there
+            // is no good estimate, so suggest a short constant.
+            return Err(SubmitError::QueueFull { retry_after_secs: 2 });
+        }
+        let rec = self.store.submit(plan.kind, &plan.client, &plan.request_json);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        q.push(QueueItem { due: Instant::now(), id: rec.id.clone() });
+        drop(q);
+        self.queue_cv.notify_one();
+        Ok(rec)
+    }
+
+    /// Cooperatively cancel `id`. Queued jobs cancel immediately;
+    /// running jobs stop at their next progress event. Returns the
+    /// post-cancel record, `None` for unknown ids.
+    pub fn cancel(&self, id: &str) -> Option<JobRecord> {
+        let rec = self.store.get(id)?;
+        match rec.state {
+            JobState::Queued => {
+                // Remove from the queue so a worker never picks it up.
+                let mut q = self.queue.lock().unwrap();
+                q.retain(|item| item.id != id);
+                drop(q);
+                self.store.mark_cancelled(id);
+                if let Some(live) = self.live.lock().unwrap().remove(id) {
+                    live.finish();
+                }
+            }
+            JobState::Running => {
+                if let Some(live) = self.live.lock().unwrap().get(id) {
+                    live.request_cancel();
+                }
+            }
+            // Terminal states stay as they are.
+            _ => {}
+        }
+        self.store.get(id)
+    }
+
+    /// The live channel of a non-terminal job (`None` once terminal —
+    /// serve watchers from the store instead).
+    pub fn watch(&self, id: &str) -> Option<Arc<JobLive>> {
+        let rec = self.store.get(id)?;
+        if rec.state.is_terminal() {
+            return None;
+        }
+        let mut live = self.live.lock().unwrap();
+        // A queued job may not have a channel yet; create it so early
+        // watchers see frames from the first running moment.
+        Some(Arc::clone(live.entry(id.to_string()).or_insert_with(|| Arc::new(JobLive::new()))))
+    }
+
+    fn live_for(&self, id: &str) -> Arc<JobLive> {
+        let mut live = self.live.lock().unwrap();
+        Arc::clone(live.entry(id.to_string()).or_insert_with(|| Arc::new(JobLive::new())))
+    }
+
+    fn finish_live(&self, id: &str) {
+        if let Some(live) = self.live.lock().unwrap().remove(id) {
+            live.finish();
+        }
+    }
+
+    /// Worker loop: block until a due job or shutdown.
+    fn next_job(&self) -> Option<String> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            let now = Instant::now();
+            if let Some(i) = q.iter().position(|item| item.due <= now) {
+                return Some(q.remove(i).id);
+            }
+            // Sleep until the nearest backoff expiry (or a poll tick).
+            let wait = q
+                .iter()
+                .map(|item| item.due.saturating_duration_since(now))
+                .min()
+                .unwrap_or(Duration::from_millis(200))
+                .min(Duration::from_millis(200));
+            let (nq, _) = self.queue_cv.wait_timeout(q, wait.max(Duration::from_millis(1))).unwrap();
+            q = nq;
+        }
+    }
+
+    /// Run one job to a terminal state (or back into the queue).
+    fn execute(&self, session: &mut Session, id: &str) {
+        let Some(rec) = self.store.get(id) else { return };
+        if rec.state != JobState::Queued {
+            return; // cancelled while queued, or duplicate wake-up
+        }
+        let Some(rec) = self.store.mark_running(id) else { return };
+        let live = self.live_for(id);
+        live.push(sse_frame(Some("state"), &rec.to_reply().to_json_brief()));
+
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(session, &rec, &live)
+        }))
+        .unwrap_or_else(|p| {
+            Err(ApiError::internal(format!("job panicked: {}", crate::util::panic_text(&p))))
+        });
+
+        match outcome {
+            Ok(reply_json) => {
+                if live.requeue.load(Ordering::SeqCst) {
+                    self.store.mark_requeued(id);
+                    self.finish_live(id);
+                } else if live.cancel.load(Ordering::SeqCst) {
+                    self.store.mark_cancelled(id);
+                    self.finish_live(id);
+                } else {
+                    self.store.mark_done(id, &reply_json);
+                    self.finish_live(id);
+                }
+            }
+            Err(e) => {
+                // 5xx-class failures are transient (backend hiccup);
+                // validation errors would fail identically on retry.
+                let transient = e.http_status() >= 500;
+                if transient && rec.attempts < self.opts.max_attempts {
+                    self.store.mark_failed(id, &e.message, false);
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    let shift = (rec.attempts.saturating_sub(1)).min(6) as u32;
+                    let backoff = Duration::from_millis(self.opts.backoff_ms << shift);
+                    live.push(sse_frame(
+                        Some("state"),
+                        &self.store.get(id).map(|r| r.to_reply().to_json_brief()).unwrap_or_default(),
+                    ));
+                    let mut q = self.queue.lock().unwrap();
+                    q.push(QueueItem { due: Instant::now() + backoff, id: id.to_string() });
+                    drop(q);
+                    self.queue_cv.notify_one();
+                } else {
+                    self.store.mark_failed(id, &e.message, true);
+                    self.finish_live(id);
+                }
+            }
+        }
+    }
+
+    /// Stop accepting new jobs (submissions become 503).
+    pub fn begin_drain(&self) {
+        self.accepting.store(false, Ordering::SeqCst);
+    }
+
+    /// Graceful shutdown: stop accepting and stop starting queued jobs,
+    /// give running jobs up to `budget` to finish, then ask stragglers
+    /// to re-queue themselves (they resume on the next boot), and join
+    /// the workers.
+    pub fn drain(&self, budget: Duration) -> DrainSummary {
+        self.begin_drain();
+        let before = self.store.counts();
+        // Workers finish their current job and exit; queued jobs stay
+        // queued in the WAL for the next boot.
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue_cv.notify_all();
+        let deadline = Instant::now() + budget;
+        while Instant::now() < deadline && self.store.counts().running > 0 {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        // Budget exhausted: flag survivors to re-queue at their next
+        // progress event, and give them a short grace to comply.
+        let mut requeued = 0u64;
+        if self.store.counts().running > 0 {
+            for live in self.live.lock().unwrap().values() {
+                live.request_requeue();
+            }
+            let grace = Instant::now() + Duration::from_secs(5).min(budget.max(Duration::from_secs(1)));
+            while Instant::now() < grace && self.store.counts().running > 0 {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            requeued = self.store.counts().queued.saturating_sub(before.queued);
+        }
+        // Join whatever workers have exited; a worker stuck in a search
+        // that ignores its sink is left detached rather than blocking
+        // shutdown forever.
+        let mut workers = self.workers.lock().unwrap();
+        let drained: Vec<_> = workers.drain(..).collect();
+        drop(workers);
+        for h in drained {
+            if h.is_finished() {
+                let _ = h.join();
+            }
+        }
+        let after = self.store.counts();
+        DrainSummary {
+            completed: (after.done + after.failed + after.cancelled)
+                .saturating_sub(before.done + before.failed + before.cancelled),
+            requeued,
+            queued_left: after.queued,
+        }
+    }
+}
+
+/// Execute the stored request with a sink that renders SSE frames and
+/// honors the live cancellation flags. Returns raw reply JSON.
+fn run_job(session: &mut Session, rec: &JobRecord, live: &JobLive) -> Result<String, ApiError> {
+    let mut n = 0usize;
+    let mut sink = |p: &Progress| {
+        if n % 32 == 0 {
+            live.push(sse_frame(None, &p.to_ndjson()));
+        }
+        n += 1;
+        !live.should_stop()
+    };
+    match rec.kind {
+        crate::api::job::JobKind::Search => {
+            let plan = SearchRequest::from_json_str(&rec.request)?.validate()?;
+            session.run_search(&plan, &mut sink).map(|r| r.to_json())
+        }
+        crate::api::job::JobKind::Common => {
+            // `run_common` has no sink: common jobs report only state
+            // transitions and cannot cancel mid-run.
+            let plan = CommonRequest::from_json_str(&rec.request)?.validate()?;
+            session.run_common(&plan).map(|r| r.to_json())
+        }
+        crate::api::job::JobKind::Global => {
+            let plan = GlobalRequest::from_json_str(&rec.request)?.validate()?;
+            session.run_global(&plan, &mut sink).map(|r| r.to_json())
+        }
+        crate::api::job::JobKind::Cluster => {
+            let plan = ClusterRequest::from_json_str(&rec.request)?.validate()?;
+            session.run_cluster(&plan, &mut sink).map(|r| r.to_json())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::JobRequest;
+
+    fn manager(opts: JobsOptions) -> Arc<JobManager> {
+        JobManager::start(Arc::new(JobStore::in_memory()), opts, || {
+            Session::with_backend(Box::new(crate::cost::native::NativeCost)).with_jobs(1)
+        })
+    }
+
+    fn wait_terminal(mgr: &JobManager, id: &str, secs: u64) -> JobRecord {
+        let deadline = Instant::now() + Duration::from_secs(secs);
+        loop {
+            let rec = mgr.store().get(id).expect("job exists");
+            if rec.state.is_terminal() {
+                return rec;
+            }
+            assert!(Instant::now() < deadline, "job {id} stuck in {:?}", rec.state);
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    #[test]
+    fn job_runs_to_done_with_sse_frames() {
+        let mgr = manager(JobsOptions::default());
+        let plan = JobRequest::search("alexnet").validate().unwrap();
+        let rec = mgr.submit(&plan).unwrap();
+        let live = mgr.watch(&rec.id);
+        let done = wait_terminal(&mgr, &rec.id, 60);
+        assert_eq!(done.state, JobState::Done);
+        assert_eq!(done.attempts, 1);
+        let reply = done.reply.expect("done job has a reply");
+        assert!(reply.contains("\"best\""), "unexpected reply {reply}");
+        // The live channel existed while running and carried frames.
+        if let Some(live) = live {
+            let (frames, _, terminal) = live.wait(0, Duration::from_millis(10));
+            assert!(terminal);
+            assert!(frames.iter().any(|f| f.starts_with("event: state")), "{frames:?}");
+        }
+        assert_eq!(mgr.stats().submitted, 1);
+        assert_eq!(mgr.counts().done, 1);
+    }
+
+    #[test]
+    fn queue_depth_and_quota_reject_at_the_door() {
+        // No workers pulling fast enough matters here: depth 0 means the
+        // first un-started job already fills the queue.
+        let mgr = manager(JobsOptions {
+            queue_depth: 0,
+            quota_rate: 1000.0,
+            quota_burst: 10.0,
+            ..JobsOptions::default()
+        });
+        let plan = JobRequest::search("alexnet").validate().unwrap();
+        match mgr.submit(&plan) {
+            Err(SubmitError::QueueFull { retry_after_secs }) => assert!(retry_after_secs >= 1),
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        assert_eq!(mgr.stats().rejected_depth, 1);
+
+        let mgr = manager(JobsOptions {
+            quota_rate: 0.001,
+            quota_burst: 1.0,
+            ..JobsOptions::default()
+        });
+        let a = mgr.submit(&plan).unwrap();
+        match mgr.submit(&plan) {
+            Err(SubmitError::QuotaExhausted { retry_after_secs }) => {
+                assert!(retry_after_secs >= 1)
+            }
+            other => panic!("expected QuotaExhausted, got {other:?}"),
+        }
+        assert_eq!(mgr.stats().rejected_quota, 1);
+        // A different client has its own bucket.
+        let other = JobRequest::search("alexnet").with_client("b").validate().unwrap();
+        mgr.submit(&other).unwrap();
+        wait_terminal(&mgr, &a.id, 60);
+    }
+
+    #[test]
+    fn cancelling_a_queued_job_never_runs_it() {
+        // One worker busy on a real job keeps the second one queued.
+        let mgr = manager(JobsOptions { workers: 1, ..JobsOptions::default() });
+        let plan = JobRequest::search("alexnet").validate().unwrap();
+        let first = mgr.submit(&plan).unwrap();
+        let second = mgr.submit(&plan).unwrap();
+        let rec = mgr.cancel(&second.id).unwrap();
+        // Either it was still queued (immediate cancel) or the first
+        // finished so fast it started — both end non-running.
+        if rec.state == JobState::Queued {
+            panic!("cancel left the job queued");
+        }
+        let done = wait_terminal(&mgr, &second.id, 60);
+        assert!(
+            done.state == JobState::Cancelled || done.state == JobState::Done,
+            "{:?}",
+            done.state
+        );
+        if done.state == JobState::Cancelled {
+            assert!(done.started_ms.is_none(), "cancelled-while-queued job must never start");
+        }
+        wait_terminal(&mgr, &first.id, 60);
+        assert!(mgr.cancel("j-nope-0000").is_none());
+    }
+
+    #[test]
+    fn drain_lets_running_jobs_finish_and_leaves_queue_for_next_boot() {
+        let mgr = manager(JobsOptions { workers: 1, ..JobsOptions::default() });
+        let plan = JobRequest::search("alexnet").validate().unwrap();
+        let a = mgr.submit(&plan).unwrap();
+        let summary = mgr.drain(Duration::from_secs(60));
+        let rec = mgr.store().get(&a.id).unwrap();
+        assert!(
+            rec.state == JobState::Done || rec.state == JobState::Queued,
+            "drain left {:?}",
+            rec.state
+        );
+        if rec.state == JobState::Done {
+            assert_eq!(summary.completed, 1);
+        }
+        // Draining means the door is closed.
+        assert_eq!(mgr.submit(&plan), Err(SubmitError::Draining));
+    }
+}

@@ -1,0 +1,604 @@
+//! Crash-safe job persistence: a JSONL write-ahead log in the
+//! design-database style ([`crate::service::cache`]).
+//!
+//! Every lifecycle transition appends one self-describing line —
+//! `{"ev":"submit",...}`, `{"ev":"start",...}`, `{"ev":"done",...}` — and
+//! the file is replayed on open. Replay is tolerant of a torn tail (a
+//! `kill -9` mid-append leaves a partial last line, which is skipped
+//! exactly like the design DB skips unparseable entries), and any job
+//! found `running` after replay is demoted back to `queued`: its attempt
+//! died with the process, so the dispatcher re-runs it. Because the
+//! design DB already holds every point the dead attempt mined, the
+//! re-run warm-starts and typically completes with zero scheduler
+//! invocations — that is the crash-resume story of this subsystem.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::api::job::{JobKind, JobReply, JobState};
+use crate::util::json::{self, JsonValue, Obj};
+
+/// Milliseconds since the Unix epoch (0 if the clock is before it).
+pub fn epoch_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis() as u64).unwrap_or(0)
+}
+
+/// Everything the store knows about one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub id: String,
+    pub kind: JobKind,
+    pub client: String,
+    /// Canonical inner request JSON (what `JobPlan::request_json` held
+    /// at admission) — enough to re-execute after a restart.
+    pub request: String,
+    pub state: JobState,
+    pub attempts: u64,
+    pub submitted_ms: u64,
+    pub started_ms: Option<u64>,
+    pub finished_ms: Option<u64>,
+    pub error: Option<String>,
+    /// Raw reply JSON once `Done`.
+    pub reply: Option<String>,
+}
+
+impl JobRecord {
+    /// The wire view of this record.
+    pub fn to_reply(&self) -> JobReply {
+        JobReply {
+            id: self.id.clone(),
+            kind: self.kind,
+            client: self.client.clone(),
+            state: self.state,
+            attempts: self.attempts,
+            submitted_ms: self.submitted_ms,
+            started_ms: self.started_ms,
+            finished_ms: self.finished_ms,
+            error: self.error.clone(),
+            reply: self.reply.clone(),
+        }
+    }
+}
+
+/// Per-state job totals (queue depth and gauge fodder).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JobCounts {
+    pub queued: u64,
+    pub running: u64,
+    pub done: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Age in ms of the oldest still-queued job (0 when none queued).
+    pub oldest_queued_ms: u64,
+}
+
+struct Inner {
+    /// id → record, plus submission order for listing.
+    map: HashMap<String, JobRecord>,
+    order: Vec<String>,
+    /// Monotonic id counter (restored past replayed ids on open).
+    next_id: u64,
+    /// Salt making ids from different store generations distinct.
+    salt: u64,
+}
+
+/// The write-ahead job store. All mutations go through methods that
+/// append an event line before returning, so the on-disk log is always
+/// at least as new as what any observer saw.
+pub struct JobStore {
+    inner: Mutex<Inner>,
+    writer: Mutex<Option<BufWriter<File>>>,
+    path: Option<PathBuf>,
+    /// Events skipped during replay (torn tail, foreign lines).
+    skipped: u64,
+    /// Jobs demoted `running → queued` during replay (crash resumes).
+    resumed: u64,
+}
+
+impl JobStore {
+    /// Volatile store (tests, `wham serve` without `--jobs-db`).
+    pub fn in_memory() -> Self {
+        JobStore {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: Vec::new(),
+                next_id: 0,
+                salt: epoch_ms(),
+            }),
+            writer: Mutex::new(None),
+            path: None,
+            skipped: 0,
+            resumed: 0,
+        }
+    }
+
+    /// Open (or create) the JSONL log at `path` and replay it.
+    pub fn open(path: &Path) -> std::io::Result<Self> {
+        let mut map: HashMap<String, JobRecord> = HashMap::new();
+        let mut order: Vec<String> = Vec::new();
+        let mut skipped = 0u64;
+        if let Ok(text) = std::fs::read_to_string(path) {
+            for line in text.lines() {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                match json::parse(line).ok().and_then(|v| apply_event(&mut map, &mut order, &v)) {
+                    Some(()) => {}
+                    // A torn tail or foreign line is data loss already —
+                    // keep every event that did land.
+                    None => skipped += 1,
+                }
+            }
+        }
+        // Attempts that were mid-flight when the process died re-queue.
+        let mut resumed = 0u64;
+        for rec in map.values_mut() {
+            if rec.state == JobState::Running {
+                rec.state = JobState::Queued;
+                resumed += 1;
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JobStore {
+            inner: Mutex::new(Inner { map, order, next_id: 0, salt: epoch_ms() }),
+            writer: Mutex::new(Some(BufWriter::new(file))),
+            path: Some(path.to_path_buf()),
+            skipped,
+            resumed,
+        })
+    }
+
+    /// Where the log lives (`None` for in-memory stores).
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Lines skipped during replay.
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    /// Jobs found `running` at open time and re-queued.
+    pub fn resumed(&self) -> u64 {
+        self.resumed
+    }
+
+    fn append(&self, line: &str) {
+        let mut w = self.writer.lock().unwrap();
+        if let Some(w) = w.as_mut() {
+            // Mirror the design DB: losing an event to a full disk
+            // degrades restart fidelity, not correctness of this run.
+            let _ = writeln!(w, "{line}");
+            let _ = w.flush();
+        }
+    }
+
+    /// Admit a new job in state `Queued` and return its record.
+    pub fn submit(&self, kind: JobKind, client: &str, request_json: &str) -> JobRecord {
+        let now = epoch_ms();
+        let rec = {
+            let mut inner = self.inner.lock().unwrap();
+            let id = loop {
+                let candidate = format!("j-{:x}-{:04x}", inner.salt, inner.next_id);
+                inner.next_id += 1;
+                if !inner.map.contains_key(&candidate) {
+                    break candidate;
+                }
+            };
+            let rec = JobRecord {
+                id: id.clone(),
+                kind,
+                client: client.to_string(),
+                request: request_json.to_string(),
+                state: JobState::Queued,
+                attempts: 0,
+                submitted_ms: now,
+                started_ms: None,
+                finished_ms: None,
+                error: None,
+                reply: None,
+            };
+            inner.map.insert(id.clone(), rec.clone());
+            inner.order.push(id);
+            rec
+        };
+        self.append(
+            &Obj::new()
+                .str("ev", "submit")
+                .str("id", &rec.id)
+                .u64("t", now)
+                .str("kind", kind.label())
+                .str("client", client)
+                .raw("request", request_json)
+                .finish(),
+        );
+        rec
+    }
+
+    /// Mark `id` running (one more attempt).
+    pub fn mark_running(&self, id: &str) -> Option<JobRecord> {
+        let now = epoch_ms();
+        let rec = {
+            let mut inner = self.inner.lock().unwrap();
+            let rec = inner.map.get_mut(id)?;
+            rec.state = JobState::Running;
+            rec.attempts += 1;
+            rec.started_ms = Some(now);
+            rec.clone()
+        };
+        self.append(
+            &Obj::new().str("ev", "start").str("id", id).u64("t", now).u64("attempt", rec.attempts).finish(),
+        );
+        Some(rec)
+    }
+
+    /// Terminal success with the raw reply JSON.
+    pub fn mark_done(&self, id: &str, reply_json: &str) {
+        let now = epoch_ms();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(rec) = inner.map.get_mut(id) {
+                rec.state = JobState::Done;
+                rec.finished_ms = Some(now);
+                rec.reply = Some(reply_json.to_string());
+                rec.error = None;
+            }
+        }
+        self.append(
+            &Obj::new().str("ev", "done").str("id", id).u64("t", now).raw("reply", reply_json).finish(),
+        );
+    }
+
+    /// Failure. `terminal: false` re-queues the job (retry with backoff);
+    /// `terminal: true` is the end of the line.
+    pub fn mark_failed(&self, id: &str, error: &str, terminal: bool) {
+        let now = epoch_ms();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(rec) = inner.map.get_mut(id) {
+                rec.error = Some(error.to_string());
+                if terminal {
+                    rec.state = JobState::Failed;
+                    rec.finished_ms = Some(now);
+                } else {
+                    rec.state = JobState::Queued;
+                }
+            }
+        }
+        self.append(
+            &Obj::new()
+                .str("ev", "fail")
+                .str("id", id)
+                .u64("t", now)
+                .str("error", error)
+                .bool("terminal", terminal)
+                .finish(),
+        );
+    }
+
+    /// Terminal cooperative cancellation.
+    pub fn mark_cancelled(&self, id: &str) {
+        let now = epoch_ms();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(rec) = inner.map.get_mut(id) {
+                rec.state = JobState::Cancelled;
+                rec.finished_ms = Some(now);
+            }
+        }
+        self.append(&Obj::new().str("ev", "cancel").str("id", id).u64("t", now).finish());
+    }
+
+    /// Put a running job back in the queue without a failure (graceful
+    /// drain ran out of budget; the next boot resumes it).
+    pub fn mark_requeued(&self, id: &str) {
+        let now = epoch_ms();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(rec) = inner.map.get_mut(id) {
+                if !rec.state.is_terminal() {
+                    rec.state = JobState::Queued;
+                }
+            }
+        }
+        self.append(&Obj::new().str("ev", "requeue").str("id", id).u64("t", now).finish());
+    }
+
+    /// Snapshot one record.
+    pub fn get(&self, id: &str) -> Option<JobRecord> {
+        self.inner.lock().unwrap().map.get(id).cloned()
+    }
+
+    /// All records in submission order (replayed jobs first).
+    pub fn list(&self) -> Vec<JobRecord> {
+        let inner = self.inner.lock().unwrap();
+        inner.order.iter().filter_map(|id| inner.map.get(id).cloned()).collect()
+    }
+
+    /// Ids currently queued, in submission order — what the dispatcher
+    /// re-enqueues on boot.
+    pub fn queued_ids(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .order
+            .iter()
+            .filter(|id| inner.map.get(*id).is_some_and(|r| r.state == JobState::Queued))
+            .cloned()
+            .collect()
+    }
+
+    /// Per-state totals plus oldest-queued age.
+    pub fn counts(&self) -> JobCounts {
+        let inner = self.inner.lock().unwrap();
+        let mut c = JobCounts::default();
+        let now = epoch_ms();
+        let mut oldest: Option<u64> = None;
+        for rec in inner.map.values() {
+            match rec.state {
+                JobState::Queued => {
+                    c.queued += 1;
+                    let age = now.saturating_sub(rec.submitted_ms);
+                    oldest = Some(oldest.map_or(age, |o: u64| o.max(age)));
+                }
+                JobState::Running => c.running += 1,
+                JobState::Done => c.done += 1,
+                JobState::Failed => c.failed += 1,
+                JobState::Cancelled => c.cancelled += 1,
+            }
+        }
+        c.oldest_queued_ms = oldest.unwrap_or(0);
+        c
+    }
+
+    /// Rewrite the log as one `submit`-equivalent snapshot line per job
+    /// (plus its terminal event), dropping the replay cost of a long
+    /// event history. Called at graceful shutdown.
+    pub fn checkpoint(&self) -> std::io::Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let records = self.list();
+        let tmp = path.with_extension("jsonl.tmp");
+        {
+            let mut w = BufWriter::new(File::create(&tmp)?);
+            for rec in &records {
+                writeln!(w, "{}", snapshot_lines(rec).join("\n"))?;
+            }
+            w.flush()?;
+        }
+        // Swap the compacted log in, then reopen the appender on it.
+        let mut writer = self.writer.lock().unwrap();
+        std::fs::rename(&tmp, path)?;
+        *writer = Some(BufWriter::new(OpenOptions::new().create(true).append(true).open(path)?));
+        Ok(())
+    }
+}
+
+/// The event lines that reconstruct `rec` from an empty log.
+fn snapshot_lines(rec: &JobRecord) -> Vec<String> {
+    let mut lines = vec![Obj::new()
+        .str("ev", "submit")
+        .str("id", &rec.id)
+        .u64("t", rec.submitted_ms)
+        .str("kind", rec.kind.label())
+        .str("client", &rec.client)
+        .raw("request", &rec.request)
+        .finish()];
+    if rec.attempts > 0 {
+        lines.push(
+            Obj::new()
+                .str("ev", "start")
+                .str("id", &rec.id)
+                .u64("t", rec.started_ms.unwrap_or(rec.submitted_ms))
+                .u64("attempt", rec.attempts)
+                .finish(),
+        );
+    }
+    let t = rec.finished_ms.unwrap_or(rec.submitted_ms);
+    match rec.state {
+        JobState::Done => lines.push(
+            Obj::new()
+                .str("ev", "done")
+                .str("id", &rec.id)
+                .u64("t", t)
+                .raw("reply", rec.reply.as_deref().unwrap_or("null"))
+                .finish(),
+        ),
+        JobState::Failed => lines.push(
+            Obj::new()
+                .str("ev", "fail")
+                .str("id", &rec.id)
+                .u64("t", t)
+                .str("error", rec.error.as_deref().unwrap_or(""))
+                .bool("terminal", true)
+                .finish(),
+        ),
+        JobState::Cancelled => {
+            lines.push(Obj::new().str("ev", "cancel").str("id", &rec.id).u64("t", t).finish())
+        }
+        // Queued/Running replay back to Queued via the demotion rule.
+        JobState::Queued | JobState::Running => {}
+    }
+    lines
+}
+
+/// Apply one replayed event; `None` marks the line unusable.
+fn apply_event(
+    map: &mut HashMap<String, JobRecord>,
+    order: &mut Vec<String>,
+    v: &JsonValue,
+) -> Option<()> {
+    let ev = v.get("ev")?.as_str()?;
+    let id = v.get("id")?.as_str()?.to_string();
+    let t = v.get("t").and_then(JsonValue::as_u64).unwrap_or(0);
+    match ev {
+        "submit" => {
+            let kind: JobKind = v.get("kind")?.as_str()?.parse().ok()?;
+            let client = v.get("client")?.as_str()?.to_string();
+            let request = json::dump(v.get("request")?);
+            if !map.contains_key(&id) {
+                order.push(id.clone());
+            }
+            map.insert(
+                id.clone(),
+                JobRecord {
+                    id,
+                    kind,
+                    client,
+                    request,
+                    state: JobState::Queued,
+                    attempts: 0,
+                    submitted_ms: t,
+                    started_ms: None,
+                    finished_ms: None,
+                    error: None,
+                    reply: None,
+                },
+            );
+            Some(())
+        }
+        "start" => {
+            let rec = map.get_mut(&id)?;
+            rec.state = JobState::Running;
+            rec.attempts = v.get("attempt").and_then(JsonValue::as_u64).unwrap_or(rec.attempts + 1);
+            rec.started_ms = Some(t);
+            Some(())
+        }
+        "done" => {
+            let reply = json::dump(v.get("reply")?);
+            let rec = map.get_mut(&id)?;
+            rec.state = JobState::Done;
+            rec.finished_ms = Some(t);
+            rec.reply = Some(reply);
+            rec.error = None;
+            Some(())
+        }
+        "fail" => {
+            let error = v.get("error")?.as_str()?.to_string();
+            let terminal = v.get("terminal").and_then(JsonValue::as_bool).unwrap_or(true);
+            let rec = map.get_mut(&id)?;
+            rec.error = Some(error);
+            if terminal {
+                rec.state = JobState::Failed;
+                rec.finished_ms = Some(t);
+            } else {
+                rec.state = JobState::Queued;
+            }
+            Some(())
+        }
+        "cancel" => {
+            let rec = map.get_mut(&id)?;
+            rec.state = JobState::Cancelled;
+            rec.finished_ms = Some(t);
+            Some(())
+        }
+        "requeue" => {
+            let rec = map.get_mut(&id)?;
+            if !rec.state.is_terminal() {
+                rec.state = JobState::Queued;
+            }
+            Some(())
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("wham_jobs_{tag}_{}_{}.jsonl", std::process::id(), epoch_ms()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn lifecycle_round_trips_through_the_log() {
+        let path = temp("lifecycle");
+        let store = JobStore::open(&path).unwrap();
+        let a = store.submit(JobKind::Search, "ci", r#"{"model":"bert-base"}"#);
+        let b = store.submit(JobKind::Search, "ci", r#"{"model":"vgg16"}"#);
+        assert_ne!(a.id, b.id);
+        store.mark_running(&a.id);
+        store.mark_done(&a.id, r#"{"best":1}"#);
+        store.mark_running(&b.id);
+        store.mark_failed(&b.id, "backend exploded", true);
+        drop(store);
+
+        let back = JobStore::open(&path).unwrap();
+        assert_eq!(back.skipped(), 0);
+        assert_eq!(back.resumed(), 0);
+        let a2 = back.get(&a.id).unwrap();
+        assert_eq!(a2.state, JobState::Done);
+        assert_eq!(a2.reply.as_deref(), Some(r#"{"best":1}"#));
+        assert_eq!(a2.attempts, 1);
+        let b2 = back.get(&b.id).unwrap();
+        assert_eq!(b2.state, JobState::Failed);
+        assert_eq!(b2.error.as_deref(), Some("backend exploded"));
+        let counts = back.counts();
+        assert_eq!((counts.done, counts.failed, counts.queued), (1, 1, 0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_is_skipped_and_running_jobs_resume_queued() {
+        let path = temp("torn");
+        let store = JobStore::open(&path).unwrap();
+        let a = store.submit(JobKind::Search, "ci", r#"{"model":"bert-base"}"#);
+        store.mark_running(&a.id);
+        drop(store);
+        // Simulate a kill -9 mid-append: a partial final line.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{{\"ev\":\"done\",\"id\":\"{}\",\"reply\":{{\"tr", a.id).unwrap();
+        drop(f);
+
+        let back = JobStore::open(&path).unwrap();
+        assert_eq!(back.skipped(), 1, "torn tail must be skipped, not fatal");
+        assert_eq!(back.resumed(), 1, "running job must re-queue");
+        let a2 = back.get(&a.id).unwrap();
+        assert_eq!(a2.state, JobState::Queued);
+        assert_eq!(a2.attempts, 1, "the dead attempt still counts");
+        assert_eq!(back.queued_ids(), vec![a.id.clone()]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn non_terminal_failure_requeues_and_checkpoint_compacts() {
+        let path = temp("ckpt");
+        let store = JobStore::open(&path).unwrap();
+        let a = store.submit(JobKind::Global, "x", r#"{"models":["gpt2-xl"]}"#);
+        store.mark_running(&a.id);
+        store.mark_failed(&a.id, "transient", false);
+        assert_eq!(store.get(&a.id).unwrap().state, JobState::Queued);
+        store.mark_running(&a.id);
+        store.mark_done(&a.id, r#"{"rows":[]}"#);
+        let before = std::fs::read_to_string(&path).unwrap().lines().count();
+        store.checkpoint().unwrap();
+        let after = std::fs::read_to_string(&path).unwrap().lines().count();
+        assert!(after < before, "checkpoint must compact ({before} -> {after})");
+        // Appends keep working on the swapped-in file, and replay agrees.
+        let b = store.submit(JobKind::Search, "x", r#"{"model":"vgg16"}"#);
+        drop(store);
+        let back = JobStore::open(&path).unwrap();
+        assert_eq!(back.get(&a.id).unwrap().state, JobState::Done);
+        assert_eq!(back.get(&a.id).unwrap().attempts, 2);
+        assert_eq!(back.get(&b.id).unwrap().state, JobState::Queued);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn counts_track_oldest_queued_age() {
+        let store = JobStore::in_memory();
+        assert_eq!(store.counts().oldest_queued_ms, 0);
+        store.submit(JobKind::Search, "a", "{}");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let c = store.counts();
+        assert_eq!(c.queued, 1);
+        assert!(c.oldest_queued_ms >= 5, "age was {}", c.oldest_queued_ms);
+    }
+}

@@ -34,6 +34,9 @@
 //! * [`cluster`] — hierarchical topologies with routed collective
 //!   costs, the discrete-event pipeline simulator (GPipe / 1F1B /
 //!   interleaved-1F1B), and the (pp, tp, dp) strategy auto-sweep
+//! * [`jobs`] — durable async job tier: crash-safe JSONL write-ahead
+//!   store, bounded dispatcher with per-client quotas and retry, SSE
+//!   progress fan-out, graceful drain
 //! * [`runtime`] — PJRT client wrapper for the AOT artifacts
 //! * [`coordinator`] — parallel per-stage search orchestration
 //! * [`service`] — the `wham serve` mining service: HTTP front end,
@@ -51,6 +54,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod distributed;
 pub mod graph;
+pub mod jobs;
 pub mod metrics;
 pub mod models;
 pub mod report;

@@ -18,13 +18,17 @@
 //! * `baseline` — run ConfuciuX+ / Spotlight+ / hand-optimized designs;
 //! * `serve` — long-running design-mining service (see [`wham::service`]);
 //! * `client` — drive a running `wham serve` over HTTP;
+//! * `jobs` — submit/poll/watch/cancel durable async jobs on a server
+//!   (see [`wham::jobs`]); also reachable as `wham client jobs ...`;
+//! * `db` — design-database export/import against a server, plus local
+//!   offline merge of JSONL snapshots;
 //! * `selftest` — verify the PJRT artifact against the native mirror.
 
 use anyhow::{anyhow, bail, Result};
 use wham::api::request::{backend_from_args, parse_dims};
 use wham::api::{
-    resolve_workload, ClusterRequest, CommonRequest, EvaluateRequest, GlobalRequest, NullSink,
-    Progress, ProgressSink, SearchRequest, Session, ToJson,
+    resolve_workload, ClusterRequest, CommonRequest, EvaluateRequest, GlobalRequest, JobRequest,
+    NullSink, Progress, ProgressSink, SearchRequest, Session, ToJson,
 };
 use wham::baselines::{confuciux, spotlight};
 use wham::coordinator::{make_backend, run_parallel, BackendChoice, SearchJob};
@@ -38,7 +42,8 @@ const VALUE_KEYS: &[&str] = &[
     "model", "models", "metric", "backend", "k", "depth", "tmp", "scheme", "framework",
     "iterations", "workers", "jobs", "hysteresis", "seed", "out", "tc", "vc", "dims", "port",
     "db", "addr", "deadline-ms", "workload-dir", "devices", "topology", "schedules", "mine",
-    "chunks", "trace-out",
+    "chunks", "trace-out", "client", "type", "jobs-db", "drain-secs", "job-workers",
+    "queue-depth", "quota-rate", "quota-burst",
 ];
 
 fn main() -> Result<()> {
@@ -75,6 +80,8 @@ fn main() -> Result<()> {
         Some("space") => cmd_space(&args),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("jobs") => cmd_jobs(&args, 1),
+        Some("db") => cmd_db(&args, 1),
         Some("selftest") => cmd_selftest(&args),
         _ => {
             print_usage();
@@ -108,8 +115,14 @@ fn print_usage() {
          wham partition --model <llm> [--depth 32] [--tmp 1] [--scheme gpipe]\n  \
          wham space --model <name>\n  \
          wham serve [--port 8484] [--workers <cores>] [--db designs.jsonl] [--backend auto]\n              \
-         [--trace-out spans.json]\n  \
-         wham client <models|search|evaluate|common|global|cluster|status|upload> [--addr 127.0.0.1:8484] ...\n  \
+         [--jobs-db jobs.jsonl] [--job-workers 2] [--queue-depth 64]\n              \
+         [--quota-rate 1.0] [--quota-burst 32] [--drain-secs 20] [--trace-out spans.json]\n  \
+         wham client <models|search|evaluate|common|global|cluster|status|upload|jobs|db>\n              \
+         [--addr 127.0.0.1:8484] ...\n  \
+         wham jobs submit [--type search|common|global|cluster] [--client NAME] --model <name> ...\n  \
+         wham jobs <status|watch|cancel|result> <job-id>   |   wham jobs list\n  \
+         wham db export [--out db.jsonl]   |   wham db import <db.jsonl>\n  \
+         wham db merge <a.jsonl> <b.jsonl> [...] --out merged.jsonl   (offline, no server)\n  \
          wham selftest"
     );
 }
@@ -155,17 +168,7 @@ fn flush_trace(out: &Option<String>) -> Result<()> {
 /// "rate":...,"depth":...}` lines they can stream without a parser for
 /// the human tables.
 fn ndjson_progress(p: &Progress) -> bool {
-    println!(
-        "{}",
-        wham::util::json::Obj::new()
-            .str("phase", p.phase)
-            .f64("ms", p.elapsed.as_secs_f64() * 1e3)
-            .u64("points", p.points as u64)
-            .f64("best", p.best_score)
-            .f64("rate", p.rate)
-            .u64("depth", p.depth as u64)
-            .finish()
-    );
+    println!("{}", p.to_ndjson());
     true
 }
 
@@ -675,29 +678,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.get_as_or("workers", jobs_from_args(args)?).map_err(|e| anyhow!("{e}"))?;
     let backend = backend_from_args(args)?;
     let db_path = args.get("db").map(std::path::PathBuf::from);
-    // A server has no "end of run" to flush at, so `--trace-out` snapshots
-    // the span buffer to disk periodically (writes are whole-file, so the
-    // file is always a complete Chrome-trace document).
-    if let Some(path) = trace_out_from_args(args) {
-        eprintln!("span tracing on: snapshotting to {path} every 5s");
-        std::thread::spawn(move || loop {
-            std::thread::sleep(std::time::Duration::from_secs(5));
-            let _ = wham::telemetry::trace::write_to(std::path::Path::new(&path));
-        });
-    }
-    let opts = wham::service::ServeOptions { workers, db_path, backend };
+    let jobs_path = args.get("jobs-db").map(std::path::PathBuf::from);
+    let mut jobs = wham::jobs::JobsOptions::default();
+    jobs.workers = args.get_as_or("job-workers", jobs.workers).map_err(|e| anyhow!("{e}"))?;
+    jobs.queue_depth =
+        args.get_as_or("queue-depth", jobs.queue_depth).map_err(|e| anyhow!("{e}"))?;
+    jobs.quota_rate = args.get_as_or("quota-rate", jobs.quota_rate).map_err(|e| anyhow!("{e}"))?;
+    jobs.quota_burst =
+        args.get_as_or("quota-burst", jobs.quota_burst).map_err(|e| anyhow!("{e}"))?;
+    let drain_secs: u64 = args.get_as_or("drain-secs", 20).map_err(|e| anyhow!("{e}"))?;
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let opts = wham::service::ServeOptions {
+        workers,
+        db_path,
+        backend,
+        jobs_path,
+        jobs,
+        drain_secs,
+        trace_out,
+    };
     wham::service::serve_forever(&format!("127.0.0.1:{port}"), opts)
+}
+
+/// `--addr HOST:PORT` (default the `wham serve` default).
+fn addr_from_args(args: &Args) -> Result<std::net::SocketAddr> {
+    let addr_s = args.get_or("addr", "127.0.0.1:8484");
+    addr_s.parse().map_err(|_| anyhow!("--addr expects host:port, got {addr_s:?}"))
 }
 
 /// Drive a running `wham serve` instance over HTTP. Bodies are the typed
 /// requests' canonical wire form — the same bytes the server parses.
 fn cmd_client(args: &Args) -> Result<()> {
-    let addr_s = args.get_or("addr", "127.0.0.1:8484");
-    let addr: std::net::SocketAddr =
-        addr_s.parse().map_err(|_| anyhow!("--addr expects host:port, got {addr_s:?}"))?;
+    let addr = addr_from_args(args)?;
     let sub = args.pos(1).ok_or_else(|| {
-        anyhow!("usage: wham client <models|search|evaluate|common|global|cluster|status|upload> [--addr host:port]")
+        anyhow!("usage: wham client <models|search|evaluate|common|global|cluster|status|upload|jobs|db> [--addr host:port]")
     })?;
+
+    // The async-job and design-db verbs also exist as top-level commands;
+    // `wham client jobs ...` / `wham client db ...` are the same code with
+    // the verb one position later.
+    if sub == "jobs" {
+        return cmd_jobs(args, 2);
+    }
+    if sub == "db" {
+        return cmd_db(args, 2);
+    }
 
     let (method, path, body) = match sub {
         "models" => ("GET", "/models", None),
@@ -723,6 +748,126 @@ fn cmd_client(args: &Args) -> Result<()> {
         bail!("server returned HTTP {status}");
     }
     Ok(())
+}
+
+/// `wham jobs <submit|status|list|watch|cancel|result>` — the async job
+/// tier's CLI (`base` is the verb's positional index, so the same code
+/// backs `wham jobs ...` and `wham client jobs ...`).
+fn cmd_jobs(args: &Args, base: usize) -> Result<()> {
+    let addr = addr_from_args(args)?;
+    let verb = args.pos(base).ok_or_else(|| {
+        anyhow!("usage: wham jobs <submit|status|list|watch|cancel|result> [args] [--addr host:port]")
+    })?;
+    let id_arg = || {
+        args.pos(base + 1)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("usage: wham jobs {verb} <job-id>"))
+    };
+    let fail = |e: std::io::Error| anyhow!("request to {addr} failed: {e} (is `wham serve` running?)");
+
+    let (method, path, body) = match verb {
+        "submit" => {
+            ("POST", "/jobs".to_string(), Some(JobRequest::from_args(args)?.to_json()))
+        }
+        "list" => ("GET", "/jobs".to_string(), None),
+        "status" => ("GET", format!("/jobs/{}", id_arg()?), None),
+        "cancel" => ("DELETE", format!("/jobs/{}", id_arg()?), None),
+        "result" => ("GET", format!("/jobs/{}/reply", id_arg()?), None),
+        "watch" => {
+            // SSE: print each frame line as it arrives, dropping the
+            // `:`-prefixed keepalive comments. The server closes the
+            // stream after the terminal `done` frame.
+            let path = format!("/jobs/{}/events", id_arg()?);
+            let status =
+                wham::service::http::request_stream(addr, "GET", &path, None, |line| {
+                    if !line.starts_with(':') && !line.is_empty() {
+                        println!("{line}");
+                    }
+                    true
+                })
+                .map_err(fail)?;
+            if status != 200 {
+                bail!("server returned HTTP {status}");
+            }
+            return Ok(());
+        }
+        other => bail!("unknown jobs subcommand {other:?} (submit, status, list, watch, cancel, result)"),
+    };
+    let (status, resp) =
+        wham::service::http::request(addr, method, &path, body.as_deref()).map_err(fail)?;
+    println!("{resp}");
+    // Submission answers 202 Accepted; everything else 200.
+    if status != 200 && status != 202 {
+        bail!("server returned HTTP {status}");
+    }
+    Ok(())
+}
+
+/// `wham db <export|import|merge>` — design-database snapshots as JSONL:
+/// `export` pulls a running server's database, `import` pushes one into
+/// it, `merge` unions snapshot files offline (first-wins per fingerprint,
+/// no server needed).
+fn cmd_db(args: &Args, base: usize) -> Result<()> {
+    let verb = args.pos(base).ok_or_else(|| {
+        anyhow!("usage: wham db <export|import|merge> [args] [--addr host:port]")
+    })?;
+    match verb {
+        "export" => {
+            let addr = addr_from_args(args)?;
+            let (status, resp) =
+                wham::service::http::request(addr, "GET", "/db/export", None)
+                    .map_err(|e| anyhow!("request to {addr} failed: {e} (is `wham serve` running?)"))?;
+            if status != 200 {
+                bail!("server returned HTTP {status}");
+            }
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &resp)?;
+                    eprintln!("wrote {} design line(s) to {path}", resp.lines().count());
+                }
+                None => print!("{resp}"),
+            }
+            Ok(())
+        }
+        "import" => {
+            let addr = addr_from_args(args)?;
+            let path = args
+                .pos(base + 1)
+                .ok_or_else(|| anyhow!("usage: wham db import <db.jsonl>"))?;
+            let text = std::fs::read_to_string(path)?;
+            let (status, resp) =
+                wham::service::http::request(addr, "POST", "/db/import", Some(&text))
+                    .map_err(|e| anyhow!("request to {addr} failed: {e} (is `wham serve` running?)"))?;
+            println!("{resp}");
+            if status != 200 {
+                bail!("server returned HTTP {status}");
+            }
+            Ok(())
+        }
+        "merge" => {
+            let inputs = &args.positionals()[base + 1..];
+            if inputs.is_empty() {
+                bail!("usage: wham db merge <a.jsonl> <b.jsonl> [...] --out merged.jsonl");
+            }
+            let out = args
+                .get("out")
+                .ok_or_else(|| anyhow!("--out required (merge does not write in place)"))?;
+            let db = wham::service::cache::DesignDb::in_memory();
+            for path in inputs {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("cannot read {path}: {e}"))?;
+                let s = db.import_jsonl(&text);
+                println!(
+                    "{path}: {} added, {} duplicate, {} malformed",
+                    s.added, s.duplicate, s.malformed
+                );
+            }
+            std::fs::write(out, db.export_jsonl())?;
+            println!("merged {} design(s) into {out}", db.stats().entries);
+            Ok(())
+        }
+        other => bail!("unknown db subcommand {other:?} (export, import, merge)"),
+    }
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {

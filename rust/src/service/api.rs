@@ -15,6 +15,14 @@
 //! | `POST /common`    | [`crate::api::CommonRequest`]     | [`crate::api::CommonReply`] |
 //! | `POST /global`    | [`crate::api::GlobalRequest`]     | [`crate::api::GlobalReply`] |
 //! | `POST /cluster`   | [`crate::api::ClusterRequest`]    | [`crate::api::ClusterReply`] (coalesced + cached) |
+//! | `POST /jobs`      | [`crate::api::JobRequest`]        | [`crate::api::JobReply`] (202; async via [`crate::jobs`]) |
+//! | `GET /jobs`       | —                                 | [`crate::api::JobListReply`] |
+//! | `GET /jobs/:id`   | —                                 | [`crate::api::JobReply`] |
+//! | `GET /jobs/:id/events` | —                            | SSE stream (chunked `text/event-stream`) |
+//! | `GET /jobs/:id/reply`  | —                            | the stored reply, byte-identical to the sync endpoint's |
+//! | `DELETE /jobs/:id`| —                                 | [`crate::api::JobReply`] (cooperative cancel) |
+//! | `GET /db/export`  | —                                 | design-DB JSONL snapshot |
+//! | `POST /db/import` | a design-DB JSONL export          | [`crate::api::DbImportReply`] |
 //! | `GET /status`     | —                                 | [`crate::api::StatusReply`] |
 //! | `GET /metrics`    | —                                 | Prometheus text exposition ([`crate::telemetry::registry`]) |
 //!
@@ -28,19 +36,22 @@
 //! requests by the plan's canonical coalescing key
 //! ([`crate::api::plan`]).
 
+use std::io::Write;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::api::reply::{
-    CoalescerCounters, DbCounters, EndpointStat, PerfCounters, SearchCounters,
+    CoalescerCounters, DbCounters, EndpointStat, JobsCounters, PerfCounters, SearchCounters,
 };
 use crate::api::{
-    ApiError, ClusterRequest, CommonRequest, EvaluateRequest, FromJson, GlobalRequest, NullSink,
-    SearchRequest, Session, StatusReply, ToJson, WorkloadReply,
+    ApiError, ClusterRequest, CommonRequest, DbImportReply, EvaluateRequest, FromJson,
+    GlobalRequest, JobListReply, JobRequest, NullSink, SearchRequest, Session, StatusReply, ToJson,
+    WorkloadReply,
 };
 use crate::coordinator::{make_backend, BackendChoice};
 use crate::cost::native::NativeCost;
+use crate::jobs::{sse_frame, JobManager};
 use crate::service::cache::DesignDb;
 use crate::service::http::{Handler, Request, Response};
 use crate::service::queue::Coalescer;
@@ -100,6 +111,8 @@ impl LatencyRing {
 /// Shared state of one running service.
 pub struct ServiceState {
     pub db: Arc<DesignDb>,
+    /// The async job tier behind `POST /jobs`.
+    pub jobs: Arc<JobManager>,
     pub coalescer: Coalescer,
     pub backend_choice: BackendChoice,
     pub workers: usize,
@@ -118,9 +131,15 @@ pub struct ServiceState {
 }
 
 impl ServiceState {
-    pub fn new(db: Arc<DesignDb>, backend_choice: BackendChoice, workers: usize) -> Self {
+    pub fn new(
+        db: Arc<DesignDb>,
+        backend_choice: BackendChoice,
+        workers: usize,
+        jobs: Arc<JobManager>,
+    ) -> Self {
         Self {
             db,
+            jobs,
             coalescer: Coalescer::new(),
             backend_choice,
             workers,
@@ -132,7 +151,7 @@ impl ServiceState {
             scheduler_evals_total: AtomicU64::new(0),
             latency: [
                 "/models", "/status", "/search", "/evaluate", "/common", "/global", "/cluster",
-                "/workloads", "/metrics",
+                "/workloads", "/metrics", "/jobs", "/db",
             ]
             .into_iter()
             .map(LatencyRing::new)
@@ -151,8 +170,24 @@ impl ServiceState {
             db_hit_rate: if probes == 0 { 0.0 } else { db.hits as f64 / probes as f64 },
             endpoints: self.latency.iter().filter_map(LatencyRing::stat).collect(),
         };
+        let jc = self.jobs.counts();
+        let js = self.jobs.stats();
+        let jobs = JobsCounters {
+            queued: jc.queued,
+            running: jc.running,
+            done: jc.done,
+            failed: jc.failed,
+            cancelled: jc.cancelled,
+            queue_depth: self.jobs.queue_depth() as u64,
+            oldest_age_ms: jc.oldest_queued_ms,
+            submitted: js.submitted,
+            rejected_quota: js.rejected_quota,
+            rejected_depth: js.rejected_depth,
+            retries: js.retries,
+        };
         StatusReply {
             perf,
+            jobs,
             uptime_ms: self.started.elapsed().as_millis() as u64,
             workers: self.workers as u64,
             requests: self.requests.load(Ordering::Relaxed),
@@ -235,6 +270,54 @@ impl Collect for ServiceState {
             labels: vec![],
             value: self.coalescer.in_flight() as f64,
         });
+        let jc = self.jobs.counts();
+        for (state, v) in [
+            ("queued", jc.queued),
+            ("running", jc.running),
+            ("done", jc.done),
+            ("failed", jc.failed),
+            ("cancelled", jc.cancelled),
+        ] {
+            out.push(Sample::Gauge {
+                name: "wham_jobs_total".into(),
+                help: "Jobs in the store by lifecycle state.".into(),
+                labels: label("state", state),
+                value: v as f64,
+            });
+        }
+        out.push(Sample::Gauge {
+            name: "wham_jobs_queue_depth".into(),
+            help: "Jobs waiting in the dispatcher queue.".into(),
+            labels: vec![],
+            value: self.jobs.queue_depth() as f64,
+        });
+        out.push(Sample::Gauge {
+            name: "wham_jobs_oldest_age_ms".into(),
+            help: "Age of the oldest still-queued job (0 when the queue is empty).".into(),
+            labels: vec![],
+            value: jc.oldest_queued_ms as f64,
+        });
+        let js = self.jobs.stats();
+        out.push(Sample::Counter {
+            name: "wham_jobs_submitted_total".into(),
+            help: "Job submissions admitted since boot.".into(),
+            labels: vec![],
+            value: js.submitted,
+        });
+        for (reason, v) in [("quota", js.rejected_quota), ("queue_full", js.rejected_depth)] {
+            out.push(Sample::Counter {
+                name: "wham_jobs_rejected_total".into(),
+                help: "Job submissions rejected at the door, by reason.".into(),
+                labels: label("reason", reason),
+                value: v,
+            });
+        }
+        out.push(Sample::Counter {
+            name: "wham_jobs_retries_total".into(),
+            help: "Transient-failure retries scheduled since boot.".into(),
+            labels: vec![],
+            value: js.retries,
+        });
         let db = self.db.stats();
         let probes = db.hits + db.misses;
         out.push(Sample::Gauge {
@@ -307,14 +390,35 @@ impl Handler for Api {
             ("POST", "/global") => global_response(s, session, &req.body),
             ("POST", "/cluster") => cluster_response(s, session, &req.body),
             ("POST", "/workloads") => api_result(upload_workload(&req.body)),
+            ("POST", "/jobs") => submit_job(s, &req.body),
+            ("GET", "/jobs") => Response::json(
+                JobListReply {
+                    jobs: s.jobs.store().list().iter().map(|r| r.to_reply()).collect(),
+                }
+                .to_json(),
+            ),
+            ("GET", "/db/export") => Response::text(s.db.export_jsonl(), "application/x-ndjson"),
+            ("POST", "/db/import") => {
+                let st = s.db.import_jsonl(&req.body);
+                Response::json(
+                    DbImportReply {
+                        added: st.added,
+                        duplicate: st.duplicate,
+                        malformed: st.malformed,
+                        entries: s.db.stats().entries as u64,
+                    }
+                    .to_json(),
+                )
+            }
             (
                 _,
                 "/models" | "/status" | "/metrics" | "/search" | "/evaluate" | "/common"
-                | "/global" | "/cluster" | "/workloads",
+                | "/global" | "/cluster" | "/workloads" | "/jobs" | "/db/export" | "/db/import",
             ) => Response::error(405, "wrong method for this endpoint"),
+            _ if req.path.starts_with("/jobs/") => job_response(s, req),
             _ => Response::error(
                 404,
-                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, POST /cluster, GET /status, GET /metrics",
+                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, POST /cluster, POST /jobs, GET /jobs, GET /db/export, POST /db/import, GET /status, GET /metrics",
             ),
         };
         // Latency-window recording policy (pinned by the tests below):
@@ -323,8 +427,17 @@ impl Handler for Api {
         // the client waited for them, and coalesced followers count
         // because their wait is what that client experienced (the leader
         // and its followers each record once). Unknown paths are not
-        // tracked: their cardinality is attacker-controlled.
-        if let Some(ring) = s.latency.iter().find(|r| r.name == req.path) {
+        // tracked: their cardinality is attacker-controlled. Per-job
+        // paths normalize onto one "/jobs" ring (ids are unbounded), and
+        // the two /db endpoints share a "/db" ring.
+        let ring_name = if req.path == "/jobs" || req.path.starts_with("/jobs/") {
+            "/jobs"
+        } else if req.path == "/db/export" || req.path == "/db/import" {
+            "/db"
+        } else {
+            req.path.as_str()
+        };
+        if let Some(ring) = s.latency.iter().find(|r| r.name == ring_name) {
             ring.note(t0.elapsed());
         }
         resp
@@ -433,16 +546,117 @@ fn cluster_response(s: &ServiceState, session: &mut Session, body: &str) -> Resp
     into_response(&outcome)
 }
 
+/// `POST /jobs` — validate at the door (400), admit through quota and
+/// queue-depth gates (429/503 with `Retry-After`), answer 202 with the
+/// queued job's record.
+fn submit_job(s: &ServiceState, body: &str) -> Response {
+    let plan = match JobRequest::from_json_str(body).and_then(|r| r.validate()) {
+        Ok(p) => p,
+        Err(e) => return api_result(Err(e)),
+    };
+    match s.jobs.submit(&plan) {
+        Ok(rec) => Response::accepted(rec.to_reply().to_json()),
+        Err(e) => {
+            let (status, retry) = e.http();
+            match retry {
+                Some(secs) => Response::error_retry_after(status, &e.message(), secs),
+                None => Response::error(status, &e.message()),
+            }
+        }
+    }
+}
+
+/// Routes under `/jobs/:id` — poll, raw reply, SSE events, cancel.
+fn job_response(s: &ServiceState, req: &Request) -> Response {
+    let rest = &req.path["/jobs/".len()..];
+    let (id, sub) = match rest.split_once('/') {
+        Some((id, sub)) => (id, Some(sub)),
+        None => (rest, None),
+    };
+    let Some(rec) = s.jobs.store().get(id) else {
+        return Response::error(404, "no such job");
+    };
+    match (req.method.as_str(), sub) {
+        ("GET", None) => Response::json(rec.to_reply().to_json()),
+        ("DELETE", None) => match s.jobs.cancel(id) {
+            Some(rec) => Response::json(rec.to_reply().to_json()),
+            None => Response::error(404, "no such job"),
+        },
+        ("GET", Some("reply")) => match rec.reply {
+            // The raw stored bytes — byte-identical to what the
+            // synchronous endpoint sent for the same plan.
+            Some(r) => Response::json(r),
+            None => Response::error(404, "job has no reply yet (poll GET /jobs/:id for state)"),
+        },
+        ("GET", Some("events")) => sse_response(Arc::clone(&s.jobs), id.to_string()),
+        (_, None | Some("reply") | Some("events")) => {
+            Response::error(405, "wrong method for this endpoint")
+        }
+        _ => Response::error(404, "unknown job sub-resource (events, reply)"),
+    }
+}
+
+/// `GET /jobs/:id/events` — Server-Sent Events over a chunked response.
+/// Live progress frames are relayed from the dispatcher's per-job ring;
+/// once the job is terminal the stream ends with an authoritative
+/// `state` frame plus a `done` frame from the store. Late watchers of
+/// already-terminal jobs get just those two frames.
+fn sse_response(jobs: Arc<JobManager>, id: String) -> Response {
+    Response::stream(
+        "text/event-stream",
+        Box::new(move |w| {
+            let mut from = 0usize;
+            if let Some(live) = jobs.watch(&id) {
+                loop {
+                    let (frames, next, terminal) = live.wait(from, Duration::from_secs(10));
+                    from = next;
+                    for f in &frames {
+                        w.write_all(f.as_bytes())?;
+                    }
+                    if terminal {
+                        break;
+                    }
+                    if frames.is_empty() {
+                        // SSE comment keepalive: detects dead clients and
+                        // defeats idle-connection middleboxes.
+                        w.write_all(b": keepalive\n\n")?;
+                    }
+                    w.flush()?;
+                }
+            }
+            if let Some(rec) = jobs.store().get(&id) {
+                let reply = rec.to_reply();
+                let brief = reply.to_json_brief();
+                w.write_all(sse_frame(Some("state"), &brief).as_bytes())?;
+                w.write_all(sse_frame(Some("done"), &brief).as_bytes())?;
+            }
+            Ok(())
+        }),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::jobs::store::JobStore;
+    use crate::jobs::JobsOptions;
 
-    fn api() -> (Api, Session) {
-        let state =
-            Arc::new(ServiceState::new(Arc::new(DesignDb::in_memory()), BackendChoice::Native, 1));
+    fn api_with(opts: JobsOptions) -> (Api, Session) {
+        let db = Arc::new(DesignDb::in_memory());
+        let jobs = JobManager::start(Arc::new(JobStore::in_memory()), opts, {
+            let db = Arc::clone(&db);
+            move || {
+                Session::with_backend(Box::new(NativeCost)).with_db(Arc::clone(&db)).with_jobs(1)
+            }
+        });
+        let state = Arc::new(ServiceState::new(db, BackendChoice::Native, 1, jobs));
         let api = Api { state };
         let session = api.make_ctx();
         (api, session)
+    }
+
+    fn api() -> (Api, Session) {
+        api_with(JobsOptions { workers: 1, ..JobsOptions::default() })
     }
 
     fn req(method: &str, path: &str, body: &str) -> Request {
@@ -513,5 +727,97 @@ mod tests {
         // Scrapes record into their own ring (the body is rendered
         // before the note, so a scrape never sees itself).
         assert_eq!(ring_count(&api.state, "/metrics"), 1);
+    }
+
+    #[test]
+    fn jobs_endpoints_admit_reject_and_report() {
+        // A one-token bucket that refills glacially: the second submit
+        // must be a 429 with Retry-After.
+        let (api, mut s) = api_with(JobsOptions {
+            workers: 1,
+            quota_rate: 0.001,
+            quota_burst: 1.0,
+            ..JobsOptions::default()
+        });
+        let body = r#"{"client":"ci","request":{"model":"alexnet"}}"#;
+        let r = api.handle(&mut s, &req("POST", "/jobs", body));
+        assert_eq!(r.status, 202, "{}", r.body);
+        let v = crate::util::json::parse(&r.body).unwrap();
+        let id = v.get("id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(v.get("state").unwrap().as_str(), Some("queued"));
+
+        let r = api.handle(&mut s, &req("POST", "/jobs", body));
+        assert_eq!(r.status, 429, "{}", r.body);
+        assert!(
+            r.headers.iter().any(|(k, _)| *k == "Retry-After"),
+            "429 must carry Retry-After"
+        );
+
+        // Inner-request validation runs at admission: a bad job is an
+        // HTTP error at POST time, never a failed job found by polling.
+        let r = api.handle(&mut s, &req("POST", "/jobs", r#"{"request":{"model":"nope"}}"#));
+        assert_eq!(r.status, 404, "unknown model surfaces the inner error: {}", r.body);
+
+        let r = api.handle(&mut s, &req("GET", &format!("/jobs/{id}"), ""));
+        assert_eq!(r.status, 200);
+        let r = api.handle(&mut s, &req("GET", "/jobs", ""));
+        assert!(r.body.contains(&id), "{}", r.body);
+        let r = api.handle(&mut s, &req("GET", "/jobs/j-nope-0000", ""));
+        assert_eq!(r.status, 404);
+        let r = api.handle(&mut s, &req("PUT", &format!("/jobs/{id}"), ""));
+        assert_eq!(r.status, 405);
+
+        // All of the above recorded under the one "/jobs" ring.
+        assert_eq!(ring_count(&api.state, "/jobs"), 7);
+
+        // /status carries the same admission counters the manager holds.
+        let status = api.state.status();
+        assert_eq!(status.jobs.submitted, 1);
+        assert_eq!(status.jobs.rejected_quota, 1);
+
+        // Wait for the job so its worker thread is not killed mid-search
+        // when the test process tears down shared state.
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let rec = api.state.jobs.store().get(&id).unwrap();
+            if rec.state.is_terminal() {
+                assert_eq!(rec.state, crate::api::job::JobState::Done, "{:?}", rec.error);
+                break;
+            }
+            assert!(Instant::now() < deadline, "job stuck");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // The raw reply endpoint serves the stored bytes.
+        let r = api.handle(&mut s, &req("GET", &format!("/jobs/{id}/reply"), ""));
+        assert_eq!(r.status, 200);
+        assert!(r.body.contains("\"best\""), "{}", r.body);
+    }
+
+    #[test]
+    fn db_export_import_round_trips_through_the_handlers() {
+        let (api, mut s) = api();
+        // Populate the DB via a synchronous search.
+        let r = api.handle(&mut s, &req("POST", "/search", "{\"model\":\"alexnet\"}"));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let r = api.handle(&mut s, &req("GET", "/db/export", ""));
+        assert_eq!(r.status, 200);
+        assert!(!r.body.is_empty(), "export of a mined DB must not be empty");
+        let export = r.body;
+
+        // Import into a fresh service: everything is new.
+        let (api2, mut s2) = api();
+        let r = api2.handle(&mut s2, &req("POST", "/db/import", &export));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = crate::util::json::parse(&r.body).unwrap();
+        let added = v.get("added").unwrap().as_u64().unwrap();
+        assert!(added > 0);
+        assert_eq!(v.get("malformed").unwrap().as_u64(), Some(0));
+        // Re-import: all duplicates now.
+        let r = api2.handle(&mut s2, &req("POST", "/db/import", &export));
+        let v = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(v.get("added").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("duplicate").unwrap().as_u64(), Some(added));
+        // Both /db endpoints share one ring.
+        assert_eq!(ring_count(&api2.state, "/db"), 2);
     }
 }

@@ -156,6 +156,68 @@ impl DesignDb {
     pub fn scoped(&self, ctx: u64) -> ScopedCache<'_> {
         ScopedCache { db: self, ctx }
     }
+
+    /// Flush the append writer (graceful shutdown; appends already flush
+    /// per line, so this only matters after an I/O hiccup).
+    pub fn flush(&self) {
+        if let Some(w) = self.writer.lock().unwrap().as_mut() {
+            let _ = w.flush();
+        }
+    }
+
+    /// Serialize every entry as the same JSONL lines the backing file
+    /// holds, sorted by `(ctx, dims)` so exports are deterministic.
+    /// This is the portability format: fingerprint-derived context keys
+    /// mean another instance can import these lines directly.
+    pub fn export_jsonl(&self) -> String {
+        let mut entries: Vec<((u64, Dims), DesignPoint)> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            entries.extend(shard.read().unwrap().iter().map(|(k, v)| (*k, *v)));
+        }
+        entries.sort_by_key(|((ctx, d), _)| (*ctx, d.tc_x, d.tc_y, d.vc_w));
+        let mut out = String::new();
+        for ((ctx, d), p) in &entries {
+            out.push_str(&entry_json(*ctx, d, p));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Merge a JSONL export into this database. Existing keys win (the
+    /// local entry was mined under the same context, so the values agree
+    /// up to backend noise); new entries are inserted and appended to the
+    /// backing file. Unparseable lines are counted, not fatal.
+    pub fn import_jsonl(&self, text: &str) -> ImportStats {
+        let mut stats = ImportStats::default();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            match parse_entry(line) {
+                Some((ctx, d, p)) => {
+                    let exists =
+                        self.shards[shard_of(ctx, &d)].read().unwrap().contains_key(&(ctx, d));
+                    if exists {
+                        stats.duplicate += 1;
+                    } else {
+                        self.put(ctx, d, p);
+                        stats.added += 1;
+                    }
+                }
+                None => stats.malformed += 1,
+            }
+        }
+        stats
+    }
+}
+
+/// What [`DesignDb::import_jsonl`] did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ImportStats {
+    pub added: u64,
+    pub duplicate: u64,
+    pub malformed: u64,
 }
 
 /// Borrowed [`EvalCache`] over one evaluation context of a [`DesignDb`].
@@ -297,6 +359,42 @@ mod tests {
         assert_ne!(k0, context_key(fp, 4, &legacy_mcr, "native"));
         let fast_knobs = SearchOptions { naive_annotation: true, jobs: 8, ..base };
         assert_eq!(k0, context_key(fp, 4, &fast_knobs, "native"));
+    }
+
+    #[test]
+    fn export_import_merges_between_databases() {
+        let a = DesignDb::in_memory();
+        let d1 = Dims { tc_x: 128, tc_y: 64, vc_w: 32 };
+        let d2 = Dims { tc_x: 64, tc_y: 64, vc_w: 64 };
+        a.put(1, d1, point(1.0));
+        a.put(2, d2, point(2.0));
+        let export = a.export_jsonl();
+        assert_eq!(export.lines().count(), 2);
+        // Exports are deterministic (sorted), so they are diffable.
+        assert_eq!(export, a.export_jsonl());
+
+        let b = DesignDb::in_memory();
+        b.put(1, d1, point(9.0)); // local entry must win over the import
+        let stats = b.import_jsonl(&export);
+        assert_eq!(stats, ImportStats { added: 1, duplicate: 1, malformed: 0 });
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.get(1, &d1).unwrap().score, 9.0);
+        assert_eq!(b.get(2, &d2).unwrap().score, 2.0);
+
+        // Corrupt lines count as malformed, everything else still lands.
+        let stats = b.import_jsonl("{oops\n");
+        assert_eq!(stats, ImportStats { added: 0, duplicate: 0, malformed: 1 });
+
+        // Importing into a persistent db appends the new entries.
+        let path = temp_db_path("import");
+        {
+            let c = DesignDb::open(&path).unwrap();
+            let s = c.import_jsonl(&export);
+            assert_eq!(s.added, 2);
+        }
+        let c = DesignDb::open(&path).unwrap();
+        assert_eq!(c.stats().loaded, 2);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

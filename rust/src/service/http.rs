@@ -8,15 +8,23 @@
 //! are `Connection: close`: one request, one response, which keeps the
 //! parser ~100 lines and is plenty for a mining-service request profile
 //! where the work dwarfs connection setup.
+//!
+//! Two hardening properties hold per connection: a slowloris client
+//! (trickling bytes, or oversized head/body) costs one `408`/`413`
+//! response instead of pinning a worker, and a [`Response`] may carry a
+//! streaming body (`Transfer-Encoding: chunked`, flushed per write) —
+//! the transport under `GET /jobs/:id/events` SSE.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-/// Cap on request bodies (1 MiB) — mining requests are tiny JSON.
+/// Cap on request bodies (1 MiB) — mining requests are tiny JSON, and
+/// design-DB imports of a few thousand entries still fit comfortably.
 const MAX_BODY: usize = 1 << 20;
 /// Cap on the request line + headers (64 KiB).
 const MAX_HEAD: usize = 64 << 10;
@@ -36,48 +44,108 @@ pub struct Request {
     pub body: String,
 }
 
+/// A streaming response body: called with a writer whose every `write`
+/// becomes one flushed HTTP chunk. Returning `Err` (client gone) simply
+/// ends the response.
+pub type StreamBody = Box<dyn FnOnce(&mut dyn Write) -> std::io::Result<()> + Send>;
+
 /// An HTTP response to be serialized.
-#[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub body: String,
     /// `Content-Type` header value. Everything in the API is JSON except
-    /// `GET /metrics`, which serves the Prometheus text exposition.
+    /// `GET /metrics` (Prometheus text) and `GET /jobs/:id/events` (SSE).
     pub content_type: &'static str,
+    /// Extra headers, e.g. `Retry-After` on 429/503.
+    pub headers: Vec<(&'static str, String)>,
+    /// When set, the response is sent `Transfer-Encoding: chunked` and
+    /// this closure produces the body; `body` is ignored.
+    pub stream: Option<StreamBody>,
 }
 
 impl Response {
+    fn base(status: u16, body: String, content_type: &'static str) -> Self {
+        Self { status, body, content_type, headers: Vec::new(), stream: None }
+    }
+
     /// 200 with a JSON body.
     pub fn json(body: impl Into<String>) -> Self {
-        Self { status: 200, body: body.into(), content_type: "application/json" }
+        Self::base(200, body.into(), "application/json")
+    }
+
+    /// 202 Accepted with a JSON body (`POST /jobs`).
+    pub fn accepted(body: impl Into<String>) -> Self {
+        Self::base(202, body.into(), "application/json")
     }
 
     /// 200 with a Prometheus text-exposition body (`GET /metrics`).
     pub fn prometheus(body: impl Into<String>) -> Self {
-        Self {
-            status: 200,
-            body: body.into(),
-            content_type: "text/plain; version=0.0.4; charset=utf-8",
-        }
+        Self::base(200, body.into(), "text/plain; version=0.0.4; charset=utf-8")
+    }
+
+    /// 200 with an arbitrary content type (e.g. a JSONL export).
+    pub fn text(body: impl Into<String>, content_type: &'static str) -> Self {
+        Self::base(200, body.into(), content_type)
     }
 
     /// An error with a `{"error": ...}` JSON body.
     pub fn error(status: u16, msg: &str) -> Self {
-        Self {
+        Self::base(
             status,
-            body: format!("{{\"error\":{}}}", crate::util::json::esc(msg)),
-            content_type: "application/json",
-        }
+            format!("{{\"error\":{}}}", crate::util::json::esc(msg)),
+            "application/json",
+        )
+    }
+
+    /// [`Response::error`] plus a `Retry-After: secs` header (429/503
+    /// admission rejections).
+    pub fn error_retry_after(status: u16, msg: &str, secs: u64) -> Self {
+        Self::error(status, msg).with_header("Retry-After", secs.to_string())
+    }
+
+    /// A chunked streaming response (`text/event-stream` for SSE).
+    pub fn stream(content_type: &'static str, f: StreamBody) -> Self {
+        Self { stream: Some(f), ..Self::base(200, String::new(), content_type) }
+    }
+
+    /// Attach an extra header.
+    pub fn with_header(mut self, name: &'static str, value: String) -> Self {
+        self.headers.push((name, value));
+        self
     }
 
     fn reason(&self) -> &'static str {
         match self.status {
             200 => "OK",
+            202 => "Accepted",
             400 => "Bad Request",
             404 => "Not Found",
             405 => "Method Not Allowed",
+            408 => "Request Timeout",
+            413 => "Payload Too Large",
+            429 => "Too Many Requests",
+            503 => "Service Unavailable",
             _ => "Internal Server Error",
         }
+    }
+}
+
+/// Why reading a request failed — drives the status code so a slow or
+/// oversized client gets an honest 408/413 instead of a generic 400.
+#[derive(Debug)]
+enum ReadError {
+    /// Socket timed out mid-read (slowloris or dead peer).
+    Timeout,
+    /// Head or declared body beyond the caps.
+    TooLarge(&'static str),
+    /// Anything else unparseable.
+    Malformed(String),
+}
+
+fn classify_io(e: std::io::Error) -> ReadError {
+    match e.kind() {
+        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock => ReadError::Timeout,
+        _ => ReadError::Malformed(e.to_string()),
     }
 }
 
@@ -91,12 +159,24 @@ pub trait Handler: Send + Sync + 'static {
 }
 
 /// Spawn the acceptor plus `workers` handler threads on `listener`.
-/// Returns the spawned handles; the threads run until the process exits
-/// (the service has no drain protocol yet — see ROADMAP).
+/// Returns the spawned handles; the threads run until the process exits.
 pub fn serve<H: Handler>(
     listener: TcpListener,
     workers: usize,
     handler: Arc<H>,
+) -> Vec<JoinHandle<()>> {
+    serve_with_shutdown(listener, workers, handler, Arc::new(AtomicBool::new(false)))
+}
+
+/// [`serve`], but the acceptor exits once `stop` is set (checked per
+/// accepted connection — wake it by connecting to the listener). Workers
+/// finish their in-flight responses and exit when the accept channel
+/// drops.
+pub fn serve_with_shutdown<H: Handler>(
+    listener: TcpListener,
+    workers: usize,
+    handler: Arc<H>,
+    stop: Arc<AtomicBool>,
 ) -> Vec<JoinHandle<()>> {
     let workers = workers.max(1);
     let (tx, rx): (Sender<TcpStream>, Receiver<TcpStream>) = channel();
@@ -127,6 +207,9 @@ pub fn serve<H: Handler>(
             .name("wham-accept".to_string())
             .spawn(move || {
                 for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        return; // drops tx; workers drain and exit
+                    }
                     match stream {
                         Ok(s) => {
                             if tx.send(s).is_err() {
@@ -158,19 +241,22 @@ fn serve_connection<H: Handler>(handler: &H, ctx: &mut H::Ctx, stream: TcpStream
                 ),
             }
         }
-        Err(e) => Response::error(400, &format!("malformed request: {e}")),
+        Err(ReadError::Timeout) => Response::error(408, "timed out reading request"),
+        Err(ReadError::TooLarge(what)) => Response::error(413, what),
+        Err(ReadError::Malformed(e)) => Response::error(400, &format!("malformed request: {e}")),
     };
-    let _ = write_response(&stream, &resp);
+    let _ = write_response(&stream, resp);
     let _ = stream.shutdown(std::net::Shutdown::Both);
 }
 
-fn read_request(stream: &TcpStream) -> std::io::Result<Request> {
-    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+fn read_request(stream: &TcpStream) -> Result<Request, ReadError> {
+    let bad = |msg: &str| ReadError::Malformed(msg.to_string());
     // Hard cap on total bytes read per request; an endless request line
     // hits the cap and errors instead of growing without bound.
     let mut reader = BufReader::new(stream.take((MAX_HEAD + MAX_BODY) as u64));
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    reader.read_line(&mut line).map_err(classify_io)?;
+    let mut head_bytes = line.len();
     let mut parts = line.split_whitespace();
     let method = parts.next().ok_or_else(|| bad("empty request line"))?.to_string();
     let target = parts.next().ok_or_else(|| bad("missing request target"))?;
@@ -182,8 +268,12 @@ fn read_request(stream: &TcpStream) -> std::io::Result<Request> {
     let mut content_length = 0usize;
     loop {
         let mut h = String::new();
-        if reader.read_line(&mut h)? == 0 {
+        if reader.read_line(&mut h).map_err(classify_io)? == 0 {
             return Err(bad("connection closed mid-headers"));
+        }
+        head_bytes += h.len();
+        if head_bytes > MAX_HEAD {
+            return Err(ReadError::TooLarge("request headers too large"));
         }
         let h = h.trim_end();
         if h.is_empty() {
@@ -197,35 +287,131 @@ fn read_request(stream: &TcpStream) -> std::io::Result<Request> {
         }
     }
     if content_length > MAX_BODY {
-        return Err(bad("request body too large"));
+        return Err(ReadError::TooLarge("request body too large"));
     }
     let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
+    reader.read_exact(&mut body).map_err(classify_io)?;
     let body = String::from_utf8(body).map_err(|_| bad("request body is not utf-8"))?;
     Ok(Request { method, path, query, body })
 }
 
-fn write_response(mut stream: &TcpStream, resp: &Response) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        resp.status,
-        resp.reason(),
-        resp.content_type,
-        resp.body.len()
-    );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(resp.body.as_bytes())?;
-    stream.flush()
+/// Adapter turning each `write` into one flushed HTTP chunk, so an SSE
+/// frame reaches the client the moment the search emits it.
+struct ChunkedWriter<'a> {
+    stream: &'a TcpStream,
+}
+
+impl Write for ChunkedWriter<'_> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut s = self.stream;
+        write!(s, "{:x}\r\n", buf.len())?;
+        s.write_all(buf)?;
+        s.write_all(b"\r\n")?;
+        s.flush()?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        let mut s = self.stream;
+        s.flush()
+    }
+}
+
+fn write_response(mut stream: &TcpStream, resp: Response) -> std::io::Result<()> {
+    let mut extra = String::new();
+    for (k, v) in &resp.headers {
+        extra.push_str(k);
+        extra.push_str(": ");
+        extra.push_str(v);
+        extra.push_str("\r\n");
+    }
+    match resp.stream {
+        Some(f) => {
+            let head = format!(
+                "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nCache-Control: no-cache\r\n{extra}Connection: close\r\n\r\n",
+                resp.status,
+                resp.reason(),
+                resp.content_type,
+            );
+            stream.write_all(head.as_bytes())?;
+            stream.flush()?;
+            let mut w = ChunkedWriter { stream };
+            // A panicking stream body must cost one connection, not one
+            // worker (mirrors the handler's catch_unwind).
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                let _ = f(&mut w);
+            }));
+            stream.write_all(b"0\r\n\r\n")?;
+            stream.flush()
+        }
+        None => {
+            let head = format!(
+                "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{extra}Connection: close\r\n\r\n",
+                resp.status,
+                resp.reason(),
+                resp.content_type,
+                resp.body.len()
+            );
+            stream.write_all(head.as_bytes())?;
+            stream.write_all(resp.body.as_bytes())?;
+            stream.flush()
+        }
+    }
+}
+
+/// Decode a `Transfer-Encoding: chunked` body already read to EOF.
+fn dechunk(raw: &[u8]) -> std::io::Result<Vec<u8>> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let mut out = Vec::with_capacity(raw.len());
+    let mut pos = 0usize;
+    loop {
+        let rest = &raw[pos..];
+        let nl = rest
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .ok_or_else(|| bad("chunked body: missing size line"))?;
+        let size_line = std::str::from_utf8(&rest[..nl]).map_err(|_| bad("bad chunk size"))?;
+        let size_hex = size_line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_hex, 16).map_err(|_| bad("bad chunk size"))?;
+        pos += nl + 2;
+        if size == 0 {
+            return Ok(out);
+        }
+        if pos + size > raw.len() {
+            return Err(bad("truncated chunk"));
+        }
+        out.extend_from_slice(&raw[pos..pos + size]);
+        pos += size + 2; // skip the chunk's trailing CRLF
+        if pos > raw.len() {
+            return Err(bad("truncated chunk terminator"));
+        }
+    }
 }
 
 /// Minimal blocking HTTP client for `wham client` and the tests: one
-/// request over a fresh connection, returns `(status, body)`.
+/// request over a fresh connection, returns `(status, body)` (chunked
+/// bodies are decoded).
 pub fn request(
     addr: SocketAddr,
     method: &str,
     path: &str,
     body: Option<&str>,
 ) -> std::io::Result<(u16, String)> {
+    let (status, _, body) = request_full(addr, method, path, body)?;
+    Ok((status, body))
+}
+
+/// Like [`request`], also returning the response headers as lowercased
+/// `(name, value)` pairs — admission-control callers read `retry-after`.
+pub fn request_full(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> std::io::Result<(u16, Vec<(String, String)>, String)> {
     let mut stream = TcpStream::connect(addr)?;
     let body = body.unwrap_or("");
     let req = format!(
@@ -234,17 +420,133 @@ pub fn request(
     );
     stream.write_all(req.as_bytes())?;
     stream.flush()?;
-    let mut raw = String::new();
+    let mut raw = Vec::new();
     // The server closes the connection after one response.
-    BufReader::new(stream).read_to_string(&mut raw)?;
+    BufReader::new(stream).read_to_end(&mut raw)?;
     let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
-    let (head, resp_body) = raw.split_once("\r\n\r\n").ok_or_else(|| bad("no header break"))?;
-    let status: u16 = head
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or_else(|| bad("no header break"))?;
+    let head = std::str::from_utf8(&raw[..split]).map_err(|_| bad("non-utf8 head"))?;
+    let resp_body = &raw[split + 4..];
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("bad status line"))?;
+    let mut headers = Vec::new();
+    let mut chunked = false;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            let k = k.trim().to_ascii_lowercase();
+            let v = v.trim().to_string();
+            if k == "transfer-encoding" && v.eq_ignore_ascii_case("chunked") {
+                chunked = true;
+            }
+            headers.push((k, v));
+        }
+    }
+    let resp_body = if chunked { dechunk(resp_body)? } else { resp_body.to_vec() };
+    let resp_body = String::from_utf8(resp_body).map_err(|_| bad("non-utf8 body"))?;
+    Ok((status, headers, resp_body))
+}
+
+/// Streaming client: delivers each line of the response body to
+/// `on_line` as it arrives (dechunked), without waiting for EOF — how
+/// `wham jobs watch` follows an SSE stream. `on_line` returning `false`
+/// stops reading early. Returns the HTTP status.
+pub fn request_stream(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    mut on_line: impl FnMut(&str) -> bool,
+) -> std::io::Result<u16> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    stream.flush()?;
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
         .split_whitespace()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| bad("bad status line"))?;
-    Ok((status, resp_body.to_string()))
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Err(bad("connection closed mid-headers"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("transfer-encoding")
+                && v.trim().eq_ignore_ascii_case("chunked")
+            {
+                chunked = true;
+            }
+        }
+    }
+    let mut pending = String::new();
+    let mut deliver = |pending: &mut String, on_line: &mut dyn FnMut(&str) -> bool| -> bool {
+        while let Some(nl) = pending.find('\n') {
+            let line: String = pending.drain(..=nl).collect();
+            if !on_line(line.trim_end_matches(['\n', '\r'])) {
+                return false;
+            }
+        }
+        true
+    };
+    if chunked {
+        loop {
+            let mut size_line = String::new();
+            if reader.read_line(&mut size_line)? == 0 {
+                break;
+            }
+            let size_hex = size_line.trim().split(';').next().unwrap_or("").trim();
+            if size_hex.is_empty() {
+                continue;
+            }
+            let size = usize::from_str_radix(size_hex, 16).map_err(|_| bad("bad chunk size"))?;
+            if size == 0 {
+                break;
+            }
+            let mut chunk = vec![0u8; size + 2]; // data + CRLF
+            reader.read_exact(&mut chunk)?;
+            chunk.truncate(size);
+            pending.push_str(&String::from_utf8_lossy(&chunk));
+            if !deliver(&mut pending, &mut on_line) {
+                return Ok(status);
+            }
+        }
+    } else {
+        loop {
+            let mut l = String::new();
+            if reader.read_line(&mut l)? == 0 {
+                break;
+            }
+            pending.push_str(&l);
+            if !deliver(&mut pending, &mut on_line) {
+                return Ok(status);
+            }
+        }
+    }
+    if !pending.is_empty() {
+        on_line(pending.trim_end_matches(['\n', '\r']));
+    }
+    Ok(status)
 }
 
 #[cfg(test)]
@@ -259,6 +561,20 @@ mod tests {
         }
         fn handle(&self, ctx: &mut usize, req: &Request) -> Response {
             *ctx += 1;
+            if req.path == "/stream" {
+                return Response::stream(
+                    "text/event-stream",
+                    Box::new(|w: &mut dyn Write| {
+                        for i in 0..3 {
+                            write!(w, "data: frame-{i}\n\n")?;
+                        }
+                        Ok(())
+                    }),
+                );
+            }
+            if req.path == "/retry" {
+                return Response::error_retry_after(429, "slow down", 7);
+            }
             Response::json(format!(
                 "{{\"method\":{},\"path\":{},\"body\":{},\"n\":{}}}",
                 crate::util::json::esc(&req.method),
@@ -301,6 +617,105 @@ mod tests {
         for t in threads {
             let (status, _) = t.join().unwrap();
             assert_eq!(status, 200);
+        }
+    }
+
+    #[test]
+    fn streaming_response_chunks_and_dechunks() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        serve(listener, 2, Arc::new(Echo));
+        // Blocking client sees the whole dechunked body.
+        let (status, body) = request(addr, "GET", "/stream", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "data: frame-0\n\ndata: frame-1\n\ndata: frame-2\n\n");
+        // Streaming client sees the individual lines.
+        let mut lines = Vec::new();
+        let status = request_stream(addr, "GET", "/stream", None, |l| {
+            lines.push(l.to_string());
+            true
+        })
+        .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(lines.iter().filter(|l| l.starts_with("data: ")).count(), 3);
+        // Early-stop after the first data line.
+        let mut n = 0;
+        request_stream(addr, "GET", "/stream", None, |l| {
+            if l.starts_with("data: ") {
+                n += 1;
+            }
+            n < 1
+        })
+        .unwrap();
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn retry_after_header_reaches_the_client() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        serve(listener, 1, Arc::new(Echo));
+        let (status, headers, body) = request_full(addr, "GET", "/retry", None).unwrap();
+        assert_eq!(status, 429);
+        assert!(body.contains("slow down"));
+        let retry = headers.iter().find(|(k, _)| k == "retry-after").map(|(_, v)| v.as_str());
+        assert_eq!(retry, Some("7"));
+    }
+
+    #[test]
+    fn oversized_body_and_headers_get_413() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        serve(listener, 1, Arc::new(Echo));
+        // Declared body beyond the cap — rejected from the header alone.
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /echo HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1).unwrap();
+        s.flush().unwrap();
+        let mut raw = String::new();
+        BufReader::new(s).read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 413 "), "{raw}");
+
+        // Header section beyond the cap.
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET /echo HTTP/1.1\r\n").unwrap();
+        let filler = format!("X-Filler: {}\r\n", "y".repeat(8000));
+        for _ in 0..10 {
+            s.write_all(filler.as_bytes()).unwrap();
+        }
+        s.flush().unwrap();
+        let mut raw = String::new();
+        BufReader::new(s).read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 413 "), "{raw}");
+    }
+
+    #[test]
+    fn io_timeouts_classify_as_408() {
+        let timeout = std::io::Error::new(std::io::ErrorKind::TimedOut, "t");
+        assert!(matches!(classify_io(timeout), ReadError::Timeout));
+        let block = std::io::Error::new(std::io::ErrorKind::WouldBlock, "w");
+        assert!(matches!(classify_io(block), ReadError::Timeout));
+        let other = std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "e");
+        assert!(matches!(classify_io(other), ReadError::Malformed(_)));
+    }
+
+    #[test]
+    fn shutdown_flag_stops_the_acceptor() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handles = serve_with_shutdown(listener, 1, Arc::new(Echo), Arc::clone(&stop));
+        let (status, _) = request(addr, "GET", "/ping", None).unwrap();
+        assert_eq!(status, 200);
+        stop.store(true, Ordering::SeqCst);
+        // Wake the acceptor; this connection is the last one served.
+        let _ = TcpStream::connect(addr);
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Connections after shutdown are refused or reset, never served.
+        match request(addr, "GET", "/ping", None) {
+            Ok((status, _)) => panic!("served {status} after shutdown"),
+            Err(_) => {}
         }
     }
 }

@@ -10,9 +10,16 @@
 //! requests share one computation, and the accumulated top-k pools
 //! warm-start the distributed global search.
 //!
+//! Long-running work has a second front door, the async job tier
+//! ([`crate::jobs`]): `POST /jobs` answers with an id immediately, the
+//! dispatcher mines on its own threads, and a crash-safe write-ahead log
+//! (`--jobs-db`) resumes interrupted jobs on the next boot. SIGINT /
+//! SIGTERM trigger a graceful drain instead of dropping in-flight work.
+//!
 //! ```bash
-//! wham serve --port 8484 --workers 8 --db designs.jsonl
+//! wham serve --port 8484 --workers 8 --db designs.jsonl --jobs-db jobs.jsonl
 //! wham client search --model bert-base
+//! wham jobs submit --model bert-base
 //! wham client status
 //! ```
 
@@ -23,9 +30,15 @@ pub mod queue;
 
 use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
+use crate::api::Session;
 use crate::coordinator::{make_backend, BackendChoice};
+use crate::cost::native::NativeCost;
+use crate::jobs::store::JobStore;
+use crate::jobs::{DrainSummary, JobManager, JobsOptions};
 use api::{Api, ServiceState};
 use cache::DesignDb;
 
@@ -37,20 +50,59 @@ pub struct ServeOptions {
     /// JSONL design-database path; `None` keeps the database in memory.
     pub db_path: Option<PathBuf>,
     pub backend: BackendChoice,
+    /// JSONL job write-ahead log; `None` keeps the job store in memory
+    /// (jobs do not survive a restart).
+    pub jobs_path: Option<PathBuf>,
+    /// Async-job dispatcher configuration (workers, queue depth, quotas,
+    /// retry policy).
+    pub jobs: JobsOptions,
+    /// Graceful-shutdown budget: how long running jobs get to finish
+    /// before being re-queued for the next boot.
+    pub drain_secs: u64,
+    /// Chrome-trace snapshot target; when set, span tracing is enabled
+    /// and the buffer is snapshotted periodically plus once at shutdown.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
         // Worker count follows the machine (the CLI's --workers/--jobs
         // default), not a magic constant.
-        Self { workers: crate::util::default_jobs(), db_path: None, backend: BackendChoice::Auto }
+        Self {
+            workers: crate::util::default_jobs(),
+            db_path: None,
+            backend: BackendChoice::Auto,
+            jobs_path: None,
+            jobs: JobsOptions::default(),
+            drain_secs: 20,
+            trace_out: None,
+        }
     }
 }
 
-/// A started service (threads run detached until process exit).
+/// A started service (threads run detached until process exit or
+/// [`ServerHandle::shutdown`]).
 pub struct ServerHandle {
     pub addr: SocketAddr,
     pub state: Arc<ServiceState>,
+    /// Set (and wake the acceptor with one connection) to stop accepting;
+    /// [`ServerHandle::shutdown`] does both plus the drain.
+    pub stop: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    /// Graceful shutdown: stop accepting HTTP connections, drain the job
+    /// tier within `drain`, checkpoint the job log, and flush the design
+    /// database. Idempotent.
+    pub fn shutdown(&self, drain: Duration) -> DrainSummary {
+        self.stop.store(true, Ordering::SeqCst);
+        // The acceptor checks the flag per connection; wake it.
+        let _ = std::net::TcpStream::connect(self.addr);
+        let summary = self.state.jobs.drain(drain);
+        let _ = self.state.jobs.store().checkpoint();
+        self.state.db.flush();
+        summary
+    }
 }
 
 /// Start serving on an already-bound listener and return immediately —
@@ -63,32 +115,134 @@ pub fn start(listener: TcpListener, opts: ServeOptions) -> anyhow::Result<Server
         Some(p) => DesignDb::open(p)?,
         None => DesignDb::in_memory(),
     });
+    let store = Arc::new(match &opts.jobs_path {
+        Some(p) => JobStore::open(p)?,
+        None => JobStore::in_memory(),
+    });
     let workers = opts.workers.max(1);
+    let backend_choice = opts.backend;
+    let dispatcher_workers = opts.jobs.workers.max(1);
+    let jobs = JobManager::start(store, opts.jobs.clone(), {
+        let db = Arc::clone(&db);
+        move || {
+            // Mirrors `Api::make_ctx`: an explicit-PJRT failure here can
+            // only race an artifact deletion — fall back, don't die.
+            let backend =
+                make_backend(backend_choice).unwrap_or_else(|_| Box::new(NativeCost));
+            // Split the machine across the dispatcher workers so
+            // concurrent jobs do not oversubscribe the cores.
+            let fanout = (crate::util::default_jobs() / dispatcher_workers).max(1);
+            Session::with_backend(backend).with_db(Arc::clone(&db)).with_jobs(fanout)
+        }
+    });
     let addr = listener.local_addr()?;
-    let state = Arc::new(ServiceState::new(db, opts.backend, workers));
-    http::serve(listener, workers, Arc::new(Api { state: Arc::clone(&state) }));
-    Ok(ServerHandle { addr, state })
+    let state = Arc::new(ServiceState::new(db, opts.backend, workers, jobs));
+    let stop = Arc::new(AtomicBool::new(false));
+    http::serve_with_shutdown(
+        listener,
+        workers,
+        Arc::new(Api { state: Arc::clone(&state) }),
+        Arc::clone(&stop),
+    );
+    Ok(ServerHandle { addr, state, stop })
 }
 
-/// Bind `addr`, print a banner, and serve until the process is killed.
+#[cfg(unix)]
+mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Set by the SIGINT/SIGTERM handler; polled by [`super::serve_forever`].
+    pub static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        // A store to a static atomic is async-signal-safe.
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the handlers via the libc `signal(2)` symbol std already
+    /// links on unix — no crate dependency needed.
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod signals {
+    pub fn install() {}
+    pub fn requested() -> bool {
+        false
+    }
+}
+
+/// Bind `addr`, print a banner, and serve until SIGINT/SIGTERM (then
+/// drain gracefully) or, on platforms without signal handling, forever.
 pub fn serve_forever(addr: &str, opts: ServeOptions) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)?;
     let workers = opts.workers.max(1);
+    let drain = Duration::from_secs(opts.drain_secs);
     let db_desc = opts
         .db_path
         .as_ref()
         .map(|p| p.display().to_string())
         .unwrap_or_else(|| "in-memory".to_string());
+    let jobs_desc = opts
+        .jobs_path
+        .as_ref()
+        .map(|p| p.display().to_string())
+        .unwrap_or_else(|| "in-memory".to_string());
+    let trace_out = opts.trace_out.clone();
+    if let Some(path) = trace_out.clone() {
+        // A server has no "end of run" to flush at, so snapshot the span
+        // buffer periodically (writes are whole-file, so the file is
+        // always a complete Chrome-trace document).
+        crate::telemetry::trace::enable();
+        eprintln!("span tracing on: snapshotting to {} every 5s", path.display());
+        std::thread::spawn(move || loop {
+            std::thread::sleep(Duration::from_secs(5));
+            let _ = crate::telemetry::trace::write_to(&path);
+        });
+    }
     let handle = start(listener, opts)?;
     println!(
-        "wham serve listening on http://{} (workers={workers}, db={db_desc}, {} designs loaded)",
+        "wham serve listening on http://{} (workers={workers}, db={db_desc}, {} designs loaded, jobs-db={jobs_desc})",
         handle.addr,
         handle.state.db.stats().loaded,
     );
-    println!(
-        "endpoints: GET /models  POST /search  POST /evaluate  POST /common  POST /global  POST /cluster  GET /status  GET /metrics"
-    );
-    loop {
-        std::thread::park();
+    let store = handle.state.jobs.store();
+    if store.resumed() > 0 || store.skipped() > 0 {
+        println!(
+            "job log replayed: {} interrupted job(s) re-queued, {} unparseable line(s) skipped",
+            store.resumed(),
+            store.skipped(),
+        );
     }
+    println!(
+        "endpoints: GET /models  POST /search  POST /evaluate  POST /common  POST /global  POST /cluster  POST /jobs  GET /jobs[/:id[/events]]  GET /db/export  POST /db/import  GET /status  GET /metrics"
+    );
+    signals::install();
+    while !signals::requested() {
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    println!("shutdown signal received; draining jobs (budget {}s)", drain.as_secs());
+    let summary = handle.shutdown(drain);
+    if let Some(path) = &trace_out {
+        let _ = crate::telemetry::trace::write_to(path);
+    }
+    println!(
+        "drained: {} job(s) completed, {} re-queued for next boot, {} left queued",
+        summary.completed, summary.requeued, summary.queued_left,
+    );
+    Ok(())
 }

@@ -201,6 +201,46 @@ pub fn str_arr<'a, I: IntoIterator<Item = &'a str>>(items: I) -> String {
     arr(items.into_iter().map(esc))
 }
 
+/// Serialize a parsed [`JsonValue`] back to compact JSON text. Object
+/// keys come out in `BTreeMap` (sorted) order, so `dump(parse(x))` is a
+/// *canonical* form of `x`, not necessarily the original bytes.
+pub fn dump(v: &JsonValue) -> String {
+    let mut out = String::new();
+    dump_into(v, &mut out);
+    out
+}
+
+fn dump_into(v: &JsonValue, out: &mut String) {
+    match v {
+        JsonValue::Null => out.push_str("null"),
+        JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        JsonValue::Num(n) => out.push_str(&num(*n)),
+        JsonValue::Str(s) => out.push_str(&esc(s)),
+        JsonValue::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                dump_into(item, out);
+            }
+            out.push(']');
+        }
+        JsonValue::Obj(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&esc(k));
+                out.push(':');
+                dump_into(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
 /// Parse a JSON document. Errors carry a byte offset and a message.
 pub fn parse(text: &str) -> Result<JsonValue, String> {
     let bytes = text.as_bytes();
@@ -429,6 +469,17 @@ mod tests {
         assert_eq!(v.get("top").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(parse(&Obj::new().finish()).unwrap(), JsonValue::Obj(Default::default()));
         assert_eq!(str_arr(["a", "b"]), "[\"a\",\"b\"]");
+    }
+
+    #[test]
+    fn dump_is_a_canonical_fixed_point() {
+        let text = r#"{"b":[1,2.5,{"y":null,"x":"q\"z"}],"a":true}"#;
+        let v = parse(text).unwrap();
+        let d = dump(&v);
+        // Keys are re-emitted sorted; a second round trip is stable.
+        assert_eq!(d, r#"{"a":true,"b":[1,2.5,{"x":"q\"z","y":null}]}"#);
+        assert_eq!(dump(&parse(&d).unwrap()), d);
+        assert_eq!(parse(&d).unwrap(), v);
     }
 
     #[test]

@@ -33,8 +33,16 @@ fn args(raw: &[&str]) -> Args {
 
 fn boot(workers: usize) -> ServerHandle {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    start(listener, ServeOptions { workers, db_path: None, backend: BackendChoice::Native })
-        .unwrap()
+    start(
+        listener,
+        ServeOptions {
+            workers,
+            db_path: None,
+            backend: BackendChoice::Native,
+            ..Default::default()
+        },
+    )
+    .unwrap()
 }
 
 /// Strip volatile fields before comparing two reply documents.

@@ -1,21 +1,35 @@
 //! End-to-end tests of `wham serve`: boot the real server on ephemeral
-//! ports, drive it over real `TcpStream`s, and verify the three service
+//! ports, drive it over real `TcpStream`s, and verify the service
 //! guarantees — repeat searches are answered from the design database,
-//! identical concurrent requests coalesce to one computation, and a
-//! restart with the same `--db` file answers previously-mined searches
-//! without re-running the scheduler.
+//! identical concurrent requests coalesce to one computation, a restart
+//! with the same `--db` file answers previously-mined searches without
+//! re-running the scheduler, and the async job tier admits, streams,
+//! cancels, rate-limits, and crash-resumes jobs.
 
 use std::net::TcpListener;
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
+use wham::api::JobKind;
 use wham::coordinator::BackendChoice;
-use wham::service::http::request;
+use wham::jobs::store::JobStore;
+use wham::jobs::JobsOptions;
+use wham::service::http::{request, request_full, request_stream};
 use wham::service::{start, ServeOptions, ServerHandle};
-use wham::util::json::{parse, JsonValue};
+use wham::util::json::{dump, parse, JsonValue};
+
+fn boot_opts(opts: ServeOptions) -> ServerHandle {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    start(listener, opts).unwrap()
+}
 
 fn boot(db_path: Option<PathBuf>, workers: usize) -> ServerHandle {
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    start(listener, ServeOptions { workers, db_path, backend: BackendChoice::Native }).unwrap()
+    boot_opts(ServeOptions {
+        workers,
+        db_path,
+        backend: BackendChoice::Native,
+        ..Default::default()
+    })
 }
 
 fn get_json(h: &ServerHandle, method: &str, path: &str, body: Option<&str>) -> (u16, JsonValue) {
@@ -192,6 +206,238 @@ fn uploaded_spec_is_mined_end_to_end() {
     // Wrong method on the new endpoint.
     let (status, _) = get_json(&h, "GET", "/workloads", None);
     assert_eq!(status, 405);
+}
+
+/// Poll `GET /jobs/:id` until the job leaves queued/running.
+fn poll_terminal(h: &ServerHandle, id: &str, secs: u64) -> JsonValue {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        let (status, v) = get_json(h, "GET", &format!("/jobs/{id}"), None);
+        assert_eq!(status, 200, "{v:?}");
+        let state = v.get("state").unwrap().as_str().unwrap().to_string();
+        if state != "queued" && state != "running" {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "job {id} stuck in {state:?}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Canonical re-dump with the wall-clock field zeroed — the only part of
+/// a search reply that may differ between two warm runs of the same plan.
+fn normalize_reply(body: &str) -> String {
+    let mut v = parse(body).unwrap_or_else(|e| panic!("unparseable reply {body:?}: {e}"));
+    if let JsonValue::Obj(m) = &mut v {
+        m.insert("wall_ms".to_string(), JsonValue::Num(0.0));
+    }
+    dump(&v)
+}
+
+#[test]
+fn async_job_matches_sync_search_and_streams_events() {
+    let h = boot(None, 2);
+
+    // Cold sync search fills the design DB, so both comparands below run
+    // warm (and therefore deterministically, modulo wall-clock).
+    let (status, _) = get_json(&h, "POST", "/search", Some("{\"model\":\"alexnet\"}"));
+    assert_eq!(status, 200);
+    let (status, sync_body) =
+        request(h.addr, "POST", "/search", Some("{\"model\":\"alexnet\"}")).unwrap();
+    assert_eq!(status, 200);
+
+    let (status, sub) =
+        get_json(&h, "POST", "/jobs", Some("{\"request\":{\"model\":\"alexnet\"}}"));
+    assert_eq!(status, 202, "submission must answer 202 Accepted: {sub:?}");
+    assert_eq!(sub.get("state").unwrap().as_str(), Some("queued"));
+    assert_eq!(sub.get("kind").unwrap().as_str(), Some("search"));
+    let id = sub.get("id").unwrap().as_str().unwrap().to_string();
+
+    // The listing knows the job immediately.
+    let (status, list) = get_json(&h, "GET", "/jobs", None);
+    assert_eq!(status, 200);
+    let jobs = list.get("jobs").unwrap().as_arr().unwrap();
+    assert!(jobs.iter().any(|j| j.get("id").unwrap().as_str() == Some(id.as_str())));
+
+    let rec = poll_terminal(&h, &id, 60);
+    assert_eq!(rec.get("state").unwrap().as_str(), Some("done"), "{rec:?}");
+    assert_eq!(u(&rec, &["attempts"]), 1);
+
+    // The stored reply is the sync endpoint's reply, byte for byte.
+    let (status, job_body) =
+        request(h.addr, "GET", &format!("/jobs/{id}/reply"), None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(normalize_reply(&job_body), normalize_reply(&sync_body));
+
+    // SSE replay for a finished job: one state frame, one done frame,
+    // then the server closes the stream (no hanging watchers).
+    let mut lines = Vec::new();
+    let status = request_stream(h.addr, "GET", &format!("/jobs/{id}/events"), None, |l| {
+        lines.push(l.to_string());
+        true
+    })
+    .unwrap();
+    assert_eq!(status, 200);
+    assert!(lines.iter().any(|l| l == "event: state"), "{lines:?}");
+    assert!(lines.iter().any(|l| l == "event: done"), "{lines:?}");
+    assert!(
+        lines.iter().any(|l| l.starts_with("data: ") && l.contains("\"state\":\"done\"")),
+        "{lines:?}"
+    );
+
+    // The status document counts it.
+    let (_, st) = get_json(&h, "GET", "/status", None);
+    assert!(u(&st, &["jobs", "done"]) >= 1, "{st:?}");
+    assert!(u(&st, &["jobs", "submitted"]) >= 1, "{st:?}");
+}
+
+#[test]
+fn http_cancel_reaches_a_terminal_state_without_running() {
+    // One job worker keeps the second submission queued behind the first.
+    let h = boot_opts(ServeOptions {
+        workers: 2,
+        db_path: None,
+        backend: BackendChoice::Native,
+        jobs: JobsOptions { workers: 1, ..Default::default() },
+        ..Default::default()
+    });
+    let body = "{\"request\":{\"model\":\"alexnet\"}}";
+    let (status, first) = get_json(&h, "POST", "/jobs", Some(body));
+    assert_eq!(status, 202, "{first:?}");
+    let (status, second) = get_json(&h, "POST", "/jobs", Some(body));
+    assert_eq!(status, 202, "{second:?}");
+    let id = second.get("id").unwrap().as_str().unwrap().to_string();
+
+    let (status, del) = get_json(&h, "DELETE", &format!("/jobs/{id}"), None);
+    assert_eq!(status, 200, "{del:?}");
+    let rec = poll_terminal(&h, &id, 60);
+    let state = rec.get("state").unwrap().as_str().unwrap();
+    // Still queued at cancel time -> cancelled without ever running;
+    // if the first job finished improbably fast, the cooperative path
+    // may have let it complete. Never failed, never stuck.
+    assert!(state == "cancelled" || state == "done", "unexpected state {state:?}");
+
+    // Unknown ids are 404 on every job route.
+    let (status, _) = get_json(&h, "DELETE", "/jobs/j-nope-0000", None);
+    assert_eq!(status, 404);
+}
+
+#[test]
+fn saturated_quota_answers_429_with_retry_after() {
+    // Burst of one and a near-zero refill rate: the second submission
+    // from the same client must bounce, other clients must not.
+    let h = boot_opts(ServeOptions {
+        workers: 2,
+        db_path: None,
+        backend: BackendChoice::Native,
+        jobs: JobsOptions { quota_rate: 0.001, quota_burst: 1.0, ..Default::default() },
+        ..Default::default()
+    });
+    let body = "{\"client\":\"ci\",\"request\":{\"model\":\"alexnet\"}}";
+    let (status, _, _) = request_full(h.addr, "POST", "/jobs", Some(body)).unwrap();
+    assert_eq!(status, 202);
+    let (status, headers, resp) = request_full(h.addr, "POST", "/jobs", Some(body)).unwrap();
+    assert_eq!(status, 429, "expected quota rejection, got {resp}");
+    let retry_after = headers
+        .iter()
+        .find(|(k, _)| k == "retry-after")
+        .map(|(_, v)| v.clone())
+        .expect("429 must carry Retry-After");
+    assert!(retry_after.parse::<u64>().unwrap() >= 1, "Retry-After {retry_after:?}");
+    assert!(resp.contains("quota"), "{resp}");
+
+    let other = "{\"client\":\"other\",\"request\":{\"model\":\"alexnet\"}}";
+    let (status, _, _) = request_full(h.addr, "POST", "/jobs", Some(other)).unwrap();
+    assert_eq!(status, 202, "a different client has its own bucket");
+
+    let (_, st) = get_json(&h, "GET", "/status", None);
+    assert!(u(&st, &["jobs", "rejected_quota"]) >= 1, "{st:?}");
+}
+
+#[test]
+fn crash_interrupted_job_resumes_warm_after_restart() {
+    let db = temp_db("jobs-resume-db");
+    let wal = temp_db("jobs-resume-wal");
+    let _ = std::fs::remove_file(&db);
+    let _ = std::fs::remove_file(&wal);
+
+    // Boot A mines alexnet into the design DB, then "crashes" (drop).
+    let a = boot(Some(db.clone()), 2);
+    let (status, cold) = get_json(&a, "POST", "/search", Some("{\"model\":\"alexnet\"}"));
+    assert_eq!(status, 200);
+    assert!(u(&cold, &["scheduler_evals"]) > 0);
+    drop(a);
+
+    // Forge the crash scene: a WAL whose job was mid-run when the
+    // process died, plus the torn partial line a kill -9 leaves behind.
+    let id = {
+        let store = JobStore::open(&wal).unwrap();
+        let rec = store.submit(JobKind::Search, "ci", "{\"model\":\"alexnet\"}");
+        store.mark_running(&rec.id).unwrap();
+        rec.id
+    };
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&wal).unwrap();
+        f.write_all(b"{\"id\":\"j-torn\",\"sta").unwrap();
+    }
+
+    // Boot B over the same files: replay demotes running -> queued and
+    // skips the torn tail; the dispatcher re-runs the job against the
+    // warm design DB without being asked.
+    let b = boot_opts(ServeOptions {
+        workers: 2,
+        db_path: Some(db.clone()),
+        backend: BackendChoice::Native,
+        jobs_path: Some(wal.clone()),
+        ..Default::default()
+    });
+    assert_eq!(b.state.jobs.store().resumed(), 1, "interrupted job must re-queue");
+    assert_eq!(b.state.jobs.store().skipped(), 1, "torn tail must be skipped, not fatal");
+
+    let rec = poll_terminal(&b, &id, 60);
+    assert_eq!(rec.get("state").unwrap().as_str(), Some("done"), "{rec:?}");
+
+    // The resumed run warm-started from the mined design DB: zero
+    // scheduler invocations end to end.
+    let (status, reply) = request(b.addr, "GET", &format!("/jobs/{id}/reply"), None).unwrap();
+    assert_eq!(status, 200);
+    let v = parse(&reply).unwrap();
+    assert_eq!(u(&v, &["scheduler_evals"]), 0, "resumed job must not re-run the scheduler");
+
+    let (_, st) = get_json(&b, "GET", "/status", None);
+    assert!(u(&st, &["jobs", "done"]) >= 1, "{st:?}");
+
+    let _ = std::fs::remove_file(&db);
+    let _ = std::fs::remove_file(&wal);
+}
+
+#[test]
+fn graceful_shutdown_drains_and_checkpoints() {
+    let wal = temp_db("jobs-drain-wal");
+    let _ = std::fs::remove_file(&wal);
+
+    let h = boot_opts(ServeOptions {
+        workers: 2,
+        db_path: None,
+        backend: BackendChoice::Native,
+        jobs_path: Some(wal.clone()),
+        ..Default::default()
+    });
+    let (status, sub) =
+        get_json(&h, "POST", "/jobs", Some("{\"request\":{\"model\":\"alexnet\"}}"));
+    assert_eq!(status, 202, "{sub:?}");
+    let id = sub.get("id").unwrap().as_str().unwrap().to_string();
+
+    let summary = h.shutdown(Duration::from_secs(60));
+    assert_eq!(summary.completed + summary.requeued + summary.queued_left, 1, "{summary:?}");
+
+    // After the drain the acceptor is closed and the WAL survives with
+    // the job's full history (a later boot could resume it).
+    assert!(request(h.addr, "GET", "/status", None).is_err(), "acceptor must be closed");
+    let text = std::fs::read_to_string(&wal).unwrap();
+    assert!(text.lines().any(|l| l.contains(&id)), "checkpointed WAL must carry the job");
+
+    let _ = std::fs::remove_file(&wal);
 }
 
 #[test]

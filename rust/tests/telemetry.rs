@@ -132,8 +132,16 @@ fn assert_no_duplicate_metric_names(text: &str) {
 
 fn boot() -> ServerHandle {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    start(listener, ServeOptions { workers: 2, db_path: None, backend: BackendChoice::Native })
-        .unwrap()
+    start(
+        listener,
+        ServeOptions {
+            workers: 2,
+            db_path: None,
+            backend: BackendChoice::Native,
+            ..Default::default()
+        },
+    )
+    .unwrap()
 }
 
 /// Value of an unlabeled metric in an exposition document.
@@ -150,6 +158,24 @@ fn metrics_scrape_agrees_with_status_counters() {
     let h = boot();
     let (status, _) = request(h.addr, "POST", "/search", Some("{\"model\":\"bert-base\"}")).unwrap();
     assert_eq!(status, 200);
+
+    // Drive one async job to its terminal state so the jobs block has a
+    // non-zero, stable counter to compare against the scrape.
+    let (status, sub) =
+        request(h.addr, "POST", "/jobs", Some("{\"request\":{\"model\":\"alexnet\"}}")).unwrap();
+    assert_eq!(status, 202, "{sub}");
+    let id = parse(&sub).unwrap().get("id").unwrap().as_str().unwrap().to_string();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let (_, body) = request(h.addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+        let state = parse(&body).unwrap().get("state").unwrap().as_str().unwrap().to_string();
+        if state != "queued" && state != "running" {
+            assert_eq!(state, "done", "{body}");
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "job {id} stuck in {state:?}");
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
 
     let (code, st) = request(h.addr, "GET", "/status", None).unwrap();
     assert_eq!(code, 200);
@@ -173,6 +199,27 @@ fn metrics_scrape_agrees_with_status_counters() {
         let reported = perf.get(field).unwrap().as_u64().unwrap() as f64;
         assert_eq!(scraped, reported, "{metric} vs perf.{field}");
     }
+    // The jobs block mirrors the labeled `wham_jobs_*` series from the
+    // same sources (only terminal-state and since-boot counters are
+    // compared — nothing is queued or running at scrape time).
+    let jobs = st.get("jobs").unwrap();
+    for (metric, field) in [
+        ("wham_jobs_total{state=\"done\"}", "done"),
+        ("wham_jobs_total{state=\"failed\"}", "failed"),
+        ("wham_jobs_total{state=\"cancelled\"}", "cancelled"),
+        ("wham_jobs_queue_depth", "queue_depth"),
+        ("wham_jobs_submitted_total", "submitted"),
+        ("wham_jobs_rejected_total{reason=\"quota\"}", "rejected_quota"),
+        ("wham_jobs_rejected_total{reason=\"queue_full\"}", "rejected_depth"),
+        ("wham_jobs_retries_total", "retries"),
+    ] {
+        let scraped = metric_value(&text, metric)
+            .unwrap_or_else(|| panic!("{metric} missing from exposition:\n{text}"));
+        let reported = jobs.get(field).unwrap().as_u64().unwrap() as f64;
+        assert_eq!(scraped, reported, "{metric} vs jobs.{field}");
+    }
+    assert_eq!(jobs.get("done").unwrap().as_u64(), Some(1), "the smoke job completed");
+
     // Instance-local: the /metrics request itself is the only request
     // after the /status snapshot, so the totals differ by exactly one.
     let reported_requests = st.get("requests").unwrap().as_u64().unwrap() as f64;
