@@ -302,11 +302,17 @@ pub struct JobReply {
     /// Raw JSON reply of the wrapped request (`state == done`) —
     /// byte-identical to what the synchronous endpoint would have sent.
     pub reply: Option<String>,
+    /// Correlation id of the submitting request (empty when unknown,
+    /// e.g. jobs replayed from pre-correlation logs). Matches the
+    /// `X-Wham-Request-Id` header the submitter received, so the 202
+    /// body, every SSE frame, the WAL line, and the access log all
+    /// grep to the same id.
+    pub corr: String,
 }
 
 impl JobReply {
     fn base_json(&self) -> Obj {
-        let o = Obj::new()
+        let mut o = Obj::new()
             .str("id", &self.id)
             .str("kind", self.kind.label())
             .str("client", &self.client)
@@ -315,6 +321,9 @@ impl JobReply {
             .u64("submitted_ms", self.submitted_ms)
             .opt_u64("started_ms", self.started_ms)
             .opt_u64("finished_ms", self.finished_ms);
+        if !self.corr.is_empty() {
+            o = o.str("corr", &self.corr);
+        }
         match &self.error {
             Some(e) => o.str("error", e),
             None => o,
@@ -356,6 +365,7 @@ impl FromJson for JobReply {
             // Re-serialized canonically (sorted keys); byte-level
             // consumers fetch `GET /jobs/:id/reply` instead.
             reply: v.get("reply").map(json::dump),
+            corr: opt_str(v, "corr")?.unwrap_or_default(),
         })
     }
 }
@@ -488,8 +498,10 @@ mod tests {
             finished_ms: Some(1_700_000_000_900),
             error: None,
             reply: Some(r#"{"best":1,"model":"bert-base"}"#.to_string()),
+            corr: "r-1a2b-0001".into(),
         };
         let v = json::parse(&r.to_json()).unwrap();
+        assert_eq!(v.get("corr").unwrap().as_str(), Some("r-1a2b-0001"));
         let back = JobReply::from_json(&v).unwrap();
         assert_eq!(back, r);
         // Brief form drops the embedded reply but keeps the lifecycle.
@@ -515,6 +527,7 @@ mod tests {
             finished_ms: None,
             error: None,
             reply: None,
+            corr: String::new(),
         };
         let list = JobListReply { jobs: vec![j] };
         let v = json::parse(&list.to_json()).unwrap();

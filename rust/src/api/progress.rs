@@ -50,14 +50,24 @@ impl Progress {
     /// schema shared by the CLI's `--progress` stream and the service's
     /// `GET /jobs/:id/events` SSE data frames.
     pub fn to_ndjson(&self) -> String {
-        crate::util::json::Obj::new()
+        self.to_ndjson_with("")
+    }
+
+    /// Like [`Progress::to_ndjson`], but tagged with the request
+    /// correlation id when one is known (empty = omitted), so every SSE
+    /// data frame of a job greps back to the submitting request's logs.
+    pub fn to_ndjson_with(&self, corr: &str) -> String {
+        let mut o = crate::util::json::Obj::new()
             .str("phase", self.phase)
             .u64("ms", self.elapsed.as_millis() as u64)
             .u64("points", self.points as u64)
             .f64("best", self.best_score)
             .f64("rate", self.rate)
-            .u64("depth", self.depth as u64)
-            .finish()
+            .u64("depth", self.depth as u64);
+        if !corr.is_empty() {
+            o = o.str("corr", corr);
+        }
+        o.finish()
     }
 }
 
@@ -127,6 +137,12 @@ mod tests {
             rate: 0.0,
             depth: 1,
         }
+    }
+
+    #[test]
+    fn ndjson_corr_tag_is_optional() {
+        assert!(!step().to_ndjson().contains("corr"));
+        assert!(step().to_ndjson_with("r-1-0001").contains("\"corr\":\"r-1-0001\""));
     }
 
     #[test]

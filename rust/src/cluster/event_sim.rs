@@ -44,6 +44,14 @@ pub fn events_total() -> u64 {
     EVENTS.get()
 }
 
+/// Wall-clock distribution of one simulated training iteration (one
+/// `simulate_events` call — the strategy screen's unit of work).
+static SIM_STEP_SECONDS: crate::telemetry::Histogram = crate::telemetry::Histogram::new(
+    "wham_event_sim_step_duration_seconds",
+    "Wall-clock of one event-simulated training iteration (per simulate_events call).",
+    1e-6,
+);
+
 /// Pipeline schedule simulated at event granularity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimSchedule {
@@ -248,6 +256,7 @@ pub fn simulate_events(
 ) -> Result<SimResult, String> {
     let s = part.stages.len();
     let m = part.num_micro as usize;
+    let _timer = SIM_STEP_SECONDS.start_timer();
     let _span = crate::telemetry::trace::span("event_sim")
         .arg("schedule", schedule.name())
         .arg("stages", s)

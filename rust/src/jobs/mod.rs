@@ -37,8 +37,18 @@ use crate::api::job::{JobPlan, JobState};
 use crate::api::request::{ClusterRequest, CommonRequest, GlobalRequest, SearchRequest};
 use crate::api::wire::{FromJson, ToJson};
 use crate::api::{ApiError, Progress, Session};
+use crate::telemetry::log::{self, CorrScope};
 use quota::QuotaGate;
 use store::{JobCounts, JobRecord, JobStore};
+
+/// How long accepted jobs sat queued before a worker picked them up —
+/// the admission tier's saturation signal (ms ticks, exported as
+/// seconds).
+static QUEUE_WAIT_SECONDS: crate::telemetry::Histogram = crate::telemetry::Histogram::new(
+    "wham_job_queue_wait_seconds",
+    "Queue wait between job submission and first execution attempt.",
+    1e-3,
+);
 
 /// Dispatcher configuration.
 #[derive(Debug, Clone)]
@@ -333,8 +343,16 @@ impl JobManager {
             // is no good estimate, so suggest a short constant.
             return Err(SubmitError::QueueFull { retry_after_secs: 2 });
         }
-        let rec = self.store.submit(plan.kind, &plan.client, &plan.request_json);
+        // Admission runs on the submitting thread (the HTTP handler),
+        // so the request's correlation scope is still live here.
+        let corr = log::current_corr().unwrap_or_default();
+        let rec = self.store.submit(plan.kind, &plan.client, &plan.request_json, &corr);
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        log::info(
+            "jobs",
+            "job submitted",
+            &[("job", &rec.id), ("kind", &plan.kind.label()), ("client", &plan.client)],
+        );
         q.push(QueueItem { due: Instant::now(), id: rec.id.clone() });
         drop(q);
         self.queue_cv.notify_one();
@@ -422,6 +440,18 @@ impl JobManager {
             return; // cancelled while queued, or duplicate wake-up
         }
         let Some(rec) = self.store.mark_running(id) else { return };
+        // Every log line of the attempt carries the submitting request's
+        // correlation id (empty for pre-corr WAL records = no tag).
+        let _corr = CorrScope::enter(&rec.corr);
+        if rec.attempts == 1 {
+            QUEUE_WAIT_SECONDS.observe(store::epoch_ms().saturating_sub(rec.submitted_ms));
+        }
+        log::info(
+            "jobs",
+            "job started",
+            &[("job", &rec.id), ("kind", &rec.kind.label()), ("attempt", &rec.attempts)],
+        );
+        let started = Instant::now();
         let live = self.live_for(id);
         live.push(sse_frame(Some("state"), &rec.to_reply().to_json_brief()));
 
@@ -432,17 +462,21 @@ impl JobManager {
             Err(ApiError::internal(format!("job panicked: {}", crate::util::panic_text(&p))))
         });
 
+        let dur_ms = started.elapsed().as_millis() as u64;
         match outcome {
             Ok(reply_json) => {
                 if live.requeue.load(Ordering::SeqCst) {
                     self.store.mark_requeued(id);
                     self.finish_live(id);
+                    log::info("jobs", "job requeued for next boot", &[("job", &rec.id)]);
                 } else if live.cancel.load(Ordering::SeqCst) {
                     self.store.mark_cancelled(id);
                     self.finish_live(id);
+                    log::info("jobs", "job cancelled", &[("job", &rec.id), ("ms", &dur_ms)]);
                 } else {
                     self.store.mark_done(id, &reply_json);
                     self.finish_live(id);
+                    log::info("jobs", "job done", &[("job", &rec.id), ("ms", &dur_ms)]);
                 }
             }
             Err(e) => {
@@ -454,6 +488,16 @@ impl JobManager {
                     self.retries.fetch_add(1, Ordering::Relaxed);
                     let shift = (rec.attempts.saturating_sub(1)).min(6) as u32;
                     let backoff = Duration::from_millis(self.opts.backoff_ms << shift);
+                    log::warn(
+                        "jobs",
+                        "job attempt failed; retrying",
+                        &[
+                            ("job", &rec.id),
+                            ("attempt", &rec.attempts),
+                            ("backoff_ms", &backoff.as_millis()),
+                            ("error", &e.message),
+                        ],
+                    );
                     live.push(sse_frame(
                         Some("state"),
                         &self.store.get(id).map(|r| r.to_reply().to_json_brief()).unwrap_or_default(),
@@ -465,6 +509,11 @@ impl JobManager {
                 } else {
                     self.store.mark_failed(id, &e.message, true);
                     self.finish_live(id);
+                    log::warn(
+                        "jobs",
+                        "job failed",
+                        &[("job", &rec.id), ("ms", &dur_ms), ("error", &e.message)],
+                    );
                 }
             }
         }
@@ -530,7 +579,7 @@ fn run_job(session: &mut Session, rec: &JobRecord, live: &JobLive) -> Result<Str
     let mut n = 0usize;
     let mut sink = |p: &Progress| {
         if n % 32 == 0 {
-            live.push(sse_frame(None, &p.to_ndjson()));
+            live.push(sse_frame(None, &p.to_ndjson_with(&rec.corr)));
         }
         n += 1;
         !live.should_stop()

@@ -44,6 +44,10 @@ pub struct JobRecord {
     pub error: Option<String>,
     /// Raw reply JSON once `Done`.
     pub reply: Option<String>,
+    /// Correlation id of the submitting HTTP request (empty for jobs
+    /// replayed from pre-correlation logs) — the same id the client saw
+    /// in `X-Wham-Request-Id`, so a WAL line greps to its access log.
+    pub corr: String,
 }
 
 impl JobRecord {
@@ -60,6 +64,7 @@ impl JobRecord {
             finished_ms: self.finished_ms,
             error: self.error.clone(),
             reply: self.reply.clone(),
+            corr: self.corr.clone(),
         }
     }
 }
@@ -178,8 +183,9 @@ impl JobStore {
         }
     }
 
-    /// Admit a new job in state `Queued` and return its record.
-    pub fn submit(&self, kind: JobKind, client: &str, request_json: &str) -> JobRecord {
+    /// Admit a new job in state `Queued` and return its record. `corr`
+    /// is the submitting request's correlation id (empty when none).
+    pub fn submit(&self, kind: JobKind, client: &str, request_json: &str, corr: &str) -> JobRecord {
         let now = epoch_ms();
         let rec = {
             let mut inner = self.inner.lock().unwrap();
@@ -202,21 +208,22 @@ impl JobStore {
                 finished_ms: None,
                 error: None,
                 reply: None,
+                corr: corr.to_string(),
             };
             inner.map.insert(id.clone(), rec.clone());
             inner.order.push(id);
             rec
         };
-        self.append(
-            &Obj::new()
-                .str("ev", "submit")
-                .str("id", &rec.id)
-                .u64("t", now)
-                .str("kind", kind.label())
-                .str("client", client)
-                .raw("request", request_json)
-                .finish(),
-        );
+        let mut line = Obj::new()
+            .str("ev", "submit")
+            .str("id", &rec.id)
+            .u64("t", now)
+            .str("kind", kind.label())
+            .str("client", client);
+        if !corr.is_empty() {
+            line = line.str("corr", corr);
+        }
+        self.append(&line.raw("request", request_json).finish());
         rec
     }
 
@@ -379,14 +386,16 @@ impl JobStore {
 
 /// The event lines that reconstruct `rec` from an empty log.
 fn snapshot_lines(rec: &JobRecord) -> Vec<String> {
-    let mut lines = vec![Obj::new()
+    let mut submit = Obj::new()
         .str("ev", "submit")
         .str("id", &rec.id)
         .u64("t", rec.submitted_ms)
         .str("kind", rec.kind.label())
-        .str("client", &rec.client)
-        .raw("request", &rec.request)
-        .finish()];
+        .str("client", &rec.client);
+    if !rec.corr.is_empty() {
+        submit = submit.str("corr", &rec.corr);
+    }
+    let mut lines = vec![submit.raw("request", &rec.request).finish()];
     if rec.attempts > 0 {
         lines.push(
             Obj::new()
@@ -439,6 +448,8 @@ fn apply_event(
             let kind: JobKind = v.get("kind")?.as_str()?.parse().ok()?;
             let client = v.get("client")?.as_str()?.to_string();
             let request = json::dump(v.get("request")?);
+            let corr =
+                v.get("corr").and_then(JsonValue::as_str).unwrap_or_default().to_string();
             if !map.contains_key(&id) {
                 order.push(id.clone());
             }
@@ -456,6 +467,7 @@ fn apply_event(
                     finished_ms: None,
                     error: None,
                     reply: None,
+                    corr,
                 },
             );
             Some(())
@@ -521,8 +533,8 @@ mod tests {
     fn lifecycle_round_trips_through_the_log() {
         let path = temp("lifecycle");
         let store = JobStore::open(&path).unwrap();
-        let a = store.submit(JobKind::Search, "ci", r#"{"model":"bert-base"}"#);
-        let b = store.submit(JobKind::Search, "ci", r#"{"model":"vgg16"}"#);
+        let a = store.submit(JobKind::Search, "ci", r#"{"model":"bert-base"}"#, "r-corr-a");
+        let b = store.submit(JobKind::Search, "ci", r#"{"model":"vgg16"}"#, "");
         assert_ne!(a.id, b.id);
         store.mark_running(&a.id);
         store.mark_done(&a.id, r#"{"best":1}"#);
@@ -537,9 +549,11 @@ mod tests {
         assert_eq!(a2.state, JobState::Done);
         assert_eq!(a2.reply.as_deref(), Some(r#"{"best":1}"#));
         assert_eq!(a2.attempts, 1);
+        assert_eq!(a2.corr, "r-corr-a", "correlation id must survive replay");
         let b2 = back.get(&b.id).unwrap();
         assert_eq!(b2.state, JobState::Failed);
         assert_eq!(b2.error.as_deref(), Some("backend exploded"));
+        assert_eq!(b2.corr, "", "absent corr replays as empty");
         let counts = back.counts();
         assert_eq!((counts.done, counts.failed, counts.queued), (1, 1, 0));
         let _ = std::fs::remove_file(&path);
@@ -549,7 +563,7 @@ mod tests {
     fn torn_tail_is_skipped_and_running_jobs_resume_queued() {
         let path = temp("torn");
         let store = JobStore::open(&path).unwrap();
-        let a = store.submit(JobKind::Search, "ci", r#"{"model":"bert-base"}"#);
+        let a = store.submit(JobKind::Search, "ci", r#"{"model":"bert-base"}"#, "");
         store.mark_running(&a.id);
         drop(store);
         // Simulate a kill -9 mid-append: a partial final line.
@@ -571,7 +585,7 @@ mod tests {
     fn non_terminal_failure_requeues_and_checkpoint_compacts() {
         let path = temp("ckpt");
         let store = JobStore::open(&path).unwrap();
-        let a = store.submit(JobKind::Global, "x", r#"{"models":["gpt2-xl"]}"#);
+        let a = store.submit(JobKind::Global, "x", r#"{"models":["gpt2-xl"]}"#, "r-ckpt");
         store.mark_running(&a.id);
         store.mark_failed(&a.id, "transient", false);
         assert_eq!(store.get(&a.id).unwrap().state, JobState::Queued);
@@ -582,11 +596,12 @@ mod tests {
         let after = std::fs::read_to_string(&path).unwrap().lines().count();
         assert!(after < before, "checkpoint must compact ({before} -> {after})");
         // Appends keep working on the swapped-in file, and replay agrees.
-        let b = store.submit(JobKind::Search, "x", r#"{"model":"vgg16"}"#);
+        let b = store.submit(JobKind::Search, "x", r#"{"model":"vgg16"}"#, "");
         drop(store);
         let back = JobStore::open(&path).unwrap();
         assert_eq!(back.get(&a.id).unwrap().state, JobState::Done);
         assert_eq!(back.get(&a.id).unwrap().attempts, 2);
+        assert_eq!(back.get(&a.id).unwrap().corr, "r-ckpt", "corr survives checkpoint");
         assert_eq!(back.get(&b.id).unwrap().state, JobState::Queued);
         let _ = std::fs::remove_file(&path);
     }
@@ -595,7 +610,7 @@ mod tests {
     fn counts_track_oldest_queued_age() {
         let store = JobStore::in_memory();
         assert_eq!(store.counts().oldest_queued_ms, 0);
-        store.submit(JobKind::Search, "a", "{}");
+        store.submit(JobKind::Search, "a", "{}", "");
         std::thread::sleep(std::time::Duration::from_millis(5));
         let c = store.counts();
         assert_eq!(c.queued, 1);

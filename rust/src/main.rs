@@ -43,11 +43,24 @@ const VALUE_KEYS: &[&str] = &[
     "iterations", "workers", "jobs", "hysteresis", "seed", "out", "tc", "vc", "dims", "port",
     "db", "addr", "deadline-ms", "workload-dir", "devices", "topology", "schedules", "mine",
     "chunks", "trace-out", "client", "type", "jobs-db", "drain-secs", "job-workers",
-    "queue-depth", "quota-rate", "quota-burst",
+    "queue-depth", "quota-rate", "quota-burst", "hz", "top", "log-level", "log-out",
 ];
 
 fn main() -> Result<()> {
     let args = Args::from_env(VALUE_KEYS).map_err(|e| anyhow!("{e}"))?;
+    // Configure the structured-log layer before anything can emit a
+    // record: `--log-level` raises/lowers the threshold, `--log-out`
+    // redirects NDJSON records to a file (fully silencing the console
+    // sides of `wham serve`).
+    if let Some(lvl) = args.get("log-level") {
+        let l = wham::telemetry::log::Level::parse(lvl)
+            .ok_or_else(|| anyhow!("--log-level expects debug|info|warn|error, got {lvl:?}"))?;
+        wham::telemetry::log::set_level(l);
+    }
+    if let Some(path) = args.get("log-out") {
+        wham::telemetry::log::to_file(std::path::Path::new(path))
+            .map_err(|e| anyhow!("--log-out {path}: {e}"))?;
+    }
     // Populate the workload registry's user layer before dispatch, so
     // every subcommand (search/evaluate/common/global/serve/...) resolves
     // spec workloads by name. The env var applies always; the flag is
@@ -57,14 +70,26 @@ fn main() -> Result<()> {
     // diagnosing it. Warn and continue; the explicit flag stays fatal.
     match wham::workload::load_env_dir() {
         Ok(names) if !names.is_empty() => {
-            eprintln!("loaded {} workload spec(s) from WHAM_WORKLOAD_DIR", names.len());
+            wham::telemetry::log::info(
+                "cli",
+                "loaded workload specs from WHAM_WORKLOAD_DIR",
+                &[("specs", &names.len())],
+            );
         }
         Ok(_) => {}
-        Err(e) => eprintln!("warning: WHAM_WORKLOAD_DIR not loaded: {e}"),
+        Err(e) => wham::telemetry::log::warn(
+            "cli",
+            "WHAM_WORKLOAD_DIR not loaded",
+            &[("error", &e)],
+        ),
     }
     if let Some(dir) = args.get("workload-dir") {
         let names = wham::workload::add_dir(dir).map_err(|e| anyhow!("--workload-dir: {e}"))?;
-        eprintln!("loaded {} workload spec(s) from {dir}: {names:?}", names.len());
+        wham::telemetry::log::info(
+            "cli",
+            "loaded workload specs",
+            &[("dir", &dir), ("specs", &names.len()), ("names", &format!("{names:?}"))],
+        );
     }
     match args.pos(0) {
         Some("models") => cmd_models(),
@@ -93,7 +118,8 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "wham — Workload-Aware Hardware Accelerator Mining (CS.AR 2024 reproduction)\n\n\
-         global flags: [--workload-dir DIR]  (or WHAM_WORKLOAD_DIR) — load *.json workload specs\n\n\
+         global flags: [--workload-dir DIR]  (or WHAM_WORKLOAD_DIR) — load *.json workload specs\n              \
+         [--log-level debug|info|warn|error] [--log-out records.ndjson] — structured logs\n\n\
          usage:\n  \
          wham models\n  \
          wham workloads <list|show <name>|lint <path...>>\n  \
@@ -112,6 +138,8 @@ fn print_usage() {
          [--iterations 500]\n  \
          wham trace --model <name> [--out trace.json] [--tc 2 --vc 2 --dims 128x128x128]\n  \
          wham trace explain <model> — per-iteration search attribution (flight recorder)\n  \
+         wham trace profile <model> [--hz 99] [--top 10] [--out prof.collapsed] [--smoke]\n              \
+         — sampled span-stack profile of the search (hottest paths + folded stacks)\n  \
          wham partition --model <llm> [--depth 32] [--tmp 1] [--scheme gpipe]\n  \
          wham space --model <name>\n  \
          wham serve [--port 8484] [--workers <cores>] [--db designs.jsonl] [--backend auto]\n              \
@@ -516,10 +544,15 @@ fn cmd_baseline(args: &Args) -> Result<()> {
 }
 
 /// Export a workload's schedule on a given design as Chrome-trace JSON,
-/// or (`wham trace explain <model>`) dump the search flight recorder.
+/// or (`wham trace explain <model>`) dump the search flight recorder,
+/// or (`wham trace profile <model>`) run the search under the sampling
+/// profiler and print the hottest span paths.
 fn cmd_trace(args: &Args) -> Result<()> {
     if args.pos(1) == Some("explain") {
         return cmd_trace_explain(args);
+    }
+    if args.pos(1) == Some("profile") {
+        return cmd_trace_profile(args);
     }
     let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
     let out = args.get_or("out", "trace.json");
@@ -599,6 +632,45 @@ fn cmd_trace_explain(args: &Args) -> Result<()> {
     }
     print!("{t}");
     println!("(* = new best; grants t/v/f = tensor-core / vector-core / fused issue grants)");
+    Ok(())
+}
+
+/// `wham trace profile <model>` — run the per-workload search under the
+/// span sampling profiler ([`wham::telemetry::profile`]) and print the
+/// hottest span paths with self/total percentages. `--out FILE` also
+/// writes the collapsed-stack form for flamegraph.pl / speedscope;
+/// `--smoke` bounds the run with a short deadline (CI-sized).
+fn cmd_trace_profile(args: &Args) -> Result<()> {
+    let name = args
+        .get("model")
+        .or_else(|| args.pos(2))
+        .ok_or_else(|| anyhow!("usage: wham trace profile <model> (or --model <name>)"))?;
+    let hz: u32 = args.get_as_or("hz", 99).map_err(|e| anyhow!("{e}"))?;
+    let top: usize = args.get_as_or("top", 10).map_err(|e| anyhow!("{e}"))?;
+    let plan = SearchRequest::new(name).validate()?;
+    let mut session = session_from_args(args)?;
+    let sampler = wham::telemetry::profile::attach(hz).map_err(|e| anyhow!("{e}"))?;
+    let r = if args.flag("smoke") {
+        let mut sink = wham::api::DeadlineSink::new(std::time::Duration::from_secs(10));
+        session.run_search(&plan, &mut sink)?
+    } else {
+        session.run_search(&plan, &mut NullSink)?
+    };
+    let profile = sampler.stop();
+    println!(
+        "profiled {name}: {} sample(s) at {} Hz over {:.2}s — best {} score={:.4} ({} scheduler evals)",
+        profile.samples,
+        profile.hz,
+        profile.elapsed.as_secs_f64(),
+        r.best.config.display(),
+        r.best.score,
+        r.scheduler_evals,
+    );
+    print!("{}", profile.render_table(top));
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, profile.collapsed())?;
+        println!("wrote collapsed stacks to {out} — flamegraph.pl or speedscope reads this");
+    }
     Ok(())
 }
 

@@ -34,6 +34,16 @@ pub fn evals_total() -> u64 {
     EVALS.get()
 }
 
+/// Wall-clock distribution of single scheduler runs. Two `Instant`
+/// reads and three relaxed adds per eval — noise next to the µs-scale
+/// schedule itself, and the `/metrics` view that tells p50 from tail
+/// when ROADMAP item 2 (incremental scheduling) lands.
+static EVAL_SECONDS: crate::telemetry::Histogram = crate::telemetry::Histogram::new(
+    "wham_scheduler_eval_duration_seconds",
+    "Wall-clock of individual greedy list-scheduler runs.",
+    1e-6,
+);
+
 /// Number of cores of each type available to the scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CoreCount {
@@ -156,6 +166,7 @@ pub fn greedy_schedule_scratch(
 ) -> Schedule {
     assert!(cores.tc >= 1 && cores.vc >= 1, "need at least one core of each type");
     EVALS.add(1);
+    let _timer = EVAL_SECONDS.start_timer();
     let _span = crate::telemetry::trace::span("schedule");
     let g = ann.graph;
     let n = g.len();

@@ -100,9 +100,20 @@ struct McrCtx<'a> {
     evals: usize,
 }
 
+/// Latency distribution of MCR probes (one candidate core count →
+/// one full reschedule). Sits one level above
+/// `wham_scheduler_eval_duration_seconds`, so their ratio exposes
+/// probe overhead beyond the schedule itself.
+static PROBE_SECONDS: crate::telemetry::Histogram = crate::telemetry::Histogram::new(
+    "wham_mcr_probe_duration_seconds",
+    "Wall-clock of MCR candidate probes (reschedule of one core-count candidate).",
+    1e-6,
+);
+
 impl McrCtx<'_> {
     fn eval(&mut self, cand: CoreCount) -> Schedule {
         self.evals += 1;
+        let _timer = PROBE_SECONDS.start_timer();
         let _span =
             crate::telemetry::trace::span("mcr_probe").arg("tc", cand.tc).arg("vc", cand.vc);
         greedy_schedule_scratch(self.ann, self.cp, cand, Priority::Criticality, &mut self.scratch)

@@ -25,7 +25,13 @@
 //! | `POST /db/import` | a design-DB JSONL export          | [`crate::api::DbImportReply`] |
 //! | `GET /status`     | —                                 | [`crate::api::StatusReply`] |
 //! | `GET /metrics`    | —                                 | Prometheus text exposition ([`crate::telemetry::registry`]) |
+//! | `GET /profile`    | `?seconds=N&hz=M`                 | collapsed-stack span profile of the next N seconds (text) |
 //!
+//! Every response carries an `X-Wham-Request-Id` header with a
+//! server-minted correlation id; the id is bound to the handling thread
+//! as a [`crate::telemetry::log::CorrScope`], so the access log, any
+//! job the request submits (WAL record, SSE frames, worker log lines),
+//! and the 202 body all carry the same id.
 //! `POST /workloads` validates and registers a declarative spec
 //! ([`crate::workload`]); the name is then mineable by every other
 //! endpoint, with design points cached under the spec's graph
@@ -55,7 +61,23 @@ use crate::jobs::{sse_frame, JobManager};
 use crate::service::cache::DesignDb;
 use crate::service::http::{Handler, Request, Response};
 use crate::service::queue::Coalescer;
+use crate::telemetry::log::{self, CorrScope};
 use crate::telemetry::{Collect, Sample};
+
+/// Mint a process-unique request correlation id (`r-<salt>-<seq>`); the
+/// salt distinguishes restarts in interleaved logs, like the job ids.
+fn mint_corr() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(1);
+    static SALT: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    let salt = *SALT.get_or_init(|| {
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+            & 0xffff
+    });
+    format!("r-{salt:x}-{:04x}", SEQ.fetch_add(1, Ordering::Relaxed))
+}
 
 /// Sliding-window latency recorder for one endpoint: a ring of the most
 /// recent [`LatencyRing::CAP`] request walls (microseconds), enough for
@@ -151,7 +173,7 @@ impl ServiceState {
             scheduler_evals_total: AtomicU64::new(0),
             latency: [
                 "/models", "/status", "/search", "/evaluate", "/common", "/global", "/cluster",
-                "/workloads", "/metrics", "/jobs", "/db",
+                "/workloads", "/metrics", "/jobs", "/db", "/profile",
             ]
             .into_iter()
             .map(LatencyRing::new)
@@ -345,6 +367,61 @@ impl Collect for ServiceState {
                 });
             }
         }
+        // The same windows, bucketed: real `_bucket` series for alerting
+        // math the two-quantile summary can't support. Window semantics
+        // (latest CAP requests, not since-boot) are shared with the
+        // summary above.
+        for ring in &self.latency {
+            let window: Vec<u32> = ring.samples.lock().unwrap().clone();
+            if window.is_empty() {
+                continue;
+            }
+            let (buckets, sum, count) = crate::telemetry::registry::log2_buckets(
+                window.iter().map(|&v| u64::from(v)),
+                1e-6,
+            );
+            out.push(Sample::Histogram {
+                name: "wham_http_request_duration_seconds".into(),
+                help: "Bucketed request wall-clock per endpoint over the latest window."
+                    .into(),
+                labels: label("endpoint", ring.name),
+                buckets,
+                sum,
+                count,
+            });
+        }
+        // Trace-buffer and flight-recorder occupancy (process-global;
+        // the drop *counters* ride the registry, these are the gauges).
+        let buffered = crate::telemetry::trace::event_count();
+        out.push(Sample::Gauge {
+            name: "wham_trace_buffer_events".into(),
+            help: "Span events currently held by the in-memory trace buffer.".into(),
+            labels: vec![],
+            value: buffered as f64,
+        });
+        out.push(Sample::Gauge {
+            name: "wham_trace_buffer_occupancy".into(),
+            help: "Trace-buffer fill fraction (events / capacity).".into(),
+            labels: vec![],
+            value: buffered as f64 / crate::telemetry::trace::CAP as f64,
+        });
+        let (records, shed) = crate::telemetry::recorder::last_occupancy();
+        out.push(Sample::Gauge {
+            name: "wham_flight_recorder_last_records".into(),
+            help: "Explain records kept by the most recently finished search's \
+                   flight recorder."
+                .into(),
+            labels: vec![],
+            value: records as f64,
+        });
+        out.push(Sample::Gauge {
+            name: "wham_flight_recorder_last_dropped".into(),
+            help: "Explain records shed by the most recently finished search's \
+                   flight recorder."
+                .into(),
+            labels: vec![],
+            value: shed as f64,
+        });
     }
 }
 
@@ -375,20 +452,28 @@ impl Handler for Api {
     fn handle(&self, session: &mut Self::Ctx, req: &Request) -> Response {
         let s = &self.state;
         s.requests.fetch_add(1, Ordering::Relaxed);
+        // One correlation id per request, bound to this thread for the
+        // whole handler: every log line emitted below (including by a
+        // job submission running admission on this thread) carries it,
+        // and the client gets it back in `X-Wham-Request-Id`.
+        let corr = mint_corr();
+        let _corr_scope = CorrScope::enter(&corr);
         let t0 = Instant::now();
+        let mut follower = false;
         let resp = match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/models") => Response::json(session.models().to_json()),
             ("GET", "/status") => Response::json(s.status().to_json()),
             ("GET", "/metrics") => metrics_response(s),
-            ("POST", "/search") => search_response(s, session, &req.body),
+            ("GET", "/profile") => profile_response(&req.query),
+            ("POST", "/search") => search_response(s, session, &req.body, &mut follower),
             ("POST", "/evaluate") => api_result(
                 EvaluateRequest::from_json_str(&req.body)
                     .and_then(|r| session.evaluate(&r))
                     .map(|reply| reply.to_json()),
             ),
-            ("POST", "/common") => common_response(s, session, &req.body),
-            ("POST", "/global") => global_response(s, session, &req.body),
-            ("POST", "/cluster") => cluster_response(s, session, &req.body),
+            ("POST", "/common") => common_response(s, session, &req.body, &mut follower),
+            ("POST", "/global") => global_response(s, session, &req.body, &mut follower),
+            ("POST", "/cluster") => cluster_response(s, session, &req.body, &mut follower),
             ("POST", "/workloads") => api_result(upload_workload(&req.body)),
             ("POST", "/jobs") => submit_job(s, &req.body),
             ("GET", "/jobs") => Response::json(
@@ -412,13 +497,14 @@ impl Handler for Api {
             }
             (
                 _,
-                "/models" | "/status" | "/metrics" | "/search" | "/evaluate" | "/common"
-                | "/global" | "/cluster" | "/workloads" | "/jobs" | "/db/export" | "/db/import",
+                "/models" | "/status" | "/metrics" | "/profile" | "/search" | "/evaluate"
+                | "/common" | "/global" | "/cluster" | "/workloads" | "/jobs" | "/db/export"
+                | "/db/import",
             ) => Response::error(405, "wrong method for this endpoint"),
             _ if req.path.starts_with("/jobs/") => job_response(s, req),
             _ => Response::error(
                 404,
-                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, POST /cluster, POST /jobs, GET /jobs, GET /db/export, POST /db/import, GET /status, GET /metrics",
+                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, POST /cluster, POST /jobs, GET /jobs, GET /db/export, POST /db/import, GET /status, GET /metrics, GET /profile",
             ),
         };
         // Latency-window recording policy (pinned by the tests below):
@@ -440,7 +526,23 @@ impl Handler for Api {
         if let Some(ring) = s.latency.iter().find(|r| r.name == ring_name) {
             ring.note(t0.elapsed());
         }
-        resp
+        // The access log: one structured line per request, every path
+        // (unknown ones included — a single line has no cardinality
+        // problem). For streamed responses `bytes` counts the buffered
+        // body only (0 for SSE), and the wall is handler time.
+        log::info(
+            "http",
+            "request",
+            &[
+                ("method", &req.method),
+                ("path", &req.path),
+                ("status", &resp.status),
+                ("bytes", &resp.body.len()),
+                ("us", &(t0.elapsed().as_micros() as u64)),
+                ("coalesced", &follower),
+            ],
+        );
+        resp.with_header("X-Wham-Request-Id", corr)
     }
 }
 
@@ -453,8 +555,37 @@ fn metrics_response(s: &ServiceState) -> Response {
     crate::cost::backend_rows_total();
     crate::sched::evals_total();
     crate::cluster::events_total();
+    crate::telemetry::trace::events_recorded_total();
+    crate::telemetry::trace::events_dropped_total();
     let collect: &dyn Collect = s;
     Response::prometheus(crate::telemetry::render_prometheus(&[collect]))
+}
+
+/// `GET /profile?seconds=N&hz=M` — attach the span sampler for the
+/// window and answer with folded-stack text (`path;leaf N` lines) for
+/// `flamegraph.pl` / speedscope. Blocks one HTTP worker for the window
+/// (bounded at 30 s); a concurrent profile answers 409.
+fn profile_response(query: &str) -> Response {
+    let mut seconds = 2u64;
+    let mut hz = 99u32;
+    for pair in query.split('&') {
+        let Some((k, v)) = pair.split_once('=') else { continue };
+        match k {
+            "seconds" => match v.parse::<u64>() {
+                Ok(n) if (1..=30).contains(&n) => seconds = n,
+                _ => return Response::error(400, "seconds must be an integer in 1..=30"),
+            },
+            "hz" => match v.parse::<u32>() {
+                Ok(n) if n >= 1 => hz = n,
+                _ => return Response::error(400, "hz must be a positive integer"),
+            },
+            _ => {}
+        }
+    }
+    match crate::telemetry::profile::profile_for(Duration::from_secs(seconds), hz) {
+        Ok(p) => Response::text(p.collapsed(), "text/plain; charset=utf-8"),
+        Err(e) => Response::error(409, e),
+    }
 }
 
 /// Map a typed API outcome onto an HTTP response.
@@ -490,14 +621,19 @@ fn upload_workload(body: &str) -> Result<String, ApiError> {
     .to_json())
 }
 
-fn search_response(s: &ServiceState, session: &mut Session, body: &str) -> Response {
+fn search_response(
+    s: &ServiceState,
+    session: &mut Session,
+    body: &str,
+    follower: &mut bool,
+) -> Response {
     let plan = match SearchRequest::from_json_str(body).and_then(|r| r.validate()) {
         Ok(p) => p,
         Err(e) => return api_result(Err(e)),
     };
     s.search_requests.fetch_add(1, Ordering::Relaxed);
     let key = plan.coalescing_key(session.backend_name());
-    let (outcome, _led) = s.coalescer.run(key, || {
+    let (outcome, led) = s.coalescer.run(key, || {
         let reply = session.run_search(&plan, &mut NullSink).map_err(|e| e.message)?;
         if reply.scheduler_evals > 0 {
             s.cold_searches.fetch_add(1, Ordering::Relaxed);
@@ -507,42 +643,61 @@ fn search_response(s: &ServiceState, session: &mut Session, body: &str) -> Respo
         s.scheduler_evals_total.fetch_add(reply.scheduler_evals, Ordering::Relaxed);
         Ok(reply.to_json())
     });
+    *follower = !led;
     into_response(&outcome)
 }
 
-fn common_response(s: &ServiceState, session: &mut Session, body: &str) -> Response {
+fn common_response(
+    s: &ServiceState,
+    session: &mut Session,
+    body: &str,
+    follower: &mut bool,
+) -> Response {
     let plan = match CommonRequest::from_json_str(body).and_then(|r| r.validate()) {
         Ok(p) => p,
         Err(e) => return api_result(Err(e)),
     };
     let key = plan.coalescing_key(session.backend_name());
-    let (outcome, _led) = s.coalescer.run(key, || {
+    let (outcome, led) = s.coalescer.run(key, || {
         session.run_common(&plan).map(|r| r.to_json()).map_err(|e| e.message)
     });
+    *follower = !led;
     into_response(&outcome)
 }
 
-fn global_response(s: &ServiceState, session: &mut Session, body: &str) -> Response {
+fn global_response(
+    s: &ServiceState,
+    session: &mut Session,
+    body: &str,
+    follower: &mut bool,
+) -> Response {
     let plan = match GlobalRequest::from_json_str(body).and_then(|r| r.validate()) {
         Ok(p) => p,
         Err(e) => return api_result(Err(e)),
     };
     let key = plan.coalescing_key(session.backend_name());
-    let (outcome, _led) = s.coalescer.run(key, || {
+    let (outcome, led) = s.coalescer.run(key, || {
         session.run_global(&plan, &mut NullSink).map(|r| r.to_json()).map_err(|e| e.message)
     });
+    *follower = !led;
     into_response(&outcome)
 }
 
-fn cluster_response(s: &ServiceState, session: &mut Session, body: &str) -> Response {
+fn cluster_response(
+    s: &ServiceState,
+    session: &mut Session,
+    body: &str,
+    follower: &mut bool,
+) -> Response {
     let plan = match ClusterRequest::from_json_str(body).and_then(|r| r.validate()) {
         Ok(p) => p,
         Err(e) => return api_result(Err(e)),
     };
     let key = plan.coalescing_key(session.backend_name());
-    let (outcome, _led) = s.coalescer.run(key, || {
+    let (outcome, led) = s.coalescer.run(key, || {
         session.run_cluster(&plan, &mut NullSink).map(|r| r.to_json()).map_err(|e| e.message)
     });
+    *follower = !led;
     into_response(&outcome)
 }
 

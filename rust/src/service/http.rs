@@ -122,6 +122,7 @@ impl Response {
             404 => "Not Found",
             405 => "Method Not Allowed",
             408 => "Request Timeout",
+            409 => "Conflict",
             413 => "Payload Too Large",
             429 => "Too Many Requests",
             503 => "Service Unavailable",

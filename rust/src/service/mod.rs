@@ -39,6 +39,7 @@ use crate::coordinator::{make_backend, BackendChoice};
 use crate::cost::native::NativeCost;
 use crate::jobs::store::JobStore;
 use crate::jobs::{DrainSummary, JobManager, JobsOptions};
+use crate::telemetry::log;
 use api::{Api, ServiceState};
 use cache::DesignDb;
 
@@ -208,41 +209,58 @@ pub fn serve_forever(addr: &str, opts: ServeOptions) -> anyhow::Result<()> {
         // buffer periodically (writes are whole-file, so the file is
         // always a complete Chrome-trace document).
         crate::telemetry::trace::enable();
-        eprintln!("span tracing on: snapshotting to {} every 5s", path.display());
+        log::info(
+            "serve",
+            "span tracing on; snapshotting every 5s",
+            &[("out", &path.display())],
+        );
         std::thread::spawn(move || loop {
             std::thread::sleep(Duration::from_secs(5));
             let _ = crate::telemetry::trace::write_to(&path);
         });
     }
     let handle = start(listener, opts)?;
-    println!(
-        "wham serve listening on http://{} (workers={workers}, db={db_desc}, {} designs loaded, jobs-db={jobs_desc})",
-        handle.addr,
-        handle.state.db.stats().loaded,
+    log::info(
+        "serve",
+        "listening",
+        &[
+            ("addr", &format!("http://{}", handle.addr)),
+            ("workers", &workers),
+            ("db", &db_desc),
+            ("designs_loaded", &handle.state.db.stats().loaded),
+            ("jobs_db", &jobs_desc),
+        ],
     );
     let store = handle.state.jobs.store();
     if store.resumed() > 0 || store.skipped() > 0 {
-        println!(
-            "job log replayed: {} interrupted job(s) re-queued, {} unparseable line(s) skipped",
-            store.resumed(),
-            store.skipped(),
+        log::info(
+            "serve",
+            "job log replayed",
+            &[("requeued", &store.resumed()), ("skipped", &store.skipped())],
         );
     }
-    println!(
-        "endpoints: GET /models  POST /search  POST /evaluate  POST /common  POST /global  POST /cluster  POST /jobs  GET /jobs[/:id[/events]]  GET /db/export  POST /db/import  GET /status  GET /metrics"
+    log::info(
+        "serve",
+        "endpoints: GET /models  POST /search  POST /evaluate  POST /common  POST /global  POST /cluster  POST /jobs  GET /jobs[/:id[/events]]  GET /db/export  POST /db/import  GET /status  GET /metrics  GET /profile",
+        &[],
     );
     signals::install();
     while !signals::requested() {
         std::thread::sleep(Duration::from_millis(200));
     }
-    println!("shutdown signal received; draining jobs (budget {}s)", drain.as_secs());
+    log::info("serve", "shutdown signal received; draining jobs", &[("budget_s", &drain.as_secs())]);
     let summary = handle.shutdown(drain);
     if let Some(path) = &trace_out {
         let _ = crate::telemetry::trace::write_to(path);
     }
-    println!(
-        "drained: {} job(s) completed, {} re-queued for next boot, {} left queued",
-        summary.completed, summary.requeued, summary.queued_left,
+    log::info(
+        "serve",
+        "drained",
+        &[
+            ("completed", &summary.completed),
+            ("requeued", &summary.requeued),
+            ("queued_left", &summary.queued_left),
+        ],
     );
     Ok(())
 }

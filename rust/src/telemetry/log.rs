@@ -1,0 +1,292 @@
+//! Leveled structured logging with request/job correlation.
+//!
+//! Std-only, one line per record. Two output formats:
+//!
+//! * **NDJSON** (the default when stderr is not a TTY, and always for
+//!   `--log-out FILE`): `{"ts":..,"level":"info","target":"serve",
+//!   "msg":"...","corr":"r-..","key":"value",...}` — greppable by the
+//!   correlation id every HTTP response carries in
+//!   `X-Wham-Request-Id`.
+//! * **Pretty** (stderr on a TTY): `12:03:07 INFO  serve listening ...
+//!   key=value [r-..]` for humans watching `wham serve`.
+//!
+//! A record is dropped before any formatting happens when its level is
+//! below the configured threshold ([`enabled`] is one relaxed load).
+//!
+//! **Correlation:** [`CorrScope`] binds an id to the current thread for
+//! its lifetime; every record emitted while the scope is live carries
+//! it. `service/api.rs` opens a scope per HTTP request, the job workers
+//! open one per job attempt, so one grep connects the access log, the
+//! job lifecycle, and the WAL.
+//!
+//! Tests swap the sink for an in-memory buffer with [`capture`]; the
+//! whole module is process-global, so tests that assert on output
+//! serialize just like the trace-buffer tests do.
+
+use std::cell::RefCell;
+use std::io::{IsTerminal, Write};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Obj;
+
+/// Record severity, ordered: `Debug < Info < Warn < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    /// Lowercase wire label (`"info"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+
+    /// Parse a `--log-level` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+}
+
+/// Threshold; records below it are dropped unformatted.
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+enum SinkKind {
+    /// Stderr; pretty when it was a TTY at installation time.
+    Stderr { pretty: bool },
+    /// `--log-out` file, always NDJSON.
+    File(std::fs::File),
+    /// Test capture, always NDJSON.
+    Capture(Arc<Mutex<String>>),
+}
+
+fn sink() -> &'static Mutex<SinkKind> {
+    static SINK: OnceLock<Mutex<SinkKind>> = OnceLock::new();
+    SINK.get_or_init(|| {
+        Mutex::new(SinkKind::Stderr { pretty: std::io::stderr().is_terminal() })
+    })
+}
+
+thread_local! {
+    static CORR: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// Set the minimum level that will be emitted.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Current minimum level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+/// Whether a record at `l` would be emitted (one relaxed load).
+pub fn enabled(l: Level) -> bool {
+    l as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Route records to `path` as NDJSON (append mode) — the `--log-out`
+/// flag. Replaces the current sink.
+pub fn to_file(path: &std::path::Path) -> std::io::Result<()> {
+    let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    *sink().lock().unwrap() = SinkKind::File(f);
+    Ok(())
+}
+
+/// Route records back to stderr (pretty iff it is a TTY now).
+pub fn to_stderr() {
+    *sink().lock().unwrap() = SinkKind::Stderr { pretty: std::io::stderr().is_terminal() };
+}
+
+/// Swap the sink for an in-memory NDJSON buffer and return it (tests).
+/// Call [`to_stderr`] to restore normal output.
+pub fn capture() -> Arc<Mutex<String>> {
+    let buf = Arc::new(Mutex::new(String::new()));
+    *sink().lock().unwrap() = SinkKind::Capture(Arc::clone(&buf));
+    buf
+}
+
+/// Bind `corr` as this thread's correlation id for the guard's
+/// lifetime; nested scopes shadow and restore.
+pub struct CorrScope(Option<String>);
+
+impl CorrScope {
+    /// Enter a correlation scope. An empty `corr` (a pre-correlation WAL
+    /// record, say) binds *no* id rather than an empty one.
+    pub fn enter(corr: &str) -> Self {
+        let next = if corr.is_empty() { None } else { Some(corr.to_string()) };
+        let prev = CORR.with(|c| std::mem::replace(&mut *c.borrow_mut(), next));
+        CorrScope(prev)
+    }
+}
+
+impl Drop for CorrScope {
+    fn drop(&mut self) {
+        CORR.with(|c| *c.borrow_mut() = self.0.take());
+    }
+}
+
+/// The correlation id bound to this thread, if any.
+pub fn current_corr() -> Option<String> {
+    CORR.with(|c| c.borrow().clone())
+}
+
+fn epoch_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis() as u64).unwrap_or(0)
+}
+
+/// Emit one record. `fields` are formatted only when the level passes.
+pub fn log(level: Level, target: &str, msg: &str, fields: &[(&str, &dyn std::fmt::Display)]) {
+    if !enabled(level) {
+        return;
+    }
+    let ts = epoch_ms();
+    let corr = current_corr();
+    let mut guard = sink().lock().unwrap();
+    let pretty = matches!(&*guard, SinkKind::Stderr { pretty: true });
+    let line = if pretty {
+        let secs = ts / 1000;
+        let (h, m, s) = ((secs / 3600) % 24, (secs / 60) % 60, secs % 60);
+        let mut out = format!("{h:02}:{m:02}:{s:02} {:5} {target} {msg}", level.label().to_ascii_uppercase());
+        for (k, v) in fields {
+            out.push_str(&format!(" {k}={v}"));
+        }
+        if let Some(c) = &corr {
+            out.push_str(&format!(" [{c}]"));
+        }
+        out.push('\n');
+        out
+    } else {
+        let mut o = Obj::new()
+            .u64("ts", ts)
+            .str("level", level.label())
+            .str("target", target)
+            .str("msg", msg);
+        if let Some(c) = &corr {
+            o = o.str("corr", c);
+        }
+        for (k, v) in fields {
+            o = o.str(k, &v.to_string());
+        }
+        let mut line = o.finish();
+        line.push('\n');
+        line
+    };
+    match &mut *guard {
+        SinkKind::Stderr { .. } => {
+            let _ = std::io::stderr().write_all(line.as_bytes());
+        }
+        SinkKind::File(f) => {
+            let _ = f.write_all(line.as_bytes());
+            let _ = f.flush();
+        }
+        SinkKind::Capture(buf) => buf.lock().unwrap().push_str(&line),
+    }
+}
+
+/// Emit at `Debug`.
+pub fn debug(target: &str, msg: &str, fields: &[(&str, &dyn std::fmt::Display)]) {
+    log(Level::Debug, target, msg, fields);
+}
+
+/// Emit at `Info`.
+pub fn info(target: &str, msg: &str, fields: &[(&str, &dyn std::fmt::Display)]) {
+    log(Level::Info, target, msg, fields);
+}
+
+/// Emit at `Warn`.
+pub fn warn(target: &str, msg: &str, fields: &[(&str, &dyn std::fmt::Display)]) {
+    log(Level::Warn, target, msg, fields);
+}
+
+/// Emit at `Error`.
+pub fn error(target: &str, msg: &str, fields: &[(&str, &dyn std::fmt::Display)]) {
+    log(Level::Error, target, msg, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sink and level are process-global; serialize the tests that swap
+    // them.
+    static GUARD: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn ndjson_records_carry_fields_and_corr() {
+        let _g = GUARD.lock().unwrap();
+        let buf = capture();
+        set_level(Level::Info);
+        {
+            let _scope = CorrScope::enter("r-test-1");
+            info("unit", "hello", &[("k", &42), ("path", &"/x")]);
+        }
+        info("unit", "bare", &[]);
+        to_stderr();
+        let text = buf.lock().unwrap().clone();
+        let first = text.lines().next().unwrap();
+        let v = crate::util::json::parse(first).unwrap();
+        assert_eq!(v.get("level").unwrap().as_str(), Some("info"));
+        assert_eq!(v.get("target").unwrap().as_str(), Some("unit"));
+        assert_eq!(v.get("msg").unwrap().as_str(), Some("hello"));
+        assert_eq!(v.get("corr").unwrap().as_str(), Some("r-test-1"));
+        assert_eq!(v.get("k").unwrap().as_str(), Some("42"));
+        // Scope closed: the second record has no corr.
+        let second = text.lines().nth(1).unwrap();
+        let v2 = crate::util::json::parse(second).unwrap();
+        assert!(v2.get("corr").is_none());
+    }
+
+    #[test]
+    fn level_threshold_filters_and_restores() {
+        let _g = GUARD.lock().unwrap();
+        let buf = capture();
+        set_level(Level::Warn);
+        info("unit", "suppressed", &[]);
+        debug("unit", "suppressed", &[]);
+        warn("unit", "kept", &[]);
+        error("unit", "kept-too", &[]);
+        set_level(Level::Info);
+        to_stderr();
+        let text = buf.lock().unwrap().clone();
+        assert_eq!(text.lines().count(), 2, "{text}");
+        assert!(!text.contains("suppressed"));
+        assert!(text.contains("kept"));
+        assert!(Level::parse("WARN") == Some(Level::Warn));
+        assert!(Level::parse("nope").is_none());
+    }
+
+    #[test]
+    fn corr_scopes_nest_and_restore() {
+        let outer = CorrScope::enter("outer");
+        assert_eq!(current_corr().as_deref(), Some("outer"));
+        {
+            let _inner = CorrScope::enter("inner");
+            assert_eq!(current_corr().as_deref(), Some("inner"));
+        }
+        assert_eq!(current_corr().as_deref(), Some("outer"));
+        drop(outer);
+        assert_eq!(current_corr(), None);
+    }
+}

@@ -1,22 +1,31 @@
-//! `wham::telemetry` — structured tracing, the unified metrics
-//! registry, and the search flight recorder (std-only, zero-cost when
-//! disabled).
+//! `wham::telemetry` — structured tracing, sampling profiler, metrics
+//! registry, leveled logs, and the search flight recorder (std-only,
+//! zero-cost when disabled).
 //!
-//! Three layers, one module:
+//! Five layers, one module:
 //!
 //! * [`trace`] — RAII spans (`span!("mcr_probe", tc = c.tc)`) with
-//!   thread-local span stacks and a bounded, lock-free-indexed event
-//!   buffer serializing to Chrome-trace/Perfetto JSON. Enabled by
-//!   `--trace-out` on `wham search|global|cluster|serve`. The span
-//!   taxonomy covers the hot layers end to end: `annotate`,
-//!   `schedule`, `mcr`, `mcr_probe`, `mcr_gallop`, `prune_batch`,
-//!   `search_phase`, `global_stage`, `global_prune`,
-//!   `strategy_screen`, `event_sim`.
-//! * [`registry`] — named counters plus scrape-time gauges/summaries.
-//!   The formerly ad-hoc statics (`cost::backend_rows_total`,
-//!   `sched::evals_total`, `cluster::events_total`) register here, the
-//!   service's `GET /metrics` renders the Prometheus text exposition,
-//!   and the benches snapshot it into `BENCH_*.json`.
+//!   sampler-walkable per-thread span stacks and a bounded,
+//!   lock-free-indexed event buffer serializing to
+//!   Chrome-trace/Perfetto JSON. Enabled by `--trace-out` on
+//!   `wham search|global|cluster|serve`. The span taxonomy covers the
+//!   hot layers end to end: `annotate`, `schedule`, `mcr`,
+//!   `mcr_probe`, `mcr_gallop`, `prune_batch`, `search_phase`,
+//!   `global_stage`, `global_prune`, `strategy_screen`, `event_sim`.
+//! * [`profile`] — a sampling profiler over those span stacks: a
+//!   background thread snapshots every thread's open-span path at a
+//!   configurable Hz into a weighted trie, rendered as folded stacks
+//!   (`GET /profile`, flamegraph.pl/speedscope ready) or a top-k
+//!   hottest-path table (`wham trace profile`).
+//! * [`registry`] — named counters and log2-bucketed histograms plus
+//!   scrape-time gauges/summaries. The formerly ad-hoc statics
+//!   (`cost::backend_rows_total`, `sched::evals_total`,
+//!   `cluster::events_total`) register here, the service's
+//!   `GET /metrics` renders the Prometheus text exposition, and the
+//!   benches snapshot it into `BENCH_*.json`.
+//! * [`log`] — leveled structured records (NDJSON or TTY-pretty) with
+//!   per-request/job correlation ids; `X-Wham-Request-Id` on every
+//!   HTTP response greps straight to the matching log lines.
 //! * [`recorder`] — the flight recorder: per-iteration critical-path
 //!   attribution of the local search (conflicted op class, cores
 //!   granted, score delta, cache hit/miss) in a bounded ring, attached
@@ -26,10 +35,12 @@
 //! decisions, so the bit-identical parity guarantees of the fast paths
 //! are untouched.
 
+pub mod log;
+pub mod profile;
 pub mod recorder;
 pub mod registry;
 pub mod trace;
 
 pub use recorder::{ExplainRecord, FlightRecorder};
-pub use registry::{render_prometheus, snapshot_json, Collect, Counter, Sample};
+pub use registry::{render_prometheus, snapshot_json, Collect, Counter, Histogram, Sample};
 pub use trace::{span, Span};

@@ -14,8 +14,21 @@
 //! search outcomes.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::cost::Dims;
+
+/// Ring occupancy of the most recently finished recorder (records kept,
+/// records shed), published when a search consumes its recorder —
+/// surfaced as gauges by `GET /metrics` so a scrape shows whether the
+/// last search's explain log was complete.
+static LAST_RECORDS: AtomicU64 = AtomicU64::new(0);
+static LAST_DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// `(records, dropped)` of the most recently finalized flight recorder.
+pub fn last_occupancy() -> (u64, u64) {
+    (LAST_RECORDS.load(Ordering::Relaxed), LAST_DROPPED.load(Ordering::Relaxed))
+}
 
 /// One evaluated `<TC-Dim, VC-Width>` with its critical-path attribution.
 #[derive(Debug, Clone, PartialEq)]
@@ -85,8 +98,11 @@ impl FlightRecorder {
         self.dropped
     }
 
-    /// Consume into a plain vector (evaluation order).
+    /// Consume into a plain vector (evaluation order), publishing this
+    /// recorder's occupancy for the `/metrics` gauges.
     pub fn into_records(self) -> Vec<ExplainRecord> {
+        LAST_RECORDS.store(self.records.len() as u64, Ordering::Relaxed);
+        LAST_DROPPED.store(self.dropped as u64, Ordering::Relaxed);
         self.records.into()
     }
 }

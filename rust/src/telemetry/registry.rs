@@ -62,6 +62,156 @@ impl Counter {
     }
 }
 
+/// Number of log2 buckets a [`Histogram`] keeps. Bucket 0 holds the
+/// value 0; bucket `i` holds values in `[2^(i-1), 2^i)`; the last
+/// bucket additionally absorbs everything larger (2^30 ticks ≈ 18
+/// minutes at microsecond resolution — far beyond any latency we
+/// track).
+pub const HIST_BUCKETS: usize = 31;
+
+/// A process-wide log2-bucketed histogram. Declare as a `static`; like
+/// [`Counter`] it is `const`-constructible and lazily self-registers on
+/// first observation, so untouched histograms never appear in a scrape.
+///
+/// Observations are raw integer "ticks" (microseconds for latencies,
+/// milliseconds for queue waits); `scale` converts ticks to the
+/// exported unit at render time, so bucket boundaries come out in
+/// seconds without any floating point on the hot path. An observation
+/// costs three relaxed `fetch_add`s after the `Once` fast path.
+pub struct Histogram {
+    name: &'static str,
+    help: &'static str,
+    /// Multiplier from ticks to the exported unit (e.g. `1e-6` for
+    /// microsecond ticks exported as seconds).
+    scale: f64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+    registered: Once,
+}
+
+impl Histogram {
+    /// A new unregistered histogram (registration happens on first
+    /// observation).
+    pub const fn new(name: &'static str, help: &'static str, scale: f64) -> Self {
+        Self {
+            name,
+            help,
+            scale,
+            buckets: [const { AtomicU64::new(0) }; HIST_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            registered: Once::new(),
+        }
+    }
+
+    /// Prometheus metric name (`wham_*_seconds`).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Bucket index for a raw tick value: 0 for 0, else bit length,
+    /// clamped into the fixed bucket array.
+    fn bucket_index(ticks: u64) -> usize {
+        ((u64::BITS - ticks.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound (`le`), in ticks, of cumulative bucket `i`:
+    /// buckets `0..=i` hold exactly the observations `<= 2^i - 1`.
+    fn le_ticks(i: usize) -> u64 {
+        (1u64 << i) - 1
+    }
+
+    /// Record one observation of `ticks`.
+    pub fn observe(&'static self, ticks: u64) {
+        self.registered.call_once(|| register_histogram(self));
+        self.buckets[Self::bucket_index(ticks)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ticks, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a duration in microsecond ticks (pair with `scale = 1e-6`
+    /// so the exported unit is seconds).
+    pub fn observe_micros(&'static self, d: std::time::Duration) {
+        self.observe(d.as_micros() as u64);
+    }
+
+    /// RAII form of [`observe_micros`]: observes the guard's lifetime.
+    pub fn start_timer(&'static self) -> HistTimer {
+        HistTimer { hist: self, start: std::time::Instant::now() }
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&'static self) -> u64 {
+        self.registered.call_once(|| register_histogram(self));
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Render this histogram as a scrape [`Sample::Histogram`]:
+    /// cumulative `(le, count)` pairs in the exported unit, one pair per
+    /// non-empty bucket (cumulative semantics make sparse buckets
+    /// legal), plus sum and count.
+    fn sample(&self) -> Sample {
+        let mut buckets = Vec::new();
+        let mut cumulative = 0u64;
+        // The last bucket is the overflow bucket: its upper bound is
+        // only honest as `+Inf`, so it contributes to the count but
+        // never gets its own `le` line.
+        for i in 0..HIST_BUCKETS - 1 {
+            let n = self.buckets[i].load(Ordering::Relaxed);
+            cumulative += n;
+            if n > 0 {
+                buckets.push((Self::le_ticks(i) as f64 * self.scale, cumulative));
+            }
+        }
+        Sample::Histogram {
+            name: self.name.to_string(),
+            help: self.help.to_string(),
+            labels: vec![],
+            buckets,
+            sum: self.sum.load(Ordering::Relaxed) as f64 * self.scale,
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Bucket a window of raw tick observations into the cumulative log2
+/// `(le, count)` pairs a [`Sample::Histogram`] wants, plus sum and
+/// count in the exported unit. For scrape-time histograms built from
+/// non-registered sources (e.g. the endpoint latency ring windows).
+pub fn log2_buckets(ticks: impl Iterator<Item = u64>, scale: f64) -> (Vec<(f64, u64)>, f64, u64) {
+    let mut counts = [0u64; HIST_BUCKETS];
+    let mut sum = 0u64;
+    let mut count = 0u64;
+    for t in ticks {
+        counts[Histogram::bucket_index(t)] += 1;
+        sum += t;
+        count += 1;
+    }
+    let mut buckets = Vec::new();
+    let mut cumulative = 0u64;
+    for (i, &n) in counts.iter().enumerate().take(HIST_BUCKETS - 1) {
+        cumulative += n;
+        if n > 0 {
+            buckets.push((Histogram::le_ticks(i) as f64 * scale, cumulative));
+        }
+    }
+    (buckets, sum as f64 * scale, count)
+}
+
+/// Guard returned by [`Histogram::start_timer`]; observes the elapsed
+/// wall-clock (in microsecond ticks) when dropped.
+pub struct HistTimer {
+    hist: &'static Histogram,
+    start: std::time::Instant,
+}
+
+impl Drop for HistTimer {
+    fn drop(&mut self) {
+        self.hist.observe_micros(self.start.elapsed());
+    }
+}
+
 /// One scrape-time sample contributed by a [`Collect`] implementor.
 #[derive(Debug, Clone)]
 pub enum Sample {
@@ -78,6 +228,19 @@ pub enum Sample {
         help: String,
         labels: Vec<(String, String)>,
         quantiles: Vec<(f64, f64)>,
+        count: u64,
+    },
+    /// A bucketed distribution: cumulative `(le, count)` pairs (`+Inf`
+    /// is implied by `count` and appended at render time) plus the sum
+    /// of observations in the exported unit. Used both by registered
+    /// [`Histogram`] statics and per-instance sources such as the
+    /// endpoint latency rings.
+    Histogram {
+        name: String,
+        help: String,
+        labels: Vec<(String, String)>,
+        buckets: Vec<(f64, u64)>,
+        sum: f64,
         count: u64,
     },
 }
@@ -102,6 +265,29 @@ fn register(c: &'static Counter) {
         c.name
     );
     v.push(c);
+}
+
+fn histogram_registry() -> &'static Mutex<Vec<&'static Histogram>> {
+    static HISTOGRAMS: OnceLock<Mutex<Vec<&'static Histogram>>> = OnceLock::new();
+    HISTOGRAMS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn register_histogram(h: &'static Histogram) {
+    let mut v = histogram_registry().lock().unwrap();
+    debug_assert!(
+        v.iter().all(|e| e.name != h.name),
+        "duplicate metric name registered: {}",
+        h.name
+    );
+    v.push(h);
+}
+
+/// Scrape samples for every registered histogram, sorted by name.
+pub fn histogram_samples() -> Vec<Sample> {
+    let mut hs: Vec<&'static Histogram> =
+        histogram_registry().lock().unwrap().iter().copied().collect();
+    hs.sort_unstable_by_key(|h| h.name);
+    hs.iter().map(|h| h.sample()).collect()
 }
 
 /// Snapshot of every registered counter, sorted by name.
@@ -181,7 +367,7 @@ pub fn render_prometheus(extra: &[&dyn Collect]) -> String {
             out.push_str(&format!("{} {}\n", c.name, c.cell.load(Ordering::Relaxed)));
         }
     }
-    let mut samples = Vec::new();
+    let mut samples = histogram_samples();
     for src in extra {
         src.collect(&mut samples);
     }
@@ -212,6 +398,19 @@ pub fn render_prometheus(extra: &[&dyn Collect]) -> String {
                 }
                 out.push_str(&format!("{name}_count{} {count}\n", label_str(labels)));
             }
+            Sample::Histogram { name, help, labels, buckets, sum, count } => {
+                header(&mut out, name, help, "histogram");
+                for &(le, cumulative) in buckets {
+                    let mut ls = labels.clone();
+                    ls.push(("le".to_string(), prom_num(le)));
+                    out.push_str(&format!("{name}_bucket{} {cumulative}\n", label_str(&ls)));
+                }
+                let mut ls = labels.clone();
+                ls.push(("le".to_string(), "+Inf".to_string()));
+                out.push_str(&format!("{name}_bucket{} {count}\n", label_str(&ls)));
+                out.push_str(&format!("{name}_sum{} {}\n", label_str(labels), prom_num(*sum)));
+                out.push_str(&format!("{name}_count{} {count}\n", label_str(labels)));
+            }
         }
     }
     out
@@ -224,6 +423,11 @@ pub fn snapshot_json() -> String {
     let mut o = Obj::new();
     for (name, value) in counters() {
         o = o.u64(name, value);
+    }
+    for s in histogram_samples() {
+        if let Sample::Histogram { name, count, .. } = s {
+            o = o.u64(&format!("{name}_count"), count);
+        }
     }
     o.finish()
 }
@@ -303,5 +507,41 @@ mod tests {
     fn label_quoting_escapes_specials() {
         assert_eq!(prom_quote("a\"b\\c"), "\"a\\\"b\\\\c\"");
         assert_eq!(prom_num(f64::INFINITY), "+Inf");
+    }
+
+    static TEST_H: Histogram =
+        Histogram::new("wham_test_registry_hist_ticks", "Test histogram.", 1.0);
+
+    #[test]
+    fn histogram_buckets_are_log2_and_cumulative() {
+        // Bucket 0 = {0}; bucket i = [2^(i-1), 2^i).
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+
+        for v in [0u64, 1, 2, 3, 4, 7, 8] {
+            TEST_H.observe(v);
+        }
+        assert_eq!(TEST_H.count(), 7);
+        let text = render_prometheus(&[]);
+        // le lines are cumulative: 0→1, 1→2, 3→4, 7→6, 15→7, +Inf→7.
+        assert!(text.contains("# TYPE wham_test_registry_hist_ticks histogram"), "{text}");
+        assert!(text.contains("wham_test_registry_hist_ticks_bucket{le=\"0\"} 1\n"), "{text}");
+        assert!(text.contains("wham_test_registry_hist_ticks_bucket{le=\"1\"} 2\n"), "{text}");
+        assert!(text.contains("wham_test_registry_hist_ticks_bucket{le=\"3\"} 4\n"), "{text}");
+        assert!(text.contains("wham_test_registry_hist_ticks_bucket{le=\"7\"} 6\n"), "{text}");
+        assert!(text.contains("wham_test_registry_hist_ticks_bucket{le=\"15\"} 7\n"), "{text}");
+        assert!(text.contains("wham_test_registry_hist_ticks_bucket{le=\"+Inf\"} 7\n"), "{text}");
+        assert!(text.contains("wham_test_registry_hist_ticks_sum 25\n"), "{text}");
+        assert!(text.contains("wham_test_registry_hist_ticks_count 7\n"), "{text}");
+        // Snapshot carries the observation count.
+        let v = crate::util::json::parse(&snapshot_json()).unwrap();
+        assert_eq!(
+            v.get("wham_test_registry_hist_ticks_count").and_then(|x| x.as_u64()),
+            Some(7)
+        );
     }
 }

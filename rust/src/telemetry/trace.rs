@@ -1,7 +1,7 @@
 //! Span-based tracing with Chrome-trace/Perfetto output.
 //!
 //! `let _s = span!("mcr_probe", tc = cand.tc);` opens an RAII span: the
-//! guard pushes onto a thread-local span stack (so nesting depth is
+//! guard pushes onto a per-thread span stack (so nesting depth is
 //! queryable and Perfetto renders proper flame nesting per thread) and,
 //! on drop, records one complete event into a process-global bounded
 //! buffer. Serialization ([`chrome_json`] / [`write_to`]) produces the
@@ -9,24 +9,35 @@
 //! emits ([`crate::report::trace::chrome_trace`]), so both load in
 //! <https://ui.perfetto.dev>.
 //!
+//! The per-thread stacks are shared, not thread-local-only: each thread
+//! lazily registers an `Arc` handle in a process-global registry so the
+//! sampling profiler ([`crate::telemetry::profile`]) can walk every
+//! thread's open-span path from its own sampler thread. The stack mutex
+//! is uncontended in the common case — only the owning thread and an
+//! attached sampler (at ~100 Hz) ever touch it.
+//!
 //! Cost model:
-//! * **Disabled (default):** [`span`] is one relaxed atomic load and a
+//! * **Inactive (default):** [`span`] is one relaxed atomic load and a
 //!   branch — the guard holds `None`, `arg` and `Drop` no-op. The <2%
-//!   hot-path budget of the observability PR rides on this.
-//! * **Enabled:** two `Instant::now()` calls plus a lock-free buffer
+//!   hot-path budget of the observability PRs rides on this. "Inactive"
+//!   means neither tracing nor a sampler is on: both share the single
+//!   `STATE` gate.
+//! * **Tracing:** two `Instant::now()` calls plus a lock-free buffer
 //!   append — the write index is reserved with a single `fetch_add`, and
 //!   the payload store takes an uncontended per-slot lock (no thread
 //!   ever blocks on another's slot). When the buffer is full, events
 //!   are dropped and counted in `wham_trace_events_dropped_total`
 //!   rather than grown without bound.
+//! * **Sampling only:** stack push/pop under an uncontended mutex; no
+//!   events are recorded, so the buffer and its drop accounting are
+//!   untouched.
 //!
 //! Tracing never changes search outcomes: spans only observe, and the
 //! parity suites (`hotpath_parity`, `parallel_*_match_serial`) run with
 //! it both off and on in `rust/tests/telemetry.rs`.
 
-use std::cell::RefCell;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::atomic::{AtomicU32, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 use std::time::Instant;
 
 use super::registry::Counter;
@@ -34,9 +45,16 @@ use crate::util::json::{esc, Obj};
 
 /// Buffer capacity in events (~6 MiB fully populated). A smoke search
 /// emits a few thousand events; deep traces drop the tail and say so.
-const CAP: usize = 1 << 16;
+pub(crate) const CAP: usize = 1 << 16;
 
-static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Bit in [`STATE`]: record complete events into the buffer.
+const TRACING: u8 = 1 << 0;
+/// Bit in [`STATE`]: a sampler is attached and wants live stacks.
+const SAMPLING: u8 = 1 << 1;
+
+/// The single hot-path gate. `span()` takes one relaxed load; zero
+/// means "do nothing at all".
+static STATE: AtomicU8 = AtomicU8::new(0);
 static NEXT_TID: AtomicU32 = AtomicU32::new(1);
 
 /// Events recorded into the trace buffer since process start.
@@ -47,6 +65,20 @@ static EVENTS_DROPPED: Counter = Counter::new(
     "wham_trace_events_dropped_total",
     "Trace events dropped because the bounded span buffer was full.",
 );
+
+/// Force registration of the drop counter so `/metrics` shows the
+/// (usually zero) drop count before the first overflow, and return it.
+pub fn events_dropped_total() -> u64 {
+    EVENTS_DROPPED.add(0);
+    EVENTS_DROPPED.get()
+}
+
+/// Force registration of the recorded-events counter (see
+/// [`events_dropped_total`]) and return it.
+pub fn events_recorded_total() -> u64 {
+    EVENTS_RECORDED.add(0);
+    EVENTS_RECORDED.get()
+}
 
 #[derive(Debug, Clone)]
 struct Event {
@@ -78,9 +110,50 @@ fn epoch() -> Instant {
     *EPOCH.get_or_init(Instant::now)
 }
 
+/// One thread's open-span path, shared so the sampler can read it from
+/// another thread. The owning thread pushes/pops; the mutex is
+/// effectively uncontended (see module docs).
+struct ThreadStack {
+    tid: u32,
+    frames: Mutex<Vec<&'static str>>,
+}
+
+fn thread_registry() -> &'static Mutex<Vec<Weak<ThreadStack>>> {
+    static THREADS: OnceLock<Mutex<Vec<Weak<ThreadStack>>>> = OnceLock::new();
+    THREADS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn register_thread() -> Arc<ThreadStack> {
+    let stack = Arc::new(ThreadStack {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        frames: Mutex::new(Vec::new()),
+    });
+    let mut reg = thread_registry().lock().unwrap();
+    // Exited threads leave dead weak handles behind; prune on the slow
+    // (once-per-thread) path so the registry stays bounded.
+    reg.retain(|w| w.strong_count() > 0);
+    reg.push(Arc::downgrade(&stack));
+    stack
+}
+
 thread_local! {
-    static TID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
-    static STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+    static LOCAL: Arc<ThreadStack> = register_thread();
+}
+
+/// Snapshot every live thread's current open-span path, innermost last.
+/// Empty stacks (idle threads) are skipped. This is the sampler's view;
+/// it never blocks a working thread for longer than one push/pop.
+pub(crate) fn sample_stacks() -> Vec<(u32, Vec<&'static str>)> {
+    let reg = thread_registry().lock().unwrap();
+    let mut out = Vec::new();
+    for weak in reg.iter() {
+        let Some(stack) = weak.upgrade() else { continue };
+        let frames = stack.frames.lock().unwrap().clone();
+        if !frames.is_empty() {
+            out.push((stack.tid, frames));
+        }
+    }
+    out
 }
 
 /// Turn tracing on (idempotent). Allocates the buffer and pins the
@@ -88,26 +161,36 @@ thread_local! {
 pub fn enable() {
     epoch();
     buffer();
-    ENABLED.store(true, Ordering::SeqCst);
+    STATE.fetch_or(TRACING, Ordering::SeqCst);
 }
 
 /// Turn tracing off; already-recorded events stay in the buffer.
 pub fn disable() {
-    ENABLED.store(false, Ordering::SeqCst);
+    STATE.fetch_and(!TRACING, Ordering::SeqCst);
 }
 
 /// Whether spans are currently being recorded.
 pub fn is_enabled() -> bool {
-    ENABLED.load(Ordering::Relaxed)
+    STATE.load(Ordering::Relaxed) & TRACING != 0
 }
 
-/// Current span-nesting depth on this thread (0 when tracing is off or
-/// no span is open) — the `Progress::depth` source.
+/// Flip the sampler bit: while set, spans maintain live stacks even
+/// with tracing off. Called only by [`crate::telemetry::profile`].
+pub(crate) fn set_sampling(on: bool) {
+    if on {
+        STATE.fetch_or(SAMPLING, Ordering::SeqCst);
+    } else {
+        STATE.fetch_and(!SAMPLING, Ordering::SeqCst);
+    }
+}
+
+/// Current span-nesting depth on this thread (0 when spans are inactive
+/// or no span is open) — the `Progress::depth` source.
 pub fn depth() -> usize {
-    if !is_enabled() {
+    if STATE.load(Ordering::Relaxed) == 0 {
         return 0;
     }
-    STACK.with(|s| s.borrow().len())
+    LOCAL.with(|s| s.frames.lock().unwrap().len())
 }
 
 /// Drop all buffered events (test isolation; callers serialize).
@@ -131,38 +214,50 @@ fn record(ev: Event) {
 }
 
 /// An open span. Created by [`span`] (or the `span!` macro); records one
-/// complete trace event when dropped. Holds `None` when tracing is off.
+/// complete trace event when dropped. Holds `None` when spans are
+/// inactive (no tracing, no sampler).
 pub struct Span(Option<ActiveSpan>);
 
 struct ActiveSpan {
     name: &'static str,
     start: Instant,
     args: String,
+    /// Record a buffer event on drop (tracing was on at open time).
+    /// False when only a sampler is attached.
+    record: bool,
 }
 
 /// Open a span named `name` on this thread. Binding matters:
 /// `let _span = span("x");` keeps it open for the scope — a bare `_`
 /// pattern would drop it immediately.
 pub fn span(name: &'static str) -> Span {
-    if !ENABLED.load(Ordering::Relaxed) {
+    let state = STATE.load(Ordering::Relaxed);
+    if state == 0 {
         return Span(None);
     }
-    STACK.with(|s| s.borrow_mut().push(name));
-    Span(Some(ActiveSpan { name, start: Instant::now(), args: String::new() }))
+    LOCAL.with(|s| s.frames.lock().unwrap().push(name));
+    Span(Some(ActiveSpan {
+        name,
+        start: Instant::now(),
+        args: String::new(),
+        record: state & TRACING != 0,
+    }))
 }
 
 impl Span {
     /// Attach a key/value attribute (rendered into the event's `args`
     /// object). No-op — including the `Display` formatting — when
-    /// tracing is off.
+    /// spans are inactive.
     pub fn arg(mut self, key: &str, value: impl std::fmt::Display) -> Self {
         if let Some(a) = self.0.as_mut() {
-            if !a.args.is_empty() {
-                a.args.push(',');
+            if a.record {
+                if !a.args.is_empty() {
+                    a.args.push(',');
+                }
+                a.args.push_str(&esc(key));
+                a.args.push(':');
+                a.args.push_str(&esc(&value.to_string()));
             }
-            a.args.push_str(&esc(key));
-            a.args.push(':');
-            a.args.push_str(&esc(&value.to_string()));
         }
         self
     }
@@ -171,14 +266,18 @@ impl Span {
 impl Drop for Span {
     fn drop(&mut self) {
         let Some(a) = self.0.take() else { return };
-        STACK.with(|s| {
-            s.borrow_mut().pop();
+        let tid = LOCAL.with(|s| {
+            s.frames.lock().unwrap().pop();
+            s.tid
         });
+        if !a.record {
+            return;
+        }
         let dur = a.start.elapsed();
         let ts = a.start.saturating_duration_since(epoch());
         record(Event {
             name: a.name,
-            tid: TID.with(|t| *t),
+            tid,
             ts_us: ts.as_micros() as u64,
             dur_us: dur.as_micros() as u64,
             args: a.args,
@@ -307,5 +406,30 @@ mod tests {
         assert_eq!(EVENTS_DROPPED.get(), before + 1);
         disable();
         reset();
+    }
+
+    #[test]
+    fn sampling_maintains_stacks_without_recording() {
+        let _g = GUARD.lock().unwrap();
+        disable();
+        reset();
+        set_sampling(true);
+        {
+            let _outer = span("outer");
+            let _inner = span("inner");
+            assert_eq!(depth(), 2);
+            let stacks = sample_stacks();
+            let mine = stacks
+                .iter()
+                .find(|(_, f)| f == &vec!["outer", "inner"])
+                .expect("sampler sees this thread's stack");
+            assert!(mine.0 > 0);
+        }
+        assert_eq!(depth(), 0);
+        set_sampling(false);
+        // No sampler, no tracing: nothing was recorded, spans are free.
+        assert_eq!(event_count(), 0);
+        drop(span("gone"));
+        assert_eq!(event_count(), 0);
     }
 }

@@ -13,8 +13,9 @@ use wham::api::SearchRequest;
 use wham::api::Session;
 use wham::coordinator::BackendChoice;
 use wham::cost::native::NativeCost;
-use wham::service::http::request;
+use wham::service::http::{request, request_full, request_stream};
 use wham::service::{start, ServeOptions, ServerHandle};
+use wham::telemetry::log;
 use wham::telemetry::{render_prometheus, trace, Collect, Sample};
 use wham::util::json::{parse, JsonValue};
 
@@ -229,6 +230,41 @@ fn metrics_scrape_agrees_with_status_counters() {
         text.contains("wham_http_request_duration_ms{endpoint=\"/search\",quantile=\"0.5\"}"),
         "missing /search latency summary:\n{text}"
     );
+    // Bucketed histograms ride the same scrape: the search populated the
+    // scheduler-eval and MCR-probe families, the job its queue wait, and
+    // the requests themselves the per-endpoint latency buckets.
+    let mut hist_families: Vec<&str> = text
+        .lines()
+        .filter_map(|l| l.strip_prefix("# TYPE "))
+        .filter_map(|l| {
+            let mut it = l.split(' ');
+            let name = it.next()?;
+            (it.next()? == "histogram").then_some(name)
+        })
+        .collect();
+    hist_families.sort_unstable();
+    hist_families.dedup();
+    assert!(
+        hist_families.len() >= 3,
+        "want >=3 histogram families, got {hist_families:?}:\n{text}"
+    );
+    for required in [
+        "wham_scheduler_eval_duration_seconds",
+        "wham_job_queue_wait_seconds",
+        "wham_http_request_duration_seconds",
+    ] {
+        assert!(hist_families.contains(&required), "{required} missing: {hist_families:?}");
+    }
+    assert!(
+        text.contains("wham_http_request_duration_seconds_bucket{endpoint=\"/search\",le="),
+        "missing /search latency buckets:\n{text}"
+    );
+    // The trace-buffer and flight-recorder gauges are always present.
+    for gauge in
+        ["wham_trace_buffer_events", "wham_trace_buffer_occupancy", "wham_flight_recorder_last_records"]
+    {
+        assert!(text.contains(&format!("# TYPE {gauge} gauge")), "{gauge} missing:\n{text}");
+    }
     // And the wire shape of /status itself is untouched by all of this:
     // the perf block still carries exactly its pre-telemetry fields.
     for field in
@@ -273,6 +309,147 @@ fn smoke_search_trace_file_covers_the_span_taxonomy() {
             "span {required:?} missing from smoke-search trace; saw {names:?}"
         );
     }
+}
+
+#[test]
+fn profiler_samples_a_cold_search() {
+    let _g = lock();
+    let sampler = wham::telemetry::profile::attach(1000).expect("no other sampler is attached");
+    // Fresh sessions have empty eval caches, so each search is real
+    // scheduler work for the sampler to observe.
+    for model in ["bert-base", "resnet18", "alexnet"] {
+        session().search(&SearchRequest::new(model)).unwrap();
+    }
+    let p = sampler.stop();
+    assert!(p.samples > 0, "sampler thread never woke");
+    assert!(p.weight() > 0, "sampler observed no span stacks");
+    let collapsed = p.collapsed();
+    assert!(
+        ["schedule", "mcr", "annotate", "search_phase", "prune_batch"]
+            .iter()
+            .any(|n| collapsed.contains(n)),
+        "no search span in the profile:\n{collapsed}"
+    );
+    // Every collapsed line is `path;leaf N`.
+    for line in collapsed.lines() {
+        let (_, n) = line.rsplit_once(' ').expect("line has a weight");
+        n.parse::<u64>().unwrap_or_else(|_| panic!("bad weight in {line:?}"));
+    }
+    // The top-k table agrees with the trie weights.
+    assert!(!p.top_paths(10).is_empty());
+}
+
+#[test]
+fn profile_endpoint_returns_collapsed_stacks_while_searching() {
+    let _g = lock();
+    let h = boot();
+    // Keep cold searches running in-process while the endpoint samples —
+    // the profiler is process-wide, so it sees these threads too.
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop2 = std::sync::Arc::clone(&stop);
+    let bg = std::thread::spawn(move || {
+        while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+            let _ = session().search(&SearchRequest::new("bert-base"));
+        }
+    });
+    let (code, body) = request(h.addr, "GET", "/profile?seconds=1&hz=500", None).unwrap();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    bg.join().unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(
+        body.lines().any(|l| l.rsplit_once(' ').is_some_and(|(_, n)| n.parse::<u64>().is_ok())),
+        "no collapsed stacks in /profile response:\n{body}"
+    );
+    // Bad parameters are rejected, not clamped silently.
+    let (code, msg) = request(h.addr, "GET", "/profile?seconds=99", None).unwrap();
+    assert_eq!(code, 400, "{msg}");
+}
+
+#[test]
+fn correlation_id_round_trips_header_body_sse_wal_and_logs() {
+    let _g = lock();
+    let wal =
+        std::env::temp_dir().join(format!("wham-telemetry-corr-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&wal);
+    let buf = log::capture();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let h = start(
+        listener,
+        ServeOptions {
+            workers: 2,
+            db_path: None,
+            backend: BackendChoice::Native,
+            jobs_path: Some(wal.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let (status, headers, body) =
+        request_full(h.addr, "POST", "/jobs", Some("{\"request\":{\"model\":\"alexnet\"}}"))
+            .unwrap();
+    assert_eq!(status, 202, "{body}");
+    let corr = headers
+        .iter()
+        .find(|(k, _)| k == "x-wham-request-id")
+        .map(|(_, v)| v.clone())
+        .expect("every response carries X-Wham-Request-Id");
+    assert!(corr.starts_with("r-"), "unexpected id shape: {corr}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("corr").unwrap().as_str(), Some(corr.as_str()), "{body}");
+    let id = v.get("id").unwrap().as_str().unwrap().to_string();
+    let tag = format!("\"corr\":\"{corr}\"");
+
+    // The SSE stream tags its frames with the same id (the server closes
+    // the stream after the job's terminal frame).
+    let mut frames = String::new();
+    let code = request_stream(h.addr, "GET", &format!("/jobs/{id}/events"), None, |line| {
+        frames.push_str(line);
+        frames.push('\n');
+        true
+    })
+    .unwrap();
+    assert_eq!(code, 200);
+    assert!(frames.contains(&tag), "SSE frames untagged:\n{frames}");
+
+    // The WAL's submitted event persists it for replay.
+    let wal_text = std::fs::read_to_string(&wal).unwrap();
+    let _ = std::fs::remove_file(&wal);
+    assert!(
+        wal_text.lines().any(|l| l.contains(&id) && l.contains(&tag)),
+        "WAL submit line missing corr:\n{wal_text}"
+    );
+
+    // And one grep over the structured logs connects the access-log line
+    // with the job lifecycle under that id.
+    let logged = buf.lock().unwrap().clone();
+    log::to_stderr();
+    assert!(
+        logged.lines().any(|l| l.contains(&tag) && l.contains("\"msg\":\"request\"")),
+        "access log untagged:\n{logged}"
+    );
+    assert!(
+        logged.lines().any(|l| l.contains(&tag) && l.contains("job submitted")),
+        "job-submit log untagged:\n{logged}"
+    );
+}
+
+#[test]
+fn log_level_threshold_filters_integration_records() {
+    let _g = lock();
+    let buf = log::capture();
+    log::set_level(log::Level::Warn);
+    log::info("itest", "filtered info", &[]);
+    log::warn("itest", "kept warn", &[("code", &7u64)]);
+    log::set_level(log::Level::Info);
+    let text = buf.lock().unwrap().clone();
+    log::to_stderr();
+    assert!(!text.contains("filtered info"), "{text}");
+    let line = text.lines().find(|l| l.contains("kept warn")).expect("warn line present");
+    let v = parse(line).unwrap();
+    assert_eq!(v.get("level").unwrap().as_str(), Some("warn"));
+    assert_eq!(v.get("target").unwrap().as_str(), Some("itest"));
+    assert_eq!(v.get("code").unwrap().as_str(), Some("7"));
 }
 
 #[test]
