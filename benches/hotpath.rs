@@ -15,7 +15,7 @@ use wham::cost::annotate::AnnotatedGraph;
 use wham::cost::Dims;
 use wham::graph::autodiff::Optimizer;
 use wham::search::engine::{SearchOptions, WhamSearch};
-use wham::search::mcr::{mcr_with, GrowthMode};
+use wham::search::mcr::{mcr_with, mcr_with_scratch, GrowthMode, McrScratch};
 use wham::sched::{asap_alap, greedy_schedule, CoreCount};
 use wham::util::bench::{banner, bench, BenchStats};
 use wham::util::json::{arr, Obj};
@@ -90,6 +90,55 @@ fn main() {
         std::hint::black_box(mcr_with(&ann, &Constraints::default(), GrowthMode::OneAtATime));
     }));
 
+    // Incremental probe engine (checkpoint resume + bounded aborts) vs
+    // the schedule-from-scratch parity oracle, same growth mode and same
+    // probe sequence — isolates the cone-rescheduling win from the
+    // gallop-vs-one-at-a-time eval-count win above. The scratch is
+    // reused across iterations, matching the search engine's usage.
+    let mut scratch = McrScratch::new();
+    let inc_stats = bench("mcr/incremental (ckpt resume + bounds)", warm, iters, || {
+        std::hint::black_box(mcr_with_scratch(
+            &ann,
+            &Constraints::default(),
+            GrowthMode::Gallop,
+            &mut scratch,
+            false,
+        ));
+    });
+    let full_stats = bench("mcr/full-reschedule (parity oracle)", warm, iters, || {
+        std::hint::black_box(mcr_with_scratch(
+            &ann,
+            &Constraints::default(),
+            GrowthMode::Gallop,
+            &mut scratch,
+            true,
+        ));
+    });
+    let inc_mcr =
+        mcr_with_scratch(&ann, &Constraints::default(), GrowthMode::Gallop, &mut scratch, false);
+    let full_mcr =
+        mcr_with_scratch(&ann, &Constraints::default(), GrowthMode::Gallop, &mut scratch, true);
+    assert_eq!(
+        (inc_mcr.cores, inc_mcr.schedule.makespan, inc_mcr.evals),
+        (full_mcr.cores, full_mcr.schedule.makespan, full_mcr.evals),
+        "incremental and full-reschedule probes must be bit-identical"
+    );
+    // The counter pair the CI regression guard tracks: probes/sec on
+    // each engine. Both run the *same* probe sequence (evals are
+    // engine-independent), so the ratio is the pure per-probe speedup.
+    let probes_per_sec =
+        |evals: usize, s: &BenchStats| evals as f64 / s.median.as_secs_f64().max(1e-12);
+    let inc_rate = probes_per_sec(inc_mcr.evals, &inc_stats);
+    let full_rate = probes_per_sec(full_mcr.evals, &full_stats);
+    let inc_speedup = inc_rate / full_rate.max(1e-12);
+    println!(
+        "mcr probe rate: full-reschedule {full_rate:.0}/s -> incremental {inc_rate:.0}/s \
+         ({inc_speedup:.1}x) at {} probes per run",
+        inc_mcr.evals
+    );
+    record(inc_stats);
+    record(full_stats);
+
     // Scheduler-eval accounting per MCR run — the Figure-8 cost unit the
     // galloping growth shrinks.
     let fast_mcr = mcr_with(&ann, &Constraints::default(), GrowthMode::Gallop);
@@ -119,18 +168,46 @@ fn main() {
     let legacy_stats = bench("wham_search/bert-large (legacy paths)", 1, search_iters, || {
         std::hint::black_box(WhamSearch::new(&graph, 8, legacy_opts).run(native.as_mut()));
     });
+    let oracle_opts = SearchOptions { full_reschedule: true, ..Default::default() };
+    let oracle_stats = bench("wham_search/bert-large (full-resched oracle)", 1, search_iters, || {
+        std::hint::black_box(WhamSearch::new(&graph, 8, oracle_opts).run(native.as_mut()));
+    });
     let speedup = legacy_stats.median.as_secs_f64() / fast_stats.median.as_secs_f64().max(1e-12);
     println!("{fast_stats}");
     println!("{legacy_stats}");
+    println!("{oracle_stats}");
     println!("end-to-end wham_search speedup: {speedup:.2}x (legacy median / fast median)");
     let fast_search = WhamSearch::new(&graph, 8, SearchOptions::default()).run(native.as_mut());
     let legacy_search = WhamSearch::new(&graph, 8, legacy_opts).run(native.as_mut());
+    let oracle_search = WhamSearch::new(&graph, 8, oracle_opts).run(native.as_mut());
     assert_eq!(
         fast_search.best.config, legacy_search.best.config,
         "fast and legacy searches must find the same design"
     );
+    assert_eq!(
+        (fast_search.best.config, fast_search.scheduler_evals),
+        (oracle_search.best.config, oracle_search.scheduler_evals),
+        "incremental and full-reschedule searches must be bit-identical"
+    );
+    // The headline counter pair: whole-search scheduler evals/sec on the
+    // incremental engine vs the full-reschedule oracle (identical probe
+    // sequences, so the rate gap is the per-probe cost gap). The CI
+    // regression guard fails on a >20% drop of the incremental rate vs
+    // the committed bench-baselines/BENCH_hotpath.json.
+    let search_rate = |evals: usize, s: &BenchStats| {
+        evals as f64 / s.median.as_secs_f64().max(1e-12)
+    };
+    let evals_per_sec_incremental = search_rate(fast_search.scheduler_evals, &fast_stats);
+    let evals_per_sec_full = search_rate(oracle_search.scheduler_evals, &oracle_stats);
+    println!(
+        "search scheduler evals/sec: full-reschedule {evals_per_sec_full:.0} -> \
+         incremental {evals_per_sec_incremental:.0} \
+         ({:.1}x)",
+        evals_per_sec_incremental / evals_per_sec_full.max(1e-12)
+    );
     phases.push(fast_stats);
     phases.push(legacy_stats);
+    phases.push(oracle_stats);
 
     let json = Obj::new()
         .str("bench", "hotpath")
@@ -147,6 +224,9 @@ fn main() {
                 .u64("evals_gallop", fast_mcr.evals as u64)
                 .u64("evals_one_at_a_time", slow_mcr.evals as u64)
                 .f64("eval_ratio", mcr_ratio)
+                .f64("probes_per_sec_incremental", inc_rate)
+                .f64("probes_per_sec_full_resched", full_rate)
+                .f64("incremental_speedup", inc_speedup)
                 .finish(),
         )
         .raw(
@@ -156,6 +236,8 @@ fn main() {
                 .u64("scheduler_evals_fast", fast_search.scheduler_evals as u64)
                 .u64("scheduler_evals_legacy", legacy_search.scheduler_evals as u64)
                 .f64("speedup", speedup)
+                .f64("evals_per_sec_incremental", evals_per_sec_incremental)
+                .f64("evals_per_sec_full_resched", evals_per_sec_full)
                 .finish(),
         )
         .raw("phases", &arr(phases.iter().map(phase_json)))

@@ -76,8 +76,9 @@ pub fn context_key(fp: Fingerprint, batch: u64, opts: &SearchOptions, backend: &
         // workload classes, but a pathological plateau-then-improve
         // makespan staircase could let the two walks land on different
         // core counts — keep their mined points in separate contexts so
-        // a cached design can never cross modes. (`naive_annotation` and
-        // `jobs` are provably bit-identical and deliberately excluded.)
+        // a cached design can never cross modes. (`naive_annotation`,
+        // `full_reschedule`, and `jobs` are provably bit-identical and
+        // deliberately excluded.)
         .word(opts.mcr_one_at_a_time as u64)
         .bytes(backend.as_bytes())
         .0

@@ -188,15 +188,15 @@ fn dedup_graph(g: &OperatorGraph) -> Option<OperatorGraph> {
         return None; // nothing to dedupe
     }
     let mut out = OperatorGraph::default();
-    for (i, &v) in keep.iter().enumerate() {
+    let mut prev: Option<usize> = None;
+    for &v in &keep {
         let mut op = g.ops[v].clone();
         op.fwd_peer = None; // peers point into the original graph
-        out.ops.push(op);
-        out.preds.push(if i == 0 { vec![] } else { vec![i - 1] });
-        out.succs.push(vec![]);
-        if i > 0 {
-            out.succs[i - 1].push(i);
-        }
+        let preds: &[usize] = match prev {
+            Some(ref p) => std::slice::from_ref(p),
+            None => &[],
+        };
+        prev = Some(out.push_op(op, preds));
     }
     Some(out)
 }

@@ -189,28 +189,28 @@ fn induced(g: &OperatorGraph, nodes: &[usize]) -> OperatorGraph {
     for &v in nodes {
         let mut op = g.ops[v].clone();
         op.fwd_peer = None;
-        out.ops.push(op);
-        out.preds.push(Vec::new());
-        out.succs.push(Vec::new());
+        out.push_op(op, &[]);
     }
     // For each kept node, walk back through dropped preds to find kept
-    // ancestors (bounded DFS).
+    // ancestors (bounded DFS). `added` dedups per kept node: several
+    // dropped paths can reach the same kept ancestor.
     for &v in nodes {
         let nv = keep[v];
-        let mut stack: Vec<usize> = g.preds[v].clone();
+        let mut stack: Vec<usize> = g.preds(v).iter().map(|&p| p as usize).collect();
         let mut seen = std::collections::HashSet::new();
+        let mut added: Vec<usize> = Vec::new();
         while let Some(p) = stack.pop() {
             if !seen.insert(p) {
                 continue;
             }
             if keep[p] != usize::MAX {
                 let np = keep[p];
-                if !out.preds[nv].contains(&np) {
-                    out.preds[nv].push(np);
-                    out.succs[np].push(nv);
+                if !added.contains(&np) {
+                    added.push(np);
+                    out.add_edge(np, nv);
                 }
             } else {
-                stack.extend(g.preds[p].iter().copied());
+                stack.extend(g.preds(p).iter().map(|&q| q as usize));
             }
         }
     }

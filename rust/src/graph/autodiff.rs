@@ -49,7 +49,9 @@ pub fn training_graph(fwd: &OperatorGraph, opt: Optimizer) -> OperatorGraph {
     }
 
     // ---- loss node -------------------------------------------------------
-    let sinks = g.sinks();
+    // Owned copy: the cached sinks slice borrows `g`, which is mutated
+    // below (every push invalidates and later rebuilds the analysis).
+    let sinks: Vec<NodeId> = g.sinks().to_vec();
     let loss_elems: u64 = sinks.iter().map(|&s| g.ops[s].out_elems).sum::<u64>().max(1);
     let loss = push(&mut g, Op {
         name: "loss".into(),
@@ -72,10 +74,10 @@ pub fn training_graph(fwd: &OperatorGraph, opt: Optimizer) -> OperatorGraph {
 
     for &v in &order {
         let fop = g.ops[v].clone();
-        let grad_preds: Vec<NodeId> = if fwd.succs[v].is_empty() {
+        let grad_preds: Vec<NodeId> = if fwd.succs(v).is_empty() {
             vec![loss]
         } else {
-            fwd.succs[v].iter().map(|&s| bx[s]).collect()
+            fwd.succs(v).iter().map(|&s| bx[s as usize]).collect()
         };
         debug_assert!(grad_preds.iter().all(|&p| p != usize::MAX));
 
@@ -157,15 +159,7 @@ pub fn training_graph(fwd: &OperatorGraph, opt: Optimizer) -> OperatorGraph {
 }
 
 fn push(g: &mut OperatorGraph, op: Op, preds: &[NodeId]) -> NodeId {
-    let id = g.ops.len();
-    g.ops.push(op);
-    g.preds.push(preds.to_vec());
-    g.succs.push(Vec::new());
-    for &p in preds {
-        debug_assert!(p < id);
-        g.succs[p].push(id);
-    }
-    id
+    g.push_op(op, preds)
 }
 
 #[cfg(test)]
@@ -223,7 +217,7 @@ mod tests {
     fn loss_follows_sinks() {
         let g = training_graph(&mlp(), Optimizer::SgdMomentum);
         let loss = g.ops.iter().position(|o| o.pass == Pass::Loss).unwrap();
-        assert_eq!(g.preds[loss].len(), 1); // single sink (fc2)
+        assert_eq!(g.preds(loss).len(), 1); // single sink (fc2)
     }
 
     #[test]

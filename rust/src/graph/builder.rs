@@ -25,24 +25,11 @@ impl GraphBuilder {
         param_elems: u64,
         preds: &[NodeId],
     ) -> NodeId {
-        let id = self.graph.ops.len();
         let out_elems = kind.out_elems();
-        self.graph.ops.push(Op {
-            name: name.into(),
-            kind,
-            pass,
-            param_elems,
-            out_elems,
-            fwd_peer: None,
-        });
-        self.graph.preds.push(Vec::new());
-        self.graph.succs.push(Vec::new());
-        for &p in preds {
-            assert!(p < id, "edges must point forward (pred {p} >= node {id})");
-            self.graph.preds[id].push(p);
-            self.graph.succs[p].push(id);
-        }
-        id
+        self.graph.push_op(
+            Op { name: name.into(), kind, pass, param_elems, out_elems, fwd_peer: None },
+            preds,
+        )
     }
 
     /// Forward op shorthand.
@@ -139,8 +126,8 @@ mod tests {
         let x = b.gemm("x", 4, 4, 4, &[]);
         let y = b.eltwise("y", 16, 1, &[x]);
         let g = b.finish();
-        assert_eq!(g.succs[x], vec![y]);
-        assert_eq!(g.preds[y], vec![x]);
+        assert_eq!(g.succs(x), &[y as u32]);
+        assert_eq!(g.preds(y), &[x as u32]);
     }
 
     #[test]

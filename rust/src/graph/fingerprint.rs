@@ -95,9 +95,9 @@ pub fn fingerprint(g: &OperatorGraph) -> Fingerprint {
         let mut next = Vec::with_capacity(n);
         for v in 0..n {
             let mut h = fold(OFFSET, labels[v]);
-            for (tag, nbrs) in [(0xA5u64, &g.preds[v]), (0x5Au64, &g.succs[v])] {
+            for (tag, nbrs) in [(0xA5u64, g.preds(v)), (0x5Au64, g.succs(v))] {
                 scratch.clear();
-                scratch.extend(nbrs.iter().map(|&u| labels[u]));
+                scratch.extend(nbrs.iter().map(|&u| labels[u as usize]));
                 scratch.sort_unstable();
                 h = fold(h, tag);
                 h = fold(h, scratch.len() as u64);

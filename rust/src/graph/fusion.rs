@@ -16,11 +16,11 @@ pub fn fuse(g: &OperatorGraph) -> (OperatorGraph, usize) {
     let mut fused_kind: Vec<Option<OpKind>> = vec![None; n];
 
     for v in 0..n {
-        if g.ops[v].pass != Pass::Forward || g.succs[v].len() != 1 {
+        if g.ops[v].pass != Pass::Forward || g.succs(v).len() != 1 {
             continue;
         }
-        let s = g.succs[v][0];
-        if g.preds[s].len() != 1 || g.ops[s].pass != Pass::Forward {
+        let s = g.succs(v)[0] as usize;
+        if g.preds(s).len() != 1 || g.ops[s].pass != Pass::Forward {
             continue;
         }
         // Only cheap activations fuse (intensity <= 4: relu/gelu/sigmoid).
@@ -56,32 +56,35 @@ pub fn fuse(g: &OperatorGraph) -> (OperatorGraph, usize) {
         let mut op = g.ops[v].clone();
         if let Some(kind) = fused_kind[v].take() {
             // Absorb the activation's name for readability.
-            let s = g.succs[v][0];
+            let s = g.succs(v)[0] as usize;
             op.name = format!("{}+{}", op.name, g.ops[s].name);
             op.out_elems = kind.out_elems();
             op.kind = kind;
         }
-        new_id[v] = out.ops.len();
-        out.ops.push(op);
-        out.preds.push(Vec::new());
-        out.succs.push(Vec::new());
+        new_id[v] = out.push_op(op, &[]);
     }
     let resolve = |mut v: usize| {
         while absorbed[v] {
-            v = g.preds[v][0];
+            v = g.preds(v)[0] as usize;
         }
         new_id[v]
     };
+    // Dedup per consumer: re-routing through an absorbed node can map two
+    // old edges onto the same new edge. Each node's preds are emitted
+    // consecutively, so a small per-node buffer replaces the old
+    // scan-the-adjacency check.
+    let mut seen_preds: Vec<usize> = Vec::new();
     for v in 0..n {
         if absorbed[v] {
             continue;
         }
         let nv = new_id[v];
-        for &p in &g.preds[v] {
-            let np = resolve(p);
-            if np != nv && !out.preds[nv].contains(&np) {
-                out.preds[nv].push(np);
-                out.succs[np].push(nv);
+        seen_preds.clear();
+        for &p in g.preds(v) {
+            let np = resolve(p as usize);
+            if np != nv && !seen_preds.contains(&np) {
+                seen_preds.push(np);
+                out.add_edge(np, nv);
             }
         }
     }
@@ -106,7 +109,7 @@ mod tests {
         assert_eq!(fused.ops[0].kind.core_type(), CoreType::Fused);
         assert_eq!(fused.ops[0].name, "fc+relu");
         // Edge re-routed through the fused node.
-        assert_eq!(fused.succs[0], vec![1]);
+        assert_eq!(fused.succs(0), &[1]);
     }
 
     #[test]

@@ -6,6 +6,15 @@
 //! structure WHAM's search optimizes over (paper section 2.1: backward
 //! operators are partial derivatives of forward operators arranged in a
 //! mirror dataflow, and must be co-located with their forward peers).
+//!
+//! Storage is a struct-of-arrays arena: operators live in one flat
+//! `Vec<Op>`, edges in one flat append-only `(src, dst)` list. The
+//! adjacency the schedulers traverse is a **CSR view** (offsets + one
+//! flat `u32` neighbor array per direction) built lazily with the rest of
+//! the per-graph analysis and cached for the graph's lifetime — the
+//! search walks the same edges thousands of times per candidate design,
+//! and a flat array walk is both allocation-free and cache-friendly where
+//! the old `Vec<Vec<NodeId>>` paid a pointer chase per node.
 
 pub mod autodiff;
 pub mod builder;
@@ -64,38 +73,152 @@ impl CostClasses {
     }
 }
 
+/// Compressed-sparse-row adjacency: per-node neighbor lists packed into
+/// one flat `u32` array with an offsets table. Neighbor order within a
+/// row reproduces edge-insertion order exactly (the builder's push
+/// order), which the fingerprint, the cached topo order, and the
+/// scheduler's release loop all depend on for determinism.
+#[derive(Debug, Clone, Default)]
+pub struct Csr {
+    /// `off[v]..off[v+1]` indexes `adj` — length `n + 1`.
+    off: Vec<u32>,
+    /// Flat neighbor ids, grouped by node.
+    adj: Vec<u32>,
+}
+
+impl Csr {
+    /// Stable counting-sort construction: group `edges` by `key` (src or
+    /// dst), preserving the global append order within each group.
+    fn build(n: usize, edges: &[(u32, u32)], by_src: bool) -> Self {
+        let mut off = vec![0u32; n + 1];
+        for &(s, d) in edges {
+            off[1 + if by_src { s } else { d } as usize] += 1;
+        }
+        for i in 0..n {
+            off[i + 1] += off[i];
+        }
+        let mut cursor: Vec<u32> = off[..n].to_vec();
+        let mut adj = vec![0u32; edges.len()];
+        for &(s, d) in edges {
+            let (k, v) = if by_src { (s, d) } else { (d, s) };
+            let c = &mut cursor[k as usize];
+            adj[*c as usize] = v;
+            *c += 1;
+        }
+        Self { off, adj }
+    }
+
+    /// Neighbors of `v` in insertion order.
+    #[inline]
+    pub fn row(&self, v: usize) -> &[u32] {
+        &self.adj[self.off[v] as usize..self.off[v + 1] as usize]
+    }
+
+    /// Number of neighbors of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> u32 {
+        self.off[v + 1] - self.off[v]
+    }
+}
+
 /// Per-graph derived state built once and shared by every evaluation
 /// (the search annotates the same graph at dozens of `<TC-Dim,
 /// VC-Width>` candidates — none of this depends on the dims).
 #[derive(Debug, Clone, Default)]
 struct GraphAnalysis {
     classes: CostClasses,
+    preds: Csr,
+    succs: Csr,
+    /// Predecessor count per node — the scheduler's in-degree reset is a
+    /// straight memcpy of this.
+    indeg: Vec<u32>,
+    sources: Vec<NodeId>,
+    sinks: Vec<NodeId>,
     topo: Vec<NodeId>,
+    /// Position of each node in `topo` (meaningless when `cyclic`).
+    topo_pos: Vec<u32>,
+    /// Kahn did not consume every node. The analysis stays usable for
+    /// adjacency queries (validation reports the cycle as an error);
+    /// only the topo-order accessors panic.
+    cyclic: bool,
 }
 
-/// A DAG of training operators with adjacency in both directions.
+impl GraphAnalysis {
+    fn build(ops: &[Op], edges: &[(u32, u32)]) -> Self {
+        let n = ops.len();
+        let succs = Csr::build(n, edges, true);
+        let preds = Csr::build(n, edges, false);
+        let indeg: Vec<u32> = (0..n).map(|v| preds.degree(v)).collect();
+        let sources: Vec<NodeId> = (0..n).filter(|&v| preds.degree(v) == 0).collect();
+        let sinks: Vec<NodeId> = (0..n).filter(|&v| succs.degree(v) == 0).collect();
+
+        // Kahn over the CSR; identical visit order to the historical
+        // Vec<Vec> walk (sources ascending, successors in insertion
+        // order), so downstream tie-breaks are unchanged.
+        let mut deg = indeg.clone();
+        let mut queue: std::collections::VecDeque<NodeId> = sources.iter().copied().collect();
+        let mut topo = Vec::with_capacity(n);
+        while let Some(v) = queue.pop_front() {
+            topo.push(v);
+            for &s in succs.row(v) {
+                let s = s as usize;
+                deg[s] -= 1;
+                if deg[s] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        let cyclic = topo.len() != n;
+        let mut topo_pos = vec![0u32; n];
+        for (i, &v) in topo.iter().enumerate() {
+            topo_pos[v] = i as u32;
+        }
+        Self {
+            classes: CostClasses::build(ops),
+            preds,
+            succs,
+            indeg,
+            sources,
+            sinks,
+            topo,
+            topo_pos,
+            cyclic,
+        }
+    }
+}
+
+/// A DAG of training operators. Adjacency is held as a flat edge list;
+/// all traversal goes through the cached CSR views ([`Self::preds`],
+/// [`Self::succs`], [`Self::preds_csr`], [`Self::succs_csr`]).
 #[derive(Debug, Default)]
 pub struct OperatorGraph {
     pub ops: Vec<Op>,
-    pub preds: Vec<Vec<NodeId>>,
-    pub succs: Vec<Vec<NodeId>>,
-    /// Lazily-built cost-class table + topo order. Graphs are immutable
-    /// once handed to the estimator/schedulers, so first use freezes the
-    /// cache; construction-time mutation (builder pushes, partition
-    /// slicing) happens before anything reads it.
+    /// Append-only `(src, dst)` edge list in insertion order — the single
+    /// source of truth both CSR directions are derived from (they cannot
+    /// go asymmetric by construction).
+    edges: Vec<(u32, u32)>,
+    /// Lazily-built cost-class table + topo order + CSR adjacency.
+    /// First read freezes the cache; the mutators ([`Self::push_op`],
+    /// [`Self::add_edge`]) invalidate it, so construction and analysis
+    /// may interleave (autodiff reads the sinks of a clone before
+    /// appending the backward mirror).
     analysis: std::sync::OnceLock<GraphAnalysis>,
 }
 
+/// Cloning an [`OperatorGraph`] copies the operators and edges but
+/// **deliberately drops the frozen analysis cache** (cost classes, topo
+/// order, CSR adjacency). Graphs are cloned precisely to be mutated —
+/// autodiff appends the backward mirror onto a forward clone — and a
+/// frozen class table or topo order must not survive onto a different
+/// node set. The clone rebuilds an *identical* analysis on first use if
+/// left unmutated (interning is deterministic in op order; pinned by
+/// `clone_rebuilds_identical_class_ids` below), so the only cost of the
+/// drop is one re-derivation — never a behavior change.
 impl Clone for OperatorGraph {
     fn clone(&self) -> Self {
         Self {
             ops: self.ops.clone(),
-            preds: self.preds.clone(),
-            succs: self.succs.clone(),
-            // Deliberately NOT cloned: graphs are cloned precisely to be
-            // mutated (autodiff appends the backward mirror onto a
-            // forward clone), and a frozen class table / topo order must
-            // not survive onto a different node set.
+            edges: self.edges.clone(),
             analysis: std::sync::OnceLock::new(),
         }
     }
@@ -112,39 +235,82 @@ impl OperatorGraph {
         self.ops.is_empty()
     }
 
-    /// Nodes with no predecessors.
-    pub fn sources(&self) -> Vec<NodeId> {
-        (0..self.len()).filter(|&v| self.preds[v].is_empty()).collect()
+    /// Append an operator with edges from `preds` (which must already
+    /// exist — the graph stays a DAG by construction). Invalidates the
+    /// frozen analysis.
+    pub fn push_op(&mut self, op: Op, preds: &[NodeId]) -> NodeId {
+        let id = self.ops.len();
+        assert!(id < u32::MAX as usize, "operator count exceeds the u32 arena");
+        self.analysis.take();
+        self.ops.push(op);
+        for &p in preds {
+            assert!(p < id, "edges must point forward (pred {p} >= node {id})");
+            self.edges.push((p as u32, id as u32));
+        }
+        id
     }
 
-    /// Nodes with no successors.
-    pub fn sinks(&self) -> Vec<NodeId> {
-        (0..self.len()).filter(|&v| self.succs[v].is_empty()).collect()
+    /// Append one `from -> to` edge between existing nodes. Both CSR
+    /// directions update together (the edge list is the single source of
+    /// truth). Invalidates the frozen analysis. Back-edges are accepted
+    /// here — [`validate::validate`] and the topo accessors detect the
+    /// resulting cycle.
+    pub fn add_edge(&mut self, from: NodeId, to: NodeId) {
+        let n = self.ops.len();
+        assert!(from < n && to < n, "edge ({from}, {to}) out of range (n = {n})");
+        self.analysis.take();
+        self.edges.push((from as u32, to as u32));
+    }
+
+    /// Predecessors of `v` in edge-insertion order.
+    #[inline]
+    pub fn preds(&self, v: NodeId) -> &[u32] {
+        self.analysis().preds.row(v)
+    }
+
+    /// Successors of `v` in edge-insertion order.
+    #[inline]
+    pub fn succs(&self, v: NodeId) -> &[u32] {
+        self.analysis().succs.row(v)
+    }
+
+    /// The full predecessor CSR — the scheduler-hot-loop form (one bounds
+    /// check amortized over the whole traversal).
+    pub fn preds_csr(&self) -> &Csr {
+        &self.analysis().preds
+    }
+
+    /// The full successor CSR.
+    pub fn succs_csr(&self) -> &Csr {
+        &self.analysis().succs
+    }
+
+    /// Predecessor count per node (the scheduler's in-degree seed).
+    pub fn indeg(&self) -> &[u32] {
+        &self.analysis().indeg
+    }
+
+    /// Nodes with no predecessors — cached slice (callers needing to
+    /// mutate the graph afterwards copy it out first).
+    pub fn sources(&self) -> &[NodeId] {
+        &self.analysis().sources
+    }
+
+    /// Nodes with no successors — cached slice.
+    pub fn sinks(&self) -> &[NodeId] {
+        &self.analysis().sinks
     }
 
     /// Edge count.
     pub fn num_edges(&self) -> usize {
-        self.succs.iter().map(Vec::len).sum()
+        self.edges.len()
     }
 
-    /// Topological order (Kahn). Panics if the graph has a cycle — the
-    /// builder can only create forward edges, so this is an invariant.
+    /// Topological order (Kahn), as an owned vector. Panics if the graph
+    /// has a cycle — the builder can only create forward edges, so this
+    /// is an invariant. Hot paths use [`Self::topo_order_cached`].
     pub fn topo_order(&self) -> Vec<NodeId> {
-        let mut indeg: Vec<usize> = self.preds.iter().map(Vec::len).collect();
-        let mut queue: std::collections::VecDeque<NodeId> =
-            (0..self.len()).filter(|&v| indeg[v] == 0).collect();
-        let mut order = Vec::with_capacity(self.len());
-        while let Some(v) = queue.pop_front() {
-            order.push(v);
-            for &s in &self.succs[v] {
-                indeg[s] -= 1;
-                if indeg[s] == 0 {
-                    queue.push_back(s);
-                }
-            }
-        }
-        assert_eq!(order.len(), self.len(), "operator graph has a cycle");
-        order
+        self.topo_order_cached().to_vec()
     }
 
     /// Total parameter elements owned by forward operators.
@@ -174,8 +340,7 @@ impl OperatorGraph {
     }
 
     fn analysis(&self) -> &GraphAnalysis {
-        self.analysis
-            .get_or_init(|| GraphAnalysis { classes: CostClasses::build(&self.ops), topo: self.topo_order() })
+        self.analysis.get_or_init(|| GraphAnalysis::build(&self.ops, &self.edges))
     }
 
     /// The graph's cost-class interning table, built on first use and
@@ -187,9 +352,20 @@ impl OperatorGraph {
 
     /// Cached topological order — the hot-path form of [`Self::topo_order`]
     /// for callers that re-traverse the same graph per candidate design
-    /// (ASAP/ALAP, the exact solver).
+    /// (ASAP/ALAP, the exact solver). Panics on a cyclic graph.
     pub fn topo_order_cached(&self) -> &[NodeId] {
-        &self.analysis().topo
+        let a = self.analysis();
+        assert!(!a.cyclic, "operator graph has a cycle");
+        &a.topo
+    }
+
+    /// Position of each node in the cached topo order — the worklist key
+    /// for incremental critical-path repropagation. Panics on a cyclic
+    /// graph.
+    pub fn topo_positions(&self) -> &[u32] {
+        let a = self.analysis();
+        assert!(!a.cyclic, "operator graph has a cycle");
+        &a.topo_pos
     }
 
     /// Count operators per pass.
@@ -228,18 +404,33 @@ mod tests {
             p
         };
         for v in 0..g.len() {
-            for &s in &g.succs[v] {
-                assert!(pos[v] < pos[s]);
+            for &s in g.succs(v) {
+                assert!(pos[v] < pos[s as usize]);
             }
+        }
+        // The cached positions agree with the cached order.
+        let tp = g.topo_positions();
+        for (i, &v) in g.topo_order_cached().iter().enumerate() {
+            assert_eq!(tp[v] as usize, i);
         }
     }
 
     #[test]
     fn sources_and_sinks() {
         let g = diamond();
-        assert_eq!(g.sources(), vec![0]);
-        assert_eq!(g.sinks(), vec![3]);
+        assert_eq!(g.sources(), &[0]);
+        assert_eq!(g.sinks(), &[3]);
         assert_eq!(g.num_edges(), 4);
+        // Cached slices are stable across calls (no per-call allocation).
+        assert_eq!(g.sources().as_ptr(), g.sources().as_ptr());
+    }
+
+    #[test]
+    fn csr_rows_match_builder_insertion_order() {
+        let g = diamond();
+        assert_eq!(g.preds(3), &[1, 2]); // join preds in push order
+        assert_eq!(g.succs(0), &[1, 2]); // fanout in creation order
+        assert_eq!(g.indeg(), &[0, 1, 1, 2]);
     }
 
     #[test]
@@ -269,18 +460,58 @@ mod tests {
         let g = diamond();
         assert_eq!(g.cost_classes().class_of.len(), g.len()); // freeze on the original
         let mut h = g.clone();
-        h.ops.push(Op {
-            name: "extra".into(),
-            kind: OpKind::Elementwise { elems: 4, intensity: 1 },
-            pass: Pass::Forward,
-            param_elems: 0,
-            out_elems: 4,
-            fwd_peer: None,
-        });
-        h.preds.push(Vec::new());
-        h.succs.push(Vec::new());
+        h.push_op(
+            Op {
+                name: "extra".into(),
+                kind: OpKind::Elementwise { elems: 4, intensity: 1 },
+                pass: Pass::Forward,
+                param_elems: 0,
+                out_elems: 4,
+                fwd_peer: None,
+            },
+            &[],
+        );
         assert_eq!(h.cost_classes().class_of.len(), h.len());
         assert_eq!(h.topo_order_cached().len(), h.len());
+    }
+
+    #[test]
+    fn clone_rebuilds_identical_class_ids() {
+        // The Clone impl drops the analysis cache (see its doc); the
+        // contract making that safe is that a clone left unmutated
+        // rebuilds the *same* interning — same rows, same per-op class
+        // ids — so annotations (and therefore schedules and design-DB
+        // entries) of a clone are bit-identical to the original's.
+        let g = diamond();
+        let orig = g.cost_classes().clone();
+        let h = g.clone();
+        let rebuilt = h.cost_classes();
+        assert_eq!(rebuilt.rows, orig.rows);
+        assert_eq!(rebuilt.class_of, orig.class_of);
+        assert_eq!(h.topo_order_cached(), g.topo_order_cached());
+    }
+
+    #[test]
+    fn mutation_after_freeze_invalidates_analysis() {
+        let mut g = diamond();
+        let frozen_edges = g.num_edges();
+        assert_eq!(g.succs(1), &[3]);
+        // Mutate through the public mutator: the cache must rebuild.
+        let extra = g.push_op(
+            Op {
+                name: "tail".into(),
+                kind: OpKind::Elementwise { elems: 4, intensity: 1 },
+                pass: Pass::Forward,
+                param_elems: 0,
+                out_elems: 4,
+                fwd_peer: None,
+            },
+            &[3],
+        );
+        assert_eq!(g.num_edges(), frozen_edges + 1);
+        assert_eq!(g.succs(3), &[extra as u32]);
+        assert_eq!(g.sinks(), &[extra]);
+        assert_eq!(g.topo_order_cached().len(), g.len());
     }
 
     #[test]

@@ -15,38 +15,21 @@ impl std::fmt::Display for Invalid {
 }
 impl std::error::Error for Invalid {}
 
-/// Check DAG structure, adjacency symmetry, peer links, and dims.
+/// Check DAG structure, peer links, and dims. (Adjacency symmetry is a
+/// construction invariant now — both CSR directions derive from one edge
+/// list — so there is no asymmetry left to detect.)
 pub fn validate(g: &OperatorGraph) -> Result<(), Invalid> {
     let n = g.len();
-    if g.preds.len() != n || g.succs.len() != n {
-        return Err(Invalid("adjacency length mismatch".into()));
-    }
-    // Symmetric adjacency.
-    for v in 0..n {
-        for &p in &g.preds[v] {
-            if p >= n {
-                return Err(Invalid(format!("node {v} has out-of-range pred {p}")));
-            }
-            if !g.succs[p].contains(&v) {
-                return Err(Invalid(format!("edge {p}->{v} missing from succs")));
-            }
-        }
-        for &s in &g.succs[v] {
-            if s >= n {
-                return Err(Invalid(format!("node {v} has out-of-range succ {s}")));
-            }
-            if !g.preds[s].contains(&v) {
-                return Err(Invalid(format!("edge {v}->{s} missing from preds")));
-            }
-        }
-    }
-    // Acyclic (Kahn must consume all nodes).
-    let mut indeg: Vec<usize> = g.preds.iter().map(Vec::len).collect();
+    // Acyclic (Kahn must consume all nodes). Runs on the CSR directly
+    // rather than the cached topo order: the cached accessor panics on a
+    // cycle, and validation must report it as an error instead.
+    let mut indeg: Vec<u32> = g.indeg().to_vec();
     let mut queue: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
     let mut seen = 0usize;
     while let Some(v) = queue.pop() {
         seen += 1;
-        for &s in &g.succs[v] {
+        for &s in g.succs(v) {
+            let s = s as usize;
             indeg[s] -= 1;
             if indeg[s] == 0 {
                 queue.push(s);
@@ -98,24 +81,26 @@ mod tests {
     }
 
     #[test]
-    fn detects_asymmetric_adjacency() {
-        let mut b = GraphBuilder::new();
-        let x = b.gemm("x", 8, 8, 8, &[]);
-        let _y = b.eltwise("y", 64, 1, &[x]);
-        let mut g = b.finish();
-        g.succs[0].clear(); // break symmetry
-        assert!(validate(&g).is_err());
-    }
-
-    #[test]
     fn detects_cycle() {
         let mut b = GraphBuilder::new();
         let x = b.gemm("x", 8, 8, 8, &[]);
         let y = b.eltwise("y", 64, 1, &[x]);
         let mut g = b.finish();
-        // Force a back edge y -> x.
-        g.succs[y].push(x);
-        g.preds[x].push(y);
+        // Force a back edge y -> x (updates both CSR directions).
+        g.add_edge(y, x);
+        assert!(validate(&g).unwrap_err().0.contains("cycle"));
+    }
+
+    #[test]
+    fn detects_cycle_added_after_freeze() {
+        // Mutators must invalidate the frozen analysis: freeze first,
+        // then add the back edge, and validation must still see it.
+        let mut b = GraphBuilder::new();
+        let x = b.gemm("x", 8, 8, 8, &[]);
+        let y = b.eltwise("y", 64, 1, &[x]);
+        let mut g = b.finish();
+        validate(&g).unwrap(); // freezes the analysis
+        g.add_edge(y, x);
         assert!(validate(&g).unwrap_err().0.contains("cycle"));
     }
 

@@ -138,7 +138,7 @@ fn print_usage() {
          [--iterations 500]\n  \
          wham trace --model <name> [--out trace.json] [--tc 2 --vc 2 --dims 128x128x128]\n  \
          wham trace explain <model> — per-iteration search attribution (flight recorder)\n  \
-         wham trace profile <model> [--hz 99] [--top 10] [--out prof.collapsed] [--smoke]\n              \
+         wham trace profile <model> [--hz 99] [--top 10] [--out prof.collapsed] [--smoke] [--full-reschedule]\n              \
          — sampled span-stack profile of the search (hottest paths + folded stacks)\n  \
          wham partition --model <llm> [--depth 32] [--tmp 1] [--scheme gpipe]\n  \
          wham space --model <name>\n  \
@@ -639,7 +639,10 @@ fn cmd_trace_explain(args: &Args) -> Result<()> {
 /// span sampling profiler ([`wham::telemetry::profile`]) and print the
 /// hottest span paths with self/total percentages. `--out FILE` also
 /// writes the collapsed-stack form for flamegraph.pl / speedscope;
-/// `--smoke` bounds the run with a short deadline (CI-sized).
+/// `--smoke` bounds the run with a short deadline (CI-sized);
+/// `--full-reschedule` profiles the schedule-from-scratch MCR oracle
+/// instead of the incremental probe engine (outcomes are bit-identical,
+/// so the two profiles isolate where the scheduler time went).
 fn cmd_trace_profile(args: &Args) -> Result<()> {
     let name = args
         .get("model")
@@ -647,7 +650,8 @@ fn cmd_trace_profile(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: wham trace profile <model> (or --model <name>)"))?;
     let hz: u32 = args.get_as_or("hz", 99).map_err(|e| anyhow!("{e}"))?;
     let top: usize = args.get_as_or("top", 10).map_err(|e| anyhow!("{e}"))?;
-    let plan = SearchRequest::new(name).validate()?;
+    let mut plan = SearchRequest::new(name).validate()?;
+    plan.opts.full_reschedule = args.flag("full-reschedule");
     let mut session = session_from_args(args)?;
     let sampler = wham::telemetry::profile::attach(hz).map_err(|e| anyhow!("{e}"))?;
     let r = if args.flag("smoke") {

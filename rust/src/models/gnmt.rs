@@ -107,7 +107,8 @@ mod tests {
         let t0 = g.ops.iter().position(|o| o.name == "enc0/t0/gates").unwrap();
         let mut v = t0;
         let mut chain = 1;
-        while let Some(&s) = g.succs[v].first() {
+        while let Some(&s) = g.succs(v).first() {
+            let s = s as usize;
             if !g.ops[s].name.starts_with("enc0/") {
                 break;
             }

@@ -171,7 +171,7 @@ mod tests {
     fn qkv_branches_in_parallel() {
         let g = forward(&bert_base());
         let ln1 = g.ops.iter().position(|o| o.name == "l0/ln1").unwrap();
-        assert_eq!(g.succs[ln1].len(), 3, "ln1 fans out to q, k, v");
+        assert_eq!(g.succs(ln1).len(), 3, "ln1 fans out to q, k, v");
     }
 
     #[test]

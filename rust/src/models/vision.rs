@@ -335,7 +335,7 @@ mod tests {
     #[test]
     fn inception_has_branching() {
         let g = inception_v3(2);
-        let max_fanout = (0..g.len()).map(|v| g.succs[v].len()).max().unwrap();
+        let max_fanout = (0..g.len()).map(|v| g.succs(v).len()).max().unwrap();
         assert!(max_fanout >= 4, "inception blocks fan out 4 ways");
     }
 
@@ -351,7 +351,7 @@ mod tests {
     fn resnet_blocks_have_skip_fanout() {
         let g = resnet18(4);
         // Residual inputs feed both the block and the skip add.
-        let fanout2 = (0..g.len()).filter(|&v| g.succs[v].len() >= 2).count();
+        let fanout2 = (0..g.len()).filter(|&v| g.succs(v).len() >= 2).count();
         assert!(fanout2 >= 2);
     }
 }

@@ -1,7 +1,41 @@
 //! ASAP/ALAP infinite-resource schedules and critical-path analysis
 //! (paper section 4.3, Figure 5).
+//!
+//! Representation: alongside `asap` we keep `tail[v]` — the longest
+//! cycle-weighted path *starting at* `v`, inclusive of `v` — so
+//! `best_latency = max over sinks (asap + cycles)` and
+//! `alap[v] = best_latency - tail[v]`. The tail form makes ALAP a purely
+//! local backward recurrence, which is what lets
+//! [`CriticalPathCache::refresh`] repropagate only the cone of operators
+//! whose cycle latencies actually changed between two annotations (the
+//! engine re-annotates the same graph at dozens of `<TC-Dim, VC-Width>`
+//! candidates; phase 1 perturbs only tensor/fused cycles, phase 2 only
+//! vector/fused cycles).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::cost::annotate::AnnotatedGraph;
+
+/// Full critical-path recomputations (first use, resized graph, or a
+/// change set too large for the worklist to win).
+static CP_FULL: crate::telemetry::Counter = crate::telemetry::Counter::new(
+    "wham_critpath_refresh_full_total",
+    "Full ASAP/ALAP recomputations over the whole graph.",
+);
+
+/// Incremental cone repropagations (worklist updates on cycle deltas).
+static CP_INCREMENTAL: crate::telemetry::Counter = crate::telemetry::Counter::new(
+    "wham_critpath_refresh_incremental_total",
+    "Incremental ASAP/ALAP refreshes that repropagated only the changed cone.",
+);
+
+/// Operators actually revisited by incremental refreshes — the cone
+/// size. Compare against ops x refreshes to see the work avoided.
+static CP_OPS_REPROPAGATED: crate::telemetry::Counter = crate::telemetry::Counter::new(
+    "wham_critpath_ops_repropagated_total",
+    "Operators revisited by incremental critical-path refreshes.",
+);
 
 /// Critical-path information for an annotated graph.
 #[derive(Debug, Clone)]
@@ -15,12 +49,17 @@ pub struct CriticalPath {
     /// Theoretical best makespan (ASAP finish of the last op) — the bound
     /// the MCR heuristic and ILP converge toward.
     pub best_latency: u64,
+    /// Longest path starting at each op, inclusive (`alap = best_latency
+    /// - tail`) — the backward-pass state the incremental refresh edits.
+    tail: Vec<u64>,
+    /// Cached zero-slack operators (ascending ids).
+    critical: Vec<usize>,
 }
 
 impl CriticalPath {
-    /// Operators with zero slack.
-    pub fn critical_ops(&self) -> Vec<usize> {
-        (0..self.slack.len()).filter(|&v| self.slack[v] == 0).collect()
+    /// Operators with zero slack — cached slice, no per-call allocation.
+    pub fn critical_ops(&self) -> &[usize] {
+        &self.critical
     }
 
     /// Upper bound on useful core counts (paper section 3: critical-path
@@ -56,6 +95,11 @@ impl CriticalPath {
         }
         peak.max(0) as u64
     }
+
+    fn rebuild_critical(&mut self) {
+        self.critical.clear();
+        self.critical.extend((0..self.slack.len()).filter(|&v| self.slack[v] == 0));
+    }
 }
 
 /// Compute ASAP and ALAP schedules over an annotated graph.
@@ -65,32 +109,198 @@ pub fn asap_alap(ann: &AnnotatedGraph) -> CriticalPath {
     // Cached on the graph: the search calls this once per candidate dims
     // and the order never changes.
     let order = g.topo_order_cached();
+    let preds = g.preds_csr();
+    let succs = g.succs_csr();
 
     let mut asap = vec![0u64; n];
     for &v in order {
-        for &p in &g.preds[v] {
-            asap[v] = asap[v].max(asap[p] + ann.cycles[p]);
+        let mut a = 0u64;
+        for &p in preds.row(v) {
+            let p = p as usize;
+            a = a.max(asap[p] + ann.cycles[p]);
         }
+        asap[v] = a;
     }
-    let best_latency = order
-        .iter()
-        .map(|&v| asap[v] + ann.cycles[v])
-        .max()
-        .unwrap_or(0);
-
-    let mut alap = vec![u64::MAX; n];
+    let mut tail = vec![0u64; n];
     for &v in order.iter().rev() {
-        if g.succs[v].is_empty() {
-            alap[v] = best_latency - ann.cycles[v];
-        } else {
-            for &s in &g.succs[v] {
-                alap[v] = alap[v].min(alap[s] - ann.cycles[v]);
+        let mut t = 0u64;
+        for &s in succs.row(v) {
+            t = t.max(tail[s as usize]);
+        }
+        tail[v] = t + ann.cycles[v];
+    }
+    // The overall max of `asap + cycles` is attained at a sink (any
+    // non-sink is strictly dominated by its successors), so the cached
+    // sink list suffices.
+    let best_latency =
+        g.sinks().iter().map(|&v| asap[v] + ann.cycles[v]).max().unwrap_or(0);
+
+    let alap: Vec<u64> = (0..n).map(|v| best_latency - tail[v]).collect();
+    let slack = (0..n).map(|v| alap[v] - asap[v]).collect();
+    let mut cp = CriticalPath { asap, alap, slack, best_latency, tail, critical: Vec::new() };
+    cp.rebuild_critical();
+    cp
+}
+
+/// Keeps a [`CriticalPath`] alive across annotations of the *same graph*
+/// and refreshes it by repropagating only the cone of operators whose
+/// cycle latencies changed — exact (bit-identical to [`asap_alap`], the
+/// property `hotpath_parity.rs` pins), therefore safe under the engine's
+/// deterministic parallel prefetch.
+#[derive(Default)]
+pub struct CriticalPathCache {
+    /// Cycle latencies the cached path was computed from.
+    cycles: Vec<u64>,
+    cp: Option<CriticalPath>,
+    /// In-worklist flags, reset via `touched` after each refresh.
+    queued: Vec<bool>,
+    touched: Vec<usize>,
+}
+
+impl CriticalPathCache {
+    /// Empty cache; the first refresh computes from scratch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bring the cached path up to date with `ann` and return it.
+    pub fn refresh(&mut self, ann: &AnnotatedGraph) -> &CriticalPath {
+        let n = ann.graph.len();
+        if self.cp.is_none() || self.cycles.len() != n {
+            return self.refresh_full(ann);
+        }
+        // Diff the cycle vectors: the graph is fixed, so changed latency
+        // is the only way the critical path can move.
+        let changed: Vec<usize> =
+            (0..n).filter(|&v| self.cycles[v] != ann.cycles[v]).collect();
+        if changed.is_empty() {
+            return self.cp.as_ref().unwrap();
+        }
+        // A majority-changed diff (e.g. the first dims of a phase) pays
+        // worklist overhead for no cone to skip — recompute flat.
+        if changed.len() * 2 > n {
+            return self.refresh_full(ann);
+        }
+        CP_INCREMENTAL.add(1);
+        self.cycles.copy_from_slice(&ann.cycles);
+        let g = ann.graph;
+        let pos = g.topo_positions();
+        let preds = g.preds_csr();
+        let succs = g.succs_csr();
+        let cp = self.cp.as_mut().unwrap();
+        self.touched.clear();
+        if self.queued.len() != n {
+            self.queued = vec![false; n];
+        }
+        let mut repropagated = 0u64;
+        let mut slack_flipped = false;
+
+        // Forward cone: asap[v] depends on preds only, so changed cycles
+        // seed their successors. The min-heap on topo position guarantees
+        // each node is finalized before anything downstream of it pops,
+        // so every node is recomputed at most once.
+        let mut fwd: BinaryHeap<Reverse<(u32, usize)>> = BinaryHeap::new();
+        for &c in &changed {
+            for &s in succs.row(c) {
+                let s = s as usize;
+                if !self.queued[s] {
+                    self.queued[s] = true;
+                    fwd.push(Reverse((pos[s], s)));
+                }
             }
         }
+        while let Some(Reverse((_, v))) = fwd.pop() {
+            self.queued[v] = false;
+            repropagated += 1;
+            let mut a = 0u64;
+            for &p in preds.row(v) {
+                let p = p as usize;
+                a = a.max(cp.asap[p] + ann.cycles[p]);
+            }
+            if a != cp.asap[v] {
+                cp.asap[v] = a;
+                self.touched.push(v);
+                for &s in succs.row(v) {
+                    let s = s as usize;
+                    if !self.queued[s] {
+                        self.queued[s] = true;
+                        fwd.push(Reverse((pos[s], s)));
+                    }
+                }
+            }
+        }
+
+        // Backward cone: tail[v] depends on v's own cycles, so changed
+        // nodes seed themselves; deltas flow to predecessors. Max-heap on
+        // topo position: downstream finalizes first.
+        let mut bwd: BinaryHeap<(u32, usize)> = BinaryHeap::new();
+        for &c in &changed {
+            if !self.queued[c] {
+                self.queued[c] = true;
+                bwd.push((pos[c], c));
+            }
+        }
+        while let Some((_, v)) = bwd.pop() {
+            self.queued[v] = false;
+            repropagated += 1;
+            let mut t = 0u64;
+            for &s in succs.row(v) {
+                t = t.max(cp.tail[s as usize]);
+            }
+            t += ann.cycles[v];
+            if t != cp.tail[v] {
+                cp.tail[v] = t;
+                self.touched.push(v);
+                for &p in preds.row(v) {
+                    let p = p as usize;
+                    if !self.queued[p] {
+                        self.queued[p] = true;
+                        bwd.push((pos[p], p));
+                    }
+                }
+            }
+        }
+        CP_OPS_REPROPAGATED.add(repropagated);
+
+        let best =
+            g.sinks().iter().map(|&v| cp.asap[v] + ann.cycles[v]).max().unwrap_or(0);
+        if best != cp.best_latency {
+            // A moved bound shifts every alap/slack — flat O(n) rewrite.
+            cp.best_latency = best;
+            for v in 0..n {
+                cp.alap[v] = best - cp.tail[v];
+                cp.slack[v] = cp.alap[v] - cp.asap[v];
+            }
+            cp.rebuild_critical();
+        } else {
+            // Bound unchanged: only touched nodes can have moved. The
+            // changed nodes themselves are included — their asap/tail may
+            // be stable while a neighbor's shift still leaves them
+            // untouched, but their own tail recompute already queued them
+            // via `touched` when it moved; nodes whose nothing moved keep
+            // alap/slack by definition.
+            for &v in &self.touched {
+                cp.alap[v] = best - cp.tail[v];
+                let s = cp.alap[v] - cp.asap[v];
+                if (s == 0) != (cp.slack[v] == 0) {
+                    slack_flipped = true;
+                }
+                cp.slack[v] = s;
+            }
+            if slack_flipped {
+                cp.rebuild_critical();
+            }
+        }
+        self.cp.as_ref().unwrap()
     }
 
-    let slack = (0..n).map(|v| alap[v] - asap[v]).collect();
-    CriticalPath { asap, alap, slack, best_latency }
+    fn refresh_full(&mut self, ann: &AnnotatedGraph) -> &CriticalPath {
+        CP_FULL.add(1);
+        self.cycles.clear();
+        self.cycles.extend_from_slice(&ann.cycles);
+        self.cp = Some(asap_alap(ann));
+        self.cp.as_ref().unwrap()
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +359,41 @@ mod tests {
         let cp = asap_alap(&ann);
         for v in 0..g.len() {
             assert!(cp.alap[v] >= cp.asap[v]);
+        }
+    }
+
+    /// Incremental refreshes across a dims sweep must match the
+    /// from-scratch computation field for field.
+    #[test]
+    fn incremental_refresh_matches_full_recompute() {
+        let fwd = crate::models::transformer::forward_range(
+            &crate::models::transformer::bert_base(),
+            0,
+            2,
+        );
+        let g = crate::graph::autodiff::training_graph(
+            &fwd,
+            crate::graph::autodiff::Optimizer::Adam,
+        );
+        let mut cache = CriticalPathCache::new();
+        // Phase-1-like sweep (tc dims move) then phase-2-like (vc width
+        // moves): each step perturbs a different subset of cycles.
+        for d in [
+            Dims { tc_x: 128, tc_y: 128, vc_w: 128 },
+            Dims { tc_x: 64, tc_y: 128, vc_w: 128 },
+            Dims { tc_x: 128, tc_y: 64, vc_w: 128 },
+            Dims { tc_x: 128, tc_y: 64, vc_w: 64 },
+            Dims { tc_x: 128, tc_y: 64, vc_w: 32 },
+            Dims { tc_x: 128, tc_y: 64, vc_w: 64 }, // revisit
+        ] {
+            let ann = AnnotatedGraph::new(&g, d, &mut NativeCost);
+            let inc = cache.refresh(&ann);
+            let full = asap_alap(&ann);
+            assert_eq!(inc.asap, full.asap, "asap diverged at {d:?}");
+            assert_eq!(inc.alap, full.alap, "alap diverged at {d:?}");
+            assert_eq!(inc.slack, full.slack, "slack diverged at {d:?}");
+            assert_eq!(inc.best_latency, full.best_latency);
+            assert_eq!(inc.critical_ops(), full.critical_ops());
         }
     }
 }

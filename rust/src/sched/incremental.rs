@@ -1,0 +1,510 @@
+//! Checkpoint-resume incremental scheduling for the MCR probe loop.
+//!
+//! The MCR heuristic (paper Algorithm 1) evaluates a *monotone* sequence
+//! of core configurations: every probe grows the previous accepted
+//! configuration along one axis. Two exact properties of the greedy list
+//! scheduler make most of that work redundant:
+//!
+//! 1. **Prefix identity.** A scheduling pass in which every ready op
+//!    starts (nothing blocked on a core) makes decisions that do not
+//!    depend on the core counts — the same ops start at the same times at
+//!    any componentwise-larger capacity. Runs at capacities `c' >= c`
+//!    are therefore bit-identical up to `c`'s first *blocked* pass. The
+//!    engine checkpoints the entry state of that pass and resumes later
+//!    probes from it, replaying only the divergent suffix.
+//! 2. **Bound monotonicity.** Event times only move forward, so once the
+//!    next completion event reaches the smallest makespan the caller
+//!    would reject (`bound`), the final makespan is `>= bound` and the
+//!    probe can abort without finishing the schedule. MCR's accept tests
+//!    are threshold comparisons, so aborting changes no decision.
+//!
+//! Both properties are exact, not approximate: `rust/tests/
+//! hotpath_parity.rs` pins bit-identical schedules, trajectories, and
+//! search outcomes against the full-reschedule oracle
+//! ([`greedy_schedule_scratch`] via `SearchOptions::full_reschedule`).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::asap_alap::CriticalPath;
+use super::list::{eval_tick, Prio};
+use super::{CoreCount, Priority, Schedule};
+use crate::cost::annotate::AnnotatedGraph;
+use crate::graph::CoreType;
+
+/// Probes resumed from a checkpoint instead of scheduling from cycle 0.
+static RESUMES: crate::telemetry::Counter = crate::telemetry::Counter::new(
+    "wham_sched_resume_total",
+    "Scheduler probes resumed from a prefix checkpoint.",
+);
+
+/// Operators whose scheduling was inherited from a checkpoint prefix —
+/// work the full-reschedule engine would have repeated.
+static OPS_SKIPPED: crate::telemetry::Counter = crate::telemetry::Counter::new(
+    "wham_sched_ops_skipped_total",
+    "Operators inherited from checkpoint prefixes instead of rescheduled.",
+);
+
+/// Probes cut short because the makespan provably reached the caller's
+/// rejection bound.
+static ABORTS: crate::telemetry::Counter = crate::telemetry::Counter::new(
+    "wham_sched_probe_aborted_total",
+    "Scheduler probes aborted early at the rejection bound.",
+);
+
+/// Entry state of a run's first blocked scheduling pass — valid to resume
+/// from at any componentwise-larger core configuration.
+struct Ckpt {
+    cores: CoreCount,
+    now: u64,
+    scheduled: usize,
+    free_tc: u64,
+    free_vc: u64,
+    indeg: Vec<u32>,
+    // start/finish of the prefix; entries for ops still in the ready
+    // heaps are stale but are rewritten before any read on resume.
+    start: Vec<u64>,
+    finish: Vec<u64>,
+    ready_t: Vec<Prio>,
+    ready_v: Vec<Prio>,
+    ready_f: Vec<Prio>,
+    events: Vec<Reverse<(u64, usize)>>,
+}
+
+/// Most checkpoints kept per MCR run. The store is tiny because a ckpt
+/// only earns its slot by being undominated: strictly fewer cores *and*
+/// strictly more prefix progress than the others.
+const MAX_CKPTS: usize = 4;
+
+/// Persistent scheduler for one MCR run: ready heaps, in-degrees, and
+/// timelines survive across probes, and prefix checkpoints let a probe at
+/// a grown configuration skip the schedule prefix shared with its parent.
+#[derive(Default)]
+pub struct IncrementalSched {
+    // Live run state (valid for the most recent probe only).
+    indeg: Vec<u32>,
+    start: Vec<u64>,
+    finish: Vec<u64>,
+    ready_t: BinaryHeap<Prio>,
+    ready_v: BinaryHeap<Prio>,
+    ready_f: BinaryHeap<Prio>,
+    events: BinaryHeap<Reverse<(u64, usize)>>,
+    free_tc: u64,
+    free_vc: u64,
+    now: u64,
+    scheduled: usize,
+    complete: bool,
+    makespan: u64,
+    // Prefix checkpoints for this run (cleared by `reset_for`).
+    ckpts: Vec<Ckpt>,
+    // Per-pass undo log: ops started in the current scheduling pass.
+    pass_started: Vec<usize>,
+    started_flag: Vec<bool>,
+}
+
+impl IncrementalSched {
+    /// Empty engine; buffers grow on first probe and are kept after.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a new MCR run: drop checkpoints (the annotation, and with it
+    /// every priority key and event time, changes between runs) and size
+    /// the buffers for an `n`-op graph.
+    pub fn reset_for(&mut self, n: usize) {
+        self.ckpts.clear();
+        self.complete = false;
+        if self.started_flag.len() != n {
+            self.started_flag = vec![false; n];
+        }
+        if self.start.len() != n {
+            self.start = vec![0; n];
+            self.finish = vec![0; n];
+        }
+    }
+
+    /// Greedy-schedule `ann` on `cores`, resuming from the best usable
+    /// checkpoint and aborting once the makespan provably reaches
+    /// `bound`. Returns the exact makespan if it is `< bound`, `None`
+    /// otherwise (the caller would reject either way).
+    pub fn probe(
+        &mut self,
+        ann: &AnnotatedGraph,
+        cp: &CriticalPath,
+        cores: CoreCount,
+        priority: Priority,
+        bound: u64,
+    ) -> Option<u64> {
+        assert!(cores.tc >= 1 && cores.vc >= 1, "need at least one core of each type");
+        let _timer = eval_tick();
+        let _span = crate::telemetry::trace::span("schedule");
+        let g = ann.graph;
+        let n = g.len();
+        self.complete = false;
+
+        // --- init: resume from the deepest usable checkpoint, else cycle 0.
+        let usable = self
+            .ckpts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.cores.tc <= cores.tc && c.cores.vc <= cores.vc)
+            .max_by_key(|(i, c)| (c.scheduled, usize::MAX - i))
+            .map(|(i, _)| i);
+        if let Some(i) = usable {
+            let c = &self.ckpts[i];
+            RESUMES.add(1);
+            OPS_SKIPPED.add(c.scheduled as u64);
+            self.indeg.clear();
+            self.indeg.extend_from_slice(&c.indeg);
+            self.start.copy_from_slice(&c.start);
+            self.finish.copy_from_slice(&c.finish);
+            self.ready_t = BinaryHeap::from(c.ready_t.clone());
+            self.ready_v = BinaryHeap::from(c.ready_v.clone());
+            self.ready_f = BinaryHeap::from(c.ready_f.clone());
+            self.events = BinaryHeap::from(c.events.clone());
+            self.free_tc = c.free_tc + (cores.tc - c.cores.tc);
+            self.free_vc = c.free_vc + (cores.vc - c.cores.vc);
+            self.now = c.now;
+            self.scheduled = c.scheduled;
+        } else {
+            self.indeg.clear();
+            self.indeg.extend_from_slice(g.indeg());
+            self.start.iter_mut().for_each(|x| *x = 0);
+            self.finish.iter_mut().for_each(|x| *x = 0);
+            self.ready_t.clear();
+            self.ready_v.clear();
+            self.ready_f.clear();
+            self.events.clear();
+            self.free_tc = cores.tc;
+            self.free_vc = cores.vc;
+            self.now = 0;
+            self.scheduled = 0;
+            for &v in g.sources() {
+                Self::push_ready(&mut self.ready_t, &mut self.ready_v, &mut self.ready_f, ann, cp, priority, v);
+            }
+        }
+
+        // --- event loop (same decision sequence as greedy_schedule_scratch).
+        let mut ckpt_taken = self.ckpts.iter().any(|c| c.cores == cores);
+        loop {
+            // Scheduling pass at `self.now`.
+            self.pass_started.clear();
+            loop {
+                let head = |q: &BinaryHeap<Prio>| q.peek().map(|Reverse(k)| *k);
+                let cand_t = (self.free_tc > 0).then(|| head(&self.ready_t)).flatten();
+                let cand_v = (self.free_vc > 0).then(|| head(&self.ready_v)).flatten();
+                let cand_f =
+                    (self.free_tc > 0 && self.free_vc > 0).then(|| head(&self.ready_f)).flatten();
+                let best = [cand_t, cand_v, cand_f].into_iter().flatten().min();
+                let Some(key) = best else { break };
+                let v = key.2;
+                match ann.core[v] {
+                    CoreType::Tensor => {
+                        self.ready_t.pop();
+                        self.free_tc -= 1;
+                    }
+                    CoreType::Vector => {
+                        self.ready_v.pop();
+                        self.free_vc -= 1;
+                    }
+                    CoreType::Fused => {
+                        self.ready_f.pop();
+                        self.free_tc -= 1;
+                        self.free_vc -= 1;
+                    }
+                }
+                self.start[v] = self.now;
+                self.finish[v] = self.now + ann.cycles[v];
+                self.events.push(Reverse((self.finish[v], v)));
+                self.scheduled += 1;
+                self.pass_started.push(v);
+            }
+
+            // First blocked pass of this run: a ready op exists that a
+            // larger configuration could start right now — the exact point
+            // where runs at bigger capacities diverge. Checkpoint its
+            // entry state (undo this pass's starts) for those future runs.
+            if !ckpt_taken {
+                let blocked = (self.free_tc == 0 && !self.ready_t.is_empty())
+                    || (self.free_vc == 0 && !self.ready_v.is_empty())
+                    || ((self.free_tc == 0 || self.free_vc == 0) && !self.ready_f.is_empty());
+                if blocked {
+                    ckpt_taken = true;
+                    self.record_ckpt(ann, cp, cores, priority);
+                }
+            }
+
+            let Some(Reverse((t, _))) = self.events.peek().copied() else { break };
+            if t >= bound {
+                // Some op finishes at `t`, so makespan >= bound: reject.
+                ABORTS.add(1);
+                return None;
+            }
+            self.now = t;
+            while let Some(&Reverse((ft, v))) = self.events.peek() {
+                if ft != self.now {
+                    break;
+                }
+                self.events.pop();
+                match ann.core[v] {
+                    CoreType::Tensor => self.free_tc += 1,
+                    CoreType::Vector => self.free_vc += 1,
+                    CoreType::Fused => {
+                        self.free_tc += 1;
+                        self.free_vc += 1;
+                    }
+                }
+                for &s in g.succs(v) {
+                    let s = s as usize;
+                    self.indeg[s] -= 1;
+                    if self.indeg[s] == 0 {
+                        Self::push_ready(&mut self.ready_t, &mut self.ready_v, &mut self.ready_f, ann, cp, priority, s);
+                    }
+                }
+            }
+        }
+        assert_eq!(self.scheduled, n, "scheduler dropped operators (cycle or starvation)");
+        self.makespan = self.finish.iter().copied().max().unwrap_or(0);
+        self.complete = true;
+        debug_assert!(self.makespan < bound);
+        Some(self.makespan)
+    }
+
+    /// Owned [`Schedule`] of the last *complete* probe. `ready_at` is
+    /// reconstructed from predecessor finish times — identical to the
+    /// running max the full engine maintains, without the per-release
+    /// bookkeeping on the hot path.
+    pub fn materialize(&self, ann: &AnnotatedGraph) -> Schedule {
+        assert!(self.complete, "materialize() requires a completed probe");
+        let g = ann.graph;
+        let n = g.len();
+        let mut ready_at = vec![0u64; n];
+        for v in 0..n {
+            for &p in g.preds(v) {
+                ready_at[v] = ready_at[v].max(self.finish[p as usize]);
+            }
+        }
+        Schedule {
+            start: self.start.clone(),
+            finish: self.finish.clone(),
+            ready_at,
+            makespan: self.makespan,
+        }
+    }
+
+    fn push_ready(
+        rt: &mut BinaryHeap<Prio>,
+        rv: &mut BinaryHeap<Prio>,
+        rf: &mut BinaryHeap<Prio>,
+        ann: &AnnotatedGraph,
+        cp: &CriticalPath,
+        priority: Priority,
+        v: usize,
+    ) {
+        let key = Self::key(cp, priority, v);
+        match ann.core[v] {
+            CoreType::Tensor => rt.push(key),
+            CoreType::Vector => rv.push(key),
+            CoreType::Fused => rf.push(key),
+        }
+    }
+
+    fn key(cp: &CriticalPath, priority: Priority, v: usize) -> Prio {
+        match priority {
+            Priority::Criticality => Reverse((cp.slack[v], cp.asap[v], v)),
+            Priority::Fifo => Reverse((cp.asap[v], v as u64, v)),
+        }
+    }
+
+    /// Reconstruct the entry state of the current (blocked) scheduling
+    /// pass from the live state and this pass's undo log, and store it if
+    /// no existing checkpoint dominates it.
+    fn record_ckpt(
+        &mut self,
+        ann: &AnnotatedGraph,
+        cp: &CriticalPath,
+        cores: CoreCount,
+        priority: Priority,
+    ) {
+        let entry_scheduled = self.scheduled - self.pass_started.len();
+        // Dominated (<= cores, >= progress elsewhere) => this ckpt can
+        // never be the best pick; skip the clones entirely.
+        if self.ckpts.iter().any(|c| {
+            c.cores.tc <= cores.tc && c.cores.vc <= cores.vc && c.scheduled >= entry_scheduled
+        }) {
+            return;
+        }
+        let mut free_tc = self.free_tc;
+        let mut free_vc = self.free_vc;
+        let mut ready_t: Vec<Prio> = self.ready_t.iter().copied().collect();
+        let mut ready_v: Vec<Prio> = self.ready_v.iter().copied().collect();
+        let mut ready_f: Vec<Prio> = self.ready_f.iter().copied().collect();
+        for &v in &self.pass_started {
+            self.started_flag[v] = true;
+            let key = Self::key(cp, priority, v);
+            match ann.core[v] {
+                CoreType::Tensor => {
+                    ready_t.push(key);
+                    free_tc += 1;
+                }
+                CoreType::Vector => {
+                    ready_v.push(key);
+                    free_vc += 1;
+                }
+                CoreType::Fused => {
+                    ready_f.push(key);
+                    free_tc += 1;
+                    free_vc += 1;
+                }
+            }
+        }
+        let events: Vec<Reverse<(u64, usize)>> = self
+            .events
+            .iter()
+            .filter(|Reverse((_, v))| !self.started_flag[*v])
+            .copied()
+            .collect();
+        for &v in &self.pass_started {
+            self.started_flag[v] = false;
+        }
+        // Evict checkpoints the new one dominates, then least progress if
+        // still at capacity.
+        self.ckpts.retain(|c| {
+            !(cores.tc <= c.cores.tc && cores.vc <= c.cores.vc && entry_scheduled >= c.scheduled)
+        });
+        if self.ckpts.len() >= MAX_CKPTS {
+            if let Some(i) = (0..self.ckpts.len()).min_by_key(|&i| self.ckpts[i].scheduled) {
+                self.ckpts.swap_remove(i);
+            }
+        }
+        self.ckpts.push(Ckpt {
+            cores,
+            now: self.now,
+            scheduled: entry_scheduled,
+            free_tc,
+            free_vc,
+            indeg: self.indeg.clone(),
+            start: self.start.clone(),
+            finish: self.finish.clone(),
+            ready_t,
+            ready_v,
+            ready_f,
+            events,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::annotate::AnnotatedGraph;
+    use crate::cost::native::NativeCost;
+    use crate::cost::Dims;
+    use crate::sched::{asap_alap, greedy_schedule, CoreCount};
+
+    const D: Dims = Dims { tc_x: 64, tc_y: 64, vc_w: 64 };
+
+    /// Probe sequences shaped like MCR growth must match from-scratch
+    /// scheduling exactly, including resumed and re-visited configs.
+    #[test]
+    fn probes_match_full_scheduler_bit_for_bit() {
+        let fwd = crate::models::transformer::forward_range(
+            &crate::models::transformer::bert_base(),
+            0,
+            2,
+        );
+        let g = crate::graph::autodiff::training_graph(
+            &fwd,
+            crate::graph::autodiff::Optimizer::Adam,
+        );
+        let ann = AnnotatedGraph::new(&g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        let mut inc = IncrementalSched::new();
+        inc.reset_for(g.len());
+        // Monotone growth with a gallop-style overshoot and backtrack.
+        let seq = [
+            (1, 1),
+            (2, 1),
+            (4, 1),
+            (8, 1),
+            (6, 1), // binary-search midpoint below the last probe
+            (6, 2),
+            (6, 4),
+            (6, 3),
+        ];
+        for (tc, vc) in seq {
+            let cores = CoreCount { tc, vc };
+            let full = greedy_schedule(&ann, &cp, cores);
+            let got = inc.probe(&ann, &cp, cores, Priority::Criticality, u64::MAX);
+            assert_eq!(got, Some(full.makespan), "makespan diverged at {cores:?}");
+            let m = inc.materialize(&ann);
+            assert_eq!(m.start, full.start, "start diverged at {cores:?}");
+            assert_eq!(m.finish, full.finish, "finish diverged at {cores:?}");
+            assert_eq!(m.ready_at, full.ready_at, "ready_at diverged at {cores:?}");
+        }
+    }
+
+    /// An aborted probe must (a) return None exactly when the true
+    /// makespan is >= bound and (b) leave the engine able to continue.
+    #[test]
+    fn bound_aborts_are_decision_preserving() {
+        let g = crate::sched::fanout3();
+        let ann = AnnotatedGraph::new(&g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        let full = greedy_schedule(&ann, &cp, CoreCount { tc: 1, vc: 1 });
+        let mut inc = IncrementalSched::new();
+        inc.reset_for(g.len());
+        for bound in [1, full.makespan / 2, full.makespan, full.makespan + 1, u64::MAX] {
+            let got = inc.probe(&ann, &cp, CoreCount { tc: 1, vc: 1 }, Priority::Criticality, bound);
+            if full.makespan < bound {
+                assert_eq!(got, Some(full.makespan), "bound={bound}");
+            } else {
+                assert_eq!(got, None, "bound={bound}");
+            }
+        }
+        // Engine still consistent after aborts: a full probe succeeds.
+        let got = inc.probe(&ann, &cp, CoreCount { tc: 3, vc: 1 }, Priority::Criticality, u64::MAX);
+        let full3 = greedy_schedule(&ann, &cp, CoreCount { tc: 3, vc: 1 });
+        assert_eq!(got, Some(full3.makespan));
+        assert_eq!(inc.materialize(&ann).start, full3.start);
+    }
+
+    /// Growth along one axis must reuse the prefix: the resume counter
+    /// moves and results stay exact.
+    #[test]
+    fn checkpoints_are_actually_used() {
+        let g = crate::sched::fanout3();
+        let ann = AnnotatedGraph::new(&g, D, &mut NativeCost);
+        let cp = asap_alap(&ann);
+        let mut inc = IncrementalSched::new();
+        inc.reset_for(g.len());
+        let before = RESUMES.get();
+        inc.probe(&ann, &cp, CoreCount { tc: 1, vc: 1 }, Priority::Criticality, u64::MAX);
+        inc.probe(&ann, &cp, CoreCount { tc: 2, vc: 1 }, Priority::Criticality, u64::MAX);
+        inc.probe(&ann, &cp, CoreCount { tc: 3, vc: 1 }, Priority::Criticality, u64::MAX);
+        assert!(RESUMES.get() > before, "growth probes never resumed a checkpoint");
+        let full = greedy_schedule(&ann, &cp, CoreCount { tc: 3, vc: 1 });
+        assert_eq!(inc.materialize(&ann).start, full.start);
+    }
+
+    /// reset_for must invalidate checkpoints: a new annotation with
+    /// different cycle latencies would otherwise poison resumed probes.
+    #[test]
+    fn reset_drops_checkpoints_across_runs() {
+        let g = crate::sched::fanout3();
+        let ann_a = AnnotatedGraph::new(&g, D, &mut NativeCost);
+        let ann_b =
+            AnnotatedGraph::new(&g, Dims { tc_x: 32, tc_y: 32, vc_w: 64 }, &mut NativeCost);
+        let cp_a = asap_alap(&ann_a);
+        let cp_b = asap_alap(&ann_b);
+        let mut inc = IncrementalSched::new();
+        inc.reset_for(g.len());
+        inc.probe(&ann_a, &cp_a, CoreCount { tc: 1, vc: 1 }, Priority::Criticality, u64::MAX);
+        inc.reset_for(g.len());
+        let got =
+            inc.probe(&ann_b, &cp_b, CoreCount { tc: 2, vc: 1 }, Priority::Criticality, u64::MAX);
+        let full = greedy_schedule(&ann_b, &cp_b, CoreCount { tc: 2, vc: 1 });
+        assert_eq!(got, Some(full.makespan));
+        assert_eq!(inc.materialize(&ann_b).finish, full.finish);
+    }
+}

@@ -16,8 +16,9 @@ use super::asap_alap::CriticalPath;
 use crate::cost::annotate::AnnotatedGraph;
 use crate::graph::CoreType;
 
-/// Ready-queue key: (slack|asap, asap|id, id) — see `push_ready`.
-type Prio = Reverse<(u64, u64, usize)>;
+/// Ready-queue key: (slack|asap, asap|id, id) — see `push_ready`. Shared
+/// with the incremental engine, whose checkpoints store heap snapshots.
+pub(crate) type Prio = Reverse<(u64, u64, usize)>;
 
 /// Cumulative greedy-scheduler invocations process-wide — the paper's
 /// search-cost unit (Figure 8), surfaced by `GET /status`,
@@ -32,6 +33,14 @@ static EVALS: crate::telemetry::Counter = crate::telemetry::Counter::new(
 /// Total greedy-scheduler runs since process start.
 pub fn evals_total() -> u64 {
     EVALS.get()
+}
+
+/// Count one scheduler evaluation and start its duration timer. The
+/// incremental engine calls this once per probe so `evals_total` stays
+/// the engine-independent search-cost unit the paper plots.
+pub(crate) fn eval_tick() -> crate::telemetry::registry::HistTimer {
+    EVALS.add(1);
+    EVAL_SECONDS.start_timer()
 }
 
 /// Wall-clock distribution of single scheduler runs. Two `Instant`
@@ -172,7 +181,7 @@ pub fn greedy_schedule_scratch(
     let n = g.len();
 
     scratch.indeg.clear();
-    scratch.indeg.extend(g.preds.iter().map(|p| p.len() as u32));
+    scratch.indeg.extend_from_slice(g.indeg());
     scratch.ready_t.clear();
     scratch.ready_v.clear();
     scratch.ready_f.clear();
@@ -254,7 +263,8 @@ pub fn greedy_schedule_scratch(
                     free_vc += 1;
                 }
             }
-            for &s in &g.succs[v] {
+            for &s in g.succs(v) {
+                let s = s as usize;
                 indeg[s] -= 1;
                 ready_at[s] = ready_at[s].max(now);
                 if indeg[s] == 0 {
@@ -291,7 +301,8 @@ mod tests {
         let g = crate::sched::fanout3();
         let (s, _) = sched(&g, 2, 1);
         for v in 0..g.len() {
-            for &p in &g.preds[v] {
+            for &p in g.preds(v) {
+                let p = p as usize;
                 assert!(s.start[v] >= s.finish[p], "op {v} started before pred {p} finished");
             }
         }

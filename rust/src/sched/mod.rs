@@ -9,11 +9,21 @@
 //! [`list`] is the resource-constrained greedy scheduler used inside the
 //! MCR heuristic loop: ops are scheduled when their predecessors complete
 //! and a core of the required type is free; ties go to lower slack.
+//!
+//! [`incremental`] is the hot-path variant of the same scheduler: it
+//! keeps its state alive across the monotone probe sequence of one MCR
+//! run, resuming each probe from a prefix checkpoint and aborting once
+//! the makespan provably reaches the caller's rejection bound. It is
+//! exact — `rust/tests/hotpath_parity.rs` pins bit-identical results
+//! against [`list`], which stays available as the parity oracle via
+//! `SearchOptions::full_reschedule`.
 
 pub mod asap_alap;
+pub mod incremental;
 pub mod list;
 
-pub use asap_alap::{asap_alap, CriticalPath};
+pub use asap_alap::{asap_alap, CriticalPath, CriticalPathCache};
+pub use incremental::IncrementalSched;
 pub use list::{
     evals_total, greedy_schedule, greedy_schedule_scratch, greedy_schedule_with_priority,
     CoreCount, Priority, SchedScratch, Schedule,

@@ -7,7 +7,7 @@ use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use super::ilp::ilp_search;
-use super::mcr::{mcr_with, GrowthMode};
+use super::mcr::{mcr_with_scratch, GrowthMode, McrScratch};
 use super::pruner::prune_tree_batched;
 use super::{dims, DesignPoint, TopK};
 use crate::api::progress::{NullSink, Progress, ProgressSink};
@@ -47,6 +47,10 @@ pub struct SearchOptions {
     /// Evaluate the cost backend per-op instead of per cost class
     /// (ablation / parity knob — annotations are bit-identical).
     pub naive_annotation: bool,
+    /// Force the legacy schedule-from-scratch MCR probes instead of the
+    /// incremental checkpoint-resume engine (ablation / parity oracle —
+    /// results are bit-identical, see `rust/tests/hotpath_parity.rs`).
+    pub full_reschedule: bool,
 }
 
 impl Default for SearchOptions {
@@ -62,6 +66,7 @@ impl Default for SearchOptions {
             jobs: 1,
             mcr_one_at_a_time: false,
             naive_annotation: false,
+            full_reschedule: false,
         }
     }
 }
@@ -226,6 +231,11 @@ impl<'a> WhamSearch<'a> {
         let mut cache_hits = 0usize;
         let mut cancelled = false;
         let mut recorder = FlightRecorder::new(FlightRecorder::DEFAULT_CAP);
+        // MCR scratch shared by every serial dims evaluation of this run:
+        // the critical-path cache repropagates only the cycle-cone that
+        // changed between dims candidates, and the incremental scheduler
+        // reuses its buffers. Parallel prefetch workers own one each.
+        let mut mcr_scratch = McrScratch::new();
         // Which pruning phase is running (1 = tensor dims, 2 = vector
         // width) — reported as `Progress::depth`. A `Cell` because the
         // batch closure below holds a shared borrow across both phases.
@@ -317,7 +327,7 @@ impl<'a> WhamSearch<'a> {
                         Slot::Miss => {
                             let (p, evals, attr) = match prefetched.remove(d) {
                                 Some(r) => r,
-                                None => self.evaluate_dims(*d, backend),
+                                None => self.evaluate_dims(*d, backend, &mut mcr_scratch),
                             };
                             scheduler_evals += evals;
                             cache.put(*d, p);
@@ -429,12 +439,13 @@ impl<'a> WhamSearch<'a> {
                     let Ok(mut backend) = crate::coordinator::make_backend(choice) else {
                         return;
                     };
+                    let mut scratch = McrScratch::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= ds.len() {
                             break;
                         }
-                        let out = self.evaluate_dims(ds[i], backend.as_mut());
+                        let out = self.evaluate_dims(ds[i], backend.as_mut(), &mut scratch);
                         *results[i].lock().unwrap() = Some(out);
                     }
                 });
@@ -453,6 +464,7 @@ impl<'a> WhamSearch<'a> {
         &self,
         d: Dims,
         backend: &mut dyn CostBackend,
+        scratch: &mut McrScratch,
     ) -> (DesignPoint, usize, EvalAttribution) {
         let ann = if self.opts.naive_annotation {
             AnnotatedGraph::new_naive(self.graph, d, backend)
@@ -486,7 +498,13 @@ impl<'a> WhamSearch<'a> {
             } else {
                 GrowthMode::Gallop
             };
-            let out = mcr_with(&ann, &self.opts.constraints, mode);
+            let out = mcr_with_scratch(
+                &ann,
+                &self.opts.constraints,
+                mode,
+                scratch,
+                self.opts.full_reschedule,
+            );
             let best = out
                 .trajectory
                 .iter()
@@ -615,14 +633,16 @@ mod tests {
     #[test]
     fn legacy_knobs_pin_the_fast_paths() {
         // The whole perf pass is outcome-preserving: naive per-op
-        // annotation + one-core-at-a-time MCR must land on the same best
-        // design as the interned + galloping defaults, with the legacy
-        // path paying strictly more scheduler evals.
+        // annotation + one-core-at-a-time MCR + schedule-from-scratch
+        // probes must land on the same best design as the interned +
+        // galloping + incremental defaults, with the legacy path paying
+        // at least as many scheduler evals.
         let g = bert1_graph();
         let fast = WhamSearch::new(&g, 4, SearchOptions::default()).run(&mut NativeCost);
         let legacy_opts = SearchOptions {
             mcr_one_at_a_time: true,
             naive_annotation: true,
+            full_reschedule: true,
             ..Default::default()
         };
         let legacy = WhamSearch::new(&g, 4, legacy_opts).run(&mut NativeCost);

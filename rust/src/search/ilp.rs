@@ -110,7 +110,7 @@ impl<'a> BranchBound<'a> {
         let g = ann.graph;
         let mut tail = vec![0u64; g.len()];
         for &v in g.topo_order_cached().iter().rev() {
-            let succ_max = g.succs[v].iter().map(|&s| tail[s]).max().unwrap_or(0);
+            let succ_max = g.succs(v).iter().map(|&s| tail[s as usize]).max().unwrap_or(0);
             tail[v] = ann.cycles[v] + succ_max;
         }
         Self { ann, tc, vc, tail, budget, nodes: 0, complete: true, best: u64::MAX }
@@ -120,7 +120,7 @@ impl<'a> BranchBound<'a> {
         self.best = incumbent;
         let n = self.ann.graph.len();
         let finish = vec![0u64; n];
-        let mut indeg: Vec<u32> = self.ann.graph.preds.iter().map(|p| p.len() as u32).collect();
+        let mut indeg: Vec<u32> = self.ann.graph.indeg().to_vec();
         // Busy-until times per core instance (identical cores: keep sorted).
         let tc_free = vec![0u64; self.tc as usize];
         let vc_free = vec![0u64; self.vc as usize];
@@ -154,7 +154,7 @@ impl<'a> BranchBound<'a> {
                 continue; // done or not ready
             }
             // Earliest start: preds + the required core(s).
-            let pred_ready = g.preds[v].iter().map(|&p| finish[p]).max().unwrap_or(0);
+            let pred_ready = g.preds(v).iter().map(|&p| finish[p as usize]).max().unwrap_or(0);
             let (est, tci, vci) = match self.ann.core[v] {
                 CoreType::Tensor => {
                     let (i, &t) = min_idx(&tc_free);
@@ -185,12 +185,12 @@ impl<'a> BranchBound<'a> {
             if let Some(j) = vci {
                 vf2[j] = fin;
             }
-            for &s in &g.succs[v] {
-                indeg[s] -= 1;
+            for &s in g.succs(v) {
+                indeg[s as usize] -= 1;
             }
             self.dfs(scheduled + 1, f2, indeg, tf2, vf2, cur_max.max(fin));
-            for &s in &g.succs[v] {
-                indeg[s] += 1;
+            for &s in g.succs(v) {
+                indeg[s as usize] += 1;
             }
             if !self.complete && self.nodes > self.budget {
                 return;

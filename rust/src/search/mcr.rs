@@ -8,12 +8,22 @@
 //! constraints hold and the makespan did not get worse; it stops at the
 //! critical-path bound — the graph's parallelizability limit — or when no
 //! critical conflicts remain.
+//!
+//! Probes run on the incremental engine by default
+//! ([`crate::sched::IncrementalSched`]): the monotone growth sequence
+//! lets each candidate resume from a checkpointed schedule prefix, and
+//! every accept test is a threshold comparison, so probes abort as soon
+//! as the makespan reaches the smallest rejected value. Both shortcuts
+//! are exact; `SearchOptions::full_reschedule` forces the legacy
+//! schedule-from-scratch path, kept as the parity oracle
+//! (`rust/tests/hotpath_parity.rs`).
 
 use crate::arch::{ArchConfig, Constraints, CORES_MAX};
 use crate::cost::annotate::AnnotatedGraph;
 use crate::graph::CoreType;
 use crate::sched::{
-    asap_alap, greedy_schedule_scratch, CoreCount, CriticalPath, Priority, SchedScratch, Schedule,
+    asap_alap, greedy_schedule_scratch, CoreCount, CriticalPath, CriticalPathCache,
+    IncrementalSched, Priority, SchedScratch, Schedule,
 };
 
 /// How the loop grows a conflicted core type.
@@ -79,31 +89,60 @@ fn add_cores(c: CoreCount, t: CoreType, k: u64) -> CoreCount {
     }
 }
 
+/// Cross-probe state reused by every MCR run inside one search: the
+/// incremental critical-path cache (cones repropagated between dims
+/// candidates) and the incremental scheduler (checkpoints reused between
+/// growth probes *within* a run). One per search thread.
+#[derive(Default)]
+pub struct McrScratch {
+    cp: CriticalPathCache,
+    sched: IncrementalSched,
+}
+
+impl McrScratch {
+    /// Empty scratch; every buffer grows on first use and is kept after.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Run Algorithm 1 over an annotated graph with the default (galloping)
 /// growth mode.
 pub fn mcr(ann: &AnnotatedGraph, constraints: &Constraints) -> McrOutcome {
     mcr_with(ann, constraints, GrowthMode::default())
 }
 
-/// Shared machinery of one MCR run: the critical-path bounds, the
-/// reusable scheduler scratch, and the galloping axis growth used by
-/// both the conflict loop and the polish loop.
+/// Run Algorithm 1 with an explicit growth mode (fresh scratch).
+pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMode) -> McrOutcome {
+    mcr_with_scratch(ann, constraints, mode, &mut McrScratch::new(), false)
+}
+
+/// The probe backend of one MCR run. `Incremental` is the production
+/// path; `Full` re-runs the from-scratch list scheduler per probe and
+/// exists as the parity oracle. Both count probes identically, so
+/// [`McrOutcome::evals`] — and every decision — is engine-independent.
+enum Engine<'a> {
+    Incremental(&'a mut IncrementalSched),
+    Full { scratch: SchedScratch, last: Option<Schedule> },
+}
+
+/// Shared machinery of one MCR run: the critical-path bounds, the probe
+/// engine, and the galloping axis growth used by both the conflict loop
+/// and the polish loop.
 struct McrCtx<'a> {
     ann: &'a AnnotatedGraph<'a>,
     cp: &'a CriticalPath,
     constraints: &'a Constraints,
     max_tc: u64,
     max_vc: u64,
-    // One scratch for the whole run: every reschedule reuses the
-    // in-degree vector and the ready/event heaps.
-    scratch: SchedScratch,
+    engine: Engine<'a>,
     evals: usize,
 }
 
 /// Latency distribution of MCR probes (one candidate core count →
-/// one full reschedule). Sits one level above
-/// `wham_scheduler_eval_duration_seconds`, so their ratio exposes
-/// probe overhead beyond the schedule itself.
+/// one scheduler run, resumed and bounded on the incremental engine).
+/// Sits one level above `wham_scheduler_eval_duration_seconds`, so
+/// their ratio exposes probe overhead beyond the schedule itself.
 static PROBE_SECONDS: crate::telemetry::Histogram = crate::telemetry::Histogram::new(
     "wham_mcr_probe_duration_seconds",
     "Wall-clock of MCR candidate probes (reschedule of one core-count candidate).",
@@ -111,12 +150,44 @@ static PROBE_SECONDS: crate::telemetry::Histogram = crate::telemetry::Histogram:
 );
 
 impl McrCtx<'_> {
-    fn eval(&mut self, cand: CoreCount) -> Schedule {
+    /// Schedule `cand` and return its makespan iff it is `< bound` — the
+    /// smallest value the caller would reject. The incremental engine
+    /// uses the bound to abort mid-schedule; the oracle completes and
+    /// applies the same threshold, so both engines return identical
+    /// values from identical call sequences.
+    fn probe(&mut self, cand: CoreCount, bound: u64) -> Option<u64> {
         self.evals += 1;
         let _timer = PROBE_SECONDS.start_timer();
         let _span =
             crate::telemetry::trace::span("mcr_probe").arg("tc", cand.tc).arg("vc", cand.vc);
-        greedy_schedule_scratch(self.ann, self.cp, cand, Priority::Criticality, &mut self.scratch)
+        match &mut self.engine {
+            Engine::Incremental(inc) => {
+                inc.probe(self.ann, self.cp, cand, Priority::Criticality, bound)
+            }
+            Engine::Full { scratch, last } => {
+                let s = greedy_schedule_scratch(
+                    self.ann,
+                    self.cp,
+                    cand,
+                    Priority::Criticality,
+                    scratch,
+                );
+                let ms = s.makespan;
+                *last = Some(s);
+                (ms < bound).then_some(ms)
+            }
+        }
+    }
+
+    /// Owned schedule of the most recent *accepted* probe. Must be called
+    /// before the next probe overwrites the engine state.
+    fn materialize(&self) -> Schedule {
+        match &self.engine {
+            Engine::Incremental(inc) => inc.materialize(self.ann),
+            Engine::Full { last, .. } => {
+                last.clone().expect("materialize follows a completed probe")
+            }
+        }
     }
 
     fn cfg_of(&self, c: CoreCount) -> ArchConfig {
@@ -189,29 +260,29 @@ impl McrCtx<'_> {
         let mut last_sched: Option<Schedule> = None;
         let mut k = 1u64;
         loop {
-            let s = self.eval(add_cores(cores, axis, k));
-            if s.makespan < last_ms {
-                prev_k = last_k;
-                last_k = k;
-                last_ms = s.makespan;
-                last_sched = Some(s);
-                if last_ms == best_latency || k == room {
-                    break;
-                }
-                k = (k * 2).min(room);
-            } else {
+            // Doubling accepts strict improvement: reject at `last_ms`.
+            let Some(ms) = self.probe(add_cores(cores, axis, k), last_ms) else {
                 break; // first non-improving measured point brackets the landing
+            };
+            prev_k = last_k;
+            last_k = k;
+            last_ms = ms;
+            last_sched = Some(self.materialize());
+            if last_ms == best_latency || k == room {
+                break;
             }
+            k = (k * 2).min(room);
         }
         let mut landing = last_sched?; // None: even +1 does not improve
         let (mut lo, mut hi) = (prev_k, last_k);
         while hi - lo > 1 {
             let mid = lo + (hi - lo) / 2;
-            let s = self.eval(add_cores(cores, axis, mid));
-            if s.makespan <= last_ms {
-                last_ms = s.makespan;
+            // The walk-back accepts ties with the best measured makespan:
+            // reject only past it.
+            if let Some(ms) = self.probe(add_cores(cores, axis, mid), last_ms.saturating_add(1)) {
+                last_ms = ms;
                 hi = mid;
-                landing = s;
+                landing = self.materialize();
             } else {
                 lo = mid;
             }
@@ -220,26 +291,44 @@ impl McrCtx<'_> {
     }
 }
 
-/// Run Algorithm 1 with an explicit growth mode.
-pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMode) -> McrOutcome {
+/// Run Algorithm 1 with an explicit growth mode, probe engine, and
+/// reusable cross-run scratch — the search-engine hot path.
+pub fn mcr_with_scratch(
+    ann: &AnnotatedGraph,
+    constraints: &Constraints,
+    mode: GrowthMode,
+    scratch: &mut McrScratch,
+    full_reschedule: bool,
+) -> McrOutcome {
     let _span = crate::telemetry::trace::span("mcr").arg("ops", ann.graph.len());
-    let cp = asap_alap(ann);
+    // Split borrow: the critical path lives in the scratch (refreshed
+    // incrementally across runs); the scheduler state is reset per run.
+    let McrScratch { cp: cp_cache, sched: inc } = scratch;
+    let cp_oracle;
+    let cp: &CriticalPath = if full_reschedule {
+        // The oracle recomputes from scratch — it must not share even the
+        // (exact) incremental critical-path machinery with the fast path.
+        cp_oracle = asap_alap(ann);
+        &cp_oracle
+    } else {
+        cp_cache.refresh(ann)
+    };
     // Critical-path bound on useful core counts (section 3): adding more
     // cores than the graph's peak parallelism cannot help.
     let max_tc = cp.max_parallelism(ann, CoreType::Tensor).clamp(1, CORES_MAX);
     let max_vc = cp.max_parallelism(ann, CoreType::Vector).clamp(1, CORES_MAX);
-    let mut ctx = McrCtx {
-        ann,
-        cp: &cp,
-        constraints,
-        max_tc,
-        max_vc,
-        scratch: SchedScratch::new(),
-        evals: 0,
+    let engine = if full_reschedule {
+        Engine::Full { scratch: SchedScratch::new(), last: None }
+    } else {
+        inc.reset_for(ann.graph.len());
+        Engine::Incremental(inc)
     };
+    let mut ctx = McrCtx { ann, cp, constraints, max_tc, max_vc, engine, evals: 0 };
 
     let mut cores = CoreCount { tc: 1, vc: 1 };
-    let mut sched = ctx.eval(cores);
+    let ms = ctx.probe(cores, u64::MAX).expect("unbounded probe completes");
+    let mut sched = ctx.materialize();
+    debug_assert_eq!(ms, sched.makespan);
     let mut trajectory = vec![(cores, sched.makespan)];
     // Flight-recorder attribution: cores granted per conflicted class
     // and the last conflict resolved. Pure observation — never read by
@@ -271,7 +360,7 @@ pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMod
         }
         // First critical conflict whose required core type is not
         // saturated (fused units need both).
-        let conflict = sched.first_conflict_where(&cp, |v| match ann.core[v] {
+        let conflict = sched.first_conflict_where(cp, |v| match ann.core[v] {
             CoreType::Tensor => !sat_tc,
             CoreType::Vector => !sat_vc,
             CoreType::Fused => !sat_tc && !sat_vc,
@@ -294,13 +383,12 @@ pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMod
                     saturate(needed, &mut sat_tc, &mut sat_vc); // AddCoreCheckConstraints
                     continue;
                 }
-                let cand_sched = ctx.eval(cand);
-                if cand_sched.makespan >= sched.makespan {
+                let Some(_) = ctx.probe(cand, sched.makespan) else {
                     saturate(needed, &mut sat_tc, &mut sat_vc); // CheckRuntimeIsWorse
                     continue;
-                }
+                };
                 cores = cand;
-                sched = cand_sched;
+                sched = ctx.materialize();
                 grant(&mut grants, needed, 1);
                 last_conflict = Some(conflict);
             }
@@ -356,10 +444,9 @@ pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMod
                     if !ctx.feasible(cand) {
                         continue;
                     }
-                    let cand_sched = ctx.eval(cand);
-                    if cand_sched.makespan < sched.makespan {
+                    if ctx.probe(cand, sched.makespan).is_some() {
                         cores = cand;
-                        sched = cand_sched;
+                        sched = ctx.materialize();
                         trajectory.push((cores, sched.makespan));
                         grant(&mut grants, axis, 1);
                         improved = true;
@@ -372,11 +459,12 @@ pub fn mcr_with(ann: &AnnotatedGraph, constraints: &Constraints, mode: GrowthMod
 
     let hit_bound = sched.makespan == cp.best_latency;
     let evals = ctx.evals;
-    drop(ctx); // ends the ctx borrow of `cp` before the move below
+    let critical = cp.clone();
+    drop(ctx); // ends the ctx borrow of the scratch before returning
     McrOutcome {
         cores,
         schedule: sched,
-        critical: cp,
+        critical,
         evals,
         hit_bound,
         trajectory,
@@ -489,5 +577,36 @@ mod tests {
         let slow = mcr_with(&ann, &tight, GrowthMode::OneAtATime);
         assert_eq!(fast.cores, slow.cores);
         assert_eq!(fast.schedule.makespan, slow.schedule.makespan);
+    }
+
+    /// The incremental engine and the full-reschedule oracle must agree
+    /// on every observable outcome field, including eval counts — the
+    /// per-run version of the `hotpath_parity.rs` contract.
+    #[test]
+    fn incremental_engine_matches_full_reschedule_oracle() {
+        let fwd = crate::models::transformer::forward_range(
+            &crate::models::transformer::bert_base(),
+            0,
+            2,
+        );
+        let g =
+            crate::graph::autodiff::training_graph(&fwd, crate::graph::autodiff::Optimizer::Adam);
+        let ann = AnnotatedGraph::new(&g, Dims { tc_x: 128, tc_y: 64, vc_w: 128 }, &mut NativeCost);
+        let mut scratch = McrScratch::new();
+        for mode in [GrowthMode::Gallop, GrowthMode::OneAtATime] {
+            let fast =
+                mcr_with_scratch(&ann, &Constraints::default(), mode, &mut scratch, false);
+            let full = mcr_with_scratch(&ann, &Constraints::default(), mode, &mut scratch, true);
+            assert_eq!(fast.cores, full.cores, "{mode:?}");
+            assert_eq!(fast.schedule.start, full.schedule.start, "{mode:?}");
+            assert_eq!(fast.schedule.finish, full.schedule.finish, "{mode:?}");
+            assert_eq!(fast.schedule.ready_at, full.schedule.ready_at, "{mode:?}");
+            assert_eq!(fast.schedule.makespan, full.schedule.makespan, "{mode:?}");
+            assert_eq!(fast.evals, full.evals, "{mode:?}");
+            assert_eq!(fast.trajectory, full.trajectory, "{mode:?}");
+            assert_eq!(fast.grants, full.grants, "{mode:?}");
+            assert_eq!(fast.last_conflict, full.last_conflict, "{mode:?}");
+            assert_eq!(fast.hit_bound, full.hit_bound, "{mode:?}");
+        }
     }
 }

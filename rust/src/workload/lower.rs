@@ -448,7 +448,7 @@ mod tests {
         assert_eq!(g.sources(), vec![0]);
         // Residuals join the activation and the iteration input.
         let res = g.ops.iter().position(|o| o.name.contains("body[0][2]")).unwrap();
-        assert_eq!(g.preds[res].len(), 2);
+        assert_eq!(g.preds(res).len(), 2);
         // Deterministic lowering.
         assert_eq!(fingerprint(&lower(&spec).unwrap()), fingerprint(&g));
     }
@@ -573,9 +573,9 @@ mod tests {
         let scores = g.ops.iter().position(|o| o.name.ends_with("/scores")).unwrap();
         let sm = g.ops.iter().position(|o| o.name.ends_with("/softmax")).unwrap();
         let ctx = g.ops.iter().position(|o| o.name.ends_with("/ctx")).unwrap();
-        assert_eq!(g.preds[scores].len(), 2);
-        assert_eq!(g.preds[sm], vec![scores]);
-        assert_eq!(g.preds[ctx].len(), 2);
+        assert_eq!(g.preds(scores).len(), 2);
+        assert_eq!(g.preds(sm), &[scores as u32]);
+        assert_eq!(g.preds(ctx).len(), 2);
         assert!(matches!(g.ops[ctx].kind, OpKind::Gemm { m: 8, n: 4, k: 6 }));
         assert_eq!(g.ops[scores].param_elems, 0);
     }

@@ -70,8 +70,7 @@ fn cyclic_graph_panics_in_topo_order() {
     let a = b.gemm("a", 8, 8, 8, &[]);
     let c = b.gemm("c", 8, 8, 8, &[a]);
     let mut g = b.finish();
-    g.succs[c].push(a);
-    g.preds[a].push(c);
+    g.add_edge(c, a);
     let _ = g.topo_order();
 }
 

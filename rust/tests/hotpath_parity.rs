@@ -15,15 +15,20 @@ use wham::cost::native::NativeCost;
 use wham::cost::Dims;
 use wham::graph::fingerprint;
 use wham::search::engine::{SearchOptions, WhamSearch};
-use wham::search::mcr::{mcr_with, GrowthMode};
+use wham::search::mcr::{mcr_with, mcr_with_scratch, GrowthMode, McrScratch};
 use wham::util::prop::forall;
 use wham::workload::testgen::random_spec_json;
 use wham::workload::{lower, parse_spec};
 
-/// The pre-overhaul configuration: per-op backend rows + one reschedule
-/// per core addition.
+/// The pre-overhaul configuration: per-op backend rows, one reschedule
+/// per core addition, and schedule-from-scratch MCR probes.
 fn legacy_opts() -> SearchOptions {
-    SearchOptions { mcr_one_at_a_time: true, naive_annotation: true, ..Default::default() }
+    SearchOptions {
+        mcr_one_at_a_time: true,
+        naive_annotation: true,
+        full_reschedule: true,
+        ..Default::default()
+    }
 }
 
 /// A power-of-two dims ladder value in [4, 256].
@@ -140,6 +145,92 @@ fn table4_workloads_pin_fast_vs_legacy_best_topk_and_fingerprint() {
             "{name}: fast {} vs legacy {} evals",
             fast.scheduler_evals,
             slow.scheduler_evals
+        );
+    }
+}
+
+#[test]
+fn incremental_rescheduling_matches_full_oracle_on_random_specs() {
+    // The cone-rescheduling contract on arbitrary graphs: checkpointed
+    // resume + bounded-probe aborts on the incremental engine must
+    // reproduce the schedule-from-scratch oracle *bit for bit* — same
+    // cores, same per-op start/finish, same trajectory, same eval count —
+    // under both growth modes, while sharing one scratch across runs (the
+    // engine's usage pattern, so stale checkpoints/cones would be caught).
+    forall(
+        0xC0DE_5EED,
+        12,
+        |g| {
+            let text = random_spec_json(g);
+            let d = Dims { tc_x: pick_dim(g), tc_y: pick_dim(g), vc_w: pick_dim(g) };
+            (text, d)
+        },
+        |(text, d)| {
+            let spec = parse_spec(text).map_err(|e| format!("parse: {e}"))?;
+            let graph = lower::training(&spec).map_err(|e| format!("lower: {e}"))?;
+            let ann = AnnotatedGraph::new(&graph, *d, &mut NativeCost);
+            let mut scratch = McrScratch::new();
+            for mode in [GrowthMode::Gallop, GrowthMode::OneAtATime] {
+                let fast =
+                    mcr_with_scratch(&ann, &Constraints::default(), mode, &mut scratch, false);
+                let full =
+                    mcr_with_scratch(&ann, &Constraints::default(), mode, &mut scratch, true);
+                if fast.cores != full.cores {
+                    return Err(format!(
+                        "{mode:?}: cores diverged: {:?} vs {:?}",
+                        fast.cores, full.cores
+                    ));
+                }
+                if fast.schedule.makespan != full.schedule.makespan {
+                    return Err(format!(
+                        "{mode:?}: makespan diverged: {} vs {}",
+                        fast.schedule.makespan, full.schedule.makespan
+                    ));
+                }
+                if fast.schedule.start != full.schedule.start
+                    || fast.schedule.finish != full.schedule.finish
+                    || fast.schedule.ready_at != full.schedule.ready_at
+                {
+                    return Err(format!("{mode:?}: per-op schedule diverged"));
+                }
+                if fast.evals != full.evals {
+                    return Err(format!(
+                        "{mode:?}: eval counts diverged: {} vs {}",
+                        fast.evals, full.evals
+                    ));
+                }
+                if fast.trajectory != full.trajectory {
+                    return Err(format!("{mode:?}: growth trajectory diverged"));
+                }
+                if fast.hit_bound != full.hit_bound || fast.last_conflict != full.last_conflict {
+                    return Err(format!("{mode:?}: outcome flags diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn incremental_engine_pins_search_outcomes_on_table4_graphs() {
+    // Isolates the `full_reschedule` knob at the engine level (the
+    // combined-legacy pin above covers it jointly with the other knobs):
+    // the whole search — best design, top-k, pruner walk, eval counts —
+    // is bit-identical with the oracle probes.
+    for name in ["bert-base", "vgg16"] {
+        let (graph, batch) = resolve_workload(name).unwrap();
+        let fast = WhamSearch::new(&graph, batch, SearchOptions::default()).run(&mut NativeCost);
+        let oracle_opts = SearchOptions { full_reschedule: true, ..Default::default() };
+        let oracle = WhamSearch::new(&graph, batch, oracle_opts).run(&mut NativeCost);
+        assert_eq!(fast.best.config, oracle.best.config, "{name}: best design");
+        assert_eq!(fast.best.eval.cycles, oracle.best.eval.cycles, "{name}: best makespan");
+        let fast_top: Vec<_> = fast.top.points().iter().map(|p| p.config).collect();
+        let oracle_top: Vec<_> = oracle.top.points().iter().map(|p| p.config).collect();
+        assert_eq!(fast_top, oracle_top, "{name}: top-k set");
+        assert_eq!(fast.dims_evaluated, oracle.dims_evaluated, "{name}: pruner walk");
+        assert_eq!(
+            fast.scheduler_evals, oracle.scheduler_evals,
+            "{name}: probe accounting must be engine-independent"
         );
     }
 }

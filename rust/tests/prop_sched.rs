@@ -45,7 +45,8 @@ fn schedule_respects_dependencies_and_capacity() {
             let s = greedy_schedule(&ann, &cp, CoreCount { tc, vc });
             // Dependencies.
             for v in 0..g.len() {
-                for &p in &g.preds[v] {
+                for &p in g.preds(v) {
+                    let p = p as usize;
                     if s.start[v] < s.finish[p] {
                         return Err(format!("dep violated: {v} starts before pred {p} ends"));
                     }
@@ -95,7 +96,8 @@ fn asap_alap_invariants() {
             if cp.asap[v] + ann.cycles[v] > cp.best_latency {
                 return Err(format!("node {v} ASAP-finishes past best latency"));
             }
-            for &p in &g.preds[v] {
+            for &p in g.preds(v) {
+                let p = p as usize;
                 if cp.asap[v] < cp.asap[p] + ann.cycles[p] {
                     return Err(format!("ASAP precedence violated {p}->{v}"));
                 }
