@@ -715,6 +715,21 @@ pub struct JobsCounters {
     pub retries: u64,
 }
 
+/// One alert rule's state as reported by `GET /status` (and mirrored
+/// by the `wham_alert_active{rule=...}` gauges of `GET /metrics`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AlertStatus {
+    /// Stable rule id (`job-queue-pressure`).
+    pub rule: String,
+    /// Operator-facing description of the condition.
+    pub describe: String,
+    pub active: bool,
+    /// When the current firing episode started (0 while resolved).
+    pub since_ms: u64,
+    /// The rule expression's value at the latest evaluation.
+    pub value: f64,
+}
+
 /// Reply of `GET /status`.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct StatusReply {
@@ -726,6 +741,8 @@ pub struct StatusReply {
     pub db: DbCounters,
     pub perf: PerfCounters,
     pub jobs: JobsCounters,
+    /// Per-rule alert state ([`crate::telemetry::tsdb`]).
+    pub alerts: Vec<AlertStatus>,
 }
 
 impl ToJson for StatusReply {
@@ -777,6 +794,15 @@ impl ToJson for StatusReply {
             .u64("rejected_depth", self.jobs.rejected_depth)
             .u64("retries", self.jobs.retries)
             .finish();
+        let alerts = arr(self.alerts.iter().map(|a| {
+            Obj::new()
+                .str("rule", &a.rule)
+                .str("describe", &a.describe)
+                .bool("active", a.active)
+                .u64("since_ms", a.since_ms)
+                .f64("value", a.value)
+                .finish()
+        }));
         Obj::new()
             .u64("uptime_ms", self.uptime_ms)
             .u64("workers", self.workers)
@@ -786,6 +812,7 @@ impl ToJson for StatusReply {
             .raw("db", &db)
             .raw("perf", &perf)
             .raw("jobs", &jobs)
+            .raw("alerts", &alerts)
             .finish()
     }
 }
@@ -837,6 +864,24 @@ impl FromJson for StatusReply {
                 retries: req_u64(j, "retries")?,
             },
         };
+        // Lenient for pre-alert-engine replies.
+        let alerts = match v.get("alerts") {
+            None => Vec::new(),
+            Some(a) => a
+                .as_arr()
+                .ok_or_else(|| ApiError::invalid("\"alerts\" must be an array"))?
+                .iter()
+                .map(|e| {
+                    Ok(AlertStatus {
+                        rule: req_str(e, "rule")?,
+                        describe: req_str(e, "describe")?,
+                        active: req_bool(e, "active")?,
+                        since_ms: req_u64(e, "since_ms")?,
+                        value: req_f64(e, "value")?,
+                    })
+                })
+                .collect::<Result<_, ApiError>>()?,
+        };
         Ok(Self {
             uptime_ms: req_u64(v, "uptime_ms")?,
             workers: req_u64(v, "workers")?,
@@ -862,6 +907,7 @@ impl FromJson for StatusReply {
             },
             perf,
             jobs,
+            alerts,
         })
     }
 }
@@ -976,6 +1022,13 @@ mod tests {
                 rejected_depth: 1,
                 retries: 1,
             },
+            alerts: vec![AlertStatus {
+                rule: "job-queue-pressure".into(),
+                describe: "queue near capacity".into(),
+                active: true,
+                since_ms: 17,
+                value: 51.0,
+            }],
         };
         let q = StatusReply::from_json(&parse(&r.to_json()).unwrap()).unwrap();
         assert_eq!(q, r);
@@ -998,6 +1051,8 @@ mod tests {
         assert_eq!(q.perf, PerfCounters::default());
         // Pre-jobs servers omit the "jobs" object entirely.
         assert_eq!(q.jobs, JobsCounters::default());
+        // Pre-alert-engine servers omit the "alerts" array entirely.
+        assert!(q.alerts.is_empty());
     }
 
     #[test]

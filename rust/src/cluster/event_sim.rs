@@ -140,6 +140,94 @@ pub struct SimResult {
     pub link_wait_seconds: f64,
     /// Simulator events processed (tasks + transfers).
     pub events: u64,
+    /// Per-event timeline — populated only by
+    /// [`simulate_events_recorded`]; the default path stays
+    /// allocation-free and leaves this `None`.
+    pub timeline: Option<Vec<TimelineEvent>>,
+}
+
+/// One recorded simulator event (timeline mode only): a compute task on
+/// a rank or a boundary transfer on a directed rank link, each with its
+/// idle/contention attribution so a trace viewer shows not just *what*
+/// ran but *why* it started late.
+#[derive(Debug, Clone)]
+pub enum TimelineEvent {
+    /// A forward or backward microbatch on one rank.
+    Task {
+        rank: usize,
+        stage: usize,
+        mb: usize,
+        /// `'F'` or `'B'`.
+        pass: char,
+        start_s: f64,
+        dur_s: f64,
+        /// Seconds the rank sat idle waiting for this task's cross-rank
+        /// input after going free — the per-event pipeline-bubble
+        /// attribution (sums to the schedule's bubble, minus ramp-down).
+        bubble_s: f64,
+    },
+    /// A boundary activation/gradient transfer between two ranks.
+    Transfer {
+        from: usize,
+        to: usize,
+        bytes: u64,
+        start_s: f64,
+        dur_s: f64,
+        /// Seconds queued behind earlier traffic on the same directed
+        /// link — the per-event contention attribution (sums to
+        /// [`SimResult::link_wait_seconds`]).
+        wait_s: f64,
+    },
+}
+
+/// Render a recorded timeline as a Chrome-trace JSON array (the same
+/// `ph:"X"` / `cat:"wham"` document shape as the span tracer's
+/// `--trace-out`, loadable in `chrome://tracing` / Perfetto). Compute
+/// tasks land on the `tid` of their rank; transfers on the sender's
+/// rank with the route in `name` and `args`.
+pub fn chrome_trace_json(timeline: &[TimelineEvent]) -> String {
+    let us = |s: f64| (s * 1e6).round().max(0.0) as u64;
+    let rows: Vec<String> = timeline
+        .iter()
+        .map(|e| match e {
+            TimelineEvent::Task { rank, stage, mb, pass, start_s, dur_s, bubble_s } => {
+                let args = crate::util::json::Obj::new()
+                    .u64("stage", *stage as u64)
+                    .u64("mb", *mb as u64)
+                    .f64("bubble_ms", bubble_s * 1e3)
+                    .finish();
+                crate::util::json::Obj::new()
+                    .str("name", &format!("{pass} s{stage} mb{mb}"))
+                    .str("ph", "X")
+                    .str("cat", "wham")
+                    .u64("ts", us(*start_s))
+                    .u64("dur", us(*dur_s))
+                    .u64("pid", 0)
+                    .u64("tid", *rank as u64)
+                    .raw("args", &args)
+                    .finish()
+            }
+            TimelineEvent::Transfer { from, to, bytes, start_s, dur_s, wait_s } => {
+                let args = crate::util::json::Obj::new()
+                    .u64("from", *from as u64)
+                    .u64("to", *to as u64)
+                    .u64("bytes", *bytes)
+                    .f64("link_wait_ms", wait_s * 1e3)
+                    .finish();
+                crate::util::json::Obj::new()
+                    .str("name", &format!("xfer r{from}→r{to}"))
+                    .str("ph", "X")
+                    .str("cat", "wham")
+                    .u64("ts", us(*start_s))
+                    .u64("dur", us(*dur_s))
+                    .u64("pid", 0)
+                    .u64("tid", *from as u64)
+                    .raw("args", &args)
+                    .finish()
+            }
+        })
+        .collect();
+    format!("[{}]", rows.join(",\n"))
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -254,6 +342,32 @@ pub fn simulate_events(
     topo: &Topology,
     placement: &Placement,
 ) -> Result<SimResult, String> {
+    simulate_events_impl(part, times, schedule, topo, placement, false)
+}
+
+/// [`simulate_events`] with per-event recording: identical result
+/// numbers, plus [`SimResult::timeline`] holding every task and
+/// transfer with bubble/contention attribution. Costs one `Vec` push
+/// per event — use for export (`wham cluster --timeline-out`), not in
+/// the sweep's screening loop.
+pub fn simulate_events_recorded(
+    part: &PartitionedModel,
+    times: &[StageTimes],
+    schedule: SimSchedule,
+    topo: &Topology,
+    placement: &Placement,
+) -> Result<SimResult, String> {
+    simulate_events_impl(part, times, schedule, topo, placement, true)
+}
+
+fn simulate_events_impl(
+    part: &PartitionedModel,
+    times: &[StageTimes],
+    schedule: SimSchedule,
+    topo: &Topology,
+    placement: &Placement,
+    record: bool,
+) -> Result<SimResult, String> {
     let s = part.stages.len();
     let m = part.num_micro as usize;
     let _timer = SIM_STEP_SECONDS.start_timer();
@@ -321,6 +435,7 @@ pub fn simulate_events(
     let mut stash_events: Vec<(f64, usize, i64)> = Vec::with_capacity(n_tasks);
     let mut idx = vec![0usize; ranks];
     let mut remaining: usize = orders.iter().map(Vec::len).sum();
+    let mut timeline: Vec<TimelineEvent> = Vec::new();
 
     // One routed transfer: serialize on the directed (from, to) rank
     // link, return the arrival time at the consumer.
@@ -328,7 +443,8 @@ pub fn simulate_events(
                         to: usize,
                         ready: f64,
                         bytes: u64,
-                        link_free: &mut HashMap<(usize, usize), f64>|
+                        link_free: &mut HashMap<(usize, usize), f64>,
+                        timeline: &mut Vec<TimelineEvent>|
      -> f64 {
         let free = link_free.entry((from, to)).or_insert(0.0);
         let start = ready.max(*free);
@@ -336,6 +452,16 @@ pub fn simulate_events(
         *free = start + dur;
         comm_seconds += dur;
         link_wait += start - ready;
+        if record {
+            timeline.push(TimelineEvent::Transfer {
+                from,
+                to,
+                bytes,
+                start_s: start,
+                dur_s: dur,
+                wait_s: start - ready,
+            });
+        }
         start + dur
     };
 
@@ -354,6 +480,20 @@ pub fn simulate_events(
                 };
                 let start = rank_free[r].max(arrive[id]);
                 let end = start + dur;
+                if record {
+                    timeline.push(TimelineEvent::Task {
+                        rank: r,
+                        stage: t.stage,
+                        mb: t.mb,
+                        pass: match t.pass {
+                            P::F => 'F',
+                            P::B => 'B',
+                        },
+                        start_s: start,
+                        dur_s: dur,
+                        bubble_s: start - rank_free[r],
+                    });
+                }
                 done[id] = end;
                 rank_free[r] = end;
                 busy[r] += dur;
@@ -374,6 +514,7 @@ pub fn simulate_events(
                                     end,
                                     part.stages[t.stage].boundary_bytes,
                                     &mut link_free,
+                                    &mut timeline,
                                 )
                             };
                             arrived[to] = true;
@@ -400,6 +541,7 @@ pub fn simulate_events(
                                     end,
                                     part.stages[t.stage - 1].boundary_bytes,
                                     &mut link_free,
+                                    &mut timeline,
                                 )
                             };
                             arrived[to] = true;
@@ -439,6 +581,18 @@ pub fn simulate_events(
         comm_seconds,
         link_wait_seconds: link_wait,
         events,
+        timeline: record.then(|| {
+            // Chronological order: interleaved rank loops append tasks
+            // out of global time order.
+            timeline.sort_by(|a, b| {
+                let t = |e: &TimelineEvent| match e {
+                    TimelineEvent::Task { start_s, .. } => *start_s,
+                    TimelineEvent::Transfer { start_s, .. } => *start_s,
+                };
+                t(a).total_cmp(&t(b))
+            });
+            timeline
+        }),
     })
 }
 
@@ -544,6 +698,58 @@ mod tests {
         let sim = simulate_events(&part, &times, SimSchedule::OneF1B, &topo, &placement).unwrap();
         let rel = (sim.iter_seconds - closed.iter_seconds).abs() / closed.iter_seconds;
         assert!(rel < 0.01, "event {} vs closed {}", sim.iter_seconds, closed.iter_seconds);
+    }
+
+    #[test]
+    fn recorded_mode_matches_default_and_attributes_waits() {
+        let part = mini_part(4);
+        let times = mini_times(&part);
+        let topo = Topology::flat(&Network::default(), 4);
+        let placement = Placement::linear(&topo, 4, 1).unwrap();
+        let plain =
+            simulate_events(&part, &times, SimSchedule::OneF1B, &topo, &placement).unwrap();
+        let rec = simulate_events_recorded(&part, &times, SimSchedule::OneF1B, &topo, &placement)
+            .unwrap();
+        // Identical numbers; only the timeline differs.
+        assert!(plain.timeline.is_none(), "default path must not allocate a timeline");
+        assert_eq!(plain.iter_seconds, rec.iter_seconds);
+        assert_eq!(plain.events, rec.events);
+        let tl = rec.timeline.as_ref().expect("recorded mode must keep the timeline");
+        assert_eq!(tl.len() as u64, rec.events, "one timeline entry per simulated event");
+        // Chronological, and per-event contention sums to the total.
+        let mut prev = 0.0f64;
+        let mut wait_sum = 0.0f64;
+        let mut task_count = 0usize;
+        for e in tl {
+            let start = match e {
+                TimelineEvent::Task { start_s, bubble_s, .. } => {
+                    assert!(*bubble_s >= 0.0);
+                    task_count += 1;
+                    *start_s
+                }
+                TimelineEvent::Transfer { start_s, wait_s, dur_s, .. } => {
+                    assert!(*wait_s >= 0.0 && *dur_s > 0.0);
+                    wait_sum += wait_s;
+                    *start_s
+                }
+            };
+            assert!(start >= prev, "timeline must be sorted by start time");
+            prev = start;
+        }
+        assert_eq!(task_count, 2 * part.stages.len() * part.num_micro as usize);
+        assert!((wait_sum - rec.link_wait_seconds).abs() < 1e-9);
+        // The Chrome-trace rendering is a parsable array in the span
+        // tracer's document shape.
+        let doc = crate::util::json::parse(&chrome_trace_json(tl)).unwrap();
+        let events = doc.as_arr().unwrap();
+        assert_eq!(events.len(), tl.len());
+        for e in events {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+            assert_eq!(e.get("cat").unwrap().as_str(), Some("wham"));
+            assert!(e.get("ts").unwrap().as_u64().is_some());
+            assert!(e.get("dur").unwrap().as_u64().is_some());
+            assert!(e.get("tid").unwrap().as_u64().is_some());
+        }
     }
 
     #[test]

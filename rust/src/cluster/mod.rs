@@ -34,6 +34,9 @@ pub mod event_sim;
 pub mod strategy;
 pub mod topology;
 
-pub use event_sim::{events_total, simulate_events, Placement, SimResult, SimSchedule};
-pub use strategy::{sweep, StrategyPoint, StrategyReport, SweepOptions};
+pub use event_sim::{
+    chrome_trace_json, events_total, simulate_events, simulate_events_recorded, Placement,
+    SimResult, SimSchedule, TimelineEvent,
+};
+pub use strategy::{strategy_timeline, sweep, StrategyPoint, StrategyReport, SweepOptions};
 pub use topology::{AllReduceAlgo, Link, PathCost, Topology};

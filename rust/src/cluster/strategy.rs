@@ -19,7 +19,10 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use super::event_sim::{rank_footprint_bytes, simulate_events, Placement, SimSchedule};
+use super::event_sim::{
+    rank_footprint_bytes, simulate_events, simulate_events_recorded, Placement, SimResult,
+    SimSchedule,
+};
 use super::topology::{AllReduceAlgo, Topology};
 use crate::api::progress::{Progress, ProgressSink};
 use crate::arch::{presets, ArchConfig, HBM_BYTES};
@@ -319,6 +322,45 @@ fn evaluate_candidate(
         fits_hbm: fits,
         score,
     })
+}
+
+/// Re-simulate one already-ranked strategy in recorded mode and return
+/// the result with its per-event timeline (`wham cluster
+/// --timeline-out`). Reconstructs exactly what the sweep's screening
+/// pass built for the same `(pp, tp, chunks, schedule, config)` —
+/// partition, placement, TMP all-reduce — so the exported timeline's
+/// numbers match the ranked row's pipeline simulation.
+#[allow(clippy::too_many_arguments)]
+pub fn strategy_timeline(
+    name: &str,
+    cfg: &TransformerCfg,
+    topology: &str,
+    devices: u64,
+    pp: u64,
+    tp: u64,
+    chunks: u64,
+    schedule: &str,
+    config: &ArchConfig,
+    backend: &mut dyn CostBackend,
+) -> Result<SimResult, String> {
+    let schedule = match schedule {
+        "gpipe" => SimSchedule::GPipe,
+        "1f1b" => SimSchedule::OneF1B,
+        "interleaved" => SimSchedule::Interleaved1F1B { devices: pp },
+        other => {
+            return Err(format!(
+                "unknown schedule {other:?} (expected one of: gpipe, 1f1b, interleaved)"
+            ))
+        }
+    };
+    let topo = Topology::preset(topology, devices as usize)?;
+    let depth = pp * chunks.max(1);
+    let part = partition_transformer(name, cfg, depth, tp, Optimizer::Adam);
+    let placement = Placement::linear(&topo, pp, tp)?;
+    let mut times_cache: TimesCache = HashMap::new();
+    let base = base_times(&part, config, &mut times_cache, backend).to_vec();
+    let times = with_tmp_allreduce(&part, &base, &topo, &placement, pp);
+    simulate_events_recorded(&part, &times, schedule, &topo, &placement)
 }
 
 /// Run the auto-sweep: enumerate, screen with the event simulator on

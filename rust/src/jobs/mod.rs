@@ -327,6 +327,12 @@ impl JobManager {
         self.queue.lock().unwrap().len()
     }
 
+    /// Configured queue capacity (the admission bound; alert rules key
+    /// queue-pressure thresholds off it).
+    pub fn queue_capacity(&self) -> usize {
+        self.opts.queue_depth
+    }
+
     /// Admit a validated job: quota, then queue depth, then WAL + queue.
     pub fn submit(&self, plan: &JobPlan) -> Result<JobRecord, SubmitError> {
         if !self.accepting.load(Ordering::SeqCst) {

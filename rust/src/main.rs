@@ -44,6 +44,7 @@ const VALUE_KEYS: &[&str] = &[
     "db", "addr", "deadline-ms", "workload-dir", "devices", "topology", "schedules", "mine",
     "chunks", "trace-out", "client", "type", "jobs-db", "drain-secs", "job-workers",
     "queue-depth", "quota-rate", "quota-burst", "hz", "top", "log-level", "log-out",
+    "timeline-out", "interval", "count", "window",
 ];
 
 fn main() -> Result<()> {
@@ -104,6 +105,7 @@ fn main() -> Result<()> {
         Some("partition") => cmd_partition(&args),
         Some("space") => cmd_space(&args),
         Some("serve") => cmd_serve(&args),
+        Some("top") => cmd_top(&args),
         Some("client") => cmd_client(&args),
         Some("jobs") => cmd_jobs(&args, 1),
         Some("db") => cmd_db(&args, 1),
@@ -133,7 +135,8 @@ fn print_usage() {
          [--progress] [--trace-out spans.json]\n  \
          wham cluster --model <llm> [--devices 8] [--topology flat|ring|fat-tree|nvlink-island]\n              \
          [--schedules gpipe,1f1b,interleaved] [--mine 2] [--chunks 2]\n              \
-         [--metric ...] [--jobs N] [--deadline-ms N] [--progress] [--trace-out spans.json]\n  \
+         [--metric ...] [--jobs N] [--deadline-ms N] [--progress] [--trace-out spans.json]\n              \
+         [--timeline-out timeline.json] — per-rank pipeline timeline (Chrome trace)\n  \
          wham baseline --model <name> --framework confuciux|spotlight|tpuv2|nvdla\n              \
          [--iterations 500]\n  \
          wham trace --model <name> [--out trace.json] [--tc 2 --vc 2 --dims 128x128x128]\n  \
@@ -145,6 +148,8 @@ fn print_usage() {
          wham serve [--port 8484] [--workers <cores>] [--db designs.jsonl] [--backend auto]\n              \
          [--jobs-db jobs.jsonl] [--job-workers 2] [--queue-depth 64]\n              \
          [--quota-rate 1.0] [--quota-burst 32] [--drain-secs 20] [--trace-out spans.json]\n  \
+         wham top [--addr 127.0.0.1:8484] [--interval 2] [--count N] [--window 120]\n              \
+         — live terminal ops view of a running server (rates, queue, alerts)\n  \
          wham client <models|search|evaluate|common|global|cluster|status|upload|jobs|db>\n              \
          [--addr 127.0.0.1:8484] ...\n  \
          wham jobs submit [--type search|common|global|cluster] [--client NAME] --model <name> ...\n  \
@@ -427,6 +432,7 @@ fn cmd_global(args: &Args) -> Result<()> {
 /// them with the discrete-event simulator, mine hardware for the best.
 fn cmd_cluster(args: &Args) -> Result<()> {
     let trace_out = trace_out_from_args(args);
+    let timeline_out = args.get("timeline-out").map(str::to_string);
     let req = ClusterRequest::from_args(args)?;
     let plan = req.validate()?;
     let mut session = session_from_args(args)?;
@@ -440,6 +446,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         if args.flag("progress") { &mut progress } else { &mut null };
     let r = session.run_cluster(&plan, sink)?;
     flush_trace(&trace_out)?;
+    if let Some(path) = &timeline_out {
+        write_cluster_timeline(args, &plan, &r, path)?;
+    }
     println!(
         "{} strategies screened, {} mined, wall={:.0}ms{}",
         r.candidates,
@@ -482,6 +491,47 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         r.ranked.first().map(|p| p.throughput / b.throughput.max(1e-12)).unwrap_or(1.0),
     );
     println!("(* = config mined by the global hardware search)");
+    Ok(())
+}
+
+/// `--timeline-out FILE`: re-simulate the sweep's winning strategy in
+/// recorded mode and write the per-rank task/transfer timeline as a
+/// Chrome-trace document (`ui.perfetto.dev` renders one track per
+/// rank; each event's args carry the bubble / link-wait attribution).
+fn write_cluster_timeline(
+    args: &Args,
+    plan: &wham::api::plan::ClusterPlan,
+    r: &wham::api::ClusterReply,
+    path: &str,
+) -> Result<()> {
+    let Some(best) = r.ranked.first() else {
+        eprintln!("--timeline-out: no ranked strategies to record; skipping");
+        return Ok(());
+    };
+    let mut backend = make_backend(backend_from_args(args)?)?;
+    let sim = wham::cluster::strategy_timeline(
+        &plan.model,
+        &plan.cfg,
+        &plan.topology,
+        plan.devices,
+        best.pp,
+        best.tp,
+        best.chunks,
+        &best.schedule,
+        &best.config,
+        backend.as_mut(),
+    )
+    .map_err(|e| anyhow!("--timeline-out: {e}"))?;
+    let timeline = sim.timeline.as_deref().unwrap_or(&[]);
+    let doc = wham::cluster::chrome_trace_json(timeline);
+    std::fs::write(path, doc)?;
+    eprintln!(
+        "wrote {} timeline event(s) for pp={} tp={} {} to {path} — open in ui.perfetto.dev",
+        timeline.len(),
+        best.pp,
+        best.tp,
+        best.schedule,
+    );
     Ok(())
 }
 
@@ -772,8 +822,122 @@ fn cmd_serve(args: &Args) -> Result<()> {
         jobs,
         drain_secs,
         trace_out,
+        tsdb: Default::default(),
     };
     wham::service::serve_forever(&format!("127.0.0.1:{port}"), opts)
+}
+
+/// `wham top` — a `top(1)`-style terminal view of a running `wham
+/// serve`: polls `/status` and `/metrics/history` and redraws rates,
+/// queue depth, and active alerts in place. `--count N` bounds the
+/// number of refreshes (for scripts/tests); default runs until ^C.
+fn cmd_top(args: &Args) -> Result<()> {
+    let addr = addr_from_args(args)?;
+    let interval: u64 = args.get_as_or("interval", 2).map_err(|e| anyhow!("{e}"))?;
+    let count: u64 = args.get_as_or("count", 0).map_err(|e| anyhow!("{e}"))?;
+    let window: u64 = args.get_as_or("window", 120).map_err(|e| anyhow!("{e}"))?;
+    let fail =
+        |e: std::io::Error| anyhow!("request to {addr} failed: {e} (is `wham serve` running?)");
+    // Rate series worth a sparkline-style last/avg pair, in render order.
+    const RATES: &[(&str, &str)] = &[
+        ("wham_scheduler_evals_total", "evals/s"),
+        ("wham_cluster_sim_events_total", "sim events/s"),
+        ("wham_http_requests_total", "http req/s"),
+        ("wham_jobs_retries_total", "job retries/s"),
+    ];
+    let mut iteration = 0u64;
+    loop {
+        let (st, status_body) =
+            wham::service::http::request(addr, "GET", "/status", None).map_err(fail)?;
+        if st != 200 {
+            bail!("GET /status returned HTTP {st}");
+        }
+        let hist_path = format!("/metrics/history?window={window}");
+        let (hs, hist_body) =
+            wham::service::http::request(addr, "GET", &hist_path, None).map_err(fail)?;
+        if hs != 200 {
+            bail!("GET /metrics/history returned HTTP {hs}");
+        }
+        let status = wham::util::json::parse(&status_body).map_err(|e| anyhow!("{e}"))?;
+        let hist = wham::util::json::parse(&hist_body).map_err(|e| anyhow!("{e}"))?;
+        // One-screen redraw: home the cursor and clear below instead of
+        // scrolling, so the view updates in place like top(1).
+        if iteration > 0 {
+            print!("\x1b[H\x1b[J");
+        }
+        let j = |keys: &[&str]| {
+            let mut v = Some(&status);
+            for k in keys {
+                v = v.and_then(|v| v.get(k));
+            }
+            v
+        };
+        let num = |keys: &[&str]| j(keys).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!(
+            "wham top — {addr}  (refresh {interval}s, window {window}s, ^C to quit)\n\
+             uptime {:.0}s  requests {}  designs {}  db hit-rate {:.0}%  jobs queued {} running {} retries {}",
+            num(&["uptime_ms"]) / 1000.0,
+            num(&["requests"]) as u64,
+            num(&["db", "entries"]) as u64,
+            num(&["perf", "db_hit_rate"]) * 100.0,
+            num(&["jobs", "queued"]) as u64,
+            num(&["jobs", "running"]) as u64,
+            num(&["jobs", "retries"]) as u64,
+        );
+        // Rates from the history: mean of the windowed per-second series
+        // plus the most recent point, per metric.
+        println!("\n  {:<24} {:>10} {:>10}", "metric", "now", "avg");
+        let series = hist.get("series").and_then(|s| s.as_arr());
+        for (name, label) in RATES {
+            let mut last = 0.0f64;
+            let mut sum = 0.0f64;
+            let mut n = 0usize;
+            if let Some(rows) = &series {
+                for row in rows.iter() {
+                    let matches = row
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .is_some_and(|s| s == *name || s.starts_with(&format!("{name}{{")));
+                    if !matches {
+                        continue;
+                    }
+                    if let Some(pts) = row.get("points").and_then(|p| p.as_arr()) {
+                        for p in pts.iter() {
+                            if let Some(pair) = p.as_arr() {
+                                if let Some(v) = pair.get(1).and_then(|v| v.as_f64()) {
+                                    sum += v;
+                                    n += 1;
+                                    last = v;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            let avg = if n > 0 { sum / n as f64 } else { 0.0 };
+            println!("  {label:<24} {last:>10.2} {avg:>10.2}");
+        }
+        // Alerts straight from /status (the engine's snapshot).
+        println!();
+        match j(&["alerts"]).and_then(|a| a.as_arr()) {
+            Some(alerts) if !alerts.is_empty() => {
+                for a in alerts {
+                    let rule = a.get("rule").and_then(|v| v.as_str()).unwrap_or("?");
+                    let active =
+                        a.get("active").and_then(|v| v.as_bool()).unwrap_or(false);
+                    let value = a.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    let mark = if active { "\x1b[31mFIRING\x1b[0m" } else { "ok    " };
+                    println!("  alert {mark} {rule:<24} value={value:.2}");
+                }
+            }
+            _ => println!("  (no alert rules reported)"),
+        }
+        iteration += 1;
+        if count > 0 && iteration >= count {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs(interval.max(1)));
+    }
 }
 
 /// `--addr HOST:PORT` (default the `wham serve` default).

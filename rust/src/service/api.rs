@@ -48,7 +48,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::api::reply::{
-    CoalescerCounters, DbCounters, EndpointStat, JobsCounters, PerfCounters, SearchCounters,
+    AlertStatus, CoalescerCounters, DbCounters, EndpointStat, JobsCounters, PerfCounters,
+    SearchCounters,
 };
 use crate::api::{
     ApiError, ClusterRequest, CommonRequest, DbImportReply, EvaluateRequest, FromJson,
@@ -62,6 +63,7 @@ use crate::service::cache::DesignDb;
 use crate::service::http::{Handler, Request, Response};
 use crate::service::queue::Coalescer;
 use crate::telemetry::log::{self, CorrScope};
+use crate::telemetry::tsdb::{AlertEngine, AlertExpr, AlertRule, Tsdb, TsdbOptions};
 use crate::telemetry::{Collect, Sample};
 
 /// Mint a process-unique request correlation id (`r-<salt>-<seq>`); the
@@ -148,8 +150,67 @@ pub struct ServiceState {
     pub warm_searches: AtomicU64,
     /// Scheduler invocations across all leader computations.
     pub scheduler_evals_total: AtomicU64,
+    /// Responses answered with a 5xx status (alert-rule input).
+    pub responses_5xx: AtomicU64,
     /// Per-endpoint latency windows (perf observability — `/status`).
     pub latency: Vec<LatencyRing>,
+    /// Bounded metrics history behind `/metrics/history` + `/dashboard`.
+    pub tsdb: Arc<Tsdb>,
+    /// The alert engine (evaluated by the scraper thread).
+    pub alerts: Arc<AlertEngine>,
+}
+
+/// The default alert rules of one service instance. Thresholds are
+/// deliberately conservative — a firing rule should always be worth an
+/// operator's glance.
+fn default_alert_rules(queue_capacity: usize) -> Vec<AlertRule> {
+    vec![
+        AlertRule {
+            name: "job-queue-pressure".into(),
+            describe: format!(
+                "job queue depth at ≥80% of its {queue_capacity}-slot capacity"
+            ),
+            expr: AlertExpr::GaugeAbove {
+                series: "wham_jobs_queue_depth".into(),
+                threshold: (queue_capacity as f64 * 0.8) - 0.5,
+            },
+            fire_after: 2,
+            resolve_after: 2,
+        },
+        AlertRule {
+            name: "http-5xx".into(),
+            describe: "sustained 5xx responses (>0.2/s)".into(),
+            expr: AlertExpr::RateAbove {
+                series: "wham_http_responses_5xx_total".into(),
+                per_sec: 0.2,
+            },
+            fire_after: 2,
+            resolve_after: 3,
+        },
+        AlertRule {
+            name: "scheduler-evals-stall".into(),
+            describe: "scheduler evals/sec near zero while a search is in flight".into(),
+            expr: AlertExpr::RateBelowWhile {
+                series: "wham_scheduler_evals_total".into(),
+                per_sec: 1.0,
+                gate: "wham_coalescer_in_flight".into(),
+                gate_above: 0.0,
+            },
+            fire_after: 5,
+            resolve_after: 2,
+        },
+        AlertRule {
+            name: "jobs-wal-growth".into(),
+            describe: "jobs WAL growing faster than 1 MiB/s (checkpointing falling behind)"
+                .into(),
+            expr: AlertExpr::RateAbove {
+                series: "wham_jobs_wal_bytes".into(),
+                per_sec: 1024.0 * 1024.0,
+            },
+            fire_after: 3,
+            resolve_after: 3,
+        },
+    ]
 }
 
 impl ServiceState {
@@ -158,7 +219,9 @@ impl ServiceState {
         backend_choice: BackendChoice,
         workers: usize,
         jobs: Arc<JobManager>,
+        tsdb_opts: TsdbOptions,
     ) -> Self {
+        let alerts = Arc::new(AlertEngine::new(default_alert_rules(jobs.queue_capacity())));
         Self {
             db,
             jobs,
@@ -171,13 +234,17 @@ impl ServiceState {
             cold_searches: AtomicU64::new(0),
             warm_searches: AtomicU64::new(0),
             scheduler_evals_total: AtomicU64::new(0),
+            responses_5xx: AtomicU64::new(0),
             latency: [
                 "/models", "/status", "/search", "/evaluate", "/common", "/global", "/cluster",
-                "/workloads", "/metrics", "/jobs", "/db", "/profile",
+                "/workloads", "/metrics", "/jobs", "/db", "/profile", "/dashboard",
+                "/metrics/history",
             ]
             .into_iter()
             .map(LatencyRing::new)
             .collect(),
+            tsdb: Arc::new(Tsdb::new(tsdb_opts)),
+            alerts,
         }
     }
 
@@ -207,9 +274,22 @@ impl ServiceState {
             rejected_depth: js.rejected_depth,
             retries: js.retries,
         };
+        let alerts = self
+            .alerts
+            .snapshot()
+            .into_iter()
+            .map(|a| AlertStatus {
+                rule: a.rule,
+                describe: a.describe,
+                active: a.active,
+                since_ms: a.since_ms,
+                value: a.value,
+            })
+            .collect();
         StatusReply {
             perf,
             jobs,
+            alerts,
             uptime_ms: self.started.elapsed().as_millis() as u64,
             workers: self.workers as u64,
             requests: self.requests.load(Ordering::Relaxed),
@@ -422,6 +502,41 @@ impl Collect for ServiceState {
             labels: vec![],
             value: shed as f64,
         });
+        out.push(Sample::Counter {
+            name: "wham_http_responses_5xx_total".into(),
+            help: "Responses answered with a 5xx status by this instance.".into(),
+            labels: vec![],
+            value: n(&self.responses_5xx),
+        });
+        // Jobs WAL size on disk (0 for in-memory stores) — the
+        // `jobs-wal-growth` alert rule differentiates this gauge.
+        let wal_bytes = self
+            .jobs
+            .store()
+            .path()
+            .and_then(|p| std::fs::metadata(p).ok())
+            .map_or(0, |m| m.len());
+        out.push(Sample::Gauge {
+            name: "wham_jobs_wal_bytes".into(),
+            help: "Jobs write-ahead log size on disk (0 for in-memory stores).".into(),
+            labels: vec![],
+            value: wal_bytes as f64,
+        });
+        out.push(Sample::Gauge {
+            name: "wham_profiler_attached".into(),
+            help: "Whether a span profiler session is currently attached (0/1).".into(),
+            labels: vec![],
+            value: f64::from(u8::from(crate::telemetry::profile::is_attached())),
+        });
+        for a in self.alerts.snapshot() {
+            out.push(Sample::Gauge {
+                name: "wham_alert_active".into(),
+                help: "Whether the named alert rule is currently firing (0/1).".into(),
+                labels: label("rule", &a.rule),
+                value: f64::from(u8::from(a.active)),
+            });
+        }
+        crate::telemetry::process::ProcessMetrics.collect(out);
     }
 }
 
@@ -464,6 +579,9 @@ impl Handler for Api {
             ("GET", "/models") => Response::json(session.models().to_json()),
             ("GET", "/status") => Response::json(s.status().to_json()),
             ("GET", "/metrics") => metrics_response(s),
+            ("GET", "/metrics/history") => history_response(s, &req.query),
+            ("GET", "/dashboard") => Response::html(dashboard_html(s)),
+            ("GET", "/alerts/events") => alerts_sse_response(Arc::clone(&s.alerts)),
             ("GET", "/profile") => profile_response(&req.query),
             ("POST", "/search") => search_response(s, session, &req.body, &mut follower),
             ("POST", "/evaluate") => api_result(
@@ -497,16 +615,20 @@ impl Handler for Api {
             }
             (
                 _,
-                "/models" | "/status" | "/metrics" | "/profile" | "/search" | "/evaluate"
-                | "/common" | "/global" | "/cluster" | "/workloads" | "/jobs" | "/db/export"
+                "/models" | "/status" | "/metrics" | "/metrics/history" | "/dashboard"
+                | "/alerts/events" | "/profile" | "/search" | "/evaluate" | "/common"
+                | "/global" | "/cluster" | "/workloads" | "/jobs" | "/db/export"
                 | "/db/import",
             ) => Response::error(405, "wrong method for this endpoint"),
             _ if req.path.starts_with("/jobs/") => job_response(s, req),
             _ => Response::error(
                 404,
-                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, POST /cluster, POST /jobs, GET /jobs, GET /db/export, POST /db/import, GET /status, GET /metrics, GET /profile",
+                "unknown endpoint; see GET /models, POST /workloads, POST /search, POST /evaluate, POST /common, POST /global, POST /cluster, POST /jobs, GET /jobs, GET /db/export, POST /db/import, GET /status, GET /metrics, GET /metrics/history, GET /dashboard, GET /alerts/events, GET /profile",
             ),
         };
+        if resp.status >= 500 {
+            s.responses_5xx.fetch_add(1, Ordering::Relaxed);
+        }
         // Latency-window recording policy (pinned by the tests below):
         // every request whose path names a known endpoint records its
         // wall, regardless of outcome — 4xx/5xx responses count because
@@ -559,6 +681,223 @@ fn metrics_response(s: &ServiceState) -> Response {
     crate::telemetry::trace::events_dropped_total();
     let collect: &dyn Collect = s;
     Response::prometheus(crate::telemetry::render_prometheus(&[collect]))
+}
+
+/// `GET /metrics/history?series=<glob>&window=<secs>` — typed JSON
+/// samples from the tsdb: counter series as windowed per-second rates,
+/// gauges verbatim. `series` defaults to `*`, `window` to the span the
+/// fine tier covers.
+fn history_response(s: &ServiceState, query: &str) -> Response {
+    let opts = s.tsdb.options();
+    let fine_span =
+        (opts.fine_every.as_secs_f64() * opts.fine_cap as f64).ceil() as u64;
+    let mut pattern = "*".to_string();
+    let mut window = fine_span;
+    for pair in query.split('&') {
+        let Some((k, v)) = pair.split_once('=') else { continue };
+        match k {
+            "series" => pattern = v.to_string(),
+            "window" => match v.parse::<u64>() {
+                Ok(n) if n >= 1 => window = n,
+                _ => return Response::error(400, "window must be a positive integer (seconds)"),
+            },
+            _ => {}
+        }
+    }
+    Response::json(s.tsdb.history_json(&pattern, window, crate::telemetry::tsdb::epoch_ms()))
+}
+
+/// Inline SVG sparkline over `(t_ms, v)` points — the dashboard's only
+/// graphic, so the page stays a single self-contained document.
+fn spark_svg(points: &[(u64, f64)]) -> String {
+    const W: f64 = 260.0;
+    const H: f64 = 44.0;
+    if points.len() < 2 {
+        return format!(
+            "<svg class=\"spark\" viewBox=\"0 0 {W} {H}\" width=\"{W}\" height=\"{H}\"><text x=\"4\" y=\"26\" class=\"dim\">collecting…</text></svg>"
+        );
+    }
+    let (t0, t1) = (points[0].0 as f64, points[points.len() - 1].0 as f64);
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(_, v) in points {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span_t = (t1 - t0).max(1.0);
+    let span_v = (hi - lo).max(1e-9);
+    let pts: Vec<String> = points
+        .iter()
+        .map(|&(t, v)| {
+            let x = (t as f64 - t0) / span_t * (W - 4.0) + 2.0;
+            let y = H - 4.0 - (v - lo) / span_v * (H - 8.0);
+            format!("{x:.1},{y:.1}")
+        })
+        .collect();
+    format!(
+        "<svg class=\"spark\" viewBox=\"0 0 {W} {H}\" width=\"{W}\" height=\"{H}\"><polyline fill=\"none\" stroke=\"#4c9aff\" stroke-width=\"1.5\" points=\"{}\"/></svg>",
+        pts.join(" ")
+    )
+}
+
+/// Escape text interpolated into the dashboard HTML.
+fn html_esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// `GET /dashboard` — one self-contained HTML page (inline CSS + SVG,
+/// zero external assets, meta-refresh every 5 s): throughput and queue
+/// sparklines from the tsdb, per-endpoint latency quantiles, DB
+/// hit-rate, process info, and the alert table.
+fn dashboard_html(s: &ServiceState) -> String {
+    let now_ms = crate::telemetry::tsdb::epoch_ms();
+    let opts = s.tsdb.options();
+    let window = (opts.fine_every.as_secs_f64() * opts.fine_cap as f64).ceil() as u64;
+    let latest_of = |series: &str| s.tsdb.query(series, window, now_ms).into_iter().next();
+    let fmt_v = |v: f64| {
+        if v.abs() >= 100.0 {
+            format!("{v:.0}")
+        } else if v.abs() >= 1.0 {
+            format!("{v:.1}")
+        } else {
+            format!("{v:.3}")
+        }
+    };
+    let card = |title: &str, unit: &str, series: &str| {
+        let (spark, last) = match latest_of(series) {
+            Some(out) => {
+                let last = out.points.last().map(|&(_, v)| v).unwrap_or(0.0);
+                (spark_svg(&out.points), fmt_v(last))
+            }
+            None => (spark_svg(&[]), "—".to_string()),
+        };
+        format!(
+            "<div class=\"card\"><div class=\"t\">{}</div><div class=\"v\">{last}<span class=\"u\">{unit}</span></div>{spark}</div>",
+            html_esc(title)
+        )
+    };
+    let cards = [
+        card("scheduler evals", "/s", "wham_scheduler_evals_total"),
+        card("event-sim events", "/s", "wham_cluster_sim_events_total"),
+        card("http requests", "/s", "wham_http_requests_total"),
+        card("job queue depth", "", "wham_jobs_queue_depth"),
+        card("job retries", "/s", "wham_jobs_retries_total"),
+        card("db hit-rate", "", "wham_db_hit_rate"),
+    ]
+    .join("\n");
+    let mut latency_rows = String::new();
+    for stat in s.latency.iter().filter_map(LatencyRing::stat) {
+        latency_rows.push_str(&format!(
+            "<tr><td>{}</td><td class=\"n\">{}</td><td class=\"n\">{:.2}</td><td class=\"n\">{:.2}</td></tr>",
+            html_esc(&stat.endpoint),
+            stat.count,
+            stat.p50_ms,
+            stat.p95_ms
+        ));
+    }
+    let mut alert_rows = String::new();
+    let mut firing = 0usize;
+    for a in s.alerts.snapshot() {
+        if a.active {
+            firing += 1;
+        }
+        let (cls, word) = if a.active { ("firing", "FIRING") } else { ("ok", "ok") };
+        alert_rows.push_str(&format!(
+            "<tr class=\"{cls}\"><td>{}</td><td>{word}</td><td class=\"n\">{}</td><td>{}</td></tr>",
+            html_esc(&a.rule),
+            fmt_v(a.value),
+            html_esc(&a.describe)
+        ));
+    }
+    let (version, sha) = crate::telemetry::process::build_info();
+    let status = s.status();
+    let head_class = if firing > 0 { "firing" } else { "ok" };
+    let head_word =
+        if firing > 0 { format!("{firing} alert(s) firing") } else { "all clear".to_string() };
+    format!(
+        r#"<!DOCTYPE html>
+<html lang="en"><head><meta charset="utf-8">
+<meta http-equiv="refresh" content="5">
+<title>wham dashboard</title>
+<style>
+body {{ font: 13px/1.45 -apple-system, system-ui, sans-serif; background:#10141a; color:#d7dee8; margin:1.2em; }}
+h1 {{ font-size:1.1em; margin:0 0 .2em; }}
+h2 {{ font-size:.95em; margin:1.4em 0 .4em; color:#9fb0c3; }}
+.meta {{ color:#7d8b9d; }}
+.grid {{ display:flex; flex-wrap:wrap; gap:.8em; }}
+.card {{ background:#171d26; border:1px solid #232c38; border-radius:6px; padding:.6em .8em; }}
+.card .t {{ color:#9fb0c3; }}
+.card .v {{ font-size:1.5em; }}
+.card .u {{ font-size:.6em; color:#7d8b9d; margin-left:.25em; }}
+.spark {{ display:block; margin-top:.3em; }}
+.dim {{ fill:#55626f; font-size:11px; }}
+table {{ border-collapse:collapse; }}
+td, th {{ padding:.15em .7em .15em 0; text-align:left; }}
+td.n {{ text-align:right; font-variant-numeric:tabular-nums; }}
+tr.firing td {{ color:#ff6b6b; }}
+tr.ok td {{ color:#8fd19e; }}
+.badge.firing {{ color:#ff6b6b; }}
+.badge.ok {{ color:#8fd19e; }}
+</style></head><body>
+<h1>wham serve <span class="badge {head_class}">{head_word}</span></h1>
+<div class="meta">v{version} ({sha}) · uptime {uptime_s}s · {workers} worker(s) · {requests} request(s) · rss {rss_mib} MiB · {threads} thread(s) · window {window}s</div>
+<h2>throughput &amp; queues</h2>
+<div class="grid">
+{cards}
+</div>
+<h2>alerts</h2>
+<table><tr><th>rule</th><th>state</th><th>value</th><th>describe</th></tr>{alert_rows}</table>
+<h2>endpoint latency (window p50/p95 ms)</h2>
+<table><tr><th>endpoint</th><th>count</th><th>p50</th><th>p95</th></tr>{latency_rows}</table>
+<div class="meta">history: <code>GET /metrics/history?series=wham_*&amp;window={window}</code> · stream: <code>GET /alerts/events</code> · cli: <code>wham top</code></div>
+</body></html>
+"#,
+        uptime_s = status.uptime_ms / 1000,
+        workers = status.workers,
+        requests = status.requests,
+        rss_mib = crate::telemetry::process::rss_bytes() / (1024 * 1024),
+        threads = crate::telemetry::process::thread_count(),
+    )
+}
+
+/// `GET /alerts/events` — SSE stream of alert transitions (`fire` /
+/// `resolve` frames) over the same chunked plumbing as the jobs tier.
+/// Opens with a `snapshot` frame of the current rule states; the stream
+/// has no terminal frame — alerts outlive any one episode — so idle
+/// periods carry comment keepalives until the client disconnects.
+fn alerts_sse_response(alerts: Arc<AlertEngine>) -> Response {
+    Response::stream(
+        "text/event-stream",
+        Box::new(move |w| {
+            let snapshot: Vec<String> = alerts
+                .snapshot()
+                .into_iter()
+                .map(|a| {
+                    crate::util::json::Obj::new()
+                        .str("rule", &a.rule)
+                        .bool("active", a.active)
+                        .u64("since_ms", a.since_ms)
+                        .f64("value", a.value)
+                        .finish()
+                })
+                .collect();
+            w.write_all(
+                sse_frame(Some("snapshot"), &crate::util::json::arr(snapshot)).as_bytes(),
+            )?;
+            w.flush()?;
+            let mut from = alerts.frame_head();
+            loop {
+                let (frames, next) = alerts.wait(from, Duration::from_secs(10));
+                from = next;
+                for f in &frames {
+                    w.write_all(f.as_bytes())?;
+                }
+                if frames.is_empty() {
+                    w.write_all(b": keepalive\n\n")?;
+                }
+                w.flush()?;
+            }
+        }),
+    )
 }
 
 /// `GET /profile?seconds=N&hz=M` — attach the span sampler for the
@@ -804,7 +1143,13 @@ mod tests {
                 Session::with_backend(Box::new(NativeCost)).with_db(Arc::clone(&db)).with_jobs(1)
             }
         });
-        let state = Arc::new(ServiceState::new(db, BackendChoice::Native, 1, jobs));
+        let state = Arc::new(ServiceState::new(
+            db,
+            BackendChoice::Native,
+            1,
+            jobs,
+            TsdbOptions::default(),
+        ));
         let api = Api { state };
         let session = api.make_ctx();
         (api, session)
@@ -946,6 +1291,71 @@ mod tests {
         let r = api.handle(&mut s, &req("GET", &format!("/jobs/{id}/reply"), ""));
         assert_eq!(r.status, 200);
         assert!(r.body.contains("\"best\""), "{}", r.body);
+    }
+
+    /// The handler-level halves of the tentpole surface: `/dashboard`
+    /// renders self-contained HTML, `/metrics/history` serves what the
+    /// tsdb holds, `/status` + `/metrics` expose the alert rules, and
+    /// 5xx responses feed the alert counter.
+    #[test]
+    fn dashboard_history_and_alert_surfaces_respond() {
+        let (api, mut s) = api();
+        // Simulate two scraper ticks so counter series have a rate.
+        let now = crate::telemetry::tsdb::epoch_ms();
+        let collect: &dyn Collect = &*api.state;
+        api.state.tsdb.scrape(now.saturating_sub(2000), &[collect]);
+        crate::sched::evals_total(); // touch so the registry has the series
+        api.state.tsdb.scrape(now, &[collect]);
+        api.state.alerts.evaluate(&api.state.tsdb, now);
+
+        let r = api.handle(&mut s, &req("GET", "/dashboard", ""));
+        assert_eq!(r.status, 200);
+        assert!(r.content_type.starts_with("text/html"), "{}", r.content_type);
+        assert!(r.body.contains("<svg"), "dashboard must inline sparklines");
+        assert!(r.body.contains("job-queue-pressure"), "alert table missing:\n{}", r.body);
+        for external in ["http://", "https://", "<script src", "<link "] {
+            assert!(!r.body.contains(external), "external ref {external:?} in dashboard");
+        }
+        assert_eq!(ring_count(&api.state, "/dashboard"), 1);
+
+        let r = api.handle(&mut s, &req("GET", "/metrics/history", ""));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = crate::util::json::parse(&r.body).unwrap();
+        assert!(
+            !v.get("series").unwrap().as_arr().unwrap().is_empty(),
+            "history must be non-empty after two scrapes: {}",
+            r.body
+        );
+        assert_eq!(ring_count(&api.state, "/metrics/history"), 1);
+
+        // Bad window is a 400; wrong method is a 405, not a 404.
+        let mut bad = req("GET", "/metrics/history", "");
+        bad.query = "window=0".into();
+        assert_eq!(api.handle(&mut s, &bad).status, 400);
+        assert_eq!(api.handle(&mut s, &req("POST", "/dashboard", "")).status, 405);
+        assert_eq!(api.handle(&mut s, &req("POST", "/alerts/events", "")).status, 405);
+
+        // /status carries every rule; /metrics carries the 0/1 gauges
+        // and the profiler/process satellites.
+        let status = api.state.status();
+        assert_eq!(status.alerts.len(), 4, "{:?}", status.alerts);
+        assert!(status.alerts.iter().all(|a| !a.active), "{:?}", status.alerts);
+        let m = api.handle(&mut s, &req("GET", "/metrics", ""));
+        for name in [
+            "wham_alert_active{rule=\"job-queue-pressure\"}",
+            "wham_alert_active{rule=\"http-5xx\"}",
+            "wham_profiler_attached",
+            "wham_build_info{",
+            "wham_process_resident_memory_bytes",
+            "wham_http_responses_5xx_total",
+            "wham_jobs_wal_bytes",
+        ] {
+            assert!(
+                m.body.lines().any(|l| l.starts_with(name)),
+                "missing {name} in exposition:\n{}",
+                m.body
+            );
+        }
     }
 
     #[test]

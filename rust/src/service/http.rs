@@ -88,6 +88,11 @@ impl Response {
         Self::base(200, body.into(), content_type)
     }
 
+    /// 200 with an HTML body (`GET /dashboard`).
+    pub fn html(body: impl Into<String>) -> Self {
+        Self::base(200, body.into(), "text/html; charset=utf-8")
+    }
+
     /// An error with a `{"error": ...}` JSON body.
     pub fn error(status: u16, msg: &str) -> Self {
         Self::base(

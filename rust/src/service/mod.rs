@@ -31,7 +31,7 @@ pub mod queue;
 use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::api::Session;
@@ -40,6 +40,7 @@ use crate::cost::native::NativeCost;
 use crate::jobs::store::JobStore;
 use crate::jobs::{DrainSummary, JobManager, JobsOptions};
 use crate::telemetry::log;
+use crate::telemetry::tsdb::{Scraper, TsdbOptions};
 use api::{Api, ServiceState};
 use cache::DesignDb;
 
@@ -63,6 +64,10 @@ pub struct ServeOptions {
     /// Chrome-trace snapshot target; when set, span tracing is enabled
     /// and the buffer is snapshotted periodically plus once at shutdown.
     pub trace_out: Option<PathBuf>,
+    /// Metrics-history tier shape (scrape period, ring capacities) for
+    /// the tsdb behind `/metrics/history`, `/dashboard`, and the alert
+    /// engine. Tests shrink `fine_every` to drive alerts quickly.
+    pub tsdb: TsdbOptions,
 }
 
 impl Default for ServeOptions {
@@ -77,6 +82,7 @@ impl Default for ServeOptions {
             jobs: JobsOptions::default(),
             drain_secs: 20,
             trace_out: None,
+            tsdb: TsdbOptions::default(),
         }
     }
 }
@@ -89,17 +95,24 @@ pub struct ServerHandle {
     /// Set (and wake the acceptor with one connection) to stop accepting;
     /// [`ServerHandle::shutdown`] does both plus the drain.
     pub stop: Arc<AtomicBool>,
+    /// The tsdb scrape loop; stopped (with a final flush) on shutdown.
+    scraper: Mutex<Option<Scraper>>,
 }
 
 impl ServerHandle {
     /// Graceful shutdown: stop accepting HTTP connections, drain the job
-    /// tier within `drain`, checkpoint the job log, and flush the design
-    /// database. Idempotent.
+    /// tier within `drain`, run the tsdb scraper's final flush,
+    /// checkpoint the job log, and flush the design database. Idempotent.
     pub fn shutdown(&self, drain: Duration) -> DrainSummary {
         self.stop.store(true, Ordering::SeqCst);
         // The acceptor checks the flag per connection; wake it.
         let _ = std::net::TcpStream::connect(self.addr);
         let summary = self.state.jobs.drain(drain);
+        // Stop the scraper after the drain so the drain itself is the
+        // last thing the history records.
+        if let Some(mut s) = self.scraper.lock().unwrap().take() {
+            s.stop();
+        }
         let _ = self.state.jobs.store().checkpoint();
         self.state.db.flush();
         summary
@@ -137,15 +150,26 @@ pub fn start(listener: TcpListener, opts: ServeOptions) -> anyhow::Result<Server
         }
     });
     let addr = listener.local_addr()?;
-    let state = Arc::new(ServiceState::new(db, opts.backend, workers, jobs));
+    crate::telemetry::process::init();
+    let state =
+        Arc::new(ServiceState::new(db, opts.backend, workers, jobs, opts.tsdb.clone()));
     let stop = Arc::new(AtomicBool::new(false));
+    // The tsdb scrape loop: registry + this instance's Collect samples
+    // into the bounded history, alert rules evaluated per tick.
+    let scraper = Scraper::start(Arc::clone(&state.tsdb), Arc::clone(&state.alerts), {
+        let state = Arc::clone(&state);
+        Box::new(move |out| {
+            use crate::telemetry::Collect;
+            state.collect(out)
+        })
+    });
     http::serve_with_shutdown(
         listener,
         workers,
         Arc::new(Api { state: Arc::clone(&state) }),
         Arc::clone(&stop),
     );
-    Ok(ServerHandle { addr, state, stop })
+    Ok(ServerHandle { addr, state, stop, scraper: Mutex::new(Some(scraper)) })
 }
 
 #[cfg(unix)]
@@ -241,7 +265,7 @@ pub fn serve_forever(addr: &str, opts: ServeOptions) -> anyhow::Result<()> {
     }
     log::info(
         "serve",
-        "endpoints: GET /models  POST /search  POST /evaluate  POST /common  POST /global  POST /cluster  POST /jobs  GET /jobs[/:id[/events]]  GET /db/export  POST /db/import  GET /status  GET /metrics  GET /profile",
+        "endpoints: GET /models  POST /search  POST /evaluate  POST /common  POST /global  POST /cluster  POST /jobs  GET /jobs[/:id[/events]]  GET /db/export  POST /db/import  GET /status  GET /metrics  GET /metrics/history  GET /dashboard  GET /alerts/events  GET /profile",
         &[],
     );
     signals::install();

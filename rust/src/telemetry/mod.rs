@@ -2,7 +2,7 @@
 //! registry, leveled logs, and the search flight recorder (std-only,
 //! zero-cost when disabled).
 //!
-//! Five layers, one module:
+//! Seven layers, one module:
 //!
 //! * [`trace`] — RAII spans (`span!("mcr_probe", tc = c.tc)`) with
 //!   sampler-walkable per-thread span stacks and a bounded,
@@ -30,16 +30,26 @@
 //!   attribution of the local search (conflicted op class, cores
 //!   granted, score delta, cache hit/miss) in a bounded ring, attached
 //!   to `SearchReply.explain` and printed by `wham trace explain`.
+//! * [`tsdb`] — bounded-memory metrics *history*: a background scraper
+//!   samples the registry into two-tier ring-buffer series (counter
+//!   rates, gauges, windowed histogram quantiles) and evaluates
+//!   declarative alert rules with fire/resolve hysteresis. Serves
+//!   `GET /metrics/history`, `GET /dashboard`, `GET /alerts/events`,
+//!   and `wham top`.
+//! * [`process`] — build info (`wham_build_info`) and process gauges:
+//!   uptime, RSS from `/proc/self/statm`, thread count.
 //!
 //! Everything here *observes*; nothing feeds back into search
 //! decisions, so the bit-identical parity guarantees of the fast paths
 //! are untouched.
 
 pub mod log;
+pub mod process;
 pub mod profile;
 pub mod recorder;
 pub mod registry;
 pub mod trace;
+pub mod tsdb;
 
 pub use recorder::{ExplainRecord, FlightRecorder};
 pub use registry::{render_prometheus, snapshot_json, Collect, Counter, Histogram, Sample};

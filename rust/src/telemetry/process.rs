@@ -1,0 +1,149 @@
+//! Build info and process-level gauges for `/metrics`, the tsdb
+//! scraper, and the dashboard header.
+//!
+//! * `wham_build_info{version=...,git_sha=...} 1` — the standard
+//!   "info metric" idiom: a constant-1 gauge whose labels carry the
+//!   build identity, joinable against any other series.
+//! * `wham_process_uptime_seconds` — seconds since this module was
+//!   first touched (process start for any binary that scrapes).
+//! * `wham_process_resident_memory_bytes` — RSS from
+//!   `/proc/self/statm` (second field × page size); 0 where procfs is
+//!   unavailable so the series stays well-typed off Linux.
+//! * `wham_process_threads` — live thread count from `/proc/self/task`.
+//!
+//! All values are read at scrape time; nothing here touches hot paths.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::registry::{Collect, Sample};
+
+/// Process start, pinned on first use. `wham serve` touches this at
+/// boot so uptime measures the server, not the first scrape.
+fn started() -> Instant {
+    static STARTED: OnceLock<Instant> = OnceLock::new();
+    *STARTED.get_or_init(Instant::now)
+}
+
+/// Pin the uptime epoch now (call once at process boot).
+pub fn init() {
+    let _ = started();
+}
+
+/// Build identity baked at compile time: crate version plus the git
+/// sha when the build environment provides one (`WHAM_GIT_SHA`),
+/// "unknown" otherwise — CI sets it, plain `cargo build` need not.
+pub fn build_info() -> (&'static str, &'static str) {
+    let version = env!("CARGO_PKG_VERSION");
+    let sha = option_env!("WHAM_GIT_SHA").unwrap_or("unknown");
+    (version, sha)
+}
+
+/// Resident set size in bytes from `/proc/self/statm`, or 0 when
+/// procfs is unavailable (non-Linux, sandboxes).
+pub fn rss_bytes() -> u64 {
+    let statm = match std::fs::read_to_string("/proc/self/statm") {
+        Ok(s) => s,
+        Err(_) => return 0,
+    };
+    let pages: u64 = statm
+        .split_whitespace()
+        .nth(1)
+        .and_then(|f| f.parse().ok())
+        .unwrap_or(0);
+    pages * page_size()
+}
+
+fn page_size() -> u64 {
+    // No libc: derive from the kernel's own accounting. statm counts
+    // pages and /proc/self/status VmRSS reports kB; 4096 is correct on
+    // every target we build (x86-64/aarch64 linux default page size).
+    4096
+}
+
+/// Live thread count from `/proc/self/task`, or 0 off Linux.
+pub fn thread_count() -> u64 {
+    match std::fs::read_dir("/proc/self/task") {
+        Ok(entries) => entries.count() as u64,
+        Err(_) => 0,
+    }
+}
+
+/// The [`Collect`] source emitting all process samples; pass to
+/// `render_prometheus` extras and the tsdb scraper.
+pub struct ProcessMetrics;
+
+impl Collect for ProcessMetrics {
+    fn collect(&self, out: &mut Vec<Sample>) {
+        let (version, sha) = build_info();
+        out.push(Sample::Gauge {
+            name: "wham_build_info".into(),
+            help: "Build identity (constant 1; labels carry version and git sha)."
+                .into(),
+            labels: vec![
+                ("version".into(), version.into()),
+                ("git_sha".into(), sha.into()),
+            ],
+            value: 1.0,
+        });
+        out.push(Sample::Gauge {
+            name: "wham_process_uptime_seconds".into(),
+            help: "Seconds since process start.".into(),
+            labels: vec![],
+            value: started().elapsed().as_secs_f64(),
+        });
+        out.push(Sample::Gauge {
+            name: "wham_process_resident_memory_bytes".into(),
+            help: "Resident set size from /proc/self/statm (0 where procfs is unavailable)."
+                .into(),
+            labels: vec![],
+            value: rss_bytes() as f64,
+        });
+        out.push(Sample::Gauge {
+            name: "wham_process_threads".into(),
+            help: "Live threads from /proc/self/task (0 where procfs is unavailable)."
+                .into(),
+            labels: vec![],
+            value: thread_count() as f64,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_info_has_a_version() {
+        let (version, sha) = build_info();
+        assert!(!version.is_empty());
+        assert!(!sha.is_empty());
+    }
+
+    #[test]
+    fn process_metrics_emit_all_four_samples() {
+        let mut out = Vec::new();
+        ProcessMetrics.collect(&mut out);
+        let names: Vec<&str> = out
+            .iter()
+            .map(|s| match s {
+                Sample::Gauge { name, .. } => name.as_str(),
+                _ => "",
+            })
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                "wham_build_info",
+                "wham_process_uptime_seconds",
+                "wham_process_resident_memory_bytes",
+                "wham_process_threads"
+            ]
+        );
+        // On Linux (CI and dev boxes) procfs gives real values.
+        if std::path::Path::new("/proc/self/statm").exists() {
+            assert!(rss_bytes() > 0, "rss must be nonzero under procfs");
+            assert!(thread_count() > 0, "thread count must be nonzero under procfs");
+        }
+    }
+}

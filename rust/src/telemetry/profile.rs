@@ -34,9 +34,27 @@ static SAMPLES_TAKEN: Counter = Counter::new(
     "Stack samples taken by the span profiler since process start.",
 );
 
+/// Profile sessions successfully attached since process start.
+static SESSIONS_ATTACHED: Counter = Counter::new(
+    "wham_profile_sessions_attached_total",
+    "Profiler sessions successfully attached since process start.",
+);
+
+/// Attach attempts rejected because a sampler was already running
+/// (the `GET /profile` 409 path, previously invisible in telemetry).
+static SESSIONS_REJECTED: Counter = Counter::new(
+    "wham_profile_sessions_rejected_total",
+    "Profiler attach attempts rejected while another session was active.",
+);
+
 /// Process-wide "a sampler is attached" latch; enforces the
 /// one-at-a-time rule.
 static ATTACHED: AtomicBool = AtomicBool::new(false);
+
+/// Whether a sampler is currently attached (the profiler-state gauge).
+pub fn is_attached() -> bool {
+    ATTACHED.load(Ordering::SeqCst)
+}
 
 /// Sampling rates are clamped to this range: below 1 Hz a profile
 /// window collects nothing useful, above 1 kHz the sampler starts
@@ -180,8 +198,10 @@ pub struct Sampler {
 /// [`MIN_HZ`]..=[`MAX_HZ`]). Fails if a sampler is already attached.
 pub fn attach(hz: u32) -> Result<Sampler, &'static str> {
     if ATTACHED.swap(true, Ordering::SeqCst) {
+        SESSIONS_REJECTED.add(1);
         return Err("a profiler is already attached");
     }
+    SESSIONS_ATTACHED.add(1);
     let hz = hz.clamp(MIN_HZ, MAX_HZ);
     trace::set_sampling(true);
     let stop = Arc::new(AtomicBool::new(false));

@@ -1,0 +1,970 @@
+//! `wham::telemetry::tsdb` — bounded in-process metrics history plus
+//! the alert engine behind `GET /metrics/history`, `GET /dashboard`,
+//! and `GET /alerts/events`.
+//!
+//! A `GET /metrics` scrape is a point-in-time snapshot; an operator of
+//! a month-long `wham serve` needs *trajectories* — is scheduler
+//! evals/sec degrading, is the job queue saturating, when did the 5xx
+//! burst start. This module keeps that history in fixed memory:
+//!
+//! * [`Tsdb`] — named series in two downsampling tiers of bounded
+//!   rings (default 2 s × 512 fine + 60 s × 1440 coarse ≈ 17 minutes
+//!   of fine detail and a day of coarse trend, ~40 bytes/point).
+//!   Counters are stored as raw cumulative values and turned into
+//!   windowed per-second rates at query time (a counter reset clamps
+//!   to zero instead of spiking negative); gauges are stored as-is;
+//!   histogram quantiles (p50/p95) are derived per scrape from the
+//!   registry's log2 buckets, windowed over the deltas since the
+//!   previous scrape.
+//! * [`AlertEngine`] — declarative threshold/rate rules
+//!   ([`AlertExpr`]) evaluated once per scrape with fire/resolve
+//!   hysteresis (N consecutive breaches to fire, M consecutive clears
+//!   to resolve). Transitions emit structured-log records under an
+//!   `alert-<rule>` correlation scope, bump the
+//!   `wham_alerts_{fired,resolved}_total` counters, and append
+//!   pre-rendered SSE frames to a bounded ring that
+//!   `GET /alerts/events` relays (the jobs tier's chunked-SSE
+//!   plumbing).
+//! * [`Scraper`] — the background thread sampling the metrics registry
+//!   (plus a per-instance [`Collect`] source, e.g. the service state)
+//!   into the tsdb and ticking the engine. One final scrape runs at
+//!   shutdown so the last window is never lost.
+//!
+//! Everything here runs *off* the hot paths: the scraper reads the
+//! same relaxed atomics `GET /metrics` reads, so search and event-sim
+//! loops keep their one-relaxed-load discipline.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::log;
+use super::registry::{self, Collect, Counter, Sample};
+use crate::util::json::Obj;
+
+/// Alert transitions to the firing state since process start.
+static ALERTS_FIRED: Counter = Counter::new(
+    "wham_alerts_fired_total",
+    "Alert rule transitions to the firing state since process start.",
+);
+
+/// Alert transitions back to resolved since process start.
+static ALERTS_RESOLVED: Counter = Counter::new(
+    "wham_alerts_resolved_total",
+    "Alert rule transitions back to resolved since process start.",
+);
+
+/// Scrapes the tsdb scraper thread has completed since process start.
+static SCRAPES: Counter = Counter::new(
+    "wham_tsdb_scrapes_total",
+    "Metric-registry scrapes completed by the tsdb scraper thread.",
+);
+
+/// Milliseconds since the unix epoch (sample timestamps).
+pub fn epoch_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Tier shape of one [`Tsdb`]. Memory is `series × (fine_cap +
+/// coarse_cap) × ~40 bytes` regardless of uptime.
+#[derive(Debug, Clone)]
+pub struct TsdbOptions {
+    /// Scrape (and fine-tier) period.
+    pub fine_every: Duration,
+    /// Fine-tier ring capacity (default 512 × 2 s ≈ 17 min).
+    pub fine_cap: usize,
+    /// Coarse-tier downsample period.
+    pub coarse_every: Duration,
+    /// Coarse-tier ring capacity (default 1440 × 60 s = 24 h).
+    pub coarse_cap: usize,
+}
+
+impl Default for TsdbOptions {
+    fn default() -> Self {
+        Self {
+            fine_every: Duration::from_secs(2),
+            fine_cap: 512,
+            coarse_every: Duration::from_secs(60),
+            coarse_cap: 1440,
+        }
+    }
+}
+
+/// How a stored series is interpreted at query time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeriesKind {
+    /// Raw cumulative values; queries emit windowed per-second rates.
+    Counter,
+    /// Point-in-time values; queries emit them verbatim.
+    Gauge,
+}
+
+impl SeriesKind {
+    /// Wire name used by `/metrics/history` JSON.
+    pub fn wire(&self) -> &'static str {
+        match self {
+            SeriesKind::Counter => "counter_rate",
+            SeriesKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// A bounded `(epoch_ms, value)` ring.
+struct Ring {
+    buf: VecDeque<(u64, f64)>,
+    cap: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Self { buf: VecDeque::with_capacity(cap.min(64)), cap: cap.max(1) }
+    }
+
+    fn push(&mut self, at_ms: u64, v: f64) {
+        if self.buf.len() >= self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back((at_ms, v));
+    }
+}
+
+struct Series {
+    kind: SeriesKind,
+    fine: Ring,
+    coarse: Ring,
+    /// Timestamp of the newest coarse point (downsample gate).
+    last_coarse_ms: u64,
+}
+
+/// One queried series: name, interpretation, `(epoch_ms, value)` points
+/// oldest-first. Counter series carry per-second rates, not raw counts.
+#[derive(Debug, Clone)]
+pub struct SeriesOut {
+    pub name: String,
+    pub kind: SeriesKind,
+    pub points: Vec<(u64, f64)>,
+}
+
+/// Hard cap on distinct series (defense in depth — the metric namespace
+/// is code-controlled and far smaller; a bug cannot grow memory).
+const MAX_SERIES: usize = 4096;
+
+/// The in-process time-series store. All methods are `&self`; a single
+/// mutex guards the series map (scrapes every couple of seconds and
+/// queries on the operator path never contend with the mining hot path).
+pub struct Tsdb {
+    opts: TsdbOptions,
+    series: Mutex<BTreeMap<String, Series>>,
+    /// Previous cumulative histogram buckets per series key, for
+    /// windowed quantiles.
+    hist_last: Mutex<HashMap<String, (Vec<(f64, u64)>, u64)>>,
+}
+
+/// Render `name{k="v",...}` — the canonical series key, matching the
+/// Prometheus exposition's sample-line identity.
+fn series_key(name: &str, labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+/// `*`-wildcard glob match (the only metacharacter `/metrics/history`
+/// supports; metric names never contain `*`).
+pub fn glob_match(pat: &str, s: &str) -> bool {
+    let (pb, sb) = (pat.as_bytes(), s.as_bytes());
+    // Iterative backtracking matcher over the single `*` metachar.
+    let (mut p, mut i) = (0usize, 0usize);
+    let (mut star, mut mark) = (usize::MAX, 0usize);
+    while i < sb.len() {
+        if p < pb.len() && (pb[p] == sb[i]) {
+            p += 1;
+            i += 1;
+        } else if p < pb.len() && pb[p] == b'*' {
+            star = p;
+            mark = i;
+            p += 1;
+        } else if star != usize::MAX {
+            p = star + 1;
+            mark += 1;
+            i = mark;
+        } else {
+            return false;
+        }
+    }
+    while p < pb.len() && pb[p] == b'*' {
+        p += 1;
+    }
+    p == pb.len()
+}
+
+/// Quantile over a *cumulative* `(le, count)` bucket list with `total`
+/// observations: the upper bound of the first bucket covering rank
+/// `q·total`. Mirrors Prometheus `histogram_quantile` on log2 buckets.
+fn bucket_quantile(buckets: &[(f64, u64)], total: u64, q: f64) -> Option<f64> {
+    if total == 0 {
+        return None;
+    }
+    let target = (q * total as f64).ceil().max(1.0) as u64;
+    for &(le, cum) in buckets {
+        if cum >= target {
+            return Some(le);
+        }
+    }
+    // Only the +Inf overflow bucket covers the rank: report the largest
+    // finite bound we have (or nothing when every bucket is overflow).
+    buckets.last().map(|&(le, _)| le)
+}
+
+impl Tsdb {
+    pub fn new(opts: TsdbOptions) -> Self {
+        Self {
+            opts,
+            series: Mutex::new(BTreeMap::new()),
+            hist_last: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn options(&self) -> &TsdbOptions {
+        &self.opts
+    }
+
+    /// Store one point, creating the series on first sight. Fine tier
+    /// always; coarse tier when `coarse_every` has elapsed since its
+    /// newest point.
+    fn record(&self, key: String, kind: SeriesKind, at_ms: u64, v: f64) {
+        let mut map = self.series.lock().unwrap();
+        if !map.contains_key(&key) && map.len() >= MAX_SERIES {
+            return;
+        }
+        let opts = &self.opts;
+        let s = map.entry(key).or_insert_with(|| Series {
+            kind,
+            fine: Ring::new(opts.fine_cap),
+            coarse: Ring::new(opts.coarse_cap),
+            last_coarse_ms: 0,
+        });
+        s.fine.push(at_ms, v);
+        if at_ms.saturating_sub(s.last_coarse_ms) >= opts.coarse_every.as_millis() as u64 {
+            s.coarse.push(at_ms, v);
+            s.last_coarse_ms = at_ms;
+        }
+    }
+
+    /// Ingest one scrape's samples at `at_ms`. Counters store raw
+    /// cumulative values; gauges store the value; summaries store each
+    /// quantile as a gauge plus the count as a counter; histograms store
+    /// windowed p50/p95 gauges (quantile over the bucket deltas since
+    /// the previous scrape of the same series) plus the count.
+    pub fn ingest(&self, at_ms: u64, samples: &[Sample]) {
+        for s in samples {
+            match s {
+                Sample::Counter { name, labels, value, .. } => {
+                    self.record(series_key(name, labels), SeriesKind::Counter, at_ms, *value as f64);
+                }
+                Sample::Gauge { name, labels, value, .. } => {
+                    self.record(series_key(name, labels), SeriesKind::Gauge, at_ms, *value);
+                }
+                Sample::Summary { name, labels, quantiles, count, .. } => {
+                    for &(q, v) in quantiles {
+                        let mut ls = labels.clone();
+                        ls.push(("quantile".to_string(), format!("{q}")));
+                        self.record(series_key(name, &ls), SeriesKind::Gauge, at_ms, v);
+                    }
+                    self.record(
+                        format!("{}_count", series_key(name, labels)),
+                        SeriesKind::Counter,
+                        at_ms,
+                        *count as f64,
+                    );
+                }
+                Sample::Histogram { name, labels, buckets, count, .. } => {
+                    let key = series_key(name, labels);
+                    // Windowed distribution: per-bucket deltas vs the
+                    // previous scrape (first scrape uses the lifetime
+                    // distribution). A shrinking count is a reset —
+                    // fall back to the current lifetime buckets.
+                    let mut last = self.hist_last.lock().unwrap();
+                    let (delta, dcount) = match last.get(&key) {
+                        Some((prev, pcount)) if count >= pcount => {
+                            let prev_at = |le: f64| {
+                                prev.iter().find(|&&(l, _)| l >= le).map_or(0, |&(_, c)| c)
+                            };
+                            let d: Vec<(f64, u64)> = buckets
+                                .iter()
+                                .map(|&(le, cum)| (le, cum.saturating_sub(prev_at(le))))
+                                .collect();
+                            (d, count - pcount)
+                        }
+                        _ => (buckets.clone(), *count),
+                    };
+                    last.insert(key.clone(), (buckets.clone(), *count));
+                    drop(last);
+                    if dcount > 0 {
+                        for (q, tag) in [(0.5, "0.5"), (0.95, "0.95")] {
+                            if let Some(v) = bucket_quantile(&delta, dcount, q) {
+                                let mut ls = labels.clone();
+                                ls.push(("quantile".to_string(), tag.to_string()));
+                                self.record(
+                                    series_key(name, &ls),
+                                    SeriesKind::Gauge,
+                                    at_ms,
+                                    v,
+                                );
+                            }
+                        }
+                    }
+                    self.record(
+                        format!("{key}_count"),
+                        SeriesKind::Counter,
+                        at_ms,
+                        *count as f64,
+                    );
+                }
+            }
+        }
+    }
+
+    /// One full scrape at `at_ms`: every registered counter and
+    /// histogram plus the per-instance `extra` sources.
+    pub fn scrape(&self, at_ms: u64, extra: &[&dyn Collect]) {
+        let mut samples: Vec<Sample> = registry::counters()
+            .into_iter()
+            .map(|(name, value)| Sample::Counter {
+                name: name.to_string(),
+                help: String::new(),
+                labels: vec![],
+                value,
+            })
+            .collect();
+        samples.extend(registry::histogram_samples());
+        for src in extra {
+            src.collect(&mut samples);
+        }
+        self.ingest(at_ms, &samples);
+        SCRAPES.add(1);
+    }
+
+    /// Newest fine sample of one series.
+    pub fn latest(&self, series: &str) -> Option<(u64, f64)> {
+        let map = self.series.lock().unwrap();
+        map.get(series).and_then(|s| s.fine.buf.back().copied())
+    }
+
+    /// Per-second rate over the newest fine step of one series (counter
+    /// resets clamp to zero). `None` before two samples exist.
+    pub fn rate_latest(&self, series: &str) -> Option<f64> {
+        let map = self.series.lock().unwrap();
+        let s = map.get(series)?;
+        let n = s.fine.buf.len();
+        if n < 2 {
+            return None;
+        }
+        let (t0, v0) = s.fine.buf[n - 2];
+        let (t1, v1) = s.fine.buf[n - 1];
+        let dt = (t1.saturating_sub(t0)) as f64 / 1e3;
+        if dt <= 0.0 {
+            return None;
+        }
+        Some(((v1 - v0) / dt).max(0.0))
+    }
+
+    /// Series matching `pattern` over the trailing `window_secs`,
+    /// sorted by name. The fine tier answers windows it still covers;
+    /// longer windows fall back to the coarse tier. Counter series are
+    /// differentiated into per-second rates (one point per adjacent
+    /// sample pair, timestamped at the pair's end, negative deltas —
+    /// counter resets — clamped to zero).
+    pub fn query(&self, pattern: &str, window_secs: u64, now_ms: u64) -> Vec<SeriesOut> {
+        let fine_span_s =
+            self.opts.fine_every.as_secs_f64() * self.opts.fine_cap as f64;
+        let use_fine = (window_secs as f64) <= fine_span_s;
+        let cutoff = now_ms.saturating_sub(window_secs.saturating_mul(1000));
+        let map = self.series.lock().unwrap();
+        let mut out = Vec::new();
+        for (name, s) in map.iter() {
+            if !glob_match(pattern, name) {
+                continue;
+            }
+            let ring = if use_fine { &s.fine } else { &s.coarse };
+            let raw: Vec<(u64, f64)> =
+                ring.buf.iter().copied().filter(|&(t, _)| t >= cutoff).collect();
+            let points = match s.kind {
+                SeriesKind::Gauge => raw,
+                SeriesKind::Counter => raw
+                    .windows(2)
+                    .filter_map(|w| {
+                        let (t0, v0) = w[0];
+                        let (t1, v1) = w[1];
+                        let dt = t1.saturating_sub(t0) as f64 / 1e3;
+                        (dt > 0.0).then(|| (t1, ((v1 - v0) / dt).max(0.0)))
+                    })
+                    .collect(),
+            };
+            if !points.is_empty() {
+                out.push(SeriesOut { name: name.clone(), kind: s.kind, points });
+            }
+        }
+        out
+    }
+
+    /// [`Tsdb::query`] rendered as the `/metrics/history` JSON body.
+    pub fn history_json(&self, pattern: &str, window_secs: u64, now_ms: u64) -> String {
+        let series = self.query(pattern, window_secs, now_ms);
+        let rows: Vec<String> = series
+            .iter()
+            .map(|s| {
+                let pts: Vec<String> = s
+                    .points
+                    .iter()
+                    .map(|&(t, v)| format!("[{t},{}]", crate::util::json::num(v)))
+                    .collect();
+                Obj::new()
+                    .str("name", &s.name)
+                    .str("kind", s.kind.wire())
+                    .raw("points", &format!("[{}]", pts.join(",")))
+                    .finish()
+            })
+            .collect();
+        Obj::new()
+            .u64("now_ms", now_ms)
+            .u64("window_secs", window_secs)
+            .raw("series", &format!("[{}]", rows.join(",")))
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Alert engine
+// ---------------------------------------------------------------------
+
+/// A declarative alert condition over tsdb series.
+#[derive(Debug, Clone)]
+pub enum AlertExpr {
+    /// Latest value of a gauge series exceeds `threshold`.
+    GaugeAbove { series: String, threshold: f64 },
+    /// Per-second rate of a series exceeds `per_sec` (applies to
+    /// counters and to growing gauges, e.g. WAL bytes on disk).
+    RateAbove { series: String, per_sec: f64 },
+    /// Per-second rate of `series` falls below `per_sec` while gauge
+    /// `gate` is above `gate_above` — e.g. scheduler evals stalling
+    /// while a search is in flight.
+    RateBelowWhile { series: String, per_sec: f64, gate: String, gate_above: f64 },
+}
+
+/// One alert rule: a condition plus fire/resolve hysteresis in scraper
+/// ticks.
+#[derive(Debug, Clone)]
+pub struct AlertRule {
+    /// Stable rule id (`job-queue-pressure`), the `rule=` label value.
+    pub name: String,
+    /// Operator-facing description shown by `/status` and `/dashboard`.
+    pub describe: String,
+    pub expr: AlertExpr,
+    /// Consecutive breaching evaluations before the rule fires.
+    pub fire_after: u32,
+    /// Consecutive clear evaluations before a firing rule resolves.
+    pub resolve_after: u32,
+}
+
+/// Point-in-time state of one rule.
+#[derive(Debug, Clone)]
+pub struct AlertState {
+    pub rule: String,
+    pub describe: String,
+    pub active: bool,
+    /// When the current firing episode started (0 while resolved).
+    pub since_ms: u64,
+    /// The expression's value at the latest evaluation.
+    pub value: f64,
+}
+
+struct RuleState {
+    breaches: u32,
+    clears: u32,
+    active: bool,
+    since_ms: u64,
+    value: f64,
+}
+
+/// Bounded ring of pre-rendered SSE transition frames; watchers index
+/// absolutely and old frames age out, exactly like the jobs tier's
+/// per-job frame ring (the stream is never terminal — alerts outlive
+/// any one episode).
+struct TransitionLog {
+    buf: VecDeque<String>,
+    base: usize,
+}
+
+const TRANSITION_CAP: usize = 256;
+
+/// The alert engine: rules, hysteresis state, and the SSE transition
+/// ring. Evaluated by the [`Scraper`] once per scrape.
+pub struct AlertEngine {
+    rules: Vec<AlertRule>,
+    state: Mutex<Vec<RuleState>>,
+    frames: Mutex<TransitionLog>,
+    cv: Condvar,
+}
+
+impl AlertEngine {
+    pub fn new(rules: Vec<AlertRule>) -> Self {
+        let state = rules
+            .iter()
+            .map(|_| RuleState { breaches: 0, clears: 0, active: false, since_ms: 0, value: 0.0 })
+            .collect();
+        Self {
+            rules,
+            state: Mutex::new(state),
+            frames: Mutex::new(TransitionLog { buf: VecDeque::new(), base: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn rules(&self) -> &[AlertRule] {
+        &self.rules
+    }
+
+    fn push_frame(&self, frame: String) {
+        let mut log = self.frames.lock().unwrap();
+        if log.buf.len() >= TRANSITION_CAP {
+            log.buf.pop_front();
+            log.base += 1;
+        }
+        log.buf.push_back(frame);
+        drop(log);
+        self.cv.notify_all();
+    }
+
+    /// Transition frames from absolute index `from`; blocks up to
+    /// `timeout` when nothing new is buffered. Returns
+    /// `(frames, next_from)` — the stream has no terminal state.
+    pub fn wait(&self, from: usize, timeout: Duration) -> (Vec<String>, usize) {
+        let mut log = self.frames.lock().unwrap();
+        if from >= log.base + log.buf.len() {
+            let (l, _) = self.cv.wait_timeout(log, timeout).unwrap();
+            log = l;
+        }
+        let start = from.max(log.base);
+        let frames: Vec<String> = log.buf.iter().skip(start - log.base).cloned().collect();
+        (frames, log.base + log.buf.len())
+    }
+
+    /// Absolute index one past the newest buffered frame (new watchers
+    /// start here to see only future transitions).
+    pub fn frame_head(&self) -> usize {
+        let log = self.frames.lock().unwrap();
+        log.base + log.buf.len()
+    }
+
+    fn transition_json(rule: &AlertRule, active: bool, at_ms: u64, value: f64) -> String {
+        Obj::new()
+            .str("rule", &rule.name)
+            .bool("active", active)
+            .u64("at_ms", at_ms)
+            .f64("value", value)
+            .str("describe", &rule.describe)
+            .finish()
+    }
+
+    /// Evaluate every rule against `tsdb` once. Call at scrape cadence —
+    /// hysteresis counts evaluations, not wall-clock.
+    pub fn evaluate(&self, tsdb: &Tsdb, now_ms: u64) {
+        let mut st = self.state.lock().unwrap();
+        for (rule, rs) in self.rules.iter().zip(st.iter_mut()) {
+            let (breach, value) = match &rule.expr {
+                AlertExpr::GaugeAbove { series, threshold } => tsdb
+                    .latest(series)
+                    .map(|(_, v)| (v > *threshold, v))
+                    .unwrap_or((false, 0.0)),
+                AlertExpr::RateAbove { series, per_sec } => tsdb
+                    .rate_latest(series)
+                    .map(|r| (r > *per_sec, r))
+                    .unwrap_or((false, 0.0)),
+                AlertExpr::RateBelowWhile { series, per_sec, gate, gate_above } => {
+                    let gated =
+                        tsdb.latest(gate).map(|(_, v)| v > *gate_above).unwrap_or(false);
+                    match tsdb.rate_latest(series) {
+                        Some(r) => (gated && r < *per_sec, r),
+                        None => (false, 0.0),
+                    }
+                }
+            };
+            rs.value = value;
+            if breach {
+                rs.breaches += 1;
+                rs.clears = 0;
+            } else {
+                rs.clears += 1;
+                rs.breaches = 0;
+            }
+            if !rs.active && breach && rs.breaches >= rule.fire_after {
+                rs.active = true;
+                rs.since_ms = now_ms;
+                ALERTS_FIRED.add(1);
+                let _corr = log::CorrScope::enter(&format!("alert-{}", rule.name));
+                log::warn(
+                    "alerts",
+                    "alert fired",
+                    &[("rule", &rule.name), ("value", &value), ("describe", &rule.describe)],
+                );
+                self.push_frame(crate::jobs::sse_frame(
+                    Some("fire"),
+                    &Self::transition_json(rule, true, now_ms, value),
+                ));
+            } else if rs.active && !breach && rs.clears >= rule.resolve_after {
+                rs.active = false;
+                ALERTS_RESOLVED.add(1);
+                let _corr = log::CorrScope::enter(&format!("alert-{}", rule.name));
+                log::info(
+                    "alerts",
+                    "alert resolved",
+                    &[("rule", &rule.name), ("value", &value)],
+                );
+                self.push_frame(crate::jobs::sse_frame(
+                    Some("resolve"),
+                    &Self::transition_json(rule, false, now_ms, value),
+                ));
+                rs.since_ms = 0;
+            }
+        }
+    }
+
+    /// Current state of every rule, in declaration order.
+    pub fn snapshot(&self) -> Vec<AlertState> {
+        let st = self.state.lock().unwrap();
+        self.rules
+            .iter()
+            .zip(st.iter())
+            .map(|(r, s)| AlertState {
+                rule: r.name.clone(),
+                describe: r.describe.clone(),
+                active: s.active,
+                since_ms: s.since_ms,
+                value: s.value,
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scraper thread
+// ---------------------------------------------------------------------
+
+struct ScraperShared {
+    stop: AtomicBool,
+    gate: Mutex<()>,
+    cv: Condvar,
+}
+
+/// The background scrape loop: every `fine_every` it samples the
+/// registry plus the supplied per-instance source into the tsdb and
+/// evaluates the alert rules. [`Scraper::stop`] (or drop) runs one
+/// final scrape so shutdown never loses the last window.
+pub struct Scraper {
+    shared: Arc<ScraperShared>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Scraper {
+    /// Spawn the scraper. `source` appends per-instance samples (the
+    /// service state's [`Collect`]) on the scraper thread each tick.
+    pub fn start(
+        tsdb: Arc<Tsdb>,
+        alerts: Arc<AlertEngine>,
+        source: Box<dyn Fn(&mut Vec<Sample>) + Send>,
+    ) -> Scraper {
+        let shared =
+            Arc::new(ScraperShared { stop: AtomicBool::new(false), gate: Mutex::new(()), cv: Condvar::new() });
+        let shared2 = Arc::clone(&shared);
+        let period = tsdb.options().fine_every;
+        let join = std::thread::Builder::new()
+            .name("wham-tsdb".into())
+            .spawn(move || {
+                let scrape_once = |t: &Tsdb| {
+                    let now = epoch_ms();
+                    struct Src<'a>(&'a (dyn Fn(&mut Vec<Sample>) + Send));
+                    impl Collect for Src<'_> {
+                        fn collect(&self, out: &mut Vec<Sample>) {
+                            (self.0)(out)
+                        }
+                    }
+                    let src = Src(&*source);
+                    let extra: &[&dyn Collect] = &[&src];
+                    t.scrape(now, extra);
+                    alerts.evaluate(t, now);
+                };
+                loop {
+                    scrape_once(&tsdb);
+                    let guard = shared2.gate.lock().unwrap();
+                    let (_g, _timeout) = shared2.cv.wait_timeout(guard, period).unwrap();
+                    if shared2.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                // Final flush: one last sample so the shutdown window
+                // is visible in the history and the trace snapshot.
+                scrape_once(&tsdb);
+            })
+            .expect("spawn tsdb scraper");
+        Scraper { shared, join: Some(join) }
+    }
+
+    /// Stop the loop, run the final scrape, and join. Idempotent.
+    pub fn stop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Scraper {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counter(name: &str, value: u64) -> Sample {
+        Sample::Counter {
+            name: name.to_string(),
+            help: String::new(),
+            labels: vec![],
+            value,
+        }
+    }
+
+    fn gauge(name: &str, value: f64) -> Sample {
+        Sample::Gauge { name: name.to_string(), help: String::new(), labels: vec![], value }
+    }
+
+    fn small_db() -> Tsdb {
+        Tsdb::new(TsdbOptions {
+            fine_every: Duration::from_secs(2),
+            fine_cap: 8,
+            coarse_every: Duration::from_secs(60),
+            coarse_cap: 4,
+            })
+    }
+
+    #[test]
+    fn rings_evict_oldest_and_stay_bounded() {
+        let db = small_db();
+        for i in 0..100u64 {
+            db.ingest(i * 1000, &[gauge("g", i as f64)]);
+        }
+        let map = db.series.lock().unwrap();
+        let s = map.get("g").unwrap();
+        assert_eq!(s.fine.buf.len(), 8, "fine ring must cap at fine_cap");
+        assert!(s.coarse.buf.len() <= 4, "coarse ring must cap at coarse_cap");
+        // Newest points survive, oldest evicted.
+        assert_eq!(s.fine.buf.back().copied(), Some((99_000, 99.0)));
+        assert_eq!(s.fine.buf.front().copied(), Some((92_000, 92.0)));
+    }
+
+    #[test]
+    fn downsample_tiers_agree_where_they_overlap() {
+        let db = small_db();
+        // 2s ticks for 120 simulated seconds; coarse keeps one per 60s.
+        for i in 0..61u64 {
+            db.ingest(i * 2000, &[gauge("g", (i * 2) as f64)]);
+        }
+        let map = db.series.lock().unwrap();
+        let s = map.get("g").unwrap();
+        // Coarse points are a strict subset of what fine recorded at the
+        // same timestamps (value agreement is the tier-consistency bar).
+        for &(t, v) in &s.coarse.buf {
+            assert_eq!(v, (t / 1000) as f64, "coarse point diverged at t={t}");
+        }
+        assert!(s.coarse.buf.len() >= 2, "60s boundary must have downsampled");
+    }
+
+    #[test]
+    fn counter_rates_clamp_resets_to_zero() {
+        let db = small_db();
+        for (i, v) in [0u64, 10, 20, 5, 15].iter().enumerate() {
+            db.ingest(i as u64 * 1000, &[counter("c_total", *v)]);
+        }
+        let out = db.query("c_total", 60, 5_000);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind, SeriesKind::Counter);
+        let rates: Vec<f64> = out[0].points.iter().map(|&(_, v)| v).collect();
+        // 0→10, 10→20 are 10/s; 20→5 is a reset (clamped); 5→15 is 10/s.
+        assert_eq!(rates, vec![10.0, 10.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn glob_matches_star_patterns() {
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("wham_*_total", "wham_scheduler_evals_total"));
+        assert!(glob_match("wham_http*", "wham_http_requests_total"));
+        assert!(!glob_match("wham_http*", "wham_jobs_total"));
+        assert!(glob_match("a*b*c", "axxbyyc"));
+        assert!(!glob_match("a*b*c", "axxbyy"));
+    }
+
+    #[test]
+    fn history_json_round_trips_through_the_parser() {
+        let db = small_db();
+        db.ingest(1000, &[counter("c_total", 0), gauge("g", 1.5)]);
+        db.ingest(2000, &[counter("c_total", 4), gauge("g", 2.5)]);
+        let v = crate::util::json::parse(&db.history_json("*", 60, 2000)).unwrap();
+        let series = v.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 2);
+        let c = &series[0];
+        assert_eq!(c.get("name").unwrap().as_str(), Some("c_total"));
+        assert_eq!(c.get("kind").unwrap().as_str(), Some("counter_rate"));
+        let pts = c.get("points").unwrap().as_arr().unwrap();
+        let p0 = pts[0].as_arr().unwrap();
+        assert_eq!(p0[0].as_u64(), Some(2000));
+        assert_eq!(p0[1].as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn summary_and_histogram_samples_become_quantile_series() {
+        let db = small_db();
+        db.ingest(
+            1000,
+            &[Sample::Summary {
+                name: "lat_ms".into(),
+                help: String::new(),
+                labels: vec![("endpoint".into(), "/x".into())],
+                quantiles: vec![(0.5, 3.0), (0.95, 9.0)],
+                count: 12,
+            }],
+        );
+        assert_eq!(
+            db.latest("lat_ms{endpoint=\"/x\",quantile=\"0.5\"}").map(|(_, v)| v),
+            Some(3.0)
+        );
+        // Histogram: 10 obs ≤ 1, 10 more in (1, 3] → p50 = 1, p95 = 3.
+        let h = |buckets: Vec<(f64, u64)>, count| Sample::Histogram {
+            name: "dur_s".into(),
+            help: String::new(),
+            labels: vec![],
+            buckets,
+            sum: 0.0,
+            count,
+        };
+        db.ingest(2000, &[h(vec![(1.0, 10), (3.0, 20)], 20)]);
+        assert_eq!(db.latest("dur_s{quantile=\"0.5\"}").map(|(_, v)| v), Some(1.0));
+        assert_eq!(db.latest("dur_s{quantile=\"0.95\"}").map(|(_, v)| v), Some(3.0));
+        // Second scrape adds 30 obs, all in (1, 3]: windowed p50 moves
+        // to 3 even though the lifetime median is still mixed.
+        db.ingest(4000, &[h(vec![(1.0, 10), (3.0, 50)], 50)]);
+        assert_eq!(db.latest("dur_s{quantile=\"0.5\"}").map(|(_, v)| v), Some(3.0));
+    }
+
+    #[test]
+    fn alert_engine_fires_and_resolves_with_hysteresis() {
+        let db = small_db();
+        let engine = AlertEngine::new(vec![AlertRule {
+            name: "queue-pressure".into(),
+            describe: "queue near capacity".into(),
+            expr: AlertExpr::GaugeAbove { series: "depth".into(), threshold: 5.0 },
+            fire_after: 2,
+            resolve_after: 2,
+        }]);
+        let mut t = 0u64;
+        let mut step = |engine: &AlertEngine, db: &Tsdb, v: f64| {
+            t += 1000;
+            db.ingest(t, &[gauge("depth", v)]);
+            engine.evaluate(db, t);
+            engine.snapshot()[0].active
+        };
+        assert!(!step(&engine, &db, 9.0), "one breach must not fire yet");
+        assert!(step(&engine, &db, 9.0), "second consecutive breach fires");
+        assert!(step(&engine, &db, 1.0), "one clear must not resolve yet");
+        assert!(!step(&engine, &db, 1.0), "second consecutive clear resolves");
+        // A fire and a resolve frame were buffered, in order.
+        let (frames, next) = engine.wait(0, Duration::from_millis(10));
+        assert_eq!(frames.len(), 2, "{frames:?}");
+        assert!(frames[0].starts_with("event: fire\n"), "{}", frames[0]);
+        assert!(frames[1].starts_with("event: resolve\n"), "{}", frames[1]);
+        assert_eq!(next, 2);
+        // An interrupted breach run never fires: 1 breach, clear, 1 breach.
+        step(&engine, &db, 9.0);
+        step(&engine, &db, 1.0);
+        assert!(!step(&engine, &db, 9.0), "hysteresis must require consecutive breaches");
+    }
+
+    #[test]
+    fn rate_below_while_gates_on_the_gauge() {
+        let db = small_db();
+        let engine = AlertEngine::new(vec![AlertRule {
+            name: "stall".into(),
+            describe: "evals stalled during active search".into(),
+            expr: AlertExpr::RateBelowWhile {
+                series: "evals_total".into(),
+                per_sec: 100.0,
+                gate: "in_flight".into(),
+                gate_above: 0.0,
+            },
+            fire_after: 1,
+            resolve_after: 1,
+        }]);
+        // Flat counter but nothing in flight: gated off, no fire.
+        db.ingest(1000, &[counter("evals_total", 50), gauge("in_flight", 0.0)]);
+        db.ingest(2000, &[counter("evals_total", 50), gauge("in_flight", 0.0)]);
+        engine.evaluate(&db, 2000);
+        assert!(!engine.snapshot()[0].active);
+        // Same flat counter with a search in flight: stall fires.
+        db.ingest(3000, &[counter("evals_total", 50), gauge("in_flight", 1.0)]);
+        engine.evaluate(&db, 3000);
+        assert!(engine.snapshot()[0].active);
+        // Evals flowing again: resolves.
+        db.ingest(4000, &[counter("evals_total", 9050), gauge("in_flight", 1.0)]);
+        engine.evaluate(&db, 4000);
+        assert!(!engine.snapshot()[0].active);
+    }
+
+    #[test]
+    fn scraper_samples_the_registry_and_flushes_on_stop() {
+        static SCRAPE_TEST: Counter =
+            Counter::new("wham_test_tsdb_scraper_total", "tsdb scraper test counter.");
+        SCRAPE_TEST.add(3);
+        let db = Arc::new(Tsdb::new(TsdbOptions {
+            fine_every: Duration::from_millis(20),
+            ..TsdbOptions::default()
+        }));
+        let engine = Arc::new(AlertEngine::new(vec![]));
+        let mut scraper = Scraper::start(
+            Arc::clone(&db),
+            Arc::clone(&engine),
+            Box::new(|out| {
+                out.push(Sample::Gauge {
+                    name: "wham_test_tsdb_source_gauge".into(),
+                    help: String::new(),
+                    labels: vec![],
+                    value: 7.0,
+                })
+            }),
+        );
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while db.latest("wham_test_tsdb_scraper_total").is_none()
+            || db.latest("wham_test_tsdb_source_gauge").is_none()
+        {
+            assert!(std::time::Instant::now() < deadline, "scraper never sampled");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(db.latest("wham_test_tsdb_source_gauge").map(|(_, v)| v), Some(7.0));
+        let before = db.latest("wham_test_tsdb_scraper_total").unwrap();
+        SCRAPE_TEST.add(2);
+        scraper.stop();
+        // The final flush observed the post-stop increment.
+        let after = db.latest("wham_test_tsdb_scraper_total").unwrap();
+        assert!(after.1 >= before.1 + 2.0, "final flush missing: {before:?} -> {after:?}");
+    }
+}

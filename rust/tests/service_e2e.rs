@@ -16,6 +16,7 @@ use wham::jobs::store::JobStore;
 use wham::jobs::JobsOptions;
 use wham::service::http::{request, request_full, request_stream};
 use wham::service::{start, ServeOptions, ServerHandle};
+use wham::telemetry::tsdb::TsdbOptions;
 use wham::util::json::{dump, parse, JsonValue};
 
 fn boot_opts(opts: ServeOptions) -> ServerHandle {
@@ -496,6 +497,188 @@ fn status_exposes_perf_counters() {
     let p50 = search.get("p50_ms").unwrap().as_f64().unwrap();
     let p95 = search.get("p95_ms").unwrap().as_f64().unwrap();
     assert!(p95 >= p50 && p50 >= 0.0, "p50={p50} p95={p95}");
+}
+
+/// A fast-scraping tsdb shape for the observability tests: 25ms ticks
+/// instead of 2s, so history fills and alerts evaluate within a test's
+/// patience rather than a deployment's.
+fn fast_tsdb() -> TsdbOptions {
+    TsdbOptions { fine_every: Duration::from_millis(25), ..Default::default() }
+}
+
+/// Find one alert entry in a `/status` document by rule name.
+fn alert<'v>(st: &'v JsonValue, rule: &str) -> &'v JsonValue {
+    st.get("alerts")
+        .and_then(|a| a.as_arr())
+        .and_then(|a| a.iter().find(|e| e.get("rule").and_then(|r| r.as_str()) == Some(rule)))
+        .unwrap_or_else(|| panic!("no alert {rule:?} in {st:?}"))
+}
+
+#[test]
+fn dashboard_and_history_populate_after_a_search() {
+    let h = boot_opts(ServeOptions {
+        workers: 2,
+        db_path: None,
+        backend: BackendChoice::Native,
+        tsdb: fast_tsdb(),
+        ..Default::default()
+    });
+
+    // A real search gives the scraper counters worth recording.
+    let (status, _) = get_json(&h, "POST", "/search", Some(SEARCH_BODY));
+    assert_eq!(status, 200);
+
+    // Rates need two scrapes of the same counter; poll instead of
+    // trusting one fixed sleep.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let series = loop {
+        let (status, hist) = get_json(&h, "GET", "/metrics/history", None);
+        assert_eq!(status, 200);
+        let series =
+            hist.get("series").and_then(|s| s.as_arr()).map(<[JsonValue]>::to_vec).unwrap_or_default();
+        let has = |n: &str| {
+            series.iter().any(|s| s.get("name").and_then(|v| v.as_str()) == Some(n))
+        };
+        // Gauges land after one scrape; counter *rates* need two. Wait
+        // for both shapes so the assertions below can't race the scraper.
+        if has("wham_http_requests_total") && has("wham_process_uptime_seconds") {
+            break series;
+        }
+        assert!(Instant::now() < deadline, "history stayed empty: {hist:?}");
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    let name = |s: &JsonValue| s.get("name").unwrap().as_str().unwrap().to_string();
+    assert!(
+        series.iter().any(|s| name(s) == "wham_http_requests_total"),
+        "request counter must be in the history"
+    );
+    assert!(
+        series.iter().any(|s| name(s) == "wham_process_uptime_seconds"),
+        "process gauges must be in the history"
+    );
+    for s in &series {
+        assert!(
+            !s.get("points").unwrap().as_arr().unwrap().is_empty(),
+            "series {} has no points",
+            name(s)
+        );
+    }
+
+    // Series filtering and window validation.
+    let (status, filtered) =
+        get_json(&h, "GET", "/metrics/history?series=wham_http_*", None);
+    assert_eq!(status, 200);
+    for s in filtered.get("series").unwrap().as_arr().unwrap() {
+        assert!(name(s).starts_with("wham_http_"), "filter leaked {}", name(s));
+    }
+    let (status, _) = get_json(&h, "GET", "/metrics/history?window=0", None);
+    assert_eq!(status, 400);
+
+    // The dashboard renders entirely from local state: one HTML
+    // document, inline SVG, zero external assets.
+    let (status, html) = request(h.addr, "GET", "/dashboard", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(html.contains("<svg") || html.contains("collecting"), "no sparklines: {html:?}");
+    assert!(html.contains("job-queue-pressure"), "alert table missing");
+    for banned in ["http://", "https://", "<script src", "<link "] {
+        assert!(!html.contains(banned), "dashboard must be self-contained, found {banned:?}");
+    }
+}
+
+#[test]
+fn queue_saturation_fires_then_resolves_an_alert() {
+    // Queue of 2 with one worker: the cold job runs for seconds while
+    // the rest wait, so the 25ms scraper sees depth >= 2 long enough to
+    // fire job-queue-pressure (threshold 80% of 2), then sees the drain
+    // and resolves it.
+    let h = boot_opts(ServeOptions {
+        workers: 2,
+        db_path: None,
+        backend: BackendChoice::Native,
+        jobs: JobsOptions { workers: 1, queue_depth: 2, ..Default::default() },
+        tsdb: fast_tsdb(),
+        ..Default::default()
+    });
+
+    // Watch the SSE feed from before the saturation so the fire frame
+    // cannot be missed.
+    let addr = h.addr;
+    let sse = std::thread::spawn(move || {
+        let mut lines = Vec::new();
+        let mut saw_resolve = false;
+        let _ = request_stream(addr, "GET", "/alerts/events", None, |l| {
+            if l == "event: resolve" {
+                saw_resolve = true;
+            }
+            lines.push(l.to_string());
+            // Read through the resolve frame's data line, then hang up.
+            !(saw_resolve && lines.last().map(String::as_str) != Some("event: resolve"))
+        });
+        lines
+    });
+
+    let body = "{\"request\":{\"model\":\"alexnet\"}}";
+    let mut ids = Vec::new();
+    for _ in 0..3 {
+        let (status, sub) = get_json(&h, "POST", "/jobs", Some(body));
+        if status == 202 {
+            ids.push(sub.get("id").unwrap().as_str().unwrap().to_string());
+        } else {
+            // Depth rejections (429) are fine — the queue is saturated,
+            // which is exactly the condition under test.
+            assert_eq!(status, 429, "{sub:?}");
+        }
+    }
+    assert!(!ids.is_empty());
+
+    // Fire: /status flips the rule active, /metrics mirrors it.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (_, st) = get_json(&h, "GET", "/status", None);
+        if alert(&st, "job-queue-pressure").get("active").unwrap().as_bool() == Some(true) {
+            assert!(u(alert(&st, "job-queue-pressure"), &["since_ms"]) > 0);
+            break;
+        }
+        assert!(Instant::now() < deadline, "alert never fired: {st:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let (status, metrics) = request(h.addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(
+        metrics.contains("wham_alert_active{rule=\"job-queue-pressure\"} 1"),
+        "metrics must mirror the firing alert"
+    );
+
+    // Resolve: wait for the jobs to drain, then for the hysteresis to
+    // clear the rule.
+    for id in &ids {
+        poll_terminal(&h, id, 120);
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (_, st) = get_json(&h, "GET", "/status", None);
+        let a = alert(&st, "job-queue-pressure");
+        if a.get("active").unwrap().as_bool() == Some(false) {
+            assert_eq!(u(a, &["since_ms"]), 0, "resolved alert must clear its episode start");
+            break;
+        }
+        assert!(Instant::now() < deadline, "alert never resolved: {st:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let (_, metrics) = request(h.addr, "GET", "/metrics", None).unwrap();
+    assert!(metrics.contains("wham_alert_active{rule=\"job-queue-pressure\"} 0"));
+
+    // The SSE stream saw the full episode in order.
+    let lines = sse.join().unwrap();
+    let fire = lines.iter().position(|l| l == "event: fire");
+    let resolve = lines.iter().position(|l| l == "event: resolve");
+    assert!(fire.is_some(), "no fire frame in {lines:?}");
+    assert!(resolve.is_some(), "no resolve frame in {lines:?}");
+    assert!(fire < resolve, "fire must precede resolve: {lines:?}");
+    assert!(
+        lines.iter().any(|l| l.starts_with("data: ") && l.contains("job-queue-pressure")),
+        "frames must carry the rule payload: {lines:?}"
+    );
 }
 
 #[test]
